@@ -1,0 +1,68 @@
+//! Bench: regenerate Figure 4 (SLO attainment) + Table 2 (mean latency)
+//! across Settings 1-4 for all three strategies, and time each cell.
+//!
+//! Shape assertions encode the paper's qualitative claims: decentralized
+//! beats single-node and approaches centralized.
+
+use wwwserve::benchlib::{bench, Table};
+use wwwserve::repro;
+use wwwserve::schedulers::Strategy;
+use wwwserve::workload::SettingId;
+
+fn main() {
+    let seed = 2026;
+    println!("# fig4_table2 — scheduling efficiency grid\n");
+
+    let mut table = Table::new(&[
+        "Setting", "Strategy", "SLO@1.0", "mean lat (s)", "p99 (s)", "reqs",
+    ]);
+    let mut cells = Vec::new();
+    for id in SettingId::ALL {
+        for strategy in
+            [Strategy::Single, Strategy::Centralized, Strategy::Decentralized]
+        {
+            let name = format!("{}/{}", id.name(), strategy.name());
+            // Time one full run of this cell.
+            let mut out = None;
+            bench(&name, 0, 3, 30.0, || {
+                out = Some(repro::run_setting(id, strategy, seed));
+            });
+            let r = out.unwrap();
+            table.row(vec![
+                id.name().into(),
+                strategy.name().into(),
+                format!("{:.3}", r.slo_attainment),
+                format!("{:.1}", r.mean_latency),
+                format!("{:.1}", r.p99_latency),
+                format!("{}", r.completed),
+            ]);
+            cells.push(r);
+        }
+    }
+    println!();
+    table.print();
+
+    // Paper-shape checks (who wins, roughly by how much).
+    let mut better_than_single = 0;
+    for id in SettingId::ALL {
+        let get = |s: Strategy| {
+            cells
+                .iter()
+                .find(|r| r.setting == id && r.strategy == s)
+                .unwrap()
+        };
+        let (si, de) = (get(Strategy::Single), get(Strategy::Decentralized));
+        if de.slo_attainment >= si.slo_attainment
+            && de.mean_latency <= si.mean_latency * 1.05
+        {
+            better_than_single += 1;
+        }
+    }
+    println!(
+        "\nshape check: decentralized ≥ single in {better_than_single}/4 settings"
+    );
+    assert!(
+        better_than_single >= 3,
+        "decentralized should dominate single-node in most settings"
+    );
+}

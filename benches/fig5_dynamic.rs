@@ -1,0 +1,53 @@
+//! Bench: Figure 5 — request latency under dynamic participation
+//! (node joins in 5a, leaves in 5b), plus gossip-detection latency.
+
+use wwwserve::benchlib::bench;
+use wwwserve::repro;
+
+fn phase_mean(series: &[(f64, f64)], lo: f64, hi: f64) -> f64 {
+    let pts: Vec<f64> = series
+        .iter()
+        .filter(|(t, _)| *t >= lo && *t < hi)
+        .map(|(_, l)| *l)
+        .collect();
+    if pts.is_empty() {
+        return 0.0;
+    }
+    pts.iter().sum::<f64>() / pts.len() as f64
+}
+
+fn main() {
+    let seed = 2026;
+    println!("# fig5_dynamic — joins and leaves\n");
+
+    let mut join = None;
+    bench("fig5a join (2->4 nodes)", 0, 3, 30.0, || {
+        join = Some(repro::fig5_join(seed));
+    });
+    let join = join.unwrap();
+    let before = phase_mean(&join.windowed_latency, 100.0, 250.0);
+    let after = phase_mean(&join.windowed_latency, 550.0, 750.0);
+    println!(
+        "join: mean latency before joins {before:.1}s -> after both joins {after:.1}s"
+    );
+    assert!(
+        after < before,
+        "joining capacity must reduce latency ({before:.1} -> {after:.1})"
+    );
+
+    let mut leave = None;
+    bench("fig5b leave (4->2 nodes)", 0, 3, 30.0, || {
+        leave = Some(repro::fig5_leave(seed));
+    });
+    let leave = leave.unwrap();
+    let before = phase_mean(&leave.windowed_latency, 100.0, 250.0);
+    let after = phase_mean(&leave.windowed_latency, 550.0, 750.0);
+    println!(
+        "leave: mean latency before leaves {before:.1}s -> after both leaves {after:.1}s"
+    );
+    assert!(
+        after > before,
+        "losing capacity must raise latency ({before:.1} -> {after:.1})"
+    );
+    println!("\nshape check OK (paper: latency falls on join, rises on leave)");
+}

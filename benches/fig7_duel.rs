@@ -1,0 +1,67 @@
+//! Bench: Figure 7 + §7.1 — duel-and-judge overhead at duel rates
+//! 5% / 10% / 25%, including the N·α·p_d·(1+k) formula check.
+
+use wwwserve::benchlib::{bench, Table};
+use wwwserve::repro;
+
+fn main() {
+    let seed = 2026;
+    println!("# fig7_duel — duel-rate ablation (k = 2)\n");
+
+    let mut runs = Vec::new();
+    for p in [0.05, 0.10, 0.25] {
+        let mut out = None;
+        bench(&format!("duel rate {p:.2}"), 0, 2, 30.0, || {
+            out = Some(repro::fig7(p, seed));
+        });
+        runs.push(out.unwrap());
+    }
+
+    let mut t = Table::new(&[
+        "p_d", "SLO@1.0", "mean lat (s)", "p50 CDF@100s", "user reqs",
+        "synthetic", "predicted N·α·p_d·(1+k)",
+    ]);
+    for r in &runs {
+        let cdf100 = r
+            .latency_cdf
+            .iter()
+            .find(|(x, _)| *x >= 100.0)
+            .map(|(_, y)| *y)
+            .unwrap_or(0.0);
+        t.row(vec![
+            format!("{:.2}", r.duel_rate),
+            format!("{:.3}", r.slo_curve[3].1),
+            format!("{:.1}", r.mean_latency),
+            format!("{:.3}", cdf100),
+            format!("{}", r.completed),
+            format!("{}", r.synthetic),
+            format!("{:.0}", r.delegated as f64 * r.duel_rate * 3.0),
+        ]);
+    }
+    t.print();
+
+    // Shape 1: latency/SLO stay near-identical across duel rates (paper).
+    let base = runs[0].mean_latency;
+    for r in &runs[1..] {
+        let rel = (r.mean_latency - base).abs() / base.max(1.0);
+        assert!(
+            rel < 0.25,
+            "duel rate {:.2} changed latency by {:.0}% (paper: minimal)",
+            r.duel_rate,
+            rel * 100.0
+        );
+    }
+    // Shape 2: overhead grows with p_d and tracks the formula.
+    assert!(runs[2].synthetic > runs[0].synthetic);
+    for r in &runs {
+        let predicted = r.delegated as f64 * r.duel_rate * 3.0;
+        let rel = (r.synthetic as f64 - predicted).abs() / predicted.max(1.0);
+        assert!(
+            rel < 0.5,
+            "overhead formula off by {:.0}% at p_d={}",
+            rel * 100.0,
+            r.duel_rate
+        );
+    }
+    println!("\nshape checks OK (near-identical latency; overhead tracks formula)");
+}

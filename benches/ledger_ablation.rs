@@ -1,0 +1,97 @@
+//! Bench: ablation (DESIGN.md §4) — SharedLedger vs full Credit Block Chain.
+//!
+//! The paper ran its experiments with a shared ledger (Appendix C); this
+//! bench quantifies what the full §4.1 blockchain mode costs in message
+//! volume and whether serving behaviour is unaffected.
+
+use wwwserve::backend::Profile;
+use wwwserve::benchlib::{bench, Table};
+use wwwserve::ledger::{Block, Chain, CreditOp, OpReason};
+use wwwserve::crypto::{KeyStore, NodeKey};
+use wwwserve::policy::NodePolicy;
+use wwwserve::sim::{LedgerMode, NodeSetup, World, WorldConfig};
+use wwwserve::workload::{Generator, Phase};
+use wwwserve::NodeId;
+
+fn run_mode(ledger: LedgerMode, seed: u64) -> (f64, f64, u64, usize) {
+    let horizon = 400.0;
+    let setups: Vec<NodeSetup> = (0..4)
+        .map(|i| {
+            NodeSetup::new(
+                Profile::test(40.0, 16),
+                NodePolicy { accept_freq: 1.0, ..Default::default() },
+            )
+            .with_generator(Generator::new(
+                NodeId(i as u32),
+                vec![Phase::new(0.0, horizon, if i == 0 { 2.0 } else { 15.0 })],
+            ))
+        })
+        .collect();
+    let cfg = WorldConfig { seed, ledger, ..Default::default() };
+    let mut w = World::new(cfg, setups);
+    w.run_until(horizon + 2000.0);
+    (
+        w.recorder.slo_attainment(),
+        w.recorder.mean_latency(),
+        w.messages_sent,
+        w.recorder.user_records().count(),
+    )
+}
+
+fn main() {
+    let seed = 2026;
+    println!("# ledger_ablation — shared vs blockchain credit ledger\n");
+
+    let mut shared = None;
+    bench("world/shared ledger", 0, 3, 30.0, || {
+        shared = Some(run_mode(LedgerMode::Shared, seed));
+    });
+    let mut chain = None;
+    bench("world/blockchain ledger", 0, 3, 30.0, || {
+        chain = Some(run_mode(LedgerMode::Blockchain, seed));
+    });
+    let (s, c) = (shared.unwrap(), chain.unwrap());
+
+    let mut t = Table::new(&["mode", "SLO", "mean lat (s)", "messages", "reqs"]);
+    t.row(vec!["shared".into(), format!("{:.3}", s.0), format!("{:.1}", s.1),
+               format!("{}", s.2), format!("{}", s.3)]);
+    t.row(vec!["blockchain".into(), format!("{:.3}", c.0), format!("{:.1}", c.1),
+               format!("{}", c.2), format!("{}", c.3)]);
+    t.print();
+    println!(
+        "\nblockchain message overhead: {:.2}x",
+        c.2 as f64 / s.2 as f64
+    );
+
+    // Serving behaviour must be essentially unchanged (consensus is off the
+    // request path).
+    assert!((s.0 - c.0).abs() < 0.1, "SLO diverged between ledger modes");
+    assert!(c.2 > s.2, "blockchain mode must cost extra messages");
+
+    // Micro: raw chain ops.
+    let keys = KeyStore::for_network(1, 4);
+    let key = NodeKey::derive(1, NodeId(0));
+    bench("block create+sign (8 ops)", 100, 20_000, 5.0, || {
+        let ops: Vec<CreditOp> = (0..8)
+            .map(|i| CreditOp::Mint {
+                to: NodeId(i % 4),
+                amount: 10,
+                reason: OpReason::Genesis,
+            })
+            .collect();
+        Block::create(wwwserve::crypto::Hash256::ZERO, 1.0, ops, &key)
+    });
+    bench("chain validate+commit (8-op block)", 100, 10_000, 5.0, || {
+        let mut chain = Chain::new();
+        let ops: Vec<CreditOp> = (0..8)
+            .map(|i| CreditOp::Mint {
+                to: NodeId(i % 4),
+                amount: 10,
+                reason: OpReason::Genesis,
+            })
+            .collect();
+        let b = Block::create(chain.head(), 1.0, ops, &key);
+        chain.commit_block(b, &keys).unwrap();
+        chain.len()
+    });
+}

@@ -1,0 +1,127 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf working set):
+//! PoS sampling (linear vs alias), SimBackend event processing, world
+//! event throughput, message codec, crypto primitives.
+
+use wwwserve::backend::{Backend, Profile, SimBackend};
+use wwwserve::benchlib::bench;
+use wwwserve::coordinator::Message;
+use wwwserve::crypto::{sha256, KeyStore, NodeKey};
+use wwwserve::policy::NodePolicy;
+use wwwserve::pos::StakeSnapshot;
+use wwwserve::sim::{NodeSetup, World, WorldConfig};
+use wwwserve::types::{ExecKind, Request, RequestId};
+use wwwserve::util::json::Json;
+use wwwserve::util::rng::Rng;
+use wwwserve::workload::{Generator, Phase};
+use wwwserve::NodeId;
+
+fn stakes(n: usize) -> Vec<(NodeId, u64)> {
+    (0..n).map(|i| (NodeId(i as u32), 1 + (i as u64 * 37) % 100)).collect()
+}
+
+fn main() {
+    println!("# micro — L3 hot paths\n");
+
+    // --- PoS sampling: linear scan vs alias table -------------------------
+    for n in [8usize, 64, 512, 4096] {
+        let table = stakes(n);
+        let snap = StakeSnapshot::new(&table, None);
+        let mut rng = Rng::new(1);
+        bench(&format!("pos/linear n={n}"), 100, 200_000, 2.0, || {
+            snap.sample_linear(&mut rng)
+        });
+        let mut prepared = snap.clone();
+        prepared.prepare();
+        let mut rng = Rng::new(1);
+        bench(&format!("pos/alias  n={n}"), 100, 200_000, 2.0, || {
+            prepared.sample(&mut rng)
+        });
+        let mut rng = Rng::new(1);
+        bench(&format!("pos/alias build+1 n={n}"), 100, 50_000, 2.0, || {
+            let mut s = snap.clone();
+            s.prepare();
+            s.sample(&mut rng)
+        });
+    }
+
+    // --- SimBackend: submit+advance cycle ----------------------------------
+    bench("simbackend/100 reqs lifecycle", 10, 2_000, 3.0, || {
+        let mut b = SimBackend::new(Profile::test(40.0, 16));
+        for i in 0..100u64 {
+            b.submit(
+                Request {
+                    id: RequestId { origin: NodeId(0), seq: i },
+                    prompt_tokens: 100,
+                    output_tokens: 200,
+                    submitted_at: i as f64 * 0.5,
+                    slo_deadline: 1e9,
+                    synthetic: false,
+                    payload: vec![],
+                },
+                ExecKind::Local,
+                i as f64 * 0.5,
+            );
+        }
+        b.advance(1e6).len()
+    });
+
+    // --- whole-world event throughput --------------------------------------
+    bench("world/setting-like 200s, 4 nodes", 1, 50, 10.0, || {
+        let setups: Vec<NodeSetup> = (0..4)
+            .map(|i| {
+                NodeSetup::new(Profile::test(40.0, 16), NodePolicy::default())
+                    .with_generator(Generator::new(
+                        NodeId(i as u32),
+                        vec![Phase::new(0.0, 200.0, 3.0)],
+                    ))
+            })
+            .collect();
+        let mut w =
+            World::new(WorldConfig { seed: 7, ..Default::default() }, setups);
+        w.run_until(1000.0);
+        w.recorder.len()
+    });
+
+    // --- message codec ------------------------------------------------------
+    let msg = Message::Delegate {
+        request: Request {
+            id: RequestId { origin: NodeId(3), seq: 99 },
+            prompt_tokens: 512,
+            output_tokens: 2048,
+            submitted_at: 12.5,
+            slo_deadline: 200.0,
+            synthetic: false,
+            payload: (0..512).collect(),
+        },
+        duel: false,
+    };
+    bench("codec/delegate to_json", 100, 50_000, 2.0, || {
+        msg.to_json().to_string().len()
+    });
+    let text = msg.to_json().to_string();
+    bench("codec/delegate parse+from_json", 100, 50_000, 2.0, || {
+        Message::from_json(&Json::parse(&text).unwrap()).unwrap().kind()
+    });
+
+    // --- crypto -------------------------------------------------------------
+    let key = NodeKey::derive(1, NodeId(0));
+    let mut ks = KeyStore::new();
+    ks.register(&key);
+    let digest = sha256(b"some block content hash");
+    bench("crypto/sha256 1KiB", 100, 100_000, 2.0, || {
+        sha256(&[0u8; 1024])
+    });
+    bench("crypto/sign", 100, 100_000, 2.0, || key.sign(&digest));
+    let sig = key.sign(&digest);
+    bench("crypto/verify", 100, 100_000, 2.0, || {
+        ks.verify(NodeId(0), &digest, &sig)
+    });
+
+    // --- rng ----------------------------------------------------------------
+    let mut rng = Rng::new(5);
+    bench("rng/next_u64", 100, 1_000_000, 1.0, || rng.next_u64());
+    bench("rng/poisson(8)", 100, 200_000, 1.0, || rng.poisson(8.0));
+    bench("rng/lognormal", 100, 200_000, 1.0, || {
+        rng.lognormal_mean(2000.0, 0.7)
+    });
+}

@@ -1,0 +1,61 @@
+//! Bench: Theorem 5.8 — replicator-dynamics convergence to the
+//! high-quality equilibrium, and integrator throughput.
+
+use wwwserve::benchlib::bench;
+use wwwserve::gametheory::{NodeParams, Replicator, SystemParams};
+
+fn mk(n_high: usize, n_low: usize) -> Replicator {
+    let mut nodes = Vec::new();
+    for _ in 0..n_high {
+        nodes.push(NodeParams { quality: 0.85, cost: 0.3, stake0: 1.0 });
+    }
+    for _ in 0..n_low {
+        nodes.push(NodeParams { quality: 0.45, cost: 0.3, stake0: 1.0 });
+    }
+    // Duel economics under which low quality is strictly unprofitable
+    // (otherwise total stake inflates and convergence is logarithmic).
+    let sys = SystemParams { duel_rate: 0.4, duel_penalty: 3.0, ..Default::default() };
+    Replicator::new(nodes, sys)
+}
+
+fn main() {
+    println!("# replicator — Section 5 dynamics\n");
+
+    // Convergence table.
+    println!("t      p_high (2 high vs 4 low quality nodes)");
+    let mut r = mk(2, 4);
+    let hq = [0usize, 1];
+    let (times, traj) = r.integrate(80.0, 0.002, 10.0);
+    for (k, t) in times.iter().enumerate() {
+        let ph = traj[0][k] + traj[1][k];
+        println!("{t:<6.0} {ph:.4}");
+    }
+    let final_share = r.group_share(&hq);
+    println!("final high-quality share: {final_share:.4}");
+    assert!(final_share > 0.8, "Theorem 5.8: share should approach 1");
+
+    // Monotonicity along the trajectory (Proposition 5.7 corollary).
+    for w in (0..times.len()).collect::<Vec<_>>().windows(2) {
+        let a = traj[0][w[0]] + traj[1][w[0]];
+        let b = traj[0][w[1]] + traj[1][w[1]];
+        assert!(b >= a - 1e-9, "group share must be monotone");
+    }
+
+    // Integrator throughput at population scale.
+    for n in [10usize, 100, 1000] {
+        bench(
+            &format!("euler step, {n} nodes"),
+            10,
+            1000,
+            5.0,
+            || {
+                let mut r = mk(n / 2, n / 2);
+                for _ in 0..10 {
+                    r.step(0.01);
+                }
+                r.shares()[0]
+            },
+        );
+    }
+    println!("\nshape checks OK");
+}

@@ -1,0 +1,159 @@
+//! The open compute market: heterogeneous providers with *different
+//! strategies* trading capacity — the paper's intro scenario ("overloaded
+//! nodes outsource requests while underutilized nodes capitalize on idle
+//! resources").
+//!
+//! ```bash
+//! cargo run --release --example market
+//! ```
+//!
+//! Five provider archetypes, all simultaneously:
+//! * "hyperscaler"  — big capacity, high stake, sells aggressively
+//! * "startup"      — medium capacity, cheap+fast model (lower quality)
+//! * "enterprise"   — busy with its own users, offloads its overflow
+//! * "hobbyist"     — small GPU, joins to earn credits at night
+//! * "freeloader"   — tiny stake, poor quality; the duel mechanism should
+//!                    keep its earnings down
+//!
+//! Also demonstrates the full blockchain ledger mode: every payment is a
+//! proposed, voted, committed block.
+
+use wwwserve::backend::Profile;
+use wwwserve::coordinator::LedgerManager;
+use wwwserve::policy::{NodePolicy, SystemPolicy};
+use wwwserve::sim::{LedgerMode, NodeSetup, World, WorldConfig};
+use wwwserve::workload::{Generator, LengthDist, Phase};
+use wwwserve::{NodeId, CREDIT};
+
+fn main() {
+    let horizon = 750.0;
+    let lengths = LengthDist { output_mean: 1200.0, ..Default::default() };
+    let gen = |i: u32, phases: Vec<Phase>| {
+        Generator::new(NodeId(i), phases).with_lengths(lengths)
+    };
+
+    let setups = vec![
+        // 0: hyperscaler — strong backend, big stake, always accepts.
+        NodeSetup::new(
+            Profile::test(60.0, 64).with_quality(0.80),
+            NodePolicy {
+                stake: 40 * CREDIT,
+                accept_freq: 1.0,
+                offload_freq: 0.2,
+                ..Default::default()
+            },
+        )
+        .with_generator(gen(0, vec![Phase::new(0.0, horizon, 25.0)])),
+        // 1: startup — fast but lower-quality model.
+        NodeSetup::new(
+            Profile::test(80.0, 32).with_quality(0.60),
+            NodePolicy {
+                stake: 20 * CREDIT,
+                accept_freq: 1.0,
+                ..Default::default()
+            },
+        )
+        .with_generator(gen(1, vec![Phase::new(0.0, horizon, 30.0)])),
+        // 2: enterprise — overloaded by its own users, offloads overflow.
+        NodeSetup::new(
+            Profile::test(40.0, 16).with_quality(0.78),
+            NodePolicy {
+                stake: 10 * CREDIT,
+                offload_freq: 1.0,
+                target_utilization: 0.5,
+                accept_freq: 0.3,
+                ..Default::default()
+            },
+        )
+        .with_generator(gen(2, vec![
+            Phase::new(0.0, 400.0, 2.5),
+            Phase::new(400.0, horizon, 10.0),
+        ])),
+        // 3: hobbyist — small GPU, evening hours only (joins at t=300).
+        NodeSetup::new(
+            Profile::test(25.0, 8).with_quality(0.75),
+            NodePolicy {
+                stake: 5 * CREDIT,
+                accept_freq: 1.0,
+                ..Default::default()
+            },
+        )
+        .offline(),
+        // 4: freeloader — minimal stake, poor quality.
+        NodeSetup::new(
+            Profile::test(50.0, 16).with_quality(0.35),
+            NodePolicy {
+                stake: 2 * CREDIT,
+                accept_freq: 1.0,
+                ..Default::default()
+            },
+        ),
+    ];
+
+    let cfg = WorldConfig {
+        seed: 7,
+        ledger: LedgerMode::Blockchain, // full §4.1 machinery
+        system: SystemPolicy {
+            duel_rate: 0.25,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut w = World::new(cfg, setups);
+    w.schedule_join(3, 300.0);
+    w.run_until(horizon + 4000.0);
+
+    let names = ["hyperscaler", "startup", "enterprise", "hobbyist", "freeloader"];
+    println!("== WWW.Serve open market ({} blocks ledgered) ==\n", {
+        match w.node(0).ledger() {
+            LedgerManager::Chain(r) => r.chain.len(),
+            _ => 0,
+        }
+    });
+    println!(
+        "requests completed {}  SLO {:.1}%  mean latency {:.1}s  duels {}",
+        w.recorder.user_records().count(),
+        w.recorder.slo_attainment() * 100.0,
+        w.recorder.mean_latency(),
+        w.duel_stats.total_duels(),
+    );
+    println!("\nrole          served  deleg-in  deleg-out  win-rate  credits (Δ from 100)");
+    let served = w.recorder.served_by();
+    let totals = w.credit_totals();
+    for i in 0..5 {
+        let s = w.node(i).stats;
+        println!(
+            "{:<12} {:>7} {:>9} {:>10} {:>9.2} {:>8.1} ({:+.1})",
+            names[i],
+            served.get(&NodeId(i as u32)).copied().unwrap_or(0),
+            s.delegated_in,
+            s.delegated_out,
+            w.duel_stats.win_rate(NodeId(i as u32)),
+            totals[i],
+            totals[i] - 100.0,
+        );
+    }
+
+    // Ledger replicas agree (decentralized consistency check).
+    let head_lens: Vec<usize> = (0..5)
+        .map(|i| match w.node(i).ledger() {
+            LedgerManager::Chain(r) => r.chain.len(),
+            _ => 0,
+        })
+        .collect();
+    println!("\nchain lengths per replica: {head_lens:?}");
+
+    // Market-shape assertions.
+    let hyper = totals[0];
+    let free = totals[4];
+    assert!(
+        hyper > 100.0,
+        "the hyperscaler should profit (got {hyper:.1})"
+    );
+    assert!(
+        w.duel_stats.win_rate(NodeId(4)) < 0.45,
+        "freeloader should lose duels"
+    );
+    println!("\nmarket OK: capacity sellers profit, low quality loses duels.");
+    let _ = free;
+}

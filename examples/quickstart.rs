@@ -1,0 +1,68 @@
+//! Quickstart: a 4-node WWW.Serve market, simulated.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Shows the whole public API surface in ~60 lines: profiles, policies,
+//! workload generators, the deterministic World, and the metrics you get
+//! back (SLO attainment, latency percentiles, credits, duel stats).
+
+use wwwserve::backend::{Gpu, ModelClass, Profile, ServingStack};
+use wwwserve::policy::NodePolicy;
+use wwwserve::sim::{NodeSetup, World, WorldConfig};
+use wwwserve::workload::{Generator, Phase};
+use wwwserve::NodeId;
+
+fn main() {
+    // Three provider tiers (Table-3 style) + defaults from Appendix C.
+    let profiles = [
+        Profile::derive(ModelClass::Qwen3_8B, Gpu::Ada6000, ServingStack::SgLang),
+        Profile::derive(ModelClass::Qwen3_8B, Gpu::L40S, ServingStack::SgLang),
+        Profile::derive(ModelClass::Qwen3_4B, Gpu::Rtx4090, ServingStack::SgLang),
+        Profile::derive(ModelClass::Qwen3_4B, Gpu::Rtx3090, ServingStack::Vllm),
+    ];
+
+    // Node 0 gets a burst for the first 300 s (1/λ = 4 s), everyone else a
+    // light trickle — the exact imbalance decentralized offload fixes.
+    let setups: Vec<NodeSetup> = profiles
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let phases = if i == 0 {
+                vec![Phase::new(0.0, 300.0, 4.0), Phase::new(300.0, 750.0, 20.0)]
+            } else {
+                vec![Phase::new(0.0, 750.0, 20.0)]
+            };
+            NodeSetup::new(*p, NodePolicy::default())
+                .with_generator(Generator::new(NodeId(i as u32), phases))
+        })
+        .collect();
+
+    let mut world = World::new(WorldConfig { seed: 42, ..Default::default() }, setups);
+    world.run_until(3000.0); // run past the 750 s schedule so queues drain
+
+    let rec = &world.recorder;
+    println!("== WWW.Serve quickstart (4 nodes, 750 s schedule) ==");
+    println!("user requests completed : {}", rec.user_records().count());
+    println!("SLO attainment          : {:.1}%", rec.slo_attainment() * 100.0);
+    println!("mean latency            : {:.1} s", rec.mean_latency());
+    println!("p50 / p99 latency       : {:.1} / {:.1} s",
+             rec.latency_percentile(0.5), rec.latency_percentile(0.99));
+    println!("duels settled           : {}", world.duel_stats.total_duels());
+    println!("messages exchanged      : {}", world.messages_sent);
+
+    println!("\nper-node outcomes:");
+    let served = rec.served_by();
+    for i in 0..world.num_nodes() {
+        let node = world.node(i);
+        println!(
+            "  node {i}: served {:>4} (delegated-in {:>3}, offloaded {:>3})  credits {:>7.2}  win-rate {:.2}",
+            served.get(&NodeId(i as u32)).copied().unwrap_or(0),
+            node.stats.delegated_in,
+            node.stats.delegated_out,
+            world.credit_totals()[i],
+            world.duel_stats.win_rate(NodeId(i as u32)),
+        );
+    }
+}

@@ -1,0 +1,182 @@
+"""AOT compile path: lower the L2 model to HLO text artifacts for Rust.
+
+Runs ONCE at build time (``make artifacts``); Python is never on the request
+path. Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/load_hlo and its README for the full gotcha
+list.
+
+Outputs (``artifacts/``):
+
+* ``decode_b{B}.hlo.txt``   — one decode step at batch size B
+* ``prefill_b{B}_s{S}.hlo.txt`` — prefill at batch B, padded prompt length S
+* ``params.bin``            — all parameters, f32 little-endian, in
+  ``model.param_spec`` order
+* ``manifest.json``         — model config, parameter spec, artifact table
+  (argument/result shapes in call order), seed
+
+Rust's ``runtime::Engine`` reads the manifest, memory-loads ``params.bin``
+and compiles each HLO module once at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DECODE_BATCH_SIZES = (1, 2, 4, 8)
+PREFILL_SHAPES = ((1, 64), (4, 64))  # (batch, padded prompt length)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _abstract(params):
+    return [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+
+
+def lower_decode(cfg: M.ModelConfig, params, batch: int) -> str:
+    def fn(params, k_cache, v_cache, tokens, lens):
+        return M.decode_step(cfg, params, k_cache, v_cache, tokens, lens)
+
+    L, H, D, S = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.max_seq
+    kv = jax.ShapeDtypeStruct((L, batch, H, S, D), jnp.float32)
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lowered = jax.jit(fn).lower(_abstract(params), kv, kv, tok, lens)
+    return to_hlo_text(lowered)
+
+
+def lower_prefill(cfg: M.ModelConfig, params, batch: int, seq: int) -> str:
+    def fn(params, tokens, lens):
+        return M.prefill(cfg, params, tokens, lens)
+
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lowered = jax.jit(fn).lower(_abstract(params), tok, lens)
+    return to_hlo_text(lowered)
+
+
+def artifact_entry(kind: str, cfg: M.ModelConfig, batch: int, seq: int | None,
+                   path: str) -> dict:
+    """Manifest row describing one compiled executable's calling convention."""
+    L, H, D, S = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.max_seq
+    n_params = len(M.param_spec(cfg))
+    if kind == "decode":
+        extra_args = [
+            {"name": "k_cache", "shape": [L, batch, H, S, D], "dtype": "f32"},
+            {"name": "v_cache", "shape": [L, batch, H, S, D], "dtype": "f32"},
+            {"name": "tokens", "shape": [batch], "dtype": "i32"},
+            {"name": "lens", "shape": [batch], "dtype": "i32"},
+        ]
+        results = [
+            {"name": "logits", "shape": [batch, cfg.vocab], "dtype": "f32"},
+            {"name": "k_cache", "shape": [L, batch, H, S, D], "dtype": "f32"},
+            {"name": "v_cache", "shape": [L, batch, H, S, D], "dtype": "f32"},
+        ]
+    else:
+        extra_args = [
+            {"name": "tokens", "shape": [batch, seq], "dtype": "i32"},
+            {"name": "lens", "shape": [batch], "dtype": "i32"},
+        ]
+        results = [
+            {"name": "logits", "shape": [batch, cfg.vocab], "dtype": "f32"},
+            {"name": "k_cache", "shape": [L, batch, H, S, D], "dtype": "f32"},
+            {"name": "v_cache", "shape": [L, batch, H, S, D], "dtype": "f32"},
+        ]
+    return {
+        "kind": kind,
+        "batch": batch,
+        "seq": seq,
+        "path": path,
+        "num_param_args": n_params,
+        "extra_args": extra_args,
+        "results": results,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--config", choices=["tiny", "test", "large"],
+                    default="tiny")
+    ap.add_argument("--decode-batches", type=int, nargs="*",
+                    default=list(DECODE_BATCH_SIZES))
+    ap.add_argument("--skip-prefill", action="store_true")
+    args = ap.parse_args()
+
+    cfg = getattr(M.ModelConfig, args.config)()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    t0 = time.time()
+    params = M.init_params(cfg, seed=args.seed)
+    print(f"[aot] config={args.config} params={M.num_params(cfg):,}")
+
+    # Parameters: one contiguous f32 LE blob in param_spec order.
+    blob = np.concatenate(
+        [np.asarray(p, dtype="<f4").reshape(-1) for p in params])
+    blob.tofile(os.path.join(args.out_dir, "params.bin"))
+    print(f"[aot] params.bin {blob.nbytes / 1e6:.1f} MB")
+
+    artifacts = []
+    for b in args.decode_batches:
+        name = f"decode_b{b}.hlo.txt"
+        text = lower_decode(cfg, params, b)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        artifacts.append(artifact_entry("decode", cfg, b, None, name))
+        print(f"[aot] {name} {len(text) / 1e3:.0f} kB")
+
+    if not args.skip_prefill:
+        for b, s in PREFILL_SHAPES:
+            s = min(s, cfg.max_seq)  # padded prompt cannot exceed the cache
+            name = f"prefill_b{b}_s{s}.hlo.txt"
+            text = lower_prefill(cfg, params, b, s)
+            with open(os.path.join(args.out_dir, name), "w") as f:
+                f.write(text)
+            artifacts.append(artifact_entry("prefill", cfg, b, s, name))
+            print(f"[aot] {name} {len(text) / 1e3:.0f} kB")
+
+    manifest = {
+        "model": {
+            "config": args.config,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "num_params": M.num_params(cfg),
+            "seed": args.seed,
+        },
+        "param_spec": [
+            {"name": n, "shape": list(s)} for n, s in M.param_spec(cfg)
+        ],
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

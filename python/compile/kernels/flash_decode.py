@@ -1,0 +1,190 @@
+"""L1 Pallas kernel: fused single-query (decode) attention with blocked KV.
+
+This is the serving hot-spot of WWW.Serve's local-execution path (the paper's
+Model Manager executes inference on the node's own backend; our backend is the
+AOT-compiled transformer in ``python/compile/model.py``, whose decode step
+calls this kernel).
+
+Design (TPU idioms — see DESIGN.md §Hardware-Adaptation):
+
+* Grid is ``(batch, heads, S // block_s)``: the KV sequence is tiled into
+  VMEM-sized blocks via ``BlockSpec``; this expresses the HBM->VMEM schedule
+  a CUDA kernel would write with threadblocks + shared memory.
+* Online softmax: running max ``m``, normalizer ``l`` and weighted
+  accumulator ``acc`` live in VMEM scratch that persists across the
+  sequential KV-block grid steps on a core (flash-attention-2 decode
+  pattern). The final grid step writes ``acc / l``.
+* Head dim (default 64) and block_s (default 128) keep the q·K^T and p·V
+  contractions MXU-shaped (128x128 systolic tiles, bf16-friendly).
+* Per-batch valid lengths ``lens`` mask out cache slots beyond the current
+  position, so one compiled kernel serves a continuous batch of requests at
+  different decode positions.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; correctness is validated against ``ref.py`` and real-TPU
+performance is estimated analytically (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_S = 128
+NEG_INF = -1e30  # large-negative instead of -inf: keeps exp() exact-zero
+# without generating nan via (-inf) - (-inf) in the rescale step.
+
+
+def _decode_attn_kernel(
+    lens_ref,  # [1]      int32   valid length for this batch row
+    q_ref,     # [1,1,D]  f32     query for (b, h)
+    k_ref,     # [1,1,Bs,D] f32   KV block j
+    v_ref,     # [1,1,Bs,D] f32
+    o_ref,     # [1,1,D]  f32     output for (b, h)
+    m_ref,     # [1]      f32     scratch: running max
+    l_ref,     # [1]      f32     scratch: running normalizer
+    acc_ref,   # [D]      f32     scratch: running weighted sum
+    *,
+    block_s: int,
+    num_blocks: int,
+    sm_scale: float,
+):
+    j = pl.program_id(2)
+
+    # Reset the online-softmax state at the first KV block of each (b, h).
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :]          # [D]
+    k = k_ref[0, 0, :, :]       # [Bs, D]
+    v = v_ref[0, 0, :, :]       # [Bs, D]
+
+    # Scores for this KV block: q . k^T  -> [Bs]
+    s = jnp.dot(k, q) * sm_scale
+
+    # Mask cache slots at or beyond the valid length.
+    length = lens_ref[0]
+    positions = j * block_s + jax.lax.iota(jnp.int32, block_s)
+    s = jnp.where(positions < length, s, NEG_INF)
+
+    valid = positions < length
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    # Explicitly zero masked lanes: in a fully-masked block m_new == NEG_INF
+    # and exp(s - m_new) would otherwise evaluate to exp(0) == 1.
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # [Bs]
+    alpha = jnp.exp(m_prev - m_new)             # rescale of old state
+
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v)
+    m_ref[0] = m_new
+
+    # Last block: normalize and emit.
+    @pl.when(j == num_blocks - 1)
+    def _finalize():
+        # Guard against length == 0 (no valid slots): emit zeros.
+        denom = jnp.where(l_ref[0] > 0.0, l_ref[0], 1.0)
+        o_ref[0, 0, :] = acc_ref[...] / denom
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "sm_scale"))
+def flash_decode_attention(
+    q: jax.Array,     # [B, H, D]
+    k: jax.Array,     # [B, H, S, D]  KV cache (padded to S)
+    v: jax.Array,     # [B, H, S, D]
+    lens: jax.Array,  # [B] int32     valid entries per batch row
+    *,
+    block_s: int = DEFAULT_BLOCK_S,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Single-query attention over a padded KV cache.
+
+    Returns [B, H, D]. Entries of ``k``/``v`` at positions >= ``lens[b]`` are
+    ignored. Rows with ``lens[b] == 0`` return zeros.
+    """
+    B, H, D = q.shape
+    S = k.shape[2]
+    if S % block_s != 0:
+        # Pad the cache to a whole number of blocks; masking handles the rest.
+        pad = block_s - S % block_s
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    num_blocks = S // block_s
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+
+    grid = (B, H, num_blocks)
+    kernel = functools.partial(
+        _decode_attn_kernel,
+        block_s=block_s,
+        num_blocks=num_blocks,
+        sm_scale=sm_scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),               # lens
+            pl.BlockSpec((1, 1, D), lambda b, h, j: (b, h, 0)),     # q
+            pl.BlockSpec((1, 1, block_s, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_s, D), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu_scratch((1,), jnp.float32),
+            pltpu_scratch((1,), jnp.float32),
+            pltpu_scratch((D,), jnp.float32),
+        ],
+        interpret=True,
+    )(lens.astype(jnp.int32), q, k, v)
+
+
+def pltpu_scratch(shape, dtype):
+    """VMEM scratch allocation (portable: falls back off-TPU)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    try:
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover - older/newer API fallback
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Analytical TPU performance model (interpret=True gives no TPU timings).
+# ---------------------------------------------------------------------------
+
+def vmem_footprint_bytes(D: int, block_s: int, dtype_bytes: int = 4) -> int:
+    """Per-core VMEM resident set of one grid step.
+
+    q block + k block + v block + output + scratch(m, l, acc).
+    """
+    q = D * dtype_bytes
+    kv = 2 * block_s * D * dtype_bytes
+    out = D * dtype_bytes
+    scratch = (1 + 1 + D) * dtype_bytes
+    return q + kv + out + scratch
+
+
+def mxu_utilization_estimate(D: int, block_s: int) -> float:
+    """Fraction of MXU 128x128 tile lanes doing useful work.
+
+    The two contractions per block are [1,D]x[D,Bs] and [1,Bs]x[Bs,D]:
+    single-query decode keeps only 1 of 128 MXU rows busy unless batched;
+    utilization = (D/128 ceil-efficiency) * (Bs/128 ceil-efficiency) / 128
+    for a naive mapping, so the practical schedule packs (B*H) programs.
+    Reported per DESIGN.md §7 for the default D=64, Bs=128 tiling.
+    """
+    import math
+
+    def tile_eff(n: int) -> float:
+        return n / (math.ceil(n / 128) * 128)
+
+    return tile_eff(D) * tile_eff(block_s)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness bar).
+
+Every kernel in this package must match its reference here to float32
+tolerance across the hypothesis sweep in ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,     # [B, H, D]
+    k: jax.Array,     # [B, H, S, D]
+    v: jax.Array,     # [B, H, S, D]
+    lens: jax.Array,  # [B] int32
+    *,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Masked single-query attention, computed the naive stable way."""
+    B, H, D = q.shape
+    S = k.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+
+    s = jnp.einsum("bhd,bhsd->bhs", q, k) * sm_scale          # [B, H, S]
+    mask = jnp.arange(S)[None, :] < lens[:, None]             # [B, S]
+    s = jnp.where(mask[:, None, :], s, -jnp.inf)
+
+    # Stable softmax that yields all-zeros for fully-masked rows.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[:, None, :], p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    denom = jnp.where(denom > 0.0, denom, 1.0)
+    return jnp.einsum("bhs,bhsd->bhd", p / denom, v)
+
+
+def causal_attention_ref(
+    q: jax.Array,  # [B, S, H, D]
+    k: jax.Array,  # [B, S, H, D]
+    v: jax.Array,  # [B, S, H, D]
+    *,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Full causal self-attention (prefill path oracle)."""
+    B, S, H, D = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum("bihd,bjhd->bhij", q, k) * sm_scale
+    causal = jnp.tril(jnp.ones((S, S), dtype=bool))
+    s = jnp.where(causal[None, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhij,bjhd->bihd", p, v)

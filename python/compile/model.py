@@ -1,0 +1,251 @@
+"""L2: JAX transformer (decoder-only) served by WWW.Serve nodes.
+
+Build-time only — lowered AOT to HLO text by ``aot.py`` and executed from the
+Rust model manager via PJRT. The decode step's attention is the L1 Pallas
+kernel (``kernels.flash_decode``); prefill uses a fused jnp causal attention
+(prefill is compute-bound and XLA fuses it well; decode is the per-token hot
+path the kernel targets).
+
+Interchange contract with Rust (see ``aot.py`` manifest):
+
+* Parameters are a *flat list* of f32 arrays in the order produced by
+  ``param_spec`` — Rust loads them from ``artifacts/params.bin``.
+* ``prefill(params, tokens[B,S], lens[B])`` -> ``(logits[B,V], k, v)``
+  where ``k``/``v`` are ``[L, B, H, Smax, D]`` caches padded to ``max_seq``.
+* ``decode_step(params, k, v, tokens[B], lens[B])`` -> same triple; writes
+  each row's new KV at position ``lens[b]`` and attends over ``lens[b]+1``
+  entries. The caller owns the length bookkeeping.
+
+Rows are independent: a continuous batcher can pack unrelated requests at
+different positions into one call (this is exactly what the Rust
+``runtime::Batcher`` does).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_decode import flash_decode_attention
+from .kernels.ref import causal_attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer hyperparameters.
+
+    The default ("tiny", ~3.6 M params) is the serving model for tests and
+    the e2e example; ``large()`` (~124 M params) exists to prove the compile
+    path scales and for the training-scale shape checks.
+    """
+
+    vocab: int = 512
+    d_model: int = 256
+    n_heads: int = 4
+    d_head: int = 64
+    n_layers: int = 4
+    d_ff: int = 1024
+    max_seq: int = 256
+
+    @staticmethod
+    def tiny() -> "ModelConfig":
+        return ModelConfig()
+
+    @staticmethod
+    def test() -> "ModelConfig":
+        """2-layer micro config for fast unit tests."""
+        return ModelConfig(vocab=64, d_model=32, n_heads=2, d_head=16,
+                           n_layers=2, d_ff=64, max_seq=32)
+
+    @staticmethod
+    def large() -> "ModelConfig":
+        """GPT-2-small-ish scale (~117 M params)."""
+        return ModelConfig(vocab=16384, d_model=768, n_heads=12, d_head=64,
+                           n_layers=12, d_ff=3072, max_seq=512)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) for every parameter array, in interchange order."""
+    d, h, dh, ff, v, s = (cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff,
+                          cfg.vocab, cfg.max_seq)
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (v, d)),
+        ("pos_embed", (s, d)),
+    ]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.ln1_scale", (d,)),
+            (f"l{i}.ln1_bias", (d,)),
+            (f"l{i}.wq", (d, h * dh)),
+            (f"l{i}.wk", (d, h * dh)),
+            (f"l{i}.wv", (d, h * dh)),
+            (f"l{i}.wo", (h * dh, d)),
+            (f"l{i}.ln2_scale", (d,)),
+            (f"l{i}.ln2_bias", (d,)),
+            (f"l{i}.w1", (d, ff)),
+            (f"l{i}.b1", (ff,)),
+            (f"l{i}.w2", (ff, d)),
+            (f"l{i}.b2", (d,)),
+        ]
+    spec += [
+        ("lnf_scale", (d,)),
+        ("lnf_bias", (d,)),
+        ("lm_head", (d, v)),
+    ]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Scaled-normal initialization, deterministic in ``seed``."""
+    key = jax.random.PRNGKey(seed)
+    params: List[jax.Array] = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        base = name.split(".")[-1]
+        if base.startswith("ln") or base in ("b1", "b2"):
+            if "scale" in base:
+                params.append(jnp.ones(shape, jnp.float32))
+            else:
+                params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_spec(cfg))
+
+
+def _unpack(cfg: ModelConfig, params: Sequence[jax.Array]):
+    """Name-indexed view over the flat parameter list."""
+    names = [n for n, _ in param_spec(cfg)]
+    return dict(zip(names, params))
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+# --------------------------------------------------------------------------
+# Prefill
+# --------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Sequence[jax.Array],
+            tokens: jax.Array, lens: jax.Array):
+    """Process padded prompts; build KV caches and last-token logits.
+
+    tokens: [B, S] int32 (padded; entries >= lens[b] ignored)
+    lens:   [B] int32 actual prompt lengths (>= 1)
+    Returns (logits[B, V], k_cache[L,B,H,Smax,D], v_cache[L,B,H,Smax,D]).
+    """
+    p = _unpack(cfg, params)
+    B, S = tokens.shape
+    L, H, D, Smax = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.max_seq
+
+    x = p["embed"][tokens] + p["pos_embed"][:S][None, :, :]   # [B, S, d]
+
+    k_cache = jnp.zeros((L, B, H, Smax, D), jnp.float32)
+    v_cache = jnp.zeros((L, B, H, Smax, D), jnp.float32)
+
+    for i in range(L):
+        h_in = _layer_norm(x, p[f"l{i}.ln1_scale"], p[f"l{i}.ln1_bias"])
+        q = (h_in @ p[f"l{i}.wq"]).reshape(B, S, H, D)
+        k = (h_in @ p[f"l{i}.wk"]).reshape(B, S, H, D)
+        v = (h_in @ p[f"l{i}.wv"]).reshape(B, S, H, D)
+        attn = causal_attention_ref(q, k, v)                   # [B, S, H, D]
+        x = x + attn.reshape(B, S, H * D) @ p[f"l{i}.wo"]
+        h2 = _layer_norm(x, p[f"l{i}.ln2_scale"], p[f"l{i}.ln2_bias"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{i}.w1"] + p[f"l{i}.b1"]) @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+
+        # [B, S, H, D] -> [B, H, S, D], padded into the Smax cache.
+        k_cache = k_cache.at[i, :, :, :S, :].set(k.transpose(0, 2, 1, 3))
+        v_cache = v_cache.at[i, :, :, :S, :].set(v.transpose(0, 2, 1, 3))
+
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    # Logits at each row's last valid position.
+    idx = jnp.clip(lens - 1, 0, S - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0, :]
+    logits = last @ p["lm_head"]                               # [B, V]
+    return logits, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# Decode step (the request-path hot spot; attention = Pallas kernel)
+# --------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params: Sequence[jax.Array],
+                k_cache: jax.Array, v_cache: jax.Array,
+                tokens: jax.Array, lens: jax.Array):
+    """One token for every row of a continuous batch.
+
+    tokens: [B] int32 — current input token per row
+    lens:   [B] int32 — number of KV entries already in the cache per row;
+            the new token's KV is written at position ``lens[b]``.
+    Returns (logits[B, V], k_cache', v_cache').
+    """
+    p = _unpack(cfg, params)
+    B = tokens.shape[0]
+    L, H, D = cfg.n_layers, cfg.n_heads, cfg.d_head
+
+    pos = jnp.clip(lens, 0, cfg.max_seq - 1)
+    x = p["embed"][tokens] + p["pos_embed"][pos]               # [B, d]
+
+    batch_idx = jnp.arange(B)
+
+    for i in range(L):
+        h_in = _layer_norm(x, p[f"l{i}.ln1_scale"], p[f"l{i}.ln1_bias"])
+        q = (h_in @ p[f"l{i}.wq"]).reshape(B, H, D)
+        k = (h_in @ p[f"l{i}.wk"]).reshape(B, H, D)
+        v = (h_in @ p[f"l{i}.wv"]).reshape(B, H, D)
+
+        # Scatter this step's K/V into each row's slot ``pos[b]``.
+        k_cache = k_cache.at[i, batch_idx, :, pos, :].set(k)
+        v_cache = v_cache.at[i, batch_idx, :, pos, :].set(v)
+
+        attn = flash_decode_attention(
+            q, k_cache[i], v_cache[i], lens + 1,
+            block_s=min(128, cfg.max_seq),
+        )                                                       # [B, H, D]
+        x = x + attn.reshape(B, H * D) @ p[f"l{i}.wo"]
+        h2 = _layer_norm(x, p[f"l{i}.ln2_scale"], p[f"l{i}.ln2_bias"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{i}.w1"] + p[f"l{i}.b1"]) @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    logits = x @ p["lm_head"]                                  # [B, V]
+    return logits, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# Pure-jnp full-sequence oracle (tests: decode chain == one-shot forward)
+# --------------------------------------------------------------------------
+
+def forward_full(cfg: ModelConfig, params: Sequence[jax.Array],
+                 tokens: jax.Array):
+    """All-position logits [B, S, V] computed without any cache."""
+    p = _unpack(cfg, params)
+    B, S = tokens.shape
+    H, D = cfg.n_heads, cfg.d_head
+    x = p["embed"][tokens] + p["pos_embed"][:S][None, :, :]
+    for i in range(cfg.n_layers):
+        h_in = _layer_norm(x, p[f"l{i}.ln1_scale"], p[f"l{i}.ln1_bias"])
+        q = (h_in @ p[f"l{i}.wq"]).reshape(B, S, H, D)
+        k = (h_in @ p[f"l{i}.wk"]).reshape(B, S, H, D)
+        v = (h_in @ p[f"l{i}.wv"]).reshape(B, S, H, D)
+        attn = causal_attention_ref(q, k, v)
+        x = x + attn.reshape(B, S, H * D) @ p[f"l{i}.wo"]
+        h2 = _layer_norm(x, p[f"l{i}.ln2_scale"], p[f"l{i}.ln2_bias"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{i}.w1"] + p[f"l{i}.b1"]) @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    return x @ p["lm_head"]

@@ -1,0 +1,160 @@
+"""L1 correctness: Pallas flash-decode kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel — the hypothesis sweep
+covers shapes, block sizes, masking lengths and scale factors.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.flash_decode import (
+    flash_decode_attention,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _check(B, H, S, D, lens, block_s, sm_scale=None, rtol=2e-5, atol=2e-5):
+    q = _rand(0, (B, H, D))
+    k = _rand(1, (B, H, S, D))
+    v = _rand(2, (B, H, S, D))
+    lens = jnp.asarray(lens, jnp.int32)
+    out = flash_decode_attention(q, k, v, lens, block_s=block_s,
+                                 sm_scale=sm_scale)
+    ref = decode_attention_ref(q, k, v, lens, sm_scale=sm_scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=rtol, atol=atol)
+
+
+class TestBasic:
+    def test_full_length(self):
+        _check(2, 4, 128, 64, [128, 128], 128)
+
+    def test_partial_lengths(self):
+        _check(3, 2, 256, 32, [1, 100, 256], 128)
+
+    def test_zero_length_rows(self):
+        _check(3, 2, 128, 16, [0, 0, 0], 64)
+
+    def test_mixed_zero(self):
+        _check(4, 1, 64, 8, [0, 1, 63, 64], 32)
+
+    def test_block_not_dividing_seq(self):
+        # S=200 with block 128 forces the pad path.
+        _check(2, 2, 200, 16, [137, 200], 128)
+
+    def test_single_block(self):
+        _check(1, 1, 32, 8, [17], 32)
+
+    def test_block_larger_than_seq(self):
+        _check(1, 2, 16, 8, [9], 64)
+
+    def test_custom_scale(self):
+        _check(2, 2, 64, 16, [40, 64], 32, sm_scale=0.25)
+
+    def test_batch_one(self):
+        _check(1, 8, 256, 64, [255], 128)
+
+    def test_output_dtype_and_shape(self):
+        q = _rand(0, (2, 3, 16))
+        k = _rand(1, (2, 3, 64, 16))
+        v = _rand(2, (2, 3, 64, 16))
+        out = flash_decode_attention(q, k, v, jnp.array([5, 64]), block_s=32)
+        assert out.shape == (2, 3, 16)
+        assert out.dtype == jnp.float32
+
+    def test_rows_independent(self):
+        """Perturbing one batch row must not change the others."""
+        q = _rand(0, (3, 2, 16))
+        k = _rand(1, (3, 2, 64, 16))
+        v = _rand(2, (3, 2, 64, 16))
+        lens = jnp.array([10, 20, 30])
+        base = flash_decode_attention(q, k, v, lens, block_s=32)
+        q2 = q.at[1].set(q[1] * 3.0 + 1.0)
+        pert = flash_decode_attention(q2, k, v, lens, block_s=32)
+        np.testing.assert_allclose(np.asarray(base[0]), np.asarray(pert[0]))
+        np.testing.assert_allclose(np.asarray(base[2]), np.asarray(pert[2]))
+        assert not np.allclose(np.asarray(base[1]), np.asarray(pert[1]))
+
+    def test_masked_tail_ignored(self):
+        """Garbage beyond lens must not affect the result."""
+        q = _rand(0, (1, 2, 16))
+        k = _rand(1, (1, 2, 64, 16))
+        v = _rand(2, (1, 2, 64, 16))
+        lens = jnp.array([20])
+        base = flash_decode_attention(q, k, v, lens, block_s=32)
+        k2 = k.at[:, :, 20:, :].set(1e6)
+        v2 = v.at[:, :, 20:, :].set(-1e6)
+        pert = flash_decode_attention(q, k2, v2, lens, block_s=32)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(pert))
+
+
+@hypothesis.settings(max_examples=40, deadline=None,
+                     suppress_health_check=[hypothesis.HealthCheck.too_slow])
+@hypothesis.given(
+    B=st.integers(1, 4),
+    H=st.integers(1, 4),
+    S_blocks=st.integers(1, 4),
+    D=st.sampled_from([8, 16, 32, 64]),
+    block_s=st.sampled_from([16, 32, 64, 128]),
+    data=st.data(),
+)
+def test_kernel_matches_ref_sweep(B, H, S_blocks, D, block_s, data):
+    S = S_blocks * 32
+    lens = data.draw(
+        st.lists(st.integers(0, S), min_size=B, max_size=B), label="lens")
+    _check(B, H, S, D, lens, block_s)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    B=st.integers(1, 3),
+    scale_exp=st.integers(-3, 3),
+    data=st.data(),
+)
+def test_kernel_scale_invariance_sweep(B, scale_exp, data):
+    """Large/small magnitudes still match (online softmax stability)."""
+    S, H, D = 64, 2, 16
+    lens = data.draw(st.lists(st.integers(1, S), min_size=B, max_size=B))
+    scale = 10.0 ** scale_exp
+    q = _rand(0, (B, H, D)) * scale
+    k = _rand(1, (B, H, S, D))
+    v = _rand(2, (B, H, S, D))
+    L = jnp.asarray(lens, jnp.int32)
+    out = flash_decode_attention(q, k, v, L, block_s=32)
+    ref = decode_attention_ref(q, k, v, L)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-5, atol=5e-5)
+
+
+class TestPerfModel:
+    """Analytical TPU estimates (DESIGN.md §7) stay within VMEM budgets."""
+
+    def test_default_tiling_fits_vmem(self):
+        # 16 MB VMEM per TensorCore; default tile must be far below it.
+        assert vmem_footprint_bytes(64, 128) < 1 << 20
+
+    def test_footprint_monotone_in_block(self):
+        sizes = [vmem_footprint_bytes(64, b) for b in (64, 128, 256, 512)]
+        assert sizes == sorted(sizes)
+
+    def test_mxu_utilization_bounds(self):
+        for d in (8, 64, 128):
+            for b in (32, 128, 256):
+                u = mxu_utilization_estimate(d, b)
+                assert 0.0 < u <= 1.0
+
+    def test_default_tiling_mxu(self):
+        # D=64, Bs=128: 64/128 * 128/128 = 0.5 tile efficiency.
+        assert abs(mxu_utilization_estimate(64, 128) - 0.5) < 1e-9

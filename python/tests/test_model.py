@@ -1,0 +1,127 @@
+"""L2 correctness: prefill/decode vs the cache-free full forward pass."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig.test()
+PARAMS = M.init_params(CFG, seed=0)
+
+
+def _tokens(key, B, S):
+    return jax.random.randint(jax.random.PRNGKey(key), (B, S), 0, CFG.vocab)
+
+
+class TestShapes:
+    def test_param_spec_count(self):
+        spec = M.param_spec(CFG)
+        assert len(spec) == 3 + 2 + 12 * CFG.n_layers
+
+    def test_num_params_matches_init(self):
+        total = sum(int(np.prod(p.shape)) for p in PARAMS)
+        assert total == M.num_params(CFG)
+
+    def test_prefill_shapes(self):
+        B, S = 3, 16
+        logits, kc, vc = M.prefill(CFG, PARAMS, _tokens(0, B, S),
+                                   jnp.full((B,), S, jnp.int32))
+        assert logits.shape == (B, CFG.vocab)
+        assert kc.shape == (CFG.n_layers, B, CFG.n_heads, CFG.max_seq,
+                            CFG.d_head)
+        assert vc.shape == kc.shape
+
+    def test_decode_shapes(self):
+        B = 2
+        _, kc, vc = M.prefill(CFG, PARAMS, _tokens(0, B, 8),
+                              jnp.full((B,), 8, jnp.int32))
+        logits, kc2, vc2 = M.decode_step(
+            CFG, PARAMS, kc, vc,
+            jnp.zeros((B,), jnp.int32), jnp.full((B,), 8, jnp.int32))
+        assert logits.shape == (B, CFG.vocab)
+        assert kc2.shape == kc.shape
+
+    def test_init_deterministic(self):
+        p2 = M.init_params(CFG, seed=0)
+        for a, b in zip(PARAMS, p2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_init_seed_sensitivity(self):
+        p2 = M.init_params(CFG, seed=1)
+        assert any(
+            not np.allclose(np.asarray(a), np.asarray(b))
+            for a, b in zip(PARAMS, p2))
+
+    def test_large_config_spec(self):
+        large = M.ModelConfig.large()
+        n = M.num_params(large)
+        assert 100_000_000 < n < 160_000_000  # ~GPT-2-small scale
+
+
+class TestConsistency:
+    def test_prefill_matches_full_forward(self):
+        B, S = 2, 12
+        toks = _tokens(1, B, S)
+        lens = jnp.array([7, 12], jnp.int32)
+        logits, _, _ = M.prefill(CFG, PARAMS, toks, lens)
+        full = M.forward_full(CFG, PARAMS, toks)
+        for b, l in enumerate([7, 12]):
+            np.testing.assert_allclose(
+                np.asarray(logits[b]), np.asarray(full[b, l - 1]),
+                rtol=1e-4, atol=1e-4)
+
+    def test_decode_chain_matches_full_forward(self):
+        """prefill + N decode steps == one-shot forward on the whole text."""
+        B, S0, steps = 1, 6, 5
+        toks = _tokens(2, B, S0)
+        lens = jnp.full((B,), S0, jnp.int32)
+        logits, kc, vc = M.prefill(CFG, PARAMS, toks, lens)
+        seq = [int(t) for t in np.asarray(toks[0])]
+        for step in range(steps):
+            nxt = int(np.argmax(np.asarray(logits[0])))
+            seq.append(nxt)
+            logits, kc, vc = M.decode_step(
+                CFG, PARAMS, kc, vc,
+                jnp.array([nxt], jnp.int32), lens)
+            lens = lens + 1
+        full = M.forward_full(CFG, PARAMS, jnp.array([seq], jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(logits[0]), np.asarray(full[0, -1]),
+            rtol=1e-3, atol=1e-3)
+
+    def test_batch_rows_independent(self):
+        """Decode on a packed batch == decode on each row alone."""
+        toks = _tokens(3, 2, 8)
+        lens = jnp.array([5, 8], jnp.int32)
+        _, kc, vc = M.prefill(CFG, PARAMS, toks, lens)
+        nxt = jnp.array([1, 2], jnp.int32)
+        packed, _, _ = M.decode_step(CFG, PARAMS, kc, vc, nxt, lens)
+        for b in range(2):
+            _, kc1, vc1 = M.prefill(CFG, PARAMS, toks[b:b + 1],
+                                    lens[b:b + 1])
+            solo, _, _ = M.decode_step(CFG, PARAMS, kc1, vc1,
+                                       nxt[b:b + 1], lens[b:b + 1])
+            np.testing.assert_allclose(np.asarray(packed[b]),
+                                       np.asarray(solo[0]),
+                                       rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    B=st.integers(1, 3),
+    S=st.integers(2, 16),
+    seed=st.integers(0, 10),
+)
+def test_prefill_full_forward_sweep(B, S, seed):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0, CFG.vocab)
+    lens = jnp.full((B,), S, jnp.int32)
+    logits, _, _ = M.prefill(CFG, PARAMS, toks, lens)
+    full = M.forward_full(CFG, PARAMS, toks)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)

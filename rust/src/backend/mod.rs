@@ -1,0 +1,73 @@
+//! Backend-agnostic execution (§3.2 "Model Manager" substrate).
+//!
+//! The paper's Model Manager abstracts over SGLang/vLLM servers on real
+//! GPUs; here a [`Backend`] is anything that can run inference requests with
+//! continuous-batching semantics and report utilization. Two
+//! implementations:
+//!
+//! * [`sim::SimBackend`] — an event-driven processor-sharing model of a
+//!   modern LLM server (prefill + decode phases, KV-memory concurrency cap,
+//!   batch-throughput saturation). Used by every experiment bench; see
+//!   DESIGN.md §2 for why this preserves the paper's measured behaviour.
+//! * `runtime::PjrtBackend` — real token generation on the AOT-compiled
+//!   JAX/Pallas transformer via PJRT (the e2e example path).
+
+pub mod pjrt;
+pub mod profiles;
+pub mod sim;
+
+pub use pjrt::PjrtBackend;
+pub use profiles::{BackendProfile, Gpu, ModelClass, Profile, ServingStack};
+pub use sim::SimBackend;
+
+use crate::types::{ExecKind, Request, Time};
+
+/// A completed inference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub request: Request,
+    pub kind: ExecKind,
+    /// When the backend finished generating.
+    pub finished_at: Time,
+    /// When the backend started working on it (left the queue).
+    pub started_at: Time,
+}
+
+/// Continuous-batching inference backend, driven by (virtual or wall) time.
+///
+/// The contract mirrors how the coordinator polls an OpenAI-compatible
+/// server for queue metrics in the paper's implementation (Appendix B):
+/// `advance(now)` settles all work up to `now` and returns completions;
+/// `next_event()` tells the event loop when something will change.
+pub trait Backend {
+    /// Enqueue a request at time `now`.
+    fn submit(&mut self, req: Request, kind: ExecKind, now: Time);
+
+    /// Settle work up to `now`; return requests that finished.
+    fn advance(&mut self, now: Time) -> Vec<Completion>;
+
+    /// Next time the backend's state changes on its own (a completion or a
+    /// phase transition), if any work is in flight.
+    fn next_event(&self) -> Option<Time>;
+
+    /// Running-slot utilization in [0, 1] (running / max concurrent).
+    fn utilization(&self) -> f64;
+
+    /// Requests waiting for a slot.
+    fn queue_len(&self) -> usize;
+
+    /// Requests currently being served.
+    fn running_len(&self) -> usize;
+
+    /// The node's intrinsic response quality q_i in [0, 1] (§5 Assumption
+    /// 5.1) — drives the duel mechanism's win probabilities.
+    fn quality(&self) -> f64;
+
+    /// Withdraw up to `k` of the node's *own* still-queued requests (newest
+    /// first) so the scheduler can re-dispatch them elsewhere — the queue
+    /// rebalancing a provider's Policy Manager performs when overloaded.
+    /// Default: backends that can't un-queue return nothing.
+    fn steal_queued(&mut self, _k: usize) -> Vec<Request> {
+        Vec::new()
+    }
+}

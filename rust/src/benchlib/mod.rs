@@ -1,0 +1,165 @@
+//! Minimal benchmarking harness (criterion is unavailable offline —
+//! DESIGN.md §8). Used by every `benches/*.rs` (all `harness = false`).
+//!
+//! Features the benches need: warmup, timed iterations with mean/p50/p99,
+//! throughput reporting, and simple fixed-width table printing for the
+//! paper-figure harnesses.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` repeatedly: `warmup` unmeasured runs, then up to `iters`
+/// measured runs (capped at ~`budget_s` wall seconds).
+pub fn bench<R>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    budget_s: f64,
+    mut f: impl FnMut() -> R,
+) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if start.elapsed().as_secs_f64() > budget_s {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let pick = |p: f64| samples[((n - 1) as f64 * p) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: if samples.is_empty() { 0.0 } else { pick(0.5) },
+        p99_ns: if samples.is_empty() { 0.0 } else { pick(0.99) },
+        min_ns: samples.first().copied().unwrap_or(0.0),
+    };
+    r.report();
+    r
+}
+
+/// Print a markdown-ish table (paper-figure harness output).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let r = bench("noop", 2, 50, 1.0, || 1 + 1);
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert!(r.min_ns <= r.mean_ns * 1.5 + 1.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // just must not panic
+    }
+}

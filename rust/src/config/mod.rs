@@ -1,0 +1,334 @@
+//! Experiment configuration files (Appendix B's YAML schema, as JSON —
+//! DESIGN.md §8).
+//!
+//! Example:
+//! ```json
+//! {
+//!   "seed": 7,
+//!   "horizon": 750,
+//!   "strategy": "decentralized",
+//!   "ledger": "shared",
+//!   "system": { "duel_rate": 0.1, "judges": 2 },
+//!   "nodes": [
+//!     {
+//!       "model": "qwen3-8b", "gpu": "ada6000", "backend": "sglang",
+//!       "policy": { "stake": 10, "offload_freq": 0.8, "accept_freq": 0.8 },
+//!       "schedule": [ {"from": 0, "to": 300, "inter_arrival": 5},
+//!                     {"from": 300, "to": 750, "inter_arrival": 20} ]
+//!     }
+//!   ]
+//! }
+//! ```
+
+use crate::backend::{Gpu, ModelClass, Profile, ServingStack};
+use crate::policy::{NodePolicy, SystemPolicy};
+use crate::schedulers::Strategy;
+use crate::sim::{LedgerMode, NodeSetup, WorldConfig};
+use crate::types::{NodeId, CREDIT};
+use crate::util::json::Json;
+use crate::workload::{Generator, Phase};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("parse error: {0}")]
+    Parse(#[from] crate::util::json::ParseError),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// A fully parsed experiment description.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub seed: u64,
+    pub horizon: f64,
+    pub strategy: Strategy,
+    pub world: WorldConfig,
+    pub setups: Vec<NodeSetup>,
+}
+
+fn bad(msg: impl Into<String>) -> ConfigError {
+    ConfigError::Invalid(msg.into())
+}
+
+fn parse_model(s: &str) -> Result<ModelClass, ConfigError> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "qwen3-32b" => ModelClass::Qwen3_32B,
+        "qwen3-8b" => ModelClass::Qwen3_8B,
+        "qwen3-4b" => ModelClass::Qwen3_4B,
+        "qwen3-0.6b" => ModelClass::Qwen3_0_6B,
+        "deepseek-qwen-7b" => ModelClass::DeepSeekQwen7B,
+        "llama3.1-8b" => ModelClass::Llama31_8B,
+        other => return Err(bad(format!("unknown model '{other}'"))),
+    })
+}
+
+fn parse_gpu(s: &str) -> Result<Gpu, ConfigError> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "4xa100" => Gpu::A100x4,
+        "a100" => Gpu::A100,
+        "l40s" => Gpu::L40S,
+        "ada6000" => Gpu::Ada6000,
+        "rtx4090" => Gpu::Rtx4090,
+        "rtx3090" => Gpu::Rtx3090,
+        other => return Err(bad(format!("unknown gpu '{other}'"))),
+    })
+}
+
+fn parse_stack(s: &str) -> Result<ServingStack, ConfigError> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "sglang" => ServingStack::SgLang,
+        "vllm" => ServingStack::Vllm,
+        other => return Err(bad(format!("unknown backend '{other}'"))),
+    })
+}
+
+fn parse_strategy(s: &str) -> Result<Strategy, ConfigError> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "single" => Strategy::Single,
+        "centralized" => Strategy::Centralized,
+        "decentralized" => Strategy::Decentralized,
+        other => return Err(bad(format!("unknown strategy '{other}'"))),
+    })
+}
+
+fn parse_policy(j: &Json) -> NodePolicy {
+    let d = NodePolicy::default();
+    NodePolicy {
+        stake: j
+            .get("stake")
+            .as_f64()
+            .map(|c| (c * CREDIT as f64) as u64)
+            .unwrap_or(d.stake),
+        offload_freq: j.get("offload_freq").as_f64().unwrap_or(d.offload_freq),
+        accept_freq: j.get("accept_freq").as_f64().unwrap_or(d.accept_freq),
+        target_utilization: j
+            .get("target_utilization")
+            .as_f64()
+            .unwrap_or(d.target_utilization),
+        queue_threshold: j
+            .get("queue_threshold")
+            .as_usize()
+            .unwrap_or(d.queue_threshold),
+        prioritize_own: j
+            .get("prioritize_own")
+            .as_bool()
+            .unwrap_or(d.prioritize_own),
+        requester_only: j
+            .get("requester_only")
+            .as_bool()
+            .unwrap_or(d.requester_only),
+    }
+}
+
+fn parse_system(j: &Json) -> SystemPolicy {
+    let d = SystemPolicy::default();
+    SystemPolicy {
+        base_reward: j
+            .get("base_reward")
+            .as_f64()
+            .map(|c| (c * CREDIT as f64) as u64)
+            .unwrap_or(d.base_reward),
+        duel_rate: j.get("duel_rate").as_f64().unwrap_or(d.duel_rate),
+        duel_reward: j
+            .get("duel_reward")
+            .as_f64()
+            .map(|c| (c * CREDIT as f64) as u64)
+            .unwrap_or(d.duel_reward),
+        duel_penalty: j
+            .get("duel_penalty")
+            .as_f64()
+            .map(|c| (c * CREDIT as f64) as u64)
+            .unwrap_or(d.duel_penalty),
+        judges: j.get("judges").as_usize().unwrap_or(d.judges),
+        judge_reward: j
+            .get("judge_reward")
+            .as_f64()
+            .map(|c| (c * CREDIT as f64) as u64)
+            .unwrap_or(d.judge_reward),
+        max_probes: j.get("max_probes").as_usize().unwrap_or(d.max_probes),
+        genesis_credits: j
+            .get("genesis_credits")
+            .as_f64()
+            .map(|c| (c * CREDIT as f64) as u64)
+            .unwrap_or(d.genesis_credits),
+        confirm_quorum: j
+            .get("confirm_quorum")
+            .as_f64()
+            .unwrap_or(d.confirm_quorum),
+    }
+}
+
+fn parse_phases(j: &Json) -> Result<Vec<Phase>, ConfigError> {
+    let arr = j.as_arr().ok_or_else(|| bad("schedule must be an array"))?;
+    arr.iter()
+        .map(|p| {
+            Ok(Phase::new(
+                p.get("from").as_f64().ok_or_else(|| bad("phase.from"))?,
+                p.get("to").as_f64().ok_or_else(|| bad("phase.to"))?,
+                p.get("inter_arrival")
+                    .as_f64()
+                    .ok_or_else(|| bad("phase.inter_arrival"))?,
+            ))
+        })
+        .collect()
+}
+
+/// Parse an experiment from JSON text.
+pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
+    let j = Json::parse(text)?;
+    let seed = j.get("seed").as_u64().unwrap_or(0);
+    let horizon = j.get("horizon").as_f64().unwrap_or(750.0);
+    let strategy =
+        parse_strategy(j.get("strategy").as_str().unwrap_or("decentralized"))?;
+    let ledger = match j.get("ledger").as_str().unwrap_or("shared") {
+        "shared" => LedgerMode::Shared,
+        "blockchain" => LedgerMode::Blockchain,
+        other => return Err(bad(format!("unknown ledger mode '{other}'"))),
+    };
+    let system = parse_system(j.get("system"));
+    let nodes = j
+        .get("nodes")
+        .as_arr()
+        .ok_or_else(|| bad("missing 'nodes' array"))?;
+    if nodes.is_empty() {
+        return Err(bad("empty 'nodes' array"));
+    }
+
+    let mut setups = Vec::with_capacity(nodes.len());
+    for (i, nj) in nodes.iter().enumerate() {
+        // Either a (model, gpu, backend) triple or an explicit profile.
+        let profile = if nj.get("profile").is_null() {
+            let model =
+                parse_model(nj.get("model").as_str().unwrap_or("qwen3-8b"))?;
+            let gpu = parse_gpu(nj.get("gpu").as_str().unwrap_or("a100"))?;
+            let stack =
+                parse_stack(nj.get("backend").as_str().unwrap_or("sglang"))?;
+            Profile::derive(model, gpu, stack)
+        } else {
+            let p = nj.get("profile");
+            Profile {
+                prefill_tok_s: p
+                    .get("prefill_tok_s")
+                    .as_f64()
+                    .ok_or_else(|| bad("profile.prefill_tok_s"))?,
+                decode_tok_s: p
+                    .get("decode_tok_s")
+                    .as_f64()
+                    .ok_or_else(|| bad("profile.decode_tok_s"))?,
+                max_agg_decode_tok_s: p
+                    .get("max_agg_decode_tok_s")
+                    .as_f64()
+                    .ok_or_else(|| bad("profile.max_agg_decode_tok_s"))?,
+                max_batch: p
+                    .get("max_batch")
+                    .as_usize()
+                    .ok_or_else(|| bad("profile.max_batch"))?,
+                quality: p.get("quality").as_f64().unwrap_or(0.7),
+            }
+        };
+        let policy = parse_policy(nj.get("policy"));
+        let mut setup = NodeSetup::new(profile, policy);
+        if !nj.get("schedule").is_null() {
+            let phases = parse_phases(nj.get("schedule"))?;
+            setup = setup
+                .with_generator(Generator::new(NodeId(i as u32), phases));
+        }
+        if nj.get("start_offline").as_bool().unwrap_or(false) {
+            setup = setup.offline();
+        }
+        setups.push(setup);
+    }
+
+    Ok(Experiment {
+        seed,
+        horizon,
+        strategy,
+        world: WorldConfig {
+            seed,
+            system,
+            ledger,
+            ..Default::default()
+        },
+        setups,
+    })
+}
+
+/// Read + parse a config file.
+pub fn load_experiment(path: &str) -> Result<Experiment, ConfigError> {
+    let text = std::fs::read_to_string(path)?;
+    parse_experiment(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "seed": 7,
+        "horizon": 200,
+        "strategy": "decentralized",
+        "ledger": "shared",
+        "system": { "duel_rate": 0.25, "judges": 3 },
+        "nodes": [
+            { "model": "qwen3-8b", "gpu": "ada6000", "backend": "sglang",
+              "policy": { "stake": 5, "offload_freq": 0.5 },
+              "schedule": [ {"from": 0, "to": 200, "inter_arrival": 10} ] },
+            { "model": "qwen3-4b", "gpu": "rtx3090", "backend": "vllm",
+              "start_offline": true }
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let e = parse_experiment(SAMPLE).unwrap();
+        assert_eq!(e.seed, 7);
+        assert_eq!(e.horizon, 200.0);
+        assert_eq!(e.strategy, Strategy::Decentralized);
+        assert_eq!(e.setups.len(), 2);
+        assert!((e.world.system.duel_rate - 0.25).abs() < 1e-12);
+        assert_eq!(e.world.system.judges, 3);
+        assert_eq!(e.setups[0].policy.stake, 5 * CREDIT);
+        assert!((e.setups[0].policy.offload_freq - 0.5).abs() < 1e-12);
+        // Defaults fill unspecified fields.
+        assert!((e.setups[0].policy.accept_freq - 0.8).abs() < 1e-12);
+        assert!(e.setups[0].generator.is_some());
+        assert!(e.setups[1].generator.is_none());
+        assert!(e.setups[1].start_offline);
+    }
+
+    #[test]
+    fn explicit_profile() {
+        let text = r#"{
+            "nodes": [ { "profile": { "prefill_tok_s": 1000,
+                "decode_tok_s": 50, "max_agg_decode_tok_s": 500,
+                "max_batch": 16, "quality": 0.9 } } ]
+        }"#;
+        let e = parse_experiment(text).unwrap();
+        assert_eq!(e.setups[0].profile.max_batch, 16);
+        assert!((e.setups[0].profile.quality - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(parse_experiment("{").is_err());
+        assert!(parse_experiment(r#"{"nodes": []}"#).is_err());
+        assert!(parse_experiment(
+            r#"{"nodes": [{"model": "gpt99"}]}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"strategy": "quantum", "nodes": [{}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let e = parse_experiment(r#"{"nodes": [{}]}"#).unwrap();
+        assert_eq!(e.horizon, 750.0);
+        assert_eq!(e.strategy, Strategy::Decentralized);
+        assert_eq!(e.world.ledger, LedgerMode::Shared);
+    }
+}

@@ -1,0 +1,55 @@
+//! Events into and actions out of the sans-io node state machine.
+//!
+//! `Node::handle(Event, now) -> Vec<Action>` is the whole interface: the
+//! deterministic simulator (`sim::World`) and the real-time TCP runner
+//! (`net::tcp`) both drive nodes through it, so every line of coordination
+//! logic is exercised identically under test and in deployment.
+
+use super::msg::Message;
+use crate::duel::DuelOutcome;
+use crate::types::{NodeId, Request, RequestRecord, Time};
+
+/// Everything that can happen to a node.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A local user submitted a request.
+    UserRequest(Request),
+    /// A peer sent us a message.
+    Message { from: NodeId, msg: Message },
+    /// Periodic pump (default 1 s): gossip round, timeout scan, backend
+    /// progress collection.
+    Tick,
+    /// Wake-up at a predicted backend completion time.
+    BackendWake,
+    /// The provider takes this node offline (graceful: gossips a goodbye).
+    Leave,
+    /// The provider brings this node (back) online.
+    Join,
+}
+
+/// Everything a node can ask its runner to do.
+#[derive(Debug, Clone)]
+pub enum Action {
+    /// Deliver a message to a peer.
+    Send { to: NodeId, msg: Message },
+    /// A request finished from the user's perspective (origin side), or a
+    /// synthetic duel/judge execution finished (executor side,
+    /// `record.synthetic == true`).
+    Done(RequestRecord),
+    /// Ask to be woken with `BackendWake` at this time (runner keeps the
+    /// earliest outstanding wake per node).
+    WakeAt(Time),
+    /// A duel settled at this originator (stats for Figure 6).
+    DuelSettled(DuelOutcome),
+}
+
+impl Action {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Action::Send { .. } => "send",
+            Action::Done(_) => "done",
+            Action::WakeAt(_) => "wake_at",
+            Action::DuelSettled(_) => "duel_settled",
+        }
+    }
+}

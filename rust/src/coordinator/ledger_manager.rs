@@ -1,0 +1,398 @@
+//! Ledger Manager (Figure 2): the node's gateway to the credit system.
+//!
+//! Two modes behind one API:
+//!
+//! * **Shared** — an `Arc<Mutex<SharedLedger>>` shared by all nodes (the
+//!   paper's Appendix-C deployment choice). `submit` applies immediately;
+//!   no messages are produced.
+//! * **Chain** — a full per-node Credit Block Chain replica. `submit`
+//!   enqueues the op batch; batches are proposed one at a time as signed
+//!   blocks, broadcast for votes, and committed at quorum. Conflicting
+//!   heads (two proposers racing) resolve by re-proposing on the new head.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::events::Action;
+use super::msg::Message;
+use crate::crypto::{Hash256, KeyStore, NodeKey};
+use crate::ledger::{Block, Chain, CreditOp, Ledger, SharedLedger};
+use crate::types::{Credits, NodeId, Time};
+
+/// Blockchain-mode replica state.
+#[derive(Debug)]
+pub struct ChainReplica {
+    pub chain: Chain,
+    key: NodeKey,
+    keys: KeyStore,
+    /// Votes needed to commit (incl. the proposer's implicit vote).
+    quorum: usize,
+    /// Batches waiting to be proposed (one in flight at a time).
+    queue: VecDeque<Vec<CreditOp>>,
+    /// The block we currently have in flight (id + its op batch, kept so a
+    /// head race can re-propose the same ops on the new head).
+    in_flight: Option<(Hash256, Vec<CreditOp>)>,
+}
+
+/// The manager.
+pub enum LedgerManager {
+    Shared(Arc<Mutex<SharedLedger>>),
+    Chain(Box<ChainReplica>),
+}
+
+impl LedgerManager {
+    pub fn shared(ledger: Arc<Mutex<SharedLedger>>) -> Self {
+        LedgerManager::Shared(ledger)
+    }
+
+    pub fn chain(key: NodeKey, keys: KeyStore, quorum: usize) -> Self {
+        LedgerManager::Chain(Box::new(ChainReplica {
+            chain: Chain::new(),
+            key,
+            keys,
+            quorum: quorum.max(1),
+            queue: VecDeque::new(),
+            in_flight: None,
+        }))
+    }
+
+    pub fn is_chain(&self) -> bool {
+        matches!(self, LedgerManager::Chain(_))
+    }
+
+    // ---- read API ---------------------------------------------------------
+
+    pub fn balance(&self, node: NodeId) -> Credits {
+        match self {
+            LedgerManager::Shared(l) => l.lock().unwrap().balance(node),
+            LedgerManager::Chain(r) => r.chain.balance(node),
+        }
+    }
+
+    pub fn stake(&self, node: NodeId) -> Credits {
+        match self {
+            LedgerManager::Shared(l) => l.lock().unwrap().stake(node),
+            LedgerManager::Chain(r) => r.chain.stake(node),
+        }
+    }
+
+    pub fn stakes(&self) -> Vec<(NodeId, Credits)> {
+        match self {
+            LedgerManager::Shared(l) => l.lock().unwrap().stakes(),
+            LedgerManager::Chain(r) => r.chain.balances().stakes(),
+        }
+    }
+
+    // ---- write API --------------------------------------------------------
+
+    /// Submit an op batch. Shared mode applies now (errors are swallowed
+    /// after a balance check by the caller — see Node::try_pay); chain mode
+    /// queues a block proposal and may emit broadcast actions.
+    pub fn submit(
+        &mut self,
+        ops: Vec<CreditOp>,
+        me: NodeId,
+        peers: &[NodeId],
+        now: Time,
+    ) -> Vec<Action> {
+        if ops.is_empty() {
+            return vec![];
+        }
+        match self {
+            LedgerManager::Shared(l) => {
+                // Validation failure = drop: the coordinator checks
+                // affordability before submitting, so this only fires when a
+                // concurrent spend raced us; the op batch is then void.
+                let _ = l.lock().unwrap().submit(ops, me, now);
+                vec![]
+            }
+            LedgerManager::Chain(r) => {
+                r.queue.push_back(ops);
+                r.try_propose(now, peers)
+            }
+        }
+    }
+
+    /// Handle a ledger-related message. Returns follow-up actions.
+    pub fn on_message(
+        &mut self,
+        from: NodeId,
+        msg: &Message,
+        me: NodeId,
+        peers: &[NodeId],
+        now: Time,
+    ) -> Vec<Action> {
+        let LedgerManager::Chain(r) = self else {
+            return vec![];
+        };
+        match msg {
+            Message::BlockProposal { block } => {
+                let ok = r.chain.validate(block, &r.keys).is_ok();
+                if ok {
+                    r.chain.track_pending(block.clone());
+                }
+                vec![Action::Send {
+                    to: from,
+                    msg: Message::BlockVote { block_id: block.id, accept: ok },
+                }]
+            }
+            Message::BlockVote { block_id, accept } => {
+                let in_flight_id = r.in_flight.as_ref().map(|(id, _)| *id);
+                if in_flight_id != Some(*block_id) {
+                    return vec![];
+                }
+                if !accept {
+                    // A reject means our parent is stale (someone else's
+                    // block landed first). Abandon and re-propose the same
+                    // ops on the new head.
+                    let (_, ops) = r.in_flight.take().expect("checked");
+                    r.queue.push_front(ops);
+                    return r.try_propose(now, peers);
+                }
+                let votes = match r.chain.vote(*block_id, from) {
+                    Ok(v) => v,
+                    Err(_) => return vec![],
+                };
+                // +1: our own implicit vote as proposer.
+                if votes + 1 >= r.quorum {
+                    let Some(block) = r.chain.commit_and_get(*block_id, &r.keys)
+                    else {
+                        return vec![];
+                    };
+                    r.in_flight = None;
+                    let mut actions: Vec<Action> = peers
+                        .iter()
+                        .map(|p| Action::Send {
+                            to: *p,
+                            msg: Message::BlockCommit { block: block.clone() },
+                        })
+                        .collect();
+                    actions.extend(r.try_propose(now, peers));
+                    actions
+                } else {
+                    vec![]
+                }
+            }
+            Message::ChainRequest { len } => {
+                if (r.chain.len() as u64) > *len {
+                    vec![Action::Send {
+                        to: from,
+                        msg: Message::ChainSnapshot {
+                            blocks: r.chain.blocks().to_vec(),
+                        },
+                    }]
+                } else {
+                    vec![]
+                }
+            }
+            Message::ChainSnapshot { blocks } => {
+                if r.chain.adopt_if_longer(blocks, &r.keys) {
+                    // Anything we had in flight is now on a stale head.
+                    if let Some((_, ops)) = r.in_flight.take() {
+                        r.queue.push_front(ops);
+                        return r.try_propose(now, peers);
+                    }
+                }
+                vec![]
+            }
+            Message::BlockCommit { block } => {
+                let _ = r.chain.commit_block(block.clone(), &r.keys);
+                let _ = me;
+                // Our own in-flight proposal (if any) now sits on a stale
+                // head: abandon it and re-propose its ops on the new head.
+                if let Some((_, ops)) = r.in_flight.take() {
+                    r.queue.push_front(ops);
+                    return r.try_propose(now, peers);
+                }
+                vec![]
+            }
+            _ => vec![],
+        }
+    }
+
+    /// Re-propose on tick if a proposal stalled (e.g. lost a head race),
+    /// and run one anti-entropy probe so stale replicas catch up.
+    pub fn on_tick(&mut self, peers: &[NodeId], now: Time) -> Vec<Action> {
+        let LedgerManager::Chain(r) = self else {
+            return vec![];
+        };
+        let mut actions = if r.in_flight.is_none() {
+            r.try_propose(now, peers)
+        } else {
+            vec![]
+        };
+        // Anti-entropy: announce our length to a rotating peer.
+        if !peers.is_empty() {
+            let target = peers[(now as usize) % peers.len()];
+            actions.push(Action::Send {
+                to: target,
+                msg: Message::ChainRequest { len: r.chain.len() as u64 },
+            });
+        }
+        actions
+    }
+}
+
+impl ChainReplica {
+    /// Propose the next queued batch if nothing is in flight.
+    fn try_propose(&mut self, now: Time, peers: &[NodeId]) -> Vec<Action> {
+        if self.in_flight.is_some() {
+            return vec![];
+        }
+        let Some(ops) = self.queue.pop_front() else {
+            return vec![];
+        };
+        let block =
+            Block::create(self.chain.head(), now, ops.clone(), &self.key);
+        // Validate against our own replica (ops may have become invalid).
+        if self.chain.validate(&block, &self.keys).is_err() {
+            // Drop the batch: it can no longer apply (e.g. stake drained).
+            return self.try_propose(now, peers);
+        }
+        self.chain.track_pending(block.clone());
+        self.in_flight = Some((block.id, ops));
+        if peers.is_empty() {
+            // Single-node network: self-commit immediately.
+            let _ = self.chain.commit(block.id, &self.keys);
+            self.in_flight = None;
+            return self.try_propose(now, peers);
+        }
+        peers
+            .iter()
+            .map(|p| Action::Send {
+                to: *p,
+                msg: Message::BlockProposal { block: block.clone() },
+            })
+            .collect()
+    }
+}
+
+impl Chain {
+    /// Commit a pending block and return it (helper for vote handling).
+    fn commit_and_get(&mut self, id: Hash256, keys: &KeyStore) -> Option<Block> {
+        let block = self
+            .blocks()
+            .iter()
+            .find(|b| b.id == id)
+            .cloned()
+            .or_else(|| self.pending_block(&id));
+        let block = block?;
+        if self.blocks().iter().any(|b| b.id == id) {
+            return Some(block);
+        }
+        self.commit(id, keys).ok()?;
+        Some(block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ledger::OpReason;
+
+    fn mint(to: u32, amount: Credits) -> CreditOp {
+        CreditOp::Mint {
+            to: NodeId(to),
+            amount,
+            reason: OpReason::Genesis,
+        }
+    }
+
+    #[test]
+    fn shared_mode_applies_immediately() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut m = LedgerManager::shared(shared.clone());
+        let actions = m.submit(vec![mint(0, 50)], NodeId(0), &[], 0.0);
+        assert!(actions.is_empty());
+        assert_eq!(m.balance(NodeId(0)), 50);
+        assert_eq!(shared.lock().unwrap().balance(NodeId(0)), 50);
+    }
+
+    #[test]
+    fn chain_mode_single_node_self_commits() {
+        let key = NodeKey::derive(1, NodeId(0));
+        let keys = KeyStore::for_network(1, 1);
+        let mut m = LedgerManager::chain(key, keys, 1);
+        let actions = m.submit(vec![mint(0, 50)], NodeId(0), &[], 0.0);
+        assert!(actions.is_empty());
+        assert_eq!(m.balance(NodeId(0)), 50);
+    }
+
+    #[test]
+    fn chain_mode_propose_vote_commit_roundtrip() {
+        let keys = KeyStore::for_network(1, 3);
+        let mut proposer =
+            LedgerManager::chain(NodeKey::derive(1, NodeId(0)), keys.clone(), 2);
+        let mut voter =
+            LedgerManager::chain(NodeKey::derive(1, NodeId(1)), keys.clone(), 2);
+        let peers = [NodeId(1), NodeId(2)];
+
+        // Proposer broadcasts.
+        let actions = proposer.submit(vec![mint(0, 50)], NodeId(0), &peers, 0.0);
+        assert_eq!(actions.len(), 2);
+        let Action::Send { msg: proposal, .. } = &actions[0] else {
+            panic!("expected send")
+        };
+
+        // Voter validates + votes accept.
+        let votes = voter.on_message(NodeId(0), proposal, NodeId(1), &[], 0.1);
+        assert_eq!(votes.len(), 1);
+        let Action::Send { msg: vote, to } = &votes[0] else { panic!() };
+        assert_eq!(*to, NodeId(0));
+
+        // Proposer reaches quorum (1 vote + self = 2) and broadcasts commit.
+        let commits = proposer.on_message(NodeId(1), vote, NodeId(0), &peers, 0.2);
+        assert_eq!(commits.len(), 2);
+        assert_eq!(proposer.balance(NodeId(0)), 50);
+
+        // Voter applies the commit.
+        let Action::Send { msg: commit, .. } = &commits[0] else { panic!() };
+        voter.on_message(NodeId(0), commit, NodeId(1), &[], 0.3);
+        assert_eq!(voter.balance(NodeId(0)), 50);
+    }
+
+    #[test]
+    fn chain_mode_rejects_invalid_proposal() {
+        let keys = KeyStore::for_network(1, 2);
+        let mut voter =
+            LedgerManager::chain(NodeKey::derive(1, NodeId(1)), keys, 2);
+        // A transfer with no funds behind it.
+        let bad_key = NodeKey::derive(1, NodeId(0));
+        let block = Block::create(
+            Hash256::ZERO,
+            0.0,
+            vec![CreditOp::Transfer {
+                from: NodeId(0),
+                to: NodeId(1),
+                amount: 100,
+                reason: OpReason::PolicyAdjust,
+            }],
+            &bad_key,
+        );
+        let actions = voter.on_message(
+            NodeId(0),
+            &Message::BlockProposal { block },
+            NodeId(1),
+            &[],
+            0.0,
+        );
+        let Action::Send { msg: Message::BlockVote { accept, .. }, .. } =
+            &actions[0]
+        else {
+            panic!()
+        };
+        assert!(!accept);
+    }
+
+    #[test]
+    fn queued_batches_propose_serially() {
+        let keys = KeyStore::for_network(1, 2);
+        let mut m =
+            LedgerManager::chain(NodeKey::derive(1, NodeId(0)), keys, 2);
+        let peers = [NodeId(1)];
+        let a1 = m.submit(vec![mint(0, 10)], NodeId(0), &peers, 0.0);
+        assert_eq!(a1.len(), 1); // first proposal broadcast
+        let a2 = m.submit(vec![mint(0, 20)], NodeId(0), &peers, 0.1);
+        assert!(a2.is_empty()); // queued behind the in-flight block
+    }
+}

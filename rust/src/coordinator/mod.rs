@@ -1,0 +1,17 @@
+//! Layer-3 coordinator — the paper's system contribution.
+//!
+//! * [`node::Node`] — the five-manager node of Figure 2 as a sans-io state
+//!   machine (`handle(Event, now) -> Vec<Action>`).
+//! * [`msg::Message`] — the inter-node wire vocabulary (+ JSON codec).
+//! * [`events`] — the Event/Action interface between nodes and runners.
+//! * [`ledger_manager`] — shared-vs-blockchain credit ledger access.
+
+pub mod events;
+pub mod ledger_manager;
+pub mod msg;
+pub mod node;
+
+pub use events::{Action, Event};
+pub use ledger_manager::LedgerManager;
+pub use msg::Message;
+pub use node::{Node, NodeStats};

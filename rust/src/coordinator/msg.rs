@@ -1,0 +1,395 @@
+//! Wire messages between WWW.Serve nodes.
+//!
+//! The simulator passes these by value; the TCP transport serializes them as
+//! JSON frames (`to_json` / `from_json` below — the paper uses ZeroMQ ROUTER
+//! with the same request/response vocabulary).
+
+use crate::gossip::Digest;
+use crate::ledger::Block;
+use crate::types::{NodeId, Request, RequestId, Response};
+use crate::util::json::Json;
+
+/// Everything one node can say to another.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// "Would you take this request?" — executor-selection trust probe.
+    Probe {
+        req_id: RequestId,
+        prompt_tokens: u32,
+        output_tokens: u32,
+    },
+    ProbeAccept { req_id: RequestId },
+    ProbeReject { req_id: RequestId },
+    /// Forward a request for remote execution. `duel` marks duel copies.
+    Delegate { request: Request, duel: bool },
+    /// The executor's answer travelling back to the originator.
+    DelegateResponse { response: Response, duel: bool },
+    /// Push half of a gossip round.
+    Gossip { digest: Digest },
+    /// Pull half (the receiver's view coming back).
+    GossipReply { digest: Digest },
+    /// Ask the two duel responses to be compared. `est_tokens` sizes the
+    /// judge's own evaluation workload (reading both answers).
+    JudgeAssign {
+        duel_id: RequestId,
+        resp_a: Response,
+        resp_b: Response,
+        est_tokens: u32,
+    },
+    /// A judge's vote.
+    JudgeVerdict {
+        duel_id: RequestId,
+        winner: NodeId,
+    },
+    /// Blockchain-ledger mode: propose a block for confirmation.
+    BlockProposal { block: Block },
+    /// Blockchain-ledger mode: confirm a proposed block.
+    BlockVote {
+        block_id: crate::crypto::Hash256,
+        accept: bool,
+    },
+    /// Blockchain-ledger mode: a quorum was reached; append.
+    BlockCommit { block: Block },
+    /// Blockchain-ledger mode anti-entropy: "my chain has `len` blocks".
+    ChainRequest { len: u64 },
+    /// Blockchain-ledger mode anti-entropy: a full replica snapshot
+    /// (bounded: sim-scale chains; a production build would ship deltas).
+    ChainSnapshot { blocks: Vec<Block> },
+}
+
+impl Message {
+    /// Short tag for logs/metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::Probe { .. } => "probe",
+            Message::ProbeAccept { .. } => "probe_accept",
+            Message::ProbeReject { .. } => "probe_reject",
+            Message::Delegate { .. } => "delegate",
+            Message::DelegateResponse { .. } => "delegate_response",
+            Message::Gossip { .. } => "gossip",
+            Message::GossipReply { .. } => "gossip_reply",
+            Message::JudgeAssign { .. } => "judge_assign",
+            Message::JudgeVerdict { .. } => "judge_verdict",
+            Message::BlockProposal { .. } => "block_proposal",
+            Message::BlockVote { .. } => "block_vote",
+            Message::BlockCommit { .. } => "block_commit",
+            Message::ChainRequest { .. } => "chain_request",
+            Message::ChainSnapshot { .. } => "chain_snapshot",
+        }
+    }
+
+    /// Rough wire size in bytes (sim network accounting; requests/responses
+    /// dominated by token payloads).
+    pub fn wire_size(&self) -> usize {
+        match self {
+            Message::Delegate { request, .. } => {
+                64 + request.payload.len() * 4 + request.prompt_tokens as usize
+            }
+            Message::DelegateResponse { response, .. } => {
+                64 + response.tokens.len() * 4
+            }
+            Message::JudgeAssign { resp_a, resp_b, .. } => {
+                64 + (resp_a.tokens.len() + resp_b.tokens.len()) * 4
+            }
+            Message::Gossip { digest } | Message::GossipReply { digest } => {
+                16 + digest.len() * 32
+            }
+            Message::BlockProposal { block } | Message::BlockCommit { block } => {
+                128 + block.ops.len() * 48
+            }
+            Message::ChainSnapshot { blocks } => {
+                blocks.iter().map(|b| 128 + b.ops.len() * 48).sum::<usize>()
+            }
+            _ => 48,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON wire codec (TCP transport; subset — ledger messages travel only in
+// blockchain mode which the e2e example does not enable over TCP).
+// ---------------------------------------------------------------------------
+
+fn req_id_json(id: &RequestId) -> Json {
+    Json::obj(vec![
+        ("origin", Json::num(id.origin.0 as f64)),
+        ("seq", Json::num(id.seq as f64)),
+    ])
+}
+
+fn req_id_from(j: &Json) -> Option<RequestId> {
+    Some(RequestId {
+        origin: NodeId(j.get("origin").as_u64()? as u32),
+        seq: j.get("seq").as_u64()?,
+    })
+}
+
+fn request_json(r: &Request) -> Json {
+    Json::obj(vec![
+        ("id", req_id_json(&r.id)),
+        ("prompt_tokens", Json::num(r.prompt_tokens as f64)),
+        ("output_tokens", Json::num(r.output_tokens as f64)),
+        ("submitted_at", Json::num(r.submitted_at)),
+        ("slo_deadline", Json::num(r.slo_deadline)),
+        ("synthetic", Json::Bool(r.synthetic)),
+        (
+            "payload",
+            Json::Arr(r.payload.iter().map(|t| Json::num(*t as f64)).collect()),
+        ),
+    ])
+}
+
+fn request_from(j: &Json) -> Option<Request> {
+    Some(Request {
+        id: req_id_from(j.get("id"))?,
+        prompt_tokens: j.get("prompt_tokens").as_u64()? as u32,
+        output_tokens: j.get("output_tokens").as_u64()? as u32,
+        submitted_at: j.get("submitted_at").as_f64()?,
+        slo_deadline: j.get("slo_deadline").as_f64()?,
+        synthetic: j.get("synthetic").as_bool()?,
+        payload: j
+            .get("payload")
+            .as_arr()?
+            .iter()
+            .map(|t| t.as_u64().map(|v| v as u32))
+            .collect::<Option<Vec<u32>>>()?,
+    })
+}
+
+fn response_json(r: &Response) -> Json {
+    Json::obj(vec![
+        ("id", req_id_json(&r.id)),
+        ("executor", Json::num(r.executor.0 as f64)),
+        ("quality", Json::num(r.quality)),
+        ("finished_at", Json::num(r.finished_at)),
+        (
+            "tokens",
+            Json::Arr(r.tokens.iter().map(|t| Json::num(*t as f64)).collect()),
+        ),
+    ])
+}
+
+fn response_from(j: &Json) -> Option<Response> {
+    Some(Response {
+        id: req_id_from(j.get("id"))?,
+        executor: NodeId(j.get("executor").as_u64()? as u32),
+        quality: j.get("quality").as_f64()?,
+        finished_at: j.get("finished_at").as_f64()?,
+        tokens: j
+            .get("tokens")
+            .as_arr()?
+            .iter()
+            .map(|t| t.as_u64().map(|v| v as u32))
+            .collect::<Option<Vec<u32>>>()?,
+    })
+}
+
+fn digest_json(d: &Digest) -> Json {
+    Json::Arr(
+        d.iter()
+            .map(|(n, v, online, ep)| {
+                Json::Arr(vec![
+                    Json::num(n.0 as f64),
+                    Json::num(*v as f64),
+                    Json::Bool(*online),
+                    Json::num(*ep as f64),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn digest_from(j: &Json) -> Option<Digest> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            let a = e.as_arr()?;
+            Some((
+                NodeId(a.first()?.as_u64()? as u32),
+                a.get(1)?.as_u64()?,
+                a.get(2)?.as_bool()?,
+                a.get(3)?.as_u64()?,
+            ))
+        })
+        .collect()
+}
+
+impl Message {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Message::Probe { req_id, prompt_tokens, output_tokens } => {
+                Json::obj(vec![
+                    ("type", Json::str("probe")),
+                    ("req_id", req_id_json(req_id)),
+                    ("prompt_tokens", Json::num(*prompt_tokens as f64)),
+                    ("output_tokens", Json::num(*output_tokens as f64)),
+                ])
+            }
+            Message::ProbeAccept { req_id } => Json::obj(vec![
+                ("type", Json::str("probe_accept")),
+                ("req_id", req_id_json(req_id)),
+            ]),
+            Message::ProbeReject { req_id } => Json::obj(vec![
+                ("type", Json::str("probe_reject")),
+                ("req_id", req_id_json(req_id)),
+            ]),
+            Message::Delegate { request, duel } => Json::obj(vec![
+                ("type", Json::str("delegate")),
+                ("request", request_json(request)),
+                ("duel", Json::Bool(*duel)),
+            ]),
+            Message::DelegateResponse { response, duel } => Json::obj(vec![
+                ("type", Json::str("delegate_response")),
+                ("response", response_json(response)),
+                ("duel", Json::Bool(*duel)),
+            ]),
+            Message::Gossip { digest } => Json::obj(vec![
+                ("type", Json::str("gossip")),
+                ("digest", digest_json(digest)),
+            ]),
+            Message::GossipReply { digest } => Json::obj(vec![
+                ("type", Json::str("gossip_reply")),
+                ("digest", digest_json(digest)),
+            ]),
+            Message::JudgeAssign { duel_id, resp_a, resp_b, est_tokens } => {
+                Json::obj(vec![
+                    ("type", Json::str("judge_assign")),
+                    ("duel_id", req_id_json(duel_id)),
+                    ("resp_a", response_json(resp_a)),
+                    ("resp_b", response_json(resp_b)),
+                    ("est_tokens", Json::num(*est_tokens as f64)),
+                ])
+            }
+            Message::JudgeVerdict { duel_id, winner } => Json::obj(vec![
+                ("type", Json::str("judge_verdict")),
+                ("duel_id", req_id_json(duel_id)),
+                ("winner", Json::num(winner.0 as f64)),
+            ]),
+            // Ledger messages are sim-only in this build (DESIGN.md §8).
+            Message::BlockProposal { .. }
+            | Message::BlockVote { .. }
+            | Message::BlockCommit { .. }
+            | Message::ChainRequest { .. }
+            | Message::ChainSnapshot { .. } => Json::obj(vec![(
+                "type",
+                Json::str("ledger_unsupported_on_wire"),
+            )]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Option<Message> {
+        match j.get("type").as_str()? {
+            "probe" => Some(Message::Probe {
+                req_id: req_id_from(j.get("req_id"))?,
+                prompt_tokens: j.get("prompt_tokens").as_u64()? as u32,
+                output_tokens: j.get("output_tokens").as_u64()? as u32,
+            }),
+            "probe_accept" => Some(Message::ProbeAccept {
+                req_id: req_id_from(j.get("req_id"))?,
+            }),
+            "probe_reject" => Some(Message::ProbeReject {
+                req_id: req_id_from(j.get("req_id"))?,
+            }),
+            "delegate" => Some(Message::Delegate {
+                request: request_from(j.get("request"))?,
+                duel: j.get("duel").as_bool()?,
+            }),
+            "delegate_response" => Some(Message::DelegateResponse {
+                response: response_from(j.get("response"))?,
+                duel: j.get("duel").as_bool()?,
+            }),
+            "gossip" => Some(Message::Gossip {
+                digest: digest_from(j.get("digest"))?,
+            }),
+            "gossip_reply" => Some(Message::GossipReply {
+                digest: digest_from(j.get("digest"))?,
+            }),
+            "judge_assign" => Some(Message::JudgeAssign {
+                duel_id: req_id_from(j.get("duel_id"))?,
+                resp_a: response_from(j.get("resp_a"))?,
+                resp_b: response_from(j.get("resp_b"))?,
+                est_tokens: j.get("est_tokens").as_u64()? as u32,
+            }),
+            "judge_verdict" => Some(Message::JudgeVerdict {
+                duel_id: req_id_from(j.get("duel_id"))?,
+                winner: NodeId(j.get("winner").as_u64()? as u32),
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request {
+            id: RequestId { origin: NodeId(1), seq: 42 },
+            prompt_tokens: 100,
+            output_tokens: 300,
+            submitted_at: 1.5,
+            slo_deadline: 60.0,
+            synthetic: false,
+            payload: vec![1, 2, 3],
+        }
+    }
+
+    fn resp() -> Response {
+        Response {
+            id: RequestId { origin: NodeId(1), seq: 42 },
+            executor: NodeId(2),
+            quality: 0.77,
+            finished_at: 9.25,
+            tokens: vec![5, 6],
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_all_variants() {
+        let msgs = vec![
+            Message::Probe {
+                req_id: req().id,
+                prompt_tokens: 10,
+                output_tokens: 20,
+            },
+            Message::ProbeAccept { req_id: req().id },
+            Message::ProbeReject { req_id: req().id },
+            Message::Delegate { request: req(), duel: true },
+            Message::DelegateResponse { response: resp(), duel: false },
+            Message::Gossip { digest: vec![(NodeId(1), 4, true, 99)] },
+            Message::GossipReply { digest: vec![] },
+            Message::JudgeAssign {
+                duel_id: req().id,
+                resp_a: resp(),
+                resp_b: resp(),
+                est_tokens: 600,
+            },
+            Message::JudgeVerdict { duel_id: req().id, winner: NodeId(2) },
+        ];
+        for m in msgs {
+            let text = m.to_json().to_string();
+            let parsed = Message::from_json(&Json::parse(&text).unwrap())
+                .unwrap_or_else(|| panic!("roundtrip failed for {}", m.kind()));
+            assert_eq!(parsed, m);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(Message::from_json(&Json::parse(r#"{"type":"nope"}"#).unwrap())
+            .is_none());
+        assert!(Message::from_json(&Json::parse(r#"{}"#).unwrap()).is_none());
+        assert!(Message::from_json(
+            &Json::parse(r#"{"type":"probe","req_id":{}}"#).unwrap()
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn wire_size_scales_with_payload() {
+        let small = Message::ProbeAccept { req_id: req().id };
+        let big = Message::Delegate { request: req(), duel: false };
+        assert!(big.wire_size() > small.wire_size());
+    }
+}

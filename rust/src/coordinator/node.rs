@@ -1,0 +1,1261 @@
+//! The WWW.Serve node: Figure 2's five managers wired into one sans-io state
+//! machine.
+//!
+//! * **Request Manager** — admission, the pending-delegation state machine
+//!   (probe → delegate → response, with timeouts and local fallback).
+//! * **Policy Manager** — the provider's `NodePolicy` decisions.
+//! * **Ledger Manager** — credit reads/writes (`ledger_manager.rs`).
+//! * **Model Manager** — the local `Backend` plus executor-side bookkeeping.
+//! * **Communication Manager** — gossip membership + message emission.
+//!
+//! All coordination logic lives in `handle(Event, now) -> Vec<Action>`; the
+//! simulator and the TCP runner are thin drivers around it.
+
+use std::collections::HashMap;
+
+use super::events::{Action, Event};
+use super::ledger_manager::LedgerManager;
+use super::msg::Message;
+use crate::backend::{Backend, Completion};
+use crate::duel::{self, DuelState};
+use crate::gossip::{GossipConfig, PeerView};
+use crate::ledger::{CreditOp, OpReason};
+use crate::policy::{NodePolicy, SystemPolicy};
+use crate::pos::StakeSnapshot;
+use crate::types::{
+    ExecKind, NodeId, Request, RequestId, RequestRecord, Response, Time,
+};
+use crate::util::rng::Rng;
+
+/// Seconds to wait for a probe answer before trying the next candidate.
+const PROBE_TIMEOUT: Time = 3.0;
+/// Multiple of the SLO deadline to wait for a delegated response before
+/// falling back to local execution (covers executor crashes).
+const RESPONSE_TIMEOUT_FACTOR: f64 = 3.0;
+/// Judge evaluation output length (short comparison verdicts).
+const JUDGE_OUTPUT_TOKENS: u32 = 64;
+
+#[derive(Debug, Clone)]
+enum PendingState {
+    /// Waiting for a ProbeAccept/Reject from `candidate`.
+    Probing { candidate: NodeId, probes_left: usize },
+    /// Waiting for the executor's response.
+    AwaitingResponse { executor: NodeId },
+    /// Waiting for both duel responses.
+    AwaitingDuel,
+}
+
+#[derive(Debug, Clone)]
+struct PendingDelegation {
+    req: Request,
+    state: PendingState,
+    deadline: Time,
+}
+
+/// Executor-side record of who to answer for a delegated request.
+#[derive(Debug, Clone, Copy)]
+struct ExecTicket {
+    origin: NodeId,
+    duel: bool,
+}
+
+/// Judge-side record for an in-flight evaluation.
+#[derive(Debug, Clone)]
+struct JudgeTask {
+    duel_id: RequestId,
+    origin: NodeId,
+    resp_a: Response,
+    resp_b: Response,
+}
+
+/// Counters a node keeps about itself (drives policy + metrics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NodeStats {
+    pub user_requests: u64,
+    pub delegated_out: u64,
+    pub delegated_in: u64,
+    pub served_local: u64,
+    pub duels_started: u64,
+    pub judge_evals: u64,
+    pub probe_rejects: u64,
+    pub fallback_local: u64,
+}
+
+pub struct Node {
+    pub id: NodeId,
+    pub policy: NodePolicy,
+    pub system: SystemPolicy,
+    pub online: bool,
+    backend: Box<dyn Backend>,
+    pub view: PeerView,
+    ledger: LedgerManager,
+    rng: Rng,
+    pending: HashMap<RequestId, PendingDelegation>,
+    duels: HashMap<RequestId, DuelState>,
+    exec_tickets: HashMap<RequestId, ExecTicket>,
+    judge_tasks: HashMap<RequestId, JudgeTask>,
+    /// Synthetic request sequence (judge evals and other self-generated
+    /// work carry our own origin with high seq numbers).
+    synth_seq: u64,
+    last_gossip: Time,
+    pub stats: NodeStats,
+}
+
+impl Node {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: NodeId,
+        policy: NodePolicy,
+        system: SystemPolicy,
+        backend: Box<dyn Backend>,
+        mut ledger: LedgerManager,
+        gossip_cfg: GossipConfig,
+        seed: u64,
+        now: Time,
+    ) -> Node {
+        // Join the economy: genesis grant + initial stake — unless the
+        // ledger already carries our genesis (blockchain mode pre-commits a
+        // network-wide genesis block to every replica).
+        if ledger.balance(id) + ledger.stake(id) == 0 {
+            let mut genesis = vec![CreditOp::Mint {
+                to: id,
+                amount: system.genesis_credits,
+                reason: OpReason::Genesis,
+            }];
+            let stake = policy.stake.min(system.genesis_credits);
+            if stake > 0 {
+                genesis.push(CreditOp::Stake { node: id, amount: stake });
+            }
+            // At construction there are no peers to broadcast to yet; in
+            // chain mode a genesis block self-commits on an empty peer list.
+            let _ = ledger.submit(genesis, id, &[], now);
+        }
+
+        Node {
+            id,
+            policy,
+            system,
+            online: true,
+            backend,
+            view: PeerView::new(id, gossip_cfg, now),
+            ledger,
+            rng: Rng::new(seed ^ (0x9E37 + id.0 as u64)),
+            pending: HashMap::new(),
+            duels: HashMap::new(),
+            exec_tickets: HashMap::new(),
+            judge_tasks: HashMap::new(),
+            synth_seq: 1 << 40,
+            last_gossip: now - 1e9,
+            stats: NodeStats::default(),
+        }
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    pub fn ledger(&self) -> &LedgerManager {
+        &self.ledger
+    }
+
+    pub fn ledger_mut(&mut self) -> &mut LedgerManager {
+        &mut self.ledger
+    }
+
+    pub fn credits(&self) -> u64 {
+        self.ledger.balance(self.id) + self.ledger.stake(self.id)
+    }
+
+    /// Peers currently believed alive.
+    fn alive_peers(&self, now: Time) -> Vec<NodeId> {
+        self.view.alive_peers(now)
+    }
+
+    // ---- the event loop ----------------------------------------------------
+
+    pub fn handle(&mut self, event: Event, now: Time) -> Vec<Action> {
+        if !self.online {
+            // Offline nodes drop everything except Join.
+            if matches!(event, Event::Join) {
+                return self.on_join(now);
+            }
+            return vec![];
+        }
+        let mut actions = match event {
+            Event::UserRequest(req) => self.on_user_request(req, now),
+            Event::Message { from, msg } => self.on_message(from, msg, now),
+            Event::Tick => self.on_tick(now),
+            Event::BackendWake => vec![],
+            Event::Leave => return self.on_leave(now),
+            Event::Join => vec![], // already online
+        };
+        // Collect backend completions on every activation.
+        actions.extend(self.pump_backend(now));
+        // Keep the runner informed of the next backend event.
+        if let Some(t) = self.backend.next_event() {
+            actions.push(Action::WakeAt(t));
+        }
+        actions
+    }
+
+    // ---- request admission + scheduling (Request/Policy managers) ----------
+
+    fn on_user_request(&mut self, req: Request, now: Time) -> Vec<Action> {
+        self.stats.user_requests += 1;
+        let util = self.backend.utilization();
+        let qlen = self.backend.queue_len();
+        if !self.policy.should_offload(util, qlen, &mut self.rng) {
+            return self.execute_locally(req, ExecKind::Local, now);
+        }
+        self.try_delegate(req, now)
+    }
+
+    /// Start the delegation state machine (PoS sample → probe). Falls back
+    /// to local execution when no viable peer or unaffordable.
+    fn try_delegate(&mut self, req: Request, now: Time) -> Vec<Action> {
+        // Can we afford the offload payment?
+        if self.ledger.balance(self.id) < self.system.base_reward {
+            self.stats.fallback_local += 1;
+            return self.execute_locally(req, ExecKind::Local, now);
+        }
+        let snapshot = self.stake_snapshot(now);
+        if snapshot.is_empty() {
+            self.stats.fallback_local += 1;
+            return self.execute_locally(req, ExecKind::Local, now);
+        }
+
+        // Duel roll (§4.2): a fraction p_d of delegated requests go to two
+        // executors directly.
+        if self.rng.chance(self.system.duel_rate) && snapshot.len() >= 2 {
+            return self.start_duel(req, &snapshot, now);
+        }
+
+        let Some(candidate) = snapshot.sample(&mut self.rng) else {
+            self.stats.fallback_local += 1;
+            return self.execute_locally(req, ExecKind::Local, now);
+        };
+        let probe = Message::Probe {
+            req_id: req.id,
+            prompt_tokens: req.prompt_tokens,
+            output_tokens: req.output_tokens,
+        };
+        self.pending.insert(
+            req.id,
+            PendingDelegation {
+                req,
+                state: PendingState::Probing {
+                    candidate,
+                    probes_left: self.system.max_probes.saturating_sub(1),
+                },
+                deadline: now + PROBE_TIMEOUT,
+            },
+        );
+        vec![Action::Send { to: candidate, msg: probe }]
+    }
+
+    fn start_duel(
+        &mut self,
+        req: Request,
+        snapshot: &StakeSnapshot,
+        now: Time,
+    ) -> Vec<Action> {
+        let execs = snapshot.sample_distinct(&mut self.rng, 2);
+        if execs.len() < 2 {
+            self.stats.fallback_local += 1;
+            return self.execute_locally(req, ExecKind::Local, now);
+        }
+        self.stats.duels_started += 1;
+        self.stats.delegated_out += 1;
+        let duel = DuelState::new(req.clone(), [execs[0], execs[1]], now);
+        self.pending.insert(
+            req.id,
+            PendingDelegation {
+                req: req.clone(),
+                state: PendingState::AwaitingDuel,
+                deadline: now + req.slo_deadline * RESPONSE_TIMEOUT_FACTOR,
+            },
+        );
+        self.duels.insert(req.id, duel);
+        execs
+            .into_iter()
+            .map(|to| Action::Send {
+                to,
+                msg: Message::Delegate { request: req.clone(), duel: true },
+            })
+            .collect()
+    }
+
+    /// Stake-weighted, liveness-filtered snapshot of delegation candidates.
+    fn stake_snapshot(&self, now: Time) -> StakeSnapshot {
+        let mut snap = StakeSnapshot::new(&self.ledger.stakes(), Some(self.id));
+        snap.retain(|n| self.view.is_alive(n, now));
+        snap
+    }
+
+    /// Put a request on our own backend.
+    fn execute_locally(
+        &mut self,
+        req: Request,
+        kind: ExecKind,
+        now: Time,
+    ) -> Vec<Action> {
+        if kind == ExecKind::Local {
+            self.stats.served_local += 1;
+        }
+        self.backend.submit(req, kind, now);
+        vec![]
+    }
+
+    // ---- message handling (Communication manager) ---------------------------
+
+    fn on_message(&mut self, from: NodeId, msg: Message, now: Time) -> Vec<Action> {
+        match msg {
+            Message::Probe { req_id, .. } => {
+                let util = self.backend.utilization();
+                let qlen = self.backend.queue_len();
+                let accept =
+                    self.policy.should_accept(util, qlen, &mut self.rng);
+                let reply = if accept {
+                    Message::ProbeAccept { req_id }
+                } else {
+                    Message::ProbeReject { req_id }
+                };
+                vec![Action::Send { to: from, msg: reply }]
+            }
+            Message::ProbeAccept { req_id } => self.on_probe_accept(from, req_id, now),
+            Message::ProbeReject { req_id } => self.on_probe_reject(from, req_id, now),
+            Message::Delegate { request, duel } => {
+                self.stats.delegated_in += 1;
+                self.exec_tickets
+                    .insert(request.id, ExecTicket { origin: from, duel });
+                let kind = if duel { ExecKind::Duel } else { ExecKind::Delegated };
+                self.execute_locally(request, kind, now)
+            }
+            Message::DelegateResponse { response, duel } => {
+                self.on_delegate_response(response, duel, now)
+            }
+            Message::Gossip { digest } => {
+                self.view.merge(&digest, now);
+                vec![Action::Send {
+                    to: from,
+                    msg: Message::GossipReply { digest: self.view.digest() },
+                }]
+            }
+            Message::GossipReply { digest } => {
+                self.view.merge(&digest, now);
+                vec![]
+            }
+            Message::JudgeAssign { duel_id, resp_a, resp_b, est_tokens } => {
+                self.on_judge_assign(from, duel_id, resp_a, resp_b, est_tokens, now)
+            }
+            Message::JudgeVerdict { duel_id, winner } => {
+                self.on_judge_verdict(from, duel_id, winner, now)
+            }
+            m @ (Message::BlockProposal { .. }
+            | Message::BlockVote { .. }
+            | Message::BlockCommit { .. }
+            | Message::ChainRequest { .. }
+            | Message::ChainSnapshot { .. }) => {
+                let peers = self.alive_peers(now);
+                self.ledger.on_message(from, &m, self.id, &peers, now)
+            }
+        }
+    }
+
+    fn on_probe_accept(
+        &mut self,
+        from: NodeId,
+        req_id: RequestId,
+        now: Time,
+    ) -> Vec<Action> {
+        let Some(p) = self.pending.get_mut(&req_id) else {
+            return vec![]; // stale (already timed out / answered)
+        };
+        let PendingState::Probing { candidate, .. } = p.state else {
+            return vec![];
+        };
+        if candidate != from {
+            return vec![]; // answer from a node we no longer care about
+        }
+        self.stats.delegated_out += 1;
+        let req = p.req.clone();
+        p.state = PendingState::AwaitingResponse { executor: from };
+        p.deadline = now + req.slo_deadline * RESPONSE_TIMEOUT_FACTOR;
+        vec![Action::Send {
+            to: from,
+            msg: Message::Delegate { request: req, duel: false },
+        }]
+    }
+
+    fn on_probe_reject(
+        &mut self,
+        from: NodeId,
+        req_id: RequestId,
+        now: Time,
+    ) -> Vec<Action> {
+        let (req, probes_left) = {
+            let Some(p) = self.pending.get(&req_id) else {
+                return vec![];
+            };
+            let PendingState::Probing { candidate, probes_left } = p.state
+            else {
+                return vec![];
+            };
+            if candidate != from {
+                return vec![];
+            }
+            (p.req.clone(), probes_left)
+        };
+        self.stats.probe_rejects += 1;
+        if probes_left == 0 {
+            self.pending.remove(&req_id);
+            self.stats.fallback_local += 1;
+            return self.execute_locally(req, ExecKind::Local, now);
+        }
+        // Try another candidate.
+        let snapshot = self.stake_snapshot(now);
+        match snapshot.sample(&mut self.rng) {
+            Some(c) => {
+                let probe = Message::Probe {
+                    req_id,
+                    prompt_tokens: req.prompt_tokens,
+                    output_tokens: req.output_tokens,
+                };
+                let p = self.pending.get_mut(&req_id).expect("checked above");
+                p.state = PendingState::Probing {
+                    candidate: c,
+                    probes_left: probes_left - 1,
+                };
+                p.deadline = now + PROBE_TIMEOUT;
+                vec![Action::Send { to: c, msg: probe }]
+            }
+            None => {
+                self.pending.remove(&req_id);
+                self.stats.fallback_local += 1;
+                self.execute_locally(req, ExecKind::Local, now)
+            }
+        }
+    }
+
+    fn on_delegate_response(
+        &mut self,
+        response: Response,
+        duel: bool,
+        now: Time,
+    ) -> Vec<Action> {
+        if duel {
+            return self.on_duel_response(response, now);
+        }
+        let Some(p) = self.pending.remove(&response.id) else {
+            return vec![]; // stale (timed out, user already answered)
+        };
+        let PendingState::AwaitingResponse { executor } = p.state else {
+            self.pending.insert(response.id, p);
+            return vec![];
+        };
+        // Pay the executor (credits-for-offloading).
+        let peers = self.alive_peers(now);
+        let mut actions = self.ledger.submit(
+            vec![CreditOp::Transfer {
+                from: self.id,
+                to: executor,
+                amount: self.system.base_reward,
+                reason: OpReason::OffloadPayment(response.id),
+            }],
+            self.id,
+            &peers,
+            now,
+        );
+        actions.push(Action::Done(RequestRecord {
+            id: p.req.id,
+            origin: self.id,
+            executor,
+            kind: ExecKind::Delegated,
+            prompt_tokens: p.req.prompt_tokens,
+            output_tokens: p.req.output_tokens,
+            submitted_at: p.req.submitted_at,
+            completed_at: now,
+            slo_deadline: p.req.slo_deadline,
+            synthetic: p.req.synthetic,
+        }));
+        actions
+    }
+
+    fn on_duel_response(&mut self, response: Response, now: Time) -> Vec<Action> {
+        let executor = response.executor;
+        let (first, both_in, req, execs) = {
+            let Some(d) = self.duels.get_mut(&response.id) else {
+                return vec![];
+            };
+            let first = d.responses.is_empty() && !d.user_answered;
+            let both_in = d.add_response(response.clone());
+            if first {
+                d.user_answered = true;
+            }
+            (first, both_in, d.request.clone(), d.executors)
+        };
+        let mut actions = Vec::new();
+
+        if first {
+            // The user takes the first answer; the duel settles afterwards.
+            actions.push(Action::Done(RequestRecord {
+                id: req.id,
+                origin: self.id,
+                executor,
+                kind: ExecKind::Delegated,
+                prompt_tokens: req.prompt_tokens,
+                output_tokens: req.output_tokens,
+                submitted_at: req.submitted_at,
+                completed_at: now,
+                slo_deadline: req.slo_deadline,
+                synthetic: req.synthetic,
+            }));
+            // Both executors get the base payment (both did the work).
+            let peers = self.alive_peers(now);
+            let ops = execs
+                .iter()
+                .map(|e| CreditOp::Transfer {
+                    from: self.id,
+                    to: *e,
+                    amount: self.system.base_reward,
+                    reason: OpReason::OffloadPayment(req.id),
+                })
+                .collect();
+            actions.extend(self.ledger.submit(ops, self.id, &peers, now));
+        } else {
+            // The slower duel copy: synthetic overhead record (§7.1).
+            actions.push(Action::Done(RequestRecord {
+                id: req.id,
+                origin: self.id,
+                executor,
+                kind: ExecKind::Duel,
+                prompt_tokens: req.prompt_tokens,
+                output_tokens: req.output_tokens,
+                submitted_at: req.submitted_at,
+                completed_at: now,
+                slo_deadline: req.slo_deadline,
+                synthetic: true,
+            }));
+        }
+
+        if both_in {
+            actions.extend(self.dispatch_judges(response.id, now));
+        }
+        actions
+    }
+
+    fn dispatch_judges(&mut self, duel_id: RequestId, now: Time) -> Vec<Action> {
+        let snapshot = self.stake_snapshot(now);
+        let d = self.duels.get_mut(&duel_id).expect("duel exists");
+        // Judges: PoS-sampled, excluding the two executors (impartiality).
+        let mut pool = snapshot;
+        let execs = d.executors;
+        pool.retain(|n| n != execs[0] && n != execs[1]);
+        let judges = pool.sample_distinct(&mut self.rng, self.system.judges);
+        if judges.is_empty() {
+            // No impartial judges available — settle as a wash (no
+            // redistribution), keep the duel out of stats.
+            self.duels.remove(&duel_id);
+            self.pending.remove(&duel_id);
+            return vec![];
+        }
+        d.assign_judges(judges.clone());
+        let (a, b) = (d.responses[0].clone(), d.responses[1].clone());
+        let est = d.request.output_tokens.saturating_mul(2).clamp(64, 8192);
+        judges
+            .into_iter()
+            .map(|j| Action::Send {
+                to: j,
+                msg: Message::JudgeAssign {
+                    duel_id,
+                    resp_a: a.clone(),
+                    resp_b: b.clone(),
+                    est_tokens: est,
+                },
+            })
+            .collect()
+    }
+
+    fn on_judge_assign(
+        &mut self,
+        from: NodeId,
+        duel_id: RequestId,
+        resp_a: Response,
+        resp_b: Response,
+        est_tokens: u32,
+        now: Time,
+    ) -> Vec<Action> {
+        self.stats.judge_evals += 1;
+        // Judging costs real compute: enqueue a synthetic evaluation request
+        // on our own backend (reading both answers + a short verdict).
+        let seq = self.synth_seq;
+        self.synth_seq += 1;
+        let eval_req = Request {
+            id: RequestId { origin: self.id, seq },
+            prompt_tokens: est_tokens,
+            output_tokens: JUDGE_OUTPUT_TOKENS,
+            submitted_at: now,
+            slo_deadline: f64::INFINITY,
+            synthetic: true,
+            payload: vec![],
+        };
+        self.judge_tasks.insert(
+            eval_req.id,
+            JudgeTask { duel_id, origin: from, resp_a, resp_b },
+        );
+        self.execute_locally(eval_req, ExecKind::Judge, now)
+    }
+
+    fn on_judge_verdict(
+        &mut self,
+        from: NodeId,
+        duel_id: RequestId,
+        winner: NodeId,
+        now: Time,
+    ) -> Vec<Action> {
+        let Some(d) = self.duels.get_mut(&duel_id) else {
+            return vec![];
+        };
+        let Some(outcome) = d.add_verdict(from, winner) else {
+            return vec![];
+        };
+        // Settle: winner reward, loser slash, judge rewards (§4.2).
+        let judges = d.judges.clone();
+        self.duels.remove(&duel_id);
+        self.pending.remove(&duel_id);
+        let mut ops = vec![
+            CreditOp::Mint {
+                to: outcome.winner,
+                amount: self.system.duel_reward,
+                reason: OpReason::DuelWin(duel_id),
+            },
+            CreditOp::Slash {
+                from: outcome.loser,
+                amount: self.system.duel_penalty,
+                reason: OpReason::DuelLoss(duel_id),
+            },
+        ];
+        for j in judges {
+            ops.push(CreditOp::Mint {
+                to: j,
+                amount: self.system.judge_reward,
+                reason: OpReason::JudgeReward(duel_id),
+            });
+        }
+        let peers = self.alive_peers(now);
+        let mut actions = self.ledger.submit(ops, self.id, &peers, now);
+        actions.push(Action::DuelSettled(outcome));
+        actions
+    }
+
+    // ---- backend pump (Model manager) ---------------------------------------
+
+    fn pump_backend(&mut self, now: Time) -> Vec<Action> {
+        let completions = self.backend.advance(now);
+        let mut actions = Vec::new();
+        for c in completions {
+            actions.extend(self.on_completion(c, now));
+        }
+        actions
+    }
+
+    fn on_completion(&mut self, c: Completion, _now: Time) -> Vec<Action> {
+        match c.kind {
+            ExecKind::Local => {
+                // Our own user's request, served locally.
+                vec![Action::Done(RequestRecord {
+                    id: c.request.id,
+                    origin: self.id,
+                    executor: self.id,
+                    kind: ExecKind::Local,
+                    prompt_tokens: c.request.prompt_tokens,
+                    output_tokens: c.request.output_tokens,
+                    submitted_at: c.request.submitted_at,
+                    completed_at: c.finished_at,
+                    slo_deadline: c.request.slo_deadline,
+                    synthetic: c.request.synthetic,
+                })]
+            }
+            ExecKind::Delegated | ExecKind::Duel => {
+                let Some(ticket) = self.exec_tickets.remove(&c.request.id) else {
+                    return vec![];
+                };
+                let quality =
+                    duel::draw_response_quality(self.backend.quality(), &mut self.rng);
+                let response = Response {
+                    id: c.request.id,
+                    executor: self.id,
+                    quality,
+                    finished_at: c.finished_at,
+                    tokens: vec![],
+                };
+                vec![Action::Send {
+                    to: ticket.origin,
+                    msg: Message::DelegateResponse {
+                        response,
+                        duel: ticket.duel,
+                    },
+                }]
+            }
+            ExecKind::Judge => {
+                let Some(task) = self.judge_tasks.remove(&c.request.id) else {
+                    return vec![];
+                };
+                let winner =
+                    duel::judge_compare(&task.resp_a, &task.resp_b, &mut self.rng);
+                vec![
+                    Action::Send {
+                        to: task.origin,
+                        msg: Message::JudgeVerdict {
+                            duel_id: task.duel_id,
+                            winner,
+                        },
+                    },
+                    // Judge work is synthetic overhead (§7.1 accounting).
+                    Action::Done(RequestRecord {
+                        id: c.request.id,
+                        origin: self.id,
+                        executor: self.id,
+                        kind: ExecKind::Judge,
+                        prompt_tokens: c.request.prompt_tokens,
+                        output_tokens: c.request.output_tokens,
+                        submitted_at: c.request.submitted_at,
+                        completed_at: c.finished_at,
+                        slo_deadline: c.request.slo_deadline,
+                        synthetic: true,
+                    }),
+                ]
+            }
+        }
+    }
+
+    // ---- tick: gossip + timeouts --------------------------------------------
+
+    fn on_tick(&mut self, now: Time) -> Vec<Action> {
+        let mut actions = Vec::new();
+
+        // Gossip round (§A.2).
+        if now - self.last_gossip >= self.view.config().interval {
+            self.last_gossip = now;
+            self.view.heartbeat(now);
+            let digest = self.view.digest();
+            for t in self.view.pick_targets(&mut self.rng, now) {
+                actions.push(Action::Send {
+                    to: t,
+                    msg: Message::Gossip { digest: digest.clone() },
+                });
+            }
+        }
+
+        // Ledger retries (chain mode head races).
+        let peers = self.alive_peers(now);
+        actions.extend(self.ledger.on_tick(&peers, now));
+
+        // Stake maintenance (user-level policy, §4.3): a rational provider
+        // tops its stake back up to its declared target after duel slashes —
+        // staying out of the PoS pool earns nothing. Providers whose balance
+        // has drained cannot refill and fade out of selection, which is
+        // exactly the Theorem-5.8 phase-out dynamic.
+        if !self.policy.requester_only {
+            let stake = self.ledger.stake(self.id);
+            let balance = self.ledger.balance(self.id);
+            if stake < self.policy.stake && balance > 0 {
+                let amount = (self.policy.stake - stake).min(balance);
+                actions.extend(self.ledger.submit(
+                    vec![CreditOp::Stake { node: self.id, amount }],
+                    self.id,
+                    &peers,
+                    now,
+                ));
+            }
+        }
+
+        // Queue rebalancing: while overloaded, pull our own newest waiting
+        // requests back out of the backend and re-dispatch them through the
+        // market (user-level policy, §4.3 — "offload tasks once local
+        // workload surpasses a predefined threshold").
+        if !self.policy.requester_only {
+            let util = self.backend.utilization();
+            let qlen = self.backend.queue_len();
+            if util >= self.policy.target_utilization
+                && qlen > self.policy.queue_threshold
+            {
+                let excess = qlen - self.policy.queue_threshold;
+                for req in self.backend.steal_queued(excess.min(4)) {
+                    if self.rng.chance(self.policy.offload_freq) {
+                        actions.extend(self.try_delegate(req, now));
+                    } else {
+                        self.backend.submit(req, ExecKind::Local, now);
+                    }
+                }
+            }
+        }
+
+        // Timeout scan.
+        let expired: Vec<RequestId> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| now >= p.deadline)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in expired {
+            let p = self.pending.remove(&id).expect("just listed");
+            match p.state {
+                PendingState::Probing { .. } => {
+                    // Probe never answered (candidate died): serve locally.
+                    self.stats.fallback_local += 1;
+                    actions.extend(self.execute_locally(
+                        p.req,
+                        ExecKind::Local,
+                        now,
+                    ));
+                }
+                PendingState::AwaitingResponse { .. } => {
+                    // Executor vanished mid-flight: local fallback.
+                    self.stats.fallback_local += 1;
+                    actions.extend(self.execute_locally(
+                        p.req,
+                        ExecKind::Local,
+                        now,
+                    ));
+                }
+                PendingState::AwaitingDuel => {
+                    let d = self.duels.remove(&id);
+                    if let Some(d) = d {
+                        if !d.user_answered {
+                            // Neither executor answered: local fallback.
+                            self.stats.fallback_local += 1;
+                            actions.extend(self.execute_locally(
+                                p.req,
+                                ExecKind::Local,
+                                now,
+                            ));
+                        }
+                        // Else: user already has an answer; abandon the duel
+                        // (no settlement) — a judge or executor died.
+                    }
+                }
+            }
+        }
+        actions
+    }
+
+    // ---- dynamic participation ----------------------------------------------
+
+    fn on_leave(&mut self, now: Time) -> Vec<Action> {
+        self.online = false;
+        self.view.announce_leave(now);
+        let digest = self.view.digest();
+        // Goodbye gossip so the network learns quickly (Fig. 5b).
+        self.view
+            .alive_peers(now)
+            .into_iter()
+            .map(|p| Action::Send {
+                to: p,
+                msg: Message::Gossip { digest: digest.clone() },
+            })
+            .collect()
+    }
+
+    fn on_join(&mut self, now: Time) -> Vec<Action> {
+        self.online = true;
+        self.view.heartbeat(now); // version bump flips us back online
+        self.view.refresh(now); // bootstrap peers are contactable again
+        self.last_gossip = now;
+        let digest = self.view.digest();
+        let mut actions: Vec<Action> = self
+            .view
+            .pick_targets(&mut self.rng, now)
+            .into_iter()
+            .map(|p| Action::Send {
+                to: p,
+                msg: Message::Gossip { digest: digest.clone() },
+            })
+            .collect();
+        if let Some(t) = self.backend.next_event() {
+            actions.push(Action::WakeAt(t));
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Profile, SimBackend};
+    use crate::ledger::Ledger;
+    use crate::ledger::SharedLedger;
+    use std::sync::{Arc, Mutex};
+
+    fn mk_node(
+        id: u32,
+        policy: NodePolicy,
+        shared: &Arc<Mutex<SharedLedger>>,
+    ) -> Node {
+        Node::new(
+            NodeId(id),
+            policy,
+            SystemPolicy::default(),
+            Box::new(SimBackend::new(Profile::test(50.0, 4))),
+            LedgerManager::shared(shared.clone()),
+            GossipConfig::default(),
+            42,
+            0.0,
+        )
+    }
+
+    fn user_req(origin: u32, seq: u64, now: Time) -> Request {
+        Request {
+            id: RequestId { origin: NodeId(origin), seq },
+            prompt_tokens: 100,
+            output_tokens: 100,
+            submitted_at: now,
+            slo_deadline: 60.0,
+            synthetic: false,
+            payload: vec![],
+        }
+    }
+
+    #[test]
+    fn genesis_grants_credits_and_stake() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let n = mk_node(0, NodePolicy::default(), &shared);
+        let sys = SystemPolicy::default();
+        assert_eq!(
+            n.ledger().balance(NodeId(0)),
+            sys.genesis_credits - NodePolicy::default().stake
+        );
+        assert_eq!(n.ledger().stake(NodeId(0)), NodePolicy::default().stake);
+    }
+
+    #[test]
+    fn idle_node_serves_locally() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut n = mk_node(0, NodePolicy::default(), &shared);
+        let actions = n.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        // No sends (no offload — idle backend), just a wake for completion.
+        assert!(actions
+            .iter()
+            .all(|a| matches!(a, Action::WakeAt(_))));
+        // Run to completion.
+        let done = n.handle(Event::BackendWake, 100.0);
+        let recs: Vec<_> = done
+            .iter()
+            .filter_map(|a| match a {
+                Action::Done(r) => Some(r),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].executor, NodeId(0));
+        assert_eq!(recs[0].kind, ExecKind::Local);
+        assert!(!recs[0].synthetic);
+    }
+
+    #[test]
+    fn pressured_node_probes_staked_peer() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        // Node 1 exists in the ledger (stakes) and in node 0's view.
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0, // always offload
+                offload_freq: 1.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+        // duel_rate 0 for a deterministic single probe
+        n0.system.duel_rate = 0.0;
+        let actions = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        let sends: Vec<_> = actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::Send { to, msg } => Some((*to, msg.kind())),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(sends, vec![(NodeId(1), "probe")]);
+    }
+
+    #[test]
+    fn full_delegation_roundtrip_pays_executor() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut n1 = mk_node(1, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+        n1.policy.accept_freq = 1.0;
+
+        let bal0 = shared.lock().unwrap().balance(NodeId(0));
+        let bal1 = shared.lock().unwrap().balance(NodeId(1));
+
+        // 0 -> probe -> 1
+        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        let Action::Send { msg: probe, .. } = &a[0] else { panic!() };
+        // 1 -> accept -> 0
+        let a = n1.handle(
+            Event::Message { from: NodeId(0), msg: probe.clone() },
+            0.1,
+        );
+        let Action::Send { msg: accept, .. } = &a[0] else { panic!() };
+        assert_eq!(accept.kind(), "probe_accept");
+        // 0 -> delegate -> 1
+        let a = n0.handle(
+            Event::Message { from: NodeId(1), msg: accept.clone() },
+            0.2,
+        );
+        let Action::Send { msg: delegate, .. } = &a[0] else { panic!() };
+        assert_eq!(delegate.kind(), "delegate");
+        // 1 executes...
+        n1.handle(
+            Event::Message { from: NodeId(0), msg: delegate.clone() },
+            0.3,
+        );
+        let a = n1.handle(Event::BackendWake, 100.0);
+        let Some(Action::Send { to, msg: resp }) = a
+            .iter()
+            .find(|x| matches!(x, Action::Send { .. }))
+        else {
+            panic!("no response sent: {a:?}")
+        };
+        assert_eq!(*to, NodeId(0));
+        assert_eq!(resp.kind(), "delegate_response");
+        // 0 receives the response: record + payment.
+        let a = n0.handle(
+            Event::Message { from: NodeId(1), msg: resp.clone() },
+            100.1,
+        );
+        let rec = a
+            .iter()
+            .find_map(|x| match x {
+                Action::Done(r) => Some(r),
+                _ => None,
+            })
+            .expect("completion record");
+        assert_eq!(rec.executor, NodeId(1));
+        assert_eq!(rec.kind, ExecKind::Delegated);
+        let pay = SystemPolicy::default().base_reward;
+        assert_eq!(shared.lock().unwrap().balance(NodeId(0)), bal0 - pay);
+        assert_eq!(shared.lock().unwrap().balance(NodeId(1)), bal1 + pay);
+    }
+
+    #[test]
+    fn probe_reject_falls_back_after_retries() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        n0.system.max_probes = 2;
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+
+        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        let Action::Send { msg: Message::Probe { req_id, .. }, .. } = a[0]
+        else {
+            panic!()
+        };
+        // First reject -> re-probe (only node 1 is available, so again 1).
+        let a = n0.handle(
+            Event::Message {
+                from: NodeId(1),
+                msg: Message::ProbeReject { req_id },
+            },
+            0.1,
+        );
+        assert!(a.iter().any(
+            |x| matches!(x, Action::Send { msg: Message::Probe { .. }, .. })
+        ));
+        // Second reject -> local fallback (probes exhausted).
+        let a = n0.handle(
+            Event::Message {
+                from: NodeId(1),
+                msg: Message::ProbeReject { req_id },
+            },
+            0.2,
+        );
+        assert!(a
+            .iter()
+            .all(|x| !matches!(x, Action::Send { msg: Message::Probe { .. }, .. })));
+        assert_eq!(n0.backend().running_len(), 1);
+        assert_eq!(n0.stats.fallback_local, 1);
+    }
+
+    #[test]
+    fn probe_timeout_falls_back_locally() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+        n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        assert_eq!(n0.backend().running_len(), 0);
+        // Silence until past PROBE_TIMEOUT.
+        n0.handle(Event::Tick, PROBE_TIMEOUT + 0.5);
+        assert_eq!(n0.backend().running_len(), 1);
+    }
+
+    #[test]
+    fn duel_roundtrip_settles_credits() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut nodes: Vec<Node> = (0..5)
+            .map(|i| {
+                let mut n = mk_node(i, NodePolicy::default(), &shared);
+                n.policy.accept_freq = 1.0;
+                // The hand-rolled pump below advances time in 50 s jumps
+                // with no gossip rounds, so disable heartbeat aging.
+                n.view = PeerView::new(
+                    NodeId(i),
+                    crate::gossip::GossipConfig { suspect_after: 1e12, ..Default::default() },
+                    0.0,
+                );
+                n
+            })
+            .collect();
+        // Node 0 always duels.
+        nodes[0].system.duel_rate = 1.0;
+        nodes[0].policy.target_utilization = 0.0;
+        nodes[0].policy.offload_freq = 1.0;
+        for i in 1..5u32 {
+            nodes[0].view.merge(&vec![(NodeId(i), 1, true, 0)], 0.0);
+        }
+
+        // Kick off: two Delegate{duel} sends.
+        let a = nodes[0].handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        let delegates: Vec<(NodeId, Message)> = a
+            .iter()
+            .filter_map(|x| match x {
+                Action::Send { to, msg: m @ Message::Delegate { .. } } => {
+                    Some((*to, m.clone()))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(delegates.len(), 2);
+
+        // Pump the whole network until quiet (mini event loop).
+        let mut inbox: Vec<(NodeId, NodeId, Message)> = delegates
+            .iter()
+            .map(|(to, m)| (*to, NodeId(0), m.clone()))
+            .collect();
+        let mut t = 1.0;
+        let mut settled = None;
+        let mut guard = 0;
+        while !inbox.is_empty() && guard < 1000 {
+            guard += 1;
+            let (to, from, msg) = inbox.remove(0);
+            let actions = nodes[to.0 as usize].handle(
+                Event::Message { from, msg },
+                t,
+            );
+            // Also run backends forward generously.
+            t += 50.0;
+            for (i, n) in nodes.iter_mut().enumerate() {
+                for act in n.handle(Event::BackendWake, t) {
+                    match act {
+                        Action::Send { to, msg } => {
+                            inbox.push((to, NodeId(i as u32), msg))
+                        }
+                        Action::DuelSettled(o) => settled = Some(o),
+                        _ => {}
+                    }
+                }
+            }
+            for act in actions {
+                match act {
+                    Action::Send { to: t2, msg } => inbox.push((t2, to, msg)),
+                    Action::DuelSettled(o) => settled = Some(o),
+                    _ => {}
+                }
+            }
+        }
+        let outcome = settled.expect("duel settled");
+        assert_ne!(outcome.winner, outcome.loser);
+        // Winner got R_add minted on top of base pay; loser lost stake.
+        let sys = SystemPolicy::default();
+        let pol = NodePolicy::default();
+        let (winner_total, loser_stake) = {
+            let l = shared.lock().unwrap();
+            (
+                l.balance(outcome.winner) + l.stake(outcome.winner),
+                l.stake(outcome.loser),
+            )
+        };
+        assert_eq!(
+            winner_total,
+            sys.genesis_credits + sys.base_reward + sys.duel_reward
+        );
+        assert_eq!(loser_stake, pol.stake - sys.duel_penalty);
+    }
+
+    #[test]
+    fn offline_node_drops_events_until_join() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut n = mk_node(0, NodePolicy::default(), &shared);
+        n.handle(Event::Leave, 1.0);
+        assert!(!n.online);
+        let a = n.handle(Event::UserRequest(user_req(0, 0, 2.0)), 2.0);
+        assert!(a.is_empty());
+        assert_eq!(n.backend().running_len(), 0);
+        n.handle(Event::Join, 3.0);
+        assert!(n.online);
+        n.handle(Event::UserRequest(user_req(0, 1, 4.0)), 4.0);
+        assert_eq!(n.backend().running_len(), 1);
+    }
+
+    #[test]
+    fn leave_gossips_goodbye() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut n = mk_node(0, NodePolicy::default(), &shared);
+        n.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+        let a = n.handle(Event::Leave, 1.0);
+        assert!(a.iter().any(|x| matches!(
+            x,
+            Action::Send { to: NodeId(1), msg: Message::Gossip { .. } }
+        )));
+        // Our own digest must mark us offline.
+        let e = n.view.entry(NodeId(0)).unwrap();
+        assert!(!e.online);
+    }
+
+    #[test]
+    fn requester_only_node_always_delegates() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(0, NodePolicy::requester_only(), &shared);
+        n0.system.duel_rate = 0.0;
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        assert!(a
+            .iter()
+            .any(|x| matches!(x, Action::Send { msg: Message::Probe { .. }, .. })));
+        assert_eq!(n0.backend().running_len(), 0);
+    }
+}

@@ -1,0 +1,307 @@
+//! Duel-and-judge mechanism (§4.2, Figure 3).
+//!
+//! A fraction `p_d` of delegated requests become *duels*: the originator
+//! dispatches the same request to two PoS-sampled executors, then sends both
+//! responses to `k` PoS-sampled judges for pairwise comparison. The majority
+//! winner earns `R_add`, the loser is slashed `P`, and each judge earns a
+//! judge reward. This module holds the originator-side state machine and the
+//! judge's comparison logic; message transport lives in the coordinator.
+//!
+//! Quality model (simulation substitution — DESIGN.md §2): an executor with
+//! intrinsic quality `q_i` produces responses whose hidden quality is
+//! `q_i + Normal(0, σ_resp)`; a judge perceives each with additional
+//! `Normal(0, σ_judge)` noise and votes for the higher perception. The
+//! resulting class-level win rates reproduce Figure 6's measured 0.57 /
+//! 0.53 / 0.39 style gaps.
+
+use std::collections::HashMap;
+
+use crate::types::{NodeId, Request, Response, Time};
+use crate::util::rng::Rng;
+
+/// Response-generation noise (variation between a node's own answers).
+/// Calibrated, together with the tier quality gaps in
+/// `backend::profiles`, so class-level duel win rates land near Figure 6a's
+/// measured 0.57 / 0.53 / 0.39 — LLM-judge comparisons on reasoning answers
+/// are *noisy* (a 0.6B model still wins 39% of its duels in the paper).
+pub const SIGMA_RESPONSE: f64 = 0.40;
+/// Judge perception noise (inter-rater disagreement).
+pub const SIGMA_JUDGE: f64 = 0.08;
+
+/// Draw the hidden quality of a response from a node with intrinsic q.
+pub fn draw_response_quality(q: f64, rng: &mut Rng) -> f64 {
+    rng.normal_ms(q, SIGMA_RESPONSE)
+}
+
+/// A judge's pairwise comparison: returns the executor it votes for.
+pub fn judge_compare(a: &Response, b: &Response, rng: &mut Rng) -> NodeId {
+    let pa = a.quality + rng.normal_ms(0.0, SIGMA_JUDGE);
+    let pb = b.quality + rng.normal_ms(0.0, SIGMA_JUDGE);
+    if pa >= pb {
+        a.executor
+    } else {
+        b.executor
+    }
+}
+
+/// Progress of one duel at its originator.
+#[derive(Debug, Clone)]
+pub struct DuelState {
+    pub request: Request,
+    pub executors: [NodeId; 2],
+    pub responses: Vec<Response>,
+    pub judges: Vec<NodeId>,
+    pub verdicts: Vec<(NodeId, NodeId)>, // (judge, voted-for executor)
+    /// Whether the user has already been answered (first response wins the
+    /// latency race; the duel settles afterwards).
+    pub user_answered: bool,
+    pub started_at: Time,
+}
+
+/// Outcome of a settled duel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DuelOutcome {
+    pub winner: NodeId,
+    pub loser: NodeId,
+    /// Votes for the winner (out of the verdicts received).
+    pub votes_for_winner: usize,
+    pub votes_total: usize,
+}
+
+impl DuelState {
+    pub fn new(request: Request, executors: [NodeId; 2], now: Time) -> Self {
+        DuelState {
+            request,
+            executors,
+            responses: Vec::with_capacity(2),
+            judges: Vec::new(),
+            verdicts: Vec::new(),
+            user_answered: false,
+            started_at: now,
+        }
+    }
+
+    /// Record an executor response. Returns true when both are in.
+    pub fn add_response(&mut self, resp: Response) -> bool {
+        if self.executors.contains(&resp.executor)
+            && !self.responses.iter().any(|r| r.executor == resp.executor)
+        {
+            self.responses.push(resp);
+        }
+        self.responses.len() == 2
+    }
+
+    pub fn assign_judges(&mut self, judges: Vec<NodeId>) {
+        self.judges = judges;
+    }
+
+    /// Record a verdict. Returns the outcome once all judges have voted.
+    pub fn add_verdict(&mut self, judge: NodeId, winner: NodeId) -> Option<DuelOutcome> {
+        if !self.judges.contains(&judge)
+            || self.verdicts.iter().any(|(j, _)| *j == judge)
+            || !self.executors.contains(&winner)
+        {
+            return None; // unsolicited / duplicate / nonsense vote
+        }
+        self.verdicts.push((judge, winner));
+        if self.verdicts.len() == self.judges.len() {
+            Some(self.tally())
+        } else {
+            None
+        }
+    }
+
+    /// Majority tally. Judges are an even k=2 in the paper's ablation, so
+    /// ties are common; a tied vote falls back to the raw pairwise
+    /// comparison of the two responses themselves (the originator casts the
+    /// deciding comparison), so ties still carry the quality signal rather
+    /// than rewarding whoever answered faster.
+    pub fn tally(&self) -> DuelOutcome {
+        let count = |n: NodeId| {
+            self.verdicts.iter().filter(|(_, w)| *w == n).count()
+        };
+        let (a, b) = (self.executors[0], self.executors[1]);
+        let (va, vb) = (count(a), count(b));
+        let quality_of = |n: NodeId| {
+            self.responses
+                .iter()
+                .find(|r| r.executor == n)
+                .map(|r| r.quality)
+                .unwrap_or(f64::NEG_INFINITY)
+        };
+        let (winner, loser, votes) = if va > vb {
+            (a, b, va)
+        } else if vb > va {
+            (b, a, vb)
+        } else if quality_of(a) >= quality_of(b) {
+            (a, b, va)
+        } else {
+            (b, a, vb)
+        };
+        DuelOutcome {
+            winner,
+            loser,
+            votes_for_winner: votes,
+            votes_total: self.verdicts.len(),
+        }
+    }
+}
+
+/// Per-node duel statistics (Figure 6 right panels).
+#[derive(Debug, Clone, Default)]
+pub struct DuelStats {
+    pub wins: HashMap<NodeId, usize>,
+    pub losses: HashMap<NodeId, usize>,
+}
+
+impl DuelStats {
+    pub fn record(&mut self, outcome: &DuelOutcome) {
+        *self.wins.entry(outcome.winner).or_insert(0) += 1;
+        *self.losses.entry(outcome.loser).or_insert(0) += 1;
+    }
+
+    pub fn win_rate(&self, node: NodeId) -> f64 {
+        let w = self.wins.get(&node).copied().unwrap_or(0);
+        let l = self.losses.get(&node).copied().unwrap_or(0);
+        if w + l == 0 {
+            return 0.0;
+        }
+        w as f64 / (w + l) as f64
+    }
+
+    pub fn total_duels(&self) -> usize {
+        self.wins.values().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::RequestId;
+
+    fn req() -> Request {
+        Request {
+            id: RequestId { origin: NodeId(0), seq: 1 },
+            prompt_tokens: 10,
+            output_tokens: 10,
+            submitted_at: 0.0,
+            slo_deadline: 100.0,
+            synthetic: false,
+            payload: vec![],
+        }
+    }
+
+    fn resp(executor: u32, quality: f64, at: Time) -> Response {
+        Response {
+            id: RequestId { origin: NodeId(0), seq: 1 },
+            executor: NodeId(executor),
+            quality,
+            finished_at: at,
+            tokens: vec![],
+        }
+    }
+
+    #[test]
+    fn duel_lifecycle() {
+        let mut d = DuelState::new(req(), [NodeId(1), NodeId(2)], 0.0);
+        assert!(!d.add_response(resp(1, 0.8, 1.0)));
+        assert!(d.add_response(resp(2, 0.6, 2.0)));
+        d.assign_judges(vec![NodeId(3), NodeId(4)]);
+        assert!(d.add_verdict(NodeId(3), NodeId(1)).is_none());
+        let out = d.add_verdict(NodeId(4), NodeId(1)).unwrap();
+        assert_eq!(out.winner, NodeId(1));
+        assert_eq!(out.loser, NodeId(2));
+        assert_eq!(out.votes_for_winner, 2);
+        assert_eq!(out.votes_total, 2);
+    }
+
+    #[test]
+    fn rejects_bogus_responses_and_votes() {
+        let mut d = DuelState::new(req(), [NodeId(1), NodeId(2)], 0.0);
+        // Response from a non-executor ignored.
+        assert!(!d.add_response(resp(9, 0.9, 1.0)));
+        assert_eq!(d.responses.len(), 0);
+        // Duplicate executor response ignored.
+        d.add_response(resp(1, 0.8, 1.0));
+        assert!(!d.add_response(resp(1, 0.9, 2.0)));
+        assert_eq!(d.responses.len(), 1);
+        d.add_response(resp(2, 0.5, 3.0));
+        d.assign_judges(vec![NodeId(3)]);
+        // Vote from a non-judge ignored.
+        assert!(d.add_verdict(NodeId(8), NodeId(1)).is_none());
+        // Vote for a non-executor ignored.
+        assert!(d.add_verdict(NodeId(3), NodeId(7)).is_none());
+        // Legit vote settles (k=1).
+        assert!(d.add_verdict(NodeId(3), NodeId(1)).is_some());
+        // Duplicate judge vote after settle is ignored.
+        assert!(d.add_verdict(NodeId(3), NodeId(2)).is_none());
+    }
+
+    #[test]
+    fn tie_goes_to_higher_quality_response() {
+        let mut d = DuelState::new(req(), [NodeId(1), NodeId(2)], 0.0);
+        d.add_response(resp(2, 0.7, 1.0)); // node 2 responds first...
+        d.add_response(resp(1, 0.9, 2.0)); // ...but node 1's answer is better
+        d.assign_judges(vec![NodeId(3), NodeId(4)]);
+        d.add_verdict(NodeId(3), NodeId(1));
+        let out = d.add_verdict(NodeId(4), NodeId(2)).unwrap();
+        assert_eq!(out.winner, NodeId(1));
+    }
+
+    #[test]
+    fn judge_prefers_higher_quality_statistically() {
+        let mut rng = Rng::new(1);
+        let a = resp(1, 0.8, 0.0);
+        let b = resp(2, 0.6, 0.0);
+        let n = 20_000;
+        let wins_a = (0..n)
+            .filter(|_| judge_compare(&a, &b, &mut rng) == NodeId(1))
+            .count();
+        let f = wins_a as f64 / n as f64;
+        assert!(f > 0.90, "f={f}"); // 0.2 gap >> sigma_judge
+    }
+
+    #[test]
+    fn close_quality_gives_close_duels() {
+        let mut rng = Rng::new(2);
+        let n = 50_000;
+        let mut wins_a = 0;
+        for _ in 0..n {
+            // Draw fresh response qualities each duel (as the system does).
+            let qa = draw_response_quality(0.78, &mut rng);
+            let qb = draw_response_quality(0.74, &mut rng);
+            let a = resp(1, qa, 0.0);
+            let b = resp(2, qb, 0.0);
+            if judge_compare(&a, &b, &mut rng) == NodeId(1) {
+                wins_a += 1;
+            }
+        }
+        let f = wins_a as f64 / n as f64;
+        // 0.04 quality gap with σ=0.12/0.08 noise → modest edge (≈0.56-0.60),
+        // the Figure-6a regime.
+        assert!(f > 0.52 && f < 0.68, "f={f}");
+    }
+
+    #[test]
+    fn stats_win_rates() {
+        let mut s = DuelStats::default();
+        let out = DuelOutcome {
+            winner: NodeId(1),
+            loser: NodeId(2),
+            votes_for_winner: 2,
+            votes_total: 2,
+        };
+        s.record(&out);
+        s.record(&out);
+        s.record(&DuelOutcome {
+            winner: NodeId(2),
+            loser: NodeId(1),
+            votes_for_winner: 2,
+            votes_total: 2,
+        });
+        assert!((s.win_rate(NodeId(1)) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.win_rate(NodeId(2)) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.win_rate(NodeId(9)), 0.0);
+        assert_eq!(s.total_duels(), 3);
+    }
+}

@@ -1,0 +1,349 @@
+//! Gossip-driven peer synchronization (§A.2, Figure 10).
+//!
+//! Each node keeps a [`PeerView`]: per-peer status (online/offline), network
+//! endpoint, and a heartbeat version counter. Every gossip round a node bumps
+//! its own heartbeat, picks a small fanout of live peers, and exchanges views
+//! push-pull; entries with higher versions win during [`PeerView::merge`].
+//! Liveness is inferred locally: a peer whose heartbeat hasn't advanced
+//! within `suspect_after` rounds-worth of time is suspected offline
+//! (SWIM-style, but simple heartbeat aging suffices at the paper's scale).
+//!
+//! Convergence (epidemic diffusion, O(log N) rounds) is property-tested in
+//! `rust/tests/prop_gossip.rs` and measured in `benches/gossip_convergence.rs`.
+
+use std::collections::HashMap;
+
+use crate::types::{NodeId, Time};
+use crate::util::rng::Rng;
+
+/// What one node believes about one peer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeerEntry {
+    /// Monotonic heartbeat counter, bumped by the peer itself each round.
+    pub version: u64,
+    /// Declared online/offline (a leaving node can gossip a graceful
+    /// goodbye; crashes are caught by heartbeat aging).
+    pub online: bool,
+    /// Opaque endpoint (the TCP runner stores "host:port"; sim leaves 0).
+    pub endpoint: u64,
+    /// Local time we last saw this entry's version advance.
+    pub last_seen: Time,
+}
+
+/// Gossip configuration knobs (system-level policy, §4.3).
+#[derive(Debug, Clone, Copy)]
+pub struct GossipConfig {
+    /// Seconds between gossip rounds.
+    pub interval: f64,
+    /// Peers contacted per round.
+    pub fanout: usize,
+    /// Seconds without heartbeat progress before a peer is suspected dead.
+    pub suspect_after: f64,
+}
+
+impl Default for GossipConfig {
+    fn default() -> Self {
+        GossipConfig { interval: 1.0, fanout: 2, suspect_after: 5.0 }
+    }
+}
+
+/// One node's local membership view.
+#[derive(Debug, Clone)]
+pub struct PeerView {
+    pub me: NodeId,
+    entries: HashMap<NodeId, PeerEntry>,
+    cfg: GossipConfig,
+}
+
+/// A serializable digest exchanged during a gossip round.
+pub type Digest = Vec<(NodeId, u64, bool, u64)>; // (node, version, online, endpoint)
+
+impl PeerView {
+    pub fn new(me: NodeId, cfg: GossipConfig, now: Time) -> Self {
+        let mut entries = HashMap::new();
+        entries.insert(
+            me,
+            PeerEntry { version: 1, online: true, endpoint: 0, last_seen: now },
+        );
+        PeerView { me, entries, cfg }
+    }
+
+    pub fn config(&self) -> GossipConfig {
+        self.cfg
+    }
+
+    /// Seed knowledge of a bootstrap peer (e.g. from the config file).
+    pub fn add_seed(&mut self, peer: NodeId, endpoint: u64, now: Time) {
+        self.entries.entry(peer).or_insert(PeerEntry {
+            version: 0,
+            online: true,
+            endpoint,
+            last_seen: now,
+        });
+    }
+
+    /// Bump our own heartbeat (start of each gossip round). A heartbeat
+    /// asserts liveness, so it also clears any prior offline announcement
+    /// (the leave -> rejoin cycle of Figure 5).
+    pub fn heartbeat(&mut self, now: Time) {
+        let e = self.entries.get_mut(&self.me).expect("self entry exists");
+        e.version += 1;
+        e.online = true;
+        e.last_seen = now;
+    }
+
+    /// Gracefully announce our departure (gossiped out before leaving).
+    pub fn announce_leave(&mut self, now: Time) {
+        let e = self.entries.get_mut(&self.me).expect("self entry exists");
+        e.version += 1;
+        e.online = false;
+        e.last_seen = now;
+    }
+
+    /// Optimistically refresh contactability of known online peers — used
+    /// when (re)joining after downtime: our `last_seen` clocks are stale,
+    /// but bootstrap peers are worth contacting so the join gossip can
+    /// propagate (they'll age out again if truly gone).
+    pub fn refresh(&mut self, now: Time) {
+        for (n, e) in self.entries.iter_mut() {
+            if *n != self.me && e.online {
+                e.last_seen = now;
+            }
+        }
+    }
+
+    pub fn set_endpoint(&mut self, endpoint: u64) {
+        self.entries.get_mut(&self.me).expect("self entry exists").endpoint =
+            endpoint;
+    }
+
+    /// Is `peer` believed alive right now? (online flag + heartbeat age)
+    pub fn is_alive(&self, peer: NodeId, now: Time) -> bool {
+        match self.entries.get(&peer) {
+            None => false,
+            Some(e) => {
+                e.online && (now - e.last_seen) <= self.cfg.suspect_after
+            }
+        }
+    }
+
+    /// All peers (excluding self) believed alive.
+    pub fn alive_peers(&self, now: Time) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self
+            .entries
+            .keys()
+            .copied()
+            .filter(|n| *n != self.me && self.is_alive(*n, now))
+            .collect();
+        v.sort();
+        v
+    }
+
+    pub fn endpoint(&self, peer: NodeId) -> Option<u64> {
+        self.entries.get(&peer).map(|e| e.endpoint)
+    }
+
+    pub fn entry(&self, peer: NodeId) -> Option<&PeerEntry> {
+        self.entries.get(&peer)
+    }
+
+    pub fn known(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Choose gossip targets for this round. If nobody looks alive (e.g. we
+    /// were offline past everyone's heartbeat window, or we just booted from
+    /// stale seeds), fall back to probing *known* peers — an unreachable
+    /// target costs one lost message, while never probing would leave the
+    /// node isolated forever.
+    pub fn pick_targets(&self, rng: &mut Rng, now: Time) -> Vec<NodeId> {
+        let mut pool = self.alive_peers(now);
+        if pool.is_empty() {
+            pool = self
+                .entries
+                .keys()
+                .copied()
+                .filter(|n| *n != self.me)
+                .collect();
+            pool.sort();
+        }
+        if pool.is_empty() {
+            return vec![];
+        }
+        let idx = rng.sample_distinct(pool.len(), self.cfg.fanout);
+        idx.into_iter().map(|i| pool[i]).collect()
+    }
+
+    /// Serialize the view for transmission.
+    pub fn digest(&self) -> Digest {
+        let mut d: Digest = self
+            .entries
+            .iter()
+            .map(|(n, e)| (*n, e.version, e.online, e.endpoint))
+            .collect();
+        d.sort_by_key(|(n, ..)| *n);
+        d
+    }
+
+    /// Merge a received digest; higher version wins. Returns the nodes whose
+    /// entries changed (new information learned).
+    pub fn merge(&mut self, digest: &Digest, now: Time) -> Vec<NodeId> {
+        let mut changed = Vec::new();
+        for (node, version, online, endpoint) in digest {
+            if *node == self.me {
+                // Nobody can overwrite our self-entry (our version is
+                // authoritative — prevents spoofed "you are offline").
+                continue;
+            }
+            let e = self.entries.entry(*node).or_insert(PeerEntry {
+                version: 0,
+                online: false,
+                endpoint: *endpoint,
+                last_seen: now - self.cfg.suspect_after - 1.0,
+            });
+            if *version > e.version {
+                let was = (e.version, e.online, e.endpoint);
+                e.version = *version;
+                e.online = *online;
+                e.endpoint = *endpoint;
+                e.last_seen = now;
+                if was != (*version, *online, *endpoint) {
+                    changed.push(*node);
+                }
+            }
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GossipConfig {
+        GossipConfig { interval: 1.0, fanout: 2, suspect_after: 5.0 }
+    }
+
+    #[test]
+    fn self_entry_always_alive_view() {
+        let v = PeerView::new(NodeId(0), cfg(), 0.0);
+        assert_eq!(v.known(), 1);
+        assert!(v.alive_peers(0.0).is_empty());
+    }
+
+    #[test]
+    fn merge_learns_new_peers() {
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        let mut b = PeerView::new(NodeId(1), cfg(), 0.0);
+        b.heartbeat(0.5);
+        let changed = a.merge(&b.digest(), 1.0);
+        assert_eq!(changed, vec![NodeId(1)]);
+        assert!(a.is_alive(NodeId(1), 1.0));
+    }
+
+    #[test]
+    fn higher_version_wins_lower_ignored() {
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        let digest_v5: Digest = vec![(NodeId(2), 5, true, 7)];
+        let digest_v3: Digest = vec![(NodeId(2), 3, false, 9)];
+        a.merge(&digest_v5, 1.0);
+        let changed = a.merge(&digest_v3, 2.0);
+        assert!(changed.is_empty());
+        let e = a.entry(NodeId(2)).unwrap();
+        assert_eq!(e.version, 5);
+        assert!(e.online);
+        assert_eq!(e.endpoint, 7);
+    }
+
+    #[test]
+    fn self_entry_cannot_be_spoofed() {
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        let spoof: Digest = vec![(NodeId(0), 99, false, 0)];
+        a.merge(&spoof, 1.0);
+        let e = a.entry(NodeId(0)).unwrap();
+        assert_eq!(e.version, 1);
+        assert!(e.online);
+    }
+
+    #[test]
+    fn heartbeat_aging_suspects_silent_peer() {
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        a.merge(&vec![(NodeId(1), 4, true, 0)], 0.0);
+        assert!(a.is_alive(NodeId(1), 4.9));
+        assert!(!a.is_alive(NodeId(1), 5.1));
+        // Progress resets the clock.
+        a.merge(&vec![(NodeId(1), 5, true, 0)], 6.0);
+        assert!(a.is_alive(NodeId(1), 10.0));
+    }
+
+    #[test]
+    fn graceful_leave_propagates() {
+        let mut leaver = PeerView::new(NodeId(1), cfg(), 0.0);
+        leaver.heartbeat(0.1);
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        a.merge(&leaver.digest(), 0.2);
+        assert!(a.is_alive(NodeId(1), 0.5));
+        leaver.announce_leave(0.6);
+        a.merge(&leaver.digest(), 0.7);
+        assert!(!a.is_alive(NodeId(1), 0.8));
+    }
+
+    #[test]
+    fn endpoint_update_via_version_bump() {
+        // Figure 10's "Node 3 changed address" case.
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        a.merge(&vec![(NodeId(3), 2, true, 1111)], 0.0);
+        a.merge(&vec![(NodeId(3), 3, true, 2222)], 1.0);
+        assert_eq!(a.endpoint(NodeId(3)), Some(2222));
+    }
+
+    #[test]
+    fn pick_targets_only_alive_and_bounded() {
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        for i in 1..=5u32 {
+            a.merge(&vec![(NodeId(i), 1, true, 0)], 0.0);
+        }
+        a.merge(&vec![(NodeId(9), 1, false, 0)], 0.0); // offline
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let t = a.pick_targets(&mut rng, 1.0);
+            assert!(t.len() <= 2);
+            assert!(!t.contains(&NodeId(9)));
+            assert!(!t.contains(&NodeId(0)));
+        }
+    }
+
+    #[test]
+    fn pairwise_rounds_converge() {
+        // 8 nodes, push-pull with random pairs: everyone should learn
+        // everyone within a few rounds (epidemic diffusion).
+        let n = 8u32;
+        let mut views: Vec<PeerView> =
+            (0..n).map(|i| PeerView::new(NodeId(i), cfg(), 0.0)).collect();
+        // Ring bootstrap: i knows i+1.
+        for i in 0..n as usize {
+            let peer = NodeId(((i + 1) % n as usize) as u32);
+            views[i].add_seed(peer, 0, 0.0);
+        }
+        let mut rng = Rng::new(7);
+        for round in 0..6 {
+            let now = round as f64;
+            for i in 0..n as usize {
+                views[i].heartbeat(now);
+            }
+            for i in 0..n as usize {
+                let targets = views[i].pick_targets(&mut rng, now);
+                for t in targets {
+                    // push-pull
+                    let d = views[i].digest();
+                    views[t.0 as usize].merge(&d, now);
+                    let back = views[t.0 as usize].digest();
+                    views[i].merge(&back, now);
+                }
+            }
+        }
+        for v in &views {
+            assert_eq!(v.known(), n as usize, "node {} incomplete", v.me);
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Account state derived from applying credit ops in order.
+//!
+//! Both ledger implementations (shared + blockchain) reduce to this table;
+//! the conservation invariant `total = minted - burned` is property-tested
+//! in `rust/tests/prop_ledger.rs`.
+
+use std::collections::HashMap;
+
+use super::ops::CreditOp;
+use crate::types::{Credits, NodeId};
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Account {
+    /// Liquid, spendable credits.
+    pub balance: Credits,
+    /// Credits locked as PoS stake.
+    pub stake: Credits,
+}
+
+impl Account {
+    pub fn total(&self) -> Credits {
+        self.balance + self.stake
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum ApplyError {
+    #[error("{node} has insufficient balance: need {need}, have {have}")]
+    InsufficientBalance {
+        node: NodeId,
+        need: Credits,
+        have: Credits,
+    },
+    #[error("{node} has insufficient stake: need {need}, have {have}")]
+    InsufficientStake {
+        node: NodeId,
+        need: Credits,
+        have: Credits,
+    },
+}
+
+/// The materialized view of all accounts.
+#[derive(Debug, Clone, Default)]
+pub struct BalanceTable {
+    accounts: HashMap<NodeId, Account>,
+    /// Cumulative inflation/deflation counters (conservation accounting).
+    pub minted: Credits,
+    pub burned: Credits,
+}
+
+impl BalanceTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn account(&self, node: NodeId) -> Account {
+        self.accounts.get(&node).copied().unwrap_or_default()
+    }
+
+    pub fn balance(&self, node: NodeId) -> Credits {
+        self.account(node).balance
+    }
+
+    pub fn stake(&self, node: NodeId) -> Credits {
+        self.account(node).stake
+    }
+
+    /// All (node, stake) pairs with positive stake, sorted by node for
+    /// deterministic iteration.
+    pub fn stakes(&self) -> Vec<(NodeId, Credits)> {
+        let mut v: Vec<(NodeId, Credits)> = self
+            .accounts
+            .iter()
+            .filter(|(_, a)| a.stake > 0)
+            .map(|(n, a)| (*n, a.stake))
+            .collect();
+        v.sort_by_key(|(n, _)| *n);
+        v
+    }
+
+    pub fn total_stake(&self) -> Credits {
+        self.accounts.values().map(|a| a.stake).sum()
+    }
+
+    pub fn total_credits(&self) -> Credits {
+        self.accounts.values().map(|a| a.total()).sum()
+    }
+
+    /// Validate without mutating.
+    pub fn check(&self, op: &CreditOp) -> Result<(), ApplyError> {
+        match *op {
+            CreditOp::Mint { .. } => Ok(()),
+            // Slashing clamps rather than failing: a node whose stake ran
+            // out loses what's left (matches PoS slashing norms).
+            CreditOp::Slash { .. } => Ok(()),
+            CreditOp::Transfer { from, amount, .. } => {
+                let have = self.balance(from);
+                if have < amount {
+                    Err(ApplyError::InsufficientBalance {
+                        node: from,
+                        need: amount,
+                        have,
+                    })
+                } else {
+                    Ok(())
+                }
+            }
+            CreditOp::Stake { node, amount } => {
+                let have = self.balance(node);
+                if have < amount {
+                    Err(ApplyError::InsufficientBalance {
+                        node,
+                        need: amount,
+                        have,
+                    })
+                } else {
+                    Ok(())
+                }
+            }
+            CreditOp::Unstake { node, amount } => {
+                let have = self.stake(node);
+                if have < amount {
+                    Err(ApplyError::InsufficientStake {
+                        node,
+                        need: amount,
+                        have,
+                    })
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Validate and apply one op.
+    pub fn apply(&mut self, op: &CreditOp) -> Result<(), ApplyError> {
+        self.check(op)?;
+        match *op {
+            CreditOp::Mint { to, amount, .. } => {
+                self.accounts.entry(to).or_default().balance += amount;
+                self.minted += amount;
+            }
+            CreditOp::Slash { from, amount, .. } => {
+                let acct = self.accounts.entry(from).or_default();
+                // Clamp: slash at most the available stake.
+                let cut = amount.min(acct.stake);
+                acct.stake -= cut;
+                self.burned += cut;
+            }
+            CreditOp::Transfer { from, to, amount, .. } => {
+                self.accounts.entry(from).or_default().balance -= amount;
+                self.accounts.entry(to).or_default().balance += amount;
+            }
+            CreditOp::Stake { node, amount } => {
+                let acct = self.accounts.entry(node).or_default();
+                acct.balance -= amount;
+                acct.stake += amount;
+            }
+            CreditOp::Unstake { node, amount } => {
+                let acct = self.accounts.entry(node).or_default();
+                acct.stake -= amount;
+                acct.balance += amount;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply a batch transactionally: all ops validate against the running
+    /// state or none are applied.
+    pub fn apply_all(&mut self, ops: &[CreditOp]) -> Result<(), ApplyError> {
+        let mut scratch = self.clone();
+        for op in ops {
+            scratch.apply(op)?;
+        }
+        *self = scratch;
+        Ok(())
+    }
+
+    /// Conservation invariant: every credit in an account was minted and not
+    /// yet burned.
+    pub fn conserved(&self) -> bool {
+        self.total_credits() + self.burned == self.minted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ledger::ops::OpReason;
+
+    fn mint(to: u32, amount: Credits) -> CreditOp {
+        CreditOp::Mint {
+            to: NodeId(to),
+            amount,
+            reason: OpReason::Genesis,
+        }
+    }
+
+    #[test]
+    fn mint_transfer_stake_flow() {
+        let mut t = BalanceTable::new();
+        t.apply(&mint(0, 100)).unwrap();
+        t.apply(&mint(1, 50)).unwrap();
+        t.apply(&CreditOp::Stake { node: NodeId(0), amount: 40 }).unwrap();
+        assert_eq!(t.balance(NodeId(0)), 60);
+        assert_eq!(t.stake(NodeId(0)), 40);
+        t.apply(&CreditOp::Transfer {
+            from: NodeId(0),
+            to: NodeId(1),
+            amount: 60,
+            reason: OpReason::PolicyAdjust,
+        })
+        .unwrap();
+        assert_eq!(t.balance(NodeId(0)), 0);
+        assert_eq!(t.balance(NodeId(1)), 110);
+        assert!(t.conserved());
+    }
+
+    #[test]
+    fn overdraft_rejected() {
+        let mut t = BalanceTable::new();
+        t.apply(&mint(0, 10)).unwrap();
+        let err = t
+            .apply(&CreditOp::Transfer {
+                from: NodeId(0),
+                to: NodeId(1),
+                amount: 11,
+                reason: OpReason::PolicyAdjust,
+            })
+            .unwrap_err();
+        assert!(matches!(err, ApplyError::InsufficientBalance { .. }));
+        assert_eq!(t.balance(NodeId(0)), 10); // unchanged
+    }
+
+    #[test]
+    fn overstake_rejected() {
+        let mut t = BalanceTable::new();
+        t.apply(&mint(0, 10)).unwrap();
+        assert!(t.apply(&CreditOp::Stake { node: NodeId(0), amount: 11 }).is_err());
+        assert!(t
+            .apply(&CreditOp::Unstake { node: NodeId(0), amount: 1 })
+            .is_err());
+    }
+
+    #[test]
+    fn slash_clamps_to_stake() {
+        let mut t = BalanceTable::new();
+        t.apply(&mint(0, 100)).unwrap();
+        t.apply(&CreditOp::Stake { node: NodeId(0), amount: 30 }).unwrap();
+        t.apply(&CreditOp::Slash {
+            from: NodeId(0),
+            amount: 50,
+            reason: OpReason::PolicyAdjust,
+        })
+        .unwrap();
+        assert_eq!(t.stake(NodeId(0)), 0);
+        assert_eq!(t.balance(NodeId(0)), 70);
+        assert_eq!(t.burned, 30);
+        assert!(t.conserved());
+    }
+
+    #[test]
+    fn apply_all_is_transactional() {
+        let mut t = BalanceTable::new();
+        t.apply(&mint(0, 10)).unwrap();
+        let ops = [
+            CreditOp::Stake { node: NodeId(0), amount: 5 },
+            CreditOp::Stake { node: NodeId(0), amount: 6 }, // fails
+        ];
+        assert!(t.apply_all(&ops).is_err());
+        assert_eq!(t.stake(NodeId(0)), 0); // first op rolled back
+        assert_eq!(t.balance(NodeId(0)), 10);
+    }
+
+    #[test]
+    fn stakes_sorted_and_positive_only() {
+        let mut t = BalanceTable::new();
+        for (n, amt) in [(3u32, 30u64), (1, 10), (2, 0)] {
+            t.apply(&mint(n, 100)).unwrap();
+            if amt > 0 {
+                t.apply(&CreditOp::Stake { node: NodeId(n), amount: amt })
+                    .unwrap();
+            }
+        }
+        assert_eq!(t.stakes(), vec![(NodeId(1), 10), (NodeId(3), 30)]);
+        assert_eq!(t.total_stake(), 40);
+    }
+}

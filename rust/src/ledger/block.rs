@@ -1,0 +1,140 @@
+//! Credit blocks — Table 1 of the paper.
+//!
+//! | Field      | Description                    |
+//! |------------|--------------------------------|
+//! | Block ID   | Hash of the current block      |
+//! | Parent ID  | Hash of the previous block     |
+//! | Timestamp  | Time of block creation         |
+//! | Operations | List of credit-related records |
+//! | Proposer   | Node proposing the block       |
+//! | Signature  | Digital signature              |
+
+use super::ops::CreditOp;
+use crate::crypto::{Hash256, Hasher, KeyStore, NodeKey, Signature};
+use crate::types::{NodeId, Time};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub id: Hash256,
+    pub parent: Hash256,
+    pub timestamp: Time,
+    pub ops: Vec<CreditOp>,
+    pub proposer: NodeId,
+    pub signature: Signature,
+}
+
+impl Block {
+    /// Hash of (parent, timestamp, ops, proposer) — the content the id and
+    /// signature commit to.
+    pub fn compute_id(
+        parent: &Hash256,
+        timestamp: Time,
+        ops: &[CreditOp],
+        proposer: NodeId,
+    ) -> Hash256 {
+        let mut h = Hasher::new();
+        h.update(b"wwwserve-block")
+            .update(&parent.0)
+            .update_u64(timestamp.to_bits())
+            .update_u64(ops.len() as u64);
+        for op in ops {
+            op.hash_into(&mut h);
+        }
+        h.update_u64(proposer.0 as u64);
+        h.finish()
+    }
+
+    /// Build and sign a block on top of `parent`.
+    pub fn create(
+        parent: Hash256,
+        timestamp: Time,
+        ops: Vec<CreditOp>,
+        key: &NodeKey,
+    ) -> Block {
+        let id = Self::compute_id(&parent, timestamp, &ops, key.node);
+        let signature = key.sign(&id);
+        Block {
+            id,
+            parent,
+            timestamp,
+            ops,
+            proposer: key.node,
+            signature,
+        }
+    }
+
+    /// Structural validity: id matches contents and signature matches id.
+    pub fn verify(&self, keys: &KeyStore) -> bool {
+        let expect =
+            Self::compute_id(&self.parent, self.timestamp, &self.ops, self.proposer);
+        expect == self.id && keys.verify(self.proposer, &self.id, &self.signature)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ledger::ops::OpReason;
+
+    fn setup() -> (NodeKey, KeyStore) {
+        let key = NodeKey::derive(1, NodeId(0));
+        let mut ks = KeyStore::new();
+        ks.register(&key);
+        (key, ks)
+    }
+
+    fn some_ops() -> Vec<CreditOp> {
+        vec![CreditOp::Mint {
+            to: NodeId(1),
+            amount: 5,
+            reason: OpReason::Genesis,
+        }]
+    }
+
+    #[test]
+    fn create_verifies() {
+        let (key, ks) = setup();
+        let b = Block::create(Hash256::ZERO, 1.0, some_ops(), &key);
+        assert!(b.verify(&ks));
+    }
+
+    #[test]
+    fn tampered_ops_detected() {
+        let (key, ks) = setup();
+        let mut b = Block::create(Hash256::ZERO, 1.0, some_ops(), &key);
+        b.ops.push(CreditOp::Mint {
+            to: NodeId(0),
+            amount: 1_000_000,
+            reason: OpReason::Genesis,
+        });
+        assert!(!b.verify(&ks));
+    }
+
+    #[test]
+    fn tampered_parent_detected() {
+        let (key, ks) = setup();
+        let mut b = Block::create(Hash256::ZERO, 1.0, some_ops(), &key);
+        b.parent = crate::crypto::sha256(b"fork");
+        assert!(!b.verify(&ks));
+    }
+
+    #[test]
+    fn forged_proposer_detected() {
+        let (key, mut ks) = setup();
+        let other = NodeKey::derive(1, NodeId(9));
+        ks.register(&other);
+        let mut b = Block::create(Hash256::ZERO, 1.0, some_ops(), &key);
+        b.proposer = NodeId(9); // claim someone else proposed it
+        assert!(!b.verify(&ks));
+    }
+
+    #[test]
+    fn id_depends_on_all_fields() {
+        let ops = some_ops();
+        let a = Block::compute_id(&Hash256::ZERO, 1.0, &ops, NodeId(0));
+        let b = Block::compute_id(&Hash256::ZERO, 2.0, &ops, NodeId(0));
+        let c = Block::compute_id(&Hash256::ZERO, 1.0, &ops, NodeId(1));
+        let d = Block::compute_id(&Hash256::ZERO, 1.0, &[], NodeId(0));
+        assert!(a != b && a != c && a != d);
+    }
+}

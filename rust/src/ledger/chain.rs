@@ -1,0 +1,372 @@
+//! A node's local Credit Block Chain replica (§4.1).
+//!
+//! Happy path: a node that completed a transaction builds a block on its
+//! current head, broadcasts it, peers validate independently and vote; once a
+//! majority confirms, everyone appends. This module is the *replica state
+//! machine* — proposal/vote transport lives in the coordinator's
+//! LedgerManager. Votes are counted per block id; structural validation and
+//! op-level validation both gate acceptance, so a forged or overdrafting
+//! block can never enter an honest replica.
+
+use std::collections::HashMap;
+
+use super::accounts::{ApplyError, BalanceTable};
+use super::block::Block;
+use crate::crypto::{Hash256, KeyStore};
+use crate::types::{Credits, NodeId};
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ChainError {
+    #[error("block fails structural verification (hash/signature)")]
+    BadBlock,
+    #[error("block's parent {0} is not the current head")]
+    WrongParent(Hash256),
+    #[error("op validation failed: {0}")]
+    BadOps(#[from] ApplyError),
+    #[error("unknown block {0}")]
+    UnknownBlock(Hash256),
+}
+
+/// A pending proposal gathering votes.
+#[derive(Debug, Clone)]
+pub struct Pending {
+    pub block: Block,
+    pub votes: Vec<NodeId>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Chain {
+    blocks: Vec<Block>,
+    balances: BalanceTable,
+    pending: HashMap<Hash256, Pending>,
+}
+
+impl Chain {
+    pub fn new() -> Self {
+        Chain {
+            blocks: Vec::new(),
+            balances: BalanceTable::new(),
+            pending: HashMap::new(),
+        }
+    }
+
+    pub fn head(&self) -> Hash256 {
+        self.blocks.last().map(|b| b.id).unwrap_or(Hash256::ZERO)
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn blocks(&self) -> &[Block] {
+        &self.blocks
+    }
+
+    pub fn balances(&self) -> &BalanceTable {
+        &self.balances
+    }
+
+    pub fn balance(&self, node: NodeId) -> Credits {
+        self.balances.balance(node)
+    }
+
+    pub fn stake(&self, node: NodeId) -> Credits {
+        self.balances.stake(node)
+    }
+
+    /// Validate a proposed block against this replica (structure + parent +
+    /// op validity). Does not mutate.
+    pub fn validate(&self, block: &Block, keys: &KeyStore) -> Result<(), ChainError> {
+        if !block.verify(keys) {
+            return Err(ChainError::BadBlock);
+        }
+        if block.parent != self.head() {
+            return Err(ChainError::WrongParent(block.parent));
+        }
+        let mut scratch = self.balances.clone();
+        for op in &block.ops {
+            scratch.apply(op)?;
+        }
+        Ok(())
+    }
+
+    /// Record a (validated) proposal so votes can accumulate.
+    pub fn track_pending(&mut self, block: Block) {
+        self.pending
+            .entry(block.id)
+            .or_insert_with(|| Pending { block, votes: Vec::new() });
+    }
+
+    /// Register a confirmation vote. Returns the vote count.
+    pub fn vote(&mut self, block_id: Hash256, voter: NodeId) -> Result<usize, ChainError> {
+        let p = self
+            .pending
+            .get_mut(&block_id)
+            .ok_or(ChainError::UnknownBlock(block_id))?;
+        if !p.votes.contains(&voter) {
+            p.votes.push(voter);
+        }
+        Ok(p.votes.len())
+    }
+
+    pub fn pending_block(&self, block_id: &Hash256) -> Option<Block> {
+        self.pending.get(block_id).map(|p| p.block.clone())
+    }
+
+    pub fn pending_votes(&self, block_id: &Hash256) -> usize {
+        self.pending.get(block_id).map(|p| p.votes.len()).unwrap_or(0)
+    }
+
+    /// Finalize: validate once more against current state and append.
+    pub fn commit(&mut self, block_id: Hash256, keys: &KeyStore) -> Result<(), ChainError> {
+        let p = self
+            .pending
+            .get(&block_id)
+            .ok_or(ChainError::UnknownBlock(block_id))?;
+        let block = p.block.clone();
+        self.commit_block(block, keys)?;
+        self.pending.remove(&block_id);
+        Ok(())
+    }
+
+    /// Append a block directly (used when a peer tells us it was finalized —
+    /// the replica still refuses anything invalid).
+    pub fn commit_block(&mut self, block: Block, keys: &KeyStore) -> Result<(), ChainError> {
+        self.validate(&block, keys)?;
+        for op in &block.ops {
+            self.balances
+                .apply(op)
+                .expect("validate() checked every op");
+        }
+        self.blocks.push(block);
+        Ok(())
+    }
+
+    /// Full-chain audit from genesis — O(n·ops). Used by tests and the
+    /// anti-entropy path when a replica joins late.
+    pub fn audit(&self, keys: &KeyStore) -> bool {
+        let mut parent = Hash256::ZERO;
+        let mut table = BalanceTable::new();
+        for b in &self.blocks {
+            if b.parent != parent || !b.verify(keys) {
+                return false;
+            }
+            for op in &b.ops {
+                if table.apply(op).is_err() {
+                    return false;
+                }
+            }
+            parent = b.id;
+        }
+        table.conserved()
+    }
+
+    /// Adopt a longer valid chain (anti-entropy for late joiners). Returns
+    /// true if adopted.
+    pub fn adopt_if_longer(&mut self, other: &[Block], keys: &KeyStore) -> bool {
+        if other.len() <= self.blocks.len() {
+            return false;
+        }
+        let candidate = Chain {
+            blocks: other.to_vec(),
+            balances: {
+                let mut t = BalanceTable::new();
+                for b in other {
+                    for op in &b.ops {
+                        if t.apply(op).is_err() {
+                            return false;
+                        }
+                    }
+                }
+                t
+            },
+            pending: HashMap::new(),
+        };
+        if !candidate.audit(keys) {
+            return false;
+        }
+        *self = candidate;
+        true
+    }
+}
+
+impl Default for Chain {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::NodeKey;
+    use crate::ledger::ops::{CreditOp, OpReason};
+
+    fn network(n: u32) -> (Vec<NodeKey>, KeyStore) {
+        let keys: Vec<NodeKey> =
+            (0..n).map(|i| NodeKey::derive(42, NodeId(i))).collect();
+        let ks = KeyStore::for_network(42, n);
+        (keys, ks)
+    }
+
+    fn genesis_ops() -> Vec<CreditOp> {
+        vec![
+            CreditOp::Mint { to: NodeId(0), amount: 100, reason: OpReason::Genesis },
+            CreditOp::Mint { to: NodeId(1), amount: 100, reason: OpReason::Genesis },
+        ]
+    }
+
+    #[test]
+    fn propose_vote_commit() {
+        let (keys, ks) = network(3);
+        let mut chain = Chain::new();
+        let b = Block::create(chain.head(), 0.0, genesis_ops(), &keys[0]);
+        chain.validate(&b, &ks).unwrap();
+        chain.track_pending(b.clone());
+        assert_eq!(chain.vote(b.id, NodeId(1)).unwrap(), 1);
+        assert_eq!(chain.vote(b.id, NodeId(2)).unwrap(), 2);
+        // Duplicate vote doesn't double-count.
+        assert_eq!(chain.vote(b.id, NodeId(2)).unwrap(), 2);
+        chain.commit(b.id, &ks).unwrap();
+        assert_eq!(chain.len(), 1);
+        assert_eq!(chain.balance(NodeId(0)), 100);
+        assert!(chain.audit(&ks));
+    }
+
+    #[test]
+    fn rejects_wrong_parent() {
+        let (keys, ks) = network(2);
+        let mut chain = Chain::new();
+        let b1 = Block::create(chain.head(), 0.0, genesis_ops(), &keys[0]);
+        chain.commit_block(b1, &ks).unwrap();
+        // A second block built on genesis (stale parent) must be rejected.
+        let stale = Block::create(Hash256::ZERO, 1.0, vec![], &keys[1]);
+        assert!(matches!(
+            chain.validate(&stale, &ks),
+            Err(ChainError::WrongParent(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_overdraft_block() {
+        let (keys, ks) = network(2);
+        let mut chain = Chain::new();
+        chain
+            .commit_block(
+                Block::create(chain.head(), 0.0, genesis_ops(), &keys[0]),
+                &ks,
+            )
+            .unwrap();
+        let bad = Block::create(
+            chain.head(),
+            1.0,
+            vec![CreditOp::Transfer {
+                from: NodeId(0),
+                to: NodeId(1),
+                amount: 1_000,
+                reason: OpReason::PolicyAdjust,
+            }],
+            &keys[1],
+        );
+        assert!(matches!(chain.validate(&bad, &ks), Err(ChainError::BadOps(_))));
+    }
+
+    #[test]
+    fn rejects_tampered_block() {
+        let (keys, ks) = network(2);
+        let chain = Chain::new();
+        let mut b = Block::create(chain.head(), 0.0, genesis_ops(), &keys[0]);
+        b.ops[0] = CreditOp::Mint {
+            to: NodeId(0),
+            amount: 1_000_000,
+            reason: OpReason::Genesis,
+        };
+        assert_eq!(chain.validate(&b, &ks), Err(ChainError::BadBlock));
+    }
+
+    #[test]
+    fn double_spend_across_blocks_rejected() {
+        let (keys, ks) = network(2);
+        let mut chain = Chain::new();
+        chain
+            .commit_block(
+                Block::create(chain.head(), 0.0, genesis_ops(), &keys[0]),
+                &ks,
+            )
+            .unwrap();
+        let spend = |ts: f64| {
+            Block::create(
+                chain.head(),
+                ts,
+                vec![CreditOp::Transfer {
+                    from: NodeId(0),
+                    to: NodeId(1),
+                    amount: 80,
+                    reason: OpReason::PolicyAdjust,
+                }],
+                &keys[0],
+            )
+        };
+        let b1 = spend(1.0);
+        let b2 = spend(2.0); // same parent — a classic double-spend attempt
+        chain.commit_block(b1, &ks).unwrap();
+        // b2's parent is now stale; the replica refuses it.
+        assert!(chain.commit_block(b2, &ks).is_err());
+        assert_eq!(chain.balance(NodeId(0)), 20);
+    }
+
+    #[test]
+    fn adopt_longer_chain() {
+        let (keys, ks) = network(2);
+        let mut a = Chain::new();
+        let mut b = Chain::new();
+        let blk1 = Block::create(a.head(), 0.0, genesis_ops(), &keys[0]);
+        a.commit_block(blk1.clone(), &ks).unwrap();
+        b.commit_block(blk1, &ks).unwrap();
+        let blk2 = Block::create(
+            a.head(),
+            1.0,
+            vec![CreditOp::Stake { node: NodeId(0), amount: 50 }],
+            &keys[0],
+        );
+        a.commit_block(blk2, &ks).unwrap();
+        assert!(b.adopt_if_longer(a.blocks(), &ks));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.stake(NodeId(0)), 50);
+        // Shorter or equal chains are not adopted.
+        assert!(!a.adopt_if_longer(b.blocks(), &ks));
+    }
+
+    #[test]
+    fn adopt_rejects_invalid_history() {
+        let (keys, ks) = network(2);
+        let mut a = Chain::new();
+        let blk1 = Block::create(a.head(), 0.0, genesis_ops(), &keys[0]);
+        a.commit_block(blk1, &ks).unwrap();
+        // Forge a longer but structurally-invalid chain.
+        let mut forged = a.blocks().to_vec();
+        let mut bad = Block::create(
+            a.head(),
+            1.0,
+            vec![CreditOp::Mint {
+                to: NodeId(1),
+                amount: 1,
+                reason: OpReason::Genesis,
+            }],
+            &keys[1],
+        );
+        bad.ops[0] = CreditOp::Mint {
+            to: NodeId(1),
+            amount: 9_999,
+            reason: OpReason::Genesis,
+        };
+        forged.push(bad);
+        let mut b = Chain::new();
+        assert!(!b.adopt_if_longer(&forged, &ks));
+        assert_eq!(b.len(), 0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Credit-based transaction system (§4.1).
+//!
+//! Two interchangeable ledger modes behind the [`Ledger`] trait:
+//!
+//! * [`SharedLedger`] — one logically-shared balance table + op log. This is
+//!   what the paper actually ran (Appendix C: "we employ a shared ledger
+//!   instead of a full Credit Block Chain, simplifying implementation while
+//!   preserving the essential dynamics of credit transactions").
+//! * [`chain::Chain`]-based replicas — the full design of §4.1: hash-linked
+//!   signed blocks, independent validation, majority confirmation. Driven by
+//!   the coordinator's LedgerManager; compared against SharedLedger in
+//!   `benches/ledger_ablation.rs`.
+
+pub mod accounts;
+pub mod block;
+pub mod chain;
+pub mod ops;
+
+pub use accounts::{Account, ApplyError, BalanceTable};
+pub use block::Block;
+pub use chain::{Chain, ChainError};
+pub use ops::{CreditOp, OpReason};
+
+use crate::types::{Credits, NodeId, Time};
+
+/// Read/submit interface the scheduler and policy layers use. They never care
+/// which consistency machinery sits underneath.
+pub trait Ledger {
+    /// Submit a batch of ops as one atomic transaction.
+    fn submit(&mut self, ops: Vec<CreditOp>, proposer: NodeId, now: Time)
+        -> Result<(), ApplyError>;
+    fn balance(&self, node: NodeId) -> Credits;
+    fn stake(&self, node: NodeId) -> Credits;
+    /// Snapshot of positive stakes, sorted by node id.
+    fn stakes(&self) -> Vec<(NodeId, Credits)>;
+    fn total_stake(&self) -> Credits;
+}
+
+/// The paper's Appendix-C shared ledger: a single balance table plus an
+/// append-only op log (for audit parity with the blockchain mode).
+#[derive(Debug, Clone, Default)]
+pub struct SharedLedger {
+    table: BalanceTable,
+    log: Vec<(Time, NodeId, CreditOp)>,
+}
+
+impl SharedLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn log(&self) -> &[(Time, NodeId, CreditOp)] {
+        &self.log
+    }
+
+    pub fn table(&self) -> &BalanceTable {
+        &self.table
+    }
+
+    /// Credit history of one node: (time, signed delta to total holdings).
+    /// Used to regenerate the Figure-6 credit-over-time curves.
+    pub fn history(&self, node: NodeId) -> Vec<(Time, i64)> {
+        let mut out = Vec::new();
+        for (t, _, op) in &self.log {
+            let delta: i64 = match *op {
+                CreditOp::Mint { to, amount, .. } if to == node => amount as i64,
+                CreditOp::Slash { from, amount, .. } if from == node => {
+                    -(amount as i64)
+                }
+                CreditOp::Transfer { from, to, amount, .. } => {
+                    if from == node && to == node {
+                        0
+                    } else if from == node {
+                        -(amount as i64)
+                    } else if to == node {
+                        amount as i64
+                    } else {
+                        continue;
+                    }
+                }
+                // Stake/Unstake move within the account: no change in total.
+                _ => continue,
+            };
+            out.push((*t, delta));
+        }
+        out
+    }
+}
+
+impl Ledger for SharedLedger {
+    fn submit(
+        &mut self,
+        ops: Vec<CreditOp>,
+        proposer: NodeId,
+        now: Time,
+    ) -> Result<(), ApplyError> {
+        self.table.apply_all(&ops)?;
+        for op in ops {
+            self.log.push((now, proposer, op));
+        }
+        Ok(())
+    }
+
+    fn balance(&self, node: NodeId) -> Credits {
+        self.table.balance(node)
+    }
+
+    fn stake(&self, node: NodeId) -> Credits {
+        self.table.stake(node)
+    }
+
+    fn stakes(&self) -> Vec<(NodeId, Credits)> {
+        self.table.stakes()
+    }
+
+    fn total_stake(&self) -> Credits {
+        self.table.total_stake()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_ledger_submit_and_history() {
+        let mut l = SharedLedger::new();
+        l.submit(
+            vec![
+                CreditOp::Mint { to: NodeId(0), amount: 100, reason: OpReason::Genesis },
+                CreditOp::Stake { node: NodeId(0), amount: 60 },
+            ],
+            NodeId(0),
+            0.0,
+        )
+        .unwrap();
+        l.submit(
+            vec![CreditOp::Transfer {
+                from: NodeId(0),
+                to: NodeId(1),
+                amount: 25,
+                reason: OpReason::PolicyAdjust,
+            }],
+            NodeId(0),
+            1.0,
+        )
+        .unwrap();
+        assert_eq!(l.balance(NodeId(0)), 15);
+        assert_eq!(l.stake(NodeId(0)), 60);
+        assert_eq!(l.balance(NodeId(1)), 25);
+        assert_eq!(l.stakes(), vec![(NodeId(0), 60)]);
+        // history: +100 at t0 (mint), -25 at t1 (transfer out); stake ignored
+        assert_eq!(l.history(NodeId(0)), vec![(0.0, 100), (1.0, -25)]);
+        assert_eq!(l.history(NodeId(1)), vec![(1.0, 25)]);
+    }
+
+    #[test]
+    fn failed_submit_rolls_back() {
+        let mut l = SharedLedger::new();
+        l.submit(
+            vec![CreditOp::Mint { to: NodeId(0), amount: 10, reason: OpReason::Genesis }],
+            NodeId(0),
+            0.0,
+        )
+        .unwrap();
+        let err = l.submit(
+            vec![
+                CreditOp::Stake { node: NodeId(0), amount: 5 },
+                CreditOp::Stake { node: NodeId(0), amount: 50 },
+            ],
+            NodeId(0),
+            1.0,
+        );
+        assert!(err.is_err());
+        assert_eq!(l.stake(NodeId(0)), 0);
+        assert_eq!(l.log().len(), 1); // only the genesis op was logged
+    }
+}

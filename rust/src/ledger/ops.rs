@@ -1,0 +1,191 @@
+//! Credit operations — the ledger's transaction vocabulary (§4.1).
+//!
+//! Every economic event in WWW.Serve is one of these ops, recorded either in
+//! a `Block` (full blockchain mode) or the shared op log (the paper's
+//! Appendix-C simplification). Amounts are integer micro-credits so replays
+//! are exact.
+
+use crate::crypto::Hasher;
+use crate::types::{Credits, NodeId, RequestId};
+
+/// Why an op happened — carried for auditability and metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpReason {
+    /// Initial allocation when a node joins.
+    Genesis,
+    /// Payment from a delegator to the executor of an offloaded request.
+    OffloadPayment(RequestId),
+    /// Extra reward minted for winning a duel (R_add).
+    DuelWin(RequestId),
+    /// Stake slashed for losing a duel (P).
+    DuelLoss(RequestId),
+    /// Reward minted for serving as a judge.
+    JudgeReward(RequestId),
+    /// Voluntary stake adjustment by the provider's policy.
+    PolicyAdjust,
+}
+
+impl OpReason {
+    /// Stable discriminant for hashing.
+    fn tag(&self) -> u64 {
+        match self {
+            OpReason::Genesis => 0,
+            OpReason::OffloadPayment(_) => 1,
+            OpReason::DuelWin(_) => 2,
+            OpReason::DuelLoss(_) => 3,
+            OpReason::JudgeReward(_) => 4,
+            OpReason::PolicyAdjust => 5,
+        }
+    }
+
+    fn request(&self) -> Option<RequestId> {
+        match self {
+            OpReason::OffloadPayment(r)
+            | OpReason::DuelWin(r)
+            | OpReason::DuelLoss(r)
+            | OpReason::JudgeReward(r) => Some(*r),
+            _ => None,
+        }
+    }
+}
+
+/// A single credit-affecting record (the "Operations" field of Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CreditOp {
+    /// Create credits out of thin air (genesis allocations, duel/judge
+    /// rewards — the network's inflation schedule).
+    Mint {
+        to: NodeId,
+        amount: Credits,
+        reason: OpReason,
+    },
+    /// Destroy credits (duel penalties are slashed from stake and burned).
+    Slash {
+        from: NodeId,
+        amount: Credits,
+        reason: OpReason,
+    },
+    /// Move liquid balance between nodes (credits-for-offloading).
+    Transfer {
+        from: NodeId,
+        to: NodeId,
+        amount: Credits,
+        reason: OpReason,
+    },
+    /// Move liquid balance into stake (raises PoS selection probability).
+    Stake { node: NodeId, amount: Credits },
+    /// Move stake back to liquid balance.
+    Unstake { node: NodeId, amount: Credits },
+}
+
+impl CreditOp {
+    /// Feed this op into a block hash.
+    pub fn hash_into(&self, h: &mut Hasher) {
+        match self {
+            CreditOp::Mint { to, amount, reason } => {
+                h.update(b"mint")
+                    .update_u64(to.0 as u64)
+                    .update_u64(*amount)
+                    .update_u64(reason.tag());
+            }
+            CreditOp::Slash { from, amount, reason } => {
+                h.update(b"slash")
+                    .update_u64(from.0 as u64)
+                    .update_u64(*amount)
+                    .update_u64(reason.tag());
+            }
+            CreditOp::Transfer { from, to, amount, reason } => {
+                h.update(b"xfer")
+                    .update_u64(from.0 as u64)
+                    .update_u64(to.0 as u64)
+                    .update_u64(*amount)
+                    .update_u64(reason.tag());
+            }
+            CreditOp::Stake { node, amount } => {
+                h.update(b"stake")
+                    .update_u64(node.0 as u64)
+                    .update_u64(*amount);
+            }
+            CreditOp::Unstake { node, amount } => {
+                h.update(b"unstake")
+                    .update_u64(node.0 as u64)
+                    .update_u64(*amount);
+            }
+        }
+        if let Some(req) = self.reason().and_then(|r| r.request()) {
+            h.update_u64(req.origin.0 as u64).update_u64(req.seq);
+        }
+    }
+
+    pub fn reason(&self) -> Option<OpReason> {
+        match self {
+            CreditOp::Mint { reason, .. }
+            | CreditOp::Slash { reason, .. }
+            | CreditOp::Transfer { reason, .. } => Some(*reason),
+            _ => None,
+        }
+    }
+
+    /// Nodes whose accounts this op touches.
+    pub fn parties(&self) -> Vec<NodeId> {
+        match self {
+            CreditOp::Mint { to, .. } => vec![*to],
+            CreditOp::Slash { from, .. } => vec![*from],
+            CreditOp::Transfer { from, to, .. } => vec![*from, *to],
+            CreditOp::Stake { node, .. } | CreditOp::Unstake { node, .. } => {
+                vec![*node]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Hasher;
+    use crate::types::RequestId;
+
+    fn req() -> RequestId {
+        RequestId { origin: NodeId(1), seq: 9 }
+    }
+
+    #[test]
+    fn hash_distinguishes_ops() {
+        let a = CreditOp::Mint {
+            to: NodeId(1),
+            amount: 10,
+            reason: OpReason::Genesis,
+        };
+        let b = CreditOp::Mint {
+            to: NodeId(1),
+            amount: 11,
+            reason: OpReason::Genesis,
+        };
+        let c = CreditOp::Slash {
+            from: NodeId(1),
+            amount: 10,
+            reason: OpReason::DuelLoss(req()),
+        };
+        let h = |op: &CreditOp| {
+            let mut hh = Hasher::new();
+            op.hash_into(&mut hh);
+            hh.finish()
+        };
+        assert_ne!(h(&a), h(&b));
+        assert_ne!(h(&a), h(&c));
+        assert_eq!(h(&a), h(&a));
+    }
+
+    #[test]
+    fn parties_cover_all_variants() {
+        let t = CreditOp::Transfer {
+            from: NodeId(1),
+            to: NodeId(2),
+            amount: 5,
+            reason: OpReason::OffloadPayment(req()),
+        };
+        assert_eq!(t.parties(), vec![NodeId(1), NodeId(2)]);
+        let s = CreditOp::Stake { node: NodeId(3), amount: 5 };
+        assert_eq!(s.parties(), vec![NodeId(3)]);
+    }
+}

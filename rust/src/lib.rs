@@ -1,0 +1,37 @@
+//! # WWW.Serve — decentralized LLM serving market
+//!
+//! Rust reproduction of *WWW.Serve: Interconnecting Global LLM Services
+//! through Decentralization* (CMU, CS.DC 2026) as a three-layer
+//! Rust + JAX + Pallas stack. This crate is Layer 3: the decentralized
+//! coordinator — PoS request routing, the credit ledger, gossip membership,
+//! and the duel-and-judge quality mechanism — plus the simulation substrate
+//! used to regenerate every figure and table of the paper, and a PJRT
+//! runtime that serves the AOT-compiled JAX/Pallas transformer on the real
+//! request path.
+//!
+//! Start with [`sim::World`] (deterministic multi-node simulation),
+//! [`coordinator::Node`] (the sans-io node state machine), or
+//! [`runtime::Engine`] (load + execute `artifacts/*.hlo.txt`).
+
+pub mod backend;
+pub mod benchlib;
+pub mod config;
+pub mod coordinator;
+pub mod crypto;
+pub mod duel;
+pub mod gametheory;
+pub mod gossip;
+pub mod ledger;
+pub mod metrics;
+pub mod net;
+pub mod policy;
+pub mod pos;
+pub mod repro;
+pub mod runtime;
+pub mod schedulers;
+pub mod sim;
+pub mod types;
+pub mod util;
+pub mod workload;
+
+pub use types::{Credits, NodeId, Request, RequestId, Response, Time, CREDIT};

@@ -1,0 +1,266 @@
+//! `wwwserve` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `simulate --config exp.json` — run an experiment config (Appendix-B
+//!   style) under single/centralized/decentralized scheduling; print SLO,
+//!   latency and credit summaries.
+//! * `setting --id 1..4 [--strategy s]` — run a Table-3 setting directly.
+//! * `serve --node-id i --listen addr --peers a,b,c --artifacts dir` — run a
+//!   real node over TCP with the PJRT backend (see examples/e2e_serving.rs
+//!   for the orchestrated version).
+//! * `generate --artifacts dir --prompt "..."` — one-shot generation
+//!   through the AOT artifacts (smoke check).
+
+use wwwserve::backend::Profile;
+use wwwserve::metrics::Recorder;
+use wwwserve::schedulers::{self, Strategy};
+use wwwserve::sim::{NodeSetup, World, WorldConfig};
+use wwwserve::workload::{Generator, Setting, SettingId};
+use wwwserve::NodeId;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: wwwserve <command> [options]\n\
+         \n\
+         commands:\n\
+         \x20 simulate --config <exp.json>          run an experiment file\n\
+         \x20 setting  --id <1-4> [--strategy <single|centralized|decentralized>]\n\
+         \x20                                        run a Table-3 setting\n\
+         \x20 generate --artifacts <dir> --prompt <text> [--max-new <n>]\n\
+         \x20                                        AOT-model smoke generation\n\
+         \x20 help                                   this message"
+    );
+    std::process::exit(2)
+}
+
+/// Tiny declarative arg parser (clap is unavailable offline — DESIGN.md §8).
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(name) = argv[i].strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .filter(|v| !v.starts_with("--"))
+                    .cloned()
+                    .unwrap_or_else(|| "true".to_string());
+                i += if val == "true" && argv.get(i + 1).map(|v| v.starts_with("--")).unwrap_or(true) { 1 } else { 2 };
+                flags.insert(name.to_string(), val);
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn required(&self, name: &str) -> &str {
+        match self.get(name) {
+            Some(v) => v,
+            None => {
+                eprintln!("missing required flag --{name}");
+                usage()
+            }
+        }
+    }
+}
+
+fn print_summary(label: &str, rec: &Recorder, horizon: f64) {
+    println!(
+        "{label:<16} requests {:>6}  slo {:>6.1}%  mean {:>8.2}s  p50 {:>8.2}s  p99 {:>8.2}s  tput {:>6.2} req/s  synthetic {:>5}",
+        rec.user_records().count(),
+        rec.slo_attainment() * 100.0,
+        rec.mean_latency(),
+        rec.latency_percentile(0.5),
+        rec.latency_percentile(0.99),
+        rec.throughput(horizon),
+        rec.synthetic_count(),
+    );
+}
+
+fn run_setting(id: SettingId, strategy: Strategy, seed: u64) {
+    let setting = Setting::get(id);
+    let horizon = setting.horizon;
+    println!("== {} / {} (seed {seed}) ==", setting.id.name(), strategy.name());
+    for (i, n) in setting.nodes.iter().enumerate() {
+        println!("  node {i}: {}", n.describe());
+    }
+    let profiles: Vec<Profile> =
+        setting.nodes.iter().map(|n| n.profile()).collect();
+    let generators: Vec<Option<Generator>> = setting
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| {
+            Some(Generator::new(NodeId(i as u32), n.phases.clone()))
+        })
+        .collect();
+
+    let rec = match strategy {
+        Strategy::Single => {
+            schedulers::run_single(profiles, generators, horizon, seed)
+        }
+        Strategy::Centralized => {
+            schedulers::run_centralized(profiles, generators, horizon, seed)
+        }
+        Strategy::Decentralized => {
+            let cfg = WorldConfig { seed, ..Default::default() };
+            let setups: Vec<NodeSetup> = setting
+                .nodes
+                .iter()
+                .zip(generators)
+                .map(|(n, g)| {
+                    let mut s = NodeSetup::new(
+                        n.profile(),
+                        wwwserve::policy::NodePolicy::default(),
+                    );
+                    if let Some(g) = g {
+                        s = s.with_generator(g);
+                    }
+                    s
+                })
+                .collect();
+            let mut w = World::new(cfg, setups);
+            // Drain: run past the horizon so queued work completes.
+            w.run_until(horizon * 4.0);
+            w.recorder
+        }
+    };
+    print_summary(strategy.name(), &rec, horizon);
+}
+
+fn cmd_setting(args: &Args) {
+    let id = match args.required("id") {
+        "1" => SettingId::S1,
+        "2" => SettingId::S2,
+        "3" => SettingId::S3,
+        "4" => SettingId::S4,
+        other => {
+            eprintln!("unknown setting '{other}' (expected 1-4)");
+            usage()
+        }
+    };
+    let seed: u64 = args.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    match args.get("strategy") {
+        Some("single") => run_setting(id, Strategy::Single, seed),
+        Some("centralized") => run_setting(id, Strategy::Centralized, seed),
+        Some("decentralized") => run_setting(id, Strategy::Decentralized, seed),
+        Some(other) => {
+            eprintln!("unknown strategy '{other}'");
+            usage()
+        }
+        None => {
+            for s in [Strategy::Single, Strategy::Centralized, Strategy::Decentralized] {
+                run_setting(id, s, seed);
+            }
+        }
+    }
+}
+
+fn cmd_simulate(args: &Args) {
+    let path = args.required("config");
+    let exp = match wwwserve::config::load_experiment(path) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            std::process::exit(1)
+        }
+    };
+    println!(
+        "experiment: {} nodes, strategy {}, horizon {}s, seed {}",
+        exp.setups.len(),
+        exp.strategy.name(),
+        exp.horizon,
+        exp.seed
+    );
+    match exp.strategy {
+        Strategy::Decentralized => {
+            let mut w = World::new(exp.world.clone(), exp.setups.clone());
+            w.run_until(exp.horizon * 4.0);
+            print_summary("decentralized", &w.recorder, exp.horizon);
+            println!("duels settled: {}", w.duel_stats.total_duels());
+            println!("messages: {} ({} bytes)", w.messages_sent, w.bytes_sent);
+            for (i, c) in w.credit_totals().iter().enumerate() {
+                println!("  node {i}: {c:.2} credits");
+            }
+        }
+        s => {
+            let profiles: Vec<Profile> =
+                exp.setups.iter().map(|x| x.profile).collect();
+            let generators: Vec<Option<Generator>> =
+                exp.setups.iter().map(|x| x.generator.clone()).collect();
+            let rec = if s == Strategy::Single {
+                schedulers::run_single(profiles, generators, exp.horizon, exp.seed)
+            } else {
+                schedulers::run_centralized(profiles, generators, exp.horizon, exp.seed)
+            };
+            print_summary(s.name(), &rec, exp.horizon);
+        }
+    }
+}
+
+fn cmd_generate(args: &Args) {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let prompt = args.required("prompt");
+    let max_new: usize =
+        args.get("max-new").and_then(|s| s.parse().ok()).unwrap_or(32);
+    let engine = match wwwserve::runtime::Engine::load(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("failed to load artifacts from '{dir}': {e}");
+            eprintln!("run `make artifacts` first");
+            std::process::exit(1)
+        }
+    };
+    // Byte-level tokenization (vocab 512: bytes + specials).
+    let tokens: Vec<u32> = prompt.bytes().map(|b| b as u32).collect();
+    let t0 = std::time::Instant::now();
+    match engine.generate(&tokens, max_new) {
+        Ok(out) => {
+            let dt = t0.elapsed().as_secs_f64();
+            println!("prompt tokens: {}", tokens.len());
+            println!("generated ids: {out:?}");
+            let text: String = out
+                .iter()
+                .map(|t| {
+                    if *t < 256 {
+                        (*t as u8 as char).to_string()
+                    } else {
+                        format!("<{t}>")
+                    }
+                })
+                .collect();
+            println!("as bytes: {text:?}");
+            println!(
+                "{} tokens in {:.3}s = {:.1} tok/s (PJRT CPU, tiny model)",
+                out.len(),
+                dt,
+                out.len() as f64 / dt
+            );
+        }
+        Err(e) => {
+            eprintln!("generation failed: {e}");
+            std::process::exit(1)
+        }
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "setting" => cmd_setting(&args),
+        "generate" => cmd_generate(&args),
+        _ => usage(),
+    }
+}

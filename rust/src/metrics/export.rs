@@ -1,0 +1,123 @@
+//! Result export: dump run records and series as JSON for external
+//! plotting/analysis (the figures in the paper are plots of exactly these
+//! streams).
+
+use super::{Recorder, TimeSeries};
+use crate::types::RequestRecord;
+use crate::util::json::Json;
+
+fn record_json(r: &RequestRecord) -> Json {
+    Json::obj(vec![
+        ("origin", Json::num(r.origin.0 as f64)),
+        ("seq", Json::num(r.id.seq as f64)),
+        ("executor", Json::num(r.executor.0 as f64)),
+        ("prompt_tokens", Json::num(r.prompt_tokens as f64)),
+        ("output_tokens", Json::num(r.output_tokens as f64)),
+        ("submitted_at", Json::num(r.submitted_at)),
+        ("completed_at", Json::num(r.completed_at)),
+        ("latency", Json::num(r.latency())),
+        ("slo_deadline", Json::num(r.slo_deadline)),
+        ("slo_met", Json::Bool(r.slo_met())),
+        ("synthetic", Json::Bool(r.synthetic)),
+    ])
+}
+
+impl Recorder {
+    /// All records as a JSON array (one object per completed request).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.all().iter().map(record_json).collect())
+    }
+
+    /// Write records to a `.json` file.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    /// Compact run summary as JSON (the numbers the tables print).
+    pub fn summary_json(&self, horizon: f64) -> Json {
+        Json::obj(vec![
+            ("user_requests", Json::num(self.user_records().count() as f64)),
+            ("synthetic", Json::num(self.synthetic_count() as f64)),
+            ("slo_attainment", Json::num(self.slo_attainment())),
+            ("mean_latency", Json::num(self.mean_latency())),
+            ("p50_latency", Json::num(self.latency_percentile(0.5))),
+            ("p99_latency", Json::num(self.latency_percentile(0.99))),
+            ("throughput", Json::num(self.throughput(horizon))),
+        ])
+    }
+}
+
+impl TimeSeries {
+    /// `[[t, v], ...]` JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.points
+                .iter()
+                .map(|(t, v)| Json::Arr(vec![Json::num(*t), Json::num(*v)]))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{ExecKind, NodeId, RequestId};
+
+    fn recorder() -> Recorder {
+        let mut r = Recorder::new();
+        r.record(RequestRecord {
+            id: RequestId { origin: NodeId(0), seq: 1 },
+            origin: NodeId(0),
+            executor: NodeId(2),
+            kind: ExecKind::Delegated,
+            prompt_tokens: 10,
+            output_tokens: 20,
+            submitted_at: 1.0,
+            completed_at: 11.0,
+            slo_deadline: 15.0,
+            synthetic: false,
+        });
+        r
+    }
+
+    #[test]
+    fn records_roundtrip_through_json() {
+        let j = recorder().to_json();
+        let text = j.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let rec = &parsed.as_arr().unwrap()[0];
+        assert_eq!(rec.get("executor").as_u64(), Some(2));
+        assert_eq!(rec.get("latency").as_f64(), Some(10.0));
+        assert_eq!(rec.get("slo_met").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn summary_fields_present() {
+        let s = recorder().summary_json(100.0);
+        assert_eq!(s.get("user_requests").as_u64(), Some(1));
+        assert!((s.get("slo_attainment").as_f64().unwrap() - 1.0).abs() < 1e-12);
+        assert!(s.get("throughput").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn write_json_creates_file() {
+        let dir = std::env::temp_dir().join("wwwserve_export_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("records.json");
+        recorder().write_json(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn timeseries_json() {
+        let mut ts = TimeSeries::new();
+        ts.push(0.0, 1.0);
+        ts.push(5.0, 2.5);
+        let j = ts.to_json();
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+        assert_eq!(j.as_arr().unwrap()[1].as_arr().unwrap()[1].as_f64(), Some(2.5));
+    }
+}

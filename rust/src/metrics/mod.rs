@@ -1,0 +1,290 @@
+//! Metrics: request lifecycle records, SLO attainment, latency statistics,
+//! CDFs and windowed time series — everything the paper's figures plot.
+
+pub mod export;
+
+use std::collections::BTreeMap;
+
+use crate::types::{NodeId, RequestRecord, Time};
+
+/// Collects completed-request records during a run.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    records: Vec<RequestRecord>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, rec: RequestRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn all(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// User-facing records only (duel copies / judge runs excluded).
+    pub fn user_records(&self) -> impl Iterator<Item = &RequestRecord> {
+        self.records.iter().filter(|r| !r.synthetic)
+    }
+
+    pub fn synthetic_count(&self) -> usize {
+        self.records.iter().filter(|r| r.synthetic).count()
+    }
+
+    /// Fraction of user requests completing within their SLO deadline.
+    pub fn slo_attainment(&self) -> f64 {
+        let (met, total) = self
+            .user_records()
+            .fold((0usize, 0usize), |(m, t), r| {
+                (m + r.slo_met() as usize, t + 1)
+            });
+        if total == 0 {
+            return 0.0;
+        }
+        met as f64 / total as f64
+    }
+
+    /// SLO attainment as a function of a *scale factor* on each request's
+    /// deadline — the x-axis sweep of Figure 4/7 ("SLO scale").
+    pub fn slo_curve(&self, scales: &[f64]) -> Vec<(f64, f64)> {
+        scales
+            .iter()
+            .map(|s| {
+                let (met, total) = self.user_records().fold(
+                    (0usize, 0usize),
+                    |(m, t), r| {
+                        let ok = r.latency() <= r.slo_deadline * s;
+                        (m + ok as usize, t + 1)
+                    },
+                );
+                let frac = if total == 0 { 0.0 } else { met as f64 / total as f64 };
+                (*s, frac)
+            })
+            .collect()
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        let lat: Vec<f64> = self.user_records().map(|r| r.latency()).collect();
+        if lat.is_empty() {
+            return 0.0;
+        }
+        lat.iter().sum::<f64>() / lat.len() as f64
+    }
+
+    pub fn latencies_sorted(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self.user_records().map(|r| r.latency()).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    /// p in [0, 1].
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let v = self.latencies_sorted();
+        if v.is_empty() {
+            return 0.0;
+        }
+        let idx = ((v.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+        v[idx]
+    }
+
+    /// Empirical CDF evaluated at `points` (Figure 7-left).
+    pub fn latency_cdf(&self, points: &[f64]) -> Vec<(f64, f64)> {
+        let v = self.latencies_sorted();
+        points
+            .iter()
+            .map(|x| {
+                let n = v.partition_point(|l| *l <= *x);
+                let f = if v.is_empty() { 0.0 } else { n as f64 / v.len() as f64 };
+                (*x, f)
+            })
+            .collect()
+    }
+
+    /// Windowed average latency over completion times (Figure 5's black
+    /// line): buckets of `window` seconds -> (window center, mean latency).
+    pub fn windowed_latency(&self, window: Time) -> Vec<(Time, f64)> {
+        let mut buckets: BTreeMap<i64, (f64, usize)> = BTreeMap::new();
+        for r in self.user_records() {
+            let b = (r.completed_at / window).floor() as i64;
+            let e = buckets.entry(b).or_insert((0.0, 0));
+            e.0 += r.latency();
+            e.1 += 1;
+        }
+        buckets
+            .into_iter()
+            .map(|(b, (sum, n))| {
+                ((b as f64 + 0.5) * window, sum / n as f64)
+            })
+            .collect()
+    }
+
+    /// Completed user-request count per executor (Figure 6 right panels,
+    /// Figure 8a/8b "running requests" proxies).
+    pub fn served_by(&self) -> BTreeMap<NodeId, usize> {
+        let mut m = BTreeMap::new();
+        for r in self.user_records() {
+            *m.entry(r.executor).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Throughput of completed user requests over the horizon.
+    pub fn throughput(&self, horizon: Time) -> f64 {
+        if horizon <= 0.0 {
+            return 0.0;
+        }
+        self.user_records().count() as f64 / horizon
+    }
+}
+
+/// An append-only (t, value) series — credit trajectories, queue depths.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub points: Vec<(Time, f64)>,
+}
+
+impl TimeSeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: Time, v: f64) {
+        self.points.push((t, v));
+    }
+
+    pub fn last(&self) -> Option<(Time, f64)> {
+        self.points.last().copied()
+    }
+
+    /// Downsample to at most `n` evenly-spaced points (for printing).
+    pub fn downsample(&self, n: usize) -> Vec<(Time, f64)> {
+        if self.points.len() <= n || n == 0 {
+            return self.points.clone();
+        }
+        let step = self.points.len() as f64 / n as f64;
+        (0..n)
+            .map(|i| self.points[(i as f64 * step) as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{ExecKind, NodeId, RequestId};
+
+    fn rec(seq: u64, submitted: f64, completed: f64, deadline: f64,
+           executor: u32, synthetic: bool) -> RequestRecord {
+        RequestRecord {
+            id: RequestId { origin: NodeId(0), seq },
+            origin: NodeId(0),
+            executor: NodeId(executor),
+            kind: ExecKind::Local,
+            prompt_tokens: 10,
+            output_tokens: 10,
+            submitted_at: submitted,
+            completed_at: completed,
+            slo_deadline: deadline,
+            synthetic,
+        }
+    }
+
+    fn sample() -> Recorder {
+        let mut r = Recorder::new();
+        r.record(rec(0, 0.0, 10.0, 15.0, 1, false)); // met
+        r.record(rec(1, 0.0, 20.0, 15.0, 1, false)); // missed
+        r.record(rec(2, 5.0, 20.0, 20.0, 2, false)); // met
+        r.record(rec(3, 0.0, 99.0, 1.0, 2, true));   // synthetic — ignored
+        r
+    }
+
+    #[test]
+    fn slo_attainment_excludes_synthetic() {
+        let r = sample();
+        assert!((r.slo_attainment() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.synthetic_count(), 1);
+    }
+
+    #[test]
+    fn mean_and_percentiles() {
+        let r = sample();
+        // latencies: 10, 20, 15
+        assert!((r.mean_latency() - 15.0).abs() < 1e-12);
+        assert!((r.latency_percentile(0.0) - 10.0).abs() < 1e-12);
+        assert!((r.latency_percentile(1.0) - 20.0).abs() < 1e-12);
+        assert!((r.latency_percentile(0.5) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let r = sample();
+        let cdf = r.latency_cdf(&[0.0, 10.0, 15.0, 20.0, 100.0]);
+        let ys: Vec<f64> = cdf.iter().map(|(_, y)| *y).collect();
+        assert_eq!(ys[0], 0.0);
+        assert_eq!(*ys.last().unwrap(), 1.0);
+        for w in ys.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn slo_curve_monotone_in_scale() {
+        let r = sample();
+        let curve = r.slo_curve(&[0.1, 0.5, 1.0, 2.0, 10.0]);
+        for w in curve.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert_eq!(curve.last().unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn windowed_latency_buckets() {
+        let r = sample();
+        let w = r.windowed_latency(10.0);
+        // completions at 10, 20, 20 -> buckets 1 and 2
+        assert_eq!(w.len(), 2);
+        assert!((w[0].1 - 10.0).abs() < 1e-12);
+        assert!((w[1].1 - 17.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn served_by_counts() {
+        let r = sample();
+        let m = r.served_by();
+        assert_eq!(m[&NodeId(1)], 2);
+        assert_eq!(m[&NodeId(2)], 1);
+    }
+
+    #[test]
+    fn empty_recorder_safe() {
+        let r = Recorder::new();
+        assert_eq!(r.slo_attainment(), 0.0);
+        assert_eq!(r.mean_latency(), 0.0);
+        assert_eq!(r.latency_percentile(0.5), 0.0);
+    }
+
+    #[test]
+    fn timeseries_downsample() {
+        let mut ts = TimeSeries::new();
+        for i in 0..100 {
+            ts.push(i as f64, (i * 2) as f64);
+        }
+        let d = ts.downsample(10);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d[0], (0.0, 0.0));
+        let full = ts.downsample(1000);
+        assert_eq!(full.len(), 100);
+    }
+}

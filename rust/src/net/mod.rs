@@ -1,0 +1,12 @@
+//! Network transports.
+//!
+//! The node state machine is sans-io; this module supplies the real-socket
+//! path: a length-prefixed JSON frame protocol over `std::net` TCP (the
+//! offline-image substitute for the paper's ZeroMQ ROUTER — DESIGN.md §8),
+//! plus the [`NodeRunner`] real-time event loop that drives a
+//! [`crate::coordinator::Node`] from wall-clock time and live sockets.
+//! The deterministic in-process fabric lives in [`crate::sim`].
+
+pub mod tcp;
+
+pub use tcp::{NodeRunner, TcpTransport};

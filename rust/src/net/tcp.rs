@@ -1,0 +1,264 @@
+//! TCP transport + real-time node runner.
+//!
+//! Frame format: `[sender: u32 LE][len: u32 LE][len bytes of JSON]`, one
+//! connection per message (simple, robust, plenty for the e2e example's
+//! localhost fabric; the paper's deployment would pool ZeroMQ sockets).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Action, Event, Message, Node};
+use crate::types::{NodeId, Request, RequestRecord, Time};
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum NetError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad frame")]
+    BadFrame,
+    #[error("unknown peer {0}")]
+    UnknownPeer(NodeId),
+}
+
+/// Write one frame.
+fn write_frame(stream: &mut TcpStream, from: NodeId, msg: &Message) -> Result<(), NetError> {
+    let body = msg.to_json().to_string();
+    stream.write_all(&from.0.to_le_bytes())?;
+    stream.write_all(&(body.len() as u32).to_le_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    Ok(())
+}
+
+/// Read one frame; None on clean EOF.
+fn read_frame(stream: &mut TcpStream) -> Result<Option<(NodeId, Message)>, NetError> {
+    let mut head = [0u8; 8];
+    match stream.read_exact(&mut head) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Ok(None)
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let from = NodeId(u32::from_le_bytes(head[0..4].try_into().unwrap()));
+    let len = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    if len > 64 << 20 {
+        return Err(NetError::BadFrame);
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    let text = String::from_utf8(body).map_err(|_| NetError::BadFrame)?;
+    let json = Json::parse(&text).map_err(|_| NetError::BadFrame)?;
+    let msg = Message::from_json(&json).ok_or(NetError::BadFrame)?;
+    Ok(Some((from, msg)))
+}
+
+/// A bound node endpoint: accepts frames from peers on a background thread,
+/// sends by connecting per message.
+pub struct TcpTransport {
+    pub me: NodeId,
+    pub local_addr: SocketAddr,
+    peers: Arc<Mutex<HashMap<NodeId, SocketAddr>>>,
+    incoming: mpsc::Receiver<(NodeId, Message)>,
+}
+
+impl TcpTransport {
+    /// Bind to `addr` (use port 0 for ephemeral) and start accepting.
+    pub fn bind(me: NodeId, addr: &str) -> Result<TcpTransport, NetError> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let (tx, rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut stream) = stream else { continue };
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    while let Ok(Some(frame)) = read_frame(&mut stream) {
+                        if tx.send(frame).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        Ok(TcpTransport {
+            me,
+            local_addr,
+            peers: Arc::new(Mutex::new(HashMap::new())),
+            incoming: rx,
+        })
+    }
+
+    pub fn register_peer(&self, peer: NodeId, addr: SocketAddr) {
+        self.peers.lock().unwrap().insert(peer, addr);
+    }
+
+    pub fn send(&self, to: NodeId, msg: &Message) -> Result<(), NetError> {
+        let addr = self
+            .peers
+            .lock()
+            .unwrap()
+            .get(&to)
+            .copied()
+            .ok_or(NetError::UnknownPeer(to))?;
+        let mut stream = TcpStream::connect(addr)?;
+        write_frame(&mut stream, self.me, msg)
+    }
+
+    pub fn try_recv(&self) -> Option<(NodeId, Message)> {
+        self.incoming.try_recv().ok()
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Option<(NodeId, Message)> {
+        self.incoming.recv_timeout(d).ok()
+    }
+}
+
+/// Drives one `Node` in real time: maps wall-clock to sim `Time`, pumps the
+/// transport, fires ticks and backend wakes, executes actions.
+pub struct NodeRunner {
+    pub node: Node,
+    pub transport: TcpTransport,
+    epoch: Instant,
+    tick_interval: Duration,
+    last_tick: Instant,
+    next_wake: Option<Time>,
+    /// Completed user-visible records (the e2e harness collects these).
+    pub records: Vec<RequestRecord>,
+}
+
+impl NodeRunner {
+    pub fn new(node: Node, transport: TcpTransport, epoch: Instant) -> NodeRunner {
+        NodeRunner {
+            node,
+            transport,
+            epoch,
+            tick_interval: Duration::from_millis(100),
+            last_tick: Instant::now() - Duration::from_secs(1),
+            next_wake: None,
+            records: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> Time {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Inject a local user request.
+    pub fn submit(&mut self, req: Request) {
+        let now = self.now();
+        let actions = self.node.handle(Event::UserRequest(req), now);
+        self.apply(actions);
+    }
+
+    /// One pump iteration: returns true if it did any work (callers can
+    /// sleep briefly when idle).
+    pub fn pump(&mut self) -> bool {
+        let mut busy = false;
+        let now = self.now();
+
+        if let Some((from, msg)) = self.transport.try_recv() {
+            let actions = self.node.handle(Event::Message { from, msg }, now);
+            self.apply(actions);
+            busy = true;
+        }
+        if self.last_tick.elapsed() >= self.tick_interval {
+            self.last_tick = Instant::now();
+            let actions = self.node.handle(Event::Tick, now);
+            self.apply(actions);
+            busy = true;
+        }
+        if let Some(w) = self.next_wake {
+            if now >= w {
+                self.next_wake = None;
+                let actions = self.node.handle(Event::BackendWake, now);
+                self.apply(actions);
+                busy = true;
+            }
+        }
+        busy
+    }
+
+    fn apply(&mut self, actions: Vec<Action>) {
+        for a in actions {
+            match a {
+                Action::Send { to, msg } => {
+                    // Best-effort: a dead peer is discovered via gossip.
+                    let _ = self.transport.send(to, &msg);
+                }
+                Action::Done(rec) => self.records.push(rec),
+                Action::WakeAt(t) => {
+                    self.next_wake = Some(match self.next_wake {
+                        Some(w) => w.min(t),
+                        None => t,
+                    });
+                }
+                Action::DuelSettled(_) => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::RequestId;
+
+    #[test]
+    fn frame_roundtrip_over_loopback() {
+        let t1 = TcpTransport::bind(NodeId(1), "127.0.0.1:0").unwrap();
+        let t2 = TcpTransport::bind(NodeId(2), "127.0.0.1:0").unwrap();
+        t1.register_peer(NodeId(2), t2.local_addr);
+        t2.register_peer(NodeId(1), t1.local_addr);
+
+        let msg = Message::ProbeAccept {
+            req_id: RequestId { origin: NodeId(1), seq: 7 },
+        };
+        t1.send(NodeId(2), &msg).unwrap();
+        let (from, got) = t2.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(from, NodeId(1));
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn send_to_unknown_peer_errors() {
+        let t = TcpTransport::bind(NodeId(0), "127.0.0.1:0").unwrap();
+        let msg = Message::ProbeReject {
+            req_id: RequestId { origin: NodeId(0), seq: 1 },
+        };
+        assert!(matches!(
+            t.send(NodeId(9), &msg),
+            Err(NetError::UnknownPeer(NodeId(9)))
+        ));
+    }
+
+    #[test]
+    fn bidirectional_burst() {
+        let t1 = TcpTransport::bind(NodeId(1), "127.0.0.1:0").unwrap();
+        let t2 = TcpTransport::bind(NodeId(2), "127.0.0.1:0").unwrap();
+        t1.register_peer(NodeId(2), t2.local_addr);
+        t2.register_peer(NodeId(1), t1.local_addr);
+        for seq in 0..20u64 {
+            t1.send(
+                NodeId(2),
+                &Message::ProbeAccept {
+                    req_id: RequestId { origin: NodeId(1), seq },
+                },
+            )
+            .unwrap();
+        }
+        let mut got = Vec::new();
+        while got.len() < 20 {
+            let (_, m) = t2.recv_timeout(Duration::from_secs(5)).expect("msg");
+            if let Message::ProbeAccept { req_id } = m {
+                got.push(req_id.seq);
+            }
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,202 @@
+//! Policy framework (§4.3): user-level knobs + system-level constants.
+//!
+//! User-level policies let each provider decide *when, under what policies,
+//! and with what resources* it participates: its stake, how eagerly it
+//! offloads, whether it accepts delegated work, and how it prioritizes its
+//! own users. System-level policies are the network-wide economic constants
+//! (base reward R, duel rate p_d, duel reward R_add, penalty P, judges k,
+//! offload price) that every honest node enforces.
+
+use crate::types::{Credits, CREDIT};
+use crate::util::rng::Rng;
+
+/// Per-provider participation policy (Appendix B's YAML server parameters).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodePolicy {
+    /// Credits the node stakes at join (its PoS weight; Fig. 8a).
+    pub stake: Credits,
+    /// Probability of *considering* offload for a queued request once the
+    /// local backend is saturated (Fig. 8c; paper default 0.8).
+    pub offload_freq: f64,
+    /// Probability of accepting a delegated request when probed, given
+    /// capacity (Fig. 8b; paper default 0.8).
+    pub accept_freq: f64,
+    /// Backend utilization (running/max_batch) above which the node prefers
+    /// to offload rather than queue locally (paper default 0.7).
+    pub target_utilization: f64,
+    /// Queue length (waiting requests) beyond which offload is considered
+    /// even below target utilization.
+    pub queue_threshold: usize,
+    /// If true, user-submitted jobs are dequeued before delegated ones.
+    pub prioritize_own: bool,
+    /// Refuse delegated work entirely (a "requester-only" node, used by the
+    /// §7 ablation workloads).
+    pub requester_only: bool,
+}
+
+impl Default for NodePolicy {
+    fn default() -> Self {
+        NodePolicy {
+            stake: 10 * CREDIT,
+            offload_freq: 0.8,
+            accept_freq: 0.8,
+            target_utilization: 0.7,
+            queue_threshold: 4,
+            prioritize_own: true,
+            requester_only: false,
+        }
+    }
+}
+
+impl NodePolicy {
+    pub fn requester_only() -> Self {
+        NodePolicy {
+            stake: 0,
+            offload_freq: 1.0,
+            accept_freq: 0.0,
+            requester_only: true,
+            ..Default::default()
+        }
+    }
+
+    /// Should this node try to offload a request right now?
+    /// `utilization` = running/max_batch of the local backend,
+    /// `queue_len` = requests waiting locally.
+    pub fn should_offload(
+        &self,
+        utilization: f64,
+        queue_len: usize,
+        rng: &mut Rng,
+    ) -> bool {
+        if self.requester_only {
+            return true; // it cannot serve anything itself
+        }
+        let pressured = utilization >= self.target_utilization
+            || queue_len > self.queue_threshold;
+        pressured && rng.chance(self.offload_freq)
+    }
+
+    /// Should this node accept a delegated request it was probed for?
+    pub fn should_accept(
+        &self,
+        utilization: f64,
+        queue_len: usize,
+        rng: &mut Rng,
+    ) -> bool {
+        if self.requester_only || self.accept_freq <= 0.0 {
+            return false;
+        }
+        // Accepting while saturated would only grow the remote queue; the
+        // probe answers "do I have spare capacity" per the paper's example
+        // ("accept external requests only when spare GPU capacity is
+        // available").
+        let has_capacity =
+            utilization < 1.0 && queue_len <= self.queue_threshold;
+        has_capacity && rng.chance(self.accept_freq)
+    }
+}
+
+/// System-level economic constants (§4.3, §5 Assumption 5.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemPolicy {
+    /// Base payment a delegator transfers to the executor per request (R).
+    pub base_reward: Credits,
+    /// Fraction of delegated requests escalated to duels (p_d).
+    pub duel_rate: f64,
+    /// Extra minted reward for the duel winner (R_add).
+    pub duel_reward: Credits,
+    /// Stake slashed from the duel loser (P).
+    pub duel_penalty: Credits,
+    /// Judges per duel (k).
+    pub judges: usize,
+    /// Minted reward per judge evaluation.
+    pub judge_reward: Credits,
+    /// Max PoS probes before giving up and serving locally.
+    pub max_probes: usize,
+    /// Initial liquid credits granted to a joining node.
+    pub genesis_credits: Credits,
+    /// Majority threshold for blockchain-mode block confirmation, as a
+    /// fraction of known peers.
+    pub confirm_quorum: f64,
+}
+
+impl Default for SystemPolicy {
+    fn default() -> Self {
+        SystemPolicy {
+            base_reward: CREDIT / 10,        // 0.1 credit per request
+            duel_rate: 0.10,                 // paper's default ablation point
+            duel_reward: CREDIT / 5,         // R_add
+            duel_penalty: CREDIT / 5,        // P
+            judges: 2,                       // k = 2 (§7.1 setup)
+            judge_reward: CREDIT / 20,
+            max_probes: 3,
+            genesis_credits: 100 * CREDIT,
+            confirm_quorum: 0.5,
+        }
+    }
+}
+
+impl SystemPolicy {
+    /// Expected extra requests per delegated request from the duel-and-judge
+    /// mechanism: p_d * (1 + k) (§7.1).
+    pub fn duel_overhead_factor(&self) -> f64 {
+        self.duel_rate * (1.0 + self.judges as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_matches_paper_appendix_c() {
+        let p = NodePolicy::default();
+        assert!((p.offload_freq - 0.8).abs() < 1e-12);
+        assert!((p.accept_freq - 0.8).abs() < 1e-12);
+        assert!((p.target_utilization - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn offload_requires_pressure() {
+        let p = NodePolicy { offload_freq: 1.0, ..Default::default() };
+        let mut rng = Rng::new(0);
+        assert!(!p.should_offload(0.1, 0, &mut rng));
+        assert!(p.should_offload(0.9, 0, &mut rng));
+        assert!(p.should_offload(0.1, 10, &mut rng));
+    }
+
+    #[test]
+    fn offload_frequency_respected() {
+        let p = NodePolicy { offload_freq: 0.25, ..Default::default() };
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let hits = (0..n)
+            .filter(|_| p.should_offload(1.0, 100, &mut rng))
+            .count();
+        let f = hits as f64 / n as f64;
+        assert!((f - 0.25).abs() < 0.01, "f={f}");
+    }
+
+    #[test]
+    fn accept_requires_capacity() {
+        let p = NodePolicy { accept_freq: 1.0, ..Default::default() };
+        let mut rng = Rng::new(2);
+        assert!(p.should_accept(0.5, 0, &mut rng));
+        assert!(!p.should_accept(1.0, 0, &mut rng));
+        assert!(!p.should_accept(0.5, 100, &mut rng));
+    }
+
+    #[test]
+    fn requester_only_never_accepts_always_offloads() {
+        let p = NodePolicy::requester_only();
+        let mut rng = Rng::new(3);
+        assert!(p.should_offload(0.0, 0, &mut rng));
+        assert!(!p.should_accept(0.0, 0, &mut rng));
+    }
+
+    #[test]
+    fn duel_overhead_formula() {
+        let s = SystemPolicy { duel_rate: 0.1, judges: 2, ..Default::default() };
+        assert!((s.duel_overhead_factor() - 0.3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,224 @@
+//! Proof-of-Stake executor selection (§3.2, §4.1).
+//!
+//! A delegating node samples executor candidates with probability
+//! proportional to staked credit, restricted to peers its gossip view
+//! believes are online. Two sampling strategies:
+//!
+//! * linear scan over the stake vector — O(n) per sample, zero setup;
+//! * alias table — O(n) build, O(1) sample, amortized over many samples from
+//!   the same stake snapshot (the hot-path choice; crossover measured in
+//!   `benches/micro.rs`).
+
+use crate::types::{Credits, NodeId};
+use crate::util::rng::{AliasTable, Rng};
+
+/// A snapshot of eligible executors and their stakes.
+#[derive(Debug, Clone)]
+pub struct StakeSnapshot {
+    nodes: Vec<NodeId>,
+    stakes: Vec<f64>,
+    alias: Option<AliasTable>,
+}
+
+impl StakeSnapshot {
+    /// Build from (node, stake) pairs, excluding `me` (a node never delegates
+    /// to itself) and anything with zero stake.
+    pub fn new(stakes: &[(NodeId, Credits)], exclude: Option<NodeId>) -> Self {
+        let mut nodes = Vec::with_capacity(stakes.len());
+        let mut weights = Vec::with_capacity(stakes.len());
+        for (n, s) in stakes {
+            if Some(*n) == exclude || *s == 0 {
+                continue;
+            }
+            nodes.push(*n);
+            weights.push(*s as f64);
+        }
+        StakeSnapshot { nodes, stakes: weights, alias: None }
+    }
+
+    /// Restrict to nodes satisfying `alive` (the gossip view's liveness).
+    pub fn retain(&mut self, alive: impl Fn(NodeId) -> bool) {
+        let mut nodes = Vec::with_capacity(self.nodes.len());
+        let mut stakes = Vec::with_capacity(self.stakes.len());
+        for (n, s) in self.nodes.iter().zip(&self.stakes) {
+            if alive(*n) {
+                nodes.push(*n);
+                stakes.push(*s);
+            }
+        }
+        self.nodes = nodes;
+        self.stakes = stakes;
+        self.alias = None;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.nodes
+    }
+
+    /// Precompute the alias table for O(1) sampling.
+    pub fn prepare(&mut self) {
+        if self.alias.is_none() {
+            self.alias = AliasTable::new(&self.stakes);
+        }
+    }
+
+    /// One stake-proportional draw. Uses the alias table if prepared.
+    pub fn sample(&self, rng: &mut Rng) -> Option<NodeId> {
+        if let Some(t) = &self.alias {
+            return Some(self.nodes[t.sample(rng)]);
+        }
+        rng.weighted(&self.stakes).map(|i| self.nodes[i])
+    }
+
+    /// Linear-scan draw regardless of alias state (for benchmarking).
+    pub fn sample_linear(&self, rng: &mut Rng) -> Option<NodeId> {
+        rng.weighted(&self.stakes).map(|i| self.nodes[i])
+    }
+
+    /// Draw k *distinct* nodes, stake-proportional without replacement
+    /// (duel executors, judge committees). Falls back to fewer if the pool
+    /// is small.
+    pub fn sample_distinct(&self, rng: &mut Rng, k: usize) -> Vec<NodeId> {
+        let mut weights = self.stakes.clone();
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k.min(self.nodes.len()) {
+            match rng.weighted(&weights) {
+                Some(i) => {
+                    out.push(self.nodes[i]);
+                    weights[i] = 0.0;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Selection probability of `node` in this snapshot (p_i of §5).
+    pub fn probability(&self, node: NodeId) -> f64 {
+        let total: f64 = self.stakes.iter().sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.nodes
+            .iter()
+            .zip(&self.stakes)
+            .find(|(n, _)| **n == node)
+            .map(|(_, s)| s / total)
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snapshot() -> StakeSnapshot {
+        StakeSnapshot::new(
+            &[
+                (NodeId(0), 100),
+                (NodeId(1), 200),
+                (NodeId(2), 300),
+                (NodeId(3), 0),
+            ],
+            None,
+        )
+    }
+
+    #[test]
+    fn excludes_self_and_zero() {
+        let s = StakeSnapshot::new(
+            &[(NodeId(0), 100), (NodeId(1), 200), (NodeId(2), 0)],
+            Some(NodeId(0)),
+        );
+        assert_eq!(s.nodes(), &[NodeId(1)]);
+    }
+
+    #[test]
+    fn sampling_proportional() {
+        let mut s = snapshot();
+        s.prepare();
+        let mut rng = Rng::new(1);
+        let mut counts = std::collections::HashMap::new();
+        let n = 300_000;
+        for _ in 0..n {
+            *counts.entry(s.sample(&mut rng).unwrap()).or_insert(0usize) += 1;
+        }
+        assert!(!counts.contains_key(&NodeId(3)));
+        let f1 = counts[&NodeId(1)] as f64 / n as f64;
+        let f2 = counts[&NodeId(2)] as f64 / n as f64;
+        assert!((f1 - 2.0 / 6.0).abs() < 0.01, "f1={f1}");
+        assert!((f2 - 0.5).abs() < 0.01, "f2={f2}");
+    }
+
+    #[test]
+    fn linear_and_alias_agree_statistically() {
+        let mut s = snapshot();
+        let mut rng = Rng::new(2);
+        let n = 200_000;
+        let mut lin = 0usize;
+        for _ in 0..n {
+            if s.sample_linear(&mut rng) == Some(NodeId(2)) {
+                lin += 1;
+            }
+        }
+        s.prepare();
+        let mut ali = 0usize;
+        for _ in 0..n {
+            if s.sample(&mut rng) == Some(NodeId(2)) {
+                ali += 1;
+            }
+        }
+        let d = (lin as f64 - ali as f64).abs() / n as f64;
+        assert!(d < 0.01, "methods diverge: {d}");
+    }
+
+    #[test]
+    fn retain_filters_dead_nodes() {
+        let mut s = snapshot();
+        s.retain(|n| n != NodeId(2));
+        assert_eq!(s.nodes(), &[NodeId(0), NodeId(1)]);
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            assert_ne!(s.sample(&mut rng), Some(NodeId(2)));
+        }
+    }
+
+    #[test]
+    fn distinct_sampling_unique_and_proportionalish() {
+        let s = snapshot();
+        let mut rng = Rng::new(4);
+        for _ in 0..500 {
+            let picks = s.sample_distinct(&mut rng, 2);
+            assert_eq!(picks.len(), 2);
+            assert_ne!(picks[0], picks[1]);
+        }
+        // Ask for more than available.
+        assert_eq!(s.sample_distinct(&mut rng, 10).len(), 3);
+    }
+
+    #[test]
+    fn probability_matches_definition() {
+        let s = snapshot();
+        assert!((s.probability(NodeId(0)) - 100.0 / 600.0).abs() < 1e-12);
+        assert!((s.probability(NodeId(2)) - 0.5).abs() < 1e-12);
+        assert_eq!(s.probability(NodeId(3)), 0.0);
+        assert_eq!(s.probability(NodeId(9)), 0.0);
+    }
+
+    #[test]
+    fn empty_pool_returns_none() {
+        let s = StakeSnapshot::new(&[], None);
+        let mut rng = Rng::new(5);
+        assert!(s.is_empty());
+        assert_eq!(s.sample(&mut rng), None);
+        assert!(s.sample_distinct(&mut rng, 2).is_empty());
+    }
+}

@@ -1,0 +1,416 @@
+//! The PJRT execution engine: compile-once, execute-many.
+//!
+//! Follows /opt/xla-example/load_hlo: HLO **text** -> `HloModuleProto` ->
+//! `XlaComputation` -> `PjRtClient::compile`. Parameters upload once as
+//! device buffers; per step only the small token/length arrays and the
+//! assembled KV batch cross the host-device boundary.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::{Batcher, Manifest, RuntimeError};
+
+/// One sequence's host-side KV cache (f32, layout [L, H, S, D]).
+#[derive(Debug, Clone)]
+pub struct SeqKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Valid entries (current sequence length).
+    pub len: usize,
+}
+
+impl SeqKv {
+    pub fn empty(manifest: &Manifest) -> SeqKv {
+        let n = manifest.kv_seq_elems();
+        SeqKv { k: vec![0.0; n], v: vec![0.0; n], len: 0 }
+    }
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    param_bufs: Vec<xla::PjRtBuffer>,
+    decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// batch -> (padded seq len, executable)
+    prefill_exes: BTreeMap<usize, (usize, xla::PjRtLoadedExecutable)>,
+    pub batcher: Batcher,
+    /// Executions performed (perf accounting).
+    pub steps_executed: std::cell::Cell<u64>,
+}
+
+impl Engine {
+    /// Load manifest + params + compile every artifact in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine, RuntimeError> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+
+        // Parameters: one flat f32 blob, split per the manifest spec.
+        let blob = std::fs::read(dir.join("params.bin"))?;
+        if blob.len() != manifest.num_params * 4 {
+            return Err(RuntimeError::Manifest(format!(
+                "params.bin is {} bytes, expected {}",
+                blob.len(),
+                manifest.num_params * 4
+            )));
+        }
+        // Decode LE f32s (copy: Vec<u8> gives no alignment guarantee).
+        let floats: Vec<f32> = blob
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        // NOTE: upload via buffer_from_host_buffer — the crate's
+        // buffer_from_host_literal miscomputes buffer sizes after the first
+        // call on this xla_extension build (see EXPERIMENTS.md §Notes).
+        let mut param_bufs = Vec::with_capacity(manifest.param_spec.len());
+        let mut offset = 0usize;
+        for (name, shape) in &manifest.param_spec {
+            let n: usize = shape.iter().product();
+            let buf = client
+                .buffer_from_host_buffer(&floats[offset..offset + n], shape, None)
+                .map_err(|e| {
+                    RuntimeError::Manifest(format!("param {name}: {e}"))
+                })?;
+            param_bufs.push(buf);
+            offset += n;
+        }
+
+        let mut decode_exes = BTreeMap::new();
+        let mut prefill_exes = BTreeMap::new();
+        for art in &manifest.artifacts {
+            let proto =
+                xla::HloModuleProto::from_text_file(dir.join(&art.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            match art.kind.as_str() {
+                "decode" => {
+                    decode_exes.insert(art.batch, exe);
+                }
+                "prefill" => {
+                    prefill_exes.insert(
+                        art.batch,
+                        (art.seq.unwrap_or(manifest.max_seq), exe),
+                    );
+                }
+                other => {
+                    return Err(RuntimeError::Manifest(format!(
+                        "unknown artifact kind '{other}'"
+                    )))
+                }
+            }
+        }
+        if decode_exes.is_empty() {
+            return Err(RuntimeError::NoExecutable("decode".into(), 1));
+        }
+        let batcher = Batcher::new(decode_exes.keys().copied().collect());
+        Ok(Engine {
+            client,
+            manifest,
+            param_bufs,
+            decode_exes,
+            prefill_exes,
+            batcher,
+            steps_executed: std::cell::Cell::new(0),
+        })
+    }
+
+    fn upload_f32(
+        &self,
+        data: &[f32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer, RuntimeError> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn upload_i32(
+        &self,
+        data: &[i32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer, RuntimeError> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Prefill a wave of prompts. Returns per-sequence (last-token logits,
+    /// fresh KV). Prompts longer than the compiled window are truncated to
+    /// its tail; empty prompts get a single zero token.
+    pub fn prefill(
+        &self,
+        prompts: &[Vec<u32>],
+    ) -> Result<Vec<(Vec<f32>, SeqKv)>, RuntimeError> {
+        let n = prompts.len();
+        if n == 0 {
+            return Ok(vec![]);
+        }
+        // Smallest compiled prefill batch that fits.
+        let (&batch, &(seq, ref exe)) = self
+            .prefill_exes
+            .iter()
+            .find(|(b, _)| **b >= n)
+            .or_else(|| self.prefill_exes.iter().next_back())
+            .ok_or_else(|| RuntimeError::NoExecutable("prefill".into(), n))?;
+        if batch < n {
+            // Split into waves recursively.
+            let mut out = Vec::with_capacity(n);
+            for chunk in prompts.chunks(batch) {
+                out.extend(self.prefill(&chunk.to_vec())?);
+            }
+            return Ok(out);
+        }
+
+        let mut tokens = vec![0i32; batch * seq];
+        let mut lens = vec![1i32; batch]; // padded rows: len 1, ignored
+        for (b, p) in prompts.iter().enumerate() {
+            let tail = if p.len() > seq { &p[p.len() - seq..] } else { p };
+            for (s, t) in tail.iter().enumerate() {
+                tokens[b * seq + s] = *t as i32;
+            }
+            lens[b] = tail.len().max(1) as i32;
+        }
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        let tok_buf = self.upload_i32(&tokens, &[batch, seq])?;
+        let len_buf = self.upload_i32(&lens, &[batch])?;
+        args.push(&tok_buf);
+        args.push(&len_buf);
+
+        let result = exe.execute_b(&args)?;
+        self.steps_executed.set(self.steps_executed.get() + 1);
+        let tuple = result[0][0].to_literal_sync()?;
+        let (logits_l, k_l, v_l) = tuple.to_tuple3()?;
+        let logits: Vec<f32> = logits_l.to_vec()?;
+        let k: Vec<f32> = k_l.to_vec()?;
+        let v: Vec<f32> = v_l.to_vec()?;
+
+        let m = &self.manifest;
+        let vocab = m.vocab;
+        let per_layer = m.kv_layer_elems();
+        let mut out = Vec::with_capacity(n);
+        for (b, p) in prompts.iter().enumerate() {
+            let mut kv = SeqKv::empty(m);
+            // Batch KV layout [L, B, H, S, D] -> per-seq [L, H, S, D].
+            for l in 0..m.n_layers {
+                let src = (l * batch + b) * per_layer;
+                let dst = l * per_layer;
+                kv.k[dst..dst + per_layer]
+                    .copy_from_slice(&k[src..src + per_layer]);
+                kv.v[dst..dst + per_layer]
+                    .copy_from_slice(&v[src..src + per_layer]);
+            }
+            kv.len = lens[b] as usize;
+            let _ = p;
+            out.push((logits[b * vocab..(b + 1) * vocab].to_vec(), kv));
+        }
+        Ok(out)
+    }
+
+    /// One decode step for a wave of sequences (continuous batch). `seqs[i]`
+    /// consumes `tokens[i]` and its KV advances by one. Returns per-sequence
+    /// next-token logits.
+    pub fn decode_step(
+        &self,
+        seqs: &mut [&mut SeqKv],
+        tokens: &[u32],
+    ) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        let n = seqs.len();
+        assert_eq!(n, tokens.len());
+        if n == 0 {
+            return Ok(vec![]);
+        }
+        let batch = self.batcher.pick(n);
+        let Some(exe) = self.decode_exes.get(&batch) else {
+            return Err(RuntimeError::NoExecutable("decode".into(), n));
+        };
+        if batch < n {
+            // Shouldn't happen (pick clamps to max; waves split upstream).
+            return Err(RuntimeError::NoExecutable("decode".into(), n));
+        }
+
+        let m = &self.manifest;
+        let per_layer = m.kv_layer_elems();
+        let kv_elems = m.n_layers * batch * per_layer;
+        let mut k_batch = vec![0f32; kv_elems];
+        let mut v_batch = vec![0f32; kv_elems];
+        for (b, s) in seqs.iter().enumerate() {
+            for l in 0..m.n_layers {
+                let dst = (l * batch + b) * per_layer;
+                let src = l * per_layer;
+                k_batch[dst..dst + per_layer]
+                    .copy_from_slice(&s.k[src..src + per_layer]);
+                v_batch[dst..dst + per_layer]
+                    .copy_from_slice(&s.v[src..src + per_layer]);
+            }
+        }
+        let mut tok = vec![0i32; batch];
+        let mut lens = vec![0i32; batch];
+        for (b, s) in seqs.iter().enumerate() {
+            tok[b] = tokens[b] as i32;
+            lens[b] = s.len.min(m.max_seq - 1) as i32;
+        }
+
+        let dims = [m.n_layers, batch, m.n_heads, m.max_seq, m.d_head];
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        let k_buf = self.upload_f32(&k_batch, &dims)?;
+        let v_buf = self.upload_f32(&v_batch, &dims)?;
+        let tok_buf = self.upload_i32(&tok, &[batch])?;
+        let len_buf = self.upload_i32(&lens, &[batch])?;
+        args.push(&k_buf);
+        args.push(&v_buf);
+        args.push(&tok_buf);
+        args.push(&len_buf);
+
+        let result = exe.execute_b(&args)?;
+        self.steps_executed.set(self.steps_executed.get() + 1);
+        let tuple = result[0][0].to_literal_sync()?;
+        let (logits_l, k_l, v_l) = tuple.to_tuple3()?;
+        let logits: Vec<f32> = logits_l.to_vec()?;
+        let k: Vec<f32> = k_l.to_vec()?;
+        let v: Vec<f32> = v_l.to_vec()?;
+
+        let vocab = m.vocab;
+        let mut out = Vec::with_capacity(n);
+        for (b, s) in seqs.iter_mut().enumerate() {
+            for l in 0..m.n_layers {
+                let src = (l * batch + b) * per_layer;
+                let dst = l * per_layer;
+                s.k[dst..dst + per_layer]
+                    .copy_from_slice(&k[src..src + per_layer]);
+                s.v[dst..dst + per_layer]
+                    .copy_from_slice(&v[src..src + per_layer]);
+            }
+            s.len = (s.len + 1).min(m.max_seq);
+            out.push(logits[b * vocab..(b + 1) * vocab].to_vec());
+        }
+        Ok(out)
+    }
+
+    /// Greedy generation helper: prefill a prompt then decode `max_new`
+    /// tokens. Returns the generated token ids.
+    pub fn generate(
+        &self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<Vec<u32>, RuntimeError> {
+        let mut result = self.prefill(&[prompt.to_vec()])?;
+        let (logits, mut kv) = result.remove(0);
+        let mut out = Vec::with_capacity(max_new);
+        let mut next = argmax(&logits);
+        out.push(next);
+        for _ in 1..max_new {
+            if kv.len >= self.manifest.max_seq - 1 {
+                break;
+            }
+            let logits =
+                self.decode_step(&mut [&mut kv], &[next])?.remove(0);
+            next = argmax(&logits);
+            out.push(next);
+        }
+        Ok(out)
+    }
+}
+
+/// Index of the max logit.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, v) in logits.iter().enumerate() {
+        if *v > best_v {
+            best_v = *v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn engine_loads_and_generates() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(&dir).unwrap();
+        assert!(engine.manifest.vocab > 0);
+        let toks = engine.generate(&[1, 2, 3, 4], 8).unwrap();
+        assert_eq!(toks.len(), 8);
+        for t in &toks {
+            assert!((*t as usize) < engine.manifest.vocab);
+        }
+        // Deterministic (greedy + fixed params).
+        let toks2 = engine.generate(&[1, 2, 3, 4], 8).unwrap();
+        assert_eq!(toks, toks2);
+    }
+
+    #[test]
+    fn decode_chain_matches_prefill() {
+        // prefill(p + [t]) last-logits == prefill(p) then decode_step(t).
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(&dir).unwrap();
+        let prompt = vec![5u32, 9, 17, 33];
+        let extended: Vec<u32> = prompt
+            .iter()
+            .copied()
+            .chain(std::iter::once(44u32))
+            .collect();
+
+        let mut r1 = engine.prefill(&[prompt.clone()]).unwrap();
+        let (_, mut kv) = r1.remove(0);
+        let step_logits =
+            engine.decode_step(&mut [&mut kv], &[44]).unwrap().remove(0);
+
+        let mut r2 = engine.prefill(&[extended]).unwrap();
+        let (full_logits, kv2) = r2.remove(0);
+        assert_eq!(kv.len, kv2.len);
+        let max_diff = step_logits
+            .iter()
+            .zip(&full_logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 1e-3, "decode vs prefill diverge: {max_diff}");
+    }
+
+    #[test]
+    fn batched_decode_matches_solo() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(&dir).unwrap();
+        let prompts = vec![vec![1u32, 2, 3], vec![10u32, 20, 30, 40, 50]];
+        let mut waves = engine.prefill(&prompts).unwrap();
+        let (_, mut kv_a) = waves.remove(0);
+        let (_, mut kv_b) = waves.remove(0);
+        let mut kv_a2 = kv_a.clone();
+        let mut kv_b2 = kv_b.clone();
+
+        // Packed step.
+        let packed = engine
+            .decode_step(&mut [&mut kv_a, &mut kv_b], &[7, 8])
+            .unwrap();
+        // Solo steps.
+        let solo_a = engine.decode_step(&mut [&mut kv_a2], &[7]).unwrap();
+        let solo_b = engine.decode_step(&mut [&mut kv_b2], &[8]).unwrap();
+
+        for (p, s) in [(&packed[0], &solo_a[0]), (&packed[1], &solo_b[0])] {
+            let max_diff = p
+                .iter()
+                .zip(s.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_diff < 1e-3, "packed vs solo diverge: {max_diff}");
+        }
+    }
+}

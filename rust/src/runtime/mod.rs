@@ -1,0 +1,231 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`) and serve the transformer from Rust — Python is
+//! never on the request path.
+//!
+//! * [`Manifest`] — parses `artifacts/manifest.json` (model config, param
+//!   spec, executable table).
+//! * [`Engine`] — PJRT CPU client; compiles each HLO module once, uploads
+//!   the parameters once as device buffers, then serves `prefill` /
+//!   `decode_step` calls. KV caches live host-side per sequence
+//!   ([`SeqKv`]) and are assembled into fixed-batch device inputs per step —
+//!   this is what lets the continuous batcher pack unrelated requests at
+//!   different decode positions into one compiled executable.
+//! * [`Batcher`] — picks the smallest compiled batch size that fits a wave
+//!   of pending sequences (the fixed-shape analogue of vLLM's batching).
+
+pub mod engine;
+
+pub use engine::{Engine, SeqKv};
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub num_params: usize,
+    pub seed: u64,
+    /// (name, shape) in params.bin order.
+    pub param_spec: Vec<(String, Vec<usize>)>,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub kind: String,
+    pub batch: usize,
+    /// Padded prompt length (prefill artifacts only).
+    pub seq: Option<usize>,
+    pub path: String,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest: {0}")]
+    Manifest(String),
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("no compiled executable for kind={0} batch>={1}")]
+    NoExecutable(String, usize),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, RuntimeError> {
+        use crate::util::json::Json;
+        let j = Json::parse(text)
+            .map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let m = j.get("model");
+        let field = |k: &str| {
+            m.get(k)
+                .as_usize()
+                .ok_or_else(|| RuntimeError::Manifest(format!("model.{k}")))
+        };
+        let param_spec = j
+            .get("param_spec")
+            .as_arr()
+            .ok_or_else(|| RuntimeError::Manifest("param_spec".into()))?
+            .iter()
+            .map(|p| {
+                let name = p.get("name").as_str().unwrap_or("").to_string();
+                let shape = p
+                    .get("shape")
+                    .as_arr()
+                    .map(|a| {
+                        a.iter().filter_map(|d| d.as_usize()).collect()
+                    })
+                    .unwrap_or_default();
+                (name, shape)
+            })
+            .collect();
+        let artifacts = j
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| RuntimeError::Manifest("artifacts".into()))?
+            .iter()
+            .map(|a| ArtifactInfo {
+                kind: a.get("kind").as_str().unwrap_or("").to_string(),
+                batch: a.get("batch").as_usize().unwrap_or(1),
+                seq: a.get("seq").as_usize(),
+                path: a.get("path").as_str().unwrap_or("").to_string(),
+            })
+            .collect();
+        Ok(Manifest {
+            vocab: field("vocab")?,
+            d_model: field("d_model")?,
+            n_heads: field("n_heads")?,
+            d_head: field("d_head")?,
+            n_layers: field("n_layers")?,
+            d_ff: field("d_ff")?,
+            max_seq: field("max_seq")?,
+            num_params: field("num_params")?,
+            seed: m.get("seed").as_u64().unwrap_or(0),
+            param_spec,
+            artifacts,
+        })
+    }
+
+    pub fn load(dir: &std::path::Path) -> Result<Manifest, RuntimeError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Manifest::parse(&text)
+    }
+
+    /// Elements in one sequence's KV cache per layer: H * S * D.
+    pub fn kv_layer_elems(&self) -> usize {
+        self.n_heads * self.max_seq * self.d_head
+    }
+
+    /// Elements in one sequence's full KV half (k or v): L * H * S * D.
+    pub fn kv_seq_elems(&self) -> usize {
+        self.n_layers * self.kv_layer_elems()
+    }
+}
+
+/// Picks a compiled batch size for a wave of pending sequences.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    /// Compiled batch sizes, ascending (e.g. [1, 2, 4, 8]).
+    sizes: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(mut sizes: Vec<usize>) -> Batcher {
+        sizes.sort_unstable();
+        sizes.dedup();
+        assert!(!sizes.is_empty(), "need at least one compiled batch size");
+        Batcher { sizes }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Smallest compiled size that fits `n` sequences, or the max size if
+    /// `n` exceeds it (the caller splits into waves).
+    pub fn pick(&self, n: usize) -> usize {
+        for s in &self.sizes {
+            if *s >= n {
+                return *s;
+            }
+        }
+        self.max_batch()
+    }
+
+    /// Split `n` pending sequences into waves of compiled sizes, greedily
+    /// largest-first (minimizes number of executions).
+    pub fn waves(&self, mut n: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        while n > 0 {
+            if n >= self.max_batch() {
+                out.push(self.max_batch());
+                n -= self.max_batch();
+            } else {
+                out.push(self.pick(n));
+                n = 0;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"config": "test", "vocab": 64, "d_model": 32, "n_heads": 2,
+                "d_head": 16, "n_layers": 2, "d_ff": 64, "max_seq": 32,
+                "num_params": 22016, "seed": 0},
+      "param_spec": [{"name": "embed", "shape": [64, 32]},
+                     {"name": "pos_embed", "shape": [32, 32]}],
+      "artifacts": [
+        {"kind": "decode", "batch": 1, "seq": null, "path": "decode_b1.hlo.txt",
+         "num_param_args": 29, "extra_args": [], "results": []},
+        {"kind": "prefill", "batch": 4, "seq": 32, "path": "prefill_b4_s32.hlo.txt",
+         "num_param_args": 29, "extra_args": [], "results": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.vocab, 64);
+        assert_eq!(m.n_layers, 2);
+        assert_eq!(m.param_spec.len(), 2);
+        assert_eq!(m.param_spec[0].1, vec![64, 32]);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts[1].seq, Some(32));
+        assert_eq!(m.kv_layer_elems(), 2 * 32 * 16);
+        assert_eq!(m.kv_seq_elems(), 2 * 2 * 32 * 16);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn batcher_pick_and_waves() {
+        let b = Batcher::new(vec![8, 1, 4, 2, 2]);
+        assert_eq!(b.pick(1), 1);
+        assert_eq!(b.pick(3), 4);
+        assert_eq!(b.pick(8), 8);
+        assert_eq!(b.pick(20), 8);
+        assert_eq!(b.waves(0), Vec::<usize>::new());
+        assert_eq!(b.waves(3), vec![4]);
+        assert_eq!(b.waves(19), vec![8, 8, 4]);
+        assert_eq!(b.max_batch(), 8);
+    }
+}

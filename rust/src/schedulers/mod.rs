@@ -1,0 +1,303 @@
+//! Baseline scheduling strategies compared against WWW.Serve in Figure 4 /
+//! Table 2.
+//!
+//! * **Single** — each node serves only its own users; no cooperation. The
+//!   paper's "single-node deployment".
+//! * **Centralized** — an omniscient global dispatcher places every request
+//!   on the node with the least normalized outstanding work (it sees exact
+//!   queue depths everywhere, pays no probe round-trips and needs no
+//!   credits — the upper-bound baseline the paper's decentralized scheduler
+//!   approaches).
+//!
+//! Both run on the same `SimBackend`s and workload traces as the
+//! decentralized [`crate::sim::World`], so the comparison isolates the
+//! scheduling strategy.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::backend::{Backend, Profile, SimBackend};
+use crate::metrics::Recorder;
+use crate::types::{ExecKind, NodeId, Request, RequestRecord, Time};
+use crate::util::rng::Rng;
+use crate::workload::Generator;
+
+/// Strategy selector used by benches and the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Single,
+    Centralized,
+    Decentralized,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Single => "single",
+            Strategy::Centralized => "centralized",
+            Strategy::Decentralized => "decentralized",
+        }
+    }
+}
+
+/// One node of the baseline harness.
+pub struct BaselineNode {
+    pub backend: SimBackend,
+}
+
+#[derive(Debug)]
+enum Ev {
+    Arrival { origin: usize, req: Request },
+    Wake { node: usize },
+}
+
+struct Queued {
+    t: Time,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Queued {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Queued {}
+impl PartialOrd for Queued {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Queued {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Shared baseline engine. `centralized == false` pins every request to its
+/// origin node (Single); `true` lets the global dispatcher place it.
+pub struct BaselineSim {
+    nodes: Vec<BaselineNode>,
+    queue: BinaryHeap<Reverse<Queued>>,
+    seq: u64,
+    rng: Rng,
+    centralized: bool,
+    net_latency: (f64, f64),
+    pub recorder: Recorder,
+}
+
+impl BaselineSim {
+    pub fn new(
+        profiles: Vec<Profile>,
+        generators: Vec<Option<Generator>>,
+        centralized: bool,
+        seed: u64,
+    ) -> BaselineSim {
+        assert_eq!(profiles.len(), generators.len());
+        let mut rng = Rng::new(seed);
+        let mut sim = BaselineSim {
+            nodes: profiles
+                .into_iter()
+                .map(|p| BaselineNode { backend: SimBackend::new(p) })
+                .collect(),
+            queue: BinaryHeap::new(),
+            seq: 0,
+            rng: rng.fork(0xBA5E),
+            centralized,
+            net_latency: (0.02, 0.08),
+            recorder: Recorder::new(),
+        };
+        for (i, g) in generators.into_iter().enumerate() {
+            if let Some(mut g) = g {
+                let mut grng = rng.fork(1000 + i as u64);
+                for req in g.trace(&mut grng) {
+                    sim.push(req.submitted_at, Ev::Arrival { origin: i, req });
+                }
+            }
+        }
+        sim
+    }
+
+    fn push(&mut self, t: Time, ev: Ev) {
+        self.seq += 1;
+        self.queue.push(Reverse(Queued { t, seq: self.seq, ev }));
+    }
+
+    fn latency(&mut self) -> Time {
+        let (lo, hi) = self.net_latency;
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Least normalized outstanding work. The score estimates seconds of
+    /// queued generation per unit of aggregate decode capacity.
+    fn pick_node(&self, origin: usize) -> usize {
+        if !self.centralized {
+            return origin;
+        }
+        let mut best = origin;
+        let mut best_score = f64::INFINITY;
+        for (i, n) in self.nodes.iter().enumerate() {
+            let outstanding =
+                (n.backend.running_len() + n.backend.queue_len()) as f64;
+            let capacity = n.backend.profile().max_agg_decode_tok_s;
+            let score = (outstanding + 1.0) / capacity;
+            if score < best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        best
+    }
+
+    pub fn run_until(&mut self, horizon: Time) {
+        // Baselines run the queue dry (all arrivals are < horizon; we let
+        // in-flight work finish so latency stats cover every request).
+        while let Some(Reverse(q)) = self.queue.pop() {
+            let now = q.t;
+            match q.ev {
+                Ev::Arrival { origin, req } => {
+                    let target = self.pick_node(origin);
+                    let (submit_time, remote) = if target != origin {
+                        (now + self.latency(), true)
+                    } else {
+                        (now, false)
+                    };
+                    let rec_meta = (origin, target, remote);
+                    self.nodes[target].backend.submit(
+                        req.clone(),
+                        if remote { ExecKind::Delegated } else { ExecKind::Local },
+                        submit_time,
+                    );
+                    let _ = rec_meta;
+                    if let Some(t) = self.nodes[target].backend.next_event() {
+                        self.push(t, Ev::Wake { node: target });
+                    }
+                }
+                Ev::Wake { node } => {
+                    let completions = self.nodes[node].backend.advance(now);
+                    for c in completions {
+                        let remote = c.kind == ExecKind::Delegated;
+                        let back = if remote { self.latency() } else { 0.0 };
+                        self.recorder.record(RequestRecord {
+                            id: c.request.id,
+                            origin: c.request.id.origin,
+                            executor: NodeId(node as u32),
+                            kind: c.kind,
+                            prompt_tokens: c.request.prompt_tokens,
+                            output_tokens: c.request.output_tokens,
+                            submitted_at: c.request.submitted_at,
+                            completed_at: c.finished_at + back,
+                            slo_deadline: c.request.slo_deadline,
+                            synthetic: c.request.synthetic,
+                        });
+                    }
+                    if let Some(t) = self.nodes[node].backend.next_event() {
+                        self.push(t, Ev::Wake { node });
+                    }
+                }
+            }
+            let _ = horizon;
+        }
+    }
+
+    pub fn node_backend(&self, i: usize) -> &SimBackend {
+        &self.nodes[i].backend
+    }
+}
+
+/// Run the Single strategy over a workload.
+pub fn run_single(
+    profiles: Vec<Profile>,
+    generators: Vec<Option<Generator>>,
+    horizon: Time,
+    seed: u64,
+) -> Recorder {
+    let mut sim = BaselineSim::new(profiles, generators, false, seed);
+    sim.run_until(horizon);
+    sim.recorder
+}
+
+/// Run the Centralized strategy over a workload.
+pub fn run_centralized(
+    profiles: Vec<Profile>,
+    generators: Vec<Option<Generator>>,
+    horizon: Time,
+    seed: u64,
+) -> Recorder {
+    let mut sim = BaselineSim::new(profiles, generators, true, seed);
+    sim.run_until(horizon);
+    sim.recorder
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Phase;
+
+    fn gens(n: usize, ia: f64, horizon: f64) -> Vec<Option<Generator>> {
+        (0..n)
+            .map(|i| {
+                Some(Generator::new(
+                    NodeId(i as u32),
+                    vec![Phase::new(0.0, horizon, ia)],
+                ))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_serves_everything_locally() {
+        let profiles = vec![Profile::test(40.0, 8); 3];
+        let rec = run_single(profiles, gens(3, 5.0, 100.0), 100.0, 1);
+        assert!(rec.len() > 20);
+        for r in rec.all() {
+            assert_eq!(r.origin, r.executor);
+            assert_eq!(r.kind, ExecKind::Local);
+        }
+    }
+
+    #[test]
+    fn centralized_offloads_from_hot_node() {
+        // Node 0 gets a flood; nodes 1-2 idle. Centralized must spread.
+        let profiles = vec![Profile::test(40.0, 4); 3];
+        let mut generators = gens(1, 0.5, 100.0);
+        generators.push(None);
+        generators.push(None);
+        let rec = run_centralized(profiles, generators, 100.0, 2);
+        let served = rec.served_by();
+        assert!(served.len() >= 2, "no spreading: {served:?}");
+    }
+
+    #[test]
+    fn centralized_beats_single_under_skew() {
+        // Heavy skew on node 0; total capacity is plentiful.
+        let profiles = vec![Profile::test(40.0, 4); 4];
+        let mut generators = gens(1, 1.0, 200.0);
+        for _ in 1..4 {
+            generators.push(None);
+        }
+        let single =
+            run_single(profiles.clone(), generators.clone(), 200.0, 3);
+        let central = run_centralized(profiles, generators, 200.0, 3);
+        assert!(
+            central.mean_latency() < single.mean_latency(),
+            "centralized {} vs single {}",
+            central.mean_latency(),
+            single.mean_latency()
+        );
+        assert!(central.slo_attainment() >= single.slo_attainment());
+    }
+
+    #[test]
+    fn deterministic() {
+        let profiles = vec![Profile::test(40.0, 4); 3];
+        let a = run_centralized(profiles.clone(), gens(3, 2.0, 100.0), 100.0, 9)
+            .mean_latency();
+        let b = run_centralized(profiles, gens(3, 2.0, 100.0), 100.0, 9)
+            .mean_latency();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,143 @@
+//! Core identifiers and request/response types shared by every layer.
+
+use std::fmt;
+
+/// Simulation / coordination time in seconds (f64 keeps Poisson/exponential
+/// math simple; the TCP runner maps it onto `Instant`).
+pub type Time = f64;
+
+/// Credits are integer micro-units to keep ledger arithmetic exact.
+pub type Credits = u64;
+
+/// 1 credit = 1_000_000 micro-credits.
+pub const CREDIT: Credits = 1_000_000;
+
+/// Stable node identity (index into the world's node table; the anonymous
+/// network identity is `crypto::NodeKey`'s public hash, carried separately).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u32);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// Globally-unique request id: (origin node, per-origin sequence number).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId {
+    pub origin: NodeId,
+    pub seq: u64,
+}
+
+impl fmt::Display for RequestId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}#{}", self.origin, self.seq)
+    }
+}
+
+/// An inference request as it travels through the network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    /// Token count of the prompt.
+    pub prompt_tokens: u32,
+    /// Tokens the model will generate (drawn by the workload generator; in
+    /// the real-backend path this is the requested max_new_tokens).
+    pub output_tokens: u32,
+    /// Wall/sim time the user submitted it at its origin node.
+    pub submitted_at: Time,
+    /// Latency threshold for SLO accounting (seconds from submission).
+    pub slo_deadline: Time,
+    /// True if this request was created by the duel mechanism (a challenger
+    /// copy or judge evaluation) rather than by a user — excluded from
+    /// user-facing SLO metrics, counted for overhead accounting (§7.1).
+    pub synthetic: bool,
+    /// Raw prompt tokens (real-backend path only; empty in pure simulation).
+    pub payload: Vec<u32>,
+}
+
+/// How a completed request was executed — used by metrics and the credit
+/// system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecKind {
+    /// Served on the origin node's own backend.
+    Local,
+    /// Served by a peer after PoS delegation.
+    Delegated,
+    /// One of the two executions of a duel request.
+    Duel,
+    /// A judge evaluation run.
+    Judge,
+}
+
+/// A completed response travelling back to the origin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: RequestId,
+    pub executor: NodeId,
+    /// Hidden quality draw of this response (simulation stand-in for the
+    /// actual text quality; see DESIGN.md §2). Judges observe it noisily.
+    pub quality: f64,
+    /// When the executor finished it.
+    pub finished_at: Time,
+    /// Generated tokens (real-backend path only).
+    pub tokens: Vec<u32>,
+}
+
+/// Per-request lifecycle record kept by the metrics layer.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: RequestId,
+    pub origin: NodeId,
+    pub executor: NodeId,
+    pub kind: ExecKind,
+    pub prompt_tokens: u32,
+    pub output_tokens: u32,
+    pub submitted_at: Time,
+    pub completed_at: Time,
+    pub slo_deadline: Time,
+    pub synthetic: bool,
+}
+
+impl RequestRecord {
+    pub fn latency(&self) -> Time {
+        self.completed_at - self.submitted_at
+    }
+
+    pub fn slo_met(&self) -> bool {
+        self.latency() <= self.slo_deadline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_record_slo() {
+        let rec = RequestRecord {
+            id: RequestId { origin: NodeId(0), seq: 1 },
+            origin: NodeId(0),
+            executor: NodeId(1),
+            kind: ExecKind::Delegated,
+            prompt_tokens: 100,
+            output_tokens: 200,
+            submitted_at: 10.0,
+            completed_at: 40.0,
+            slo_deadline: 35.0,
+            synthetic: false,
+        };
+        assert!((rec.latency() - 30.0).abs() < 1e-9);
+        assert!(rec.slo_met());
+        let late = RequestRecord { completed_at: 50.0, ..rec.clone() };
+        assert!(!late.slo_met());
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(NodeId(3).to_string(), "n3");
+        let id = RequestId { origin: NodeId(2), seq: 17 };
+        assert_eq!(id.to_string(), "n2#17");
+    }
+}

@@ -1,0 +1,56 @@
+//! Small in-repo substrates standing in for unavailable third-party crates
+//! (offline image — see DESIGN.md §8): deterministic RNG + samplers, JSON,
+//! and hex encoding.
+
+pub mod json;
+pub mod rng;
+
+/// Lower-case hex encoding (stands in for the `hex` crate).
+pub fn hex_encode(bytes: &[u8]) -> String {
+    const TABLE: &[u8; 16] = b"0123456789abcdef";
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        out.push(TABLE[(b >> 4) as usize] as char);
+        out.push(TABLE[(b & 0xf) as usize] as char);
+    }
+    out
+}
+
+/// Hex decode; returns None on odd length or non-hex characters.
+pub fn hex_decode(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let nib = |c: u8| -> Option<u8> {
+        match c {
+            b'0'..=b'9' => Some(c - b'0'),
+            b'a'..=b'f' => Some(c - b'a' + 10),
+            b'A'..=b'F' => Some(c - b'A' + 10),
+            _ => None,
+        }
+    };
+    let b = s.as_bytes();
+    (0..s.len() / 2)
+        .map(|i| Some(nib(b[2 * i])? << 4 | nib(b[2 * i + 1])?))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_roundtrip() {
+        let data = [0u8, 1, 15, 16, 127, 128, 255];
+        let s = hex_encode(&data);
+        assert_eq!(s, "00010f107f80ff");
+        assert_eq!(hex_decode(&s).unwrap(), data);
+        assert_eq!(hex_decode("00010F107F80FF").unwrap(), data);
+    }
+
+    #[test]
+    fn hex_decode_invalid() {
+        assert!(hex_decode("0").is_none());
+        assert!(hex_decode("zz").is_none());
+    }
+}

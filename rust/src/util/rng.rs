@@ -1,0 +1,413 @@
+//! Deterministic PRNG + distribution sampling.
+//!
+//! The cargo registry in this image has no `rand`/`rand_distr`, so this module
+//! implements the pieces WWW.Serve needs from scratch: a xoshiro256++ engine
+//! seeded via splitmix64, and the samplers used by the workload generator and
+//! the PoS scheduler (uniform, exponential, Poisson, normal, log-normal,
+//! categorical). Everything is deterministic in the seed — the whole simulator
+//! replays bit-identically, which the integration tests rely on.
+
+/// xoshiro256++ — fast, high-quality, 256-bit state.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed the generator; any u64 is fine (splitmix64 whitens it).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// Derive an independent stream (for per-node RNGs from a world seed).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift; bias is negligible for our n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with the given rate (mean = 1/rate).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        let u = 1.0 - self.f64(); // avoid ln(0)
+        -u.ln() / rate
+    }
+
+    /// Standard normal via Box–Muller (single value; we don't cache pairs to
+    /// keep replay behaviour obvious).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal parameterized by the *target* mean and sigma of the
+    /// underlying normal (a convenient form for length distributions).
+    pub fn lognormal_mean(&mut self, target_mean: f64, sigma: f64) -> f64 {
+        // If X = exp(N(mu, sigma)), E[X] = exp(mu + sigma^2/2).
+        let mu = target_mean.ln() - sigma * sigma / 2.0;
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Poisson(lambda) — inversion for small lambda, normal approx for large.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        debug_assert!(lambda >= 0.0);
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let v = self.normal_ms(lambda, lambda.sqrt()).round();
+            if v < 0.0 {
+                0
+            } else {
+                v as u64
+            }
+        }
+    }
+
+    /// Sample an index proportionally to `weights` (linear scan).
+    /// Returns None if all weights are zero/negative.
+    pub fn weighted(&mut self, weights: &[f64]) -> Option<usize> {
+        let total: f64 = weights.iter().filter(|w| **w > 0.0).sum();
+        if total <= 0.0 {
+            return None;
+        }
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if *w > 0.0 {
+                x -= w;
+                if x <= 0.0 {
+                    return Some(i);
+                }
+            }
+        }
+        // Floating point slack: return the last positive entry.
+        weights.iter().rposition(|w| *w > 0.0)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// k distinct indices from [0, n), weighted-without-replacement if
+    /// weights given (used for judge selection).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k.min(n));
+        idx
+    }
+}
+
+/// Alias-method sampler: O(n) build, O(1) sample. Used on the PoS hot path
+/// when the stake table is large (see benches/micro.rs for the crossover).
+#[derive(Debug, Clone)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights. Returns None if no positive weight.
+    pub fn new(weights: &[f64]) -> Option<AliasTable> {
+        let n = weights.len();
+        let total: f64 = weights.iter().filter(|w| **w > 0.0).sum();
+        if n == 0 || total <= 0.0 {
+            return None;
+        }
+        let scale = n as f64 / total;
+        let mut prob: Vec<f64> = weights.iter().map(|w| w.max(0.0) * scale).collect();
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, p) in prob.iter().enumerate() {
+            if *p < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s] = l;
+            prob[l] = (prob[l] + prob[s]) - 1.0;
+            if prob[l] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // Leftovers are 1.0 up to rounding.
+        Some(AliasTable { prob, alias })
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_replay() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(3);
+        for n in [1usize, 2, 7, 100] {
+            for _ in 0..1000 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.exp(0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn poisson_small_mean() {
+        let mut r = Rng::new(17);
+        let n = 100_000;
+        let mean: f64 =
+            (0..n).map(|_| r.poisson(3.5) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 3.5).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_large_mean_normal_path() {
+        let mut r = Rng::new(19);
+        let n = 50_000;
+        let mean: f64 =
+            (0..n).map(|_| r.poisson(120.0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 120.0).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn lognormal_target_mean() {
+        let mut r = Rng::new(23);
+        let n = 300_000;
+        let mean: f64 = (0..n)
+            .map(|_| r.lognormal_mean(100.0, 0.5))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 100.0).abs() < 2.0, "mean={mean}");
+    }
+
+    #[test]
+    fn weighted_proportions() {
+        let mut r = Rng::new(29);
+        let w = [1.0, 2.0, 3.0, 0.0];
+        let mut counts = [0usize; 4];
+        let n = 120_000;
+        for _ in 0..n {
+            counts[r.weighted(&w).unwrap()] += 1;
+        }
+        assert_eq!(counts[3], 0);
+        let c0 = counts[0] as f64 / n as f64;
+        let c2 = counts[2] as f64 / n as f64;
+        assert!((c0 - 1.0 / 6.0).abs() < 0.01);
+        assert!((c2 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn weighted_all_zero_is_none() {
+        let mut r = Rng::new(31);
+        assert_eq!(r.weighted(&[0.0, 0.0]), None);
+        assert_eq!(r.weighted(&[]), None);
+    }
+
+    #[test]
+    fn alias_matches_weighted() {
+        let mut r = Rng::new(37);
+        let w = [0.5, 4.5, 2.0, 0.0, 3.0];
+        let table = AliasTable::new(&w).unwrap();
+        let mut counts = [0usize; 5];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[table.sample(&mut r)] += 1;
+        }
+        assert_eq!(counts[3], 0);
+        let total: f64 = w.iter().sum();
+        for (i, wi) in w.iter().enumerate() {
+            let expected = wi / total;
+            let got = counts[i] as f64 / n as f64;
+            assert!(
+                (got - expected).abs() < 0.01,
+                "i={i} got={got} want={expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn alias_empty_and_zero() {
+        assert!(AliasTable::new(&[]).is_none());
+        assert!(AliasTable::new(&[0.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(41);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_distinct_unique() {
+        let mut r = Rng::new(43);
+        for _ in 0..100 {
+            let s = r.sample_distinct(10, 4);
+            assert_eq!(s.len(), 4);
+            let mut d = s.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 4);
+        }
+        assert_eq!(r.sample_distinct(3, 10).len(), 3);
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(5);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

@@ -1,0 +1,178 @@
+//! The paper's experimental settings (Appendix C, Table 3), verbatim.
+//!
+//! Each setting lists per-node (model, GPU, backend) plus the piecewise
+//! Poisson request schedule. These drive Figure 4 and Table 2.
+
+use super::Phase;
+use crate::backend::{Gpu, ModelClass, Profile, ServingStack};
+
+/// Which Table-3 setting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SettingId {
+    S1,
+    S2,
+    S3,
+    S4,
+}
+
+impl SettingId {
+    pub const ALL: [SettingId; 4] =
+        [SettingId::S1, SettingId::S2, SettingId::S3, SettingId::S4];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SettingId::S1 => "Setting 1",
+            SettingId::S2 => "Setting 2",
+            SettingId::S3 => "Setting 3",
+            SettingId::S4 => "Setting 4",
+        }
+    }
+}
+
+/// One row of Table 3.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub model: ModelClass,
+    pub gpu: Gpu,
+    pub stack: ServingStack,
+    pub phases: Vec<Phase>,
+}
+
+impl NodeSpec {
+    pub fn profile(&self) -> Profile {
+        Profile::derive(self.model, self.gpu, self.stack)
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} on {} ({})",
+            self.model.name(),
+            self.gpu.name(),
+            self.stack.name()
+        )
+    }
+}
+
+/// A complete experimental setting.
+#[derive(Debug, Clone)]
+pub struct Setting {
+    pub id: SettingId,
+    pub nodes: Vec<NodeSpec>,
+    /// Experiment horizon (Table 3 schedules end at 750 s).
+    pub horizon: f64,
+}
+
+impl Setting {
+    pub fn get(id: SettingId) -> Setting {
+        use Gpu::*;
+        use ModelClass::*;
+        use ServingStack::*;
+
+        let spec = |model, gpu, stack, phases| NodeSpec {
+            model,
+            gpu,
+            stack,
+            phases,
+        };
+        let ph = |from: f64, to: f64, ia: f64| Phase::new(from, to, ia);
+
+        let nodes = match id {
+            // Table 3, Setting 1: homogeneous Qwen3-8B on ADA6000/SGLang.
+            SettingId::S1 => vec![
+                spec(Qwen3_8B, Ada6000, SgLang,
+                     vec![ph(0.0, 300.0, 5.0), ph(300.0, 750.0, 20.0)]),
+                spec(Qwen3_8B, Ada6000, SgLang, vec![ph(0.0, 750.0, 20.0)]),
+                spec(Qwen3_8B, Ada6000, SgLang, vec![ph(0.0, 750.0, 20.0)]),
+                spec(Qwen3_8B, Ada6000, SgLang,
+                     vec![ph(0.0, 450.0, 20.0), ph(450.0, 750.0, 5.0)]),
+            ],
+            // Setting 2: mixed 8B/4B.
+            SettingId::S2 => vec![
+                spec(Qwen3_8B, Ada6000, SgLang,
+                     vec![ph(0.0, 300.0, 4.0), ph(300.0, 750.0, 20.0)]),
+                spec(Qwen3_8B, Ada6000, SgLang, vec![ph(0.0, 750.0, 20.0)]),
+                spec(Qwen3_4B, Rtx3090, SgLang, vec![ph(0.0, 750.0, 30.0)]),
+                spec(Qwen3_4B, Rtx3090, SgLang,
+                     vec![ph(0.0, 450.0, 30.0), ph(450.0, 750.0, 6.0)]),
+            ],
+            // Setting 3: heterogeneous models, GPUs and stacks.
+            SettingId::S3 => vec![
+                spec(Qwen3_32B, A100x4, SgLang,
+                     vec![ph(0.0, 300.0, 2.0), ph(300.0, 750.0, 6.0)]),
+                spec(Qwen3_8B, L40S, SgLang, vec![ph(0.0, 750.0, 15.0)]),
+                spec(DeepSeekQwen7B, Rtx3090, Vllm, vec![ph(0.0, 750.0, 30.0)]),
+                spec(Llama31_8B, Ada6000, Vllm,
+                     vec![ph(0.0, 450.0, 15.0), ph(450.0, 750.0, 5.0)]),
+            ],
+            // Setting 4: eight nodes, the largest mix.
+            SettingId::S4 => vec![
+                spec(Llama31_8B, L40S, Vllm, vec![ph(0.0, 750.0, 9.0)]),
+                spec(Llama31_8B, L40S, Vllm,
+                     vec![ph(0.0, 450.0, 6.0), ph(450.0, 750.0, 12.0)]),
+                spec(DeepSeekQwen7B, Ada6000, Vllm,
+                     vec![ph(0.0, 300.0, 6.0), ph(300.0, 750.0, 12.0)]),
+                spec(DeepSeekQwen7B, Ada6000, Vllm,
+                     vec![ph(0.0, 450.0, 12.0), ph(450.0, 750.0, 6.0)]),
+                spec(Qwen3_4B, Rtx4090, SgLang, vec![ph(0.0, 750.0, 12.0)]),
+                spec(Qwen3_4B, Rtx4090, SgLang,
+                     vec![ph(0.0, 450.0, 10.0), ph(450.0, 750.0, 20.0)]),
+                spec(Qwen3_4B, Rtx3090, SgLang,
+                     vec![ph(0.0, 300.0, 20.0), ph(300.0, 750.0, 10.0)]),
+                spec(Qwen3_4B, Rtx3090, SgLang,
+                     vec![ph(0.0, 300.0, 20.0), ph(300.0, 750.0, 10.0)]),
+            ],
+        };
+        Setting { id, nodes, horizon: 750.0 }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_counts_match_table3() {
+        assert_eq!(Setting::get(SettingId::S1).num_nodes(), 4);
+        assert_eq!(Setting::get(SettingId::S2).num_nodes(), 4);
+        assert_eq!(Setting::get(SettingId::S3).num_nodes(), 4);
+        assert_eq!(Setting::get(SettingId::S4).num_nodes(), 8);
+    }
+
+    #[test]
+    fn horizons_are_750s() {
+        for id in SettingId::ALL {
+            let s = Setting::get(id);
+            assert_eq!(s.horizon, 750.0);
+            for n in &s.nodes {
+                for p in &n.phases {
+                    assert!(p.to <= 750.0);
+                    assert!(p.from < p.to);
+                    assert!(p.inter_arrival > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn setting1_burst_structure() {
+        // Node 1 bursts early (1/λ = 5 s), node 4 bursts late (1/λ = 5 s).
+        let s = Setting::get(SettingId::S1);
+        assert_eq!(s.nodes[0].phases[0].inter_arrival, 5.0);
+        assert_eq!(s.nodes[3].phases[1].inter_arrival, 5.0);
+        assert_eq!(s.nodes[3].phases[1].from, 450.0);
+    }
+
+    #[test]
+    fn profiles_derivable_for_all_settings() {
+        for id in SettingId::ALL {
+            for n in &Setting::get(id).nodes {
+                let p = n.profile();
+                assert!(p.decode_tok_s > 0.0, "{}", n.describe());
+            }
+        }
+    }
+}

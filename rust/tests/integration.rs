@@ -1,0 +1,231 @@
+//! Integration tests over the whole decentralized stack (sim fabric).
+
+use wwwserve::backend::Profile;
+use wwwserve::coordinator::LedgerManager;
+use wwwserve::policy::{NodePolicy, SystemPolicy};
+use wwwserve::schedulers;
+use wwwserve::sim::{LedgerMode, NodeSetup, World, WorldConfig};
+use wwwserve::workload::{Generator, LengthDist, Phase, Setting, SettingId};
+use wwwserve::{NodeId, CREDIT};
+
+fn lengths() -> LengthDist {
+    LengthDist { output_mean: 1200.0, output_sigma: 0.5, ..Default::default() }
+}
+
+fn uniform_setups(n: usize, ia: f64, horizon: f64) -> Vec<NodeSetup> {
+    (0..n)
+        .map(|i| {
+            NodeSetup::new(
+                Profile::test(40.0, 16),
+                NodePolicy { accept_freq: 1.0, ..Default::default() },
+            )
+            .with_generator(
+                Generator::new(
+                    NodeId(i as u32),
+                    vec![Phase::new(0.0, horizon, ia)],
+                )
+                .with_lengths(lengths()),
+            )
+        })
+        .collect()
+}
+
+/// Every submitted user request is answered exactly once.
+#[test]
+fn all_user_requests_complete_exactly_once() {
+    let mut w =
+        World::new(WorldConfig::default(), uniform_setups(4, 4.0, 300.0));
+    w.run_until(4000.0);
+    let submitted: u64 = (0..4).map(|i| w.node(i).stats.user_requests).sum();
+    let mut ids: Vec<_> =
+        w.recorder.user_records().map(|r| r.id).collect();
+    assert_eq!(ids.len() as u64, submitted);
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len() as u64, submitted, "duplicate completions");
+}
+
+/// Decentralized scheduling beats single-node under a hot/cold skew and
+/// stays within reach of the omniscient centralized dispatcher (Fig. 4's
+/// qualitative claim, on a smaller workload than the benches).
+#[test]
+fn decentralized_between_single_and_centralized() {
+    let horizon = 400.0;
+    let profiles = vec![Profile::test(40.0, 16); 4];
+    let gens = |_seed: u64| -> Vec<Option<Generator>> {
+        (0..4)
+            .map(|i| {
+                Some(
+                    Generator::new(
+                        NodeId(i as u32),
+                        vec![Phase::new(
+                            0.0,
+                            horizon,
+                            if i == 0 { 1.5 } else { 20.0 },
+                        )],
+                    )
+                    .with_lengths(lengths()),
+                )
+            })
+            .collect()
+    };
+    let single =
+        schedulers::run_single(profiles.clone(), gens(7), horizon, 7);
+    let central =
+        schedulers::run_centralized(profiles.clone(), gens(7), horizon, 7);
+
+    let setups: Vec<NodeSetup> = profiles
+        .iter()
+        .zip(gens(7))
+        .map(|(p, g)| {
+            NodeSetup::new(
+                *p,
+                NodePolicy { accept_freq: 1.0, ..Default::default() },
+            )
+            .with_generator(g.unwrap())
+        })
+        .collect();
+    let mut w = World::new(WorldConfig { seed: 7, ..Default::default() }, setups);
+    w.run_until(horizon + 4000.0);
+
+    let (s, c, d) = (
+        single.mean_latency(),
+        central.mean_latency(),
+        w.recorder.mean_latency(),
+    );
+    assert!(d < s, "decentralized {d:.1}s should beat single {s:.1}s");
+    assert!(
+        d < c * 2.5,
+        "decentralized {d:.1}s too far behind centralized {c:.1}s"
+    );
+}
+
+/// Shared and blockchain ledger modes agree on final balances for the same
+/// workload (consensus is off the request path).
+#[test]
+fn ledger_modes_agree_on_balances() {
+    let run = |mode: LedgerMode| {
+        let cfg = WorldConfig {
+            seed: 5,
+            ledger: mode,
+            system: SystemPolicy { duel_rate: 0.0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut w = World::new(cfg, uniform_setups(4, 6.0, 200.0));
+        w.run_until(3000.0);
+        (w.credit_totals(), w.recorder.user_records().count())
+    };
+    let (shared_totals, shared_n) = run(LedgerMode::Shared);
+    let (chain_totals, chain_n) = run(LedgerMode::Blockchain);
+    assert_eq!(shared_n, chain_n, "request counts diverge across modes");
+    // Conservation in both: offload payments only move credits around.
+    let genesis_total = 4.0 * 100.0;
+    let sum_s: f64 = shared_totals.iter().sum();
+    let sum_c: f64 = chain_totals.iter().sum();
+    assert!((sum_s - genesis_total).abs() < 1e-6);
+    assert!((sum_c - genesis_total).abs() < 1e-6);
+    // Identical seeds => identical economic outcomes.
+    for (a, b) in shared_totals.iter().zip(&chain_totals) {
+        assert!(
+            (a - b).abs() < 1e-6,
+            "balances diverged: {shared_totals:?} vs {chain_totals:?}"
+        );
+    }
+}
+
+/// Blockchain replicas converge to identical chains (anti-entropy) even
+/// with a node joining late.
+#[test]
+fn chain_replicas_converge_with_churn() {
+    let mut setups = uniform_setups(4, 6.0, 300.0);
+    setups.push(NodeSetup::new(
+        Profile::test(40.0, 16),
+        NodePolicy { accept_freq: 1.0, ..Default::default() },
+    ).offline());
+    let cfg = WorldConfig {
+        seed: 11,
+        ledger: LedgerMode::Blockchain,
+        ..Default::default()
+    };
+    let mut w = World::new(cfg, setups);
+    w.schedule_join(4, 100.0);
+    w.run_until(4000.0);
+    let lens: Vec<usize> = (0..5)
+        .map(|i| match w.node(i).ledger() {
+            LedgerManager::Chain(r) => r.chain.len(),
+            _ => 0,
+        })
+        .collect();
+    assert!(lens[0] > 1, "no blocks were ledgered: {lens:?}");
+    for l in &lens {
+        assert_eq!(*l, lens[0], "replicas diverged: {lens:?}");
+    }
+}
+
+/// Table-3 settings run end to end under all three strategies without
+/// losing requests.
+#[test]
+fn settings_complete_under_all_strategies() {
+    for id in [SettingId::S1, SettingId::S3] {
+        let run = wwwserve::repro::run_setting(id, schedulers::Strategy::Decentralized, 3);
+        assert!(run.completed > 50, "{:?} too few: {}", id, run.completed);
+        let setting = Setting::get(id);
+        assert!(setting.num_nodes() >= 4);
+    }
+}
+
+/// Same seed ⇒ bit-identical world outcomes; different seed ⇒ different.
+#[test]
+fn world_determinism() {
+    let run = |seed| {
+        let cfg = WorldConfig { seed, ..Default::default() };
+        let mut w = World::new(cfg, uniform_setups(3, 5.0, 150.0));
+        w.run_until(2000.0);
+        (
+            (w.recorder.mean_latency() * 1e9) as u64,
+            w.messages_sent,
+            w.recorder.len(),
+        )
+    };
+    assert_eq!(run(42), run(42));
+    assert_ne!(run(42), run(43));
+}
+
+/// The duel mechanism redistributes credit from low- to high-quality nodes
+/// over a long horizon (Theorem 5.8, agent-based).
+#[test]
+fn duels_redistribute_toward_quality() {
+    let mut setups = vec![NodeSetup::new(
+        Profile::test(1.0, 1),
+        NodePolicy::requester_only(),
+    )
+    .with_generator(
+        Generator::new(NodeId(0), vec![Phase::new(0.0, 400.0, 1.5)])
+            .with_lengths(lengths()),
+    )];
+    for q in [0.9, 0.9, 0.3, 0.3] {
+        setups.push(NodeSetup::new(
+            Profile::test(50.0, 16).with_quality(q),
+            NodePolicy { accept_freq: 1.0, ..Default::default() },
+        ));
+    }
+    let cfg = WorldConfig {
+        seed: 13,
+        system: SystemPolicy {
+            duel_rate: 0.6,
+            duel_reward: CREDIT,
+            duel_penalty: CREDIT,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut w = World::new(cfg, setups);
+    w.run_until(4000.0);
+    let totals = w.credit_totals();
+    let high = totals[1] + totals[2];
+    let low = totals[3] + totals[4];
+    assert!(
+        high > low + 5.0,
+        "no quality redistribution: high {high:.1} vs low {low:.1}"
+    );
+}

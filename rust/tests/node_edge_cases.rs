@@ -1,0 +1,246 @@
+//! Edge-case tests on the node protocol state machine: stale/duplicate/
+//! malicious message handling that the happy-path tests never trigger.
+
+use std::sync::{Arc, Mutex};
+
+use wwwserve::backend::{Backend, Profile, SimBackend};
+use wwwserve::coordinator::{Action, Event, LedgerManager, Message, Node};
+use wwwserve::gossip::GossipConfig;
+use wwwserve::ledger::{Ledger, SharedLedger};
+use wwwserve::policy::{NodePolicy, SystemPolicy};
+use wwwserve::types::{Request, RequestId, Response};
+use wwwserve::NodeId;
+
+fn mk_node(id: u32, shared: &Arc<Mutex<SharedLedger>>) -> Node {
+    Node::new(
+        NodeId(id),
+        NodePolicy::default(),
+        SystemPolicy::default(),
+        Box::new(SimBackend::new(Profile::test(50.0, 8))),
+        LedgerManager::shared(shared.clone()),
+        GossipConfig::default(),
+        7,
+        0.0,
+    )
+}
+
+fn req(origin: u32, seq: u64) -> Request {
+    Request {
+        id: RequestId { origin: NodeId(origin), seq },
+        prompt_tokens: 50,
+        output_tokens: 100,
+        submitted_at: 0.0,
+        slo_deadline: 60.0,
+        synthetic: false,
+        payload: vec![],
+    }
+}
+
+fn resp(origin: u32, seq: u64, executor: u32) -> Response {
+    Response {
+        id: RequestId { origin: NodeId(origin), seq },
+        executor: NodeId(executor),
+        quality: 0.7,
+        finished_at: 5.0,
+        tokens: vec![],
+    }
+}
+
+fn sends(actions: &[Action]) -> usize {
+    actions
+        .iter()
+        .filter(|a| matches!(a, Action::Send { .. }))
+        .count()
+}
+
+#[test]
+fn unsolicited_probe_accept_is_ignored() {
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut n = mk_node(0, &shared);
+    let a = n.handle(
+        Event::Message {
+            from: NodeId(3),
+            msg: Message::ProbeAccept { req_id: req(0, 99).id },
+        },
+        1.0,
+    );
+    // No delegation must be triggered by an accept we never asked for.
+    assert!(!a.iter().any(
+        |x| matches!(x, Action::Send { msg: Message::Delegate { .. }, .. })
+    ));
+}
+
+#[test]
+fn unsolicited_response_is_ignored_and_unpaid() {
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut n = mk_node(0, &shared);
+    let before = shared.lock().unwrap().balance(NodeId(0));
+    let a = n.handle(
+        Event::Message {
+            from: NodeId(3),
+            msg: Message::DelegateResponse {
+                response: resp(0, 42, 3),
+                duel: false,
+            },
+        },
+        1.0,
+    );
+    assert!(!a.iter().any(|x| matches!(x, Action::Done(_))));
+    // A fabricated response must not extract a payment.
+    assert_eq!(shared.lock().unwrap().balance(NodeId(0)), before);
+}
+
+#[test]
+fn duplicate_response_pays_only_once() {
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut n1 = mk_node(1, &shared);
+    let mut n0 = mk_node(0, &shared);
+    n0.policy.target_utilization = 0.0;
+    n0.policy.offload_freq = 1.0;
+    n0.system.duel_rate = 0.0;
+    n1.policy.accept_freq = 1.0;
+    n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+
+    // Run the probe/delegate handshake.
+    let a = n0.handle(Event::UserRequest(req(0, 0)), 0.0);
+    let Action::Send { msg: probe, .. } = &a[0] else { panic!() };
+    let a = n1.handle(Event::Message { from: NodeId(0), msg: probe.clone() }, 0.1);
+    let Action::Send { msg: accept, .. } = &a[0] else { panic!() };
+    n0.handle(Event::Message { from: NodeId(1), msg: accept.clone() }, 0.2);
+
+    let balance_before = shared.lock().unwrap().balance(NodeId(1));
+    let response = Message::DelegateResponse {
+        response: resp(0, 0, 1),
+        duel: false,
+    };
+    let a1 = n0.handle(
+        Event::Message { from: NodeId(1), msg: response.clone() },
+        5.0,
+    );
+    assert!(a1.iter().any(|x| matches!(x, Action::Done(_))));
+    // Replay the same response: no second payment, no second Done.
+    let a2 = n0.handle(Event::Message { from: NodeId(1), msg: response }, 6.0);
+    assert!(!a2.iter().any(|x| matches!(x, Action::Done(_))));
+    let paid = shared.lock().unwrap().balance(NodeId(1)) - balance_before;
+    assert_eq!(paid, SystemPolicy::default().base_reward);
+}
+
+#[test]
+fn verdict_for_unknown_duel_is_ignored() {
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut n = mk_node(0, &shared);
+    let a = n.handle(
+        Event::Message {
+            from: NodeId(2),
+            msg: Message::JudgeVerdict {
+                duel_id: req(0, 77).id,
+                winner: NodeId(2),
+            },
+        },
+        1.0,
+    );
+    assert!(!a.iter().any(|x| matches!(x, Action::DuelSettled(_))));
+    assert_eq!(sends(&a), 0);
+}
+
+#[test]
+fn judge_assign_runs_even_when_busy() {
+    // Judging work enters the delegated queue and eventually produces a
+    // verdict even if the judge's backend is saturated.
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut judge = mk_node(0, &shared);
+    // Saturate the backend.
+    for s in 0..20 {
+        judge.handle(Event::UserRequest(req(0, s)), 0.0);
+    }
+    let a = judge.handle(
+        Event::Message {
+            from: NodeId(9),
+            msg: Message::JudgeAssign {
+                duel_id: req(9, 1).id,
+                resp_a: resp(9, 1, 2),
+                resp_b: resp(9, 1, 3),
+                est_tokens: 200,
+            },
+        },
+        1.0,
+    );
+    // No verdict yet (queued behind the backlog).
+    assert_eq!(sends(&a), 0);
+    // Run the backend far forward: the verdict must eventually emerge.
+    let mut verdict_seen = false;
+    let mut t = 10.0;
+    for _ in 0..200 {
+        for act in judge.handle(Event::BackendWake, t) {
+            if let Action::Send { msg: Message::JudgeVerdict { .. }, .. } = act {
+                verdict_seen = true;
+            }
+        }
+        t += 10.0;
+    }
+    assert!(verdict_seen, "judge never produced a verdict");
+}
+
+#[test]
+fn requester_cannot_delegate_without_funds() {
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut n1 = mk_node(1, &shared);
+    let mut n0 = mk_node(0, &shared);
+    n0.policy.target_utilization = 0.0;
+    n0.policy.offload_freq = 1.0;
+    n0.system.duel_rate = 0.0;
+    n1.policy.accept_freq = 1.0;
+    n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+    // Drain node 0's liquid balance (move everything into stake).
+    let balance = shared.lock().unwrap().balance(NodeId(0));
+    shared
+        .lock()
+        .unwrap()
+        .submit(
+            vec![wwwserve::ledger::CreditOp::Stake {
+                node: NodeId(0),
+                amount: balance,
+            }],
+            NodeId(0),
+            0.0,
+        )
+        .unwrap();
+    let a = n0.handle(Event::UserRequest(req(0, 0)), 1.0);
+    // Unaffordable offload -> local execution, no probe.
+    assert_eq!(sends(&a), 0);
+    assert_eq!(n0.backend().running_len(), 1);
+}
+
+#[test]
+fn gossip_reply_does_not_echo_forever() {
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut a = mk_node(0, &shared);
+    let mut b = mk_node(1, &shared);
+    a.view.add_seed(NodeId(1), 0, 0.0);
+    b.view.add_seed(NodeId(0), 0, 0.0);
+    // a gossips to b; b replies; a must NOT reply to the reply.
+    let out_a = a.handle(Event::Tick, 1.0);
+    let gossip = out_a.iter().find_map(|x| match x {
+        Action::Send { msg: m @ Message::Gossip { .. }, .. } => Some(m.clone()),
+        _ => None,
+    });
+    let Some(gossip) = gossip else {
+        panic!("no gossip emitted on tick")
+    };
+    let out_b = b.handle(Event::Message { from: NodeId(0), msg: gossip }, 1.1);
+    let reply = out_b
+        .iter()
+        .find_map(|x| match x {
+            Action::Send { msg: m @ Message::GossipReply { .. }, .. } => {
+                Some(m.clone())
+            }
+            _ => None,
+        })
+        .expect("push-pull reply");
+    let out_a2 = a.handle(Event::Message { from: NodeId(1), msg: reply }, 1.2);
+    assert_eq!(
+        sends(&out_a2),
+        0,
+        "gossip reply must terminate the exchange"
+    );
+}

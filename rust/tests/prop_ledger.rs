@@ -1,0 +1,182 @@
+//! Property-based tests on ledger invariants (mini-framework: seeded
+//! generators + many-case loops, standing in for proptest — DESIGN.md §8).
+//!
+//! Invariants:
+//! * conservation: total credits + burned == minted, under ANY op sequence
+//! * validation: no account ever goes negative, stakes never exceed holdings
+//! * chain: an audited chain replays to exactly the same balances
+//! * tamper-evidence: any byte of history changing breaks the audit
+
+use wwwserve::crypto::{KeyStore, NodeKey};
+use wwwserve::ledger::{
+    BalanceTable, Block, Chain, CreditOp, Ledger, OpReason, SharedLedger,
+};
+use wwwserve::util::rng::Rng;
+use wwwserve::NodeId;
+
+const CASES: usize = 200;
+
+fn random_op(rng: &mut Rng, n_nodes: u32) -> CreditOp {
+    let node = || NodeId(0); // placeholder, replaced below
+    let _ = node;
+    let a = NodeId(rng.below(n_nodes as usize) as u32);
+    let b = NodeId(rng.below(n_nodes as usize) as u32);
+    let amount = 1 + rng.next_u64() % 500;
+    match rng.below(5) {
+        0 => CreditOp::Mint { to: a, amount, reason: OpReason::Genesis },
+        1 => CreditOp::Slash { from: a, amount, reason: OpReason::PolicyAdjust },
+        2 => CreditOp::Transfer {
+            from: a,
+            to: b,
+            amount,
+            reason: OpReason::PolicyAdjust,
+        },
+        3 => CreditOp::Stake { node: a, amount },
+        _ => CreditOp::Unstake { node: a, amount },
+    }
+}
+
+#[test]
+fn prop_conservation_under_arbitrary_ops() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case as u64);
+        let mut table = BalanceTable::new();
+        let n_ops = 1 + rng.below(100);
+        let mut applied = 0;
+        for _ in 0..n_ops {
+            let op = random_op(&mut rng, 5);
+            if table.apply(&op).is_ok() {
+                applied += 1;
+            }
+            assert!(
+                table.conserved(),
+                "case {case}: conservation broken after {applied} ops"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_no_negative_balances() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(1000 + case as u64);
+        let mut table = BalanceTable::new();
+        for _ in 0..rng.below(120) + 1 {
+            let op = random_op(&mut rng, 4);
+            let _ = table.apply(&op);
+            for i in 0..4u32 {
+                // Credits are u64 so negativity shows up as huge values
+                // after a hypothetical underflow.
+                let acct = table.account(NodeId(i));
+                assert!(acct.balance < u64::MAX / 2, "case {case}: underflow");
+                assert!(acct.stake < u64::MAX / 2, "case {case}: underflow");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_shared_ledger_batches_are_atomic() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(2000 + case as u64);
+        let mut ledger = SharedLedger::new();
+        ledger
+            .submit(
+                vec![CreditOp::Mint {
+                    to: NodeId(0),
+                    amount: 1000,
+                    reason: OpReason::Genesis,
+                }],
+                NodeId(0),
+                0.0,
+            )
+            .unwrap();
+        let before_total = ledger.table().total_credits();
+        let before_log = ledger.log().len();
+        let batch: Vec<CreditOp> =
+            (0..rng.below(6) + 1).map(|_| random_op(&mut rng, 3)).collect();
+        let result = ledger.submit(batch.clone(), NodeId(0), 1.0);
+        if result.is_err() {
+            // Failed batches must leave no trace.
+            assert_eq!(ledger.table().total_credits(), before_total);
+            assert_eq!(ledger.log().len(), before_log);
+        } else {
+            assert_eq!(ledger.log().len(), before_log + batch.len());
+        }
+        assert!(ledger.table().conserved());
+    }
+}
+
+#[test]
+fn prop_chain_replay_matches_balances() {
+    let keys = KeyStore::for_network(9, 4);
+    for case in 0..60 {
+        let mut rng = Rng::new(3000 + case as u64);
+        let mut chain = Chain::new();
+        // Build a random valid chain.
+        for b in 0..rng.below(10) + 1 {
+            let proposer = NodeKey::derive(9, NodeId(rng.below(4) as u32));
+            let mut ops = Vec::new();
+            for _ in 0..rng.below(5) + 1 {
+                ops.push(random_op(&mut rng, 4));
+            }
+            let block =
+                Block::create(chain.head(), b as f64, ops, &proposer);
+            // Only commit blocks whose ops validate.
+            let _ = chain.commit_block(block, &keys);
+        }
+        assert!(chain.audit(&keys), "case {case}: audit failed");
+        // Replay from scratch must give identical balances.
+        let mut replay = BalanceTable::new();
+        for block in chain.blocks() {
+            for op in &block.ops {
+                replay.apply(op).expect("committed ops must be valid");
+            }
+        }
+        for i in 0..4u32 {
+            assert_eq!(replay.account(NodeId(i)), {
+                chain.balances().account(NodeId(i))
+            });
+        }
+    }
+}
+
+#[test]
+fn prop_any_tamper_breaks_audit() {
+    let keys = KeyStore::for_network(5, 3);
+    for case in 0..60 {
+        let mut rng = Rng::new(4000 + case as u64);
+        let mut chain = Chain::new();
+        for b in 0..3 {
+            let proposer = NodeKey::derive(5, NodeId(rng.below(3) as u32));
+            let ops = vec![CreditOp::Mint {
+                to: NodeId(rng.below(3) as u32),
+                amount: 1 + rng.next_u64() % 100,
+                reason: OpReason::Genesis,
+            }];
+            let block = Block::create(chain.head(), b as f64, ops, &proposer);
+            chain.commit_block(block, &keys).unwrap();
+        }
+        assert!(chain.audit(&keys));
+        // Tamper with a random committed op.
+        let mut blocks = chain.blocks().to_vec();
+        let bi = rng.below(blocks.len());
+        blocks[bi].ops[0] = CreditOp::Mint {
+            to: NodeId(0),
+            amount: 999_999,
+            reason: OpReason::Genesis,
+        };
+        let mut forged = Chain::new();
+        let mut all_ok = true;
+        for b in blocks {
+            if forged.commit_block(b, &keys).is_err() {
+                all_ok = false;
+                break;
+            }
+        }
+        assert!(
+            !all_ok || !forged.audit(&keys),
+            "case {case}: tampering went undetected"
+        );
+    }
+}

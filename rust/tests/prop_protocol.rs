@@ -1,0 +1,214 @@
+//! Property tests on the protocol substrates: gossip convergence under
+//! arbitrary topologies/churn, PoS sampling proportionality, batcher
+//! invariants, replicator simplex preservation.
+
+use wwwserve::gossip::{GossipConfig, PeerView};
+use wwwserve::gametheory::{NodeParams, Replicator, SystemParams};
+use wwwserve::pos::StakeSnapshot;
+use wwwserve::runtime::Batcher;
+use wwwserve::util::rng::Rng;
+use wwwserve::NodeId;
+
+#[test]
+fn prop_gossip_converges_on_any_connected_bootstrap() {
+    // Random connected bootstrap graphs (spanning tree + extra edges):
+    // every node must learn full membership within a bounded number of
+    // push-pull rounds.
+    for case in 0..40 {
+        let mut rng = Rng::new(case);
+        let n = 4 + rng.below(24);
+        let cfg = GossipConfig { interval: 1.0, fanout: 2, suspect_after: 1e9 };
+        let mut views: Vec<PeerView> = (0..n)
+            .map(|i| PeerView::new(NodeId(i as u32), cfg, 0.0))
+            .collect();
+        // Spanning tree: node i knows a random earlier node.
+        for i in 1..n {
+            let j = rng.below(i);
+            views[i].add_seed(NodeId(j as u32), 0, 0.0);
+            views[j].add_seed(NodeId(i as u32), 0, 0.0);
+        }
+        let mut converged_at = None;
+        for round in 1..=80 {
+            let now = round as f64;
+            for v in views.iter_mut() {
+                v.heartbeat(now);
+            }
+            for i in 0..n {
+                for t in views[i].pick_targets(&mut rng, now) {
+                    let d = views[i].digest();
+                    views[t.0 as usize].merge(&d, now);
+                    let back = views[t.0 as usize].digest();
+                    views[i].merge(&back, now);
+                }
+            }
+            if views.iter().all(|v| v.known() == n) {
+                converged_at = Some(round);
+                break;
+            }
+        }
+        let r = converged_at
+            .unwrap_or_else(|| panic!("case {case}: n={n} never converged"));
+        assert!(r <= 60, "case {case}: n={n} took {r} rounds");
+    }
+}
+
+#[test]
+fn prop_gossip_leave_detected_everywhere() {
+    for case in 0..30 {
+        let mut rng = Rng::new(100 + case);
+        let n = 4 + rng.below(12);
+        let cfg = GossipConfig { interval: 1.0, fanout: 2, suspect_after: 1e9 };
+        let mut views: Vec<PeerView> = (0..n)
+            .map(|i| PeerView::new(NodeId(i as u32), cfg, 0.0))
+            .collect();
+        for i in 0..n {
+            views[i].add_seed(NodeId(((i + 1) % n) as u32), 0, 0.0);
+        }
+        // Converge membership first.
+        for round in 1..=40 {
+            let now = round as f64;
+            for v in views.iter_mut() {
+                v.heartbeat(now);
+            }
+            for i in 0..n {
+                for t in views[i].pick_targets(&mut rng, now) {
+                    let d = views[i].digest();
+                    views[t.0 as usize].merge(&d, now);
+                    let back = views[t.0 as usize].digest();
+                    views[i].merge(&back, now);
+                }
+            }
+        }
+        // Node 0 gracefully leaves; keep gossiping without it.
+        let leaver = rng.below(n);
+        views[leaver].announce_leave(41.0);
+        let goodbye = views[leaver].digest();
+        let first = (leaver + 1) % n;
+        views[first].merge(&goodbye, 41.0);
+        for round in 42..=90 {
+            let now = round as f64;
+            for i in 0..n {
+                if i == leaver {
+                    continue;
+                }
+                views[i].heartbeat(now);
+                for t in views[i].pick_targets(&mut rng, now) {
+                    if t.0 as usize == leaver {
+                        continue; // it's gone
+                    }
+                    let d = views[i].digest();
+                    views[t.0 as usize].merge(&d, now);
+                    let back = views[t.0 as usize].digest();
+                    views[i].merge(&back, now);
+                }
+            }
+        }
+        for (i, v) in views.iter().enumerate() {
+            if i == leaver {
+                continue;
+            }
+            assert!(
+                !v.is_alive(NodeId(leaver as u32), 91.0),
+                "case {case}: node {i} still believes {leaver} alive"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pos_sampling_tracks_stakes() {
+    for case in 0..20 {
+        let mut rng = Rng::new(200 + case);
+        let n = 2 + rng.below(12);
+        let stakes: Vec<(NodeId, u64)> = (0..n)
+            .map(|i| (NodeId(i as u32), rng.next_u64() % 1000))
+            .collect();
+        let total: u64 = stakes.iter().map(|(_, s)| *s).sum();
+        if total == 0 {
+            continue;
+        }
+        let mut snap = StakeSnapshot::new(&stakes, None);
+        snap.prepare();
+        let draws = 60_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..draws {
+            if let Some(pick) = snap.sample(&mut rng) {
+                counts[pick.0 as usize] += 1;
+            }
+        }
+        for (i, (_, s)) in stakes.iter().enumerate() {
+            let expected = *s as f64 / total as f64;
+            let got = counts[i] as f64 / draws as f64;
+            assert!(
+                (got - expected).abs() < 0.02,
+                "case {case}: node {i} share {got:.3} vs stake share {expected:.3}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_waves_cover_exactly() {
+    for case in 0..200 {
+        let mut rng = Rng::new(300 + case);
+        let mut sizes: Vec<usize> =
+            (0..rng.below(4) + 1).map(|_| 1 << rng.below(5)).collect();
+        sizes.push(1); // ensure coverage of any n
+        let batcher = Batcher::new(sizes.clone());
+        let n = rng.below(100);
+        let waves = batcher.waves(n);
+        let covered: usize = waves.iter().sum();
+        assert!(covered >= n, "case {case}: waves under-cover {covered}<{n}");
+        // No wave exceeds the largest compiled size; waste is < one wave.
+        for w in &waves {
+            assert!(batcher.pick(*w) == *w, "case {case}: non-compiled wave");
+        }
+        assert!(
+            covered - n < batcher.max_batch(),
+            "case {case}: waste {covered}-{n} too large"
+        );
+    }
+}
+
+#[test]
+fn prop_replicator_stays_on_simplex() {
+    for case in 0..50 {
+        let mut rng = Rng::new(400 + case);
+        let n = 2 + rng.below(8);
+        let nodes: Vec<NodeParams> = (0..n)
+            .map(|_| NodeParams {
+                quality: rng.f64(),
+                cost: 0.1 + rng.f64(),
+                stake0: 0.1 + rng.f64() * 5.0,
+            })
+            .collect();
+        let sys = SystemParams {
+            lambda: 1.0 + rng.f64() * 20.0,
+            base_reward: rng.f64() * 2.0,
+            duel_rate: rng.f64(),
+            duel_reward: rng.f64() * 3.0,
+            duel_penalty: rng.f64() * 3.0,
+            eta: 0.1 + rng.f64(),
+        };
+        let mut r = Replicator::new(nodes, sys);
+        for step in 0..2000 {
+            r.step(0.01);
+            let shares = r.shares();
+            let sum: f64 = shares.iter().sum();
+            assert!(
+                sum == 0.0 || (sum - 1.0).abs() < 1e-9,
+                "case {case} step {step}: simplex violated (sum {sum})"
+            );
+            for s in &shares {
+                assert!(
+                    (0.0..=1.0 + 1e-12).contains(s),
+                    "case {case}: share out of range {s}"
+                );
+            }
+            for q in 0..r.nodes.len() {
+                let w = r.win_prob(q);
+                assert!((0.0..=1.0).contains(&w));
+            }
+        }
+    }
+}
