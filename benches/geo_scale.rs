@@ -1,0 +1,238 @@
+//! Bench: geo-distributed 3-region WAN scenario (us / eu / asia).
+//!
+//! Three parts:
+//!
+//! 1. **Backward compatibility** — a flat-latency world and an explicit
+//!    single-region topology must replay bit-identically (the seed benches
+//!    depend on the flat model's RNG stream).
+//! 2. **Follow-the-sun** — per-region diurnal load with offset peaks;
+//!    region-blind vs locality-aware dispatch compared on per-region SLO
+//!    attainment and p99 latency.
+//! 3. **Partition tolerance** — the same world with a trans-continental
+//!    us<->asia partition at t=250 healed at t=450. Locality-aware dispatch
+//!    wastes fewer probes on the dead ocean link, so the peaking regions
+//!    keep more of their SLO. The partitioned run must also replay
+//!    deterministically under a fixed seed.
+
+use wwwserve::backend::Profile;
+use wwwserve::benchlib::{bench, Table};
+use wwwserve::policy::NodePolicy;
+use wwwserve::sim::{NodeSetup, World, WorldConfig};
+use wwwserve::topology::{three_region_wan, LinkChange, Topology};
+use wwwserve::types::CREDIT;
+use wwwserve::workload::{diurnal_phases, Generator, LengthDist, Phase};
+use wwwserve::NodeId;
+
+const HORIZON: f64 = 750.0;
+const DRAIN: f64 = 3000.0;
+const PERIOD: f64 = 300.0;
+const SEED: u64 = 2026;
+
+fn lengths() -> LengthDist {
+    LengthDist { output_mean: 900.0, output_sigma: 0.5, ..Default::default() }
+}
+
+/// One region: a small requester node carrying the diurnal user load plus
+/// two larger servers. Node order matches `three_region_wan` placement.
+fn geo_setups(latency_penalty: f64) -> Vec<NodeSetup> {
+    let mut setups = Vec::new();
+    for region in 0..3 {
+        // Follow the sun: each region's rush hour starts a third of a
+        // cycle after the previous region's.
+        let offset = region as f64 * (PERIOD / 3.0);
+        let requester_id = NodeId((setups.len()) as u32);
+        setups.push(
+            NodeSetup::new(
+                Profile::test(40.0, 4),
+                NodePolicy {
+                    stake: 2 * CREDIT,
+                    target_utilization: 0.5,
+                    offload_freq: 1.0,
+                    accept_freq: 0.0,
+                    latency_penalty,
+                    ..Default::default()
+                },
+            )
+            .with_generator(
+                Generator::new(
+                    requester_id,
+                    diurnal_phases(HORIZON, PERIOD, 2.5, 25.0, offset),
+                )
+                .with_lengths(lengths()),
+            ),
+        );
+        for _ in 0..2 {
+            setups.push(NodeSetup::new(
+                Profile::test(45.0, 24),
+                NodePolicy {
+                    stake: 20 * CREDIT,
+                    accept_freq: 1.0,
+                    latency_penalty,
+                    ..Default::default()
+                },
+            ));
+        }
+    }
+    setups
+}
+
+fn geo_topology(partition: bool) -> Topology {
+    let mut b = three_region_wan(3);
+    if partition {
+        b = b
+            .event("us", "asia", 250.0, LinkChange::Partition)
+            .event("us", "asia", 450.0, LinkChange::Heal);
+    }
+    b.build()
+}
+
+struct GeoRun {
+    /// (region, slo, p99, completed)
+    regions: Vec<(String, f64, f64, usize)>,
+    overall_slo: f64,
+    dropped: u64,
+    fingerprint: (usize, u64, u64, Vec<u64>),
+}
+
+fn run_geo(latency_penalty: f64, partition: bool) -> GeoRun {
+    let mut cfg = WorldConfig {
+        seed: SEED,
+        topology: Some(geo_topology(partition)),
+        ..Default::default()
+    };
+    cfg.system.duel_rate = 0.0; // isolate dispatch effects
+    let mut w = World::new(cfg, geo_setups(latency_penalty));
+    w.run_until(HORIZON + DRAIN);
+    GeoRun {
+        regions: w.region_summary(),
+        overall_slo: w.recorder.slo_attainment(),
+        dropped: w.messages_dropped,
+        fingerprint: (
+            w.recorder.len(),
+            (w.recorder.mean_latency() * 1e9) as u64,
+            w.messages_dropped,
+            w.credit_totals().iter().map(|c| (c * 1e6) as u64).collect(),
+        ),
+    }
+}
+
+/// Part 1: the flat network and an explicit one-region topology replay the
+/// same simulation, message for message.
+fn backward_compat_check() {
+    let fingerprint = |topology: Option<Topology>| {
+        let mut cfg = WorldConfig { seed: 7, topology, ..Default::default() };
+        cfg.system.duel_rate = 0.1;
+        let setups: Vec<NodeSetup> = (0..4)
+            .map(|i| {
+                NodeSetup::new(
+                    Profile::test(40.0, 16),
+                    NodePolicy { accept_freq: 1.0, ..Default::default() },
+                )
+                .with_generator(
+                    Generator::new(
+                        NodeId(i as u32),
+                        vec![Phase::new(0.0, 300.0, 4.0)],
+                    )
+                    .with_lengths(lengths()),
+                )
+            })
+            .collect();
+        let mut w = World::new(cfg, setups);
+        w.run_until(1200.0);
+        (
+            w.recorder.len(),
+            (w.recorder.mean_latency() * 1e9) as u64,
+            w.messages_sent,
+            w.credit_totals().iter().map(|c| (c * 1e6) as u64).collect::<Vec<_>>(),
+        )
+    };
+    let flat = fingerprint(None);
+    let single = fingerprint(Some(Topology::single_region((0.02, 0.08))));
+    assert_eq!(
+        flat, single,
+        "single-region topology diverged from the flat-latency model"
+    );
+    println!(
+        "backward-compat: flat == single-region topology \
+         ({} records, {} msgs) ✓\n",
+        flat.0, flat.2
+    );
+}
+
+fn print_comparison(title: &str, blind: &GeoRun, aware: &GeoRun) {
+    println!("## {title}\n");
+    let mut t = Table::new(&[
+        "Region", "SLO (blind)", "SLO (aware)", "p99 (blind)", "p99 (aware)",
+        "reqs",
+    ]);
+    for (b, a) in blind.regions.iter().zip(&aware.regions) {
+        t.row(vec![
+            b.0.clone(),
+            format!("{:.3}", b.1),
+            format!("{:.3}", a.1),
+            format!("{:.1}", b.2),
+            format!("{:.1}", a.2),
+            format!("{}", b.3),
+        ]);
+    }
+    t.print();
+    println!(
+        "overall SLO: blind {:.3} vs aware {:.3}; dropped msgs: \
+         blind {} aware {}\n",
+        blind.overall_slo, aware.overall_slo, blind.dropped, aware.dropped
+    );
+}
+
+fn main() {
+    println!("# geo_scale — 3-region WAN, follow-the-sun + partition\n");
+
+    backward_compat_check();
+
+    // Part 2: follow-the-sun, healthy WAN.
+    let mut blind = None;
+    bench("geo/follow-the-sun blind", 0, 3, 60.0, || {
+        blind = Some(run_geo(0.0, false));
+    });
+    let mut aware = None;
+    bench("geo/follow-the-sun aware(p=50)", 0, 3, 60.0, || {
+        aware = Some(run_geo(50.0, false));
+    });
+    let (blind, aware) = (blind.unwrap(), aware.unwrap());
+    print_comparison("Follow-the-sun (healthy WAN)", &blind, &aware);
+    assert!(
+        blind.dropped == 0 && aware.dropped == 0,
+        "healthy WAN dropped messages"
+    );
+
+    // Part 3: trans-continental partition (us<->asia down 250s..450s).
+    let blind_p = run_geo(0.0, true);
+    let aware_p = run_geo(50.0, true);
+    print_comparison("us<->asia partition at 250s, heal at 450s", &blind_p, &aware_p);
+    assert!(blind_p.dropped > 0, "partition had no effect");
+
+    // Locality-aware dispatch keeps more SLO through the partition in the
+    // regions whose rush hour overlaps it (us and asia peaks sit inside
+    // the 250-450s window).
+    let slo_of = |r: &GeoRun, name: &str| {
+        r.regions.iter().find(|x| x.0 == name).expect("region").1
+    };
+    let blind_affected = (slo_of(&blind_p, "us") + slo_of(&blind_p, "asia")) / 2.0;
+    let aware_affected = (slo_of(&aware_p, "us") + slo_of(&aware_p, "asia")) / 2.0;
+    println!(
+        "partition-affected regions (us+asia mean SLO): blind {blind_affected:.3} \
+         vs aware {aware_affected:.3}"
+    );
+    assert!(
+        aware_affected + 0.02 >= blind_affected,
+        "locality-aware dispatch lost SLO vs region-blind under partition: \
+         aware {aware_affected:.3} < blind {blind_affected:.3}"
+    );
+
+    // Determinism: the partitioned world replays exactly under its seed.
+    let replay = run_geo(0.0, true);
+    assert_eq!(
+        blind_p.fingerprint, replay.fingerprint,
+        "partition/heal run is not deterministic"
+    );
+    println!("\npartition/heal replay deterministic ✓");
+}

@@ -14,7 +14,7 @@ fn rounds_to_convergence(n: usize, fanout: usize, seed: u64) -> usize {
         .map(|i| PeerView::new(NodeId(i as u32), cfg, 0.0))
         .collect();
     for (i, v) in views.iter_mut().enumerate() {
-        v.add_seed(NodeId(((i + 1) % n) as u32), 0, 0.0);
+        v.add_seed(NodeId(((i + 1) % n) as u32), 0, 0, 0.0);
     }
     let mut rng = Rng::new(seed);
     for round in 1..=200 {
@@ -75,8 +75,8 @@ fn main() {
 
     // Merge throughput on a large digest.
     let cfg = GossipConfig::default();
-    let big_digest: Vec<(NodeId, u64, bool, u64)> =
-        (0..1000).map(|i| (NodeId(i), 5, true, 0)).collect();
+    let big_digest: Vec<(NodeId, u64, bool, u64, u32)> =
+        (0..1000).map(|i| (NodeId(i), 5, true, 0, 0)).collect();
     bench("merge 1000-entry digest (cold)", 10, 2_000, 5.0, || {
         let mut v = PeerView::new(NodeId(9999), cfg, 0.0);
         v.merge(&big_digest, 1.0)

@@ -110,7 +110,7 @@ fn main() {
             );
             for j in 0..N_NODES {
                 if j != i {
-                    node.view.add_seed(NodeId(j as u32), 0, 0.0);
+                    node.view.add_seed(NodeId(j as u32), 0, 0, 0.0);
                 }
             }
             let mut runner = NodeRunner::new(node, transport, epoch);

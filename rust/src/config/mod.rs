@@ -24,6 +24,7 @@ use crate::backend::{Gpu, ModelClass, Profile, ServingStack};
 use crate::policy::{NodePolicy, SystemPolicy};
 use crate::schedulers::Strategy;
 use crate::sim::{LedgerMode, NodeSetup, WorldConfig};
+use crate::topology::{LinkChange, LinkProfile, Topology};
 use crate::types::{NodeId, CREDIT};
 use crate::util::json::Json;
 use crate::workload::{Generator, Phase};
@@ -119,7 +120,167 @@ fn parse_policy(j: &Json) -> NodePolicy {
             .get("requester_only")
             .as_bool()
             .unwrap_or(d.requester_only),
+        latency_penalty: j
+            .get("latency_penalty")
+            .as_f64()
+            .unwrap_or(d.latency_penalty),
     }
+}
+
+// ---------------------------------------------------------------------------
+// Topology block (geo-distributed scenarios)
+// ---------------------------------------------------------------------------
+
+fn parse_link_profile(j: &Json, default: LinkProfile) -> Result<LinkProfile, ConfigError> {
+    let mut p = default;
+    if !j.get("latency").is_null() {
+        let arr = j
+            .get("latency")
+            .as_arr()
+            .ok_or_else(|| bad("link latency must be [lo, hi]"))?;
+        if arr.len() != 2 {
+            return Err(bad("link latency must be [lo, hi]"));
+        }
+        p.latency = (
+            arr[0].as_f64().ok_or_else(|| bad("link latency lo"))?,
+            arr[1].as_f64().ok_or_else(|| bad("link latency hi"))?,
+        );
+    }
+    if let Some(jit) = j.get("jitter").as_f64() {
+        p.jitter = jit;
+    }
+    if let Some(mbps) = j.get("bandwidth_mbps").as_f64() {
+        p = p.with_bandwidth_mbps(mbps);
+    }
+    // Reject bad values here with Err rather than letting the topology
+    // builder's asserts abort the process on malformed user input.
+    let (lo, hi) = p.latency;
+    if !(lo.is_finite() && hi.is_finite() && lo >= 0.0 && lo <= hi) {
+        return Err(bad(format!(
+            "link latency must satisfy 0 <= lo <= hi, got [{lo}, {hi}]"
+        )));
+    }
+    if !(p.jitter.is_finite() && p.jitter >= 0.0) {
+        return Err(bad(format!("link jitter must be >= 0, got {}", p.jitter)));
+    }
+    if !(p.bandwidth > 0.0) {
+        return Err(bad("link bandwidth_mbps must be > 0"));
+    }
+    Ok(p)
+}
+
+fn parse_link_change(j: &Json) -> Result<LinkChange, ConfigError> {
+    match j.get("change").as_str().unwrap_or("") {
+        "partition" => Ok(LinkChange::Partition),
+        "heal" => Ok(LinkChange::Heal),
+        "degrade" => {
+            let latency_factor =
+                j.get("latency_factor").as_f64().unwrap_or(1.0);
+            let bandwidth_factor =
+                j.get("bandwidth_factor").as_f64().unwrap_or(1.0);
+            if !(latency_factor > 0.0 && bandwidth_factor > 0.0) {
+                return Err(bad("degrade factors must be > 0"));
+            }
+            Ok(LinkChange::Degrade { latency_factor, bandwidth_factor })
+        }
+        other => Err(bad(format!(
+            "unknown link change '{other}' (partition|heal|degrade)"
+        ))),
+    }
+}
+
+/// Parse the declarative `"topology"` block plus per-node `"region"` tags:
+///
+/// ```json
+/// "topology": {
+///   "regions": ["us", "eu", "asia"],
+///   "intra": { "latency": [0.002, 0.010] },
+///   "inter": { "latency": [0.040, 0.080], "jitter": 0.005 },
+///   "links": [
+///     { "a": "us", "b": "asia", "latency": [0.075, 0.095],
+///       "bandwidth_mbps": 300 }
+///   ],
+///   "events": [
+///     { "at": 250, "a": "us", "b": "asia", "change": "partition" },
+///     { "at": 450, "a": "us", "b": "asia", "change": "heal" }
+///   ]
+/// },
+/// "nodes": [ { "region": "us", ... }, ... ]
+/// ```
+fn parse_topology(
+    j: &Json,
+    nodes: &[Json],
+) -> Result<Option<Topology>, ConfigError> {
+    if j.is_null() {
+        return Ok(None);
+    }
+    let region_names: Vec<String> = j
+        .get("regions")
+        .as_arr()
+        .ok_or_else(|| bad("topology.regions must be an array of names"))?
+        .iter()
+        .map(|r| {
+            r.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| bad("topology region names must be strings"))
+        })
+        .collect::<Result<_, _>>()?;
+    if region_names.is_empty() {
+        return Err(bad("topology.regions is empty"));
+    }
+    let known = |name: &str| -> Result<(), ConfigError> {
+        if region_names.iter().any(|r| r == name) {
+            Ok(())
+        } else {
+            Err(bad(format!("unknown region '{name}' in topology")))
+        }
+    };
+
+    let mut b = Topology::builder();
+    for r in &region_names {
+        b = b.region(r);
+    }
+    let intra =
+        parse_link_profile(j.get("intra"), LinkProfile::new(0.002, 0.010))?;
+    let inter =
+        parse_link_profile(j.get("inter"), LinkProfile::new(0.040, 0.080))?;
+    b = b.default_intra(intra).default_inter(inter);
+    if let Some(links) = j.get("links").as_arr() {
+        for l in links {
+            let a = l.get("a").as_str().ok_or_else(|| bad("link.a"))?;
+            let bname = l.get("b").as_str().ok_or_else(|| bad("link.b"))?;
+            known(a)?;
+            known(bname)?;
+            // Partial overrides inherit the configured default for the
+            // pair kind, not a hardcoded range.
+            let base = if a == bname { intra } else { inter };
+            let p = parse_link_profile(l, base)?;
+            b = b.link(a, bname, p);
+        }
+    }
+    if let Some(events) = j.get("events").as_arr() {
+        for e in events {
+            let at = e.get("at").as_f64().ok_or_else(|| bad("event.at"))?;
+            if !(at.is_finite() && at >= 0.0) {
+                return Err(bad(format!("event.at must be >= 0, got {at}")));
+            }
+            let a = e.get("a").as_str().ok_or_else(|| bad("event.a"))?;
+            let bname = e.get("b").as_str().ok_or_else(|| bad("event.b"))?;
+            known(a)?;
+            known(bname)?;
+            b = b.event(a, bname, at, parse_link_change(e)?);
+        }
+    }
+    // Node placement from the per-node "region" tags; an untagged node
+    // lands in the first declared region.
+    for (i, nj) in nodes.iter().enumerate() {
+        let r = nj.get("region").as_str().unwrap_or(region_names[0].as_str());
+        known(r).map_err(|_| {
+            bad(format!("node {i}: unknown region '{r}'"))
+        })?;
+        b = b.node(r);
+    }
+    Ok(Some(b.build()))
 }
 
 fn parse_system(j: &Json) -> SystemPolicy {
@@ -195,6 +356,7 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
     if nodes.is_empty() {
         return Err(bad("empty 'nodes' array"));
     }
+    let topology = parse_topology(j.get("topology"), nodes)?;
 
     let mut setups = Vec::with_capacity(nodes.len());
     for (i, nj) in nodes.iter().enumerate() {
@@ -249,6 +411,7 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
             seed,
             system,
             ledger,
+            topology,
             ..Default::default()
         },
         setups,
@@ -330,5 +493,130 @@ mod tests {
         assert_eq!(e.horizon, 750.0);
         assert_eq!(e.strategy, Strategy::Decentralized);
         assert_eq!(e.world.ledger, LedgerMode::Shared);
+        assert!(e.world.topology.is_none(), "flat network by default");
+    }
+
+    const GEO_SAMPLE: &str = r#"{
+        "seed": 3,
+        "topology": {
+            "regions": ["us", "eu"],
+            "intra": { "latency": [0.001, 0.004] },
+            "inter": { "latency": [0.040, 0.080] },
+            "links": [
+                { "a": "us", "b": "eu", "latency": [0.045, 0.055],
+                  "jitter": 0.005, "bandwidth_mbps": 400 }
+            ],
+            "events": [
+                { "at": 250, "a": "us", "b": "eu", "change": "partition" },
+                { "at": 400, "a": "us", "b": "eu", "change": "heal" },
+                { "at": 100, "a": "us", "b": "eu", "change": "degrade",
+                  "latency_factor": 3, "bandwidth_factor": 0.5 }
+            ]
+        },
+        "nodes": [
+            { "region": "us",
+              "policy": { "latency_penalty": 10.0 } },
+            { "region": "eu" },
+            { }
+        ]
+    }"#;
+
+    #[test]
+    fn parses_topology_block() {
+        let e = parse_experiment(GEO_SAMPLE).unwrap();
+        let topo = e.world.topology.as_ref().expect("topology parsed");
+        assert_eq!(topo.num_regions(), 2);
+        assert_eq!(topo.region_index("eu"), Some(1));
+        // Node placement: tagged nodes land where they asked, untagged in
+        // the first region.
+        assert_eq!(topo.region_of(0), 0);
+        assert_eq!(topo.region_of(1), 1);
+        assert_eq!(topo.region_of(2), 0);
+        // Link override with jitter and bandwidth.
+        let l = topo.link(0, 1);
+        assert!((l.latency.0 - 0.045).abs() < 1e-12);
+        assert!((l.jitter - 0.005).abs() < 1e-12);
+        assert!((l.bandwidth - 400.0 * 1e6 / 8.0).abs() < 1e-6);
+        // Events sorted by time regardless of declaration order.
+        let times: Vec<f64> = topo.events().iter().map(|ev| ev.at).collect();
+        assert_eq!(times, vec![100.0, 250.0, 400.0]);
+        // Policy knob reached the node setup.
+        assert!((e.setups[0].policy.latency_penalty - 10.0).abs() < 1e-12);
+        assert_eq!(e.setups[1].policy.latency_penalty, 0.0);
+        // The parsed world actually constructs and validates.
+        topo.validate(e.setups.len());
+    }
+
+    #[test]
+    fn rejects_bad_topology() {
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": []}, "nodes": [{}]}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"]},
+                "nodes": [{"region": "mars"}]}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us", "eu"],
+                "events": [{"at": 1, "a": "us", "b": "eu",
+                            "change": "explode"}]},
+                "nodes": [{}]}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us", "eu"],
+                "links": [{"a": "us", "b": "nowhere"}]},
+                "nodes": [{}]}"#
+        )
+        .is_err());
+        // Numeric garbage yields Err, not a builder panic.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us", "eu"],
+                "inter": {"latency": [0.08, 0.02]}},
+                "nodes": [{}]}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us", "eu"],
+                "inter": {"bandwidth_mbps": 0}},
+                "nodes": [{}]}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us", "eu"],
+                "events": [{"at": -5, "a": "us", "b": "eu",
+                            "change": "partition"}]},
+                "nodes": [{}]}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us", "eu"],
+                "events": [{"at": 1, "a": "us", "b": "eu",
+                            "change": "degrade", "latency_factor": 0}]},
+                "nodes": [{}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn partial_link_override_inherits_configured_default() {
+        // Only bandwidth overridden on us-eu: latency must come from the
+        // configured "inter" profile, not a hardcoded range.
+        let e = parse_experiment(
+            r#"{"topology": {
+                "regions": ["us", "eu"],
+                "inter": { "latency": [0.150, 0.200], "jitter": 0.01 },
+                "links": [{ "a": "us", "b": "eu", "bandwidth_mbps": 100 }]},
+                "nodes": [{"region": "us"}, {"region": "eu"}]}"#,
+        )
+        .unwrap();
+        let topo = e.world.topology.unwrap();
+        let l = topo.link(0, 1);
+        assert!((l.latency.0 - 0.150).abs() < 1e-12);
+        assert!((l.latency.1 - 0.200).abs() < 1e-12);
+        assert!((l.jitter - 0.01).abs() < 1e-12);
+        assert!((l.bandwidth - 100.0 * 1e6 / 8.0).abs() < 1e-6);
     }
 }

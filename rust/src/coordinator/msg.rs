@@ -187,12 +187,13 @@ fn response_from(j: &Json) -> Option<Response> {
 fn digest_json(d: &Digest) -> Json {
     Json::Arr(
         d.iter()
-            .map(|(n, v, online, ep)| {
+            .map(|(n, v, online, ep, region)| {
                 Json::Arr(vec![
                     Json::num(n.0 as f64),
                     Json::num(*v as f64),
                     Json::Bool(*online),
                     Json::num(*ep as f64),
+                    Json::num(*region as f64),
                 ])
             })
             .collect(),
@@ -209,6 +210,7 @@ fn digest_from(j: &Json) -> Option<Digest> {
                 a.get(1)?.as_u64()?,
                 a.get(2)?.as_bool()?,
                 a.get(3)?.as_u64()?,
+                a.get(4)?.as_u64()? as u32,
             ))
         })
         .collect()
@@ -357,7 +359,7 @@ mod tests {
             Message::ProbeReject { req_id: req().id },
             Message::Delegate { request: req(), duel: true },
             Message::DelegateResponse { response: resp(), duel: false },
-            Message::Gossip { digest: vec![(NodeId(1), 4, true, 99)] },
+            Message::Gossip { digest: vec![(NodeId(1), 4, true, 99, 2)] },
             Message::GossipReply { digest: vec![] },
             Message::JudgeAssign {
                 duel_id: req().id,

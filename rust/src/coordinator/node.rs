@@ -86,6 +86,12 @@ pub struct Node {
     pub policy: NodePolicy,
     pub system: SystemPolicy,
     pub online: bool,
+    /// Topology region this node lives in (0 in single-region worlds).
+    pub region: u32,
+    /// Expected one-way latency between regions (`[my][their]`), installed
+    /// by the world from its topology; empty = no locality information, so
+    /// dispatch stays region-blind regardless of `latency_penalty`.
+    latency_est: Vec<Vec<f64>>,
     backend: Box<dyn Backend>,
     pub view: PeerView,
     ledger: LedgerManager,
@@ -136,6 +142,8 @@ impl Node {
             policy,
             system,
             online: true,
+            region: 0,
+            latency_est: Vec::new(),
             backend,
             view: PeerView::new(id, gossip_cfg, now),
             ledger,
@@ -173,6 +181,45 @@ impl Node {
         self.view.alive_peers(now)
     }
 
+    // ---- locality (topology awareness) --------------------------------------
+
+    /// Install this node's region and the world's expected inter-region
+    /// latency matrix (the simulator derives it from its `Topology`; a TCP
+    /// deployment would measure RTTs). Makes `latency_penalty` effective.
+    pub fn set_locality(&mut self, region: u32, latency_est: Vec<Vec<f64>>) {
+        self.region = region;
+        self.latency_est = latency_est;
+        self.view.set_region(region);
+    }
+
+    /// Expected one-way latency to `peer` per its gossiped region tag
+    /// (0.0 when we have no locality information).
+    fn expected_latency_to(&self, peer: NodeId) -> f64 {
+        if self.latency_est.is_empty() {
+            return 0.0;
+        }
+        let theirs = self.view.region_of(peer).unwrap_or(0) as usize;
+        self.latency_est
+            .get(self.region as usize)
+            .and_then(|row| row.get(theirs))
+            .copied()
+            .unwrap_or(0.0)
+    }
+
+    /// Expected latency to the nearest live peer — the `should_offload`
+    /// locality term. 0.0 in flat worlds and for region-blind policies
+    /// (no iteration, no RNG impact, no wasted hot-path scan).
+    fn nearest_peer_latency(&self, now: Time) -> f64 {
+        if self.policy.latency_penalty <= 0.0 || self.latency_est.is_empty() {
+            return 0.0;
+        }
+        self.alive_peers(now)
+            .into_iter()
+            .map(|p| self.expected_latency_to(p))
+            .fold(f64::INFINITY, f64::min)
+            .min(1e6) // no peers at all: huge-but-finite damping
+    }
+
     // ---- the event loop ----------------------------------------------------
 
     pub fn handle(&mut self, event: Event, now: Time) -> Vec<Action> {
@@ -206,7 +253,8 @@ impl Node {
         self.stats.user_requests += 1;
         let util = self.backend.utilization();
         let qlen = self.backend.queue_len();
-        if !self.policy.should_offload(util, qlen, &mut self.rng) {
+        let near = self.nearest_peer_latency(now);
+        if !self.policy.should_offload(util, qlen, near, &mut self.rng) {
             return self.execute_locally(req, ExecKind::Local, now);
         }
         self.try_delegate(req, now)
@@ -288,9 +336,19 @@ impl Node {
     }
 
     /// Stake-weighted, liveness-filtered snapshot of delegation candidates.
+    /// With locality information and a positive `latency_penalty`, each
+    /// candidate's stake is damped by `1 / (1 + penalty * latency)` — nearer
+    /// peers win ties, distant continents fade from selection (§4.1 made
+    /// WAN-aware). Flat worlds skip the reweight entirely.
     fn stake_snapshot(&self, now: Time) -> StakeSnapshot {
         let mut snap = StakeSnapshot::new(&self.ledger.stakes(), Some(self.id));
         snap.retain(|n| self.view.is_alive(n, now));
+        if self.policy.latency_penalty > 0.0 && !self.latency_est.is_empty() {
+            let penalty = self.policy.latency_penalty;
+            snap.reweight(|n| {
+                1.0 / (1.0 + penalty * self.expected_latency_to(n))
+            });
+        }
         snap
     }
 
@@ -968,7 +1026,7 @@ mod tests {
             },
             &shared,
         );
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
         // duel_rate 0 for a deterministic single probe
         n0.system.duel_rate = 0.0;
         let actions = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
@@ -996,7 +1054,7 @@ mod tests {
             &shared,
         );
         n0.system.duel_rate = 0.0;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
         n1.policy.accept_freq = 1.0;
 
         let bal0 = shared.lock().unwrap().balance(NodeId(0));
@@ -1067,7 +1125,7 @@ mod tests {
         );
         n0.system.duel_rate = 0.0;
         n0.system.max_probes = 2;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
 
         let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
         let Action::Send { msg: Message::Probe { req_id, .. }, .. } = a[0]
@@ -1114,7 +1172,7 @@ mod tests {
             &shared,
         );
         n0.system.duel_rate = 0.0;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
         n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
         assert_eq!(n0.backend().running_len(), 0);
         // Silence until past PROBE_TIMEOUT.
@@ -1144,7 +1202,7 @@ mod tests {
         nodes[0].policy.target_utilization = 0.0;
         nodes[0].policy.offload_freq = 1.0;
         for i in 1..5u32 {
-            nodes[0].view.merge(&vec![(NodeId(i), 1, true, 0)], 0.0);
+            nodes[0].view.merge(&vec![(NodeId(i), 1, true, 0, 0)], 0.0);
         }
 
         // Kick off: two Delegate{duel} sends.
@@ -1234,7 +1292,7 @@ mod tests {
     fn leave_gossips_goodbye() {
         let shared = Arc::new(Mutex::new(SharedLedger::new()));
         let mut n = mk_node(0, NodePolicy::default(), &shared);
-        n.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+        n.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
         let a = n.handle(Event::Leave, 1.0);
         assert!(a.iter().any(|x| matches!(
             x,
@@ -1251,11 +1309,56 @@ mod tests {
         let _n1 = mk_node(1, NodePolicy::default(), &shared);
         let mut n0 = mk_node(0, NodePolicy::requester_only(), &shared);
         n0.system.duel_rate = 0.0;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
         let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
         assert!(a
             .iter()
             .any(|x| matches!(x, Action::Send { msg: Message::Probe { .. }, .. })));
         assert_eq!(n0.backend().running_len(), 0);
+    }
+
+    #[test]
+    fn locality_penalty_prefers_near_candidates() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        // Equal stakes: node 1 shares n0's region, node 2 is an ocean away.
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let _n2 = mk_node(2, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                latency_penalty: 50.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        n0.set_locality(0, vec![vec![0.005, 0.100], vec![0.100, 0.005]]);
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
+
+        let mut near = 0usize;
+        let mut far = 0usize;
+        for seq in 0..400u64 {
+            let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);
+            for act in &a {
+                match act {
+                    Action::Send { to, msg: Message::Probe { .. } } => {
+                        if *to == NodeId(1) {
+                            near += 1;
+                        } else {
+                            far += 1;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // Damping 1/(1+50*0.005)=0.8 vs 1/(1+50*0.1)=0.167: ~83% near.
+        assert!(
+            near > far * 2,
+            "locality penalty ignored: near={near} far={far}"
+        );
     }
 }

@@ -11,7 +11,7 @@
 //! Convergence (epidemic diffusion, O(log N) rounds) is property-tested in
 //! `rust/tests/prop_gossip.rs` and measured in `benches/gossip_convergence.rs`.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::types::{NodeId, Time};
 use crate::util::rng::Rng;
@@ -26,6 +26,9 @@ pub struct PeerEntry {
     pub online: bool,
     /// Opaque endpoint (the TCP runner stores "host:port"; sim leaves 0).
     pub endpoint: u64,
+    /// The peer's topology region tag (locality-aware dispatch); 0 in
+    /// single-region worlds.
+    pub region: u32,
     /// Local time we last saw this entry's version advance.
     pub last_seen: Time,
 }
@@ -47,6 +50,17 @@ impl Default for GossipConfig {
     }
 }
 
+/// Per-round probability of gossiping at one *suspected* peer (online per
+/// its last word, but heartbeat-aged — a crash or a network partition).
+/// Without this probe a healed partition would never re-merge: every
+/// surviving node's alive pool is non-empty, so the empty-pool fallback
+/// never fires and aged-out peers would stay invisible forever. A lost
+/// probe costs one message; a successful one pulls the whole remote side's
+/// view back in (SWIM-style suspicion, simplified). Only rolls — and only
+/// consumes RNG draws — when suspects exist, so churn-free runs replay
+/// identically to the pre-topology fabric.
+pub const RESURRECT_PROB: f64 = 0.15;
+
 /// One node's local membership view.
 #[derive(Debug, Clone)]
 pub struct PeerView {
@@ -56,14 +70,20 @@ pub struct PeerView {
 }
 
 /// A serializable digest exchanged during a gossip round.
-pub type Digest = Vec<(NodeId, u64, bool, u64)>; // (node, version, online, endpoint)
+pub type Digest = Vec<(NodeId, u64, bool, u64, u32)>; // (node, version, online, endpoint, region)
 
 impl PeerView {
     pub fn new(me: NodeId, cfg: GossipConfig, now: Time) -> Self {
         let mut entries = HashMap::new();
         entries.insert(
             me,
-            PeerEntry { version: 1, online: true, endpoint: 0, last_seen: now },
+            PeerEntry {
+                version: 1,
+                online: true,
+                endpoint: 0,
+                region: 0,
+                last_seen: now,
+            },
         );
         PeerView { me, entries, cfg }
     }
@@ -73,13 +93,25 @@ impl PeerView {
     }
 
     /// Seed knowledge of a bootstrap peer (e.g. from the config file).
-    pub fn add_seed(&mut self, peer: NodeId, endpoint: u64, now: Time) {
+    pub fn add_seed(&mut self, peer: NodeId, endpoint: u64, region: u32, now: Time) {
         self.entries.entry(peer).or_insert(PeerEntry {
             version: 0,
             online: true,
             endpoint,
+            region,
             last_seen: now,
         });
+    }
+
+    /// Declare our own region (gossiped out with every digest).
+    pub fn set_region(&mut self, region: u32) {
+        self.entries.get_mut(&self.me).expect("self entry exists").region =
+            region;
+    }
+
+    /// The region tag we last heard for `peer` (None if unknown peer).
+    pub fn region_of(&self, peer: NodeId) -> Option<u32> {
+        self.entries.get(&peer).map(|e| e.region)
     }
 
     /// Bump our own heartbeat (start of each gossip round). A heartbeat
@@ -139,6 +171,21 @@ impl PeerView {
         v
     }
 
+    /// All alive peers (excluding self) grouped by their region tag —
+    /// deterministic order (BTreeMap, sorted peer lists).
+    pub fn alive_peers_by_region(&self, now: Time) -> BTreeMap<u32, Vec<NodeId>> {
+        let mut by_region: BTreeMap<u32, Vec<NodeId>> = BTreeMap::new();
+        for (n, e) in &self.entries {
+            if *n != self.me && self.is_alive(*n, now) {
+                by_region.entry(e.region).or_default().push(*n);
+            }
+        }
+        for v in by_region.values_mut() {
+            v.sort();
+        }
+        by_region
+    }
+
     pub fn endpoint(&self, peer: NodeId) -> Option<u64> {
         self.entries.get(&peer).map(|e| e.endpoint)
     }
@@ -158,7 +205,8 @@ impl PeerView {
     /// node isolated forever.
     pub fn pick_targets(&self, rng: &mut Rng, now: Time) -> Vec<NodeId> {
         let mut pool = self.alive_peers(now);
-        if pool.is_empty() {
+        let fallback = pool.is_empty();
+        if fallback {
             pool = self
                 .entries
                 .keys()
@@ -171,7 +219,27 @@ impl PeerView {
             return vec![];
         }
         let idx = rng.sample_distinct(pool.len(), self.cfg.fanout);
-        idx.into_iter().map(|i| pool[i]).collect()
+        let mut targets: Vec<NodeId> =
+            idx.into_iter().map(|i| pool[i]).collect();
+        // Suspicion probe: occasionally add one heartbeat-aged peer that
+        // never said goodbye, so crashed-and-recovered nodes and healed
+        // partitions can rejoin (see [`RESURRECT_PROB`]). Skipped in
+        // fallback mode — the pool already holds every known peer.
+        if !fallback {
+            let mut suspects: Vec<NodeId> = self
+                .entries
+                .iter()
+                .filter(|(n, e)| {
+                    **n != self.me && e.online && !self.is_alive(**n, now)
+                })
+                .map(|(n, _)| *n)
+                .collect();
+            if !suspects.is_empty() && rng.chance(RESURRECT_PROB) {
+                suspects.sort();
+                targets.push(suspects[rng.below(suspects.len())]);
+            }
+        }
+        targets
     }
 
     /// Serialize the view for transmission.
@@ -179,7 +247,7 @@ impl PeerView {
         let mut d: Digest = self
             .entries
             .iter()
-            .map(|(n, e)| (*n, e.version, e.online, e.endpoint))
+            .map(|(n, e)| (*n, e.version, e.online, e.endpoint, e.region))
             .collect();
         d.sort_by_key(|(n, ..)| *n);
         d
@@ -189,7 +257,7 @@ impl PeerView {
     /// entries changed (new information learned).
     pub fn merge(&mut self, digest: &Digest, now: Time) -> Vec<NodeId> {
         let mut changed = Vec::new();
-        for (node, version, online, endpoint) in digest {
+        for (node, version, online, endpoint, region) in digest {
             if *node == self.me {
                 // Nobody can overwrite our self-entry (our version is
                 // authoritative — prevents spoofed "you are offline").
@@ -199,15 +267,17 @@ impl PeerView {
                 version: 0,
                 online: false,
                 endpoint: *endpoint,
+                region: *region,
                 last_seen: now - self.cfg.suspect_after - 1.0,
             });
             if *version > e.version {
-                let was = (e.version, e.online, e.endpoint);
+                let was = (e.version, e.online, e.endpoint, e.region);
                 e.version = *version;
                 e.online = *online;
                 e.endpoint = *endpoint;
+                e.region = *region;
                 e.last_seen = now;
-                if was != (*version, *online, *endpoint) {
+                if was != (*version, *online, *endpoint, *region) {
                     changed.push(*node);
                 }
             }
@@ -244,8 +314,8 @@ mod tests {
     #[test]
     fn higher_version_wins_lower_ignored() {
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
-        let digest_v5: Digest = vec![(NodeId(2), 5, true, 7)];
-        let digest_v3: Digest = vec![(NodeId(2), 3, false, 9)];
+        let digest_v5: Digest = vec![(NodeId(2), 5, true, 7, 1)];
+        let digest_v3: Digest = vec![(NodeId(2), 3, false, 9, 2)];
         a.merge(&digest_v5, 1.0);
         let changed = a.merge(&digest_v3, 2.0);
         assert!(changed.is_empty());
@@ -258,7 +328,7 @@ mod tests {
     #[test]
     fn self_entry_cannot_be_spoofed() {
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
-        let spoof: Digest = vec![(NodeId(0), 99, false, 0)];
+        let spoof: Digest = vec![(NodeId(0), 99, false, 0, 3)];
         a.merge(&spoof, 1.0);
         let e = a.entry(NodeId(0)).unwrap();
         assert_eq!(e.version, 1);
@@ -268,11 +338,11 @@ mod tests {
     #[test]
     fn heartbeat_aging_suspects_silent_peer() {
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
-        a.merge(&vec![(NodeId(1), 4, true, 0)], 0.0);
+        a.merge(&vec![(NodeId(1), 4, true, 0, 0)], 0.0);
         assert!(a.is_alive(NodeId(1), 4.9));
         assert!(!a.is_alive(NodeId(1), 5.1));
         // Progress resets the clock.
-        a.merge(&vec![(NodeId(1), 5, true, 0)], 6.0);
+        a.merge(&vec![(NodeId(1), 5, true, 0, 0)], 6.0);
         assert!(a.is_alive(NodeId(1), 10.0));
     }
 
@@ -292,8 +362,8 @@ mod tests {
     fn endpoint_update_via_version_bump() {
         // Figure 10's "Node 3 changed address" case.
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
-        a.merge(&vec![(NodeId(3), 2, true, 1111)], 0.0);
-        a.merge(&vec![(NodeId(3), 3, true, 2222)], 1.0);
+        a.merge(&vec![(NodeId(3), 2, true, 1111, 0)], 0.0);
+        a.merge(&vec![(NodeId(3), 3, true, 2222, 0)], 1.0);
         assert_eq!(a.endpoint(NodeId(3)), Some(2222));
     }
 
@@ -301,9 +371,9 @@ mod tests {
     fn pick_targets_only_alive_and_bounded() {
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
         for i in 1..=5u32 {
-            a.merge(&vec![(NodeId(i), 1, true, 0)], 0.0);
+            a.merge(&vec![(NodeId(i), 1, true, 0, 0)], 0.0);
         }
-        a.merge(&vec![(NodeId(9), 1, false, 0)], 0.0); // offline
+        a.merge(&vec![(NodeId(9), 1, false, 0, 0)], 0.0); // offline
         let mut rng = Rng::new(0);
         for _ in 0..50 {
             let t = a.pick_targets(&mut rng, 1.0);
@@ -323,7 +393,7 @@ mod tests {
         // Ring bootstrap: i knows i+1.
         for i in 0..n as usize {
             let peer = NodeId(((i + 1) % n as usize) as u32);
-            views[i].add_seed(peer, 0, 0.0);
+            views[i].add_seed(peer, 0, 0, 0.0);
         }
         let mut rng = Rng::new(7);
         for round in 0..6 {
@@ -345,5 +415,57 @@ mod tests {
         for v in &views {
             assert_eq!(v.known(), n as usize, "node {} incomplete", v.me);
         }
+    }
+
+    #[test]
+    fn suspicion_probe_reaches_aged_peer_but_not_leavers() {
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        a.merge(&vec![(NodeId(1), 5, true, 0, 0)], 10.0); // stays alive
+        a.merge(&vec![(NodeId(2), 5, true, 0, 0)], 0.0); // will age out
+        a.merge(&vec![(NodeId(3), 5, false, 0, 0)], 0.0); // graceful goodbye
+        let mut rng = Rng::new(6);
+        let mut probed_suspect = 0;
+        for _ in 0..300 {
+            let t = a.pick_targets(&mut rng, 10.0);
+            assert!(!t.contains(&NodeId(3)), "leaver must not be probed");
+            if t.contains(&NodeId(2)) {
+                probed_suspect += 1;
+            }
+        }
+        assert!(
+            probed_suspect > 10,
+            "aged peer never suspicion-probed ({probed_suspect}/300)"
+        );
+    }
+
+    #[test]
+    fn region_tags_ride_digests() {
+        let mut b = PeerView::new(NodeId(1), cfg(), 0.0);
+        b.set_region(2);
+        b.heartbeat(0.1);
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        a.merge(&b.digest(), 0.2);
+        assert_eq!(a.region_of(NodeId(1)), Some(2));
+        // Region changes propagate with a version bump, like endpoints.
+        b.set_region(3);
+        b.heartbeat(0.3);
+        a.merge(&b.digest(), 0.4);
+        assert_eq!(a.region_of(NodeId(1)), Some(3));
+        assert_eq!(a.region_of(NodeId(42)), None);
+    }
+
+    #[test]
+    fn alive_peers_grouped_by_region() {
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        a.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        a.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
+        a.merge(&vec![(NodeId(3), 1, true, 0, 1)], 0.0);
+        a.merge(&vec![(NodeId(4), 1, false, 0, 1)], 0.0); // offline
+        let by = a.alive_peers_by_region(1.0);
+        assert_eq!(by[&0], vec![NodeId(1)]);
+        assert_eq!(by[&1], vec![NodeId(2), NodeId(3)]);
+        assert_eq!(by.len(), 2);
+        // Aged-out peers drop from every group.
+        assert!(a.alive_peers_by_region(100.0).is_empty());
     }
 }

@@ -12,6 +12,23 @@
 //! Start with [`sim::World`] (deterministic multi-node simulation),
 //! [`coordinator::Node`] (the sans-io node state machine), or
 //! [`runtime::Engine`] (load + execute `artifacts/*.hlo.txt`).
+//!
+//! ## Geo-distributed topology
+//!
+//! The [`topology`] module makes the *global* in "interconnecting global
+//! LLM services" first-class: named regions, a per-region-pair link matrix
+//! (latency range + jitter + bandwidth), per-node placement, and a
+//! scheduled scenario layer (degrade / partition / heal link events). The
+//! simulator routes every message through [`topology::Topology`];
+//! membership gossips region tags ([`gossip::PeerView`]), and dispatch
+//! becomes locality-aware through `NodePolicy::latency_penalty` (PoS
+//! candidate weights damped by expected WAN latency). Scenarios are
+//! declarative: the `config` module parses a `"topology"` block, and
+//! `workload::diurnal_phases` builds follow-the-sun regional load.
+//! A single-region topology replays the flat-latency model bit-for-bit,
+//! so the pre-topology benches and figures are unchanged. See
+//! `benches/geo_scale.rs` for the three-continent scenario with a
+//! mid-run trans-continental partition.
 
 pub mod backend;
 pub mod benchlib;
@@ -30,6 +47,7 @@ pub mod repro;
 pub mod runtime;
 pub mod schedulers;
 pub mod sim;
+pub mod topology;
 pub mod types;
 pub mod util;
 pub mod workload;

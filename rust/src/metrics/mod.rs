@@ -43,6 +43,14 @@ impl Recorder {
         self.records.iter().filter(|r| r.synthetic).count()
     }
 
+    /// A sub-recorder holding only records matching `pred` — composes with
+    /// every statistic (per-region SLO attainment, per-executor latency...).
+    pub fn filtered(&self, pred: impl Fn(&RequestRecord) -> bool) -> Recorder {
+        Recorder {
+            records: self.records.iter().filter(|r| pred(r)).cloned().collect(),
+        }
+    }
+
     /// Fraction of user requests completing within their SLO deadline.
     pub fn slo_attainment(&self) -> f64 {
         let (met, total) = self
@@ -265,6 +273,19 @@ mod tests {
         let m = r.served_by();
         assert_eq!(m[&NodeId(1)], 2);
         assert_eq!(m[&NodeId(2)], 1);
+    }
+
+    #[test]
+    fn filtered_subsets_statistics() {
+        let r = sample();
+        let by_exec1 = r.filtered(|rec| rec.executor == NodeId(1));
+        assert_eq!(by_exec1.len(), 2);
+        // latencies 10, 20 -> mean 15, one of two met.
+        assert!((by_exec1.mean_latency() - 15.0).abs() < 1e-12);
+        assert!((by_exec1.slo_attainment() - 0.5).abs() < 1e-12);
+        let none = r.filtered(|_| false);
+        assert_eq!(none.len(), 0);
+        assert_eq!(none.slo_attainment(), 0.0);
     }
 
     #[test]

@@ -32,6 +32,13 @@ pub struct NodePolicy {
     /// Refuse delegated work entirely (a "requester-only" node, used by the
     /// §7 ablation workloads).
     pub requester_only: bool,
+    /// Locality preference for geo-distributed worlds (per-second weight).
+    /// PoS candidate weights are damped by `1 / (1 + penalty * latency)`
+    /// using the topology's expected one-way latency to the candidate, and
+    /// `should_offload` is damped the same way by the latency of the
+    /// *nearest* live candidate. 0 (default) reproduces region-blind
+    /// dispatch exactly.
+    pub latency_penalty: f64,
 }
 
 impl Default for NodePolicy {
@@ -44,6 +51,7 @@ impl Default for NodePolicy {
             queue_threshold: 4,
             prioritize_own: true,
             requester_only: false,
+            latency_penalty: 0.0,
         }
     }
 }
@@ -61,11 +69,19 @@ impl NodePolicy {
 
     /// Should this node try to offload a request right now?
     /// `utilization` = running/max_batch of the local backend,
-    /// `queue_len` = requests waiting locally.
+    /// `queue_len` = requests waiting locally,
+    /// `nearest_latency` = expected one-way latency to the closest live
+    /// delegation candidate (0.0 in single-region worlds or when the node
+    /// has no locality information).
+    ///
+    /// RNG discipline: at most one draw, taken only under pressure — with
+    /// `latency_penalty == 0` the damping factor is exactly 1.0, so flat
+    /// worlds replay bit-identically to the pre-topology behaviour.
     pub fn should_offload(
         &self,
         utilization: f64,
         queue_len: usize,
+        nearest_latency: f64,
         rng: &mut Rng,
     ) -> bool {
         if self.requester_only {
@@ -73,7 +89,11 @@ impl NodePolicy {
         }
         let pressured = utilization >= self.target_utilization
             || queue_len > self.queue_threshold;
-        pressured && rng.chance(self.offload_freq)
+        if !pressured {
+            return false;
+        }
+        let damp = 1.0 / (1.0 + self.latency_penalty * nearest_latency.max(0.0));
+        rng.chance(self.offload_freq * damp)
     }
 
     /// Should this node accept a delegated request it was probed for?
@@ -160,9 +180,9 @@ mod tests {
     fn offload_requires_pressure() {
         let p = NodePolicy { offload_freq: 1.0, ..Default::default() };
         let mut rng = Rng::new(0);
-        assert!(!p.should_offload(0.1, 0, &mut rng));
-        assert!(p.should_offload(0.9, 0, &mut rng));
-        assert!(p.should_offload(0.1, 10, &mut rng));
+        assert!(!p.should_offload(0.1, 0, 0.0, &mut rng));
+        assert!(p.should_offload(0.9, 0, 0.0, &mut rng));
+        assert!(p.should_offload(0.1, 10, 0.0, &mut rng));
     }
 
     #[test]
@@ -171,10 +191,35 @@ mod tests {
         let mut rng = Rng::new(1);
         let n = 100_000;
         let hits = (0..n)
-            .filter(|_| p.should_offload(1.0, 100, &mut rng))
+            .filter(|_| p.should_offload(1.0, 100, 0.0, &mut rng))
             .count();
         let f = hits as f64 / n as f64;
         assert!((f - 0.25).abs() < 0.01, "f={f}");
+    }
+
+    #[test]
+    fn latency_penalty_damps_offload() {
+        // p = 20/s, nearest candidate 0.1 s away -> damp = 1/3, so the
+        // effective offload frequency drops from 0.9 to 0.3.
+        let p = NodePolicy {
+            offload_freq: 0.9,
+            latency_penalty: 20.0,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let hits = (0..n)
+            .filter(|_| p.should_offload(1.0, 100, 0.1, &mut rng))
+            .count();
+        let f = hits as f64 / n as f64;
+        assert!((f - 0.3).abs() < 0.01, "f={f}");
+        // Zero penalty ignores distance entirely.
+        let blind = NodePolicy { offload_freq: 0.9, ..Default::default() };
+        let hits = (0..n)
+            .filter(|_| blind.should_offload(1.0, 100, 10.0, &mut rng))
+            .count();
+        let f = hits as f64 / n as f64;
+        assert!((f - 0.9).abs() < 0.01, "f={f}");
     }
 
     #[test]
@@ -190,7 +235,7 @@ mod tests {
     fn requester_only_never_accepts_always_offloads() {
         let p = NodePolicy::requester_only();
         let mut rng = Rng::new(3);
-        assert!(p.should_offload(0.0, 0, &mut rng));
+        assert!(p.should_offload(0.0, 0, 0.0, &mut rng));
         assert!(!p.should_accept(0.0, 0, &mut rng));
     }
 

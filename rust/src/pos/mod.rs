@@ -51,6 +51,16 @@ impl StakeSnapshot {
         self.alias = None;
     }
 
+    /// Scale each candidate's weight by `factor(node)` (locality-aware
+    /// dispatch multiplies stake by a latency damping term). Factors must be
+    /// non-negative; a zero factor removes the candidate from selection.
+    pub fn reweight(&mut self, factor: impl Fn(NodeId) -> f64) {
+        for (n, w) in self.nodes.iter().zip(self.stakes.iter_mut()) {
+            *w *= factor(*n).max(0.0);
+        }
+        self.alias = None;
+    }
+
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
@@ -211,6 +221,31 @@ mod tests {
         assert!((s.probability(NodeId(2)) - 0.5).abs() < 1e-12);
         assert_eq!(s.probability(NodeId(3)), 0.0);
         assert_eq!(s.probability(NodeId(9)), 0.0);
+    }
+
+    #[test]
+    fn reweight_shifts_selection_mass() {
+        let mut s = snapshot();
+        // Damp node 2 (stake 300) by 10x: node 1 (stake 200) now dominates.
+        s.reweight(|n| if n == NodeId(2) { 0.1 } else { 1.0 });
+        let mut rng = Rng::new(9);
+        let n = 200_000;
+        let mut c1 = 0usize;
+        let mut c2 = 0usize;
+        for _ in 0..n {
+            match s.sample(&mut rng) {
+                Some(NodeId(1)) => c1 += 1,
+                Some(NodeId(2)) => c2 += 1,
+                _ => {}
+            }
+        }
+        // Weights: 100, 200, 30 -> node 1 at ~0.606, node 2 at ~0.091.
+        let f1 = c1 as f64 / n as f64;
+        let f2 = c2 as f64 / n as f64;
+        assert!((f1 - 200.0 / 330.0).abs() < 0.01, "f1={f1}");
+        assert!((f2 - 30.0 / 330.0).abs() < 0.01, "f2={f2}");
+        // probability() reflects the damped weights too.
+        assert!((s.probability(NodeId(2)) - 30.0 / 330.0).abs() < 1e-12);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::gossip::GossipConfig;
 use crate::ledger::{Block, CreditOp, OpReason, SharedLedger};
 use crate::metrics::{Recorder, TimeSeries};
 use crate::policy::{NodePolicy, SystemPolicy};
+use crate::topology::Topology;
 use crate::types::{NodeId, Time};
 use crate::util::rng::Rng;
 use crate::workload::Generator;
@@ -38,8 +39,13 @@ pub struct WorldConfig {
     pub system: SystemPolicy,
     pub gossip: GossipConfig,
     pub ledger: LedgerMode,
-    /// Uniform one-way message latency range in seconds.
+    /// Uniform one-way message latency range in seconds — the flat network
+    /// model, used when `topology` is `None` (wrapped into a single-region
+    /// [`Topology`] that replays bit-identically).
     pub net_latency: (f64, f64),
+    /// Geo-distributed WAN structure: regions, link matrix, node placement
+    /// and scheduled partitions. `None` = flat single-region network.
+    pub topology: Option<Topology>,
     /// Node pump period (gossip rounds, timeout scans).
     pub tick_interval: f64,
     /// Period for sampling per-node credit totals (Figure 6 curves);
@@ -55,9 +61,35 @@ impl Default for WorldConfig {
             gossip: GossipConfig::default(),
             ledger: LedgerMode::Shared,
             net_latency: (0.02, 0.08),
+            topology: None,
             tick_interval: 1.0,
             credit_sample_interval: 5.0,
         }
+    }
+}
+
+impl WorldConfig {
+    /// Panics with a descriptive message on invalid configuration — the
+    /// seed silently clamped an inverted latency range; misconfigured
+    /// experiments should fail loudly at construction instead.
+    pub fn validate(&self) {
+        let (lo, hi) = self.net_latency;
+        assert!(
+            lo.is_finite() && hi.is_finite() && lo >= 0.0,
+            "WorldConfig.net_latency bounds must be finite and non-negative, \
+             got ({lo}, {hi})"
+        );
+        assert!(lo <= hi, "WorldConfig.net_latency: lo {lo} > hi {hi}");
+        assert!(
+            self.tick_interval > 0.0 && self.tick_interval.is_finite(),
+            "WorldConfig.tick_interval must be > 0, got {}",
+            self.tick_interval
+        );
+        assert!(
+            self.credit_sample_interval >= 0.0,
+            "WorldConfig.credit_sample_interval must be >= 0, got {}",
+            self.credit_sample_interval
+        );
     }
 }
 
@@ -99,6 +131,8 @@ enum WorldEvent {
     Node(usize, Event),
     Tick(usize),
     SampleCredits,
+    /// Apply scheduled topology event `idx` (degrade/partition/heal).
+    Link(usize),
 }
 
 struct Queued {
@@ -136,6 +170,9 @@ pub struct World {
     now: Time,
     rng: Rng,
     next_wake: Vec<Time>,
+    /// WAN structure every message routes through (single-region when
+    /// `cfg.topology` is None — replays the flat model bit-for-bit).
+    topology: Topology,
     /// Only present in Shared ledger mode.
     shared: Option<Arc<Mutex<SharedLedger>>>,
     pub recorder: Recorder,
@@ -146,11 +183,21 @@ pub struct World {
     pub running_series: Vec<TimeSeries>,
     pub messages_sent: u64,
     pub bytes_sent: u64,
+    /// Messages lost to partitioned links.
+    pub messages_dropped: u64,
 }
 
 impl World {
     pub fn new(cfg: WorldConfig, setups: Vec<NodeSetup>) -> World {
         let n = setups.len();
+        cfg.validate();
+        let topology = cfg
+            .topology
+            .clone()
+            .unwrap_or_else(|| Topology::single_region(cfg.net_latency));
+        topology.validate(n);
+        let geo = topology.num_regions() > 1;
+        let latency_est = topology.expected_latency_matrix();
         let mut rng = Rng::new(cfg.seed);
         let shared = match cfg.ledger {
             LedgerMode::Shared => Some(Arc::new(Mutex::new(SharedLedger::new()))),
@@ -218,18 +265,27 @@ impl World {
                 cfg.seed.wrapping_mul(31).wrapping_add(i as u64),
                 0.0,
             );
-            // Bootstrap membership: everyone knows everyone's address; the
-            // initially-offline are seeded as offline (they gossip alive
-            // when they join — Fig. 5a).
+            // Geo placement: tag the node with its region and hand it the
+            // expected-latency matrix so `latency_penalty` can bite.
+            if geo {
+                node.set_locality(
+                    topology.region_of(i) as u32,
+                    latency_est.clone(),
+                );
+            }
+            // Bootstrap membership: everyone knows everyone's address (and
+            // home region); the initially-offline are seeded as offline
+            // (they gossip alive when they join — Fig. 5a).
             for (j, other) in setups.iter().enumerate() {
                 if i == j {
                     continue;
                 }
                 let jid = NodeId(j as u32);
+                let jregion = topology.region_of(j) as u32;
                 if other.start_offline {
-                    node.view.merge(&vec![(jid, 0, false, 0)], 0.0);
+                    node.view.merge(&vec![(jid, 0, false, 0, jregion)], 0.0);
                 } else {
-                    node.view.add_seed(jid, 0, 0.0);
+                    node.view.add_seed(jid, 0, jregion, 0.0);
                 }
             }
             if setup.start_offline {
@@ -246,6 +302,7 @@ impl World {
             now: 0.0,
             rng: rng.fork(0xF00D),
             next_wake: vec![f64::INFINITY; n],
+            topology,
             shared,
             recorder: Recorder::new(),
             duel_stats: DuelStats::default(),
@@ -253,6 +310,7 @@ impl World {
             running_series: vec![TimeSeries::new(); n],
             messages_sent: 0,
             bytes_sent: 0,
+            messages_dropped: 0,
         };
 
         // Arrival traces.
@@ -272,6 +330,18 @@ impl World {
         // Credit samples.
         if cfg.credit_sample_interval > 0.0 {
             world.push(cfg.credit_sample_interval, WorldEvent::SampleCredits);
+        }
+        // Scheduled WAN scenario (degrade/partition/heal). Pushed last so a
+        // topology-free world enqueues exactly the seed's event sequence.
+        let link_times: Vec<(usize, Time)> = world
+            .topology
+            .events()
+            .iter()
+            .enumerate()
+            .map(|(idx, ev)| (idx, ev.at))
+            .collect();
+        for (idx, at) in link_times {
+            world.push(at, WorldEvent::Link(idx));
         }
         world
     }
@@ -299,12 +369,12 @@ impl World {
         self.push(t, WorldEvent::Node(node, Event::UserRequest(req)));
     }
 
-    fn sample_latency(&mut self) -> Time {
-        let (lo, hi) = self.cfg.net_latency;
-        if hi <= lo {
-            return lo;
-        }
-        self.rng.range_f64(lo, hi)
+    /// One-way delay for a message from node `src` to node `dst`, routed
+    /// through the topology's link matrix; `None` when the connecting link
+    /// is partitioned (the message is lost). Single-region topologies
+    /// reproduce the seed's flat `sample_latency` draw exactly.
+    fn sample_delay(&mut self, src: usize, dst: usize, bytes: usize) -> Option<Time> {
+        self.topology.sample_delay(src, dst, bytes, &mut self.rng)
     }
 
     // ---- the loop -----------------------------------------------------------
@@ -336,6 +406,9 @@ impl World {
                     let next = self.now + self.cfg.credit_sample_interval;
                     self.push(next, WorldEvent::SampleCredits);
                 }
+                WorldEvent::Link(idx) => {
+                    self.topology.apply_event(idx);
+                }
             }
         }
         self.now = horizon.max(self.now);
@@ -347,10 +420,21 @@ impl World {
             match a {
                 Action::Send { to, msg } => {
                     self.messages_sent += 1;
-                    self.bytes_sent += msg.wire_size() as u64;
-                    let lat = self.sample_latency();
-                    let ev = Event::Message { from: NodeId(from as u32), msg };
-                    self.push(self.now + lat, WorldEvent::Node(to.0 as usize, ev));
+                    let bytes = msg.wire_size();
+                    self.bytes_sent += bytes as u64;
+                    match self.sample_delay(from, to.0 as usize, bytes) {
+                        Some(lat) => {
+                            let ev =
+                                Event::Message { from: NodeId(from as u32), msg };
+                            self.push(
+                                self.now + lat,
+                                WorldEvent::Node(to.0 as usize, ev),
+                            );
+                        }
+                        // Partitioned link: the fabric silently eats the
+                        // message; timeouts and gossip aging do the rest.
+                        None => self.messages_dropped += 1,
+                    }
                 }
                 Action::Done(rec) => self.recorder.record(rec),
                 Action::WakeAt(t) => {
@@ -398,6 +482,30 @@ impl World {
         self.shared.clone()
     }
 
+    /// The WAN structure this world routes through.
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    /// Per-region user-request summary keyed by *origin* region:
+    /// `(region name, SLO attainment, p99 latency, completed)`. A
+    /// single-region world returns one row covering everything.
+    pub fn region_summary(&self) -> Vec<(String, f64, f64, usize)> {
+        (0..self.topology.num_regions())
+            .map(|r| {
+                let rec = self.recorder.filtered(|rec| {
+                    self.topology.region_of(rec.origin.0 as usize) == r
+                });
+                (
+                    self.topology.region_name(r).to_string(),
+                    rec.slo_attainment(),
+                    rec.latency_percentile(0.99),
+                    rec.user_records().count(),
+                )
+            })
+            .collect()
+    }
+
     /// Total credits per node at the end of a run.
     pub fn credit_totals(&self) -> Vec<f64> {
         self.nodes
@@ -410,6 +518,7 @@ impl World {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::topology::{LinkChange, LinkProfile};
     use crate::workload::Phase;
 
     fn setup_uniform(n: usize, ia: f64) -> Vec<NodeSetup> {
@@ -549,6 +658,87 @@ mod tests {
             "only {} duels settled",
             w.duel_stats.total_duels()
         );
+    }
+
+    #[test]
+    fn explicit_single_region_topology_matches_flat() {
+        // Backward compatibility: wrapping the flat latency range into a
+        // one-region topology must replay the identical simulation.
+        let fingerprint = |cfg: WorldConfig| {
+            let mut w = World::new(cfg, setup_uniform(4, 3.0));
+            w.run_until(300.0);
+            (
+                w.recorder.len(),
+                (w.recorder.mean_latency() * 1e9) as u64,
+                w.messages_sent,
+                w.messages_dropped,
+                w.credit_totals()
+                    .iter()
+                    .map(|c| (c * 1e6) as u64)
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let flat = fingerprint(WorldConfig { seed: 11, ..Default::default() });
+        let topo = fingerprint(WorldConfig {
+            seed: 11,
+            topology: Some(Topology::single_region((0.02, 0.08))),
+            ..Default::default()
+        });
+        assert_eq!(flat, topo);
+        assert_eq!(flat.3, 0, "no drops without partitions");
+    }
+
+    #[test]
+    #[should_panic(expected = "net_latency")]
+    fn inverted_net_latency_panics() {
+        let cfg = WorldConfig { net_latency: (0.08, 0.02), ..Default::default() };
+        World::new(cfg, setup_uniform(2, 5.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "node assignments")]
+    fn topology_node_count_mismatch_panics() {
+        let topo = Topology::builder()
+            .region("a")
+            .region("b")
+            .nodes("a", 5)
+            .build();
+        let cfg = WorldConfig { topology: Some(topo), ..Default::default() };
+        World::new(cfg, setup_uniform(3, 5.0));
+    }
+
+    #[test]
+    fn full_partition_drops_messages_and_splits_views() {
+        // Two regions, two nodes each; the inter link partitions at t=30
+        // and never heals. Cross-region peers must age out of the gossip
+        // views while intra-region peers stay alive.
+        let topo = Topology::builder()
+            .region("west")
+            .region("east")
+            .default_intra(LinkProfile::new(0.001, 0.004))
+            .link("west", "east", LinkProfile::new(0.04, 0.06))
+            .nodes("west", 2)
+            .nodes("east", 2)
+            .event("west", "east", 30.0, LinkChange::Partition)
+            .build();
+        let cfg = WorldConfig {
+            seed: 5,
+            topology: Some(topo),
+            ..Default::default()
+        };
+        let mut w = World::new(cfg, setup_uniform(4, 1e12));
+        w.run_until(120.0);
+        assert!(w.messages_dropped > 0, "partition dropped nothing");
+        let now = w.now();
+        // Intra-region liveness survives; cross-region is suspected dead.
+        assert!(w.node(0).view.is_alive(NodeId(1), now));
+        assert!(w.node(2).view.is_alive(NodeId(3), now));
+        assert!(!w.node(0).view.is_alive(NodeId(2), now));
+        assert!(!w.node(3).view.is_alive(NodeId(0), now));
+        // Per-region grouping reflects the split world.
+        let by = w.node(0).view.alive_peers_by_region(now);
+        assert_eq!(by.get(&0), Some(&vec![NodeId(1)]));
+        assert!(by.get(&1).is_none());
     }
 
     #[test]

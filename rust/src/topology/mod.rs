@@ -1,0 +1,697 @@
+//! Geo-distributed WAN topology: regions, link model, and scheduled
+//! partitions.
+//!
+//! The seed simulator modelled the network as one flat uniform latency range
+//! — every hop cost the same whether peers shared a rack or an ocean. This
+//! subsystem makes WAN structure first-class:
+//!
+//! * named **regions** with per-node region assignment;
+//! * a per-region-pair **link matrix** ([`LinkProfile`]: uniform base
+//!   latency, exponential jitter tail, finite bandwidth for payload-sized
+//!   transfer cost);
+//! * a scheduled **scenario layer** ([`LinkEvent`]: degrade / partition /
+//!   heal between region pairs at given times), applied by the simulator as
+//!   ordinary world events so replays stay deterministic.
+//!
+//! [`Topology::single_region`] reproduces the flat model *bit-for-bit*: one
+//! region whose intra link draws exactly one uniform sample per message with
+//! the same guard the old `World::sample_latency` used, no jitter draw and
+//! no bandwidth term — so every pre-topology bench and test replays
+//! identically. Multi-region worlds are built with [`Topology::builder`] or
+//! parsed from the declarative `"topology"` config block (`config` module).
+
+use crate::types::Time;
+use crate::util::rng::Rng;
+
+/// Index into a topology's region table.
+pub type RegionId = usize;
+
+/// Behaviour of one region-pair link (stored symmetrically).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkProfile {
+    /// Uniform one-way base latency range in seconds.
+    pub latency: (f64, f64),
+    /// Mean of an additional exponential jitter term in seconds
+    /// (0 disables the draw entirely — important for flat-model replay).
+    pub jitter: f64,
+    /// Link bandwidth in bytes/second; `f64::INFINITY` disables the
+    /// payload-size-dependent transfer term.
+    pub bandwidth: f64,
+    /// A partitioned link silently drops every message.
+    pub partitioned: bool,
+}
+
+impl LinkProfile {
+    pub fn new(lo: Time, hi: Time) -> LinkProfile {
+        LinkProfile {
+            latency: (lo, hi),
+            jitter: 0.0,
+            bandwidth: f64::INFINITY,
+            partitioned: false,
+        }
+    }
+
+    pub fn with_jitter(mut self, mean_s: f64) -> LinkProfile {
+        self.jitter = mean_s;
+        self
+    }
+
+    pub fn with_bandwidth_mbps(mut self, mbps: f64) -> LinkProfile {
+        self.bandwidth = mbps * 1e6 / 8.0;
+        self
+    }
+
+    /// Expected one-way delay for a small message (dispatch scoring).
+    pub fn expected_latency(&self) -> f64 {
+        (self.latency.0 + self.latency.1) / 2.0 + self.jitter
+    }
+
+    /// Panics with a descriptive message on an invalid profile.
+    fn validate(&self, what: &str) {
+        let (lo, hi) = self.latency;
+        assert!(
+            lo.is_finite() && hi.is_finite() && lo >= 0.0,
+            "{what}: latency bounds must be finite and non-negative, got ({lo}, {hi})"
+        );
+        assert!(lo <= hi, "{what}: latency lo {lo} > hi {hi}");
+        assert!(
+            self.jitter >= 0.0 && self.jitter.is_finite(),
+            "{what}: jitter must be finite and >= 0, got {}",
+            self.jitter
+        );
+        assert!(
+            self.bandwidth > 0.0,
+            "{what}: bandwidth must be > 0 (use f64::INFINITY for unconstrained), got {}",
+            self.bandwidth
+        );
+    }
+
+    /// One-way delay for `bytes` over this link, or `None` if partitioned.
+    ///
+    /// RNG discipline (replay compatibility): exactly one uniform draw when
+    /// `lo < hi`, none when `lo == hi`; one extra exponential draw only when
+    /// `jitter > 0`. The bandwidth term is deterministic.
+    fn sample(&self, bytes: usize, rng: &mut Rng) -> Option<Time> {
+        if self.partitioned {
+            return None;
+        }
+        let (lo, hi) = self.latency;
+        let mut d = if hi <= lo { lo } else { rng.range_f64(lo, hi) };
+        if self.jitter > 0.0 {
+            d += rng.exp(1.0 / self.jitter);
+        }
+        if self.bandwidth.is_finite() && bytes > 0 {
+            d += bytes as f64 / self.bandwidth;
+        }
+        Some(d)
+    }
+}
+
+/// What happens to a region-pair link at a scheduled time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LinkChange {
+    /// Multiply base latency by `latency_factor` and bandwidth by
+    /// `bandwidth_factor` (congestion, cable reroute).
+    Degrade {
+        latency_factor: f64,
+        bandwidth_factor: f64,
+    },
+    /// Drop all traffic on the link.
+    Partition,
+    /// Restore the link to its pristine (build-time) profile.
+    Heal,
+}
+
+/// A scheduled change to the link between regions `a` and `b` (symmetric).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkEvent {
+    pub at: Time,
+    pub a: RegionId,
+    pub b: RegionId,
+    pub change: LinkChange,
+}
+
+/// The world's WAN structure: regions, current link state, node placement
+/// and the scenario schedule. Cheap to clone (region count is small).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    regions: Vec<String>,
+    /// Current link state, row-major `[src * n + dst]`.
+    links: Vec<LinkProfile>,
+    /// Pristine copy of `links` for `LinkChange::Heal`.
+    base: Vec<LinkProfile>,
+    /// Region of node `i`; empty means "every node in region 0".
+    node_region: Vec<RegionId>,
+    /// Scenario schedule, sorted by time.
+    events: Vec<LinkEvent>,
+}
+
+impl Topology {
+    /// The flat-model equivalent: one region whose intra-region link is the
+    /// given uniform latency range. Replays bit-identically to the seed's
+    /// `World::sample_latency`.
+    pub fn single_region(latency: (Time, Time)) -> Topology {
+        Topology {
+            regions: vec!["local".to_string()],
+            links: vec![LinkProfile::new(latency.0, latency.1)],
+            base: vec![LinkProfile::new(latency.0, latency.1)],
+            node_region: Vec::new(),
+            events: Vec::new(),
+        }
+    }
+
+    pub fn builder() -> TopologyBuilder {
+        TopologyBuilder::new()
+    }
+
+    pub fn num_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn region_name(&self, r: RegionId) -> &str {
+        &self.regions[r]
+    }
+
+    pub fn region_index(&self, name: &str) -> Option<RegionId> {
+        self.regions.iter().position(|r| r == name)
+    }
+
+    /// Region of node `i` (region 0 when unassigned).
+    pub fn region_of(&self, node: usize) -> RegionId {
+        self.node_region.get(node).copied().unwrap_or(0)
+    }
+
+    pub fn node_regions(&self) -> &[RegionId] {
+        &self.node_region
+    }
+
+    pub fn link(&self, a: RegionId, b: RegionId) -> &LinkProfile {
+        &self.links[a * self.regions.len() + b]
+    }
+
+    pub fn is_partitioned(&self, a: RegionId, b: RegionId) -> bool {
+        self.link(a, b).partitioned
+    }
+
+    pub fn events(&self) -> &[LinkEvent] {
+        &self.events
+    }
+
+    /// One-way delay for a `bytes`-sized message from node `src` to node
+    /// `dst`, or `None` if the connecting link is currently partitioned.
+    pub fn sample_delay(
+        &self,
+        src: usize,
+        dst: usize,
+        bytes: usize,
+        rng: &mut Rng,
+    ) -> Option<Time> {
+        self.link(self.region_of(src), self.region_of(dst)).sample(bytes, rng)
+    }
+
+    /// Long-run expected one-way latency between every region pair, from the
+    /// *pristine* link profiles (a static estimate — dispatch policies do
+    /// not get oracle knowledge of live partitions or degradations).
+    pub fn expected_latency_matrix(&self) -> Vec<Vec<f64>> {
+        let n = self.regions.len();
+        (0..n)
+            .map(|a| {
+                (0..n)
+                    .map(|b| self.base[a * n + b].expected_latency())
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Apply scheduled event `idx` (both directions of the pair). The
+    /// simulator calls this when virtual time reaches `events[idx].at`.
+    pub fn apply_event(&mut self, idx: usize) {
+        let ev = self.events[idx];
+        let n = self.regions.len();
+        // An intra-region event (a == b) names one link slot; applying the
+        // mirrored direction too would square degrade factors.
+        let mut directions = vec![(ev.a, ev.b)];
+        if ev.a != ev.b {
+            directions.push((ev.b, ev.a));
+        }
+        for (a, b) in directions {
+            let i = a * n + b;
+            match ev.change {
+                LinkChange::Degrade { latency_factor, bandwidth_factor } => {
+                    let l = &mut self.links[i];
+                    l.latency.0 *= latency_factor;
+                    l.latency.1 *= latency_factor;
+                    l.jitter *= latency_factor;
+                    l.bandwidth *= bandwidth_factor;
+                }
+                LinkChange::Partition => self.links[i].partitioned = true,
+                LinkChange::Heal => self.links[i] = self.base[i],
+            }
+        }
+    }
+
+    /// Validate the whole topology against a world of `num_nodes` nodes.
+    /// Panics with a descriptive message on any inconsistency — silent
+    /// misbehaviour (e.g. an inverted latency range) is worse than a crash
+    /// at construction.
+    pub fn validate(&self, num_nodes: usize) {
+        let n = self.regions.len();
+        assert!(n > 0, "topology: at least one region required");
+        assert_eq!(
+            self.links.len(),
+            n * n,
+            "topology: link matrix must be {n}x{n}"
+        );
+        for a in 0..n {
+            for b in 0..n {
+                let what = format!(
+                    "topology link {} -> {}",
+                    self.regions[a], self.regions[b]
+                );
+                self.links[a * n + b].validate(&what);
+                self.base[a * n + b].validate(&what);
+            }
+        }
+        assert!(
+            self.node_region.is_empty() || self.node_region.len() == num_nodes,
+            "topology: {} node assignments for a {}-node world",
+            self.node_region.len(),
+            num_nodes
+        );
+        for (i, r) in self.node_region.iter().enumerate() {
+            assert!(
+                *r < n,
+                "topology: node {i} assigned to unknown region index {r} \
+                 ({n} regions)"
+            );
+        }
+        for (i, ev) in self.events.iter().enumerate() {
+            assert!(
+                ev.a < n && ev.b < n,
+                "topology: event {i} references unknown region index"
+            );
+            assert!(
+                ev.at.is_finite() && ev.at >= 0.0,
+                "topology: event {i} has invalid time {}",
+                ev.at
+            );
+            if let LinkChange::Degrade { latency_factor, bandwidth_factor } =
+                ev.change
+            {
+                assert!(
+                    latency_factor > 0.0 && bandwidth_factor > 0.0,
+                    "topology: event {i} degrade factors must be > 0"
+                );
+            }
+        }
+    }
+}
+
+/// Fluent construction of multi-region topologies (benches, config parser).
+#[derive(Debug, Clone)]
+pub struct TopologyBuilder {
+    regions: Vec<String>,
+    intra_default: LinkProfile,
+    inter_default: LinkProfile,
+    overrides: Vec<(RegionId, RegionId, LinkProfile)>,
+    node_region: Vec<RegionId>,
+    events: Vec<LinkEvent>,
+}
+
+impl Default for TopologyBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TopologyBuilder {
+    pub fn new() -> TopologyBuilder {
+        TopologyBuilder {
+            regions: Vec::new(),
+            // Datacenter-ish defaults; override per deployment.
+            intra_default: LinkProfile::new(0.002, 0.010),
+            inter_default: LinkProfile::new(0.040, 0.080),
+            overrides: Vec::new(),
+            node_region: Vec::new(),
+            events: Vec::new(),
+        }
+    }
+
+    /// Declare a region (index order = declaration order).
+    pub fn region(mut self, name: &str) -> Self {
+        assert!(
+            !self.regions.iter().any(|r| r == name),
+            "topology builder: duplicate region '{name}'"
+        );
+        self.regions.push(name.to_string());
+        self
+    }
+
+    /// Default link profile within every region.
+    pub fn default_intra(mut self, p: LinkProfile) -> Self {
+        self.intra_default = p;
+        self
+    }
+
+    /// Default link profile between every pair of distinct regions.
+    pub fn default_inter(mut self, p: LinkProfile) -> Self {
+        self.inter_default = p;
+        self
+    }
+
+    fn region_id(&self, name: &str) -> RegionId {
+        self.regions
+            .iter()
+            .position(|r| r == name)
+            .unwrap_or_else(|| {
+                panic!("topology builder: unknown region '{name}'")
+            })
+    }
+
+    /// Override the (symmetric) link between two regions; `a == b` sets an
+    /// intra-region link.
+    pub fn link(mut self, a: &str, b: &str, p: LinkProfile) -> Self {
+        let (ra, rb) = (self.region_id(a), self.region_id(b));
+        self.overrides.push((ra, rb, p));
+        self
+    }
+
+    /// Assign the next node (in `World` setup order) to `region`.
+    pub fn node(mut self, region: &str) -> Self {
+        let r = self.region_id(region);
+        self.node_region.push(r);
+        self
+    }
+
+    /// Assign `count` consecutive nodes to `region`.
+    pub fn nodes(mut self, region: &str, count: usize) -> Self {
+        let r = self.region_id(region);
+        self.node_region.extend(std::iter::repeat(r).take(count));
+        self
+    }
+
+    /// Schedule a link change between two regions at time `at`.
+    pub fn event(
+        mut self,
+        a: &str,
+        b: &str,
+        at: Time,
+        change: LinkChange,
+    ) -> Self {
+        let (ra, rb) = (self.region_id(a), self.region_id(b));
+        self.events.push(LinkEvent { at, a: ra, b: rb, change });
+        self
+    }
+
+    pub fn build(self) -> Topology {
+        let n = self.regions.len();
+        assert!(n > 0, "topology builder: no regions declared");
+        let mut links = vec![self.inter_default; n * n];
+        for a in 0..n {
+            links[a * n + a] = self.intra_default;
+        }
+        for (a, b, p) in self.overrides {
+            links[a * n + b] = p;
+            links[b * n + a] = p;
+        }
+        let mut events = self.events;
+        events.sort_by(|x, y| {
+            x.at.partial_cmp(&y.at).expect("finite event times")
+        });
+        let t = Topology {
+            regions: self.regions,
+            base: links.clone(),
+            links,
+            node_region: self.node_region,
+            events,
+        };
+        // Node-count-independent part of validation; `World::new` re-runs
+        // the full check with the real node count.
+        t.validate(t.node_region.len());
+        t
+    }
+}
+
+/// A realistic three-continent WAN preset (one-way latencies from public
+/// inter-region RTT tables, halved): `us`, `eu`, `asia` with
+/// `nodes_per_region` nodes each, assigned contiguously us..eu..asia.
+pub fn three_region_wan(nodes_per_region: usize) -> TopologyBuilder {
+    Topology::builder()
+        .region("us")
+        .region("eu")
+        .region("asia")
+        // Same-metro datacenter latency: sub-2ms, effectively free next to
+        // the ocean links — so a latency penalty tuned to discriminate
+        // between continents barely damps intra-region dispatch.
+        .default_intra(
+            LinkProfile::new(0.0005, 0.002).with_bandwidth_mbps(10_000.0),
+        )
+        .link(
+            "us",
+            "eu",
+            LinkProfile::new(0.040, 0.055)
+                .with_jitter(0.004)
+                .with_bandwidth_mbps(400.0),
+        )
+        .link(
+            "us",
+            "asia",
+            LinkProfile::new(0.075, 0.095)
+                .with_jitter(0.006)
+                .with_bandwidth_mbps(300.0),
+        )
+        .link(
+            "eu",
+            "asia",
+            LinkProfile::new(0.100, 0.125)
+                .with_jitter(0.008)
+                .with_bandwidth_mbps(250.0),
+        )
+        .nodes("us", nodes_per_region)
+        .nodes("eu", nodes_per_region)
+        .nodes("asia", nodes_per_region)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_region() -> Topology {
+        Topology::builder()
+            .region("west")
+            .region("east")
+            .default_intra(LinkProfile::new(0.001, 0.002))
+            .link("west", "east", LinkProfile::new(0.050, 0.060))
+            .nodes("west", 2)
+            .nodes("east", 2)
+            .build()
+    }
+
+    #[test]
+    fn single_region_matches_flat_sampler() {
+        // The topology path must consume the identical RNG stream the old
+        // flat `sample_latency` did: one uniform draw per message.
+        let topo = Topology::single_region((0.02, 0.08));
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        for _ in 0..1000 {
+            let flat = a.range_f64(0.02, 0.08);
+            let via = topo.sample_delay(0, 1, 512, &mut b).unwrap();
+            assert_eq!(flat, via);
+        }
+    }
+
+    #[test]
+    fn degenerate_range_consumes_no_draw() {
+        let topo = Topology::single_region((0.05, 0.05));
+        let mut rng = Rng::new(1);
+        let before = rng.clone().next_u64();
+        assert_eq!(topo.sample_delay(0, 1, 0, &mut rng), Some(0.05));
+        assert_eq!(rng.next_u64(), before, "no RNG draw for lo == hi");
+    }
+
+    #[test]
+    fn inter_region_slower_than_intra() {
+        let topo = two_region();
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let intra = topo.sample_delay(0, 1, 0, &mut rng).unwrap();
+            let inter = topo.sample_delay(0, 2, 0, &mut rng).unwrap();
+            assert!(intra < inter, "intra {intra} !< inter {inter}");
+        }
+    }
+
+    #[test]
+    fn bandwidth_adds_transfer_cost() {
+        let p = LinkProfile::new(0.01, 0.01).with_bandwidth_mbps(8.0); // 1 MB/s
+        let mut rng = Rng::new(2);
+        let d = p.sample(500_000, &mut rng).unwrap();
+        assert!((d - 0.51).abs() < 1e-9, "0.01 base + 0.5 transfer, got {d}");
+    }
+
+    #[test]
+    fn jitter_is_additive_and_optional() {
+        let base = LinkProfile::new(0.01, 0.01);
+        let jittery = base.with_jitter(0.005);
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let d = jittery.sample(0, &mut rng).unwrap();
+            assert!(d >= 0.01);
+        }
+        // Mean jitter shows up in the expectation.
+        assert!(jittery.expected_latency() > base.expected_latency());
+    }
+
+    #[test]
+    fn partition_drops_and_heal_restores() {
+        let mut topo = Topology::builder()
+            .region("a")
+            .region("b")
+            .link("a", "b", LinkProfile::new(0.05, 0.06))
+            .node("a")
+            .node("b")
+            .event("a", "b", 10.0, LinkChange::Partition)
+            .event("a", "b", 20.0, LinkChange::Heal)
+            .build();
+        let mut rng = Rng::new(4);
+        assert!(topo.sample_delay(0, 1, 0, &mut rng).is_some());
+        topo.apply_event(0);
+        assert!(topo.is_partitioned(0, 1));
+        assert!(topo.is_partitioned(1, 0), "partitions are symmetric");
+        assert!(topo.sample_delay(0, 1, 0, &mut rng).is_none());
+        assert!(topo.sample_delay(1, 0, 0, &mut rng).is_none());
+        // Intra traffic unaffected.
+        assert!(topo.sample_delay(0, 0, 0, &mut rng).is_some());
+        topo.apply_event(1);
+        assert!(!topo.is_partitioned(0, 1));
+        assert!(topo.sample_delay(0, 1, 0, &mut rng).is_some());
+    }
+
+    #[test]
+    fn degrade_scales_latency_and_heal_undoes_it() {
+        let mut topo = Topology::builder()
+            .region("a")
+            .region("b")
+            .link("a", "b", LinkProfile::new(0.040, 0.050))
+            .event(
+                "a",
+                "b",
+                5.0,
+                LinkChange::Degrade { latency_factor: 3.0, bandwidth_factor: 0.5 },
+            )
+            .event("a", "b", 9.0, LinkChange::Heal)
+            .build();
+        topo.apply_event(0);
+        let l = topo.link(0, 1);
+        assert!((l.latency.0 - 0.120).abs() < 1e-12);
+        assert!((l.latency.1 - 0.150).abs() < 1e-12);
+        topo.apply_event(1);
+        let l = topo.link(0, 1);
+        assert!((l.latency.0 - 0.040).abs() < 1e-12);
+        assert!((l.latency.1 - 0.050).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intra_region_event_applies_once() {
+        let mut topo = Topology::builder()
+            .region("a")
+            .default_intra(LinkProfile::new(0.010, 0.020))
+            .event(
+                "a",
+                "a",
+                1.0,
+                LinkChange::Degrade { latency_factor: 3.0, bandwidth_factor: 0.5 },
+            )
+            .build();
+        topo.apply_event(0);
+        let l = topo.link(0, 0);
+        assert!(
+            (l.latency.0 - 0.030).abs() < 1e-12,
+            "intra-region degrade applied twice: {}",
+            l.latency.0
+        );
+        assert!((l.latency.1 - 0.060).abs() < 1e-12);
+    }
+
+    #[test]
+    fn events_sorted_by_time() {
+        let topo = Topology::builder()
+            .region("a")
+            .region("b")
+            .event("a", "b", 30.0, LinkChange::Heal)
+            .event("a", "b", 10.0, LinkChange::Partition)
+            .build();
+        let times: Vec<f64> = topo.events().iter().map(|e| e.at).collect();
+        assert_eq!(times, vec![10.0, 30.0]);
+    }
+
+    #[test]
+    fn expected_latency_matrix_symmetric_and_static() {
+        let topo = two_region();
+        let m = topo.expected_latency_matrix();
+        assert_eq!(m.len(), 2);
+        assert!((m[0][1] - m[1][0]).abs() < 1e-12);
+        assert!(m[0][0] < m[0][1]);
+        // Estimates come from the pristine profiles: a live partition must
+        // not leak into the dispatch-scoring matrix.
+        let mut t2 = Topology::builder()
+            .region("west")
+            .region("east")
+            .default_intra(LinkProfile::new(0.001, 0.002))
+            .link("west", "east", LinkProfile::new(0.050, 0.060))
+            .event("west", "east", 1.0, LinkChange::Partition)
+            .build();
+        t2.apply_event(0);
+        assert_eq!(t2.expected_latency_matrix()[0][1], m[0][1]);
+    }
+
+    #[test]
+    fn region_of_defaults_to_zero() {
+        let topo = Topology::single_region((0.0, 0.0));
+        assert_eq!(topo.region_of(0), 0);
+        assert_eq!(topo.region_of(99), 0);
+        let t2 = two_region();
+        assert_eq!(t2.region_of(0), 0);
+        assert_eq!(t2.region_of(3), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "latency lo")]
+    fn inverted_latency_range_panics() {
+        Topology::builder()
+            .region("a")
+            .default_intra(LinkProfile::new(0.08, 0.02))
+            .build();
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown region")]
+    fn unknown_region_in_link_panics() {
+        let _ = Topology::builder().region("a").link(
+            "a",
+            "nowhere",
+            LinkProfile::new(0.0, 0.0),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "node assignments")]
+    fn wrong_assignment_count_panics() {
+        let topo = two_region(); // 4 node assignments
+        topo.validate(7);
+    }
+
+    #[test]
+    fn preset_builds_and_validates() {
+        let topo = three_region_wan(3).build();
+        topo.validate(9);
+        assert_eq!(topo.num_regions(), 3);
+        assert_eq!(topo.region_of(0), 0);
+        assert_eq!(topo.region_of(4), 1);
+        assert_eq!(topo.region_of(8), 2);
+        let m = topo.expected_latency_matrix();
+        // eu<->asia is the longest haul; intra the shortest.
+        assert!(m[1][2] > m[0][1]);
+        assert!(m[0][0] < m[0][1]);
+    }
+}

@@ -23,6 +23,48 @@ impl Phase {
     pub fn new(from: Time, to: Time, inter_arrival: f64) -> Phase {
         Phase { from, to, inter_arrival }
     }
+
+    /// The same interval translated by `dt` (regional schedule offsets).
+    pub fn shifted(self, dt: Time) -> Phase {
+        Phase { from: self.from + dt, to: self.to + dt, ..self }
+    }
+}
+
+/// A follow-the-sun diurnal schedule: alternating peak / off-peak windows of
+/// `period / 2` seconds each, with the first peak starting at `offset`
+/// (cycle-shifted, so negative-phase windows wrap in), clipped to
+/// `[0, horizon]`. Give each region an offset of `period / num_regions` to
+/// stagger the peaks around the globe — the paper's geo-distributed load
+/// scenario where one continent's rush hour is another's night.
+pub fn diurnal_phases(
+    horizon: Time,
+    period: Time,
+    peak_inter_arrival: f64,
+    off_inter_arrival: f64,
+    offset: Time,
+) -> Vec<Phase> {
+    assert!(period > 0.0 && horizon >= 0.0, "diurnal: period must be > 0");
+    let half = period / 2.0;
+    let mut out = Vec::new();
+    // Walk half-period windows from the boundary at or before t = 0.
+    let mut k = ((0.0 - offset) / half).floor() as i64;
+    loop {
+        let start = offset + k as f64 * half;
+        if start >= horizon {
+            break;
+        }
+        let end = start + half;
+        if end > 0.0 {
+            let ia = if k.rem_euclid(2) == 0 {
+                peak_inter_arrival
+            } else {
+                off_inter_arrival
+            };
+            out.push(Phase::new(start.max(0.0), end.min(horizon), ia));
+        }
+        k += 1;
+    }
+    out
 }
 
 /// Prompt/output token length distributions.
@@ -130,6 +172,15 @@ impl Generator {
         self
     }
 
+    /// Translate the whole schedule by `dt` seconds (per-region offsets for
+    /// geo-distributed workloads; arrivals before t=0 simply never fire).
+    pub fn with_offset(mut self, dt: Time) -> Self {
+        for ph in &mut self.phases {
+            *ph = ph.shifted(dt);
+        }
+        self
+    }
+
     /// Draw all arrival times over the schedule (exponential gaps per
     /// phase).
     pub fn arrivals(&self, rng: &mut Rng) -> Vec<Time> {
@@ -140,7 +191,11 @@ impl Generator {
             }
             let mut t = ph.from + rng.exp(1.0 / ph.inter_arrival);
             while t < ph.to {
-                out.push(t);
+                // Negative times can arise from offset schedules whose
+                // window straddles t=0; those arrivals never happen.
+                if t >= 0.0 {
+                    out.push(t);
+                }
                 t += rng.exp(1.0 / ph.inter_arrival);
             }
         }
@@ -210,6 +265,59 @@ mod tests {
         let late = arr.len() as f64 - early;
         assert!((early / 5_000.0 - 0.5).abs() < 0.02);
         assert!((late / 5_000.0 - 0.05).abs() < 0.01);
+    }
+
+    #[test]
+    fn diurnal_phases_tile_the_horizon() {
+        let phases = diurnal_phases(750.0, 300.0, 2.0, 20.0, 0.0);
+        // Contiguous cover of [0, 750].
+        assert_eq!(phases[0].from, 0.0);
+        assert_eq!(phases.last().unwrap().to, 750.0);
+        for w in phases.windows(2) {
+            assert!((w[0].to - w[1].from).abs() < 1e-9);
+        }
+        // Alternating peak/off rates starting with the peak.
+        assert_eq!(phases[0].inter_arrival, 2.0);
+        assert_eq!(phases[1].inter_arrival, 20.0);
+        assert_eq!(phases[2].inter_arrival, 2.0);
+    }
+
+    #[test]
+    fn diurnal_offset_rotates_peaks() {
+        // Offset of a third of the period: the first window is the tail of
+        // the previous cycle's off-peak, clipped at t=0.
+        let phases = diurnal_phases(600.0, 300.0, 2.0, 20.0, 100.0);
+        assert_eq!(phases[0].from, 0.0);
+        assert!((phases[0].to - 100.0).abs() < 1e-9);
+        assert_eq!(phases[0].inter_arrival, 20.0);
+        assert_eq!(phases[1].inter_arrival, 2.0);
+        assert!((phases[1].from - 100.0).abs() < 1e-9);
+        assert_eq!(phases.last().unwrap().to, 600.0);
+        // Total peak seconds match the unshifted schedule (mass conserved
+        // up to horizon clipping).
+        let peak_secs: f64 = phases
+            .iter()
+            .filter(|p| p.inter_arrival == 2.0)
+            .map(|p| p.to - p.from)
+            .sum();
+        assert!((peak_secs - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generator_offset_shifts_arrivals() {
+        let base = Generator::new(NodeId(0), vec![Phase::new(0.0, 100.0, 5.0)]);
+        let shifted = base.clone().with_offset(50.0);
+        assert_eq!(shifted.phases[0].from, 50.0);
+        assert_eq!(shifted.phases[0].to, 150.0);
+        let mut rng = Rng::new(8);
+        let arr = shifted.arrivals(&mut rng);
+        assert!(arr.iter().all(|t| (50.0..150.0).contains(t)));
+        // A negative offset clips pre-zero arrivals instead of emitting
+        // negative timestamps.
+        let early = base.clone().with_offset(-90.0);
+        let mut rng = Rng::new(8);
+        let arr = early.arrivals(&mut rng);
+        assert!(arr.iter().all(|t| (0.0..10.0).contains(t)));
     }
 
     #[test]

@@ -188,7 +188,7 @@ fn gossip_spoofing_self_entry_ineffective() {
         1,
         0.0,
     );
-    let spoof: wwwserve::gossip::Digest = vec![(NodeId(0), 9999, false, 0)];
+    let spoof: wwwserve::gossip::Digest = vec![(NodeId(0), 9999, false, 0, 0)];
     node.handle(
         Event::Message { from: NodeId(5), msg: Message::Gossip { digest: spoof } },
         1.0,

@@ -1,0 +1,261 @@
+//! Integration tests for the geo-distributed WAN topology subsystem:
+//! partition/heal membership dynamics, deterministic replay under link
+//! events, locality-aware dispatch, and the declarative config path.
+
+use wwwserve::backend::Profile;
+use wwwserve::config::parse_experiment;
+use wwwserve::policy::NodePolicy;
+use wwwserve::sim::{NodeSetup, World, WorldConfig};
+use wwwserve::topology::{three_region_wan, LinkChange, LinkProfile, Topology};
+use wwwserve::types::ExecKind;
+use wwwserve::util::rng::Rng;
+use wwwserve::workload::{Generator, LengthDist, Phase};
+use wwwserve::NodeId;
+
+fn lengths() -> LengthDist {
+    LengthDist { output_mean: 900.0, output_sigma: 0.5, ..Default::default() }
+}
+
+/// 2 regions x 2 nodes, no user workload: pure membership dynamics.
+fn split_world(heal: bool) -> World {
+    let mut b = Topology::builder()
+        .region("west")
+        .region("east")
+        .default_intra(LinkProfile::new(0.001, 0.004))
+        .link("west", "east", LinkProfile::new(0.040, 0.060))
+        .nodes("west", 2)
+        .nodes("east", 2)
+        .event("west", "east", 50.0, LinkChange::Partition);
+    if heal {
+        b = b.event("west", "east", 120.0, LinkChange::Heal);
+    }
+    let setups = (0..4)
+        .map(|_| {
+            NodeSetup::new(
+                Profile::test(40.0, 16),
+                NodePolicy { accept_freq: 1.0, ..Default::default() },
+            )
+        })
+        .collect();
+    World::new(
+        WorldConfig { seed: 42, topology: Some(b.build()), ..Default::default() },
+        setups,
+    )
+}
+
+/// Satellite: peers across a partitioned link time out of the gossip view,
+/// drop out of the regular gossip fan-out, and rejoin after the heal.
+#[test]
+fn partitioned_peers_age_out_and_rejoin_after_heal() {
+    let mut w = split_world(true);
+    w.run_until(110.0);
+    let now = w.now();
+    // Cross-region heartbeats stopped at t=50: everyone suspects the far
+    // side dead, while intra-region liveness is untouched.
+    for (a, b) in [(0usize, 2u32), (0, 3), (1, 2), (1, 3), (2, 0), (3, 1)] {
+        assert!(
+            !w.node(a).view.is_alive(NodeId(b), now),
+            "n{a} still sees n{b} across the partition"
+        );
+    }
+    assert!(w.node(0).view.is_alive(NodeId(1), now));
+    assert!(w.node(2).view.is_alive(NodeId(3), now));
+    // The regular (alive-pool) gossip fan-out is intra-region only; a
+    // cross-region peer can appear at most as the trailing suspicion probe
+    // that exists to detect heals.
+    let mut rng = Rng::new(1);
+    for _ in 0..100 {
+        let t = w.node(0).view.pick_targets(&mut rng, now);
+        assert!(!t.is_empty());
+        assert_eq!(t[0], NodeId(1), "alive fan-out must be intra-region");
+    }
+    assert!(w.messages_dropped > 0, "partition dropped no traffic");
+
+    // After the heal, suspicion probes pull the far side back in and the
+    // epidemic resumes: both sides re-admit each other.
+    w.run_until(300.0);
+    let now = w.now();
+    for (a, b) in [(0usize, 2u32), (0, 3), (2, 0), (3, 1), (1, 2)] {
+        assert!(
+            w.node(a).view.is_alive(NodeId(b), now),
+            "n{a} did not re-admit n{b} after heal"
+        );
+    }
+}
+
+/// Without a heal the far side stays dead forever (no false resurrection).
+#[test]
+fn unhealed_partition_stays_split() {
+    let mut w = split_world(false);
+    w.run_until(400.0);
+    let now = w.now();
+    assert!(!w.node(0).view.is_alive(NodeId(2), now));
+    assert!(!w.node(2).view.is_alive(NodeId(0), now));
+    assert!(w.node(0).view.is_alive(NodeId(1), now));
+}
+
+/// Satellite: two runs with the same seed and the same topology +
+/// LinkEvent schedule must produce identical credit totals and recorder
+/// stats; a different seed must not.
+#[test]
+fn deterministic_replay_with_topology_and_link_events() {
+    let fingerprint = |seed: u64| {
+        let topo = three_region_wan(2)
+            .event("us", "asia", 100.0, LinkChange::Partition)
+            .event("us", "asia", 200.0, LinkChange::Heal)
+            .event(
+                "us",
+                "eu",
+                150.0,
+                LinkChange::Degrade {
+                    latency_factor: 4.0,
+                    bandwidth_factor: 0.25,
+                },
+            )
+            .build();
+        let setups: Vec<NodeSetup> = (0..6)
+            .map(|i| {
+                NodeSetup::new(
+                    Profile::test(40.0, 16),
+                    NodePolicy {
+                        accept_freq: 1.0,
+                        latency_penalty: 10.0,
+                        ..Default::default()
+                    },
+                )
+                .with_generator(
+                    Generator::new(
+                        NodeId(i as u32),
+                        vec![Phase::new(0.0, 250.0, 5.0)],
+                    )
+                    .with_lengths(lengths()),
+                )
+            })
+            .collect();
+        let cfg = WorldConfig {
+            seed,
+            topology: Some(topo),
+            ..Default::default()
+        };
+        let mut w = World::new(cfg, setups);
+        w.run_until(1500.0);
+        (
+            w.recorder.len(),
+            (w.recorder.mean_latency() * 1e9) as u64,
+            w.messages_sent,
+            w.messages_dropped,
+            w.credit_totals()
+                .iter()
+                .map(|c| (c * 1e6) as u64)
+                .collect::<Vec<_>>(),
+        )
+    };
+    let a = fingerprint(7);
+    assert!(a.0 > 50, "workload barely ran: {} records", a.0);
+    assert!(a.3 > 0, "partition dropped nothing");
+    assert_eq!(a, fingerprint(7), "same seed+schedule must replay exactly");
+    assert_ne!(fingerprint(7), fingerprint(8));
+}
+
+/// Locality-aware dispatch keeps delegations near: with a latency penalty,
+/// a us-region requester sends a smaller share of its work across oceans.
+#[test]
+fn latency_penalty_reduces_cross_region_delegation() {
+    let run = |penalty: f64| -> (usize, usize) {
+        let topo = three_region_wan(2).build(); // nodes 0,1=us 2,3=eu 4,5=asia
+        let mut setups: Vec<NodeSetup> = vec![NodeSetup::new(
+            Profile::test(30.0, 8),
+            NodePolicy {
+                target_utilization: 0.0, // always offload
+                offload_freq: 1.0,
+                latency_penalty: penalty,
+                ..Default::default()
+            },
+        )
+        .with_generator(
+            Generator::new(NodeId(0), vec![Phase::new(0.0, 200.0, 1.5)])
+                .with_lengths(lengths()),
+        )];
+        for _ in 1..6 {
+            setups.push(NodeSetup::new(
+                Profile::test(40.0, 16),
+                NodePolicy { accept_freq: 1.0, ..Default::default() },
+            ));
+        }
+        let mut cfg = WorldConfig {
+            seed: 13,
+            topology: Some(topo),
+            ..Default::default()
+        };
+        cfg.system.duel_rate = 0.0;
+        let mut w = World::new(cfg, setups);
+        w.run_until(1500.0);
+        let delegated = w
+            .recorder
+            .user_records()
+            .filter(|r| r.kind == ExecKind::Delegated)
+            .count();
+        let cross = w
+            .recorder
+            .user_records()
+            .filter(|r| r.kind == ExecKind::Delegated && r.executor.0 >= 2)
+            .count();
+        (delegated, cross)
+    };
+    let (blind_total, blind_cross) = run(0.0);
+    let (aware_total, aware_cross) = run(60.0);
+    assert!(blind_total > 40, "blind run barely delegated: {blind_total}");
+    assert!(aware_total > 20, "aware run barely delegated: {aware_total}");
+    // Region-blind sampling is stake-uniform: ~4/5 of delegations leave us.
+    // With the penalty the cross share and the cross count must both drop.
+    let blind_share = blind_cross as f64 / blind_total as f64;
+    let aware_share = aware_cross as f64 / aware_total as f64;
+    assert!(
+        aware_share < blind_share - 0.1,
+        "latency penalty did not localize dispatch: \
+         blind {blind_cross}/{blind_total}, aware {aware_cross}/{aware_total}"
+    );
+}
+
+/// The declarative config path: a parsed topology block drives a real
+/// geo-distributed world end to end.
+#[test]
+fn config_topology_runs_end_to_end() {
+    let text = r#"{
+        "seed": 21,
+        "horizon": 120,
+        "topology": {
+            "regions": ["us", "eu"],
+            "intra": { "latency": [0.001, 0.004] },
+            "inter": { "latency": [0.040, 0.080], "jitter": 0.003 },
+            "events": [
+                { "at": 40, "a": "us", "b": "eu", "change": "partition" },
+                { "at": 80, "a": "us", "b": "eu", "change": "heal" }
+            ]
+        },
+        "nodes": [
+            { "region": "us", "profile": { "prefill_tok_s": 2000,
+                "decode_tok_s": 40, "max_agg_decode_tok_s": 320,
+                "max_batch": 16 },
+              "policy": { "latency_penalty": 20.0 },
+              "schedule": [ { "from": 0, "to": 100, "inter_arrival": 6 } ] },
+            { "region": "us", "profile": { "prefill_tok_s": 2000,
+                "decode_tok_s": 40, "max_agg_decode_tok_s": 320,
+                "max_batch": 16 } },
+            { "region": "eu", "profile": { "prefill_tok_s": 2000,
+                "decode_tok_s": 40, "max_agg_decode_tok_s": 320,
+                "max_batch": 16 } }
+        ]
+    }"#;
+    let e = parse_experiment(text).unwrap();
+    let mut w = World::new(e.world, e.setups);
+    w.run_until(e.horizon + 400.0);
+    let summary = w.region_summary();
+    assert_eq!(summary.len(), 2);
+    assert_eq!(summary[0].0, "us");
+    assert_eq!(summary[1].0, "eu");
+    // All load originated in us.
+    assert!(summary[0].3 > 0, "us completed nothing");
+    assert_eq!(summary[1].3, 0);
+    assert!(w.messages_dropped > 0, "scheduled partition had no effect");
+}

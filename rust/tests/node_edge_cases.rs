@@ -99,7 +99,7 @@ fn duplicate_response_pays_only_once() {
     n0.policy.offload_freq = 1.0;
     n0.system.duel_rate = 0.0;
     n1.policy.accept_freq = 1.0;
-    n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
 
     // Run the probe/delegate handshake.
     let a = n0.handle(Event::UserRequest(req(0, 0)), 0.0);
@@ -190,7 +190,7 @@ fn requester_cannot_delegate_without_funds() {
     n0.policy.offload_freq = 1.0;
     n0.system.duel_rate = 0.0;
     n1.policy.accept_freq = 1.0;
-    n0.view.merge(&vec![(NodeId(1), 1, true, 0)], 0.0);
+    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
     // Drain node 0's liquid balance (move everything into stake).
     let balance = shared.lock().unwrap().balance(NodeId(0));
     shared
@@ -216,8 +216,8 @@ fn gossip_reply_does_not_echo_forever() {
     let shared = Arc::new(Mutex::new(SharedLedger::new()));
     let mut a = mk_node(0, &shared);
     let mut b = mk_node(1, &shared);
-    a.view.add_seed(NodeId(1), 0, 0.0);
-    b.view.add_seed(NodeId(0), 0, 0.0);
+    a.view.add_seed(NodeId(1), 0, 0, 0.0);
+    b.view.add_seed(NodeId(0), 0, 0, 0.0);
     // a gossips to b; b replies; a must NOT reply to the reply.
     let out_a = a.handle(Event::Tick, 1.0);
     let gossip = out_a.iter().find_map(|x| match x {

@@ -24,8 +24,8 @@ fn prop_gossip_converges_on_any_connected_bootstrap() {
         // Spanning tree: node i knows a random earlier node.
         for i in 1..n {
             let j = rng.below(i);
-            views[i].add_seed(NodeId(j as u32), 0, 0.0);
-            views[j].add_seed(NodeId(i as u32), 0, 0.0);
+            views[i].add_seed(NodeId(j as u32), 0, 0, 0.0);
+            views[j].add_seed(NodeId(i as u32), 0, 0, 0.0);
         }
         let mut converged_at = None;
         for round in 1..=80 {
@@ -62,7 +62,7 @@ fn prop_gossip_leave_detected_everywhere() {
             .map(|i| PeerView::new(NodeId(i as u32), cfg, 0.0))
             .collect();
         for i in 0..n {
-            views[i].add_seed(NodeId(((i + 1) % n) as u32), 0, 0.0);
+            views[i].add_seed(NodeId(((i + 1) % n) as u32), 0, 0, 0.0);
         }
         // Converge membership first.
         for round in 1..=40 {
