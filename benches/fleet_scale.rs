@@ -1,0 +1,247 @@
+//! Bench: fleet-scale event-loop throughput and gossip traffic.
+//!
+//! Stands up 3-region (us/eu/asia) worlds of n ∈ {50, 200, 500, 1000}
+//! nodes from the declarative `topology.fleet` config block — no node is
+//! listed individually — and runs each twice: with **delta gossip** (the
+//! default protocol: per-peer deltas + compact heartbeat pairs + periodic
+//! full-digest anti-entropy) and with the **full-digest baseline**
+//! (`anti_entropy_every = 1`, the seed protocol). Reports wall-clock,
+//! events/sec, messages/bytes, and the gossip-specific share of traffic,
+//! then writes the machine-readable perf trajectory to
+//! `BENCH_fleet_scale.json` so future PRs can track regressions.
+//!
+//! Asserts the headline numbers: delta gossip strictly beats the baseline
+//! on gossip bytes at every size, and by ≥ 10x at 500 nodes.
+//!
+//! `--smoke` (or `FLEET_SCALE_SMOKE=1`) restricts to n = 50 — the CI tier.
+
+use std::time::Instant;
+
+use wwwserve::benchlib::{write_json_report, Table};
+use wwwserve::config::parse_experiment;
+use wwwserve::sim::World;
+use wwwserve::util::json::Json;
+
+const SEED: u64 = 2027;
+const HORIZON: f64 = 60.0;
+/// Fleet-scale suspicion window (seconds). A 5 s window with 1 s gossip
+/// rounds is not a sane failure detector at 1000 nodes — refreshing every
+/// entry at every node that often costs Ω(n) bytes per node per round no
+/// matter the protocol. 20 rounds is still far below WAN failover SLAs.
+const SUSPECT_AFTER: f64 = 20.0;
+
+fn fleet_config(n: usize, seed: u64) -> String {
+    let per = n / 3;
+    let rest = n - 2 * per;
+    let group = |region: &str, count: usize, offset: f64| {
+        format!(
+            r#"{{ "region": "{region}", "count": {count},
+                 "node": {{ "profile": {{ "prefill_tok_s": 4000,
+                                          "decode_tok_s": 45,
+                                          "max_agg_decode_tok_s": 720,
+                                          "max_batch": 16 }},
+                            "policy": {{ "accept_freq": 1.0,
+                                         "latency_penalty": 15.0 }} }},
+                 "diurnal": {{ "period": 120, "peak_inter_arrival": 8,
+                              "off_inter_arrival": 40, "offset": {offset} }},
+                 "lengths": {{ "output_mean": 600, "output_sigma": 0.5 }} }}"#
+        )
+    };
+    format!(
+        r#"{{
+            "seed": {seed},
+            "horizon": {HORIZON},
+            "system": {{ "duel_rate": 0.0 }},
+            "topology": {{
+                "regions": ["us", "eu", "asia"],
+                "intra": {{ "latency": [0.0005, 0.002] }},
+                "inter": {{ "latency": [0.040, 0.080], "jitter": 0.005 }},
+                "fleet": [ {}, {}, {} ]
+            }}
+        }}"#,
+        group("us", per, 0.0),
+        group("eu", per, 40.0),
+        group("asia", rest, 80.0),
+    )
+}
+
+struct RunStats {
+    nodes: usize,
+    mode: &'static str,
+    wall_s: f64,
+    events: u64,
+    events_per_sec: f64,
+    messages: u64,
+    bytes: u64,
+    gossip_messages: u64,
+    gossip_bytes: u64,
+    gossip_bytes_per_round: f64,
+    completed: usize,
+    dropped: u64,
+    /// Mean fraction of peers each node believes alive at the end of the
+    /// run — proves the byte savings are not bought with starved liveness
+    /// dissemination (suspicion flapping).
+    alive_frac: f64,
+}
+
+fn run_fleet(n: usize, mode: &'static str, anti_entropy_every: u64) -> RunStats {
+    let e = parse_experiment(&fleet_config(n, SEED))
+        .expect("fleet config parses");
+    let mut cfg = e.world;
+    cfg.gossip.suspect_after = SUSPECT_AFTER;
+    cfg.gossip.anti_entropy_every = anti_entropy_every;
+    let rounds = e.horizon / cfg.gossip.interval;
+    let mut w = World::new(cfg, e.setups);
+    let t0 = Instant::now();
+    w.run_until(e.horizon);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let now = w.now();
+    let alive_frac = (0..n)
+        .map(|i| w.node(i).view.alive_peers(now).len() as f64)
+        .sum::<f64>()
+        / (n as f64 * (n - 1) as f64);
+    RunStats {
+        nodes: n,
+        mode,
+        wall_s,
+        events: w.events_processed,
+        events_per_sec: w.events_processed as f64 / wall_s.max(1e-9),
+        messages: w.messages_sent,
+        bytes: w.bytes_sent,
+        gossip_messages: w.gossip_messages_sent,
+        gossip_bytes: w.gossip_bytes_sent,
+        gossip_bytes_per_round: w.gossip_bytes_sent as f64 / rounds,
+        completed: w.recorder.user_records().count(),
+        dropped: w.messages_dropped,
+        alive_frac,
+    }
+}
+
+fn stats_json(s: &RunStats) -> Json {
+    Json::obj(vec![
+        ("nodes", Json::num(s.nodes as f64)),
+        ("gossip", Json::str(s.mode)),
+        ("wall_s", Json::num(s.wall_s)),
+        ("events", Json::num(s.events as f64)),
+        ("events_per_sec", Json::num(s.events_per_sec)),
+        ("messages_sent", Json::num(s.messages as f64)),
+        ("bytes_sent", Json::num(s.bytes as f64)),
+        ("gossip_messages_sent", Json::num(s.gossip_messages as f64)),
+        ("gossip_bytes_sent", Json::num(s.gossip_bytes as f64)),
+        ("gossip_bytes_per_round", Json::num(s.gossip_bytes_per_round)),
+        ("completed_user_requests", Json::num(s.completed as f64)),
+        ("messages_dropped", Json::num(s.dropped as f64)),
+        ("alive_frac", Json::num(s.alive_frac)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("FLEET_SCALE_SMOKE").is_ok();
+    let sizes: &[usize] =
+        if smoke { &[50] } else { &[50, 200, 500, 1000] };
+    println!(
+        "# fleet_scale — 3-region fleets, delta gossip vs full-digest \
+         baseline{}\n",
+        if smoke { " (smoke tier)" } else { "" }
+    );
+
+    let mut table = Table::new(&[
+        "nodes", "gossip", "wall", "events/s", "msgs", "gossip KB/round",
+        "completed",
+    ]);
+    let mut runs: Vec<RunStats> = Vec::new();
+    for &n in sizes {
+        for (mode, ae) in [("full", 1u64), ("delta", 0u64)] {
+            // ae == 0 means "use the default cadence".
+            let ae = if ae == 0 {
+                wwwserve::gossip::GossipConfig::default().anti_entropy_every
+            } else {
+                ae
+            };
+            let s = run_fleet(n, mode, ae);
+            table.row(vec![
+                format!("{}", s.nodes),
+                s.mode.to_string(),
+                format!("{:.2}s", s.wall_s),
+                format!("{:.0}", s.events_per_sec),
+                format!("{}", s.messages),
+                format!("{:.1}", s.gossip_bytes_per_round / 1e3),
+                format!("{}", s.completed),
+            ]);
+            runs.push(s);
+        }
+    }
+    table.print();
+
+    // Invariants the perf trajectory is built on.
+    let mut headline_ratio = None;
+    for pair in runs.chunks(2) {
+        let (full, delta) = (&pair[0], &pair[1]);
+        assert_eq!(full.nodes, delta.nodes);
+        assert!(
+            delta.gossip_bytes < full.gossip_bytes,
+            "delta gossip must strictly cut gossip bytes at n={}: {} vs {}",
+            full.nodes,
+            delta.gossip_bytes,
+            full.gossip_bytes
+        );
+        assert!(
+            delta.completed > 0 && full.completed > 0,
+            "n={}: workload did not run",
+            full.nodes
+        );
+        assert_eq!(
+            delta.dropped, 0,
+            "healthy WAN dropped messages at n={}",
+            delta.nodes
+        );
+        // The byte cut must not come from starved liveness: delta-mode
+        // views stay (nearly) as fresh as the full-digest baseline's.
+        assert!(
+            delta.alive_frac >= 0.90
+                && delta.alive_frac >= full.alive_frac - 0.10,
+            "delta gossip starved liveness at n={}: alive {:.3} vs full {:.3}",
+            delta.nodes,
+            delta.alive_frac,
+            full.alive_frac
+        );
+        let ratio =
+            full.gossip_bytes as f64 / delta.gossip_bytes.max(1) as f64;
+        println!(
+            "n={}: gossip bytes {} -> {} ({ratio:.1}x lower), \
+             events/s {:.0} -> {:.0}",
+            full.nodes,
+            full.gossip_bytes,
+            delta.gossip_bytes,
+            full.events_per_sec,
+            delta.events_per_sec,
+        );
+        if full.nodes == 500 {
+            headline_ratio = Some(ratio);
+            assert!(
+                ratio >= 10.0,
+                "delta gossip must cut gossip bytes >= 10x at 500 nodes, \
+                 got {ratio:.1}x"
+            );
+        }
+    }
+
+    let mut report = vec![
+        ("bench", Json::str("fleet_scale")),
+        ("seed", Json::num(SEED as f64)),
+        ("horizon_s", Json::num(HORIZON)),
+        ("suspect_after_s", Json::num(SUSPECT_AFTER)),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "runs",
+            Json::Arr(runs.iter().map(stats_json).collect()),
+        ),
+    ];
+    if let Some(r) = headline_ratio {
+        report.push(("n500_gossip_bytes_ratio", Json::num(r)));
+    }
+    let path = "BENCH_fleet_scale.json";
+    write_json_report(path, &Json::obj(report)).expect("write bench json");
+    println!("\nwrote {path}");
+}

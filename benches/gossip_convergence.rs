@@ -9,7 +9,12 @@ use wwwserve::NodeId;
 
 /// Rounds until every node knows every node (ring bootstrap).
 fn rounds_to_convergence(n: usize, fanout: usize, seed: u64) -> usize {
-    let cfg = GossipConfig { interval: 1.0, fanout, suspect_after: 1e9 };
+    let cfg = GossipConfig {
+        interval: 1.0,
+        fanout,
+        suspect_after: 1e9,
+        ..Default::default()
+    };
     let mut views: Vec<PeerView> = (0..n)
         .map(|i| PeerView::new(NodeId(i as u32), cfg, 0.0))
         .collect();

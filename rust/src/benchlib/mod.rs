@@ -2,10 +2,14 @@
 //! DESIGN.md §8). Used by every `benches/*.rs` (all `harness = false`).
 //!
 //! Features the benches need: warmup, timed iterations with mean/p50/p99,
-//! throughput reporting, and simple fixed-width table printing for the
-//! paper-figure harnesses.
+//! throughput reporting, simple fixed-width table printing for the
+//! paper-figure harnesses, and machine-readable JSON reports
+//! ([`write_json_report`]) — the `BENCH_*.json` artifacts that let future
+//! PRs track perf regressions (see `benches/fleet_scale.rs`).
 
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
@@ -25,6 +29,18 @@ impl BenchResult {
 
     pub fn mean_ms(&self) -> f64 {
         self.mean_ns / 1e6
+    }
+
+    /// Machine-readable form for `BENCH_*.json` perf-trajectory artifacts.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("p50_ns", Json::num(self.p50_ns)),
+            ("p99_ns", Json::num(self.p99_ns)),
+            ("min_ns", Json::num(self.min_ns)),
+        ])
     }
 
     pub fn report(&self) {
@@ -87,6 +103,15 @@ pub fn bench<R>(
     };
     r.report();
     r
+}
+
+/// Write a machine-readable bench report. Benches call this with a path
+/// like `BENCH_fleet_scale.json` (cargo runs benches from the workspace
+/// root, so the artifact lands next to the sources where the perf
+/// trajectory is tracked). The file gets a trailing newline so diffs stay
+/// clean.
+pub fn write_json_report(path: &str, report: &Json) -> std::io::Result<()> {
+    std::fs::write(path, format!("{report}\n"))
 }
 
 /// Print a markdown-ish table (paper-figure harness output).
@@ -161,5 +186,22 @@ mod tests {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["1".into(), "2".into()]);
         t.print(); // just must not panic
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let r = bench("noop2", 0, 10, 1.0, || 2 + 2);
+        let j = r.to_json();
+        assert_eq!(j.get("name").as_str(), Some("noop2"));
+        assert!(j.get("mean_ns").as_f64().is_some());
+        let path = std::env::temp_dir().join("wwwserve_bench_report.json");
+        let path = path.to_str().unwrap().to_string();
+        let report = Json::obj(vec![("results", Json::Arr(vec![j]))]);
+        write_json_report(&path, &report).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("results").as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
     }
 }

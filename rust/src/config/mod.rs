@@ -27,7 +27,7 @@ use crate::sim::{LedgerMode, NodeSetup, WorldConfig};
 use crate::topology::{LinkChange, LinkProfile, Topology};
 use crate::types::{NodeId, CREDIT};
 use crate::util::json::Json;
-use crate::workload::{Generator, Phase};
+use crate::workload::{diurnal_phases, Generator, LengthDist, Phase};
 
 #[derive(Debug, thiserror::Error)]
 pub enum ConfigError {
@@ -283,6 +283,92 @@ fn parse_topology(
     Ok(Some(b.build()))
 }
 
+// ---------------------------------------------------------------------------
+// Fleet templates (stamp out whole regions without listing every node)
+// ---------------------------------------------------------------------------
+
+/// Expand the optional `topology.fleet` block into per-node specs:
+///
+/// ```json
+/// "topology": {
+///   "regions": ["us", "eu", "asia"],
+///   "fleet": [
+///     { "region": "us", "count": 166,
+///       "node": { "profile": { ... }, "policy": { "accept_freq": 1.0 } },
+///       "diurnal": { "period": 300, "peak_inter_arrival": 2.5,
+///                    "off_inter_arrival": 25, "offset": 0 },
+///       "lengths": { "output_mean": 900, "output_sigma": 0.5 } }
+///   ]
+/// }
+/// ```
+///
+/// Each group stamps out `count` copies of its `node` template, tagged with
+/// the group's region and workload template (`schedule`, `diurnal`,
+/// `lengths` — same schema as per-node keys). Explicit `nodes` entries come
+/// first, fleet groups after, in declaration order; node ids follow that
+/// order. This is how `benches/fleet_scale.rs` stands up 1000-node worlds
+/// from a few lines of JSON.
+fn expand_fleet(
+    topology: &Json,
+    explicit: Vec<Json>,
+) -> Result<Vec<Json>, ConfigError> {
+    let mut out = explicit;
+    let fleet = topology.get("fleet");
+    if fleet.is_null() {
+        return Ok(out);
+    }
+    let Some(groups) = fleet.as_arr() else {
+        return Err(bad("topology.fleet must be an array of groups"));
+    };
+    for (gi, g) in groups.iter().enumerate() {
+        let count = g
+            .get("count")
+            .as_usize()
+            .ok_or_else(|| bad(format!("fleet group {gi}: missing count")))?;
+        if count == 0 {
+            return Err(bad(format!("fleet group {gi}: count must be > 0")));
+        }
+        let region = g
+            .get("region")
+            .as_str()
+            .ok_or_else(|| bad(format!("fleet group {gi}: missing region")))?;
+        let mut template = match g.get("node") {
+            Json::Obj(m) => m.clone(),
+            Json::Null => std::collections::BTreeMap::new(),
+            _ => {
+                return Err(bad(format!(
+                    "fleet group {gi}: node template must be an object"
+                )))
+            }
+        };
+        template.insert("region".to_string(), Json::str(region));
+        for key in ["schedule", "diurnal", "lengths"] {
+            if !g.get(key).is_null() {
+                template.insert(key.to_string(), g.get(key).clone());
+            }
+        }
+        for _ in 0..count {
+            out.push(Json::Obj(template.clone()));
+        }
+    }
+    Ok(out)
+}
+
+fn parse_lengths(j: &Json) -> LengthDist {
+    let d = LengthDist::default();
+    LengthDist {
+        prompt_mean: j.get("prompt_mean").as_f64().unwrap_or(d.prompt_mean),
+        prompt_sigma: j.get("prompt_sigma").as_f64().unwrap_or(d.prompt_sigma),
+        output_mean: j.get("output_mean").as_f64().unwrap_or(d.output_mean),
+        output_sigma: j.get("output_sigma").as_f64().unwrap_or(d.output_sigma),
+        max_tokens: j
+            .get("max_tokens")
+            .as_u64()
+            .map(|v| v as u32)
+            .unwrap_or(d.max_tokens),
+    }
+}
+
 fn parse_system(j: &Json) -> SystemPolicy {
     let d = SystemPolicy::default();
     SystemPolicy {
@@ -349,14 +435,20 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
         other => return Err(bad(format!("unknown ledger mode '{other}'"))),
     };
     let system = parse_system(j.get("system"));
-    let nodes = j
-        .get("nodes")
-        .as_arr()
-        .ok_or_else(|| bad("missing 'nodes' array"))?;
+    let explicit: Vec<Json> = match j.get("nodes") {
+        Json::Null => Vec::new(),
+        other => other
+            .as_arr()
+            .ok_or_else(|| bad("'nodes' must be an array"))?
+            .to_vec(),
+    };
+    let nodes = expand_fleet(j.get("topology"), explicit)?;
     if nodes.is_empty() {
-        return Err(bad("empty 'nodes' array"));
+        return Err(bad(
+            "no nodes: provide a 'nodes' array or a 'topology.fleet' block",
+        ));
     }
-    let topology = parse_topology(j.get("topology"), nodes)?;
+    let topology = parse_topology(j.get("topology"), &nodes)?;
 
     let mut setups = Vec::with_capacity(nodes.len());
     for (i, nj) in nodes.iter().enumerate() {
@@ -392,10 +484,39 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
         };
         let policy = parse_policy(nj.get("policy"));
         let mut setup = NodeSetup::new(profile, policy);
-        if !nj.get("schedule").is_null() {
-            let phases = parse_phases(nj.get("schedule"))?;
-            setup = setup
-                .with_generator(Generator::new(NodeId(i as u32), phases));
+        // Workload: an explicit phase schedule, or a follow-the-sun diurnal
+        // template (period-halved peak/off windows over the horizon).
+        let phases = if !nj.get("schedule").is_null() {
+            Some(parse_phases(nj.get("schedule"))?)
+        } else if !nj.get("diurnal").is_null() {
+            let dj = nj.get("diurnal");
+            let period = dj
+                .get("period")
+                .as_f64()
+                .ok_or_else(|| bad("diurnal.period"))?;
+            if !(period > 0.0 && period.is_finite()) {
+                return Err(bad("diurnal.period must be > 0"));
+            }
+            let peak = dj
+                .get("peak_inter_arrival")
+                .as_f64()
+                .ok_or_else(|| bad("diurnal.peak_inter_arrival"))?;
+            let off = dj
+                .get("off_inter_arrival")
+                .as_f64()
+                .ok_or_else(|| bad("diurnal.off_inter_arrival"))?;
+            let offset = dj.get("offset").as_f64().unwrap_or(0.0);
+            Some(diurnal_phases(horizon, period, peak, off, offset))
+        } else {
+            None
+        };
+        if let Some(phases) = phases {
+            let mut generator = Generator::new(NodeId(i as u32), phases);
+            if !nj.get("lengths").is_null() {
+                generator =
+                    generator.with_lengths(parse_lengths(nj.get("lengths")));
+            }
+            setup = setup.with_generator(generator);
         }
         if nj.get("start_offline").as_bool().unwrap_or(false) {
             setup = setup.offline();
@@ -596,6 +717,113 @@ mod tests {
                 "events": [{"at": 1, "a": "us", "b": "eu",
                             "change": "degrade", "latency_factor": 0}]},
                 "nodes": [{}]}"#
+        )
+        .is_err());
+    }
+
+    const FLEET_SAMPLE: &str = r#"{
+        "seed": 4, "horizon": 300,
+        "topology": {
+            "regions": ["us", "eu"],
+            "intra": { "latency": [0.001, 0.004] },
+            "inter": { "latency": [0.040, 0.080] },
+            "fleet": [
+                { "region": "us", "count": 3,
+                  "node": { "profile": { "prefill_tok_s": 2000,
+                            "decode_tok_s": 40, "max_agg_decode_tok_s": 320,
+                            "max_batch": 16 },
+                            "policy": { "accept_freq": 1.0 } },
+                  "diurnal": { "period": 100, "peak_inter_arrival": 2,
+                               "off_inter_arrival": 20 },
+                  "lengths": { "output_mean": 900, "output_sigma": 0.5 } },
+                { "region": "eu", "count": 2 }
+            ]
+        },
+        "nodes": [ { "region": "eu", "policy": { "stake": 7 } } ]
+    }"#;
+
+    #[test]
+    fn fleet_block_stamps_out_nodes() {
+        let e = parse_experiment(FLEET_SAMPLE).unwrap();
+        // 1 explicit + 3 us + 2 eu, ids in declaration order.
+        assert_eq!(e.setups.len(), 6);
+        let topo = e.world.topology.as_ref().expect("topology parsed");
+        assert_eq!(topo.region_of(0), 1);
+        for i in 1..4 {
+            assert_eq!(topo.region_of(i), 0, "node {i} not in us");
+        }
+        for i in 4..6 {
+            assert_eq!(topo.region_of(i), 1, "node {i} not in eu");
+        }
+        // The node template reached every stamped copy.
+        assert_eq!(e.setups[1].profile.max_batch, 16);
+        assert_eq!(e.setups[3].profile.max_batch, 16);
+        assert!((e.setups[1].policy.accept_freq - 1.0).abs() < 1e-12);
+        // Workload template: diurnal phases covering the horizon, with the
+        // group's length distribution.
+        let g = e.setups[1].generator.as_ref().expect("diurnal generator");
+        assert_eq!(g.phases[0].inter_arrival, 2.0);
+        assert_eq!(g.phases[1].inter_arrival, 20.0);
+        assert_eq!(g.phases.last().unwrap().to, 300.0);
+        assert!((g.lengths.output_mean - 900.0).abs() < 1e-12);
+        // A bare group stamps workload-free default servers.
+        assert!(e.setups[4].generator.is_none());
+        // The explicit node keeps its own policy.
+        assert_eq!(e.setups[0].policy.stake, 7 * CREDIT);
+        topo.validate(e.setups.len());
+    }
+
+    #[test]
+    fn fleet_only_config_needs_no_nodes_array() {
+        let e = parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 4 }]}}"#,
+        )
+        .unwrap();
+        assert_eq!(e.setups.len(), 4);
+        assert!(e.world.topology.is_some());
+    }
+
+    #[test]
+    fn fleet_block_rejects_bad_groups() {
+        // Non-array fleet block (easy authoring mistake) must be a hard
+        // error, not a silently node-less world.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": { "region": "us", "count": 4 }}}"#
+        )
+        .is_err());
+        // Missing count.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us" }]}}"#
+        )
+        .is_err());
+        // Zero count.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 0 }]}}"#
+        )
+        .is_err());
+        // Unknown region.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "mars", "count": 2 }]}}"#
+        )
+        .is_err());
+        // Non-object node template.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2, "node": 5 }]}}"#
+        )
+        .is_err());
+        // Bad diurnal template.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                            "diurnal": { "period": 0,
+                                         "peak_inter_arrival": 2,
+                                         "off_inter_arrival": 20 }}]}}"#
         )
         .is_err());
     }

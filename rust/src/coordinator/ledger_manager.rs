@@ -83,6 +83,19 @@ impl LedgerManager {
         }
     }
 
+    /// Monotonic version of the *stake table* this manager reads: changes
+    /// whenever `stakes()` could return something new. Shared mode counts
+    /// stake-touching batches (including other nodes' — the ledger is
+    /// shared), so payment traffic leaves caches warm; chain mode counts
+    /// committed blocks (coarser, but blocks are the only thing that moves
+    /// replica balances). Cache-staleness key for stake snapshots.
+    pub fn stake_version(&self) -> u64 {
+        match self {
+            LedgerManager::Shared(l) => l.lock().unwrap().stake_version(),
+            LedgerManager::Chain(r) => r.chain.len() as u64,
+        }
+    }
+
     // ---- write API --------------------------------------------------------
 
     /// Submit an op batch. Shared mode applies now (errors are swallowed

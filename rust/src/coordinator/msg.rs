@@ -4,7 +4,7 @@
 //! JSON frames (`to_json` / `from_json` below — the paper uses ZeroMQ ROUTER
 //! with the same request/response vocabulary).
 
-use crate::gossip::Digest;
+use crate::gossip::{Digest, Heartbeats};
 use crate::ledger::Block;
 use crate::types::{NodeId, Request, RequestId, Response};
 use crate::util::json::Json;
@@ -24,10 +24,17 @@ pub enum Message {
     Delegate { request: Request, duel: bool },
     /// The executor's answer travelling back to the originator.
     DelegateResponse { response: Response, duel: bool },
-    /// Push half of a gossip round.
+    /// Push half of a full-digest gossip round (anti-entropy fallback,
+    /// leave/join announcements, suspicion probes).
     Gossip { digest: Digest },
-    /// Pull half (the receiver's view coming back).
+    /// Pull half (the receiver's full view coming back).
     GossipReply { digest: Digest },
+    /// Push half of a regular delta round: full rows only for entries whose
+    /// membership content changed since the last exchange with this peer,
+    /// compact `(node, version)` pairs for plain heartbeat advances.
+    GossipDelta { delta: Digest, heartbeats: Heartbeats },
+    /// Pull half of a delta round (the receiver's delta coming back).
+    GossipDeltaReply { delta: Digest, heartbeats: Heartbeats },
     /// Ask the two duel responses to be compared. `est_tokens` sizes the
     /// judge's own evaluation workload (reading both answers).
     JudgeAssign {
@@ -68,6 +75,8 @@ impl Message {
             Message::DelegateResponse { .. } => "delegate_response",
             Message::Gossip { .. } => "gossip",
             Message::GossipReply { .. } => "gossip_reply",
+            Message::GossipDelta { .. } => "gossip_delta",
+            Message::GossipDeltaReply { .. } => "gossip_delta_reply",
             Message::JudgeAssign { .. } => "judge_assign",
             Message::JudgeVerdict { .. } => "judge_verdict",
             Message::BlockProposal { .. } => "block_proposal",
@@ -93,6 +102,12 @@ impl Message {
             }
             Message::Gossip { digest } | Message::GossipReply { digest } => {
                 16 + digest.len() * 32
+            }
+            Message::GossipDelta { delta, heartbeats }
+            | Message::GossipDeltaReply { delta, heartbeats } => {
+                // A full row costs what a digest entry costs; a heartbeat
+                // refresh is just (node id, version).
+                16 + delta.len() * 32 + heartbeats.len() * 12
             }
             Message::BlockProposal { block } | Message::BlockCommit { block } => {
                 128 + block.ops.len() * 48
@@ -184,7 +199,7 @@ fn response_from(j: &Json) -> Option<Response> {
     })
 }
 
-fn digest_json(d: &Digest) -> Json {
+fn digest_json(d: &[(NodeId, u64, bool, u64, u32)]) -> Json {
     Json::Arr(
         d.iter()
             .map(|(n, v, online, ep, region)| {
@@ -212,6 +227,26 @@ fn digest_from(j: &Json) -> Option<Digest> {
                 a.get(3)?.as_u64()?,
                 a.get(4)?.as_u64()? as u32,
             ))
+        })
+        .collect()
+}
+
+fn heartbeats_json(h: &[(NodeId, u64)]) -> Json {
+    Json::Arr(
+        h.iter()
+            .map(|(n, v)| {
+                Json::Arr(vec![Json::num(n.0 as f64), Json::num(*v as f64)])
+            })
+            .collect(),
+    )
+}
+
+fn heartbeats_from(j: &Json) -> Option<Heartbeats> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            let a = e.as_arr()?;
+            Some((NodeId(a.first()?.as_u64()? as u32), a.get(1)?.as_u64()?))
         })
         .collect()
 }
@@ -252,6 +287,16 @@ impl Message {
             Message::GossipReply { digest } => Json::obj(vec![
                 ("type", Json::str("gossip_reply")),
                 ("digest", digest_json(digest)),
+            ]),
+            Message::GossipDelta { delta, heartbeats } => Json::obj(vec![
+                ("type", Json::str("gossip_delta")),
+                ("delta", digest_json(delta)),
+                ("heartbeats", heartbeats_json(heartbeats)),
+            ]),
+            Message::GossipDeltaReply { delta, heartbeats } => Json::obj(vec![
+                ("type", Json::str("gossip_delta_reply")),
+                ("delta", digest_json(delta)),
+                ("heartbeats", heartbeats_json(heartbeats)),
             ]),
             Message::JudgeAssign { duel_id, resp_a, resp_b, est_tokens } => {
                 Json::obj(vec![
@@ -305,6 +350,14 @@ impl Message {
             }),
             "gossip_reply" => Some(Message::GossipReply {
                 digest: digest_from(j.get("digest"))?,
+            }),
+            "gossip_delta" => Some(Message::GossipDelta {
+                delta: digest_from(j.get("delta"))?,
+                heartbeats: heartbeats_from(j.get("heartbeats"))?,
+            }),
+            "gossip_delta_reply" => Some(Message::GossipDeltaReply {
+                delta: digest_from(j.get("delta"))?,
+                heartbeats: heartbeats_from(j.get("heartbeats"))?,
             }),
             "judge_assign" => Some(Message::JudgeAssign {
                 duel_id: req_id_from(j.get("duel_id"))?,
@@ -361,6 +414,11 @@ mod tests {
             Message::DelegateResponse { response: resp(), duel: false },
             Message::Gossip { digest: vec![(NodeId(1), 4, true, 99, 2)] },
             Message::GossipReply { digest: vec![] },
+            Message::GossipDelta {
+                delta: vec![(NodeId(3), 7, false, 12, 1)],
+                heartbeats: vec![(NodeId(4), 9), (NodeId(5), 2)],
+            },
+            Message::GossipDeltaReply { delta: vec![], heartbeats: vec![] },
             Message::JudgeAssign {
                 duel_id: req().id,
                 resp_a: resp(),
@@ -393,5 +451,33 @@ mod tests {
         let small = Message::ProbeAccept { req_id: req().id };
         let big = Message::Delegate { request: req(), duel: false };
         assert!(big.wire_size() > small.wire_size());
+    }
+
+    #[test]
+    fn delta_wire_size_reflects_savings() {
+        let full = Message::Gossip {
+            digest: (0..50u32).map(|i| (NodeId(i), 1, true, 0, 0)).collect(),
+        };
+        // A steady-state delta: one membership row + a few heartbeat pairs.
+        let delta = Message::GossipDelta {
+            delta: vec![(NodeId(1), 2, true, 0, 0)],
+            heartbeats: (0..8u32).map(|i| (NodeId(i), 3)).collect(),
+        };
+        assert!(
+            delta.wire_size() * 10 < full.wire_size(),
+            "delta {} vs full {}",
+            delta.wire_size(),
+            full.wire_size()
+        );
+        // Heartbeat pairs are strictly cheaper than full rows.
+        let as_rows = Message::GossipDelta {
+            delta: (0..8u32).map(|i| (NodeId(i), 3, true, 0, 0)).collect(),
+            heartbeats: vec![],
+        };
+        let as_pairs = Message::GossipDelta {
+            delta: vec![],
+            heartbeats: (0..8u32).map(|i| (NodeId(i), 3)).collect(),
+        };
+        assert!(as_pairs.wire_size() < as_rows.wire_size());
     }
 }

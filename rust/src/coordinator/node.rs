@@ -68,6 +68,20 @@ struct JudgeTask {
     resp_b: Response,
 }
 
+/// Cached stake-weighted candidate snapshot (§4.1 hot path). Rebuilding it
+/// per request re-collects the stake table, re-filters liveness and
+/// rebuilds the sampler; at fleet scale that dominates dispatch. The cache
+/// is keyed on everything the snapshot reads: the gossip view's mutation
+/// clock (liveness + region tags), the ledger version (stakes), and a
+/// coarse time bucket that bounds heartbeat-aging staleness to one gossip
+/// interval.
+struct SnapCache {
+    view_clock: u64,
+    ledger_version: u64,
+    time_bucket: u64,
+    snap: StakeSnapshot,
+}
+
 /// Counters a node keeps about itself (drives policy + metrics).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct NodeStats {
@@ -104,6 +118,10 @@ pub struct Node {
     /// work carry our own origin with high seq numbers).
     synth_seq: u64,
     last_gossip: Time,
+    /// Gossip rounds completed — drives the delta/anti-entropy cadence.
+    gossip_round: u64,
+    /// Lazily rebuilt stake snapshot (see [`SnapCache`]).
+    snap_cache: Option<SnapCache>,
     pub stats: NodeStats,
 }
 
@@ -154,6 +172,8 @@ impl Node {
             judge_tasks: HashMap::new(),
             synth_seq: 1 << 40,
             last_gossip: now - 1e9,
+            gossip_round: 0,
+            snap_cache: None,
             stats: NodeStats::default(),
         }
     }
@@ -179,6 +199,17 @@ impl Node {
     /// Peers currently believed alive.
     fn alive_peers(&self, now: Time) -> Vec<NodeId> {
         self.view.alive_peers(now)
+    }
+
+    /// Broadcast peers for ledger submissions. Only chain mode sends ledger
+    /// messages; shared mode applies in place and must not pay a per-payment
+    /// alive-peer allocation on the hot path.
+    fn ledger_peers(&self, now: Time) -> Vec<NodeId> {
+        if self.ledger.is_chain() {
+            self.view.alive_peers(now)
+        } else {
+            Vec::new()
+        }
     }
 
     // ---- locality (topology awareness) --------------------------------------
@@ -208,13 +239,17 @@ impl Node {
 
     /// Expected latency to the nearest live peer — the `should_offload`
     /// locality term. 0.0 in flat worlds and for region-blind policies
-    /// (no iteration, no RNG impact, no wasted hot-path scan).
+    /// (no iteration, no RNG impact, no wasted hot-path scan). Scans the
+    /// view's online index in place — no per-request allocation.
     fn nearest_peer_latency(&self, now: Time) -> f64 {
         if self.policy.latency_penalty <= 0.0 || self.latency_est.is_empty() {
             return 0.0;
         }
-        self.alive_peers(now)
-            .into_iter()
+        self.view
+            .online_peers()
+            .iter()
+            .copied()
+            .filter(|p| self.view.is_alive(*p, now))
             .map(|p| self.expected_latency_to(p))
             .fold(f64::INFINITY, f64::min)
             .min(1e6) // no peers at all: huge-but-finite damping
@@ -268,19 +303,25 @@ impl Node {
             self.stats.fallback_local += 1;
             return self.execute_locally(req, ExecKind::Local, now);
         }
-        let snapshot = self.stake_snapshot(now);
-        if snapshot.is_empty() {
+        self.refresh_snapshot(now);
+        let candidates =
+            self.snap_cache.as_ref().map_or(0, |c| c.snap.len());
+        if candidates == 0 {
             self.stats.fallback_local += 1;
             return self.execute_locally(req, ExecKind::Local, now);
         }
 
         // Duel roll (§4.2): a fraction p_d of delegated requests go to two
         // executors directly.
-        if self.rng.chance(self.system.duel_rate) && snapshot.len() >= 2 {
-            return self.start_duel(req, &snapshot, now);
+        if self.rng.chance(self.system.duel_rate) && candidates >= 2 {
+            return self.start_duel(req, now);
         }
 
-        let Some(candidate) = snapshot.sample(&mut self.rng) else {
+        let candidate = {
+            let cache = self.snap_cache.as_ref().expect("refreshed above");
+            cache.snap.sample(&mut self.rng)
+        };
+        let Some(candidate) = candidate else {
             self.stats.fallback_local += 1;
             return self.execute_locally(req, ExecKind::Local, now);
         };
@@ -303,13 +344,12 @@ impl Node {
         vec![Action::Send { to: candidate, msg: probe }]
     }
 
-    fn start_duel(
-        &mut self,
-        req: Request,
-        snapshot: &StakeSnapshot,
-        now: Time,
-    ) -> Vec<Action> {
-        let execs = snapshot.sample_distinct(&mut self.rng, 2);
+    fn start_duel(&mut self, req: Request, now: Time) -> Vec<Action> {
+        let execs = {
+            let cache =
+                self.snap_cache.as_ref().expect("refreshed in try_delegate");
+            cache.snap.sample_distinct(&mut self.rng, 2)
+        };
         if execs.len() < 2 {
             self.stats.fallback_local += 1;
             return self.execute_locally(req, ExecKind::Local, now);
@@ -335,12 +375,26 @@ impl Node {
             .collect()
     }
 
-    /// Stake-weighted, liveness-filtered snapshot of delegation candidates.
-    /// With locality information and a positive `latency_penalty`, each
-    /// candidate's stake is damped by `1 / (1 + penalty * latency)` — nearer
-    /// peers win ties, distant continents fade from selection (§4.1 made
-    /// WAN-aware). Flat worlds skip the reweight entirely.
-    fn stake_snapshot(&self, now: Time) -> StakeSnapshot {
+    /// Ensure the cached stake-weighted, liveness-filtered snapshot of
+    /// delegation candidates is current (see [`SnapCache`]). With locality
+    /// information and a positive `latency_penalty`, each candidate's stake
+    /// is damped by `1 / (1 + penalty * latency)` — nearer peers win ties,
+    /// distant continents fade from selection (§4.1 made WAN-aware). Flat
+    /// worlds skip the reweight entirely. The rebuilt snapshot is
+    /// alias-prepared, so every subsequent draw is O(1).
+    fn refresh_snapshot(&mut self, now: Time) {
+        let view_clock = self.view.clock();
+        let ledger_version = self.ledger.stake_version();
+        let interval = self.view.config().interval.max(1e-6);
+        let time_bucket = (now / interval) as u64;
+        if let Some(c) = &self.snap_cache {
+            if c.view_clock == view_clock
+                && c.ledger_version == ledger_version
+                && c.time_bucket == time_bucket
+            {
+                return;
+            }
+        }
         let mut snap = StakeSnapshot::new(&self.ledger.stakes(), Some(self.id));
         snap.retain(|n| self.view.is_alive(n, now));
         if self.policy.latency_penalty > 0.0 && !self.latency_est.is_empty() {
@@ -349,7 +403,13 @@ impl Node {
                 1.0 / (1.0 + penalty * self.expected_latency_to(n))
             });
         }
-        snap
+        snap.prepare();
+        self.snap_cache = Some(SnapCache {
+            view_clock,
+            ledger_version,
+            time_bucket,
+            snap,
+        });
     }
 
     /// Put a request on our own backend.
@@ -396,13 +456,38 @@ impl Node {
             }
             Message::Gossip { digest } => {
                 self.view.merge(&digest, now);
+                let reply = self.view.digest();
+                self.view.mark_synced(from);
                 vec![Action::Send {
                     to: from,
-                    msg: Message::GossipReply { digest: self.view.digest() },
+                    msg: Message::GossipReply { digest: reply },
                 }]
             }
             Message::GossipReply { digest } => {
                 self.view.merge(&digest, now);
+                vec![]
+            }
+            Message::GossipDelta { delta, heartbeats } => {
+                let mut fresh = self.view.merge(&delta, now);
+                fresh.extend(self.view.merge_heartbeats(&heartbeats, now));
+                fresh.sort_unstable();
+                // Pull half: our own delta back to the initiator, minus
+                // whatever we just accepted from it (no echo). An empty
+                // exchange is skipped — nothing to learn, no bytes burned.
+                let (delta, heartbeats) =
+                    self.view.delta_for_excluding(from, now, &fresh);
+                if delta.is_empty() && heartbeats.is_empty() {
+                    vec![]
+                } else {
+                    vec![Action::Send {
+                        to: from,
+                        msg: Message::GossipDeltaReply { delta, heartbeats },
+                    }]
+                }
+            }
+            Message::GossipDeltaReply { delta, heartbeats } => {
+                self.view.merge(&delta, now);
+                self.view.merge_heartbeats(&heartbeats, now);
                 vec![]
             }
             Message::JudgeAssign { duel_id, resp_a, resp_b, est_tokens } => {
@@ -473,8 +558,12 @@ impl Node {
             return self.execute_locally(req, ExecKind::Local, now);
         }
         // Try another candidate.
-        let snapshot = self.stake_snapshot(now);
-        match snapshot.sample(&mut self.rng) {
+        self.refresh_snapshot(now);
+        let next = {
+            let cache = self.snap_cache.as_ref().expect("refreshed above");
+            cache.snap.sample(&mut self.rng)
+        };
+        match next {
             Some(c) => {
                 let probe = Message::Probe {
                     req_id,
@@ -514,7 +603,7 @@ impl Node {
             return vec![];
         };
         // Pay the executor (credits-for-offloading).
-        let peers = self.alive_peers(now);
+        let peers = self.ledger_peers(now);
         let mut actions = self.ledger.submit(
             vec![CreditOp::Transfer {
                 from: self.id,
@@ -571,7 +660,7 @@ impl Node {
                 synthetic: req.synthetic,
             }));
             // Both executors get the base payment (both did the work).
-            let peers = self.alive_peers(now);
+            let peers = self.ledger_peers(now);
             let ops = execs
                 .iter()
                 .map(|e| CreditOp::Transfer {
@@ -605,10 +694,17 @@ impl Node {
     }
 
     fn dispatch_judges(&mut self, duel_id: RequestId, now: Time) -> Vec<Action> {
-        let snapshot = self.stake_snapshot(now);
-        let d = self.duels.get_mut(&duel_id).expect("duel exists");
+        self.refresh_snapshot(now);
         // Judges: PoS-sampled, excluding the two executors (impartiality).
-        let mut pool = snapshot;
+        // Duels are rare, so cloning the cached snapshot for the exclusion
+        // filter is fine; the per-request path never clones.
+        let mut pool = self
+            .snap_cache
+            .as_ref()
+            .expect("refreshed above")
+            .snap
+            .clone();
+        let d = self.duels.get_mut(&duel_id).expect("duel exists");
         let execs = d.executors;
         pool.retain(|n| n != execs[0] && n != execs[1]);
         let judges = pool.sample_distinct(&mut self.rng, self.system.judges);
@@ -702,7 +798,7 @@ impl Node {
                 reason: OpReason::JudgeReward(duel_id),
             });
         }
-        let peers = self.alive_peers(now);
+        let peers = self.ledger_peers(now);
         let mut actions = self.ledger.submit(ops, self.id, &peers, now);
         actions.push(Action::DuelSettled(outcome));
         actions
@@ -791,25 +887,71 @@ impl Node {
 
     // ---- tick: gossip + timeouts --------------------------------------------
 
-    fn on_tick(&mut self, now: Time) -> Vec<Action> {
-        let mut actions = Vec::new();
-
-        // Gossip round (§A.2).
-        if now - self.last_gossip >= self.view.config().interval {
-            self.last_gossip = now;
-            self.view.heartbeat(now);
+    /// The single gossip-broadcast path: one wave to `targets`, shared by
+    /// the regular tick round, leave/join announcements and suspicion
+    /// probes. `full` sends the complete digest (anti-entropy form, built
+    /// once and cloned per target); otherwise each target gets its own
+    /// delta, and empty exchanges are skipped entirely.
+    fn gossip_send(
+        &mut self,
+        targets: &[NodeId],
+        full: bool,
+        now: Time,
+    ) -> Vec<Action> {
+        let mut out = Vec::with_capacity(targets.len());
+        if full {
+            if targets.is_empty() {
+                return out;
+            }
             let digest = self.view.digest();
-            for t in self.view.pick_targets(&mut self.rng, now) {
-                actions.push(Action::Send {
-                    to: t,
+            for t in targets {
+                self.view.mark_synced(*t);
+                out.push(Action::Send {
+                    to: *t,
                     msg: Message::Gossip { digest: digest.clone() },
                 });
             }
+        } else {
+            for t in targets {
+                let (delta, heartbeats) = self.view.delta_for(*t, now);
+                if delta.is_empty() && heartbeats.is_empty() {
+                    continue;
+                }
+                out.push(Action::Send {
+                    to: *t,
+                    msg: Message::GossipDelta { delta, heartbeats },
+                });
+            }
+        }
+        out
+    }
+
+    fn on_tick(&mut self, now: Time) -> Vec<Action> {
+        let mut actions = Vec::new();
+
+        // Gossip round (§A.2): deltas on regular rounds, the full digest on
+        // the first and every `anti_entropy_every`-th round, and always for
+        // the suspicion probe (a heal must pull the whole view back in).
+        if now - self.last_gossip >= self.view.config().interval {
+            self.last_gossip = now;
+            self.gossip_round += 1;
+            self.view.heartbeat(now);
+            let ae = self.view.config().anti_entropy_every;
+            let full = ae <= 1 || self.gossip_round % ae == 1;
+            let (regular, suspect) =
+                self.view.pick_round_targets(&mut self.rng, now);
+            actions.extend(self.gossip_send(&regular, full, now));
+            if let Some(s) = suspect {
+                actions.extend(self.gossip_send(&[s], true, now));
+            }
         }
 
-        // Ledger retries (chain mode head races).
-        let peers = self.alive_peers(now);
-        actions.extend(self.ledger.on_tick(&peers, now));
+        // Ledger retries (chain mode head races). Shared mode has no ledger
+        // traffic — skip the per-tick alive-peer allocation.
+        if self.ledger.is_chain() {
+            let peers = self.alive_peers(now);
+            actions.extend(self.ledger.on_tick(&peers, now));
+        }
 
         // Stake maintenance (user-level policy, §4.3): a rational provider
         // tops its stake back up to its declared target after duel slashes —
@@ -821,6 +963,7 @@ impl Node {
             let balance = self.ledger.balance(self.id);
             if stake < self.policy.stake && balance > 0 {
                 let amount = (self.policy.stake - stake).min(balance);
+                let peers = self.ledger_peers(now);
                 actions.extend(self.ledger.submit(
                     vec![CreditOp::Stake { node: self.id, amount }],
                     self.id,
@@ -905,33 +1048,21 @@ impl Node {
     fn on_leave(&mut self, now: Time) -> Vec<Action> {
         self.online = false;
         self.view.announce_leave(now);
-        let digest = self.view.digest();
-        // Goodbye gossip so the network learns quickly (Fig. 5b).
-        self.view
-            .alive_peers(now)
-            .into_iter()
-            .map(|p| Action::Send {
-                to: p,
-                msg: Message::Gossip { digest: digest.clone() },
-            })
-            .collect()
+        // Goodbye gossip so the network learns quickly (Fig. 5b) — always
+        // the full digest (our departure is membership news).
+        let peers = self.view.alive_peers(now);
+        self.gossip_send(&peers, true, now)
     }
 
     fn on_join(&mut self, now: Time) -> Vec<Action> {
         self.online = true;
         self.view.heartbeat(now); // version bump flips us back online
-        self.view.refresh(now); // bootstrap peers are contactable again
+        // Bootstrap peers are contactable again, and the per-peer delta
+        // floors reset: after downtime we no longer know what peers saw.
+        self.view.refresh(now);
         self.last_gossip = now;
-        let digest = self.view.digest();
-        let mut actions: Vec<Action> = self
-            .view
-            .pick_targets(&mut self.rng, now)
-            .into_iter()
-            .map(|p| Action::Send {
-                to: p,
-                msg: Message::Gossip { digest: digest.clone() },
-            })
-            .collect();
+        let targets = self.view.pick_targets(&mut self.rng, now);
+        let mut actions = self.gossip_send(&targets, true, now);
         if let Some(t) = self.backend.next_event() {
             actions.push(Action::WakeAt(t));
         }
@@ -1315,6 +1446,90 @@ mod tests {
             .iter()
             .any(|x| matches!(x, Action::Send { msg: Message::Probe { .. }, .. })));
         assert_eq!(n0.backend().running_len(), 0);
+    }
+
+    #[test]
+    fn snapshot_cache_tracks_liveness_and_ledger() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        let probes_to = |actions: &[Action]| -> Vec<NodeId> {
+            actions
+                .iter()
+                .filter_map(|x| match x {
+                    Action::Send { to, msg: Message::Probe { .. } } => {
+                        Some(*to)
+                    }
+                    _ => None,
+                })
+                .collect()
+        };
+        // Two back-to-back requests: the second reuses the cached snapshot
+        // (same view clock, ledger version and time bucket) and still
+        // probes the live peer.
+        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        assert_eq!(probes_to(&a), vec![NodeId(1)]);
+        let a = n0.handle(Event::UserRequest(user_req(0, 1, 0.0)), 0.0);
+        assert_eq!(probes_to(&a), vec![NodeId(1)]);
+        // The peer ages out (suspect_after 5 s): with no view mutation at
+        // all, the time-bucket key alone must force a rebuild that drops
+        // it — stale caches must not delegate to the dead.
+        let a = n0.handle(Event::UserRequest(user_req(0, 2, 20.0)), 20.0);
+        assert!(probes_to(&a).is_empty());
+        assert_eq!(n0.stats.fallback_local, 1);
+        // A newly staked + gossiped peer invalidates via clock/version and
+        // becomes the only candidate.
+        let _n2 = mk_node(2, NodePolicy::default(), &shared);
+        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 0)], 20.0);
+        let a = n0.handle(Event::UserRequest(user_req(0, 3, 20.5)), 20.5);
+        assert_eq!(probes_to(&a), vec![NodeId(2)]);
+    }
+
+    #[test]
+    fn tick_gossip_uses_deltas_between_anti_entropy_rounds() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut a = mk_node(0, NodePolicy::default(), &shared);
+        let mut b = mk_node(1, NodePolicy::default(), &shared);
+        a.view.add_seed(NodeId(1), 0, 0, 0.0);
+        b.view.add_seed(NodeId(0), 0, 0, 0.0);
+        let gossip_kinds = |actions: &[Action]| -> Vec<&'static str> {
+            actions
+                .iter()
+                .filter_map(|x| match x {
+                    Action::Send { msg, .. } => Some(msg.kind()),
+                    _ => None,
+                })
+                .collect()
+        };
+        // Round 1 bootstraps with the full digest (anti-entropy form)...
+        let out = a.handle(Event::Tick, 1.0);
+        assert_eq!(gossip_kinds(&out), vec!["gossip"]);
+        // ...subsequent rounds ship deltas.
+        let out = a.handle(Event::Tick, 2.0);
+        assert_eq!(gossip_kinds(&out), vec!["gossip_delta"]);
+        // The delta carries our heartbeat: the receiver keeps us alive
+        // without ever seeing another full digest.
+        let delta = out
+            .iter()
+            .find_map(|x| match x {
+                Action::Send { msg: m @ Message::GossipDelta { .. }, .. } => {
+                    Some(m.clone())
+                }
+                _ => None,
+            })
+            .expect("delta sent");
+        b.handle(Event::Message { from: NodeId(0), msg: delta }, 2.1);
+        assert!(b.view.is_alive(NodeId(0), 2.1));
     }
 
     #[test]

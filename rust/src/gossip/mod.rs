@@ -1,15 +1,63 @@
-//! Gossip-driven peer synchronization (§A.2, Figure 10).
+//! Gossip-driven peer synchronization (§A.2, Figure 10) with delta
+//! dissemination.
 //!
 //! Each node keeps a [`PeerView`]: per-peer status (online/offline), network
 //! endpoint, and a heartbeat version counter. Every gossip round a node bumps
-//! its own heartbeat, picks a small fanout of live peers, and exchanges views
+//! its own heartbeat, picks a small fanout of live peers, and synchronizes
 //! push-pull; entries with higher versions win during [`PeerView::merge`].
 //! Liveness is inferred locally: a peer whose heartbeat hasn't advanced
 //! within `suspect_after` rounds-worth of time is suspected offline
 //! (SWIM-style, but simple heartbeat aging suffices at the paper's scale).
 //!
+//! ## The delta protocol
+//!
+//! The seed protocol shipped the **full** view in both halves of every
+//! push-pull exchange — O(n) entries per message, quadratic total traffic
+//! per round across an n-node fleet. Epidemic-membership systems (SWIM-style
+//! dissemination, per PAPERS.md) ship only *changes*. This module now splits
+//! a round into three wire forms:
+//!
+//! * **Delta** (`Message::GossipDelta` / `GossipDeltaReply`) — the regular
+//!   round. A per-peer *sent clock* ([`PeerView::delta_for`]) selects only
+//!   entries updated since the last exchange with that peer. Entries whose
+//!   *membership content* changed (online flag, endpoint, region, or a
+//!   newly learned peer) travel as full 32-byte digest rows; entries that
+//!   merely advanced their heartbeat travel as compact 12-byte
+//!   `(node, version)` refresh pairs. A per-entry forwarding throttle
+//!   (`0.4 × suspect_after`) stops every node from re-advertising every
+//!   heartbeat every round — each peer still hears a refresh for every live
+//!   entry a few times per suspicion window, which is all that liveness
+//!   aging needs, at a small fraction of the bytes. The refresh rate a node
+//!   sees for a given peer is ~`1 / throttle` regardless of fleet size, so
+//!   `suspect_after` must scale with the fleet: a 5-round window is fine at
+//!   a dozen nodes (direct contact dominates, and every exchange carries
+//!   the sender's own heartbeat, SWIM-ping style), while 500–1000-node
+//!   fleets should run 20+ rounds or pairs start flapping in and out of
+//!   suspicion — `benches/fleet_scale.rs` asserts the end-of-run alive
+//!   fraction alongside its byte counts for exactly this reason.
+//! * **Anti-entropy fallback** (`Message::Gossip` / `GossipReply`) — every
+//!   [`GossipConfig::anti_entropy_every`]-th round (and the very first), the
+//!   full digest is exchanged exactly as the seed protocol did. This repairs
+//!   anything deltas missed (messages lost to partitions, throttled final
+//!   versions of dead peers) and doubles as the correctness oracle: the
+//!   convergence-equivalence property test (`rust/tests/delta_gossip.rs`)
+//!   proves delta and full runs end in bit-identical views.
+//! * **Suspicion probe** — unchanged, but always full-digest: one successful
+//!   probe after a heal pulls the whole remote view back in.
+//!
+//! Byte accounting lives in `Message::wire_size`; the fleet-scale bench
+//! (`benches/fleet_scale.rs`) measures the reduction (≥10x gossip bytes per
+//! round at 500 nodes vs. the full-digest baseline).
+//!
+//! Membership queries ([`PeerView::alive_peers`],
+//! [`PeerView::alive_peers_by_region`], [`PeerView::digest`]) are backed by
+//! incrementally maintained sorted indexes (updated on merge) instead of
+//! rebuilding and re-sorting from the entry map on every call — those sit on
+//! the per-request dispatch path.
+//!
 //! Convergence (epidemic diffusion, O(log N) rounds) is property-tested in
-//! `rust/tests/prop_gossip.rs` and measured in `benches/gossip_convergence.rs`.
+//! `rust/tests/prop_protocol.rs` and measured in
+//! `benches/gossip_convergence.rs`.
 
 use std::collections::{BTreeMap, HashMap};
 
@@ -31,6 +79,17 @@ pub struct PeerEntry {
     pub region: u32,
     /// Local time we last saw this entry's version advance.
     pub last_seen: Time,
+    /// Local mutation-clock stamp of the last change (any kind). Entries
+    /// with `updated > sent[peer]` are candidates for the next delta to
+    /// that peer. Local bookkeeping — never serialized.
+    pub updated: u64,
+    /// Local mutation-clock stamp of the last *membership* change (online
+    /// flag, endpoint, region, or first sighting). Such entries travel as
+    /// full digest rows and bypass the heartbeat throttle.
+    pub meta_updated: u64,
+    /// Local time this entry was last included in any outgoing delta
+    /// (heartbeat-refresh throttle). Local bookkeeping.
+    pub last_fwd: Time,
 }
 
 /// Gossip configuration knobs (system-level policy, §4.3).
@@ -42,11 +101,21 @@ pub struct GossipConfig {
     pub fanout: usize,
     /// Seconds without heartbeat progress before a peer is suspected dead.
     pub suspect_after: f64,
+    /// Every k-th gossip round exchanges the *full* digest (anti-entropy
+    /// fallback of the delta protocol). `1` (or 0) disables deltas entirely
+    /// and reproduces the seed's full-view protocol — the baseline the
+    /// fleet-scale bench compares against.
+    pub anti_entropy_every: u64,
 }
 
 impl Default for GossipConfig {
     fn default() -> Self {
-        GossipConfig { interval: 1.0, fanout: 2, suspect_after: 5.0 }
+        GossipConfig {
+            interval: 1.0,
+            fanout: 2,
+            suspect_after: 5.0,
+            anti_entropy_every: 32,
+        }
     }
 }
 
@@ -67,10 +136,45 @@ pub struct PeerView {
     pub me: NodeId,
     entries: HashMap<NodeId, PeerEntry>,
     cfg: GossipConfig,
+    /// Local mutation clock: bumped on every entry change; stamps
+    /// `PeerEntry::updated` / `meta_updated` and floors the per-peer `sent`
+    /// map. Also the cheap invalidation key for anything derived from this
+    /// view (e.g. the node's cached stake snapshot).
+    clock: u64,
+    /// Per-peer clock floor: our `clock` as of the last delta sent to them.
+    sent: HashMap<NodeId, u64>,
+    /// Clock value at [`seal_bootstrap`](PeerView::seal_bootstrap): deltas
+    /// to never-contacted peers start here instead of at zero, so common
+    /// bootstrap knowledge is not re-shipped to every first contact.
+    bootstrap_clock: u64,
+    /// All known node ids (including self), kept sorted — the digest is a
+    /// straight map over this, no per-call sort.
+    ids_sorted: Vec<NodeId>,
+    /// Non-self peers whose last word was `online`, kept sorted
+    /// (liveness-age filtering happens at query time).
+    online_sorted: Vec<NodeId>,
+    /// The same peers grouped by region tag, each group sorted.
+    by_region: BTreeMap<u32, Vec<NodeId>>,
 }
 
 /// A serializable digest exchanged during a gossip round.
 pub type Digest = Vec<(NodeId, u64, bool, u64, u32)>; // (node, version, online, endpoint, region)
+
+/// Compact heartbeat refreshes: `(node, version)` pairs for entries whose
+/// only news is a newer heartbeat (12 wire bytes vs. 32 for a digest row).
+pub type Heartbeats = Vec<(NodeId, u64)>;
+
+fn sorted_insert(v: &mut Vec<NodeId>, n: NodeId) {
+    if let Err(i) = v.binary_search(&n) {
+        v.insert(i, n);
+    }
+}
+
+fn sorted_remove(v: &mut Vec<NodeId>, n: NodeId) {
+    if let Ok(i) = v.binary_search(&n) {
+        v.remove(i);
+    }
+}
 
 impl PeerView {
     pub fn new(me: NodeId, cfg: GossipConfig, now: Time) -> Self {
@@ -83,30 +187,86 @@ impl PeerView {
                 endpoint: 0,
                 region: 0,
                 last_seen: now,
+                updated: 1,
+                meta_updated: 1,
+                last_fwd: f64::NEG_INFINITY,
             },
         );
-        PeerView { me, entries, cfg }
+        PeerView {
+            me,
+            entries,
+            cfg,
+            clock: 1,
+            sent: HashMap::new(),
+            bootstrap_clock: 0,
+            ids_sorted: vec![me],
+            online_sorted: Vec::new(),
+            by_region: BTreeMap::new(),
+        }
     }
 
     pub fn config(&self) -> GossipConfig {
         self.cfg
     }
 
+    /// Mutation clock: changes iff the view's gossiped content changed.
+    /// Cheap staleness key for caches derived from this view.
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    fn self_entry_mut(&mut self) -> &mut PeerEntry {
+        self.entries.get_mut(&self.me).expect("self entry exists")
+    }
+
+    // ---- incremental index maintenance (online/by-region) -------------------
+
+    fn index_insert(&mut self, n: NodeId, region: u32) {
+        sorted_insert(&mut self.online_sorted, n);
+        sorted_insert(self.by_region.entry(region).or_default(), n);
+    }
+
+    fn index_remove(&mut self, n: NodeId, region: u32) {
+        sorted_remove(&mut self.online_sorted, n);
+        if let Some(group) = self.by_region.get_mut(&region) {
+            sorted_remove(group, n);
+            if group.is_empty() {
+                self.by_region.remove(&region);
+            }
+        }
+    }
+
     /// Seed knowledge of a bootstrap peer (e.g. from the config file).
     pub fn add_seed(&mut self, peer: NodeId, endpoint: u64, region: u32, now: Time) {
-        self.entries.entry(peer).or_insert(PeerEntry {
-            version: 0,
-            online: true,
-            endpoint,
-            region,
-            last_seen: now,
-        });
+        if peer == self.me || self.entries.contains_key(&peer) {
+            return;
+        }
+        self.clock += 1;
+        self.entries.insert(
+            peer,
+            PeerEntry {
+                version: 0,
+                online: true,
+                endpoint,
+                region,
+                last_seen: now,
+                updated: self.clock,
+                meta_updated: self.clock,
+                last_fwd: f64::NEG_INFINITY,
+            },
+        );
+        sorted_insert(&mut self.ids_sorted, peer);
+        self.index_insert(peer, region);
     }
 
     /// Declare our own region (gossiped out with every digest).
     pub fn set_region(&mut self, region: u32) {
-        self.entries.get_mut(&self.me).expect("self entry exists").region =
-            region;
+        self.clock += 1;
+        let clock = self.clock;
+        let e = self.self_entry_mut();
+        e.region = region;
+        e.updated = clock;
+        e.meta_updated = clock;
     }
 
     /// The region tag we last heard for `peer` (None if unknown peer).
@@ -118,35 +278,55 @@ impl PeerView {
     /// asserts liveness, so it also clears any prior offline announcement
     /// (the leave -> rejoin cycle of Figure 5).
     pub fn heartbeat(&mut self, now: Time) {
-        let e = self.entries.get_mut(&self.me).expect("self entry exists");
+        self.clock += 1;
+        let clock = self.clock;
+        let e = self.self_entry_mut();
         e.version += 1;
-        e.online = true;
         e.last_seen = now;
+        e.updated = clock;
+        if !e.online {
+            // Coming back from a graceful leave is membership news — it must
+            // travel as a full digest row, never as a heartbeat pair.
+            e.online = true;
+            e.meta_updated = clock;
+        }
     }
 
     /// Gracefully announce our departure (gossiped out before leaving).
     pub fn announce_leave(&mut self, now: Time) {
-        let e = self.entries.get_mut(&self.me).expect("self entry exists");
+        self.clock += 1;
+        let clock = self.clock;
+        let e = self.self_entry_mut();
         e.version += 1;
         e.online = false;
         e.last_seen = now;
+        e.updated = clock;
+        e.meta_updated = clock;
     }
 
     /// Optimistically refresh contactability of known online peers — used
     /// when (re)joining after downtime: our `last_seen` clocks are stale,
     /// but bootstrap peers are worth contacting so the join gossip can
-    /// propagate (they'll age out again if truly gone).
+    /// propagate (they'll age out again if truly gone). Also forgets the
+    /// per-peer delta floors: after downtime we no longer know what our
+    /// peers have seen, so the next deltas start from scratch.
     pub fn refresh(&mut self, now: Time) {
         for (n, e) in self.entries.iter_mut() {
             if *n != self.me && e.online {
                 e.last_seen = now;
             }
+            e.last_fwd = f64::NEG_INFINITY;
         }
+        self.sent.clear();
     }
 
     pub fn set_endpoint(&mut self, endpoint: u64) {
-        self.entries.get_mut(&self.me).expect("self entry exists").endpoint =
-            endpoint;
+        self.clock += 1;
+        let clock = self.clock;
+        let e = self.self_entry_mut();
+        e.endpoint = endpoint;
+        e.updated = clock;
+        e.meta_updated = clock;
     }
 
     /// Is `peer` believed alive right now? (online flag + heartbeat age)
@@ -159,31 +339,38 @@ impl PeerView {
         }
     }
 
-    /// All peers (excluding self) believed alive.
+    /// All peers (excluding self) believed alive. Sorted by id; backed by
+    /// the incrementally maintained online index (no per-call sort).
     pub fn alive_peers(&self, now: Time) -> Vec<NodeId> {
-        let mut v: Vec<NodeId> = self
-            .entries
-            .keys()
+        self.online_sorted
+            .iter()
             .copied()
-            .filter(|n| *n != self.me && self.is_alive(*n, now))
-            .collect();
-        v.sort();
-        v
+            .filter(|n| self.is_alive(*n, now))
+            .collect()
+    }
+
+    /// Non-self peers whose last word was `online`, sorted by id — the
+    /// superset `alive_peers` filters by heartbeat age. Exposed so hot
+    /// paths can scan without allocating.
+    pub fn online_peers(&self) -> &[NodeId] {
+        &self.online_sorted
     }
 
     /// All alive peers (excluding self) grouped by their region tag —
-    /// deterministic order (BTreeMap, sorted peer lists).
+    /// deterministic order (sorted groups, maintained incrementally).
     pub fn alive_peers_by_region(&self, now: Time) -> BTreeMap<u32, Vec<NodeId>> {
-        let mut by_region: BTreeMap<u32, Vec<NodeId>> = BTreeMap::new();
-        for (n, e) in &self.entries {
-            if *n != self.me && self.is_alive(*n, now) {
-                by_region.entry(e.region).or_default().push(*n);
+        let mut out = BTreeMap::new();
+        for (region, group) in &self.by_region {
+            let alive: Vec<NodeId> = group
+                .iter()
+                .copied()
+                .filter(|n| self.is_alive(*n, now))
+                .collect();
+            if !alive.is_empty() {
+                out.insert(*region, alive);
             }
         }
-        for v in by_region.values_mut() {
-            v.sort();
-        }
-        by_region
+        out
     }
 
     pub fn endpoint(&self, peer: NodeId) -> Option<u64> {
@@ -198,91 +385,264 @@ impl PeerView {
         self.entries.len()
     }
 
-    /// Choose gossip targets for this round. If nobody looks alive (e.g. we
-    /// were offline past everyone's heartbeat window, or we just booted from
-    /// stale seeds), fall back to probing *known* peers — an unreachable
-    /// target costs one lost message, while never probing would leave the
-    /// node isolated forever.
+    /// Choose gossip targets for this round: the regular alive-pool fanout
+    /// plus (occasionally) one suspicion probe. See [`pick_round_targets`]
+    /// for the split the delta protocol needs.
+    ///
+    /// [`pick_round_targets`]: PeerView::pick_round_targets
     pub fn pick_targets(&self, rng: &mut Rng, now: Time) -> Vec<NodeId> {
+        let (mut targets, suspect) = self.pick_round_targets(rng, now);
+        targets.extend(suspect);
+        targets
+    }
+
+    /// Like [`pick_targets`](PeerView::pick_targets) but keeps the suspicion
+    /// probe separate: regular targets receive deltas, the probe always
+    /// receives the full digest (a heal must pull the whole remote view
+    /// back). If nobody looks alive (e.g. we were offline past everyone's
+    /// heartbeat window, or we just booted from stale seeds), fall back to
+    /// probing *known* peers — an unreachable target costs one lost message,
+    /// while never probing would leave the node isolated forever.
+    pub fn pick_round_targets(
+        &self,
+        rng: &mut Rng,
+        now: Time,
+    ) -> (Vec<NodeId>, Option<NodeId>) {
         let mut pool = self.alive_peers(now);
         let fallback = pool.is_empty();
         if fallback {
             pool = self
-                .entries
-                .keys()
+                .ids_sorted
+                .iter()
                 .copied()
                 .filter(|n| *n != self.me)
                 .collect();
-            pool.sort();
         }
         if pool.is_empty() {
-            return vec![];
+            return (vec![], None);
         }
         let idx = rng.sample_distinct(pool.len(), self.cfg.fanout);
-        let mut targets: Vec<NodeId> =
-            idx.into_iter().map(|i| pool[i]).collect();
+        let targets: Vec<NodeId> = idx.into_iter().map(|i| pool[i]).collect();
         // Suspicion probe: occasionally add one heartbeat-aged peer that
         // never said goodbye, so crashed-and-recovered nodes and healed
         // partitions can rejoin (see [`RESURRECT_PROB`]). Skipped in
         // fallback mode — the pool already holds every known peer.
+        let mut suspect = None;
         if !fallback {
-            let mut suspects: Vec<NodeId> = self
-                .entries
+            let suspects: Vec<NodeId> = self
+                .online_sorted
                 .iter()
-                .filter(|(n, e)| {
-                    **n != self.me && e.online && !self.is_alive(**n, now)
-                })
-                .map(|(n, _)| *n)
+                .copied()
+                .filter(|n| !self.is_alive(*n, now))
                 .collect();
             if !suspects.is_empty() && rng.chance(RESURRECT_PROB) {
-                suspects.sort();
-                targets.push(suspects[rng.below(suspects.len())]);
+                suspect = Some(suspects[rng.below(suspects.len())]);
             }
         }
-        targets
+        (targets, suspect)
     }
 
-    /// Serialize the view for transmission.
+    /// Serialize the full view for transmission (anti-entropy rounds,
+    /// leave/join announcements, suspicion probes). Sorted by node id.
     pub fn digest(&self) -> Digest {
-        let mut d: Digest = self
-            .entries
+        self.ids_sorted
             .iter()
-            .map(|(n, e)| (*n, e.version, e.online, e.endpoint, e.region))
-            .collect();
-        d.sort_by_key(|(n, ..)| *n);
-        d
+            .map(|n| {
+                let e = &self.entries[n];
+                (*n, e.version, e.online, e.endpoint, e.region)
+            })
+            .collect()
+    }
+
+    /// Build the delta for `peer`: full digest rows for entries whose
+    /// membership content changed since the last exchange with them, plus
+    /// compact heartbeat pairs for entries that merely advanced — the
+    /// latter rate-limited per entry (across all peers) to
+    /// `0.4 × suspect_after` seconds. Advances the per-peer sent floor.
+    ///
+    /// Throttle-skipped entries are *not* retransmitted later unless they
+    /// change again; a live peer's next heartbeat re-qualifies it, and the
+    /// final frozen version of a dead peer is exactly what liveness aging
+    /// wants to miss. Full anti-entropy rounds repair every other loss.
+    pub fn delta_for(
+        &mut self,
+        peer: NodeId,
+        now: Time,
+    ) -> (Digest, Heartbeats) {
+        self.delta_for_excluding(peer, now, &[])
+    }
+
+    /// [`delta_for`](PeerView::delta_for) minus `exclude` — the pull half of
+    /// a delta exchange passes the entries it just accepted from the push,
+    /// so they are not echoed straight back to the peer that sent them.
+    /// `exclude` must be sorted (binary-searched per candidate entry).
+    pub fn delta_for_excluding(
+        &mut self,
+        peer: NodeId,
+        now: Time,
+        exclude: &[NodeId],
+    ) -> (Digest, Heartbeats) {
+        debug_assert!(exclude.windows(2).all(|w| w[0] <= w[1]));
+        let floor =
+            self.sent.get(&peer).copied().unwrap_or(self.bootstrap_clock);
+        let throttle = 0.4 * self.cfg.suspect_after;
+        let me = self.me;
+        let mut delta: Digest = Vec::new();
+        let mut heartbeats: Heartbeats = Vec::new();
+        for n in &self.ids_sorted {
+            // Never tell a peer about itself (its self-entry is
+            // authoritative — the receiver would discard it anyway).
+            if *n == peer || exclude.binary_search(n).is_ok() {
+                continue;
+            }
+            let e = self.entries.get_mut(n).expect("indexed entry exists");
+            if e.updated <= floor {
+                continue;
+            }
+            if e.meta_updated > floor {
+                delta.push((*n, e.version, e.online, e.endpoint, e.region));
+                e.last_fwd = now;
+            } else if *n == me || now - e.last_fwd >= throttle {
+                // Our own heartbeat is exempt from the throttle: every
+                // exchange carries direct liveness evidence for its sender
+                // (SWIM's ping-ack, for 12 bytes), which keeps small fleets
+                // — where direct contact dominates — flap-free.
+                heartbeats.push((*n, e.version));
+                e.last_fwd = now;
+            }
+        }
+        self.sent.insert(peer, self.clock);
+        (delta, heartbeats)
+    }
+
+    /// Record that `peer` just received our full digest (anti-entropy and
+    /// probe paths): subsequent deltas to them start from the current clock.
+    pub fn mark_synced(&mut self, peer: NodeId) {
+        self.sent.insert(peer, self.clock);
+    }
+
+    /// Declare the current contents common knowledge: deltas to peers we
+    /// have never exchanged with start from this point instead of from
+    /// zero. The simulator calls this after seeding every node with the
+    /// same bootstrap membership — without it, every first contact would
+    /// re-ship the entire seeded view as membership rows, and a bench
+    /// window would degenerate into an O(n²) full exchange.
+    pub fn seal_bootstrap(&mut self) {
+        self.bootstrap_clock = self.clock;
     }
 
     /// Merge a received digest; higher version wins. Returns the nodes whose
     /// entries changed (new information learned).
-    pub fn merge(&mut self, digest: &Digest, now: Time) -> Vec<NodeId> {
+    pub fn merge(
+        &mut self,
+        digest: &[(NodeId, u64, bool, u64, u32)],
+        now: Time,
+    ) -> Vec<NodeId> {
         let mut changed = Vec::new();
         for (node, version, online, endpoint, region) in digest {
-            if *node == self.me {
-                // Nobody can overwrite our self-entry (our version is
-                // authoritative — prevents spoofed "you are offline").
-                continue;
-            }
-            let e = self.entries.entry(*node).or_insert(PeerEntry {
-                version: 0,
-                online: false,
-                endpoint: *endpoint,
-                region: *region,
-                last_seen: now - self.cfg.suspect_after - 1.0,
-            });
-            if *version > e.version {
-                let was = (e.version, e.online, e.endpoint, e.region);
-                e.version = *version;
-                e.online = *online;
-                e.endpoint = *endpoint;
-                e.region = *region;
-                e.last_seen = now;
-                if was != (*version, *online, *endpoint, *region) {
-                    changed.push(*node);
-                }
+            if self.merge_entry(*node, *version, *online, *endpoint, *region, now)
+            {
+                changed.push(*node);
             }
         }
         changed
+    }
+
+    /// Merge compact heartbeat refreshes. Only known, online entries can be
+    /// refreshed: a version bump with the online flag down could be a
+    /// graceful leave, which always travels as a full digest row — a bare
+    /// `(node, version)` pair must never resurrect an offline entry.
+    /// Unknown nodes are skipped (anti-entropy will teach them properly).
+    pub fn merge_heartbeats(
+        &mut self,
+        hbs: &[(NodeId, u64)],
+        now: Time,
+    ) -> Vec<NodeId> {
+        let mut changed = Vec::new();
+        for (node, version) in hbs {
+            if *node == self.me {
+                continue;
+            }
+            let Some(e) = self.entries.get_mut(node) else {
+                continue;
+            };
+            if !e.online || *version <= e.version {
+                continue;
+            }
+            self.clock += 1;
+            e.version = *version;
+            e.last_seen = now;
+            e.updated = self.clock;
+            changed.push(*node);
+        }
+        changed
+    }
+
+    fn merge_entry(
+        &mut self,
+        node: NodeId,
+        version: u64,
+        online: bool,
+        endpoint: u64,
+        region: u32,
+        now: Time,
+    ) -> bool {
+        if node == self.me {
+            // Nobody can overwrite our self-entry (our version is
+            // authoritative — prevents spoofed "you are offline").
+            return false;
+        }
+        let is_new = !self.entries.contains_key(&node);
+        if is_new {
+            // Learn the peer's existence even when the version check below
+            // rejects the payload (seed digests carry version 0): knowing an
+            // id is enough to probe it later.
+            self.clock += 1;
+            self.entries.insert(
+                node,
+                PeerEntry {
+                    version: 0,
+                    online: false,
+                    endpoint,
+                    region,
+                    last_seen: now - self.cfg.suspect_after - 1.0,
+                    updated: self.clock,
+                    meta_updated: self.clock,
+                    last_fwd: f64::NEG_INFINITY,
+                },
+            );
+            sorted_insert(&mut self.ids_sorted, node);
+        }
+        let e = self.entries.get_mut(&node).expect("just ensured");
+        if version <= e.version {
+            return false;
+        }
+        let (old_online, old_region) = (e.online, e.region);
+        let meta = is_new
+            || old_online != online
+            || e.endpoint != endpoint
+            || old_region != region;
+        self.clock += 1;
+        e.version = version;
+        e.online = online;
+        e.endpoint = endpoint;
+        e.region = region;
+        e.last_seen = now;
+        e.updated = self.clock;
+        if meta {
+            e.meta_updated = self.clock;
+        }
+        // Keep the online/by-region indexes in step.
+        match (is_new || !old_online, online) {
+            (true, true) => self.index_insert(node, region),
+            (false, false) => self.index_remove(node, old_region),
+            (false, true) if old_region != region => {
+                self.index_remove(node, old_region);
+                self.index_insert(node, region);
+            }
+            _ => {}
+        }
+        true
     }
 }
 
@@ -291,7 +651,12 @@ mod tests {
     use super::*;
 
     fn cfg() -> GossipConfig {
-        GossipConfig { interval: 1.0, fanout: 2, suspect_after: 5.0 }
+        GossipConfig {
+            interval: 1.0,
+            fanout: 2,
+            suspect_after: 5.0,
+            anti_entropy_every: 16,
+        }
     }
 
     #[test]
@@ -398,8 +763,8 @@ mod tests {
         let mut rng = Rng::new(7);
         for round in 0..6 {
             let now = round as f64;
-            for i in 0..n as usize {
-                views[i].heartbeat(now);
+            for v in views.iter_mut() {
+                v.heartbeat(now);
             }
             for i in 0..n as usize {
                 let targets = views[i].pick_targets(&mut rng, now);
@@ -467,5 +832,144 @@ mod tests {
         assert_eq!(by.len(), 2);
         // Aged-out peers drop from every group.
         assert!(a.alive_peers_by_region(100.0).is_empty());
+    }
+
+    // ---- incremental-index and delta-protocol units -------------------------
+
+    /// Brute-force recompute of alive peers from the raw entries, to pin
+    /// the incrementally maintained indexes against.
+    fn alive_brute(v: &PeerView, now: Time) -> Vec<NodeId> {
+        let mut out: Vec<NodeId> = v
+            .ids_sorted
+            .iter()
+            .copied()
+            .filter(|n| *n != v.me && v.is_alive(*n, now))
+            .collect();
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn indexes_track_entries_through_churn() {
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        let mut rng = Rng::new(99);
+        for step in 0..500u64 {
+            let node = NodeId(1 + (rng.below(10) as u32));
+            let version = step + 1;
+            let online = rng.chance(0.8);
+            let region = rng.below(3) as u32;
+            a.merge(&vec![(node, version, online, 0, region)], step as f64 * 0.1);
+            let now = step as f64 * 0.1;
+            assert_eq!(a.alive_peers(now), alive_brute(&a, now), "step {step}");
+            let by = a.alive_peers_by_region(now);
+            let flat: Vec<NodeId> =
+                by.values().flatten().copied().collect::<Vec<_>>();
+            let mut flat_sorted = flat.clone();
+            flat_sorted.sort();
+            assert_eq!(flat_sorted, alive_brute(&a, now), "regions step {step}");
+            for (region, group) in &by {
+                for n in group {
+                    assert_eq!(a.region_of(*n), Some(*region));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn digest_sorted_without_resort() {
+        let mut a = PeerView::new(NodeId(5), cfg(), 0.0);
+        for i in [9u32, 2, 7, 1, 30, 4] {
+            a.merge(&vec![(NodeId(i), 3, true, i as u64, 0)], 0.0);
+        }
+        let d = a.digest();
+        let ids: Vec<u32> = d.iter().map(|(n, ..)| n.0).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+        assert_eq!(d.len(), 7); // 6 peers + self
+    }
+
+    #[test]
+    fn first_delta_is_full_then_only_changes() {
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        a.add_seed(NodeId(1), 0, 0, 0.0);
+        a.merge(&vec![(NodeId(2), 4, true, 0, 1)], 0.0);
+        // First contact: everything travels as full rows — except the
+        // peer's own entry, which it is authoritative for.
+        let (delta, hbs) = a.delta_for(NodeId(1), 0.0);
+        assert_eq!(delta.len(), 2, "self + node 2, never the peer itself");
+        assert!(delta.iter().all(|(n, ..)| *n != NodeId(1)));
+        assert!(hbs.is_empty());
+        // Nothing changed since: empty delta.
+        let (delta, hbs) = a.delta_for(NodeId(1), 0.5);
+        assert!(delta.is_empty() && hbs.is_empty());
+        // A heartbeat-only advance travels as a compact pair...
+        a.merge(&vec![(NodeId(2), 5, true, 0, 1)], 3.0);
+        let (delta, hbs) = a.delta_for(NodeId(1), 3.0);
+        assert!(delta.is_empty());
+        assert_eq!(hbs, vec![(NodeId(2), 5)]);
+        // ...while a membership change travels as a full row.
+        a.merge(&vec![(NodeId(2), 6, false, 0, 1)], 6.0);
+        let (delta, hbs) = a.delta_for(NodeId(1), 6.0);
+        assert_eq!(delta, vec![(NodeId(2), 6, false, 0, 1)]);
+        assert!(hbs.is_empty());
+    }
+
+    #[test]
+    fn heartbeat_throttle_rate_limits_per_entry() {
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        a.merge(&vec![(NodeId(2), 1, true, 0, 0)], 0.0);
+        // Drain first contact with both peers (full rows, throttle armed).
+        let _ = a.delta_for(NodeId(1), 0.0);
+        let _ = a.delta_for(NodeId(3), 0.0);
+        // Past the throttle window (2s at suspect_after 5) a heartbeat-only
+        // advance flows as a compact pair...
+        a.merge(&vec![(NodeId(2), 2, true, 0, 0)], 2.5);
+        let (_, hbs) = a.delta_for(NodeId(1), 2.5);
+        assert_eq!(hbs, vec![(NodeId(2), 2)]);
+        // ...and re-arms the throttle for *every* peer: a fresh bump right
+        // after is withheld from the other peer too.
+        a.merge(&vec![(NodeId(2), 3, true, 0, 0)], 2.6);
+        let (delta, hbs) = a.delta_for(NodeId(3), 2.6);
+        assert!(delta.is_empty() && hbs.is_empty(), "throttle spans peers");
+        // Once the window passes the refresh flows again.
+        a.merge(&vec![(NodeId(2), 4, true, 0, 0)], 5.0);
+        let (_, hbs) = a.delta_for(NodeId(3), 5.0);
+        assert_eq!(hbs, vec![(NodeId(2), 4)]);
+    }
+
+    #[test]
+    fn heartbeat_pairs_never_resurrect_or_invent() {
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        a.merge(&vec![(NodeId(1), 5, false, 0, 0)], 0.0); // left
+        // A bare heartbeat for an offline entry must not flip it online.
+        let changed = a.merge_heartbeats(&vec![(NodeId(1), 9)], 1.0);
+        assert!(changed.is_empty());
+        assert!(!a.is_alive(NodeId(1), 1.0));
+        assert_eq!(a.entry(NodeId(1)).unwrap().version, 5);
+        // Unknown nodes are skipped, not invented.
+        let changed = a.merge_heartbeats(&vec![(NodeId(7), 3)], 1.0);
+        assert!(changed.is_empty());
+        assert!(a.entry(NodeId(7)).is_none());
+        // Known online entries refresh version + liveness.
+        a.merge(&vec![(NodeId(2), 1, true, 0, 0)], 0.0);
+        let changed = a.merge_heartbeats(&vec![(NodeId(2), 4)], 4.9);
+        assert_eq!(changed, vec![NodeId(2)]);
+        assert!(a.is_alive(NodeId(2), 9.0));
+        assert_eq!(a.entry(NodeId(2)).unwrap().version, 4);
+    }
+
+    #[test]
+    fn clock_changes_iff_content_changes() {
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        let c0 = a.clock();
+        a.merge(&vec![(NodeId(1), 2, true, 0, 0)], 0.0);
+        assert!(a.clock() > c0);
+        let c1 = a.clock();
+        // A stale digest changes nothing — clock must hold still.
+        a.merge(&vec![(NodeId(1), 2, true, 0, 0)], 1.0);
+        assert_eq!(a.clock(), c1);
+        a.heartbeat(2.0);
+        assert!(a.clock() > c1);
     }
 }

@@ -42,11 +42,28 @@ pub trait Ledger {
 pub struct SharedLedger {
     table: BalanceTable,
     log: Vec<(Time, NodeId, CreditOp)>,
+    /// Monotonic mutation counter: bumps once per successfully applied
+    /// batch. Lets readers detect staleness without re-reading the table.
+    version: u64,
+    /// Like `version`, but bumps only for batches that touch *stakes*
+    /// (Stake/Unstake/Slash). Plain payments leave it unchanged, so the
+    /// nodes' cached stake snapshots survive transfer traffic.
+    stake_version: u64,
 }
 
 impl SharedLedger {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Mutation counter — changes iff balances/stakes changed.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Stake-table mutation counter — changes iff some node's stake moved.
+    pub fn stake_version(&self) -> u64 {
+        self.stake_version
     }
 
     pub fn log(&self) -> &[(Time, NodeId, CreditOp)] {
@@ -95,6 +112,17 @@ impl Ledger for SharedLedger {
         now: Time,
     ) -> Result<(), ApplyError> {
         self.table.apply_all(&ops)?;
+        self.version += 1;
+        if ops.iter().any(|op| {
+            matches!(
+                op,
+                CreditOp::Stake { .. }
+                    | CreditOp::Unstake { .. }
+                    | CreditOp::Slash { .. }
+            )
+        }) {
+            self.stake_version += 1;
+        }
         for op in ops {
             self.log.push((now, proposer, op));
         }
@@ -152,6 +180,40 @@ mod tests {
         // history: +100 at t0 (mint), -25 at t1 (transfer out); stake ignored
         assert_eq!(l.history(NodeId(0)), vec![(0.0, 100), (1.0, -25)]);
         assert_eq!(l.history(NodeId(1)), vec![(1.0, 25)]);
+    }
+
+    #[test]
+    fn version_counters_track_the_right_mutations() {
+        let mut l = SharedLedger::new();
+        assert_eq!(l.version(), 0);
+        assert_eq!(l.stake_version(), 0);
+        l.submit(
+            vec![CreditOp::Mint { to: NodeId(0), amount: 100, reason: OpReason::Genesis }],
+            NodeId(0),
+            0.0,
+        )
+        .unwrap();
+        // A pure balance mutation bumps version but not stake_version.
+        assert_eq!(l.version(), 1);
+        assert_eq!(l.stake_version(), 0);
+        l.submit(
+            vec![CreditOp::Stake { node: NodeId(0), amount: 40 }],
+            NodeId(0),
+            1.0,
+        )
+        .unwrap();
+        assert_eq!(l.version(), 2);
+        assert_eq!(l.stake_version(), 1);
+        // A failed batch bumps neither.
+        let before = (l.version(), l.stake_version());
+        assert!(l
+            .submit(
+                vec![CreditOp::Stake { node: NodeId(0), amount: 1000 }],
+                NodeId(0),
+                2.0,
+            )
+            .is_err());
+        assert_eq!((l.version(), l.stake_version()), before);
     }
 
     #[test]

@@ -29,6 +29,17 @@
 //! so the pre-topology benches and figures are unchanged. See
 //! `benches/geo_scale.rs` for the three-continent scenario with a
 //! mid-run trans-continental partition.
+//!
+//! ## Fleet scale
+//!
+//! The event loop is sized for 1000-node fleets: membership gossip ships
+//! **deltas** (per-peer sent clocks + compact heartbeat pairs, full-digest
+//! anti-entropy as fallback and correctness oracle — see [`gossip`]),
+//! dispatch runs off a **cached stake snapshot** invalidated by the view's
+//! mutation clock and the ledger version, and whole fleets are stamped out
+//! declaratively via the `topology.fleet` config block.
+//! `benches/fleet_scale.rs` tracks events/sec and gossip bytes across
+//! n ∈ {50..1000} and writes the `BENCH_fleet_scale.json` perf trajectory.
 
 pub mod backend;
 pub mod benchlib;

@@ -84,11 +84,13 @@ impl Recorder {
     }
 
     pub fn mean_latency(&self) -> f64 {
-        let lat: Vec<f64> = self.user_records().map(|r| r.latency()).collect();
-        if lat.is_empty() {
+        let (sum, n) = self
+            .user_records()
+            .fold((0.0f64, 0usize), |(s, n), r| (s + r.latency(), n + 1));
+        if n == 0 {
             return 0.0;
         }
-        lat.iter().sum::<f64>() / lat.len() as f64
+        sum / n as f64
     }
 
     pub fn latencies_sorted(&self) -> Vec<f64> {

@@ -183,8 +183,16 @@ pub struct World {
     pub running_series: Vec<TimeSeries>,
     pub messages_sent: u64,
     pub bytes_sent: u64,
+    /// Gossip-protocol share of the totals (full digests, deltas and
+    /// replies) — the fleet-scale bench tracks these against the
+    /// full-digest baseline.
+    pub gossip_messages_sent: u64,
+    pub gossip_bytes_sent: u64,
     /// Messages lost to partitioned links.
     pub messages_dropped: u64,
+    /// Queue entries processed by `run_until` (events/sec denominator for
+    /// the perf-tracking benches).
+    pub events_processed: u64,
 }
 
 impl World {
@@ -288,6 +296,10 @@ impl World {
                     node.view.add_seed(jid, 0, jregion, 0.0);
                 }
             }
+            // Every node was just seeded with the same membership: that is
+            // common knowledge, so deltas must not re-ship it on first
+            // contact (see `PeerView::seal_bootstrap`).
+            node.view.seal_bootstrap();
             if setup.start_offline {
                 node.online = false;
             }
@@ -310,7 +322,10 @@ impl World {
             running_series: vec![TimeSeries::new(); n],
             messages_sent: 0,
             bytes_sent: 0,
+            gossip_messages_sent: 0,
+            gossip_bytes_sent: 0,
             messages_dropped: 0,
+            events_processed: 0,
         };
 
         // Arrival traces.
@@ -386,6 +401,7 @@ impl World {
                 break;
             }
             let Reverse(q) = self.queue.pop().expect("peeked");
+            self.events_processed += 1;
             self.now = q.t.max(self.now);
             match q.ev {
                 WorldEvent::Node(i, ev) => {
@@ -422,6 +438,16 @@ impl World {
                     self.messages_sent += 1;
                     let bytes = msg.wire_size();
                     self.bytes_sent += bytes as u64;
+                    if matches!(
+                        msg,
+                        crate::coordinator::Message::Gossip { .. }
+                            | crate::coordinator::Message::GossipReply { .. }
+                            | crate::coordinator::Message::GossipDelta { .. }
+                            | crate::coordinator::Message::GossipDeltaReply { .. }
+                    ) {
+                        self.gossip_messages_sent += 1;
+                        self.gossip_bytes_sent += bytes as u64;
+                    }
                     match self.sample_delay(from, to.0 as usize, bytes) {
                         Some(lat) => {
                             let ev =
@@ -490,18 +516,32 @@ impl World {
     /// Per-region user-request summary keyed by *origin* region:
     /// `(region name, SLO attainment, p99 latency, completed)`. A
     /// single-region world returns one row covering everything.
+    ///
+    /// Single pass over the recorder: each record is bucketed by its origin
+    /// region once, instead of cloning the matching slice of the record log
+    /// per region via `Recorder::filtered`.
     pub fn region_summary(&self) -> Vec<(String, f64, f64, usize)> {
-        (0..self.topology.num_regions())
+        let nr = self.topology.num_regions();
+        let mut met = vec![0usize; nr];
+        let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); nr];
+        for rec in self.recorder.all().iter().filter(|r| !r.synthetic) {
+            let r = self.topology.region_of(rec.origin.0 as usize);
+            met[r] += rec.slo_met() as usize;
+            latencies[r].push(rec.latency());
+        }
+        (0..nr)
             .map(|r| {
-                let rec = self.recorder.filtered(|rec| {
-                    self.topology.region_of(rec.origin.0 as usize) == r
-                });
-                (
-                    self.topology.region_name(r).to_string(),
-                    rec.slo_attainment(),
-                    rec.latency_percentile(0.99),
-                    rec.user_records().count(),
-                )
+                let lat = &mut latencies[r];
+                let n = lat.len();
+                let slo = if n == 0 { 0.0 } else { met[r] as f64 / n as f64 };
+                lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                // Index formula matches `Recorder::latency_percentile`.
+                let p99 = if n == 0 {
+                    0.0
+                } else {
+                    lat[((n - 1) as f64 * 0.99).round() as usize]
+                };
+                (self.topology.region_name(r).to_string(), slo, p99, n)
             })
             .collect()
     }
@@ -739,6 +779,39 @@ mod tests {
         let by = w.node(0).view.alive_peers_by_region(now);
         assert_eq!(by.get(&0), Some(&vec![NodeId(1)]));
         assert!(by.get(&1).is_none());
+    }
+
+    #[test]
+    fn region_summary_single_pass_matches_filtered_oracle() {
+        // The one-pass aggregation must reproduce exactly what the
+        // clone-per-region `Recorder::filtered` computation produced.
+        let topo = crate::topology::three_region_wan(2).build();
+        let cfg =
+            WorldConfig { seed: 9, topology: Some(topo), ..Default::default() };
+        let mut w = World::new(cfg, setup_uniform(6, 4.0));
+        w.run_until(400.0);
+        assert!(w.recorder.len() > 20, "workload barely ran");
+        let summary = w.region_summary();
+        assert_eq!(summary.len(), 3);
+        for (r, row) in summary.iter().enumerate() {
+            let oracle = w.recorder.filtered(|rec| {
+                w.topology().region_of(rec.origin.0 as usize) == r
+            });
+            assert_eq!(row.0, w.topology().region_name(r));
+            assert!((row.1 - oracle.slo_attainment()).abs() < 1e-12);
+            assert!((row.2 - oracle.latency_percentile(0.99)).abs() < 1e-12);
+            assert_eq!(row.3, oracle.user_records().count());
+        }
+    }
+
+    #[test]
+    fn gossip_traffic_counters_track_subset() {
+        let mut w = World::new(WorldConfig::default(), setup_uniform(3, 5.0));
+        w.run_until(100.0);
+        assert!(w.gossip_messages_sent > 0);
+        assert!(w.gossip_messages_sent <= w.messages_sent);
+        assert!(w.gossip_bytes_sent <= w.bytes_sent);
+        assert!(w.events_processed > 0);
     }
 
     #[test]

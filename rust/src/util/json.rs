@@ -133,11 +133,8 @@ impl Json {
 
     // ---- serialization ----------------------------------------------------
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::with_capacity(self.size_hint());
-        self.write(&mut out);
-        out
-    }
+    // Serialization happens through `Display` (so `.to_string()` works via
+    // the blanket `ToString`); see the impl at the bottom of the file.
 
     /// Rough serialized size (serializer pre-allocation).
     fn size_hint(&self) -> usize {
@@ -198,7 +195,9 @@ impl Json {
 
 impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.to_string())
+        let mut out = String::with_capacity(self.size_hint());
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

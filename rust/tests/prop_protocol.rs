@@ -17,7 +17,12 @@ fn prop_gossip_converges_on_any_connected_bootstrap() {
     for case in 0..40 {
         let mut rng = Rng::new(case);
         let n = 4 + rng.below(24);
-        let cfg = GossipConfig { interval: 1.0, fanout: 2, suspect_after: 1e9 };
+        let cfg = GossipConfig {
+            interval: 1.0,
+            fanout: 2,
+            suspect_after: 1e9,
+            ..Default::default()
+        };
         let mut views: Vec<PeerView> = (0..n)
             .map(|i| PeerView::new(NodeId(i as u32), cfg, 0.0))
             .collect();
@@ -57,7 +62,12 @@ fn prop_gossip_leave_detected_everywhere() {
     for case in 0..30 {
         let mut rng = Rng::new(100 + case);
         let n = 4 + rng.below(12);
-        let cfg = GossipConfig { interval: 1.0, fanout: 2, suspect_after: 1e9 };
+        let cfg = GossipConfig {
+            interval: 1.0,
+            fanout: 2,
+            suspect_after: 1e9,
+            ..Default::default()
+        };
         let mut views: Vec<PeerView> = (0..n)
             .map(|i| PeerView::new(NodeId(i as u32), cfg, 0.0))
             .collect();
