@@ -137,7 +137,8 @@ fn stats_json(s: &RunStats) -> Json {
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke")
-        || std::env::var("FLEET_SCALE_SMOKE").is_ok();
+        || std::env::var("FLEET_SCALE_SMOKE")
+            .is_ok_and(|v| !v.is_empty() && v != "0");
     let sizes: &[usize] =
         if smoke { &[50] } else { &[50, 200, 500, 1000] };
     println!(

@@ -1,6 +1,6 @@
 //! Bench: geo-distributed 3-region WAN scenario (us / eu / asia).
 //!
-//! Three parts:
+//! Four parts:
 //!
 //! 1. **Backward compatibility** — a flat-latency world and an explicit
 //!    single-region topology must replay bit-identically (the seed benches
@@ -13,13 +13,26 @@
 //!    wastes fewer probes on the dead ocean link, so the peaking regions
 //!    keep more of their SLO. The partitioned run must also replay
 //!    deterministically under a fixed seed.
+//! 4. **Reroute** — steady always-delegating requesters under the same
+//!    us<->asia partition, with gossip liveness aging pinned off: live
+//!    latency estimation must shed the partitioned region within
+//!    K = 20 gossip intervals and re-admit it after the heal, while the
+//!    static expected-latency-matrix baseline
+//!    (`latency_estimation.enabled = false`) keeps delegating into the
+//!    dead link for the whole outage. Asserted, and written to
+//!    `BENCH_geo_scale.json` so the SLO/latency numbers join the per-PR
+//!    perf trajectory.
+//!
+//! `--smoke` (or `GEO_SCALE_SMOKE=1`) runs single-iteration timings — the
+//! CI tier.
 
 use wwwserve::backend::Profile;
-use wwwserve::benchlib::{bench, Table};
+use wwwserve::benchlib::{bench, write_json_report, Table};
 use wwwserve::policy::NodePolicy;
 use wwwserve::sim::{NodeSetup, World, WorldConfig};
 use wwwserve::topology::{three_region_wan, LinkChange, Topology};
 use wwwserve::types::CREDIT;
+use wwwserve::util::json::Json;
 use wwwserve::workload::{diurnal_phases, Generator, LengthDist, Phase};
 use wwwserve::NodeId;
 
@@ -159,6 +172,125 @@ fn backward_compat_check() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// Part 4: live-estimation reroute under partition
+// ---------------------------------------------------------------------------
+
+const T_PART: f64 = 250.0;
+/// K = 20 one-second gossip intervals of convergence grace after the
+/// partition before delegation into the dead region must be ~0.
+const T_CONVERGED: f64 = 270.0;
+const T_HEAL: f64 = 450.0;
+const T_READMIT: f64 = 510.0;
+
+struct RerouteRun {
+    /// us<->asia Probe+Delegate sends: before the partition, in the
+    /// post-convergence outage window, and after heal + re-admission grace.
+    pre: u64,
+    part: u64,
+    recovered: u64,
+    overall_slo: f64,
+    regions: Vec<(String, f64, f64, usize)>,
+}
+
+/// Steady always-delegating requesters (one per region, two servers each);
+/// `suspect_after` pinned huge so gossip liveness aging never sheds the far
+/// side — whatever rerouting happens is the latency estimator's doing.
+fn run_reroute(live: bool) -> RerouteRun {
+    let topo = three_region_wan(3)
+        .event("us", "asia", T_PART, LinkChange::Partition)
+        .event("us", "asia", T_HEAL, LinkChange::Heal)
+        .build();
+    let mut cfg = WorldConfig {
+        seed: SEED,
+        topology: Some(topo),
+        ..Default::default()
+    };
+    cfg.system.duel_rate = 0.0;
+    cfg.gossip.suspect_after = 1e4;
+    cfg.latency_estimation.enabled = live;
+    // Penalized estimates must not decay back to the prior mid-outage.
+    cfg.latency_estimation.decay_after = 600.0;
+
+    let mut setups = Vec::new();
+    for region in 0..3 {
+        let requester_id = NodeId((region * 3) as u32);
+        setups.push(
+            NodeSetup::new(
+                Profile::test(40.0, 4),
+                NodePolicy {
+                    latency_penalty: 50.0,
+                    ..NodePolicy::requester_only()
+                },
+            )
+            .with_generator(
+                Generator::new(
+                    requester_id,
+                    vec![Phase::new(0.0, HORIZON, 1.0)],
+                )
+                .with_lengths(lengths()),
+            ),
+        );
+        for _ in 0..2 {
+            setups.push(NodeSetup::new(
+                Profile::test(45.0, 24),
+                NodePolicy {
+                    stake: 20 * CREDIT,
+                    accept_freq: 1.0,
+                    latency_penalty: 50.0,
+                    ..Default::default()
+                },
+            ));
+        }
+    }
+
+    let mut w = World::new(cfg, setups);
+    let cross = |w: &World| w.dispatch_sends(0, 2) + w.dispatch_sends(2, 0);
+    w.run_until(T_PART);
+    let pre = cross(&w);
+    w.run_until(T_CONVERGED);
+    let at_converged = cross(&w);
+    w.run_until(T_HEAL);
+    let part = cross(&w) - at_converged;
+    w.run_until(T_READMIT);
+    let at_readmit = cross(&w);
+    w.run_until(HORIZON + 200.0);
+    let recovered = cross(&w) - at_readmit;
+    RerouteRun {
+        pre,
+        part,
+        recovered,
+        overall_slo: w.recorder.slo_attainment(),
+        regions: w.region_summary(),
+    }
+}
+
+fn regions_json(regions: &[(String, f64, f64, usize)]) -> Json {
+    Json::Arr(
+        regions
+            .iter()
+            .map(|(name, slo, p99, n)| {
+                Json::obj(vec![
+                    ("region", Json::str(name.clone())),
+                    ("slo", Json::num(*slo)),
+                    ("p99_s", Json::num(*p99)),
+                    ("completed", Json::num(*n as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn reroute_json(r: &RerouteRun) -> Json {
+    Json::obj(vec![
+        ("cross_sends_pre_partition", Json::num(r.pre as f64)),
+        ("cross_sends_outage_window", Json::num(r.part as f64)),
+        ("cross_sends_after_heal", Json::num(r.recovered as f64)),
+        ("overall_slo", Json::num(r.overall_slo)),
+        ("regions", regions_json(&r.regions)),
+    ])
+}
+
 fn print_comparison(title: &str, blind: &GeoRun, aware: &GeoRun) {
     println!("## {title}\n");
     let mut t = Table::new(&[
@@ -184,17 +316,24 @@ fn print_comparison(title: &str, blind: &GeoRun, aware: &GeoRun) {
 }
 
 fn main() {
-    println!("# geo_scale — 3-region WAN, follow-the-sun + partition\n");
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("GEO_SCALE_SMOKE")
+            .is_ok_and(|v| !v.is_empty() && v != "0");
+    let iters = if smoke { 1 } else { 3 };
+    println!(
+        "# geo_scale — 3-region WAN, follow-the-sun + partition + reroute{}\n",
+        if smoke { " (smoke tier)" } else { "" }
+    );
 
     backward_compat_check();
 
     // Part 2: follow-the-sun, healthy WAN.
     let mut blind = None;
-    bench("geo/follow-the-sun blind", 0, 3, 60.0, || {
+    bench("geo/follow-the-sun blind", 0, iters, 60.0, || {
         blind = Some(run_geo(0.0, false));
     });
     let mut aware = None;
-    bench("geo/follow-the-sun aware(p=50)", 0, 3, 60.0, || {
+    bench("geo/follow-the-sun aware(p=50)", 0, iters, 60.0, || {
         aware = Some(run_geo(50.0, false));
     });
     let (blind, aware) = (blind.unwrap(), aware.unwrap());
@@ -235,4 +374,93 @@ fn main() {
         "partition/heal run is not deterministic"
     );
     println!("\npartition/heal replay deterministic ✓");
+
+    // Part 4: live-estimation reroute. Liveness aging is pinned off, so
+    // only measured latency can steer dispatch away from the dead link.
+    let live = run_reroute(true);
+    let frozen = run_reroute(false);
+    println!("\n## Reroute (us<->asia partition {T_PART}s..{T_HEAL}s)\n");
+    let mut t = Table::new(&[
+        "estimator", "pre-partition", "outage window", "after heal", "SLO",
+    ]);
+    for (name, r) in [("live", &live), ("static", &frozen)] {
+        t.row(vec![
+            name.to_string(),
+            format!("{}", r.pre),
+            format!("{}", r.part),
+            format!("{}", r.recovered),
+            format!("{:.3}", r.overall_slo),
+        ]);
+    }
+    t.print();
+    assert!(live.pre > 0 && frozen.pre > 0, "no cross traffic at all");
+    assert!(
+        frozen.part >= 15,
+        "static baseline unexpectedly shed the partitioned region \
+         ({} cross sends in outage window)",
+        frozen.part
+    );
+    assert!(
+        live.part <= 12 && live.part * 3 <= frozen.part,
+        "live estimation failed to shed the partition within \
+         {} gossip intervals: live {} vs static {}",
+        (T_CONVERGED - T_PART) as u64,
+        live.part,
+        frozen.part
+    );
+    assert!(
+        live.recovered > 0,
+        "live estimation never re-admitted the healed region"
+    );
+    println!(
+        "\nreroute: shed within {} intervals ({} -> {} cross sends, static \
+         baseline {}), re-admitted after heal ({} sends) ✓",
+        (T_CONVERGED - T_PART) as u64,
+        live.pre,
+        live.part,
+        frozen.part,
+        live.recovered
+    );
+
+    // Machine-readable trajectory: the per-region SLO/p99 of every part
+    // plus the reroute window counts (CI uploads this artifact).
+    let report = Json::obj(vec![
+        ("bench", Json::str("geo_scale")),
+        ("seed", Json::num(SEED as f64)),
+        ("horizon_s", Json::num(HORIZON)),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "follow_the_sun",
+            Json::obj(vec![
+                ("blind_slo", Json::num(blind.overall_slo)),
+                ("aware_slo", Json::num(aware.overall_slo)),
+                ("blind_regions", regions_json(&blind.regions)),
+                ("aware_regions", regions_json(&aware.regions)),
+            ]),
+        ),
+        (
+            "partition",
+            Json::obj(vec![
+                ("blind_slo", Json::num(blind_p.overall_slo)),
+                ("aware_slo", Json::num(aware_p.overall_slo)),
+                ("blind_regions", regions_json(&blind_p.regions)),
+                ("aware_regions", regions_json(&aware_p.regions)),
+                ("blind_dropped", Json::num(blind_p.dropped as f64)),
+            ]),
+        ),
+        (
+            "reroute",
+            Json::obj(vec![
+                ("partition_at_s", Json::num(T_PART)),
+                ("converged_by_s", Json::num(T_CONVERGED)),
+                ("heal_at_s", Json::num(T_HEAL)),
+                ("readmit_by_s", Json::num(T_READMIT)),
+                ("live", reroute_json(&live)),
+                ("static", reroute_json(&frozen)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_geo_scale.json";
+    write_json_report(path, &report).expect("write bench json");
+    println!("\nwrote {path}");
 }

@@ -21,6 +21,7 @@
 //! ```
 
 use crate::backend::{Gpu, ModelClass, Profile, ServingStack};
+use crate::latency::LatencyConfig;
 use crate::policy::{NodePolicy, SystemPolicy};
 use crate::schedulers::Strategy;
 use crate::sim::{LedgerMode, NodeSetup, WorldConfig};
@@ -354,6 +355,41 @@ fn expand_fleet(
     Ok(out)
 }
 
+/// Parse the declarative `"latency_estimation"` block (all keys optional):
+///
+/// ```json
+/// "latency_estimation": {
+///   "enabled": true,
+///   "alpha": 0.3,
+///   "decay_after": 60.0,
+///   "prior_weight": 1.0,
+///   "share_every": 5.0
+/// }
+/// ```
+///
+/// `enabled: false` freezes dispatch on the static expected-latency matrix
+/// — the pre-estimator baseline the reroute bench compares against.
+fn parse_latency_estimation(j: &Json) -> Result<LatencyConfig, ConfigError> {
+    let d = LatencyConfig::default();
+    if j.is_null() {
+        return Ok(d);
+    }
+    let cfg = LatencyConfig {
+        enabled: j.get("enabled").as_bool().unwrap_or(d.enabled),
+        alpha: j.get("alpha").as_f64().unwrap_or(d.alpha),
+        decay_after: j.get("decay_after").as_f64().unwrap_or(d.decay_after),
+        prior_weight: j
+            .get("prior_weight")
+            .as_f64()
+            .unwrap_or(d.prior_weight),
+        share_every: j.get("share_every").as_f64().unwrap_or(d.share_every),
+    };
+    // Reject bad values with Err here rather than letting
+    // `LatencyConfig::validate` abort the process on malformed user input.
+    cfg.check().map_err(bad)?;
+    Ok(cfg)
+}
+
 fn parse_lengths(j: &Json) -> LengthDist {
     let d = LengthDist::default();
     LengthDist {
@@ -449,6 +485,8 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
         ));
     }
     let topology = parse_topology(j.get("topology"), &nodes)?;
+    let latency_estimation =
+        parse_latency_estimation(j.get("latency_estimation"))?;
 
     let mut setups = Vec::with_capacity(nodes.len());
     for (i, nj) in nodes.iter().enumerate() {
@@ -533,6 +571,7 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
             system,
             ledger,
             topology,
+            latency_estimation,
             ..Default::default()
         },
         setups,
@@ -826,6 +865,46 @@ mod tests {
                                          "off_inter_arrival": 20 }}]}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_latency_estimation_block() {
+        let e = parse_experiment(
+            r#"{"latency_estimation": { "enabled": false, "alpha": 0.5,
+                "decay_after": 30, "prior_weight": 2, "share_every": 10 },
+                "nodes": [{}]}"#,
+        )
+        .unwrap();
+        let l = e.world.latency_estimation;
+        assert!(!l.enabled);
+        assert!((l.alpha - 0.5).abs() < 1e-12);
+        assert!((l.decay_after - 30.0).abs() < 1e-12);
+        assert!((l.prior_weight - 2.0).abs() < 1e-12);
+        assert!((l.share_every - 10.0).abs() < 1e-12);
+        // Absent block -> defaults (live estimation on).
+        let e = parse_experiment(r#"{"nodes": [{}]}"#).unwrap();
+        assert_eq!(e.world.latency_estimation, LatencyConfig::default());
+        assert!(e.world.latency_estimation.enabled);
+    }
+
+    #[test]
+    fn rejects_bad_latency_estimation() {
+        for block in [
+            r#"{"alpha": 0}"#,
+            r#"{"alpha": 1.5}"#,
+            r#"{"decay_after": 0}"#,
+            r#"{"decay_after": -3}"#,
+            r#"{"prior_weight": -1}"#,
+            r#"{"share_every": -1}"#,
+        ] {
+            let text = format!(
+                r#"{{"latency_estimation": {block}, "nodes": [{{}}]}}"#
+            );
+            assert!(
+                parse_experiment(&text).is_err(),
+                "accepted bad latency_estimation block {block}"
+            );
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! with the same request/response vocabulary).
 
 use crate::gossip::{Digest, Heartbeats};
+use crate::latency::RegionRtts;
 use crate::ledger::Block;
 use crate::types::{NodeId, Request, RequestId, Response};
 use crate::util::json::Json;
@@ -31,10 +32,20 @@ pub enum Message {
     GossipReply { digest: Digest },
     /// Push half of a regular delta round: full rows only for entries whose
     /// membership content changed since the last exchange with this peer,
-    /// compact `(node, version)` pairs for plain heartbeat advances.
-    GossipDelta { delta: Digest, heartbeats: Heartbeats },
+    /// compact `(node, version)` pairs for plain heartbeat advances, and
+    /// (rate-limited, same-region peers only) piggybacked region-latency
+    /// summaries for the live RTT estimator (`crate::latency`).
+    GossipDelta {
+        delta: Digest,
+        heartbeats: Heartbeats,
+        rtts: RegionRtts,
+    },
     /// Pull half of a delta round (the receiver's delta coming back).
-    GossipDeltaReply { delta: Digest, heartbeats: Heartbeats },
+    GossipDeltaReply {
+        delta: Digest,
+        heartbeats: Heartbeats,
+        rtts: RegionRtts,
+    },
     /// Ask the two duel responses to be compared. `est_tokens` sizes the
     /// judge's own evaluation workload (reading both answers).
     JudgeAssign {
@@ -103,11 +114,12 @@ impl Message {
             Message::Gossip { digest } | Message::GossipReply { digest } => {
                 16 + digest.len() * 32
             }
-            Message::GossipDelta { delta, heartbeats }
-            | Message::GossipDeltaReply { delta, heartbeats } => {
+            Message::GossipDelta { delta, heartbeats, rtts }
+            | Message::GossipDeltaReply { delta, heartbeats, rtts } => {
                 // A full row costs what a digest entry costs; a heartbeat
-                // refresh is just (node id, version).
-                16 + delta.len() * 32 + heartbeats.len() * 12
+                // refresh is just (node id, version); a region-RTT summary
+                // entry is (region, region, f64).
+                16 + delta.len() * 32 + heartbeats.len() * 12 + rtts.len() * 16
             }
             Message::BlockProposal { block } | Message::BlockCommit { block } => {
                 128 + block.ops.len() * 48
@@ -251,6 +263,38 @@ fn heartbeats_from(j: &Json) -> Option<Heartbeats> {
         .collect()
 }
 
+fn rtts_json(r: &[(u32, u32, f64)]) -> Json {
+    Json::Arr(
+        r.iter()
+            .map(|(a, b, est)| {
+                Json::Arr(vec![
+                    Json::num(*a as f64),
+                    Json::num(*b as f64),
+                    Json::num(*est),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn rtts_from(j: &Json) -> Option<RegionRtts> {
+    if j.is_null() {
+        // Absent summaries are valid (rate-limited piggyback).
+        return Some(Vec::new());
+    }
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            let a = e.as_arr()?;
+            Some((
+                a.first()?.as_u64()? as u32,
+                a.get(1)?.as_u64()? as u32,
+                a.get(2)?.as_f64()?,
+            ))
+        })
+        .collect()
+}
+
 impl Message {
     pub fn to_json(&self) -> Json {
         match self {
@@ -288,16 +332,20 @@ impl Message {
                 ("type", Json::str("gossip_reply")),
                 ("digest", digest_json(digest)),
             ]),
-            Message::GossipDelta { delta, heartbeats } => Json::obj(vec![
+            Message::GossipDelta { delta, heartbeats, rtts } => Json::obj(vec![
                 ("type", Json::str("gossip_delta")),
                 ("delta", digest_json(delta)),
                 ("heartbeats", heartbeats_json(heartbeats)),
+                ("rtts", rtts_json(rtts)),
             ]),
-            Message::GossipDeltaReply { delta, heartbeats } => Json::obj(vec![
-                ("type", Json::str("gossip_delta_reply")),
-                ("delta", digest_json(delta)),
-                ("heartbeats", heartbeats_json(heartbeats)),
-            ]),
+            Message::GossipDeltaReply { delta, heartbeats, rtts } => {
+                Json::obj(vec![
+                    ("type", Json::str("gossip_delta_reply")),
+                    ("delta", digest_json(delta)),
+                    ("heartbeats", heartbeats_json(heartbeats)),
+                    ("rtts", rtts_json(rtts)),
+                ])
+            }
             Message::JudgeAssign { duel_id, resp_a, resp_b, est_tokens } => {
                 Json::obj(vec![
                     ("type", Json::str("judge_assign")),
@@ -354,10 +402,12 @@ impl Message {
             "gossip_delta" => Some(Message::GossipDelta {
                 delta: digest_from(j.get("delta"))?,
                 heartbeats: heartbeats_from(j.get("heartbeats"))?,
+                rtts: rtts_from(j.get("rtts"))?,
             }),
             "gossip_delta_reply" => Some(Message::GossipDeltaReply {
                 delta: digest_from(j.get("delta"))?,
                 heartbeats: heartbeats_from(j.get("heartbeats"))?,
+                rtts: rtts_from(j.get("rtts"))?,
             }),
             "judge_assign" => Some(Message::JudgeAssign {
                 duel_id: req_id_from(j.get("duel_id"))?,
@@ -417,8 +467,13 @@ mod tests {
             Message::GossipDelta {
                 delta: vec![(NodeId(3), 7, false, 12, 1)],
                 heartbeats: vec![(NodeId(4), 9), (NodeId(5), 2)],
+                rtts: vec![(0, 1, 0.5), (0, 2, 1.25)],
             },
-            Message::GossipDeltaReply { delta: vec![], heartbeats: vec![] },
+            Message::GossipDeltaReply {
+                delta: vec![],
+                heartbeats: vec![],
+                rtts: vec![],
+            },
             Message::JudgeAssign {
                 duel_id: req().id,
                 resp_a: resp(),
@@ -458,13 +513,15 @@ mod tests {
         let full = Message::Gossip {
             digest: (0..50u32).map(|i| (NodeId(i), 1, true, 0, 0)).collect(),
         };
-        // A steady-state delta: one membership row + a few heartbeat pairs.
+        // A steady-state delta: one membership row + a few heartbeat pairs
+        // + a piggybacked region-RTT summary row.
         let delta = Message::GossipDelta {
             delta: vec![(NodeId(1), 2, true, 0, 0)],
             heartbeats: (0..8u32).map(|i| (NodeId(i), 3)).collect(),
+            rtts: vec![(0, 1, 0.05)],
         };
         assert!(
-            delta.wire_size() * 10 < full.wire_size(),
+            delta.wire_size() * 8 < full.wire_size(),
             "delta {} vs full {}",
             delta.wire_size(),
             full.wire_size()
@@ -473,10 +530,12 @@ mod tests {
         let as_rows = Message::GossipDelta {
             delta: (0..8u32).map(|i| (NodeId(i), 3, true, 0, 0)).collect(),
             heartbeats: vec![],
+            rtts: vec![],
         };
         let as_pairs = Message::GossipDelta {
             delta: vec![],
             heartbeats: (0..8u32).map(|i| (NodeId(i), 3)).collect(),
+            rtts: vec![],
         };
         assert!(as_pairs.wire_size() < as_rows.wire_size());
     }

@@ -19,6 +19,7 @@ use super::msg::Message;
 use crate::backend::{Backend, Completion};
 use crate::duel::{self, DuelState};
 use crate::gossip::{GossipConfig, PeerView};
+use crate::latency::{LatencyConfig, LatencyEstimator, RegionRtts};
 use crate::ledger::{CreditOp, OpReason};
 use crate::policy::{NodePolicy, SystemPolicy};
 use crate::pos::StakeSnapshot;
@@ -37,8 +38,14 @@ const JUDGE_OUTPUT_TOKENS: u32 = 64;
 
 #[derive(Debug, Clone)]
 enum PendingState {
-    /// Waiting for a ProbeAccept/Reject from `candidate`.
-    Probing { candidate: NodeId, probes_left: usize },
+    /// Waiting for a ProbeAccept/Reject from `candidate`. `sent_at` stamps
+    /// the probe send so the reply measures a live RTT (and a timeout
+    /// penalizes the candidate's region in the latency estimator).
+    Probing {
+        candidate: NodeId,
+        probes_left: usize,
+        sent_at: Time,
+    },
     /// Waiting for the executor's response.
     AwaitingResponse { executor: NodeId },
     /// Waiting for both duel responses.
@@ -72,13 +79,18 @@ struct JudgeTask {
 /// per request re-collects the stake table, re-filters liveness and
 /// rebuilds the sampler; at fleet scale that dominates dispatch. The cache
 /// is keyed on everything the snapshot reads: the gossip view's mutation
-/// clock (liveness + region tags), the ledger version (stakes), and a
-/// coarse time bucket that bounds heartbeat-aging staleness to one gossip
-/// interval.
+/// clock (liveness + region tags), the ledger version (stakes), a coarse
+/// time bucket that bounds heartbeat-aging staleness to one gossip
+/// interval, and the locality inputs that weight the candidates — the
+/// `set_locality` epoch plus the live latency estimator's version, so a
+/// rerouting-sized estimate change reshapes the very next draw instead of
+/// serving a stale reweighted snapshot for up to a gossip interval.
 struct SnapCache {
     view_clock: u64,
     ledger_version: u64,
     time_bucket: u64,
+    locality_epoch: u64,
+    estimator_version: u64,
     snap: StakeSnapshot,
 }
 
@@ -92,6 +104,7 @@ pub struct NodeStats {
     pub duels_started: u64,
     pub judge_evals: u64,
     pub probe_rejects: u64,
+    pub probe_timeouts: u64,
     pub fallback_local: u64,
 }
 
@@ -102,10 +115,25 @@ pub struct Node {
     pub online: bool,
     /// Topology region this node lives in (0 in single-region worlds).
     pub region: u32,
-    /// Expected one-way latency between regions (`[my][their]`), installed
-    /// by the world from its topology; empty = no locality information, so
-    /// dispatch stays region-blind regardless of `latency_penalty`.
-    latency_est: Vec<Vec<f64>>,
+    /// Live per-region one-way latency estimator: EWMA over observed probe
+    /// and gossip RTTs, seeded from the topology's pristine
+    /// expected-latency matrix as cold-start prior. `None` = no locality
+    /// information, so dispatch stays region-blind regardless of
+    /// `latency_penalty`.
+    lat: Option<LatencyEstimator>,
+    /// Bumped on every `set_locality` — part of the snapshot-cache key.
+    locality_epoch: u64,
+    /// Gossip push send-times awaiting a pull reply, per peer (RTT feed
+    /// for the estimator). Only *unambiguous* exchanges are measured: a
+    /// second push while one is still unanswered clears the stamp and
+    /// skips measurement for that round, because a reply could then match
+    /// either push (empty counter-deltas routinely leave pushes
+    /// unanswered, and mis-attribution would skew the EWMA in whichever
+    /// direction the stamp erred).
+    gossip_sent_at: HashMap<NodeId, Time>,
+    /// Last time region-RTT summaries were piggybacked to each peer
+    /// (`LatencyConfig::share_every` rate limit).
+    rtts_sent_at: HashMap<NodeId, Time>,
     backend: Box<dyn Backend>,
     pub view: PeerView,
     ledger: LedgerManager,
@@ -161,7 +189,10 @@ impl Node {
             system,
             online: true,
             region: 0,
-            latency_est: Vec::new(),
+            lat: None,
+            locality_epoch: 0,
+            gossip_sent_at: HashMap::new(),
+            rtts_sent_at: HashMap::new(),
             backend,
             view: PeerView::new(id, gossip_cfg, now),
             ledger,
@@ -214,45 +245,164 @@ impl Node {
 
     // ---- locality (topology awareness) --------------------------------------
 
-    /// Install this node's region and the world's expected inter-region
-    /// latency matrix (the simulator derives it from its `Topology`; a TCP
-    /// deployment would measure RTTs). Makes `latency_penalty` effective.
-    pub fn set_locality(&mut self, region: u32, latency_est: Vec<Vec<f64>>) {
+    /// Install this node's region and the pristine inter-region latency
+    /// matrix as the live estimator's cold-start prior (the simulator
+    /// derives it from its `Topology`; the TCP runner would bootstrap from
+    /// configuration). Makes `latency_penalty` effective: from here on,
+    /// dispatch scores peers with *measured* EWMA latency seeded from this
+    /// prior. An empty matrix clears locality (region-blind dispatch).
+    pub fn set_locality(
+        &mut self,
+        region: u32,
+        prior: Vec<Vec<f64>>,
+        cfg: LatencyConfig,
+    ) {
         self.region = region;
-        self.latency_est = latency_est;
+        self.lat = if prior.is_empty() {
+            None
+        } else {
+            Some(LatencyEstimator::new(region, prior, cfg))
+        };
+        self.locality_epoch += 1;
         self.view.set_region(region);
     }
 
-    /// Expected one-way latency to `peer` per its gossiped region tag
-    /// (0.0 when we have no locality information).
-    fn expected_latency_to(&self, peer: NodeId) -> f64 {
-        if self.latency_est.is_empty() {
-            return 0.0;
-        }
-        let theirs = self.view.region_of(peer).unwrap_or(0) as usize;
-        self.latency_est
-            .get(self.region as usize)
-            .and_then(|row| row.get(theirs))
-            .copied()
-            .unwrap_or(0.0)
+    /// Read access to the live latency estimator (None = region-blind).
+    pub fn latency_estimator(&self) -> Option<&LatencyEstimator> {
+        self.lat.as_ref()
     }
 
-    /// Expected latency to the nearest live peer — the `should_offload`
-    /// locality term. 0.0 in flat worlds and for region-blind policies
-    /// (no iteration, no RNG impact, no wasted hot-path scan). Scans the
-    /// view's online index in place — no per-request allocation.
-    fn nearest_peer_latency(&self, now: Time) -> f64 {
-        if self.policy.latency_penalty <= 0.0 || self.latency_est.is_empty() {
+    /// Mutable access for tests and external instrumentation (a TCP runner
+    /// measuring transport-level RTTs can feed them here directly).
+    pub fn latency_estimator_mut(&mut self) -> Option<&mut LatencyEstimator> {
+        self.lat.as_mut()
+    }
+
+    /// Live one-way latency estimate to `peer` per its gossiped region tag
+    /// (0.0 when we have no locality information). Peers with no known
+    /// region tag — or a garbage one — get the estimator's *conservative*
+    /// estimate (worst own-row prior), never region 0's row: an unknown
+    /// peer must not accidentally score as the best-connected one.
+    fn expected_latency_to(&self, peer: NodeId, now: Time) -> f64 {
+        let Some(est) = &self.lat else {
             return 0.0;
+        };
+        match self.view.region_of(peer) {
+            Some(r) => est.expected_from_me(r, now),
+            None => est.conservative(),
+        }
+    }
+
+    /// Latency estimate to the nearest live peer — the `should_offload`
+    /// locality term. `Some(0.0)` in flat worlds and for region-blind
+    /// policies (no iteration, no RNG impact, no wasted hot-path scan);
+    /// `None` when locality is active but **no live peer exists** — the
+    /// caller must treat that as an explicit serve-locally case rather
+    /// than feeding a sentinel into the offload damping math. Scans the
+    /// view's online index in place — no per-request allocation.
+    fn nearest_peer_latency(&self, now: Time) -> Option<f64> {
+        if self.policy.latency_penalty <= 0.0 || self.lat.is_none() {
+            return Some(0.0);
         }
         self.view
             .online_peers()
             .iter()
             .copied()
             .filter(|p| self.view.is_alive(*p, now))
-            .map(|p| self.expected_latency_to(p))
-            .fold(f64::INFINITY, f64::min)
-            .min(1e6) // no peers at all: huge-but-finite damping
+            .map(|p| self.expected_latency_to(p, now))
+            .reduce(f64::min)
+    }
+
+    /// Feed a measured request→reply round trip with `peer` into the live
+    /// latency estimator (no-op without locality information or when the
+    /// peer's region is unknown).
+    fn observe_peer_rtt(&mut self, peer: NodeId, rtt: Time, now: Time) {
+        let Some(region) = self.view.region_of(peer) else {
+            return;
+        };
+        if let Some(est) = self.lat.as_mut() {
+            est.observe_rtt(region, rtt, now);
+        }
+    }
+
+    /// A probe deadline expired: the candidate — or the path to it — is
+    /// dead or drastically slow. Feed the timeout floor as a penalty
+    /// observation so dispatch sheds the region within a few timeouts,
+    /// long before gossip liveness aging notices.
+    fn observe_probe_timeout(&mut self, candidate: NodeId, now: Time) {
+        let Some(region) = self.view.region_of(candidate) else {
+            return;
+        };
+        if let Some(est) = self.lat.as_mut() {
+            est.observe_timeout(region, PROBE_TIMEOUT, now);
+        }
+    }
+
+    /// Evidence that the path to `peer`'s region is alive without a clean
+    /// latency sample (delegation responses mix network and compute time).
+    fn touch_peer(&mut self, peer: NodeId, now: Time) {
+        let Some(region) = self.view.region_of(peer) else {
+            return;
+        };
+        if let Some(est) = self.lat.as_mut() {
+            est.touch(region, now);
+        }
+    }
+
+    /// Stamp an outgoing gossip push so the pull reply measures a live
+    /// RTT — but only when no earlier push to this peer is still
+    /// unanswered. If one is, a future reply could match either push, so
+    /// the stamp is cleared and this round goes unmeasured; the next
+    /// uncontended push re-arms it. Gossip targets rotate, so consecutive
+    /// pushes to the same peer are the exception and most exchanges stay
+    /// measurable.
+    fn stamp_gossip_push(&mut self, peer: NodeId, now: Time) {
+        match self.gossip_sent_at.entry(peer) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                e.remove(); // ambiguous attribution: skip this round
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(now);
+            }
+        }
+    }
+
+    /// Match an incoming gossip pull reply against its push stamp and feed
+    /// the estimator. Samples slower than [`PROBE_TIMEOUT`] are discarded:
+    /// paths that slow are the probe-timeout penalty's job, and a stamp
+    /// that old may predate a partition heal.
+    fn observe_gossip_reply(&mut self, peer: NodeId, now: Time) {
+        if let Some(t0) = self.gossip_sent_at.remove(&peer) {
+            let rtt = (now - t0).max(0.0);
+            if rtt <= PROBE_TIMEOUT {
+                self.observe_peer_rtt(peer, rtt, now);
+            }
+        }
+    }
+
+    /// Region-RTT summaries to piggyback on a gossip delta to `peer`:
+    /// same-region peers only (they share our vantage point), rate-limited
+    /// to one summary per [`LatencyConfig::share_every`] seconds per peer
+    /// so the byte overhead stays negligible at fleet scale.
+    fn rtts_for(&mut self, peer: NodeId, now: Time) -> RegionRtts {
+        let Some(est) = &self.lat else {
+            return Vec::new();
+        };
+        if self.view.region_of(peer) != Some(est.my_region()) {
+            return Vec::new();
+        }
+        let due = self
+            .rtts_sent_at
+            .get(&peer)
+            .is_none_or(|t| now - *t >= est.config().share_every);
+        if !due {
+            return Vec::new();
+        }
+        let rtts = est.share(now);
+        if !rtts.is_empty() {
+            self.rtts_sent_at.insert(peer, now);
+        }
+        rtts
     }
 
     // ---- the event loop ----------------------------------------------------
@@ -288,8 +438,15 @@ impl Node {
         self.stats.user_requests += 1;
         let util = self.backend.utilization();
         let qlen = self.backend.queue_len();
-        let near = self.nearest_peer_latency(now);
-        if !self.policy.should_offload(util, qlen, near, &mut self.rng) {
+        // No live peer at all is an explicit serve-locally case — never a
+        // sentinel distance fed through the offload damping roll.
+        let offload = match self.nearest_peer_latency(now) {
+            Some(near) => {
+                self.policy.should_offload(util, qlen, near, &mut self.rng)
+            }
+            None => false,
+        };
+        if !offload {
             return self.execute_locally(req, ExecKind::Local, now);
         }
         self.try_delegate(req, now)
@@ -337,6 +494,7 @@ impl Node {
                 state: PendingState::Probing {
                     candidate,
                     probes_left: self.system.max_probes.saturating_sub(1),
+                    sent_at: now,
                 },
                 deadline: now + PROBE_TIMEOUT,
             },
@@ -378,29 +536,36 @@ impl Node {
     /// Ensure the cached stake-weighted, liveness-filtered snapshot of
     /// delegation candidates is current (see [`SnapCache`]). With locality
     /// information and a positive `latency_penalty`, each candidate's stake
-    /// is damped by `1 / (1 + penalty * latency)` — nearer peers win ties,
-    /// distant continents fade from selection (§4.1 made WAN-aware). Flat
-    /// worlds skip the reweight entirely. The rebuilt snapshot is
-    /// alias-prepared, so every subsequent draw is O(1).
+    /// is damped by `1 / (1 + penalty * latency)` using the **live** EWMA
+    /// latency estimate to the candidate's region — nearer peers win ties,
+    /// distant continents fade from selection, and an observably degraded
+    /// or partitioned path fades within a few observations (§4.1 made
+    /// WAN-aware and reactive). Flat worlds skip the reweight entirely.
+    /// The rebuilt snapshot is alias-prepared, so every subsequent draw is
+    /// O(1).
     fn refresh_snapshot(&mut self, now: Time) {
         let view_clock = self.view.clock();
         let ledger_version = self.ledger.stake_version();
         let interval = self.view.config().interval.max(1e-6);
         let time_bucket = (now / interval) as u64;
+        let locality_epoch = self.locality_epoch;
+        let estimator_version = self.lat.as_ref().map_or(0, |l| l.version());
         if let Some(c) = &self.snap_cache {
             if c.view_clock == view_clock
                 && c.ledger_version == ledger_version
                 && c.time_bucket == time_bucket
+                && c.locality_epoch == locality_epoch
+                && c.estimator_version == estimator_version
             {
                 return;
             }
         }
         let mut snap = StakeSnapshot::new(&self.ledger.stakes(), Some(self.id));
         snap.retain(|n| self.view.is_alive(n, now));
-        if self.policy.latency_penalty > 0.0 && !self.latency_est.is_empty() {
+        if self.policy.latency_penalty > 0.0 && self.lat.is_some() {
             let penalty = self.policy.latency_penalty;
             snap.reweight(|n| {
-                1.0 / (1.0 + penalty * self.expected_latency_to(n))
+                1.0 / (1.0 + penalty * self.expected_latency_to(n, now))
             });
         }
         snap.prepare();
@@ -408,6 +573,8 @@ impl Node {
             view_clock,
             ledger_version,
             time_bucket,
+            locality_epoch,
+            estimator_version,
             snap,
         });
     }
@@ -452,6 +619,10 @@ impl Node {
                 self.execute_locally(request, kind, now)
             }
             Message::DelegateResponse { response, duel } => {
+                // The executor's answer proves the path to its region is
+                // alive (its timing mixes compute with network, so it only
+                // refreshes estimator freshness, not the EWMA).
+                self.touch_peer(from, now);
                 self.on_delegate_response(response, duel, now)
             }
             Message::Gossip { digest } => {
@@ -464,10 +635,16 @@ impl Node {
                 }]
             }
             Message::GossipReply { digest } => {
+                // Pull half of a push-pull we initiated: a measured gossip
+                // round trip for the estimator.
+                self.observe_gossip_reply(from, now);
                 self.view.merge(&digest, now);
                 vec![]
             }
-            Message::GossipDelta { delta, heartbeats } => {
+            Message::GossipDelta { delta, heartbeats, rtts } => {
+                if let Some(est) = self.lat.as_mut() {
+                    est.merge(&rtts, now);
+                }
                 let mut fresh = self.view.merge(&delta, now);
                 fresh.extend(self.view.merge_heartbeats(&heartbeats, now));
                 fresh.sort_unstable();
@@ -479,13 +656,22 @@ impl Node {
                 if delta.is_empty() && heartbeats.is_empty() {
                     vec![]
                 } else {
+                    let rtts = self.rtts_for(from, now);
                     vec![Action::Send {
                         to: from,
-                        msg: Message::GossipDeltaReply { delta, heartbeats },
+                        msg: Message::GossipDeltaReply {
+                            delta,
+                            heartbeats,
+                            rtts,
+                        },
                     }]
                 }
             }
-            Message::GossipDeltaReply { delta, heartbeats } => {
+            Message::GossipDeltaReply { delta, heartbeats, rtts } => {
+                self.observe_gossip_reply(from, now);
+                if let Some(est) = self.lat.as_mut() {
+                    est.merge(&rtts, now);
+                }
                 self.view.merge(&delta, now);
                 self.view.merge_heartbeats(&heartbeats, now);
                 vec![]
@@ -516,7 +702,7 @@ impl Node {
         let Some(p) = self.pending.get_mut(&req_id) else {
             return vec![]; // stale (already timed out / answered)
         };
-        let PendingState::Probing { candidate, .. } = p.state else {
+        let PendingState::Probing { candidate, sent_at, .. } = p.state else {
             return vec![];
         };
         if candidate != from {
@@ -526,6 +712,8 @@ impl Node {
         let req = p.req.clone();
         p.state = PendingState::AwaitingResponse { executor: from };
         p.deadline = now + req.slo_deadline * RESPONSE_TIMEOUT_FACTOR;
+        // The probe round trip is a clean network RTT sample.
+        self.observe_peer_rtt(from, (now - sent_at).max(0.0), now);
         vec![Action::Send {
             to: from,
             msg: Message::Delegate { request: req, duel: false },
@@ -538,19 +726,22 @@ impl Node {
         req_id: RequestId,
         now: Time,
     ) -> Vec<Action> {
-        let (req, probes_left) = {
+        let (req, probes_left, sent_at) = {
             let Some(p) = self.pending.get(&req_id) else {
                 return vec![];
             };
-            let PendingState::Probing { candidate, probes_left } = p.state
+            let PendingState::Probing { candidate, probes_left, sent_at } =
+                p.state
             else {
                 return vec![];
             };
             if candidate != from {
                 return vec![];
             }
-            (p.req.clone(), probes_left)
+            (p.req.clone(), probes_left, sent_at)
         };
+        // A reject still answers the probe: same clean RTT sample.
+        self.observe_peer_rtt(from, (now - sent_at).max(0.0), now);
         self.stats.probe_rejects += 1;
         if probes_left == 0 {
             self.pending.remove(&req_id);
@@ -574,6 +765,7 @@ impl Node {
                 p.state = PendingState::Probing {
                     candidate: c,
                     probes_left: probes_left - 1,
+                    sent_at: now,
                 };
                 p.deadline = now + PROBE_TIMEOUT;
                 vec![Action::Send { to: c, msg: probe }]
@@ -906,6 +1098,7 @@ impl Node {
             let digest = self.view.digest();
             for t in targets {
                 self.view.mark_synced(*t);
+                self.stamp_gossip_push(*t, now);
                 out.push(Action::Send {
                     to: *t,
                     msg: Message::Gossip { digest: digest.clone() },
@@ -917,9 +1110,11 @@ impl Node {
                 if delta.is_empty() && heartbeats.is_empty() {
                     continue;
                 }
+                let rtts = self.rtts_for(*t, now);
+                self.stamp_gossip_push(*t, now);
                 out.push(Action::Send {
                     to: *t,
-                    msg: Message::GossipDelta { delta, heartbeats },
+                    msg: Message::GossipDelta { delta, heartbeats, rtts },
                 });
             }
         }
@@ -1004,9 +1199,13 @@ impl Node {
         for id in expired {
             let p = self.pending.remove(&id).expect("just listed");
             match p.state {
-                PendingState::Probing { .. } => {
-                    // Probe never answered (candidate died): serve locally.
+                PendingState::Probing { candidate, .. } => {
+                    // Probe never answered: the candidate died or the path
+                    // to its region is down. Penalize the region in the
+                    // latency estimator and serve locally.
+                    self.stats.probe_timeouts += 1;
                     self.stats.fallback_local += 1;
+                    self.observe_probe_timeout(candidate, now);
                     actions.extend(self.execute_locally(
                         p.req,
                         ExecKind::Local,
@@ -1549,7 +1748,11 @@ mod tests {
             &shared,
         );
         n0.system.duel_rate = 0.0;
-        n0.set_locality(0, vec![vec![0.005, 0.100], vec![0.100, 0.005]]);
+        n0.set_locality(
+            0,
+            vec![vec![0.005, 0.100], vec![0.100, 0.005]],
+            LatencyConfig::default(),
+        );
         n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
         n0.view.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
 
@@ -1574,6 +1777,269 @@ mod tests {
         assert!(
             near > far * 2,
             "locality penalty ignored: near={near} far={far}"
+        );
+    }
+
+    // ---- live latency estimation (bugfix sweep + tentpole regressions) ------
+
+    #[test]
+    fn unknown_region_peer_scores_conservative_latency() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut n0 = mk_node(0, NodePolicy::default(), &shared);
+        n0.set_locality(
+            0,
+            vec![vec![0.005, 0.100], vec![0.100, 0.005]],
+            LatencyConfig::default(),
+        );
+        // Known near peer in our own region.
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        // Peer gossiping a garbage region tag (outside the matrix).
+        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 9)], 0.0);
+        assert_eq!(n0.expected_latency_to(NodeId(1), 0.0), 0.005);
+        // Garbage tags and wholly unknown peers both get the worst own-row
+        // prior — never region 0's best-row latency.
+        assert_eq!(n0.expected_latency_to(NodeId(2), 0.0), 0.100);
+        assert_eq!(n0.expected_latency_to(NodeId(77), 0.0), 0.100);
+    }
+
+    fn probe_targets(actions: &[Action]) -> Vec<NodeId> {
+        actions
+            .iter()
+            .filter_map(|x| match x {
+                Action::Send { to, msg: Message::Probe { .. } } => Some(*to),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn estimator_update_reshapes_the_very_next_draw() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let _n2 = mk_node(2, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                latency_penalty: 200.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        // Both regions look equally fast a priori: draws split evenly.
+        n0.set_locality(
+            0,
+            vec![vec![0.001, 0.001], vec![0.001, 0.001]],
+            LatencyConfig::default(),
+        );
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
+        let mut far0 = 0usize;
+        for seq in 0..300u64 {
+            let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);
+            far0 += probe_targets(&a).iter().filter(|t| **t == NodeId(2)).count();
+        }
+        assert!(far0 > 80, "equal priors must split draws: far {far0}/300");
+        // Live observation: region 1 just measured a 6 s RTT. Same view
+        // clock, same ledger version, same time bucket — only the
+        // estimator moved, and the very next draws must see it.
+        n0.latency_estimator_mut().unwrap().observe_rtt(1, 6.0, 0.0);
+        let mut far1 = 0usize;
+        let mut near1 = 0usize;
+        for seq in 1000..1300u64 {
+            let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);
+            for t in probe_targets(&a) {
+                if t == NodeId(2) {
+                    far1 += 1;
+                } else {
+                    near1 += 1;
+                }
+            }
+        }
+        assert!(
+            far1 * 10 < far0,
+            "stale snapshot served after estimator update: \
+             far {far0} -> {far1}"
+        );
+        assert!(near1 > 150, "near candidate starved: {near1}");
+    }
+
+    #[test]
+    fn set_locality_invalidates_snapshot_cache() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let _n2 = mk_node(2, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                latency_penalty: 200.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        n0.set_locality(
+            0,
+            vec![vec![0.001, 0.001], vec![0.001, 0.001]],
+            LatencyConfig::default(),
+        );
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
+        let mut far0 = 0usize;
+        for seq in 0..300u64 {
+            let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);
+            far0 += probe_targets(&a).iter().filter(|t| **t == NodeId(2)).count();
+        }
+        assert!(far0 > 80, "equal matrix must split draws: far {far0}");
+        // Re-declare locality with region 1 an ocean away — same instant,
+        // same view clock, same ledger version. The reweighted snapshot
+        // must not be served stale for up to a gossip interval.
+        n0.set_locality(
+            0,
+            vec![vec![0.001, 1.0], vec![1.0, 0.001]],
+            LatencyConfig::default(),
+        );
+        let mut far1 = 0usize;
+        for seq in 1000..1300u64 {
+            let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);
+            far1 += probe_targets(&a).iter().filter(|t| **t == NodeId(2)).count();
+        }
+        assert!(
+            far1 * 10 < far0,
+            "set_locality served a stale snapshot: far {far0} -> {far1}"
+        );
+    }
+
+    #[test]
+    fn no_live_peer_is_explicit_local_execute() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                latency_penalty: 50.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.set_locality(
+            0,
+            vec![vec![0.005, 0.100], vec![0.100, 0.005]],
+            LatencyConfig::default(),
+        );
+        // Locality active but zero live peers: the nearest-peer term is an
+        // explicit None, not a 1e6 sentinel fed into the damping math.
+        assert_eq!(n0.nearest_peer_latency(0.0), None);
+        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        assert!(
+            a.iter().all(|x| !matches!(x, Action::Send { .. })),
+            "no-peer case must not probe: {a:?}"
+        );
+        assert_eq!(n0.backend().running_len(), 1, "must execute locally");
+        assert_eq!(n0.stats.served_local, 1);
+        // Flat/region-blind nodes keep the zero-latency fast path.
+        let n_flat = mk_node(1, NodePolicy::default(), &shared);
+        assert_eq!(n_flat.nearest_peer_latency(0.0), Some(0.0));
+    }
+
+    #[test]
+    fn probe_replies_and_timeouts_feed_the_estimator() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        n0.set_locality(
+            0,
+            vec![vec![0.005, 0.080], vec![0.080, 0.005]],
+            LatencyConfig::default(),
+        );
+        // The only candidate lives in region 1.
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 1)], 0.0);
+        let prior = n0.latency_estimator().unwrap().expected_from_me(1, 0.0);
+        assert_eq!(prior, 0.080);
+        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        let Action::Send { msg: Message::Probe { req_id, .. }, .. } = a[0]
+        else {
+            panic!("expected a probe, got {a:?}")
+        };
+        // The reject answers 0.4 s later: a measured RTT well above the
+        // 80 ms prior must raise the estimate.
+        n0.handle(
+            Event::Message {
+                from: NodeId(1),
+                msg: Message::ProbeReject { req_id },
+            },
+            0.4,
+        );
+        let after_reply =
+            n0.latency_estimator().unwrap().expected_from_me(1, 0.4);
+        assert!(after_reply > prior, "RTT sample ignored: {after_reply}");
+        // The retry probe (sent at 0.4) is never answered: the timeout
+        // penalty must push the estimate far beyond anything measured.
+        n0.handle(Event::Tick, 5.0);
+        assert_eq!(n0.stats.probe_timeouts, 1);
+        let after_timeout =
+            n0.latency_estimator().unwrap().expected_from_me(1, 5.0);
+        assert!(
+            after_timeout > 0.3,
+            "timeout penalty too weak: {after_timeout}"
+        );
+    }
+
+    #[test]
+    fn gossip_deltas_piggyback_region_rtts_to_same_region_peers() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut a = mk_node(0, NodePolicy::default(), &shared);
+        let mut b = mk_node(1, NodePolicy::default(), &shared);
+        let prior = vec![vec![0.005, 0.080], vec![0.080, 0.005]];
+        a.set_locality(0, prior.clone(), LatencyConfig::default());
+        b.set_locality(0, prior, LatencyConfig::default());
+        a.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        b.view.merge(&vec![(NodeId(0), 1, true, 0, 0)], 0.0);
+        // a directly measured region 1 (say via probes).
+        a.latency_estimator_mut().unwrap().observe_rtt(1, 2.0, 0.0);
+        // Round 1 is the full-digest bootstrap; round 2 ships a delta with
+        // the measured row piggybacked (same-region peer, first share).
+        a.handle(Event::Tick, 1.0);
+        let out = a.handle(Event::Tick, 2.0);
+        let delta = out
+            .iter()
+            .find_map(|x| match x {
+                Action::Send { msg: m @ Message::GossipDelta { .. }, .. } => {
+                    Some(m.clone())
+                }
+                _ => None,
+            })
+            .expect("delta sent");
+        let Message::GossipDelta { ref rtts, .. } = delta else {
+            unreachable!()
+        };
+        assert!(
+            !rtts.is_empty(),
+            "same-region delta must carry RTT summaries"
+        );
+        // b merges the summary: its estimate moves off the prior with no
+        // direct measurement of its own — regions without direct traffic
+        // still converge.
+        let before = b.latency_estimator().unwrap().expected_from_me(1, 2.1);
+        b.handle(Event::Message { from: NodeId(0), msg: delta }, 2.1);
+        let after = b.latency_estimator().unwrap().expected_from_me(1, 2.1);
+        assert!(
+            after > before,
+            "piggybacked summary ignored: {before} -> {after}"
         );
     }
 }

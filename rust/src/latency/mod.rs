@@ -1,0 +1,634 @@
+//! Live per-region one-way latency estimation (EWMA over observed RTTs).
+//!
+//! PR 1's locality-aware dispatch scored candidates with the topology's
+//! *pristine* `expected_latency_matrix()` — an oracle-free but **static**
+//! estimate. A live partition or congestion event never changed who got
+//! picked: nodes kept delegating into a dead trans-Atlantic link until
+//! per-request timeouts burned the SLO budget. This module replaces that
+//! matrix with a measurement loop, the way decentralized schedulers over
+//! heterogeneous WANs do (ROADMAP "Follow-on geo experiments"; PAPERS.md's
+//! overlay-routing systems): nodes estimate latency from traffic they
+//! already exchange and steer load away from paths that *observably*
+//! degrade — and back, once they recover.
+//!
+//! ## Estimator model
+//!
+//! [`LatencyEstimator`] keeps one cell per region pair:
+//!
+//! * **EWMA** — each direct observation (a probe→reply or gossip push→pull
+//!   round trip, halved to one-way) moves the cell's estimate by
+//!   [`LatencyConfig::alpha`].
+//! * **Cold-start prior** — the pristine expected-latency matrix seeds every
+//!   cell. A cell with few observations blends toward the prior with weight
+//!   [`LatencyConfig::prior_weight`] (pseudo-observations), so one jittery
+//!   sample cannot hijack dispatch.
+//! * **Staleness decay** — a cell that stops hearing evidence decays
+//!   linearly back to the prior over [`LatencyConfig::decay_after`]
+//!   seconds. Stale pessimism (or stale optimism) has a bounded lifetime.
+//! * **Timeout penalties** — an unanswered probe is evidence too:
+//!   [`LatencyEstimator::observe_timeout`] feeds the timeout floor as an
+//!   observation, so a freshly partitioned region is shed within a few
+//!   probe timeouts — long before gossip liveness aging notices.
+//!
+//! ## Region summaries on gossip
+//!
+//! A node only measures the pairs it talks across. So that regions with no
+//! direct traffic still converge, nodes piggyback their *directly measured*
+//! row on gossip deltas ([`LatencyEstimator::share`], rate-limited by
+//! [`LatencyConfig::share_every`], same-region peers only) and merge
+//! received summaries as weaker *indirect* observations
+//! ([`LatencyEstimator::merge`]). Indirect estimates are never re-shared
+//! (only cells with fresh direct evidence qualify for `share`), which
+//! keeps hearsay from echoing around the region.
+//!
+//! ## Versioning
+//!
+//! Anything derived from the estimator (the node's cached stake snapshot)
+//! keys on [`LatencyEstimator::version`]. To avoid invalidating that cache
+//! on every jittery sample, the version bumps only when a cell's estimate
+//! drifts more than [`VERSION_DRIFT`] (relative) since the last bump — big
+//! swings (a timeout penalty, a heal) invalidate immediately, steady-state
+//! noise does not.
+//!
+//! With `enabled = false` the estimator freezes at the prior (the static
+//! matrix of PR 1) — the baseline the reroute bench compares against.
+
+use crate::types::Time;
+
+/// Region-pair latency summaries piggybacked on gossip deltas:
+/// `(src_region, dst_region, one_way_seconds)` triples.
+pub type RegionRtts = Vec<(u32, u32, f64)>;
+
+/// Relative drift of a cell's estimate (vs. its value at the last version
+/// bump) that triggers a new estimator version. See module docs.
+pub const VERSION_DRIFT: f64 = 0.10;
+
+/// Indirect (gossiped) observations count this fraction of a direct one,
+/// both in EWMA step size and in accumulated confidence weight.
+const INDIRECT_SCALE: f64 = 0.5;
+
+/// Fraction of `decay_after` during which a cell's own direct measurement
+/// outranks gossiped hearsay (indirect merges are skipped).
+const DIRECT_TRUST_FRAC: f64 = 0.25;
+
+/// Fraction of `decay_after` a direct observation stays fresh enough for
+/// its cell to be included in outgoing region summaries.
+const SHARE_FRESH_FRAC: f64 = 0.5;
+
+/// Declarative knobs for the live estimator (the `latency_estimation`
+/// config block; see `config::parse_experiment`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyConfig {
+    /// `false` freezes every estimate at the cold-start prior — the static
+    /// expected-latency-matrix behaviour, kept as the A/B baseline.
+    pub enabled: bool,
+    /// EWMA weight of a new direct observation (0 < alpha <= 1).
+    pub alpha: f64,
+    /// Seconds of evidence silence after which a cell has fully decayed
+    /// back to its prior.
+    pub decay_after: f64,
+    /// Pseudo-observations backing the prior during cold start: with
+    /// weight `w` observations accumulated, the estimate counts
+    /// `w / (w + prior_weight)` against the prior.
+    pub prior_weight: f64,
+    /// Minimum seconds between region-summary piggybacks to the same peer
+    /// (keeps the gossip-byte overhead negligible at fleet scale).
+    pub share_every: f64,
+}
+
+impl Default for LatencyConfig {
+    fn default() -> Self {
+        LatencyConfig {
+            enabled: true,
+            alpha: 0.3,
+            decay_after: 60.0,
+            prior_weight: 1.0,
+            share_every: 5.0,
+        }
+    }
+}
+
+impl LatencyConfig {
+    /// Range-check every knob; the single source of validity used by both
+    /// the config parser (mapped to a `ConfigError`) and
+    /// [`validate`](Self::validate) (panicking form).
+    pub fn check(&self) -> Result<(), String> {
+        if !(self.alpha > 0.0 && self.alpha <= 1.0 && self.alpha.is_finite())
+        {
+            return Err(format!(
+                "latency_estimation.alpha must be in (0, 1], got {}",
+                self.alpha
+            ));
+        }
+        if !(self.decay_after > 0.0 && self.decay_after.is_finite()) {
+            return Err(format!(
+                "latency_estimation.decay_after must be > 0, got {}",
+                self.decay_after
+            ));
+        }
+        if !(self.prior_weight >= 0.0 && self.prior_weight.is_finite()) {
+            return Err(format!(
+                "latency_estimation.prior_weight must be >= 0, got {}",
+                self.prior_weight
+            ));
+        }
+        if !(self.share_every >= 0.0 && self.share_every.is_finite()) {
+            return Err(format!(
+                "latency_estimation.share_every must be >= 0, got {}",
+                self.share_every
+            ));
+        }
+        Ok(())
+    }
+
+    /// Panics with a descriptive message on invalid knobs (construction
+    /// and `WorldConfig::validate` paths — misconfigured experiments fail
+    /// loudly; the config parser uses [`check`](Self::check) to return
+    /// `Err` on malformed user input instead).
+    pub fn validate(&self) {
+        if let Err(msg) = self.check() {
+            panic!("{msg}");
+        }
+    }
+}
+
+/// Per-region-pair estimator state.
+#[derive(Debug, Clone, Copy)]
+struct Cell {
+    /// EWMA of observed one-way latency (seconds). Meaningless while
+    /// `weight == 0` (no observations yet).
+    est: f64,
+    /// Accumulated observation weight, capped at `1 / alpha` (the EWMA's
+    /// effective sample size) — drives the cold-start blend.
+    weight: f64,
+    /// Time of the last evidence of any kind (drives staleness decay).
+    last_obs: Time,
+    /// Time of the last *direct* observation (only these cells are
+    /// re-shared, and fresh direct data outranks gossiped hearsay).
+    last_direct: Time,
+    /// `est` as of the last version bump (drift threshold anchor).
+    versioned_est: f64,
+}
+
+impl Cell {
+    fn empty() -> Cell {
+        Cell {
+            est: 0.0,
+            weight: 0.0,
+            last_obs: f64::NEG_INFINITY,
+            last_direct: f64::NEG_INFINITY,
+            versioned_est: 0.0,
+        }
+    }
+}
+
+/// Live per-region one-way latency estimates for one node. See module docs.
+#[derive(Debug, Clone)]
+pub struct LatencyEstimator {
+    my_region: usize,
+    n: usize,
+    /// Pristine expected-latency matrix, row-major `[a * n + b]` — the
+    /// cold-start prior and the decay target.
+    prior: Vec<f64>,
+    cells: Vec<Cell>,
+    cfg: LatencyConfig,
+    /// Bumped on material estimate changes — the snapshot-cache key.
+    version: u64,
+}
+
+impl LatencyEstimator {
+    /// Build from this node's region and the pristine expected-latency
+    /// matrix (`prior[a][b]` = one-way seconds from region a to region b).
+    pub fn new(
+        my_region: u32,
+        prior: Vec<Vec<f64>>,
+        cfg: LatencyConfig,
+    ) -> LatencyEstimator {
+        cfg.validate();
+        let n = prior.len();
+        assert!(n > 0, "latency estimator: empty prior matrix");
+        assert!(
+            (my_region as usize) < n,
+            "latency estimator: region {my_region} outside {n}x{n} prior"
+        );
+        let mut flat = Vec::with_capacity(n * n);
+        for row in &prior {
+            assert_eq!(
+                row.len(),
+                n,
+                "latency estimator: prior matrix must be square"
+            );
+            for v in row {
+                assert!(
+                    v.is_finite() && *v >= 0.0,
+                    "latency estimator: prior entries must be finite and \
+                     >= 0, got {v}"
+                );
+                flat.push(*v);
+            }
+        }
+        LatencyEstimator {
+            my_region: my_region as usize,
+            n,
+            prior: flat,
+            cells: vec![Cell::empty(); n * n],
+            cfg,
+            version: 0,
+        }
+    }
+
+    pub fn my_region(&self) -> u32 {
+        self.my_region as u32
+    }
+
+    pub fn num_regions(&self) -> usize {
+        self.n
+    }
+
+    pub fn config(&self) -> LatencyConfig {
+        self.cfg
+    }
+
+    /// Changes iff some estimate moved materially — the cheap staleness key
+    /// for caches derived from this estimator (see `SnapCache`).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Current one-way estimate from region `a` to region `b`: the EWMA
+    /// blended with the prior by observation confidence and staleness (see
+    /// module docs). Out-of-range regions — a garbage gossip tag — get the
+    /// [`conservative`](Self::conservative) estimate, never region 0's row.
+    pub fn expected(&self, a: u32, b: u32, now: Time) -> f64 {
+        let (a, b) = (a as usize, b as usize);
+        if a >= self.n || b >= self.n {
+            return self.conservative();
+        }
+        self.expected_idx(a * self.n + b, now)
+    }
+
+    /// One-way estimate from this node's own region to `b` (the dispatch
+    /// scoring path).
+    pub fn expected_from_me(&self, b: u32, now: Time) -> f64 {
+        self.expected(self.my_region as u32, b, now)
+    }
+
+    /// Conservative fallback for peers whose region is unknown or invalid:
+    /// the worst pristine latency out of this node's own region. Unknown
+    /// must never score better than the farthest *known* region.
+    pub fn conservative(&self) -> f64 {
+        (0..self.n)
+            .map(|b| self.prior[self.my_region * self.n + b])
+            .fold(0.0, f64::max)
+    }
+
+    fn expected_idx(&self, i: usize, now: Time) -> f64 {
+        let prior = self.prior[i];
+        if !self.cfg.enabled {
+            return prior;
+        }
+        let c = &self.cells[i];
+        if c.weight <= 0.0 {
+            return prior;
+        }
+        let age = (now - c.last_obs).max(0.0);
+        let fresh = (1.0 - age / self.cfg.decay_after).clamp(0.0, 1.0);
+        let conf = c.weight / (c.weight + self.cfg.prior_weight);
+        prior + (c.est - prior) * fresh * conf
+    }
+
+    /// Feed a measured request→reply round trip with a peer in `region`
+    /// (probe→accept/reject, gossip push→pull). Halved to one-way and
+    /// applied to both directions of the (symmetric) pair.
+    pub fn observe_rtt(&mut self, region: u32, rtt: f64, now: Time) {
+        self.observe_direct(region, rtt.max(0.0) / 2.0, now);
+    }
+
+    /// An unanswered probe is evidence of a dead or drastically slow path:
+    /// feed the timeout floor (`rtt >= timeout`, so one-way `>= timeout/2`)
+    /// as a direct observation. A handful of these shed a freshly
+    /// partitioned region from dispatch within a few gossip intervals.
+    pub fn observe_timeout(&mut self, region: u32, timeout: f64, now: Time) {
+        self.observe_direct(region, timeout.max(0.0) / 2.0, now);
+    }
+
+    fn observe_direct(&mut self, region: u32, one_way: f64, now: Time) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let r = region as usize;
+        if r >= self.n {
+            return;
+        }
+        let my = self.my_region;
+        self.update_cell(my, r, one_way, false, now);
+        if r != my {
+            self.update_cell(r, my, one_way, false, now);
+        }
+    }
+
+    /// Evidence that the path to `region` is alive without a latency
+    /// measurement (e.g. a delegation response arrived — its timing mixes
+    /// network and compute, so it refreshes freshness but not the EWMA).
+    /// The decay accrued so far is folded into the stored estimate first —
+    /// a touch preserves the *current decayed* value and resets the decay
+    /// clock; it never resurrects a stale one.
+    pub fn touch(&mut self, region: u32, now: Time) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let r = region as usize;
+        if r >= self.n {
+            return;
+        }
+        for i in [self.my_region * self.n + r, r * self.n + self.my_region] {
+            if self.cells[i].weight > 0.0 {
+                self.fold_decay(i, now);
+                let c = &mut self.cells[i];
+                c.last_obs = c.last_obs.max(now);
+            }
+        }
+    }
+
+    /// Fold the staleness decay accrued since the last evidence into the
+    /// stored EWMA, anchoring it at its current *effective* (decayed)
+    /// value. Called whenever new evidence arrives at a cell: without
+    /// this, the first observation or touch after a long silence would
+    /// reset the decay clock against the undecayed stale estimate,
+    /// resurrecting a penalty (or an optimism) that had already expired.
+    fn fold_decay(&mut self, i: usize, now: Time) {
+        let prior = self.prior[i];
+        let c = &mut self.cells[i];
+        let age = (now - c.last_obs).max(0.0);
+        if c.weight <= 0.0 || age <= 0.0 {
+            return;
+        }
+        let fresh = (1.0 - age / self.cfg.decay_after).clamp(0.0, 1.0);
+        c.est = prior + (c.est - prior) * fresh;
+    }
+
+    /// This node's freshly *directly measured* row, for piggybacking on
+    /// gossip deltas. Indirectly learned cells never qualify — hearsay is
+    /// not re-shared (no echo amplification).
+    pub fn share(&self, now: Time) -> RegionRtts {
+        if !self.cfg.enabled {
+            return Vec::new();
+        }
+        let window = SHARE_FRESH_FRAC * self.cfg.decay_after;
+        let my = self.my_region;
+        let mut out = Vec::new();
+        for b in 0..self.n {
+            let i = my * self.n + b;
+            let c = &self.cells[i];
+            if c.weight > 0.0 && now - c.last_direct <= window {
+                out.push((my as u32, b as u32, self.expected_idx(i, now)));
+            }
+        }
+        out
+    }
+
+    /// Merge region summaries received from a peer as *indirect*
+    /// observations: half the EWMA step and confidence of a direct one,
+    /// and skipped entirely for cells with fresh direct measurements (own
+    /// evidence outranks hearsay).
+    pub fn merge(&mut self, rtts: &[(u32, u32, f64)], now: Time) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let holdoff = DIRECT_TRUST_FRAC * self.cfg.decay_after;
+        for (a, b, est) in rtts {
+            let (a, b) = (*a as usize, *b as usize);
+            if a >= self.n || b >= self.n {
+                continue;
+            }
+            if now - self.cells[a * self.n + b].last_direct <= holdoff {
+                continue;
+            }
+            self.update_cell(a, b, *est, true, now);
+        }
+    }
+
+    fn update_cell(
+        &mut self,
+        a: usize,
+        b: usize,
+        sample: f64,
+        indirect: bool,
+        now: Time,
+    ) {
+        if !sample.is_finite() || sample < 0.0 {
+            return;
+        }
+        let (alpha, w) = if indirect {
+            (self.cfg.alpha * INDIRECT_SCALE, INDIRECT_SCALE)
+        } else {
+            (self.cfg.alpha, 1.0)
+        };
+        let cap = 1.0 / self.cfg.alpha;
+        // Anchor the EWMA at its current decayed value before blending in
+        // the new sample — expired staleness must not resurrect.
+        self.fold_decay(a * self.n + b, now);
+        let c = &mut self.cells[a * self.n + b];
+        let first = c.weight <= 0.0;
+        if first {
+            c.est = sample;
+        } else {
+            c.est = alpha * sample + (1.0 - alpha) * c.est;
+        }
+        c.weight = (c.weight + w).min(cap);
+        c.last_obs = c.last_obs.max(now);
+        if !indirect {
+            c.last_direct = c.last_direct.max(now);
+        }
+        let drift = (c.est - c.versioned_est).abs()
+            > VERSION_DRIFT * c.versioned_est.abs().max(1e-4);
+        if first || drift {
+            c.versioned_est = c.est;
+            self.version += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_region_prior() -> Vec<Vec<f64>> {
+        // Region 0 is home: 5 ms intra, 100 ms to region 1.
+        vec![vec![0.005, 0.100], vec![0.100, 0.005]]
+    }
+
+    fn est() -> LatencyEstimator {
+        LatencyEstimator::new(0, two_region_prior(), LatencyConfig::default())
+    }
+
+    #[test]
+    fn cold_start_returns_prior() {
+        let e = est();
+        assert_eq!(e.expected(0, 1, 10.0), 0.100);
+        assert_eq!(e.expected(0, 0, 10.0), 0.005);
+        assert_eq!(e.expected_from_me(1, 10.0), 0.100);
+        assert_eq!(e.version(), 0);
+    }
+
+    #[test]
+    fn observation_moves_estimate_and_bumps_version() {
+        let mut e = est();
+        // Observed 1.0 s RTT to region 1: one-way 0.5 s, blended with the
+        // prior at confidence w/(w+1) = 0.5 after one observation.
+        e.observe_rtt(1, 1.0, 0.0);
+        let got = e.expected(0, 1, 0.0);
+        let want = 0.100 + (0.5 - 0.100) * 0.5;
+        assert!((got - want).abs() < 1e-12, "got {got}, want {want}");
+        assert!(e.version() > 0, "first observation must bump the version");
+        // Symmetric pair updated too.
+        assert!((e.expected(1, 0, 0.0) - want).abs() < 1e-12);
+        // More observations raise confidence toward the raw EWMA.
+        for _ in 0..20 {
+            e.observe_rtt(1, 1.0, 0.0);
+        }
+        assert!(e.expected(0, 1, 0.0) > 0.35);
+    }
+
+    #[test]
+    fn staleness_decays_back_to_prior() {
+        let mut e = est();
+        e.observe_rtt(1, 2.0, 100.0);
+        let fresh = e.expected(0, 1, 100.0);
+        assert!(fresh > 0.100, "penalized estimate above prior");
+        // Halfway through the decay window the excursion has halved.
+        let mid = e.expected(0, 1, 130.0);
+        assert!(mid < fresh && mid > 0.100);
+        assert!(
+            ((mid - 0.100) - (fresh - 0.100) / 2.0).abs() < 1e-9,
+            "linear decay: fresh {fresh}, mid {mid}"
+        );
+        // Past decay_after (60 s) the prior is fully restored.
+        assert_eq!(e.expected(0, 1, 161.0), 0.100);
+        // A touch preserves the *current decayed* value (never the stale
+        // undecayed one) and resets the decay clock.
+        e.observe_rtt(1, 2.0, 200.0);
+        let just_before = e.expected(0, 1, 250.0);
+        e.touch(1, 250.0);
+        let after_touch = e.expected(0, 1, 250.0);
+        assert!(
+            (after_touch - just_before).abs() < 1e-9,
+            "touch moved the estimate: {just_before} -> {after_touch}"
+        );
+        // Clock restarted at the touch: the excursion outlives the original
+        // window but still decays to the prior eventually.
+        assert!(e.expected(0, 1, 290.0) > 0.100);
+        assert_eq!(e.expected(0, 1, 311.0), 0.100);
+    }
+
+    #[test]
+    fn touch_does_not_resurrect_decayed_penalties() {
+        let mut e = est();
+        e.observe_rtt(1, 3.0, 0.0); // heavy penalty: one-way 1.5 s
+        assert!(e.expected(0, 1, 0.0) > 0.5);
+        // Long silence: fully decayed back to the prior...
+        assert_eq!(e.expected(0, 1, 100.0), 0.100);
+        // ...a bare liveness touch must keep it there, not resurrect 1.5 s.
+        e.touch(1, 100.0);
+        assert_eq!(e.expected(0, 1, 100.0), 0.100);
+        assert_eq!(e.expected(0, 1, 101.0), 0.100);
+        // And a fresh real sample restarts from the prior anchor, not from
+        // the expired penalty.
+        e.observe_rtt(1, 0.3, 101.0);
+        let after = e.expected(0, 1, 101.0);
+        assert!(after < 0.3, "stale penalty resurrected: {after}");
+    }
+
+    #[test]
+    fn timeout_penalty_dominates_prior() {
+        let mut e = est();
+        for _ in 0..3 {
+            e.observe_timeout(1, 3.0, 0.0);
+        }
+        // 3 s timeout floor -> one-way >= 1.5 s; after three penalties the
+        // region scores at least 10x its 0.1 s prior.
+        assert!(e.expected(0, 1, 0.0) > 1.0);
+        // Intra-region estimates untouched.
+        assert_eq!(e.expected(0, 0, 0.0), 0.005);
+    }
+
+    #[test]
+    fn steady_observations_do_not_churn_version() {
+        let mut e = est();
+        e.observe_rtt(1, 0.2, 0.0);
+        let v = e.version();
+        // Identical samples leave the EWMA in place: no further bumps.
+        for k in 0..50 {
+            e.observe_rtt(1, 0.2, k as f64);
+        }
+        assert_eq!(e.version(), v, "steady estimates must not churn caches");
+        // A big swing bumps immediately.
+        e.observe_timeout(1, 3.0, 60.0);
+        assert!(e.version() > v);
+    }
+
+    #[test]
+    fn unknown_region_scores_conservative_not_region_zero() {
+        let e = est();
+        // Garbage region tag: worst own-row prior (0.100), NOT region 0's
+        // cosy 0.005 intra latency.
+        assert_eq!(e.expected(0, 99, 0.0), 0.100);
+        assert_eq!(e.conservative(), 0.100);
+    }
+
+    #[test]
+    fn share_only_fresh_direct_rows_and_merge_is_weaker() {
+        let mut e = est();
+        e.observe_rtt(1, 1.0, 0.0);
+        let shared = e.share(0.0);
+        assert_eq!(shared.len(), 1);
+        assert_eq!((shared[0].0, shared[0].1), (0, 1));
+        // Stale direct data (past half the decay window) stops being shared.
+        assert!(e.share(31.0).is_empty());
+
+        // A same-region peer merges the summary as an indirect observation…
+        let mut other =
+            LatencyEstimator::new(0, two_region_prior(), LatencyConfig::default());
+        other.merge(&shared, 0.0);
+        let merged = other.expected(0, 1, 0.0);
+        assert!(merged > 0.100, "indirect evidence must move the estimate");
+        assert!(
+            merged < e.expected(0, 1, 0.0),
+            "indirect evidence must count less than direct"
+        );
+        // …but never re-shares it (no gossip echo chamber).
+        assert!(other.share(0.0).is_empty());
+
+        // Fresh direct measurements outrank hearsay.
+        let mut firsthand =
+            LatencyEstimator::new(0, two_region_prior(), LatencyConfig::default());
+        firsthand.observe_rtt(1, 0.2, 0.0);
+        let before = firsthand.expected(0, 1, 0.0);
+        firsthand.merge(&[(0, 1, 2.0)], 1.0);
+        assert_eq!(firsthand.expected(0, 1, 1.0), before);
+    }
+
+    #[test]
+    fn disabled_estimator_freezes_at_prior() {
+        let cfg = LatencyConfig { enabled: false, ..Default::default() };
+        let mut e = LatencyEstimator::new(0, two_region_prior(), cfg);
+        e.observe_rtt(1, 5.0, 0.0);
+        e.observe_timeout(1, 3.0, 1.0);
+        e.merge(&[(0, 1, 2.0)], 2.0);
+        assert_eq!(e.expected(0, 1, 3.0), 0.100, "static matrix baseline");
+        assert_eq!(e.version(), 0);
+        assert!(e.share(3.0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn invalid_alpha_panics() {
+        LatencyConfig { alpha: 0.0, ..Default::default() }.validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "region 5 outside")]
+    fn out_of_range_home_region_panics() {
+        LatencyEstimator::new(5, two_region_prior(), LatencyConfig::default());
+    }
+}

@@ -30,6 +30,18 @@
 //! `benches/geo_scale.rs` for the three-continent scenario with a
 //! mid-run trans-continental partition.
 //!
+//! Dispatch scores peers with **live measured latency**, not the static
+//! matrix: the [`latency`] module keeps per-region-pair EWMA estimates fed
+//! by probe→reply RTTs, gossip push→pull round trips and probe timeouts,
+//! decaying back to the pristine expected-latency prior when evidence goes
+//! stale. Nodes piggyback their directly measured rows on gossip deltas so
+//! regions with no direct traffic still converge. The pristine
+//! `Topology::expected_latency_matrix` is now only the estimator's
+//! cold-start prior; a live partition or degrade reroutes dispatch within
+//! a few gossip intervals (`benches/geo_scale.rs` reroute scenario), which
+//! the frozen-prior baseline (`latency_estimation.enabled = false`)
+//! demonstrably does not.
+//!
 //! ## Fleet scale
 //!
 //! The event loop is sized for 1000-node fleets: membership gossip ships
@@ -49,6 +61,7 @@ pub mod crypto;
 pub mod duel;
 pub mod gametheory;
 pub mod gossip;
+pub mod latency;
 pub mod ledger;
 pub mod metrics;
 pub mod net;

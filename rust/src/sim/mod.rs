@@ -15,6 +15,7 @@ use crate::coordinator::{Action, Event, LedgerManager, Node};
 use crate::crypto::{KeyStore, NodeKey};
 use crate::duel::DuelStats;
 use crate::gossip::GossipConfig;
+use crate::latency::LatencyConfig;
 use crate::ledger::{Block, CreditOp, OpReason, SharedLedger};
 use crate::metrics::{Recorder, TimeSeries};
 use crate::policy::{NodePolicy, SystemPolicy};
@@ -46,6 +47,10 @@ pub struct WorldConfig {
     /// Geo-distributed WAN structure: regions, link matrix, node placement
     /// and scheduled partitions. `None` = flat single-region network.
     pub topology: Option<Topology>,
+    /// Live latency estimation knobs (EWMA alpha, staleness decay, prior
+    /// weight, summary share rate). `enabled = false` freezes dispatch on
+    /// the static expected-latency matrix — the pre-estimator baseline.
+    pub latency_estimation: LatencyConfig,
     /// Node pump period (gossip rounds, timeout scans).
     pub tick_interval: f64,
     /// Period for sampling per-node credit totals (Figure 6 curves);
@@ -62,6 +67,7 @@ impl Default for WorldConfig {
             ledger: LedgerMode::Shared,
             net_latency: (0.02, 0.08),
             topology: None,
+            latency_estimation: LatencyConfig::default(),
             tick_interval: 1.0,
             credit_sample_interval: 5.0,
         }
@@ -90,6 +96,7 @@ impl WorldConfig {
             "WorldConfig.credit_sample_interval must be >= 0, got {}",
             self.credit_sample_interval
         );
+        self.latency_estimation.validate();
     }
 }
 
@@ -193,6 +200,10 @@ pub struct World {
     /// Queue entries processed by `run_until` (events/sec denominator for
     /// the perf-tracking benches).
     pub events_processed: u64,
+    /// Dispatch-pressure counters: Probe + Delegate sends per
+    /// (origin region, destination region), row-major — the reroute bench
+    /// windows over these to prove a partitioned region is shed.
+    dispatch_matrix: Vec<u64>,
 }
 
 impl World {
@@ -274,11 +285,13 @@ impl World {
                 0.0,
             );
             // Geo placement: tag the node with its region and hand it the
-            // expected-latency matrix so `latency_penalty` can bite.
+            // pristine expected-latency matrix as the live estimator's
+            // cold-start prior so `latency_penalty` can bite.
             if geo {
                 node.set_locality(
                     topology.region_of(i) as u32,
                     latency_est.clone(),
+                    cfg.latency_estimation,
                 );
             }
             // Bootstrap membership: everyone knows everyone's address (and
@@ -306,6 +319,7 @@ impl World {
             nodes.push(node);
         }
 
+        let num_regions = topology.num_regions();
         let mut world = World {
             cfg: cfg.clone(),
             nodes,
@@ -326,6 +340,7 @@ impl World {
             gossip_bytes_sent: 0,
             messages_dropped: 0,
             events_processed: 0,
+            dispatch_matrix: vec![0; num_regions * num_regions],
         };
 
         // Arrival traces.
@@ -448,6 +463,16 @@ impl World {
                         self.gossip_messages_sent += 1;
                         self.gossip_bytes_sent += bytes as u64;
                     }
+                    if matches!(
+                        msg,
+                        crate::coordinator::Message::Probe { .. }
+                            | crate::coordinator::Message::Delegate { .. }
+                    ) {
+                        let nr = self.topology.num_regions();
+                        let a = self.topology.region_of(from);
+                        let b = self.topology.region_of(to.0 as usize);
+                        self.dispatch_matrix[a * nr + b] += 1;
+                    }
                     match self.sample_delay(from, to.0 as usize, bytes) {
                         Some(lat) => {
                             let ev =
@@ -511,6 +536,13 @@ impl World {
     /// The WAN structure this world routes through.
     pub fn topology(&self) -> &Topology {
         &self.topology
+    }
+
+    /// Probe + Delegate messages sent so far from region `a` to region `b`
+    /// — the dispatch-pressure counter. Snapshot before/after `run_until`
+    /// stages to window delegation over time (the reroute scenario does).
+    pub fn dispatch_sends(&self, a: usize, b: usize) -> u64 {
+        self.dispatch_matrix[a * self.topology.num_regions() + b]
     }
 
     /// Per-region user-request summary keyed by *origin* region:
@@ -812,6 +844,22 @@ mod tests {
         assert!(w.gossip_messages_sent <= w.messages_sent);
         assert!(w.gossip_bytes_sent <= w.bytes_sent);
         assert!(w.events_processed > 0);
+    }
+
+    #[test]
+    fn dispatch_counters_track_probe_and_delegate_sends() {
+        // Single-region world: every Probe/Delegate lands in (0, 0), and
+        // the counter moves only when delegation traffic exists.
+        let mut setups = setup_uniform(3, 2.0);
+        setups[0].policy.target_utilization = 0.0;
+        setups[0].policy.offload_freq = 1.0;
+        let mut w = World::new(WorldConfig::default(), setups);
+        assert_eq!(w.dispatch_sends(0, 0), 0);
+        w.run_until(200.0);
+        assert!(
+            w.dispatch_sends(0, 0) > 0,
+            "an always-offloading node sent no probes"
+        );
     }
 
     #[test]

@@ -212,6 +212,12 @@ impl Topology {
     /// Long-run expected one-way latency between every region pair, from the
     /// *pristine* link profiles (a static estimate — dispatch policies do
     /// not get oracle knowledge of live partitions or degradations).
+    ///
+    /// Since the live estimator landed (`crate::latency`) this matrix is
+    /// only the **cold-start prior**: dispatch scores peers with measured
+    /// EWMA estimates seeded from it, and decays back to it when
+    /// observations go stale. Nothing on the request path reads it
+    /// directly any more.
     pub fn expected_latency_matrix(&self) -> Vec<Vec<f64>> {
         let n = self.regions.len();
         (0..n)
@@ -228,8 +234,8 @@ impl Topology {
     pub fn apply_event(&mut self, idx: usize) {
         let ev = self.events[idx];
         let n = self.regions.len();
-        // An intra-region event (a == b) names one link slot; applying the
-        // mirrored direction too would square degrade factors.
+        // An intra-region event (a == b) names one link slot — don't apply
+        // the mirrored direction to the same slot twice.
         let mut directions = vec![(ev.a, ev.b)];
         if ev.a != ev.b {
             directions.push((ev.b, ev.a));
@@ -238,11 +244,19 @@ impl Topology {
             let i = a * n + b;
             match ev.change {
                 LinkChange::Degrade { latency_factor, bandwidth_factor } => {
+                    // Degrade factors are relative to the *pristine*
+                    // profile, not the current one: re-applying a "3x
+                    // congestion" event re-asserts 3x, it does not compound
+                    // to 9x (schedule a single event with the product to
+                    // stack severities). The partitioned flag is left
+                    // alone — degrading a partitioned link must not
+                    // silently heal it.
+                    let base = self.base[i];
                     let l = &mut self.links[i];
-                    l.latency.0 *= latency_factor;
-                    l.latency.1 *= latency_factor;
-                    l.jitter *= latency_factor;
-                    l.bandwidth *= bandwidth_factor;
+                    l.latency.0 = base.latency.0 * latency_factor;
+                    l.latency.1 = base.latency.1 * latency_factor;
+                    l.jitter = base.jitter * latency_factor;
+                    l.bandwidth = base.bandwidth * bandwidth_factor;
                 }
                 LinkChange::Partition => self.links[i].partitioned = true,
                 LinkChange::Heal => self.links[i] = self.base[i],
@@ -589,6 +603,58 @@ mod tests {
         let l = topo.link(0, 1);
         assert!((l.latency.0 - 0.040).abs() < 1e-12);
         assert!((l.latency.1 - 0.050).abs() < 1e-12);
+    }
+
+    #[test]
+    fn repeated_degrades_do_not_compound() {
+        // Degrade semantics are factor-vs-pristine: two "3x congestion"
+        // events leave the link at 3x, not 9x, and a degrade on a
+        // partitioned link does not heal the partition.
+        let mut topo = Topology::builder()
+            .region("a")
+            .region("b")
+            .link(
+                "a",
+                "b",
+                LinkProfile::new(0.040, 0.050)
+                    .with_jitter(0.004)
+                    .with_bandwidth_mbps(400.0),
+            )
+            .event(
+                "a",
+                "b",
+                1.0,
+                LinkChange::Degrade { latency_factor: 3.0, bandwidth_factor: 0.5 },
+            )
+            .event(
+                "a",
+                "b",
+                2.0,
+                LinkChange::Degrade { latency_factor: 3.0, bandwidth_factor: 0.5 },
+            )
+            .event("a", "b", 3.0, LinkChange::Partition)
+            .event(
+                "a",
+                "b",
+                4.0,
+                LinkChange::Degrade { latency_factor: 2.0, bandwidth_factor: 1.0 },
+            )
+            .build();
+        topo.apply_event(0);
+        topo.apply_event(1);
+        let l = *topo.link(0, 1);
+        assert!((l.latency.0 - 0.120).abs() < 1e-12, "got {}", l.latency.0);
+        assert!((l.latency.1 - 0.150).abs() < 1e-12);
+        assert!((l.jitter - 0.012).abs() < 1e-12);
+        assert!((l.bandwidth - 0.5 * 400.0 * 1e6 / 8.0).abs() < 1e-3);
+        // A later degrade re-expresses severity vs. pristine…
+        topo.apply_event(2);
+        topo.apply_event(3);
+        let l = *topo.link(0, 1);
+        assert!((l.latency.0 - 0.080).abs() < 1e-12);
+        assert!((l.bandwidth - 400.0 * 1e6 / 8.0).abs() < 1e-3);
+        // …and does not quietly heal a partition.
+        assert!(l.partitioned, "degrade must not heal a partition");
     }
 
     #[test]

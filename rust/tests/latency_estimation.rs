@@ -1,0 +1,243 @@
+//! Integration tests for live latency estimation: dispatch must shed a
+//! partitioned (or drastically degraded) region within a few gossip
+//! intervals of the event and re-admit it after the heal — and the static
+//! expected-latency-matrix baseline (`latency_estimation.enabled = false`)
+//! must demonstrably *not* shed it.
+//!
+//! Gossip liveness aging also eventually sheds fully partitioned peers, so
+//! these scenarios pin `suspect_after` far beyond the outage: whatever
+//! rerouting happens is the estimator's doing alone.
+
+use wwwserve::backend::Profile;
+use wwwserve::config::parse_experiment;
+use wwwserve::policy::NodePolicy;
+use wwwserve::sim::{NodeSetup, World, WorldConfig};
+use wwwserve::topology::{three_region_wan, LinkChange, LinkProfile, Topology};
+use wwwserve::types::CREDIT;
+use wwwserve::workload::{Generator, LengthDist, Phase};
+use wwwserve::NodeId;
+
+fn lengths() -> LengthDist {
+    LengthDist { output_mean: 900.0, output_sigma: 0.5, ..Default::default() }
+}
+
+/// One always-delegating requester plus two servers per region; node order
+/// matches the contiguous region placement of the topology builders.
+fn reroute_setups(regions: usize, horizon: f64) -> Vec<NodeSetup> {
+    let mut setups = Vec::new();
+    for region in 0..regions {
+        let requester_id = NodeId((region * 3) as u32);
+        setups.push(
+            NodeSetup::new(
+                Profile::test(40.0, 4),
+                NodePolicy {
+                    latency_penalty: 50.0,
+                    ..NodePolicy::requester_only()
+                },
+            )
+            .with_generator(
+                Generator::new(
+                    requester_id,
+                    vec![Phase::new(0.0, horizon, 1.0)],
+                )
+                .with_lengths(lengths()),
+            ),
+        );
+        for _ in 0..2 {
+            setups.push(NodeSetup::new(
+                Profile::test(45.0, 24),
+                NodePolicy {
+                    stake: 20 * CREDIT,
+                    accept_freq: 1.0,
+                    latency_penalty: 50.0,
+                    ..Default::default()
+                },
+            ));
+        }
+    }
+    setups
+}
+
+struct Windowed {
+    pre: u64,
+    part: u64,
+    recovered: u64,
+}
+
+/// Run the 3-region partition scenario (us<->asia down 100s..250s) and
+/// window the us<->asia dispatch sends: before the partition, after a
+/// 20-gossip-interval convergence grace, and after the heal plus a
+/// 60-second re-admission grace.
+fn run_partition(live: bool) -> Windowed {
+    const T_PART: f64 = 100.0;
+    const T_CONVERGED: f64 = 120.0; // K = 20 one-second gossip intervals
+    const T_HEAL: f64 = 250.0;
+    const T_READMIT: f64 = 310.0;
+    const HORIZON: f64 = 400.0;
+    let topo = three_region_wan(3)
+        .event("us", "asia", T_PART, LinkChange::Partition)
+        .event("us", "asia", T_HEAL, LinkChange::Heal)
+        .build();
+    let mut cfg = WorldConfig { seed: 77, topology: Some(topo), ..Default::default() };
+    cfg.system.duel_rate = 0.0;
+    // Liveness aging must never shed the far side during the outage.
+    cfg.gossip.suspect_after = 1e4;
+    cfg.latency_estimation.enabled = live;
+    // Penalized estimates must not decay back to the prior mid-outage.
+    cfg.latency_estimation.decay_after = 500.0;
+    let mut w = World::new(cfg, reroute_setups(3, HORIZON));
+    let cross = |w: &World| w.dispatch_sends(0, 2) + w.dispatch_sends(2, 0);
+
+    w.run_until(T_PART);
+    let pre = cross(&w);
+    w.run_until(T_CONVERGED);
+    let at_converged = cross(&w);
+    w.run_until(T_HEAL);
+    let part = cross(&w) - at_converged;
+    w.run_until(T_READMIT);
+    let at_readmit = cross(&w);
+    w.run_until(HORIZON);
+    let recovered = cross(&w) - at_readmit;
+    assert!(w.messages_dropped > 0, "partition dropped no traffic");
+    Windowed { pre, part, recovered }
+}
+
+#[test]
+fn partition_is_shed_within_k_intervals_and_readmitted_after_heal() {
+    let live = run_partition(true);
+    let frozen = run_partition(false);
+
+    // Both runs delegate across the healthy us<->asia link beforehand.
+    assert!(live.pre > 0, "live run never delegated cross-region");
+    assert!(frozen.pre > 0, "baseline never delegated cross-region");
+
+    // The static matrix keeps pouring probes into the dead link for the
+    // whole outage (liveness aging is pinned off) ...
+    assert!(
+        frozen.part >= 10,
+        "static baseline unexpectedly shed the partitioned region \
+         ({} cross sends in the outage window)",
+        frozen.part
+    );
+    // ... while the live estimator sheds it within K = 20 gossip
+    // intervals: timeout penalties crush the region's selection weight.
+    assert!(
+        live.part <= 10,
+        "live estimation kept delegating into the partition: {} sends",
+        live.part
+    );
+    assert!(
+        live.part * 3 <= frozen.part,
+        "live estimation barely better than the static baseline: \
+         live {} vs static {}",
+        live.part,
+        frozen.part
+    );
+
+    // After the heal, gossip round trips measure the recovered link and
+    // dispatch re-admits the region.
+    assert!(
+        live.recovered > 0,
+        "live estimation never re-admitted the healed region"
+    );
+}
+
+/// A severe degrade (not a partition): heartbeats still flow, so liveness
+/// aging never fires at any `suspect_after` — only measured latency can
+/// reroute. The frozen baseline keeps its cross-region share forever.
+#[test]
+fn degrade_reroutes_live_dispatch_but_not_static_baseline() {
+    const T_DEG: f64 = 100.0;
+    const T_CONVERGED: f64 = 130.0;
+    const HORIZON: f64 = 300.0;
+    let run = |live: bool| -> (u64, u64) {
+        let topo = Topology::builder()
+            .region("west")
+            .region("east")
+            .default_intra(
+                LinkProfile::new(0.0005, 0.002).with_bandwidth_mbps(10_000.0),
+            )
+            .link(
+                "west",
+                "east",
+                LinkProfile::new(0.045, 0.055).with_bandwidth_mbps(400.0),
+            )
+            .nodes("west", 3)
+            .nodes("east", 3)
+            .event(
+                "west",
+                "east",
+                T_DEG,
+                LinkChange::Degrade {
+                    latency_factor: 40.0,
+                    bandwidth_factor: 1.0,
+                },
+            )
+            .build();
+        let mut cfg =
+            WorldConfig { seed: 41, topology: Some(topo), ..Default::default() };
+        cfg.system.duel_rate = 0.0;
+        cfg.gossip.suspect_after = 1e4;
+        cfg.latency_estimation.enabled = live;
+        cfg.latency_estimation.decay_after = 500.0;
+        let mut w = World::new(cfg, reroute_setups(2, HORIZON));
+        let cross = |w: &World| w.dispatch_sends(0, 1) + w.dispatch_sends(1, 0);
+        w.run_until(T_CONVERGED);
+        let before = cross(&w);
+        w.run_until(HORIZON);
+        (before, cross(&w) - before)
+    };
+    let (live_pre, live_deg) = run(true);
+    let (frozen_pre, frozen_deg) = run(false);
+    assert!(live_pre > 0 && frozen_pre > 0, "no cross traffic at all");
+    assert!(
+        frozen_deg >= 15,
+        "static baseline should keep delegating over the degraded link, \
+         sent only {frozen_deg}"
+    );
+    assert!(
+        live_deg * 3 <= frozen_deg,
+        "live estimation failed to shed the degraded link: \
+         live {live_deg} vs static {frozen_deg}"
+    );
+}
+
+/// The declarative `latency_estimation` block drives a real world end to
+/// end, and the frozen baseline is reachable from config.
+#[test]
+fn latency_estimation_config_runs_end_to_end() {
+    let text = r#"{
+        "seed": 5,
+        "horizon": 60,
+        "latency_estimation": { "alpha": 0.4, "decay_after": 45,
+                                "share_every": 2 },
+        "topology": {
+            "regions": ["us", "eu"],
+            "intra": { "latency": [0.001, 0.004] },
+            "inter": { "latency": [0.040, 0.080] },
+            "fleet": [
+                { "region": "us", "count": 3,
+                  "node": { "policy": { "accept_freq": 1.0,
+                                        "latency_penalty": 20.0 } },
+                  "schedule": [ { "from": 0, "to": 60,
+                                  "inter_arrival": 3 } ],
+                  "lengths": { "output_mean": 600, "output_sigma": 0.5 } },
+                { "region": "eu", "count": 3,
+                  "node": { "policy": { "accept_freq": 1.0,
+                                        "latency_penalty": 20.0 } } }
+            ]
+        }
+    }"#;
+    let e = parse_experiment(text).unwrap();
+    assert!((e.world.latency_estimation.alpha - 0.4).abs() < 1e-12);
+    let mut w = World::new(e.world, e.setups);
+    w.run_until(e.horizon + 200.0);
+    // Estimators were installed and fed: at least one node's us->eu
+    // estimate moved off (or validated) the prior, and the run completed
+    // real work.
+    assert!(w.recorder.len() > 5, "workload barely ran");
+    let est = w.node(0).latency_estimator().expect("estimator installed");
+    assert!(est.config().enabled);
+    assert!((est.config().alpha - 0.4).abs() < 1e-12);
+    assert!(est.version() > 0, "no RTT observation ever landed");
+}
