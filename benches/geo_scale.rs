@@ -22,6 +22,11 @@
 //!    dead link for the whole outage. Asserted, and written to
 //!    `BENCH_geo_scale.json` so the SLO/latency numbers join the per-PR
 //!    perf trajectory.
+//! 5. **Mixed-policy fleet** — one scenario, three provider personalities
+//!    (`default` / `greedy_local` / `selective`) plus `requester_only`
+//!    consumers, all selected via the declarative `topology.fleet`
+//!    `policy` key; reports per-policy-group SLO attainment and served
+//!    counts (asserted structural + behavioural invariants).
 //!
 //! `--smoke` (or `GEO_SCALE_SMOKE=1`) runs single-iteration timings — the
 //! CI tier.
@@ -265,6 +270,259 @@ fn run_reroute(live: bool) -> RerouteRun {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Part 5: mixed-policy fleet (heterogeneous participation populations)
+// ---------------------------------------------------------------------------
+
+/// Per-fleet-group outcome of the mixed-policy run. Requester groups carry
+/// the user-facing SLO numbers; provider groups carry the served counts.
+struct GroupStat {
+    label: String,
+    policy: &'static str,
+    nodes: usize,
+    completed: usize,
+    slo: f64,
+    p99: f64,
+    delegated_in: u64,
+    delegated_out: u64,
+    served_local: u64,
+}
+
+/// One scenario, three provider personalities: us servers run the classic
+/// `default` policy, eu servers are `greedy_local` sinks (serve own users
+/// locally, hoover up delegations), asia servers are `selective`
+/// cherry-pickers (short jobs only, strict headroom) — all selected
+/// declaratively via the `topology.fleet` `policy` key, one requester
+/// population per region driving load into the market.
+fn mixed_policy_config() -> String {
+    let requester = |region: &str| {
+        format!(
+            r#"{{ "region": "{region}", "count": 1,
+                 "policy": "requester_only",
+                 "name": "{region}-requesters",
+                 "node": {{
+                   "profile": {{ "prefill_tok_s": 2000, "decode_tok_s": 40,
+                                 "max_agg_decode_tok_s": 160,
+                                 "max_batch": 4 }},
+                   "policy": {{ "latency_penalty": 15.0 }} }},
+                 "schedule": [ {{ "from": 0, "to": {HORIZON},
+                                  "inter_arrival": 2.0 }} ],
+                 "lengths": {{ "output_mean": 500,
+                               "output_sigma": 0.5 }} }}"#
+        )
+    };
+    let servers = |region: &str, policy: &str, own_load: bool| {
+        // Provider groups optionally carry a light user load of their own
+        // — the greedy_local group gets one so "serves its own users
+        // locally, never offloads" is observable, not vacuous.
+        let load = if own_load {
+            format!(
+                r#""schedule": [ {{ "from": 0, "to": {HORIZON},
+                                   "inter_arrival": 10.0 }} ],
+                   "lengths": {{ "output_mean": 400,
+                                 "output_sigma": 0.5 }},"#
+            )
+        } else {
+            String::new()
+        };
+        format!(
+            r#"{{ "region": "{region}", "count": 2, "policy": "{policy}",
+                 "name": "{region}-{policy}", {load}
+                 "node": {{
+                   "profile": {{ "prefill_tok_s": 4000, "decode_tok_s": 45,
+                                 "max_agg_decode_tok_s": 1080,
+                                 "max_batch": 24 }},
+                   "policy": {{ "stake": 20, "accept_freq": 1.0,
+                                "latency_penalty": 15.0 }} }} }}"#
+        )
+    };
+    format!(
+        r#"{{
+            "seed": {SEED},
+            "horizon": {HORIZON},
+            "system": {{ "duel_rate": 0.0 }},
+            "topology": {{
+                "regions": ["us", "eu", "asia"],
+                "intra": {{ "latency": [0.002, 0.010] }},
+                "inter": {{ "latency": [0.040, 0.080], "jitter": 0.005 }},
+                "fleet": [ {}, {}, {}, {}, {}, {} ]
+            }}
+        }}"#,
+        requester("us"),
+        servers("us", "default", false),
+        requester("eu"),
+        servers("eu", "greedy_local", true),
+        requester("asia"),
+        servers("asia", "selective", false),
+    )
+}
+
+fn run_mixed_policy() -> (Vec<GroupStat>, f64) {
+    let e = wwwserve::config::parse_experiment(&mixed_policy_config())
+        .expect("mixed-policy config parses");
+    let mut w = World::new(e.world.clone(), e.setups.clone());
+    w.run_until(HORIZON + DRAIN);
+
+    // Group nodes by fleet label (declaration order preserved).
+    let mut labels: Vec<String> = Vec::new();
+    let mut members: Vec<Vec<usize>> = Vec::new();
+    for (i, s) in e.setups.iter().enumerate() {
+        let label = s.group.clone().unwrap_or_else(|| "ungrouped".into());
+        match labels.iter().position(|l| *l == label) {
+            Some(g) => members[g].push(i),
+            None => {
+                labels.push(label);
+                members.push(vec![i]);
+            }
+        }
+    }
+    let stats = labels
+        .iter()
+        .zip(&members)
+        .map(|(label, nodes)| {
+            let mut lat: Vec<f64> = Vec::new();
+            let mut met = 0usize;
+            for rec in w.recorder.all().iter().filter(|r| !r.synthetic) {
+                let origin = rec.origin.0 as usize;
+                if nodes.contains(&origin) {
+                    met += rec.slo_met() as usize;
+                    lat.push(rec.latency());
+                }
+            }
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let n = lat.len();
+            let p99 = if n == 0 {
+                0.0
+            } else {
+                lat[((n - 1) as f64 * 0.99).round() as usize]
+            };
+            GroupStat {
+                label: label.clone(),
+                policy: w.node(nodes[0]).participation().name(),
+                nodes: nodes.len(),
+                completed: n,
+                slo: if n == 0 { 0.0 } else { met as f64 / n as f64 },
+                p99,
+                delegated_in: nodes
+                    .iter()
+                    .map(|i| w.node(*i).stats.delegated_in)
+                    .sum(),
+                delegated_out: nodes
+                    .iter()
+                    .map(|i| w.node(*i).stats.delegated_out)
+                    .sum(),
+                served_local: nodes
+                    .iter()
+                    .map(|i| w.node(*i).stats.served_local)
+                    .sum(),
+            }
+        })
+        .collect();
+    (stats, w.recorder.slo_attainment())
+}
+
+fn mixed_policy_part() -> Json {
+    let (groups, overall) = run_mixed_policy();
+    println!("\n## Mixed-policy fleet (per-policy-group SLO)\n");
+    let mut t = Table::new(&[
+        "group", "policy", "nodes", "completed", "SLO", "p99",
+        "delegated-in", "delegated-out", "served-local",
+    ]);
+    for g in &groups {
+        t.row(vec![
+            g.label.clone(),
+            g.policy.to_string(),
+            format!("{}", g.nodes),
+            format!("{}", g.completed),
+            format!("{:.3}", g.slo),
+            format!("{:.1}", g.p99),
+            format!("{}", g.delegated_in),
+            format!("{}", g.delegated_out),
+            format!("{}", g.served_local),
+        ]);
+    }
+    t.print();
+    println!("overall SLO: {overall:.3}");
+
+    // Structural + behavioural invariants of the heterogeneous fleet.
+    let by_policy = |p: &str| -> Vec<&GroupStat> {
+        groups.iter().filter(|g| g.policy == p).collect()
+    };
+    let distinct: std::collections::BTreeSet<&str> =
+        groups.iter().map(|g| g.policy).collect();
+    assert!(
+        distinct.len() >= 3,
+        "mixed fleet must mix policies: {distinct:?}"
+    );
+    for g in by_policy("requester_only") {
+        assert!(
+            g.completed > 0,
+            "requester group {} completed nothing",
+            g.label
+        );
+        assert_eq!(
+            g.delegated_in, 0,
+            "requester group {} served delegated work",
+            g.label
+        );
+    }
+    let default_served: u64 =
+        by_policy("default").iter().map(|g| g.delegated_in).sum();
+    let greedy_served: u64 =
+        by_policy("greedy_local").iter().map(|g| g.delegated_in).sum();
+    assert!(default_served > 0, "default servers never served");
+    assert!(greedy_served > 0, "greedy_local servers never served");
+    for g in by_policy("greedy_local") {
+        // The greedy group carries its own user load: it must complete it
+        // strictly locally — zero successful offloads out of the group.
+        assert!(
+            g.completed > 0 && g.served_local > 0,
+            "greedy_local group {} ran no own load",
+            g.label
+        );
+        assert_eq!(
+            g.delegated_out, 0,
+            "greedy_local group {} offloaded its own users",
+            g.label
+        );
+    }
+    assert!(overall > 0.0, "mixed fleet met no SLOs at all");
+
+    Json::obj(vec![
+        ("overall_slo", Json::num(overall)),
+        (
+            "groups",
+            Json::Arr(
+                groups
+                    .iter()
+                    .map(|g| {
+                        Json::obj(vec![
+                            ("group", Json::str(g.label.clone())),
+                            ("policy", Json::str(g.policy)),
+                            ("nodes", Json::num(g.nodes as f64)),
+                            ("completed", Json::num(g.completed as f64)),
+                            ("slo", Json::num(g.slo)),
+                            ("p99_s", Json::num(g.p99)),
+                            (
+                                "delegated_in",
+                                Json::num(g.delegated_in as f64),
+                            ),
+                            (
+                                "delegated_out",
+                                Json::num(g.delegated_out as f64),
+                            ),
+                            (
+                                "served_local",
+                                Json::num(g.served_local as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 fn regions_json(regions: &[(String, f64, f64, usize)]) -> Json {
     Json::Arr(
         regions
@@ -422,6 +680,10 @@ fn main() {
         live.recovered
     );
 
+    // Part 5: heterogeneous participation populations, selected per fleet
+    // group via the declarative `policy` key.
+    let mixed = mixed_policy_part();
+
     // Machine-readable trajectory: the per-region SLO/p99 of every part
     // plus the reroute window counts (CI uploads this artifact).
     let report = Json::obj(vec![
@@ -459,6 +721,7 @@ fn main() {
                 ("static", reroute_json(&frozen)),
             ]),
         ),
+        ("mixed_policy", mixed),
     ]);
     let path = "BENCH_geo_scale.json";
     write_json_report(path, &report).expect("write bench json");

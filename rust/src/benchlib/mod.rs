@@ -7,6 +7,8 @@
 //! ([`write_json_report`]) — the `BENCH_*.json` artifacts that let future
 //! PRs track perf regressions (see `benches/fleet_scale.rs`).
 
+pub mod perf_gate;
+
 use std::time::Instant;
 
 use crate::util::json::Json;

@@ -1,0 +1,221 @@
+//! Perf-trajectory gate: compare a freshly produced `BENCH_*.json`
+//! artifact against a committed baseline and fail on regression
+//! (ROADMAP follow-on: "track wall-clock events/sec across PRs from the
+//! artifact history").
+//!
+//! The gate matches runs by `(nodes, gossip)` key and checks:
+//!
+//! * `events_per_sec` — higher is better; fail when the current run drops
+//!   more than `tolerance` below the baseline (wall-clock noise is real on
+//!   shared CI runners, hence the generous default of 20%).
+//! * `gossip_bytes_per_round` — lower is better; fail when the current
+//!   run exceeds the baseline by more than `tolerance` (this one is
+//!   deterministic given the seed, so a trip is a genuine protocol
+//!   regression, not noise).
+//!
+//! A baseline with `"bootstrap": true` passes with a notice — that is how
+//! the gate ships before any machine has recorded real numbers: the first
+//! CI run prints the artifact to commit as `perf/fleet_scale.baseline.json`.
+//! Runs present on only one side are reported but never fail (smoke tiers
+//! measure a subset of the full-size sweep).
+
+use crate::util::json::Json;
+
+/// Outcome of one gate evaluation.
+#[derive(Debug, Default)]
+pub struct GateReport {
+    /// Human-readable per-check lines (pass and informational).
+    pub checked: Vec<String>,
+    /// Regressions — non-empty means the gate fails.
+    pub failures: Vec<String>,
+    /// The baseline was a placeholder; nothing was compared.
+    pub bootstrap: bool,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+fn runs(j: &Json) -> Vec<&Json> {
+    j.get("runs").as_arr().map(|a| a.iter().collect()).unwrap_or_default()
+}
+
+fn run_key(r: &Json) -> Option<(u64, String)> {
+    let nodes = r.get("nodes").as_f64()? as u64;
+    let mode = r.get("gossip").as_str()?.to_string();
+    Some((nodes, mode))
+}
+
+/// Compare `current` against `baseline` with a relative `tolerance`
+/// (e.g. 0.20 = fail on >20% regression).
+pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> GateReport {
+    let mut rep = GateReport::default();
+    if baseline.get("bootstrap").as_bool().unwrap_or(false) {
+        rep.bootstrap = true;
+        rep.checked.push(
+            "baseline is a bootstrap placeholder — nothing compared; \
+             commit the current artifact as the baseline to arm the gate"
+                .to_string(),
+        );
+        return rep;
+    }
+    let base_runs = runs(baseline);
+    let cur_runs = runs(current);
+    if cur_runs.is_empty() {
+        rep.failures.push("current report has no runs".to_string());
+        return rep;
+    }
+    let mut compared = 0usize;
+    for cur in &cur_runs {
+        let Some(key) = run_key(cur) else {
+            rep.failures
+                .push("current run missing nodes/gossip key".to_string());
+            continue;
+        };
+        let Some(base) = base_runs
+            .iter()
+            .find(|b| run_key(b).as_ref() == Some(&key))
+        else {
+            rep.checked.push(format!(
+                "n={} {}: no baseline counterpart (skipped)",
+                key.0, key.1
+            ));
+            continue;
+        };
+        compared += 1;
+        // events/sec: higher is better.
+        check_metric(
+            &mut rep,
+            &key,
+            "events_per_sec",
+            base.get("events_per_sec").as_f64(),
+            cur.get("events_per_sec").as_f64(),
+            tolerance,
+            true,
+        );
+        // gossip bytes/round: lower is better.
+        check_metric(
+            &mut rep,
+            &key,
+            "gossip_bytes_per_round",
+            base.get("gossip_bytes_per_round").as_f64(),
+            cur.get("gossip_bytes_per_round").as_f64(),
+            tolerance,
+            false,
+        );
+    }
+    if compared == 0 {
+        rep.failures.push(
+            "no current run matched any baseline run — wrong artifact?"
+                .to_string(),
+        );
+    }
+    rep
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_metric(
+    rep: &mut GateReport,
+    key: &(u64, String),
+    metric: &str,
+    base: Option<f64>,
+    cur: Option<f64>,
+    tolerance: f64,
+    higher_is_better: bool,
+) {
+    let label = format!("n={} {} {metric}", key.0, key.1);
+    let (Some(base), Some(cur)) = (base, cur) else {
+        rep.checked.push(format!("{label}: missing value (skipped)"));
+        return;
+    };
+    if !(base.is_finite() && cur.is_finite() && base > 0.0) {
+        rep.checked.push(format!("{label}: non-finite value (skipped)"));
+        return;
+    }
+    let (regressed, change) = if higher_is_better {
+        (cur < base * (1.0 - tolerance), cur / base - 1.0)
+    } else {
+        (cur > base * (1.0 + tolerance), cur / base - 1.0)
+    };
+    let line = format!(
+        "{label}: baseline {base:.1}, current {cur:.1} ({:+.1}%)",
+        change * 100.0
+    );
+    if regressed {
+        rep.failures.push(line);
+    } else {
+        rep.checked.push(line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(runs: &[(u64, &str, f64, f64)]) -> Json {
+        Json::obj(vec![(
+            "runs",
+            Json::Arr(
+                runs.iter()
+                    .map(|(n, mode, eps, gbpr)| {
+                        Json::obj(vec![
+                            ("nodes", Json::num(*n as f64)),
+                            ("gossip", Json::str(*mode)),
+                            ("events_per_sec", Json::num(*eps)),
+                            ("gossip_bytes_per_round", Json::num(*gbpr)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    #[test]
+    fn bootstrap_baseline_passes_with_notice() {
+        let base = Json::obj(vec![("bootstrap", Json::Bool(true))]);
+        let cur = report(&[(50, "delta", 1000.0, 500.0)]);
+        let rep = compare(&base, &cur, 0.2);
+        assert!(rep.passed());
+        assert!(rep.bootstrap);
+    }
+
+    #[test]
+    fn within_tolerance_passes_beyond_fails() {
+        let base = report(&[(50, "delta", 1000.0, 500.0)]);
+        // 15% slower events/sec, same bytes: passes at 20% tolerance.
+        let ok = report(&[(50, "delta", 850.0, 500.0)]);
+        assert!(compare(&base, &ok, 0.2).passed());
+        // 25% slower: fails.
+        let slow = report(&[(50, "delta", 750.0, 500.0)]);
+        let rep = compare(&base, &slow, 0.2);
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("events_per_sec"));
+        // 25% more gossip bytes/round: fails (lower is better).
+        let fat = report(&[(50, "delta", 1000.0, 625.1)]);
+        let rep = compare(&base, &fat, 0.2);
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("gossip_bytes_per_round"));
+        // Improvements never fail.
+        let fast = report(&[(50, "delta", 5000.0, 100.0)]);
+        assert!(compare(&base, &fast, 0.2).passed());
+    }
+
+    #[test]
+    fn unmatched_runs_skip_but_total_mismatch_fails() {
+        let base = report(&[(50, "delta", 1000.0, 500.0)]);
+        // Extra current sizes (full tier vs smoke baseline) are skipped.
+        let cur = report(&[
+            (50, "delta", 990.0, 500.0),
+            (500, "delta", 400.0, 9000.0),
+        ]);
+        assert!(compare(&base, &cur, 0.2).passed());
+        // Nothing in common at all: that is a wiring error, not a pass.
+        let other = report(&[(200, "full", 1.0, 1.0)]);
+        assert!(!compare(&base, &other, 0.2).passed());
+        // An empty current report always fails.
+        let empty = Json::obj(vec![("runs", Json::Arr(vec![]))]);
+        assert!(!compare(&base, &empty, 0.2).passed());
+    }
+}

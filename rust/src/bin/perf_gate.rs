@@ -1,0 +1,65 @@
+//! CI perf-trajectory gate: `perf_gate <current.json> <baseline.json>`.
+//!
+//! Compares a freshly produced `BENCH_*.json` artifact against the
+//! committed baseline (see `perf/`) and exits non-zero on a regression
+//! beyond the tolerance (`PERF_GATE_TOLERANCE`, default 0.20 = 20%).
+//! A `"bootstrap": true` baseline passes with instructions — commit the
+//! printed artifact to arm the gate.
+
+use wwwserve::benchlib::perf_gate::compare;
+use wwwserve::util::json::Json;
+
+fn load(path: &str) -> Json {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("perf_gate: cannot read {path}: {e}");
+            std::process::exit(2);
+        }
+    };
+    match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("perf_gate: cannot parse {path}: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let [current_path, baseline_path] = args.as_slice() else {
+        eprintln!("usage: perf_gate <current.json> <baseline.json>");
+        std::process::exit(2);
+    };
+    let tolerance = std::env::var("PERF_GATE_TOLERANCE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(0.20);
+    let current = load(current_path);
+    let baseline = load(baseline_path);
+    let rep = compare(&baseline, &current, tolerance);
+    println!(
+        "# perf gate: {current_path} vs {baseline_path} \
+         (tolerance {:.0}%)",
+        tolerance * 100.0
+    );
+    for line in &rep.checked {
+        println!("  ok   {line}");
+    }
+    for line in &rep.failures {
+        println!("  FAIL {line}");
+    }
+    if rep.bootstrap {
+        println!(
+            "\nbaseline is bootstrap-only: commit {current_path} as the \
+             baseline file to arm the gate."
+        );
+    }
+    if rep.passed() {
+        println!("\nperf gate passed");
+    } else {
+        println!("\nperf gate FAILED: >{:.0}% regression", tolerance * 100.0);
+        std::process::exit(1);
+    }
+}

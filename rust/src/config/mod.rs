@@ -22,7 +22,7 @@
 
 use crate::backend::{Gpu, ModelClass, Profile, ServingStack};
 use crate::latency::LatencyConfig;
-use crate::policy::{NodePolicy, SystemPolicy};
+use crate::policy::{NodePolicy, ParticipationKind, SystemPolicy};
 use crate::schedulers::Strategy;
 use crate::sim::{LedgerMode, NodeSetup, WorldConfig};
 use crate::topology::{LinkChange, LinkProfile, Topology};
@@ -40,6 +40,17 @@ pub enum ConfigError {
     Io(#[from] std::io::Error),
 }
 
+/// A scheduled availability change for one node, expanded from a fleet
+/// group's declarative `churn` block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    /// Node index (into `Experiment::setups`).
+    pub node: usize,
+    pub at: f64,
+    /// true = join (come online), false = leave.
+    pub join: bool,
+}
+
 /// A fully parsed experiment description.
 #[derive(Debug, Clone)]
 pub struct Experiment {
@@ -48,6 +59,11 @@ pub struct Experiment {
     pub strategy: Strategy,
     pub world: WorldConfig,
     pub setups: Vec<NodeSetup>,
+    /// Per-node join/leave schedule expanded from fleet `churn` blocks
+    /// (empty when no group declares churn). Informational: the same
+    /// schedule is carried in `world.churn`, which `sim::World::new`
+    /// installs automatically — no extra call site obligation.
+    pub churn: Vec<ChurnEvent>,
 }
 
 fn bad(msg: impl Into<String>) -> ConfigError {
@@ -95,8 +111,10 @@ fn parse_strategy(s: &str) -> Result<Strategy, ConfigError> {
     })
 }
 
-fn parse_policy(j: &Json) -> NodePolicy {
-    let d = NodePolicy::default();
+/// Parse the scalar policy knobs on top of `d` — the base defaults come
+/// from the node's participation kind, so e.g. a `requester_only` group
+/// gets stake 0 / accept 0 without spelling it out.
+fn parse_policy(j: &Json, d: NodePolicy) -> NodePolicy {
     NodePolicy {
         stake: j
             .get("stake")
@@ -309,14 +327,30 @@ fn parse_topology(
 /// first, fleet groups after, in declaration order; node ids follow that
 /// order. This is how `benches/fleet_scale.rs` stands up 1000-node worlds
 /// from a few lines of JSON.
+///
+/// Heterogeneous-fleet keys per group:
+///
+/// * `"policy": "<name>"` — a [`ParticipationKind`] name
+///   (`default` / `requester_only` / `greedy_local` / `selective`); the
+///   whole group runs that participation behaviour, so one scenario can
+///   mix policy populations.
+/// * `"name": "<label>"` — reporting label for per-policy-group summaries
+///   (defaults to `"<region>/<policy>"`).
+/// * `"start_offline": true` — the whole group starts offline.
+/// * `"churn": [ {"at": T, "action": "leave"|"join", "count": K}, ... ]` —
+///   scheduled availability changes. A `leave` takes down the K
+///   lowest-indexed currently-up nodes of the group, a `join` brings back
+///   the K lowest-indexed currently-down ones; over-subscribing either is
+///   a config error. Returned as the second element.
 fn expand_fleet(
     topology: &Json,
     explicit: Vec<Json>,
-) -> Result<Vec<Json>, ConfigError> {
+) -> Result<(Vec<Json>, Vec<ChurnEvent>), ConfigError> {
     let mut out = explicit;
+    let mut churn = Vec::new();
     let fleet = topology.get("fleet");
     if fleet.is_null() {
-        return Ok(out);
+        return Ok((out, churn));
     }
     let Some(groups) = fleet.as_arr() else {
         return Err(bad("topology.fleet must be an array of groups"));
@@ -348,8 +382,131 @@ fn expand_fleet(
                 template.insert(key.to_string(), g.get(key).clone());
             }
         }
+        // Participation policy for the whole group.
+        let policy_name = match g.get("policy") {
+            Json::Null => ParticipationKind::Default.name(),
+            p => {
+                let name = p.as_str().ok_or_else(|| {
+                    bad(format!(
+                        "fleet group {gi}: policy must be a participation \
+                         name string"
+                    ))
+                })?;
+                ParticipationKind::parse(name).ok_or_else(|| {
+                    bad(format!(
+                        "fleet group {gi}: unknown participation policy \
+                         '{name}'"
+                    ))
+                })?;
+                template
+                    .insert("participation".to_string(), Json::str(name));
+                name
+            }
+        };
+        // Reporting label.
+        let label = match g.get("name") {
+            Json::Null => format!("{region}/{policy_name}"),
+            n => n
+                .as_str()
+                .ok_or_else(|| {
+                    bad(format!("fleet group {gi}: name must be a string"))
+                })?
+                .to_string(),
+        };
+        template.insert("group".to_string(), Json::str(label));
+        // Whole-group initial availability: the group-level key wins, but
+        // a `start_offline` inside the node template counts too — churn
+        // validation must see what the per-node parse will actually do.
+        if g.get("start_offline").as_bool().unwrap_or(false) {
+            template.insert("start_offline".to_string(), Json::Bool(true));
+        }
+        let start_offline = template
+            .get("start_offline")
+            .and_then(|j| j.as_bool())
+            .unwrap_or(false);
+        let base = out.len();
         for _ in 0..count {
             out.push(Json::Obj(template.clone()));
+        }
+        churn.extend(parse_group_churn(
+            g.get("churn"),
+            gi,
+            base,
+            count,
+            start_offline,
+        )?);
+    }
+    Ok((out, churn))
+}
+
+/// Expand one group's `churn` array into per-node [`ChurnEvent`]s,
+/// validating that every entry is satisfiable given the group's
+/// availability at that time (events apply in time order; ties keep
+/// declaration order).
+fn parse_group_churn(
+    j: &Json,
+    gi: usize,
+    base: usize,
+    count: usize,
+    start_offline: bool,
+) -> Result<Vec<ChurnEvent>, ConfigError> {
+    if j.is_null() {
+        return Ok(Vec::new());
+    }
+    let arr = j.as_arr().ok_or_else(|| {
+        bad(format!("fleet group {gi}: churn must be an array"))
+    })?;
+    let mut entries = Vec::with_capacity(arr.len());
+    for (ei, e) in arr.iter().enumerate() {
+        let at = e.get("at").as_f64().ok_or_else(|| {
+            bad(format!("fleet group {gi}: churn[{ei}].at"))
+        })?;
+        if !(at.is_finite() && at >= 0.0) {
+            return Err(bad(format!(
+                "fleet group {gi}: churn[{ei}].at must be >= 0, got {at}"
+            )));
+        }
+        let join = match e.get("action").as_str() {
+            Some("join") => true,
+            Some("leave") => false,
+            other => {
+                return Err(bad(format!(
+                    "fleet group {gi}: churn[{ei}].action must be \
+                     join|leave, got {other:?}"
+                )))
+            }
+        };
+        let k = e.get("count").as_usize().unwrap_or(1);
+        if k == 0 || k > count {
+            return Err(bad(format!(
+                "fleet group {gi}: churn[{ei}].count must be in 1..={count}"
+            )));
+        }
+        entries.push((at, join, k, ei));
+    }
+    entries.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap().then(a.3.cmp(&b.3))
+    });
+    let mut up = vec![!start_offline; count];
+    let mut out = Vec::new();
+    for (at, join, k, ei) in entries {
+        let mut picked = 0usize;
+        for (i, slot) in up.iter_mut().enumerate() {
+            if picked == k {
+                break;
+            }
+            if *slot != join {
+                *slot = join;
+                picked += 1;
+                out.push(ChurnEvent { node: base + i, at, join });
+            }
+        }
+        if picked < k {
+            let action = if join { "join" } else { "leave" };
+            return Err(bad(format!(
+                "fleet group {gi}: churn[{ei}] asks to {action} {k} nodes \
+                 at t={at} but only {picked} are eligible"
+            )));
         }
     }
     Ok(out)
@@ -478,7 +635,7 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
             .ok_or_else(|| bad("'nodes' must be an array"))?
             .to_vec(),
     };
-    let nodes = expand_fleet(j.get("topology"), explicit)?;
+    let (nodes, churn) = expand_fleet(j.get("topology"), explicit)?;
     if nodes.is_empty() {
         return Err(bad(
             "no nodes: provide a 'nodes' array or a 'topology.fleet' block",
@@ -520,8 +677,29 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
                 quality: p.get("quality").as_f64().unwrap_or(0.7),
             }
         };
-        let policy = parse_policy(nj.get("policy"));
-        let mut setup = NodeSetup::new(profile, policy);
+        // Participation behaviour (per-node "participation" key; fleet
+        // groups stamp it from their "policy" key). The kind also sets the
+        // scalar-knob base defaults.
+        let participation = match nj.get("participation") {
+            Json::Null => ParticipationKind::Default,
+            p => {
+                let name = p.as_str().ok_or_else(|| {
+                    bad(format!("node {i}: participation must be a string"))
+                })?;
+                ParticipationKind::parse(name).ok_or_else(|| {
+                    bad(format!(
+                        "node {i}: unknown participation policy '{name}'"
+                    ))
+                })?
+            }
+        };
+        let policy =
+            parse_policy(nj.get("policy"), participation.base_policy());
+        let mut setup =
+            NodeSetup::new(profile, policy).with_participation(participation);
+        if let Some(label) = nj.get("group").as_str() {
+            setup = setup.with_group(label);
+        }
         // Workload: an explicit phase schedule, or a follow-the-sun diurnal
         // template (period-halved peak/off windows over the horizon).
         let phases = if !nj.get("schedule").is_null() {
@@ -572,9 +750,11 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
             ledger,
             topology,
             latency_estimation,
+            churn: churn.iter().map(|c| (c.node, c.at, c.join)).collect(),
             ..Default::default()
         },
         setups,
+        churn,
     })
 }
 
@@ -905,6 +1085,169 @@ mod tests {
                 "accepted bad latency_estimation block {block}"
             );
         }
+    }
+
+    #[test]
+    fn fleet_policy_key_selects_participation_per_group() {
+        let e = parse_experiment(
+            r#"{"topology": {"regions": ["us", "eu"],
+                "fleet": [
+                  { "region": "us", "count": 2, "policy": "greedy_local" },
+                  { "region": "eu", "count": 1, "policy": "requester_only",
+                    "name": "eu-consumers" },
+                  { "region": "eu", "count": 1 }
+                ]},
+                "nodes": [{ "participation": "selective" }]}"#,
+        )
+        .unwrap();
+        assert_eq!(e.setups.len(), 5);
+        // Explicit node: per-node participation key.
+        assert_eq!(e.setups[0].participation, ParticipationKind::Selective);
+        assert!(e.setups[0].group.is_none());
+        // Group policies stamp every copy, with auto/explicit labels.
+        assert_eq!(e.setups[1].participation, ParticipationKind::GreedyLocal);
+        assert_eq!(e.setups[2].participation, ParticipationKind::GreedyLocal);
+        assert_eq!(e.setups[1].group.as_deref(), Some("us/greedy_local"));
+        assert_eq!(
+            e.setups[3].participation,
+            ParticipationKind::RequesterOnly
+        );
+        assert_eq!(e.setups[3].group.as_deref(), Some("eu-consumers"));
+        // The participation kind sets the scalar-knob base: requester-only
+        // groups get stake 0 / accept 0 without spelling it out.
+        assert!(e.setups[3].policy.requester_only);
+        assert_eq!(e.setups[3].policy.stake, 0);
+        assert!((e.setups[3].policy.accept_freq - 0.0).abs() < 1e-12);
+        // Policy-less group stays on the default participation + knobs.
+        assert_eq!(e.setups[4].participation, ParticipationKind::Default);
+        assert_eq!(e.setups[4].group.as_deref(), Some("eu/default"));
+        assert_eq!(e.setups[4].policy, NodePolicy::default());
+    }
+
+    #[test]
+    fn rejects_unknown_participation_policies() {
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 1,
+                            "policy": "freeloader" }]}}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 1, "policy": 5 }]}}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"nodes": [{ "participation": "freeloader" }]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fleet_group_start_offline_and_churn_schedules() {
+        let e = parse_experiment(
+            r#"{"topology": {"regions": ["us", "eu"],
+                "fleet": [
+                  { "region": "us", "count": 3,
+                    "churn": [
+                      { "at": 100, "action": "leave", "count": 2 },
+                      { "at": 200, "action": "join" }
+                    ] },
+                  { "region": "eu", "count": 2, "start_offline": true,
+                    "churn": [ { "at": 50, "action": "join", "count": 2 } ] }
+                ]}}"#,
+        )
+        .unwrap();
+        // Whole-group start_offline reached every stamped copy.
+        assert!(!e.setups[0].start_offline);
+        assert!(e.setups[3].start_offline);
+        assert!(e.setups[4].start_offline);
+        // Churn expands deterministically: lowest-indexed eligible nodes
+        // first; default count = 1.
+        assert_eq!(
+            e.churn,
+            vec![
+                ChurnEvent { node: 0, at: 100.0, join: false },
+                ChurnEvent { node: 1, at: 100.0, join: false },
+                ChurnEvent { node: 0, at: 200.0, join: true },
+                ChurnEvent { node: 3, at: 50.0, join: true },
+                ChurnEvent { node: 4, at: 50.0, join: true },
+            ]
+        );
+    }
+
+    #[test]
+    fn churn_rejects_unsatisfiable_and_malformed_schedules() {
+        // Leaving 3 of a 2-node group.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "churn": [{ "at": 10, "action": "leave", "count": 3 }]}]}}"#
+        )
+        .is_err());
+        // Joining an already-up group.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "churn": [{ "at": 10, "action": "join" }]}]}}"#
+        )
+        .is_err());
+        // Double leave exhausts the pool even across entries.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "churn": [{ "at": 10, "action": "leave", "count": 2 },
+                            { "at": 20, "action": "leave" }]}]}}"#
+        )
+        .is_err());
+        // Unknown action, negative time, zero count, non-array block.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "churn": [{ "at": 10, "action": "explode" }]}]}}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "churn": [{ "at": -1, "action": "leave" }]}]}}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "churn": [{ "at": 1, "action": "leave", "count": 0 }]}]}}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "churn": { "at": 1, "action": "leave" }}]}}"#
+        )
+        .is_err());
+        // A leave-then-rejoin cycle is fine.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "churn": [{ "at": 10, "action": "leave", "count": 2 },
+                            { "at": 20, "action": "join", "count": 2 },
+                            { "at": 30, "action": "leave" }]}]}}"#
+        )
+        .is_ok());
+        // `start_offline` inside the node template counts for churn
+        // validation just like the group-level key: joining a
+        // template-offline group is satisfiable.
+        let e = parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "node": { "start_offline": true },
+                  "churn": [{ "at": 10, "action": "join", "count": 2 }]}]}}"#,
+        )
+        .unwrap();
+        assert!(e.setups[0].start_offline && e.setups[1].start_offline);
+        assert_eq!(e.churn.len(), 2);
+        // The parsed schedule rides along in the world config.
+        assert_eq!(e.world.churn, vec![(0, 10.0, true), (1, 10.0, true)]);
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! The shared substrate the coordinator layers operate on.
+//!
+//! [`Ctx`] is a borrow bundle over the composition root's state
+//! (`node::Node`), built once per `handle()` activation and threaded
+//! through the layer pipeline (`dispatch` → `duel` → `gossip_driver`),
+//! so each layer struct owns *its* state while borrowing the shared
+//! pieces (backend, view, ledger, RNG, latency feed, snapshot cache)
+//! without fighting the borrow checker.
+//!
+//! [`PeerScratch`] is the per-activation alive-peer view: ledger paths
+//! used to rebuild the filtered alive-peer `Vec` two or three times per
+//! event (payment + tick retries + stake maintenance); the scratch
+//! memoizes one build per `(now, view clock)` and hands out slices.
+
+use super::events::Action;
+use super::latency_feed::LatencyFeed;
+use super::ledger_manager::LedgerManager;
+use super::msg::Message;
+use super::snapshot::Snapshots;
+use crate::backend::Backend;
+use crate::gossip::PeerView;
+use crate::ledger::CreditOp;
+use crate::policy::{NodePolicy, ParticipationPolicy, SystemPolicy};
+use crate::types::{ExecKind, NodeId, Request, Time};
+use crate::util::rng::Rng;
+
+use super::node::NodeStats;
+
+/// Memoized alive-peer list, keyed on `(now, view mutation clock)` —
+/// rebuilt at most once per distinct (time, view) state instead of once
+/// per caller. The buffer is reused across activations, so steady-state
+/// ticks allocate nothing.
+#[derive(Debug, Default)]
+pub(crate) struct PeerScratch {
+    key: Option<(u64, u64)>,
+    buf: Vec<NodeId>,
+}
+
+impl PeerScratch {
+    /// Peers currently believed alive — one filtered build per
+    /// `(now, view clock)`, shared by every caller in the activation.
+    pub fn alive<'s>(&'s mut self, view: &PeerView, now: Time) -> &'s [NodeId] {
+        let key = (now.to_bits(), view.clock());
+        if self.key != Some(key) {
+            view.alive_peers_into(now, &mut self.buf);
+            self.key = Some(key);
+        }
+        &self.buf
+    }
+}
+
+/// One activation's view of the node: everything the layers share.
+/// Layer-owned state (pending delegations, duels, gossip cadence) is NOT
+/// here — each layer keeps its own and receives the others explicitly.
+pub(crate) struct Ctx<'a> {
+    pub id: NodeId,
+    pub policy: &'a NodePolicy,
+    pub system: &'a SystemPolicy,
+    pub participation: &'a dyn ParticipationPolicy,
+    pub backend: &'a mut dyn Backend,
+    pub view: &'a mut PeerView,
+    pub ledger: &'a mut LedgerManager,
+    pub rng: &'a mut Rng,
+    pub feed: &'a mut LatencyFeed,
+    pub snaps: &'a mut Snapshots,
+    pub stats: &'a mut NodeStats,
+    pub peers: &'a mut PeerScratch,
+}
+
+impl Ctx<'_> {
+    /// Put a request on our own backend.
+    pub fn execute_locally(
+        &mut self,
+        req: Request,
+        kind: ExecKind,
+        now: Time,
+    ) -> Vec<Action> {
+        if kind == ExecKind::Local {
+            self.stats.served_local += 1;
+        }
+        self.backend.submit(req, kind, now);
+        vec![]
+    }
+
+    /// Refresh the cached delegation snapshot (see [`Snapshots`]).
+    pub fn refresh_snapshot(&mut self, now: Time) {
+        self.snaps.refresh(
+            self.id,
+            self.policy,
+            self.participation,
+            self.view,
+            self.ledger,
+            self.feed,
+            now,
+        );
+    }
+
+    /// Submit ledger ops. Only chain mode broadcasts ledger messages, so
+    /// only chain mode pays for the (memoized) alive-peer view; shared
+    /// mode applies in place with an empty peer list.
+    pub fn ledger_submit(
+        &mut self,
+        ops: Vec<CreditOp>,
+        now: Time,
+    ) -> Vec<Action> {
+        if self.ledger.is_chain() {
+            let peers = self.peers.alive(self.view, now);
+            self.ledger.submit(ops, self.id, peers, now)
+        } else {
+            self.ledger.submit(ops, self.id, &[], now)
+        }
+    }
+
+    /// Route a ledger protocol message (block proposal/vote/commit, chain
+    /// sync) into the ledger manager.
+    pub fn ledger_on_message(
+        &mut self,
+        from: NodeId,
+        msg: &Message,
+        now: Time,
+    ) -> Vec<Action> {
+        let peers = self.peers.alive(self.view, now);
+        self.ledger.on_message(from, msg, self.id, peers, now)
+    }
+
+    /// Per-tick ledger maintenance (chain-mode head races). Shared mode
+    /// has no ledger traffic — skip even the memoized peer lookup.
+    pub fn ledger_tick(&mut self, now: Time) -> Vec<Action> {
+        if self.ledger.is_chain() {
+            let peers = self.peers.alive(self.view, now);
+            self.ledger.on_tick(peers, now)
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gossip::GossipConfig;
+
+    #[test]
+    fn peer_scratch_memoizes_per_time_and_clock() {
+        let mut view = PeerView::new(NodeId(0), GossipConfig::default(), 0.0);
+        view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        let mut scratch = PeerScratch::default();
+        assert_eq!(scratch.alive(&view, 0.5), &[NodeId(1)]);
+        let key0 = scratch.key;
+        // Same (now, clock): served from the memo, key untouched.
+        assert_eq!(scratch.alive(&view, 0.5), &[NodeId(1)]);
+        assert_eq!(scratch.key, key0);
+        // View mutation bumps the clock: rebuilt.
+        view.merge(&vec![(NodeId(2), 1, true, 0, 0)], 0.6);
+        assert_eq!(scratch.alive(&view, 0.6), &[NodeId(1), NodeId(2)]);
+        assert_ne!(scratch.key, key0);
+        // Time moving (heartbeat aging) also rebuilds: peers age out.
+        let aged = 0.6 + GossipConfig::default().suspect_after + 1.0;
+        assert!(scratch.alive(&view, aged).is_empty());
+    }
+}

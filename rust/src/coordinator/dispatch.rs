@@ -1,0 +1,743 @@
+//! The delegation dispatch layer: admission (offload-or-serve), the
+//! probe → delegate → response state machine around [`PendingState`], the
+//! executor-side ticket table, and the timeout scan.
+//!
+//! The *decisions* at this boundary — whether a user request enters the
+//! market, whether an incoming probe is accepted — are delegated to the
+//! node's pluggable [`ParticipationPolicy`]; this layer owns the
+//! *mechanics*: pending-state bookkeeping, probe retries, local fallback,
+//! RTT feedback into the latency feed, and payment on response.
+//!
+//! [`ParticipationPolicy`]: crate::policy::ParticipationPolicy
+
+use std::collections::HashMap;
+
+use super::ctx::Ctx;
+use super::duel::DuelCourt;
+use super::events::Action;
+use super::msg::Message;
+use crate::backend::Completion;
+use crate::duel as duel_mech;
+use crate::ledger::{CreditOp, OpReason};
+use crate::policy::{OffloadCtx, ProbeCtx};
+use crate::types::{
+    ExecKind, NodeId, Request, RequestId, RequestRecord, Response, Time,
+};
+
+/// Seconds to wait for a probe answer before trying the next candidate.
+pub(crate) const PROBE_TIMEOUT: Time = 3.0;
+/// Multiple of the SLO deadline to wait for a delegated response before
+/// falling back to local execution (covers executor crashes).
+pub(crate) const RESPONSE_TIMEOUT_FACTOR: f64 = 3.0;
+
+#[derive(Debug, Clone)]
+pub(crate) enum PendingState {
+    /// Waiting for a ProbeAccept/Reject from `candidate`. `sent_at` stamps
+    /// the probe send so the reply measures a live RTT (and a timeout
+    /// penalizes the candidate's region in the latency estimator).
+    Probing {
+        candidate: NodeId,
+        probes_left: usize,
+        sent_at: Time,
+    },
+    /// Waiting for the executor's response.
+    AwaitingResponse { executor: NodeId },
+    /// Waiting for both duel responses.
+    AwaitingDuel,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct PendingDelegation {
+    pub req: Request,
+    pub state: PendingState,
+    pub deadline: Time,
+}
+
+/// Executor-side record of who to answer for a delegated request.
+#[derive(Debug, Clone, Copy)]
+struct ExecTicket {
+    origin: NodeId,
+    duel: bool,
+}
+
+/// Origin-side pending delegations + executor-side tickets.
+#[derive(Debug, Default)]
+pub(crate) struct Dispatch {
+    pending: HashMap<RequestId, PendingDelegation>,
+    exec_tickets: HashMap<RequestId, ExecTicket>,
+}
+
+impl Dispatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The duel layer inserts/removes pending entries when it starts or
+    /// settles a duel for the origin.
+    pub fn pending_mut(
+        &mut self,
+    ) -> &mut HashMap<RequestId, PendingDelegation> {
+        &mut self.pending
+    }
+
+    // ---- origin side --------------------------------------------------------
+
+    /// Admission: ask the participation policy whether this request enters
+    /// the delegation market; otherwise put it on the local backend. No
+    /// live peer at all is an explicit serve-locally case — never a
+    /// sentinel distance fed through the offload damping roll.
+    pub fn on_user_request(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        court: &mut DuelCourt,
+        req: Request,
+        now: Time,
+    ) -> Vec<Action> {
+        ctx.stats.user_requests += 1;
+        let util = ctx.backend.utilization();
+        let qlen = ctx.backend.queue_len();
+        let part = ctx.participation;
+        let offload = match ctx.feed.nearest_peer_latency(
+            ctx.view,
+            ctx.policy.latency_penalty,
+            now,
+        ) {
+            Some(near) => part.should_offload(
+                ctx.policy,
+                &OffloadCtx {
+                    utilization: util,
+                    queue_len: qlen,
+                    nearest_latency: near,
+                },
+                ctx.rng,
+            ),
+            None => false,
+        };
+        if !offload {
+            return ctx.execute_locally(req, ExecKind::Local, now);
+        }
+        self.try_delegate(ctx, court, req, now)
+    }
+
+    /// Start the delegation state machine (PoS sample → probe). Falls back
+    /// to local execution when no viable peer or unaffordable.
+    pub(crate) fn try_delegate(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        court: &mut DuelCourt,
+        req: Request,
+        now: Time,
+    ) -> Vec<Action> {
+        // Can we afford the offload payment?
+        if ctx.ledger.balance(ctx.id) < ctx.system.base_reward {
+            ctx.stats.fallback_local += 1;
+            return ctx.execute_locally(req, ExecKind::Local, now);
+        }
+        ctx.refresh_snapshot(now);
+        let candidates = ctx.snaps.candidates();
+        if candidates == 0 {
+            ctx.stats.fallback_local += 1;
+            return ctx.execute_locally(req, ExecKind::Local, now);
+        }
+
+        // Duel roll (§4.2): a fraction p_d of delegated requests go to two
+        // executors directly.
+        if ctx.rng.chance(ctx.system.duel_rate) && candidates >= 2 {
+            return court.start_duel(ctx, &mut self.pending, req, now);
+        }
+
+        let candidate = ctx.snaps.sample(ctx.rng);
+        let Some(candidate) = candidate else {
+            ctx.stats.fallback_local += 1;
+            return ctx.execute_locally(req, ExecKind::Local, now);
+        };
+        let probe = Message::Probe {
+            req_id: req.id,
+            prompt_tokens: req.prompt_tokens,
+            output_tokens: req.output_tokens,
+        };
+        self.pending.insert(
+            req.id,
+            PendingDelegation {
+                req,
+                state: PendingState::Probing {
+                    candidate,
+                    probes_left: ctx.system.max_probes.saturating_sub(1),
+                    sent_at: now,
+                },
+                deadline: now + PROBE_TIMEOUT,
+            },
+        );
+        vec![Action::Send { to: candidate, msg: probe }]
+    }
+
+    pub fn on_probe_accept(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        from: NodeId,
+        req_id: RequestId,
+        now: Time,
+    ) -> Vec<Action> {
+        let Some(p) = self.pending.get_mut(&req_id) else {
+            return vec![]; // stale (already timed out / answered)
+        };
+        let PendingState::Probing { candidate, sent_at, .. } = p.state else {
+            return vec![];
+        };
+        if candidate != from {
+            return vec![]; // answer from a node we no longer care about
+        }
+        ctx.stats.delegated_out += 1;
+        let req = p.req.clone();
+        p.state = PendingState::AwaitingResponse { executor: from };
+        p.deadline = now + req.slo_deadline * RESPONSE_TIMEOUT_FACTOR;
+        // The probe round trip is a clean network RTT sample.
+        ctx.feed.observe_peer_rtt(ctx.view, from, (now - sent_at).max(0.0), now);
+        vec![Action::Send {
+            to: from,
+            msg: Message::Delegate { request: req, duel: false },
+        }]
+    }
+
+    pub fn on_probe_reject(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        from: NodeId,
+        req_id: RequestId,
+        now: Time,
+    ) -> Vec<Action> {
+        let (req, probes_left, sent_at) = {
+            let Some(p) = self.pending.get(&req_id) else {
+                return vec![];
+            };
+            let PendingState::Probing { candidate, probes_left, sent_at } =
+                p.state
+            else {
+                return vec![];
+            };
+            if candidate != from {
+                return vec![];
+            }
+            (p.req.clone(), probes_left, sent_at)
+        };
+        // A reject still answers the probe: same clean RTT sample.
+        ctx.feed.observe_peer_rtt(ctx.view, from, (now - sent_at).max(0.0), now);
+        ctx.stats.probe_rejects += 1;
+        if probes_left == 0 {
+            self.pending.remove(&req_id);
+            ctx.stats.fallback_local += 1;
+            return ctx.execute_locally(req, ExecKind::Local, now);
+        }
+        // Try another candidate.
+        ctx.refresh_snapshot(now);
+        let next = ctx.snaps.sample(ctx.rng);
+        match next {
+            Some(c) => {
+                let probe = Message::Probe {
+                    req_id,
+                    prompt_tokens: req.prompt_tokens,
+                    output_tokens: req.output_tokens,
+                };
+                let p = self.pending.get_mut(&req_id).expect("checked above");
+                p.state = PendingState::Probing {
+                    candidate: c,
+                    probes_left: probes_left - 1,
+                    sent_at: now,
+                };
+                p.deadline = now + PROBE_TIMEOUT;
+                vec![Action::Send { to: c, msg: probe }]
+            }
+            None => {
+                self.pending.remove(&req_id);
+                ctx.stats.fallback_local += 1;
+                ctx.execute_locally(req, ExecKind::Local, now)
+            }
+        }
+    }
+
+    /// The executor's answer for a non-duel delegation: pay and complete.
+    pub fn on_response(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        response: Response,
+        now: Time,
+    ) -> Vec<Action> {
+        let Some(p) = self.pending.remove(&response.id) else {
+            return vec![]; // stale (timed out, user already answered)
+        };
+        let PendingState::AwaitingResponse { executor } = p.state else {
+            self.pending.insert(response.id, p);
+            return vec![];
+        };
+        // Pay the executor (credits-for-offloading).
+        let mut actions = ctx.ledger_submit(
+            vec![CreditOp::Transfer {
+                from: ctx.id,
+                to: executor,
+                amount: ctx.system.base_reward,
+                reason: OpReason::OffloadPayment(response.id),
+            }],
+            now,
+        );
+        actions.push(Action::Done(RequestRecord {
+            id: p.req.id,
+            origin: ctx.id,
+            executor,
+            kind: ExecKind::Delegated,
+            prompt_tokens: p.req.prompt_tokens,
+            output_tokens: p.req.output_tokens,
+            submitted_at: p.req.submitted_at,
+            completed_at: now,
+            slo_deadline: p.req.slo_deadline,
+            synthetic: p.req.synthetic,
+        }));
+        actions
+    }
+
+    // ---- executor side ------------------------------------------------------
+
+    /// Accept-or-reject an incoming probe — the participation policy's
+    /// call, given local load and the job size.
+    pub fn on_probe(
+        ctx: &mut Ctx<'_>,
+        from: NodeId,
+        req_id: RequestId,
+        prompt_tokens: u32,
+        output_tokens: u32,
+    ) -> Vec<Action> {
+        let util = ctx.backend.utilization();
+        let qlen = ctx.backend.queue_len();
+        let part = ctx.participation;
+        let accept = part.accept_probe(
+            ctx.policy,
+            &ProbeCtx {
+                from,
+                prompt_tokens,
+                output_tokens,
+                utilization: util,
+                queue_len: qlen,
+            },
+            ctx.rng,
+        );
+        let reply = if accept {
+            Message::ProbeAccept { req_id }
+        } else {
+            Message::ProbeReject { req_id }
+        };
+        vec![Action::Send { to: from, msg: reply }]
+    }
+
+    /// A delegated request arrives: remember who to answer and execute.
+    pub fn on_delegate(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        from: NodeId,
+        request: Request,
+        duel: bool,
+        now: Time,
+    ) -> Vec<Action> {
+        ctx.stats.delegated_in += 1;
+        self.exec_tickets
+            .insert(request.id, ExecTicket { origin: from, duel });
+        let kind = if duel { ExecKind::Duel } else { ExecKind::Delegated };
+        ctx.execute_locally(request, kind, now)
+    }
+
+    /// A delegated/duel execution finished on our backend: draw the
+    /// response quality and answer the origin.
+    pub fn on_exec_completion(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        c: Completion,
+    ) -> Vec<Action> {
+        let Some(ticket) = self.exec_tickets.remove(&c.request.id) else {
+            return vec![];
+        };
+        let quality =
+            duel_mech::draw_response_quality(ctx.backend.quality(), ctx.rng);
+        let response = Response {
+            id: c.request.id,
+            executor: ctx.id,
+            quality,
+            finished_at: c.finished_at,
+            tokens: vec![],
+        };
+        vec![Action::Send {
+            to: ticket.origin,
+            msg: Message::DelegateResponse { response, duel: ticket.duel },
+        }]
+    }
+
+    // ---- timeouts -----------------------------------------------------------
+
+    /// Expire overdue pending delegations: probe timeouts penalize the
+    /// candidate's region and fall back locally; vanished executors fall
+    /// back locally; duel timeouts settle through the duel layer.
+    pub fn expire(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        court: &mut DuelCourt,
+        now: Time,
+    ) -> Vec<Action> {
+        let mut expired: Vec<RequestId> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| now >= p.deadline)
+            .map(|(id, _)| *id)
+            .collect();
+        // HashMap iteration order is seeded per process; sort so multiple
+        // same-tick expiries replay identically across runs and processes.
+        expired.sort_unstable_by_key(|id| (id.origin.0, id.seq));
+        let mut actions = Vec::new();
+        for id in expired {
+            let p = self.pending.remove(&id).expect("just listed");
+            match p.state {
+                PendingState::Probing { candidate, .. } => {
+                    // Probe never answered: the candidate died or the path
+                    // to its region is down. Penalize the region in the
+                    // latency estimator and serve locally.
+                    ctx.stats.probe_timeouts += 1;
+                    ctx.stats.fallback_local += 1;
+                    ctx.feed.observe_probe_timeout(ctx.view, candidate, now);
+                    actions.extend(
+                        ctx.execute_locally(p.req, ExecKind::Local, now),
+                    );
+                }
+                PendingState::AwaitingResponse { .. } => {
+                    // Executor vanished mid-flight: local fallback.
+                    ctx.stats.fallback_local += 1;
+                    actions.extend(
+                        ctx.execute_locally(p.req, ExecKind::Local, now),
+                    );
+                }
+                PendingState::AwaitingDuel => {
+                    actions.extend(court.on_duel_timeout(ctx, id, p.req, now));
+                }
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::events::{Action, Event};
+    use super::super::msg::Message;
+    use super::super::node::testutil::{mk_node, user_req};
+    use super::PROBE_TIMEOUT;
+    use crate::latency::LatencyConfig;
+    use crate::ledger::{Ledger, SharedLedger};
+    use crate::policy::{NodePolicy, SystemPolicy};
+    use crate::types::{ExecKind, NodeId};
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn pressured_node_probes_staked_peer() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        // Node 1 exists in the ledger (stakes) and in node 0's view.
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0, // always offload
+                offload_freq: 1.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        // duel_rate 0 for a deterministic single probe
+        n0.system.duel_rate = 0.0;
+        let actions = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        let sends: Vec<_> = actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::Send { to, msg } => Some((*to, msg.kind())),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(sends, vec![(NodeId(1), "probe")]);
+    }
+
+    #[test]
+    fn full_delegation_roundtrip_pays_executor() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut n1 = mk_node(1, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n1.policy.accept_freq = 1.0;
+
+        let bal0 = shared.lock().unwrap().balance(NodeId(0));
+        let bal1 = shared.lock().unwrap().balance(NodeId(1));
+
+        // 0 -> probe -> 1
+        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        let Action::Send { msg: probe, .. } = &a[0] else { panic!() };
+        // 1 -> accept -> 0
+        let a = n1.handle(
+            Event::Message { from: NodeId(0), msg: probe.clone() },
+            0.1,
+        );
+        let Action::Send { msg: accept, .. } = &a[0] else { panic!() };
+        assert_eq!(accept.kind(), "probe_accept");
+        // 0 -> delegate -> 1
+        let a = n0.handle(
+            Event::Message { from: NodeId(1), msg: accept.clone() },
+            0.2,
+        );
+        let Action::Send { msg: delegate, .. } = &a[0] else { panic!() };
+        assert_eq!(delegate.kind(), "delegate");
+        // 1 executes...
+        n1.handle(
+            Event::Message { from: NodeId(0), msg: delegate.clone() },
+            0.3,
+        );
+        let a = n1.handle(Event::BackendWake, 100.0);
+        let Some(Action::Send { to, msg: resp }) = a
+            .iter()
+            .find(|x| matches!(x, Action::Send { .. }))
+        else {
+            panic!("no response sent: {a:?}")
+        };
+        assert_eq!(*to, NodeId(0));
+        assert_eq!(resp.kind(), "delegate_response");
+        // 0 receives the response: record + payment.
+        let a = n0.handle(
+            Event::Message { from: NodeId(1), msg: resp.clone() },
+            100.1,
+        );
+        let rec = a
+            .iter()
+            .find_map(|x| match x {
+                Action::Done(r) => Some(r),
+                _ => None,
+            })
+            .expect("completion record");
+        assert_eq!(rec.executor, NodeId(1));
+        assert_eq!(rec.kind, ExecKind::Delegated);
+        let pay = SystemPolicy::default().base_reward;
+        assert_eq!(shared.lock().unwrap().balance(NodeId(0)), bal0 - pay);
+        assert_eq!(shared.lock().unwrap().balance(NodeId(1)), bal1 + pay);
+    }
+
+    #[test]
+    fn probe_reject_falls_back_after_retries() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        n0.system.max_probes = 2;
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+
+        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        let Action::Send { msg: Message::Probe { req_id, .. }, .. } = a[0]
+        else {
+            panic!()
+        };
+        // First reject -> re-probe (only node 1 is available, so again 1).
+        let a = n0.handle(
+            Event::Message {
+                from: NodeId(1),
+                msg: Message::ProbeReject { req_id },
+            },
+            0.1,
+        );
+        assert!(a.iter().any(
+            |x| matches!(x, Action::Send { msg: Message::Probe { .. }, .. })
+        ));
+        // Second reject -> local fallback (probes exhausted).
+        let a = n0.handle(
+            Event::Message {
+                from: NodeId(1),
+                msg: Message::ProbeReject { req_id },
+            },
+            0.2,
+        );
+        assert!(a
+            .iter()
+            .all(|x| !matches!(x, Action::Send { msg: Message::Probe { .. }, .. })));
+        assert_eq!(n0.backend().running_len(), 1);
+        assert_eq!(n0.stats.fallback_local, 1);
+    }
+
+    #[test]
+    fn probe_timeout_falls_back_locally() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        assert_eq!(n0.backend().running_len(), 0);
+        // Silence until past PROBE_TIMEOUT.
+        n0.handle(Event::Tick, PROBE_TIMEOUT + 0.5);
+        assert_eq!(n0.backend().running_len(), 1);
+    }
+
+    #[test]
+    fn locality_penalty_prefers_near_candidates() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        // Equal stakes: node 1 shares n0's region, node 2 is an ocean away.
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let _n2 = mk_node(2, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                latency_penalty: 50.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        n0.set_locality(
+            0,
+            vec![vec![0.005, 0.100], vec![0.100, 0.005]],
+            LatencyConfig::default(),
+        );
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
+
+        let mut near = 0usize;
+        let mut far = 0usize;
+        for seq in 0..400u64 {
+            let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);
+            for act in &a {
+                match act {
+                    Action::Send { to, msg: Message::Probe { .. } } => {
+                        if *to == NodeId(1) {
+                            near += 1;
+                        } else {
+                            far += 1;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // Damping 1/(1+50*0.005)=0.8 vs 1/(1+50*0.1)=0.167: ~83% near.
+        assert!(
+            near > far * 2,
+            "locality penalty ignored: near={near} far={far}"
+        );
+    }
+
+    #[test]
+    fn no_live_peer_is_explicit_local_execute() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                latency_penalty: 50.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.set_locality(
+            0,
+            vec![vec![0.005, 0.100], vec![0.100, 0.005]],
+            LatencyConfig::default(),
+        );
+        // Locality active but zero live peers: the nearest-peer term is an
+        // explicit None, not a 1e6 sentinel fed into the damping math.
+        assert_eq!(
+            n0.feed.nearest_peer_latency(&n0.view, n0.policy.latency_penalty, 0.0),
+            None
+        );
+        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        assert!(
+            a.iter().all(|x| !matches!(x, Action::Send { .. })),
+            "no-peer case must not probe: {a:?}"
+        );
+        assert_eq!(n0.backend().running_len(), 1, "must execute locally");
+        assert_eq!(n0.stats.served_local, 1);
+        // Flat/region-blind nodes keep the zero-latency fast path.
+        let n_flat = mk_node(1, NodePolicy::default(), &shared);
+        assert_eq!(
+            n_flat
+                .feed
+                .nearest_peer_latency(&n_flat.view, n_flat.policy.latency_penalty, 0.0),
+            Some(0.0)
+        );
+    }
+
+    #[test]
+    fn probe_replies_and_timeouts_feed_the_estimator() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let _n1 = mk_node(1, NodePolicy::default(), &shared);
+        let mut n0 = mk_node(
+            0,
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                ..Default::default()
+            },
+            &shared,
+        );
+        n0.system.duel_rate = 0.0;
+        n0.set_locality(
+            0,
+            vec![vec![0.005, 0.080], vec![0.080, 0.005]],
+            LatencyConfig::default(),
+        );
+        // The only candidate lives in region 1.
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 1)], 0.0);
+        let prior = n0.latency_estimator().unwrap().expected_from_me(1, 0.0);
+        assert_eq!(prior, 0.080);
+        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        let Action::Send { msg: Message::Probe { req_id, .. }, .. } = a[0]
+        else {
+            panic!("expected a probe, got {a:?}")
+        };
+        // The reject answers 0.4 s later: a measured RTT well above the
+        // 80 ms prior must raise the estimate.
+        n0.handle(
+            Event::Message {
+                from: NodeId(1),
+                msg: Message::ProbeReject { req_id },
+            },
+            0.4,
+        );
+        let after_reply =
+            n0.latency_estimator().unwrap().expected_from_me(1, 0.4);
+        assert!(after_reply > prior, "RTT sample ignored: {after_reply}");
+        // The retry probe (sent at 0.4) is never answered: the timeout
+        // penalty must push the estimate far beyond anything measured.
+        n0.handle(Event::Tick, 5.0);
+        assert_eq!(n0.stats.probe_timeouts, 1);
+        let after_timeout =
+            n0.latency_estimator().unwrap().expected_from_me(1, 5.0);
+        assert!(
+            after_timeout > 0.3,
+            "timeout penalty too weak: {after_timeout}"
+        );
+    }
+}

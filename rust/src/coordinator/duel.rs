@@ -1,0 +1,444 @@
+//! The duel-and-judge settlement layer (§4.2): duplicate execution,
+//! first-answer-wins completion, PoS-sampled judge committees, and the
+//! winner/loser/judge credit settlement.
+//!
+//! This is the coordinator-side orchestration around the mechanism
+//! primitives in [`crate::duel`] (`DuelState`, quality draws, verdict
+//! tallies). The origin-side pending slot lives in the dispatch layer, so
+//! duel entry points receive its pending table explicitly — starting or
+//! settling a duel is the one cross-layer handoff.
+
+use std::collections::HashMap;
+
+use super::ctx::Ctx;
+use super::dispatch::{PendingDelegation, PendingState, RESPONSE_TIMEOUT_FACTOR};
+use super::events::Action;
+use super::msg::Message;
+use crate::backend::Completion;
+use crate::duel as duel_mech;
+use crate::duel::DuelState;
+use crate::ledger::{CreditOp, OpReason};
+use crate::types::{
+    ExecKind, NodeId, Request, RequestId, RequestRecord, Response, Time,
+};
+
+/// Judge evaluation output length (short comparison verdicts).
+const JUDGE_OUTPUT_TOKENS: u32 = 64;
+
+/// Judge-side record for an in-flight evaluation.
+#[derive(Debug, Clone)]
+struct JudgeTask {
+    duel_id: RequestId,
+    origin: NodeId,
+    resp_a: Response,
+    resp_b: Response,
+}
+
+/// Origin-side duel states + judge-side evaluation tasks.
+#[derive(Debug)]
+pub(crate) struct DuelCourt {
+    duels: HashMap<RequestId, DuelState>,
+    judge_tasks: HashMap<RequestId, JudgeTask>,
+    /// Synthetic request sequence (judge evals and other self-generated
+    /// work carry our own origin with high seq numbers).
+    synth_seq: u64,
+}
+
+impl Default for DuelCourt {
+    fn default() -> Self {
+        DuelCourt {
+            duels: HashMap::new(),
+            judge_tasks: HashMap::new(),
+            synth_seq: 1 << 40,
+        }
+    }
+}
+
+impl DuelCourt {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Escalate a delegated request into a duel: two distinct executors,
+    /// one pending slot awaiting both answers.
+    pub fn start_duel(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        pending: &mut HashMap<RequestId, PendingDelegation>,
+        req: Request,
+        now: Time,
+    ) -> Vec<Action> {
+        let execs = ctx.snaps.sample_distinct(ctx.rng, 2);
+        if execs.len() < 2 {
+            ctx.stats.fallback_local += 1;
+            return ctx.execute_locally(req, ExecKind::Local, now);
+        }
+        ctx.stats.duels_started += 1;
+        ctx.stats.delegated_out += 1;
+        let duel = DuelState::new(req.clone(), [execs[0], execs[1]], now);
+        pending.insert(
+            req.id,
+            PendingDelegation {
+                req: req.clone(),
+                state: PendingState::AwaitingDuel,
+                deadline: now + req.slo_deadline * RESPONSE_TIMEOUT_FACTOR,
+            },
+        );
+        self.duels.insert(req.id, duel);
+        execs
+            .into_iter()
+            .map(|to| Action::Send {
+                to,
+                msg: Message::Delegate { request: req.clone(), duel: true },
+            })
+            .collect()
+    }
+
+    /// One duel executor answered: first answer completes the request for
+    /// the user (and pays both executors); the second closes the duel and
+    /// dispatches the judge committee.
+    pub fn on_duel_response(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        pending: &mut HashMap<RequestId, PendingDelegation>,
+        response: Response,
+        now: Time,
+    ) -> Vec<Action> {
+        let executor = response.executor;
+        let (first, both_in, req, execs) = {
+            let Some(d) = self.duels.get_mut(&response.id) else {
+                return vec![];
+            };
+            let first = d.responses.is_empty() && !d.user_answered;
+            let both_in = d.add_response(response.clone());
+            if first {
+                d.user_answered = true;
+            }
+            (first, both_in, d.request.clone(), d.executors)
+        };
+        let mut actions = Vec::new();
+
+        if first {
+            // The user takes the first answer; the duel settles afterwards.
+            actions.push(Action::Done(RequestRecord {
+                id: req.id,
+                origin: ctx.id,
+                executor,
+                kind: ExecKind::Delegated,
+                prompt_tokens: req.prompt_tokens,
+                output_tokens: req.output_tokens,
+                submitted_at: req.submitted_at,
+                completed_at: now,
+                slo_deadline: req.slo_deadline,
+                synthetic: req.synthetic,
+            }));
+            // Both executors get the base payment (both did the work).
+            let ops = execs
+                .iter()
+                .map(|e| CreditOp::Transfer {
+                    from: ctx.id,
+                    to: *e,
+                    amount: ctx.system.base_reward,
+                    reason: OpReason::OffloadPayment(req.id),
+                })
+                .collect();
+            actions.extend(ctx.ledger_submit(ops, now));
+        } else {
+            // The slower duel copy: synthetic overhead record (§7.1).
+            actions.push(Action::Done(RequestRecord {
+                id: req.id,
+                origin: ctx.id,
+                executor,
+                kind: ExecKind::Duel,
+                prompt_tokens: req.prompt_tokens,
+                output_tokens: req.output_tokens,
+                submitted_at: req.submitted_at,
+                completed_at: now,
+                slo_deadline: req.slo_deadline,
+                synthetic: true,
+            }));
+        }
+
+        if both_in {
+            actions.extend(self.dispatch_judges(ctx, pending, response.id, now));
+        }
+        actions
+    }
+
+    fn dispatch_judges(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        pending: &mut HashMap<RequestId, PendingDelegation>,
+        duel_id: RequestId,
+        now: Time,
+    ) -> Vec<Action> {
+        ctx.refresh_snapshot(now);
+        // Judges: PoS-sampled, excluding the two executors (impartiality).
+        // Duels are rare, so cloning the cached snapshot for the exclusion
+        // filter is fine; the per-request path never clones.
+        let mut pool = ctx.snaps.clone_snapshot();
+        let d = self.duels.get_mut(&duel_id).expect("duel exists");
+        let execs = d.executors;
+        pool.retain(|n| n != execs[0] && n != execs[1]);
+        let judges = pool.sample_distinct(ctx.rng, ctx.system.judges);
+        if judges.is_empty() {
+            // No impartial judges available — settle as a wash (no
+            // redistribution), keep the duel out of stats.
+            self.duels.remove(&duel_id);
+            pending.remove(&duel_id);
+            return vec![];
+        }
+        d.assign_judges(judges.clone());
+        let (a, b) = (d.responses[0].clone(), d.responses[1].clone());
+        let est = d.request.output_tokens.saturating_mul(2).clamp(64, 8192);
+        judges
+            .into_iter()
+            .map(|j| Action::Send {
+                to: j,
+                msg: Message::JudgeAssign {
+                    duel_id,
+                    resp_a: a.clone(),
+                    resp_b: b.clone(),
+                    est_tokens: est,
+                },
+            })
+            .collect()
+    }
+
+    /// We were drafted as a judge: evaluating costs real compute, so a
+    /// synthetic evaluation request goes on our own backend.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_judge_assign(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        from: NodeId,
+        duel_id: RequestId,
+        resp_a: Response,
+        resp_b: Response,
+        est_tokens: u32,
+        now: Time,
+    ) -> Vec<Action> {
+        ctx.stats.judge_evals += 1;
+        // Judging costs real compute: enqueue a synthetic evaluation request
+        // on our own backend (reading both answers + a short verdict).
+        let seq = self.synth_seq;
+        self.synth_seq += 1;
+        let eval_req = Request {
+            id: RequestId { origin: ctx.id, seq },
+            prompt_tokens: est_tokens,
+            output_tokens: JUDGE_OUTPUT_TOKENS,
+            submitted_at: now,
+            slo_deadline: f64::INFINITY,
+            synthetic: true,
+            payload: vec![],
+        };
+        self.judge_tasks.insert(
+            eval_req.id,
+            JudgeTask { duel_id, origin: from, resp_a, resp_b },
+        );
+        ctx.execute_locally(eval_req, ExecKind::Judge, now)
+    }
+
+    /// A judge's verdict arrived at the duel origin; on quorum, settle:
+    /// winner reward, loser slash, judge rewards (§4.2).
+    pub fn on_judge_verdict(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        pending: &mut HashMap<RequestId, PendingDelegation>,
+        from: NodeId,
+        duel_id: RequestId,
+        winner: NodeId,
+        now: Time,
+    ) -> Vec<Action> {
+        let Some(d) = self.duels.get_mut(&duel_id) else {
+            return vec![];
+        };
+        let Some(outcome) = d.add_verdict(from, winner) else {
+            return vec![];
+        };
+        let judges = d.judges.clone();
+        self.duels.remove(&duel_id);
+        pending.remove(&duel_id);
+        let mut ops = vec![
+            CreditOp::Mint {
+                to: outcome.winner,
+                amount: ctx.system.duel_reward,
+                reason: OpReason::DuelWin(duel_id),
+            },
+            CreditOp::Slash {
+                from: outcome.loser,
+                amount: ctx.system.duel_penalty,
+                reason: OpReason::DuelLoss(duel_id),
+            },
+        ];
+        for j in judges {
+            ops.push(CreditOp::Mint {
+                to: j,
+                amount: ctx.system.judge_reward,
+                reason: OpReason::JudgeReward(duel_id),
+            });
+        }
+        let mut actions = ctx.ledger_submit(ops, now);
+        actions.push(Action::DuelSettled(outcome));
+        actions
+    }
+
+    /// Our judge evaluation finished on the backend: compare and report.
+    pub fn on_judge_completion(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        c: Completion,
+    ) -> Vec<Action> {
+        let Some(task) = self.judge_tasks.remove(&c.request.id) else {
+            return vec![];
+        };
+        let winner =
+            duel_mech::judge_compare(&task.resp_a, &task.resp_b, ctx.rng);
+        vec![
+            Action::Send {
+                to: task.origin,
+                msg: Message::JudgeVerdict { duel_id: task.duel_id, winner },
+            },
+            // Judge work is synthetic overhead (§7.1 accounting).
+            Action::Done(RequestRecord {
+                id: c.request.id,
+                origin: ctx.id,
+                executor: ctx.id,
+                kind: ExecKind::Judge,
+                prompt_tokens: c.request.prompt_tokens,
+                output_tokens: c.request.output_tokens,
+                submitted_at: c.request.submitted_at,
+                completed_at: c.finished_at,
+                slo_deadline: c.request.slo_deadline,
+                synthetic: true,
+            }),
+        ]
+    }
+
+    /// The duel's pending slot timed out at the origin. If nobody answered
+    /// the user yet, fall back locally; either way the duel is abandoned
+    /// (no settlement) — a judge or executor died.
+    pub fn on_duel_timeout(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        id: RequestId,
+        req: Request,
+        now: Time,
+    ) -> Vec<Action> {
+        let d = self.duels.remove(&id);
+        if let Some(d) = d {
+            if !d.user_answered {
+                // Neither executor answered: local fallback.
+                ctx.stats.fallback_local += 1;
+                return ctx.execute_locally(req, ExecKind::Local, now);
+            }
+        }
+        vec![]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::events::{Action, Event};
+    use super::super::msg::Message;
+    use super::super::node::testutil::{mk_node, user_req};
+    use super::super::node::Node;
+    use crate::gossip::{GossipConfig, PeerView};
+    use crate::ledger::{Ledger, SharedLedger};
+    use crate::policy::{NodePolicy, SystemPolicy};
+    use crate::types::NodeId;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn duel_roundtrip_settles_credits() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut nodes: Vec<Node> = (0..5)
+            .map(|i| {
+                let mut n = mk_node(i, NodePolicy::default(), &shared);
+                n.policy.accept_freq = 1.0;
+                // The hand-rolled pump below advances time in 50 s jumps
+                // with no gossip rounds, so disable heartbeat aging.
+                n.view = PeerView::new(
+                    NodeId(i),
+                    GossipConfig { suspect_after: 1e12, ..Default::default() },
+                    0.0,
+                );
+                n
+            })
+            .collect();
+        // Node 0 always duels.
+        nodes[0].system.duel_rate = 1.0;
+        nodes[0].policy.target_utilization = 0.0;
+        nodes[0].policy.offload_freq = 1.0;
+        for i in 1..5u32 {
+            nodes[0].view.merge(&vec![(NodeId(i), 1, true, 0, 0)], 0.0);
+        }
+
+        // Kick off: two Delegate{duel} sends.
+        let a = nodes[0].handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+        let delegates: Vec<(NodeId, Message)> = a
+            .iter()
+            .filter_map(|x| match x {
+                Action::Send { to, msg: m @ Message::Delegate { .. } } => {
+                    Some((*to, m.clone()))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(delegates.len(), 2);
+
+        // Pump the whole network until quiet (mini event loop).
+        let mut inbox: Vec<(NodeId, NodeId, Message)> = delegates
+            .iter()
+            .map(|(to, m)| (*to, NodeId(0), m.clone()))
+            .collect();
+        let mut t = 1.0;
+        let mut settled = None;
+        let mut guard = 0;
+        while !inbox.is_empty() && guard < 1000 {
+            guard += 1;
+            let (to, from, msg) = inbox.remove(0);
+            let actions = nodes[to.0 as usize].handle(
+                Event::Message { from, msg },
+                t,
+            );
+            // Also run backends forward generously.
+            t += 50.0;
+            for (i, n) in nodes.iter_mut().enumerate() {
+                for act in n.handle(Event::BackendWake, t) {
+                    match act {
+                        Action::Send { to, msg } => {
+                            inbox.push((to, NodeId(i as u32), msg))
+                        }
+                        Action::DuelSettled(o) => settled = Some(o),
+                        _ => {}
+                    }
+                }
+            }
+            for act in actions {
+                match act {
+                    Action::Send { to: t2, msg } => inbox.push((t2, to, msg)),
+                    Action::DuelSettled(o) => settled = Some(o),
+                    _ => {}
+                }
+            }
+        }
+        let outcome = settled.expect("duel settled");
+        assert_ne!(outcome.winner, outcome.loser);
+        // Winner got R_add minted on top of base pay; loser lost stake.
+        let sys = SystemPolicy::default();
+        let pol = NodePolicy::default();
+        let (winner_total, loser_stake) = {
+            let l = shared.lock().unwrap();
+            (
+                l.balance(outcome.winner) + l.stake(outcome.winner),
+                l.stake(outcome.loser),
+            )
+        };
+        assert_eq!(
+            winner_total,
+            sys.genesis_credits + sys.base_reward + sys.duel_reward
+        );
+        assert_eq!(loser_stake, pol.stake - sys.duel_penalty);
+    }
+}

@@ -1,0 +1,296 @@
+//! The gossip driving layer: round cadence, delta vs. anti-entropy form
+//! selection, suspicion probes, leave/join announcements, and the
+//! incoming-gossip handlers — the coordinator-side driver around
+//! [`crate::gossip::PeerView`].
+//!
+//! Latency-feed integration rides along: outgoing pushes are stamped so
+//! pull replies measure live RTTs, and same-region RTT summaries are
+//! piggybacked on deltas (see `latency_feed`).
+
+use super::ctx::Ctx;
+use super::events::Action;
+use super::msg::Message;
+use crate::gossip::{Digest, Heartbeats};
+use crate::latency::RegionRtts;
+use crate::types::{NodeId, Time};
+
+/// Gossip round cadence state.
+#[derive(Debug)]
+pub(crate) struct GossipDriver {
+    last_gossip: Time,
+    /// Gossip rounds completed — drives the delta/anti-entropy cadence.
+    gossip_round: u64,
+}
+
+impl GossipDriver {
+    pub fn new(now: Time) -> Self {
+        GossipDriver { last_gossip: now - 1e9, gossip_round: 0 }
+    }
+
+    /// The single gossip-broadcast path: one wave to `targets`, shared by
+    /// the regular tick round, leave/join announcements and suspicion
+    /// probes. `full` sends the complete digest (anti-entropy form, built
+    /// once and cloned per target); otherwise each target gets its own
+    /// delta, and empty exchanges are skipped entirely.
+    pub fn send(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        targets: &[NodeId],
+        full: bool,
+        now: Time,
+    ) -> Vec<Action> {
+        let mut out = Vec::with_capacity(targets.len());
+        if full {
+            if targets.is_empty() {
+                return out;
+            }
+            let digest = ctx.view.digest();
+            for t in targets {
+                ctx.view.mark_synced(*t);
+                ctx.feed.stamp_gossip_push(*t, now);
+                out.push(Action::Send {
+                    to: *t,
+                    msg: Message::Gossip { digest: digest.clone() },
+                });
+            }
+        } else {
+            for t in targets {
+                let (delta, heartbeats) = ctx.view.delta_for(*t, now);
+                if delta.is_empty() && heartbeats.is_empty() {
+                    continue;
+                }
+                let rtts = ctx.feed.rtts_for(ctx.view, *t, now);
+                ctx.feed.stamp_gossip_push(*t, now);
+                out.push(Action::Send {
+                    to: *t,
+                    msg: Message::GossipDelta { delta, heartbeats, rtts },
+                });
+            }
+        }
+        out
+    }
+
+    /// Run a gossip round if one is due (§A.2): deltas on regular rounds,
+    /// the full digest on the first and every `anti_entropy_every`-th
+    /// round, and always for the suspicion probe (a heal must pull the
+    /// whole view back in).
+    pub fn tick(&mut self, ctx: &mut Ctx<'_>, now: Time) -> Vec<Action> {
+        if now - self.last_gossip < ctx.view.config().interval {
+            return vec![];
+        }
+        self.last_gossip = now;
+        self.gossip_round += 1;
+        ctx.view.heartbeat(now);
+        let ae = ctx.view.config().anti_entropy_every;
+        let full = ae <= 1 || self.gossip_round % ae == 1;
+        let (regular, suspect) = ctx.view.pick_round_targets(ctx.rng, now);
+        let mut actions = self.send(ctx, &regular, full, now);
+        if let Some(s) = suspect {
+            actions.extend(self.send(ctx, &[s], true, now));
+        }
+        actions
+    }
+
+    /// Incoming full digest (push half of an anti-entropy exchange):
+    /// merge and answer with our full view.
+    pub fn on_gossip(
+        ctx: &mut Ctx<'_>,
+        from: NodeId,
+        digest: &Digest,
+        now: Time,
+    ) -> Vec<Action> {
+        ctx.view.merge(digest, now);
+        let reply = ctx.view.digest();
+        ctx.view.mark_synced(from);
+        vec![Action::Send {
+            to: from,
+            msg: Message::GossipReply { digest: reply },
+        }]
+    }
+
+    /// Pull half of a full-digest push-pull we initiated: a measured
+    /// gossip round trip for the estimator, then merge.
+    pub fn on_gossip_reply(
+        ctx: &mut Ctx<'_>,
+        from: NodeId,
+        digest: &Digest,
+        now: Time,
+    ) -> Vec<Action> {
+        ctx.feed.observe_gossip_reply(ctx.view, from, now);
+        ctx.view.merge(digest, now);
+        vec![]
+    }
+
+    /// Incoming delta push: merge (entries + heartbeats + piggybacked
+    /// RTTs), then answer with our own delta minus whatever we just
+    /// accepted from the initiator (no echo). An empty exchange is
+    /// skipped — nothing to learn, no bytes burned.
+    pub fn on_delta(
+        ctx: &mut Ctx<'_>,
+        from: NodeId,
+        delta: &Digest,
+        heartbeats: &Heartbeats,
+        rtts: &RegionRtts,
+        now: Time,
+    ) -> Vec<Action> {
+        ctx.feed.merge_rtts(rtts, now);
+        let mut fresh = ctx.view.merge(delta, now);
+        fresh.extend(ctx.view.merge_heartbeats(heartbeats, now));
+        fresh.sort_unstable();
+        let (delta, heartbeats) =
+            ctx.view.delta_for_excluding(from, now, &fresh);
+        if delta.is_empty() && heartbeats.is_empty() {
+            vec![]
+        } else {
+            let rtts = ctx.feed.rtts_for(ctx.view, from, now);
+            vec![Action::Send {
+                to: from,
+                msg: Message::GossipDeltaReply { delta, heartbeats, rtts },
+            }]
+        }
+    }
+
+    /// Pull half of a delta exchange we initiated.
+    pub fn on_delta_reply(
+        ctx: &mut Ctx<'_>,
+        from: NodeId,
+        delta: &Digest,
+        heartbeats: &Heartbeats,
+        rtts: &RegionRtts,
+        now: Time,
+    ) -> Vec<Action> {
+        ctx.feed.observe_gossip_reply(ctx.view, from, now);
+        ctx.feed.merge_rtts(rtts, now);
+        ctx.view.merge(delta, now);
+        ctx.view.merge_heartbeats(heartbeats, now);
+        vec![]
+    }
+
+    /// Goodbye gossip so the network learns quickly (Fig. 5b) — always
+    /// the full digest (our departure is membership news). The composition
+    /// root flips `online` off before calling.
+    pub fn on_leave(&mut self, ctx: &mut Ctx<'_>, now: Time) -> Vec<Action> {
+        ctx.view.announce_leave(now);
+        let peers = ctx.view.alive_peers(now);
+        self.send(ctx, &peers, true, now)
+    }
+
+    /// (Re)join: heartbeat flips us back online in our own digest,
+    /// bootstrap peers become contactable again, and the per-peer delta
+    /// floors reset — after downtime we no longer know what peers saw.
+    pub fn on_join(&mut self, ctx: &mut Ctx<'_>, now: Time) -> Vec<Action> {
+        ctx.view.heartbeat(now);
+        ctx.view.refresh(now);
+        self.last_gossip = now;
+        let targets = ctx.view.pick_targets(ctx.rng, now);
+        self.send(ctx, &targets, true, now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::events::{Action, Event};
+    use super::super::msg::Message;
+    use super::super::node::testutil::mk_node;
+    use crate::latency::LatencyConfig;
+    use crate::ledger::SharedLedger;
+    use crate::policy::NodePolicy;
+    use crate::types::NodeId;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn tick_gossip_uses_deltas_between_anti_entropy_rounds() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut a = mk_node(0, NodePolicy::default(), &shared);
+        let mut b = mk_node(1, NodePolicy::default(), &shared);
+        a.view.add_seed(NodeId(1), 0, 0, 0.0);
+        b.view.add_seed(NodeId(0), 0, 0, 0.0);
+        let gossip_kinds = |actions: &[Action]| -> Vec<&'static str> {
+            actions
+                .iter()
+                .filter_map(|x| match x {
+                    Action::Send { msg, .. } => Some(msg.kind()),
+                    _ => None,
+                })
+                .collect()
+        };
+        // Round 1 bootstraps with the full digest (anti-entropy form)...
+        let out = a.handle(Event::Tick, 1.0);
+        assert_eq!(gossip_kinds(&out), vec!["gossip"]);
+        // ...subsequent rounds ship deltas.
+        let out = a.handle(Event::Tick, 2.0);
+        assert_eq!(gossip_kinds(&out), vec!["gossip_delta"]);
+        // The delta carries our heartbeat: the receiver keeps us alive
+        // without ever seeing another full digest.
+        let delta = out
+            .iter()
+            .find_map(|x| match x {
+                Action::Send { msg: m @ Message::GossipDelta { .. }, .. } => {
+                    Some(m.clone())
+                }
+                _ => None,
+            })
+            .expect("delta sent");
+        b.handle(Event::Message { from: NodeId(0), msg: delta }, 2.1);
+        assert!(b.view.is_alive(NodeId(0), 2.1));
+    }
+
+    #[test]
+    fn leave_gossips_goodbye() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut n = mk_node(0, NodePolicy::default(), &shared);
+        n.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        let a = n.handle(Event::Leave, 1.0);
+        assert!(a.iter().any(|x| matches!(
+            x,
+            Action::Send { to: NodeId(1), msg: Message::Gossip { .. } }
+        )));
+        // Our own digest must mark us offline.
+        let e = n.view.entry(NodeId(0)).unwrap();
+        assert!(!e.online);
+    }
+
+    #[test]
+    fn gossip_deltas_piggyback_region_rtts_to_same_region_peers() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut a = mk_node(0, NodePolicy::default(), &shared);
+        let mut b = mk_node(1, NodePolicy::default(), &shared);
+        let prior = vec![vec![0.005, 0.080], vec![0.080, 0.005]];
+        a.set_locality(0, prior.clone(), LatencyConfig::default());
+        b.set_locality(0, prior, LatencyConfig::default());
+        a.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        b.view.merge(&vec![(NodeId(0), 1, true, 0, 0)], 0.0);
+        // a directly measured region 1 (say via probes).
+        a.latency_estimator_mut().unwrap().observe_rtt(1, 2.0, 0.0);
+        // Round 1 is the full-digest bootstrap; round 2 ships a delta with
+        // the measured row piggybacked (same-region peer, first share).
+        a.handle(Event::Tick, 1.0);
+        let out = a.handle(Event::Tick, 2.0);
+        let delta = out
+            .iter()
+            .find_map(|x| match x {
+                Action::Send { msg: m @ Message::GossipDelta { .. }, .. } => {
+                    Some(m.clone())
+                }
+                _ => None,
+            })
+            .expect("delta sent");
+        let Message::GossipDelta { ref rtts, .. } = delta else {
+            unreachable!()
+        };
+        assert!(
+            !rtts.is_empty(),
+            "same-region delta must carry RTT summaries"
+        );
+        // b merges the summary: its estimate moves off the prior with no
+        // direct measurement of its own — regions without direct traffic
+        // still converge.
+        let before = b.latency_estimator().unwrap().expected_from_me(1, 2.1);
+        b.handle(Event::Message { from: NodeId(0), msg: delta }, 2.1);
+        let after = b.latency_estimator().unwrap().expected_from_me(1, 2.1);
+        assert!(
+            after > before,
+            "piggybacked summary ignored: {before} -> {after}"
+        );
+    }
+}

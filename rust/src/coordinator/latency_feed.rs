@@ -1,0 +1,308 @@
+//! RTT plumbing between the node's live traffic and its
+//! [`LatencyEstimator`] — the coordinator-side half of `crate::latency`.
+//!
+//! The feed owns the estimator plus the attribution bookkeeping that turns
+//! ambient traffic into clean samples:
+//!
+//! * probe→accept/reject round trips and delegation-response freshness
+//!   touches ([`observe_peer_rtt`](LatencyFeed::observe_peer_rtt),
+//!   [`touch_peer`](LatencyFeed::touch_peer));
+//! * probe-timeout penalties, so a partitioned region is shed within a few
+//!   timeouts — long before gossip liveness aging notices;
+//! * gossip push→pull stamps with ambiguity protection
+//!   ([`stamp_gossip_push`](LatencyFeed::stamp_gossip_push));
+//! * rate-limited same-region RTT summaries piggybacked on gossip deltas
+//!   ([`rtts_for`](LatencyFeed::rtts_for)).
+//!
+//! Region resolution goes through the gossip view's region tags; unknown
+//! or garbage tags are never fed (and score conservatively at read time).
+
+use std::collections::HashMap;
+
+use super::dispatch::PROBE_TIMEOUT;
+use crate::gossip::PeerView;
+use crate::latency::{LatencyConfig, LatencyEstimator, RegionRtts};
+use crate::types::{NodeId, Time};
+
+/// Live per-region latency knowledge + the RTT attribution state.
+/// `None` estimator = no locality information: dispatch stays region-blind
+/// regardless of `latency_penalty`.
+#[derive(Debug, Default)]
+pub(crate) struct LatencyFeed {
+    lat: Option<LatencyEstimator>,
+    /// Bumped on every [`set_locality`](LatencyFeed::set_locality) — part
+    /// of the snapshot-cache key.
+    locality_epoch: u64,
+    /// Gossip push send-times awaiting a pull reply, per peer. Only
+    /// *unambiguous* exchanges are measured: a second push while one is
+    /// still unanswered clears the stamp and skips measurement for that
+    /// round, because a reply could then match either push.
+    gossip_sent_at: HashMap<NodeId, Time>,
+    /// Last time region-RTT summaries were piggybacked to each peer
+    /// (`LatencyConfig::share_every` rate limit).
+    rtts_sent_at: HashMap<NodeId, Time>,
+}
+
+impl LatencyFeed {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install the pristine inter-region latency matrix as the live
+    /// estimator's cold-start prior. An empty matrix clears locality
+    /// (region-blind dispatch). The caller (the composition root) also
+    /// tags the gossip view with the region.
+    pub fn set_locality(
+        &mut self,
+        region: u32,
+        prior: Vec<Vec<f64>>,
+        cfg: LatencyConfig,
+    ) {
+        self.lat = if prior.is_empty() {
+            None
+        } else {
+            Some(LatencyEstimator::new(region, prior, cfg))
+        };
+        self.locality_epoch += 1;
+    }
+
+    pub fn estimator(&self) -> Option<&LatencyEstimator> {
+        self.lat.as_ref()
+    }
+
+    pub fn estimator_mut(&mut self) -> Option<&mut LatencyEstimator> {
+        self.lat.as_mut()
+    }
+
+    pub fn has_estimator(&self) -> bool {
+        self.lat.is_some()
+    }
+
+    /// `(locality epoch, drift-quantized estimator version)` — the feed's
+    /// contribution to the snapshot-cache key.
+    pub fn cache_key(&self) -> (u64, u64) {
+        (self.locality_epoch, self.lat.as_ref().map_or(0, |l| l.version()))
+    }
+
+    /// Live one-way latency estimate to `peer` per its gossiped region tag
+    /// (0.0 when we have no locality information). Peers with no known
+    /// region tag — or a garbage one — get the estimator's *conservative*
+    /// estimate (worst own-row prior), never region 0's row: an unknown
+    /// peer must not accidentally score as the best-connected one.
+    pub fn expected_latency_to(
+        &self,
+        view: &PeerView,
+        peer: NodeId,
+        now: Time,
+    ) -> f64 {
+        let Some(est) = &self.lat else {
+            return 0.0;
+        };
+        match view.region_of(peer) {
+            Some(r) => est.expected_from_me(r, now),
+            None => est.conservative(),
+        }
+    }
+
+    /// Latency estimate to the nearest live peer — the `should_offload`
+    /// locality term. `Some(0.0)` in flat worlds and for region-blind
+    /// policies (no iteration, no RNG impact, no wasted hot-path scan);
+    /// `None` when locality is active but **no live peer exists** — the
+    /// caller must treat that as an explicit serve-locally case rather
+    /// than feeding a sentinel into the offload damping math. Scans the
+    /// view's online index in place — no per-request allocation.
+    pub fn nearest_peer_latency(
+        &self,
+        view: &PeerView,
+        latency_penalty: f64,
+        now: Time,
+    ) -> Option<f64> {
+        if latency_penalty <= 0.0 || self.lat.is_none() {
+            return Some(0.0);
+        }
+        view.online_peers()
+            .iter()
+            .copied()
+            .filter(|p| view.is_alive(*p, now))
+            .map(|p| self.expected_latency_to(view, p, now))
+            .reduce(f64::min)
+    }
+
+    /// Feed a measured request→reply round trip with `peer` into the live
+    /// estimator (no-op without locality information or when the peer's
+    /// region is unknown).
+    pub fn observe_peer_rtt(
+        &mut self,
+        view: &PeerView,
+        peer: NodeId,
+        rtt: Time,
+        now: Time,
+    ) {
+        let Some(region) = view.region_of(peer) else {
+            return;
+        };
+        if let Some(est) = self.lat.as_mut() {
+            est.observe_rtt(region, rtt, now);
+        }
+    }
+
+    /// A probe deadline expired: the candidate — or the path to it — is
+    /// dead or drastically slow. Feed the timeout floor as a penalty
+    /// observation so dispatch sheds the region within a few timeouts.
+    pub fn observe_probe_timeout(
+        &mut self,
+        view: &PeerView,
+        candidate: NodeId,
+        now: Time,
+    ) {
+        let Some(region) = view.region_of(candidate) else {
+            return;
+        };
+        if let Some(est) = self.lat.as_mut() {
+            est.observe_timeout(region, PROBE_TIMEOUT, now);
+        }
+    }
+
+    /// Evidence that the path to `peer`'s region is alive without a clean
+    /// latency sample (delegation responses mix network and compute time).
+    pub fn touch_peer(&mut self, view: &PeerView, peer: NodeId, now: Time) {
+        let Some(region) = view.region_of(peer) else {
+            return;
+        };
+        if let Some(est) = self.lat.as_mut() {
+            est.touch(region, now);
+        }
+    }
+
+    /// Stamp an outgoing gossip push so the pull reply measures a live
+    /// RTT — but only when no earlier push to this peer is still
+    /// unanswered. If one is, a future reply could match either push, so
+    /// the stamp is cleared and this round goes unmeasured; the next
+    /// uncontended push re-arms it. Gossip targets rotate, so consecutive
+    /// pushes to the same peer are the exception and most exchanges stay
+    /// measurable.
+    pub fn stamp_gossip_push(&mut self, peer: NodeId, now: Time) {
+        match self.gossip_sent_at.entry(peer) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                e.remove(); // ambiguous attribution: skip this round
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(now);
+            }
+        }
+    }
+
+    /// Match an incoming gossip pull reply against its push stamp and feed
+    /// the estimator. Samples slower than [`PROBE_TIMEOUT`] are discarded:
+    /// paths that slow are the probe-timeout penalty's job, and a stamp
+    /// that old may predate a partition heal.
+    pub fn observe_gossip_reply(
+        &mut self,
+        view: &PeerView,
+        peer: NodeId,
+        now: Time,
+    ) {
+        if let Some(t0) = self.gossip_sent_at.remove(&peer) {
+            let rtt = (now - t0).max(0.0);
+            if rtt <= PROBE_TIMEOUT {
+                self.observe_peer_rtt(view, peer, rtt, now);
+            }
+        }
+    }
+
+    /// Merge region-RTT summaries a peer piggybacked on its gossip.
+    pub fn merge_rtts(&mut self, rtts: &RegionRtts, now: Time) {
+        if let Some(est) = self.lat.as_mut() {
+            est.merge(rtts, now);
+        }
+    }
+
+    /// Region-RTT summaries to piggyback on a gossip delta to `peer`:
+    /// same-region peers only (they share our vantage point), rate-limited
+    /// to one summary per `LatencyConfig::share_every` seconds per peer so
+    /// the byte overhead stays negligible at fleet scale.
+    pub fn rtts_for(
+        &mut self,
+        view: &PeerView,
+        peer: NodeId,
+        now: Time,
+    ) -> RegionRtts {
+        let Some(est) = &self.lat else {
+            return Vec::new();
+        };
+        if view.region_of(peer) != Some(est.my_region()) {
+            return Vec::new();
+        }
+        let due = self
+            .rtts_sent_at
+            .get(&peer)
+            .is_none_or(|t| now - *t >= est.config().share_every);
+        if !due {
+            return Vec::new();
+        }
+        let rtts = est.share(now);
+        if !rtts.is_empty() {
+            self.rtts_sent_at.insert(peer, now);
+        }
+        rtts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::node::testutil::mk_node;
+    use crate::ledger::SharedLedger;
+    use crate::latency::LatencyConfig;
+    use crate::policy::NodePolicy;
+    use crate::types::NodeId;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn unknown_region_peer_scores_conservative_latency() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut n0 = mk_node(0, NodePolicy::default(), &shared);
+        n0.set_locality(
+            0,
+            vec![vec![0.005, 0.100], vec![0.100, 0.005]],
+            LatencyConfig::default(),
+        );
+        // Known near peer in our own region.
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        // Peer gossiping a garbage region tag (outside the matrix).
+        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 9)], 0.0);
+        let lat = |n: &super::super::node::Node, p: u32| {
+            n.feed.expected_latency_to(&n.view, NodeId(p), 0.0)
+        };
+        assert_eq!(lat(&n0, 1), 0.005);
+        // Garbage tags and wholly unknown peers both get the worst own-row
+        // prior — never region 0's best-row latency.
+        assert_eq!(lat(&n0, 2), 0.100);
+        assert_eq!(lat(&n0, 77), 0.100);
+    }
+
+    #[test]
+    fn ambiguous_gossip_push_skips_measurement() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut n0 = mk_node(0, NodePolicy::default(), &shared);
+        n0.set_locality(
+            0,
+            vec![vec![0.005, 0.080], vec![0.080, 0.005]],
+            LatencyConfig::default(),
+        );
+        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 1)], 0.0);
+        let prior = n0.feed.expected_latency_to(&n0.view, NodeId(1), 0.0);
+        // Two pushes without an intervening reply: the stamp is cleared,
+        // so the (late, slow-looking) reply must not move the estimate.
+        n0.feed.stamp_gossip_push(NodeId(1), 0.0);
+        n0.feed.stamp_gossip_push(NodeId(1), 1.0);
+        let view = n0.view.clone();
+        n0.feed.observe_gossip_reply(&view, NodeId(1), 2.5);
+        let after = n0.feed.expected_latency_to(&n0.view, NodeId(1), 2.5);
+        assert_eq!(after, prior, "ambiguous exchange fed the estimator");
+        // A fresh uncontended push re-arms measurement.
+        n0.feed.stamp_gossip_push(NodeId(1), 3.0);
+        n0.feed.observe_gossip_reply(&view, NodeId(1), 4.0);
+        let measured = n0.feed.expected_latency_to(&n0.view, NodeId(1), 4.0);
+        assert!(measured > prior, "clean exchange ignored: {measured}");
+    }
+}

@@ -1,15 +1,29 @@
-//! Layer-3 coordinator — the paper's system contribution.
+//! Layer-3 coordinator — the paper's system contribution, as a layered
+//! pipeline of focused submodules around a thin composition root.
 //!
-//! * [`node::Node`] — the five-manager node of Figure 2 as a sans-io state
-//!   machine (`handle(Event, now) -> Vec<Action>`).
+//! * [`node::Node`] — the composition root: owns the state, routes
+//!   `Event`s through the layers (`handle(Event, now) -> Vec<Action>`).
+//! * [`dispatch`] — admission + probe/delegate/fallback state machine,
+//!   decisions delegated to the pluggable `ParticipationPolicy`.
+//! * [`duel`] — duel + judge settlement.
+//! * [`gossip_driver`] — gossip cadence, delta/anti-entropy, leave/join.
+//! * [`latency_feed`] — RTT plumbing into the live latency estimator.
+//! * [`snapshot`] — cached, policy-scored stake snapshots for dispatch.
+//! * [`ctx`] — the per-activation borrow bundle + memoized alive-peer view.
 //! * [`msg::Message`] — the inter-node wire vocabulary (+ JSON codec).
 //! * [`events`] — the Event/Action interface between nodes and runners.
 //! * [`ledger_manager`] — shared-vs-blockchain credit ledger access.
 
+mod ctx;
+mod dispatch;
+mod duel;
 pub mod events;
+mod gossip_driver;
+mod latency_feed;
 pub mod ledger_manager;
 pub mod msg;
 pub mod node;
+mod snapshot;
 
 pub use events::{Action, Event};
 pub use ledger_manager::LedgerManager;

@@ -1,98 +1,46 @@
-//! The WWW.Serve node: Figure 2's five managers wired into one sans-io state
-//! machine.
+//! The WWW.Serve node as a thin composition root: Figure 2's five managers
+//! decomposed into a layered pipeline of focused submodules, with `Node`
+//! owning the state and routing `Event`s through the layers.
 //!
-//! * **Request Manager** — admission, the pending-delegation state machine
-//!   (probe → delegate → response, with timeouts and local fallback).
-//! * **Policy Manager** — the provider's `NodePolicy` decisions.
-//! * **Ledger Manager** — credit reads/writes (`ledger_manager.rs`).
-//! * **Model Manager** — the local `Backend` plus executor-side bookkeeping.
-//! * **Communication Manager** — gossip membership + message emission.
+//! * [`dispatch`](super::dispatch) — admission + the probe → delegate →
+//!   response state machine (Request Manager), with the accept/offload
+//!   *decisions* delegated to the pluggable
+//!   [`ParticipationPolicy`](crate::policy::ParticipationPolicy)
+//!   (Policy Manager).
+//! * [`duel`](super::duel) — duel + judge settlement (§4.2).
+//! * [`gossip_driver`](super::gossip_driver) — gossip cadence,
+//!   delta/anti-entropy selection, leave/join (Communication Manager).
+//! * [`latency_feed`](super::latency_feed) — RTT observe/stamp/touch
+//!   plumbing into the live latency estimator.
+//! * [`snapshot`](super::snapshot) — cached, policy-scored stake
+//!   snapshots for delegation draws (§4.1 hot path).
+//! * [`ctx`](super::ctx) — the per-activation borrow bundle the layers
+//!   share, plus the memoized alive-peer view for ledger paths.
 //!
-//! All coordination logic lives in `handle(Event, now) -> Vec<Action>`; the
-//! simulator and the TCP runner are thin drivers around it.
+//! All coordination logic still flows through one interface —
+//! `handle(Event, now) -> Vec<Action>` — so the simulator and the TCP
+//! runner remain thin drivers around it, and a `Node` with the default
+//! participation policy replays the pre-decomposition traces bit for bit
+//! (`rust/tests/replay_equivalence.rs`).
 
-use std::collections::HashMap;
-
+use super::ctx::{Ctx, PeerScratch};
+use super::dispatch::Dispatch;
+use super::duel::DuelCourt;
 use super::events::{Action, Event};
+use super::gossip_driver::GossipDriver;
+use super::latency_feed::LatencyFeed;
 use super::ledger_manager::LedgerManager;
 use super::msg::Message;
-use crate::backend::{Backend, Completion};
-use crate::duel::{self, DuelState};
+use super::snapshot::Snapshots;
+use crate::backend::Backend;
 use crate::gossip::{GossipConfig, PeerView};
-use crate::latency::{LatencyConfig, LatencyEstimator, RegionRtts};
+use crate::latency::{LatencyConfig, LatencyEstimator};
 use crate::ledger::{CreditOp, OpReason};
-use crate::policy::{NodePolicy, SystemPolicy};
-use crate::pos::StakeSnapshot;
-use crate::types::{
-    ExecKind, NodeId, Request, RequestId, RequestRecord, Response, Time,
+use crate::policy::{
+    DefaultPolicy, NodePolicy, ParticipationPolicy, SystemPolicy,
 };
+use crate::types::{ExecKind, NodeId, RequestRecord, Time};
 use crate::util::rng::Rng;
-
-/// Seconds to wait for a probe answer before trying the next candidate.
-const PROBE_TIMEOUT: Time = 3.0;
-/// Multiple of the SLO deadline to wait for a delegated response before
-/// falling back to local execution (covers executor crashes).
-const RESPONSE_TIMEOUT_FACTOR: f64 = 3.0;
-/// Judge evaluation output length (short comparison verdicts).
-const JUDGE_OUTPUT_TOKENS: u32 = 64;
-
-#[derive(Debug, Clone)]
-enum PendingState {
-    /// Waiting for a ProbeAccept/Reject from `candidate`. `sent_at` stamps
-    /// the probe send so the reply measures a live RTT (and a timeout
-    /// penalizes the candidate's region in the latency estimator).
-    Probing {
-        candidate: NodeId,
-        probes_left: usize,
-        sent_at: Time,
-    },
-    /// Waiting for the executor's response.
-    AwaitingResponse { executor: NodeId },
-    /// Waiting for both duel responses.
-    AwaitingDuel,
-}
-
-#[derive(Debug, Clone)]
-struct PendingDelegation {
-    req: Request,
-    state: PendingState,
-    deadline: Time,
-}
-
-/// Executor-side record of who to answer for a delegated request.
-#[derive(Debug, Clone, Copy)]
-struct ExecTicket {
-    origin: NodeId,
-    duel: bool,
-}
-
-/// Judge-side record for an in-flight evaluation.
-#[derive(Debug, Clone)]
-struct JudgeTask {
-    duel_id: RequestId,
-    origin: NodeId,
-    resp_a: Response,
-    resp_b: Response,
-}
-
-/// Cached stake-weighted candidate snapshot (§4.1 hot path). Rebuilding it
-/// per request re-collects the stake table, re-filters liveness and
-/// rebuilds the sampler; at fleet scale that dominates dispatch. The cache
-/// is keyed on everything the snapshot reads: the gossip view's mutation
-/// clock (liveness + region tags), the ledger version (stakes), a coarse
-/// time bucket that bounds heartbeat-aging staleness to one gossip
-/// interval, and the locality inputs that weight the candidates — the
-/// `set_locality` epoch plus the live latency estimator's version, so a
-/// rerouting-sized estimate change reshapes the very next draw instead of
-/// serving a stale reweighted snapshot for up to a gossip interval.
-struct SnapCache {
-    view_clock: u64,
-    ledger_version: u64,
-    time_bucket: u64,
-    locality_epoch: u64,
-    estimator_version: u64,
-    snap: StakeSnapshot,
-}
 
 /// Counters a node keeps about itself (drives policy + metrics).
 #[derive(Debug, Clone, Copy, Default)]
@@ -115,41 +63,20 @@ pub struct Node {
     pub online: bool,
     /// Topology region this node lives in (0 in single-region worlds).
     pub region: u32,
-    /// Live per-region one-way latency estimator: EWMA over observed probe
-    /// and gossip RTTs, seeded from the topology's pristine
-    /// expected-latency matrix as cold-start prior. `None` = no locality
-    /// information, so dispatch stays region-blind regardless of
-    /// `latency_penalty`.
-    lat: Option<LatencyEstimator>,
-    /// Bumped on every `set_locality` — part of the snapshot-cache key.
-    locality_epoch: u64,
-    /// Gossip push send-times awaiting a pull reply, per peer (RTT feed
-    /// for the estimator). Only *unambiguous* exchanges are measured: a
-    /// second push while one is still unanswered clears the stamp and
-    /// skips measurement for that round, because a reply could then match
-    /// either push (empty counter-deltas routinely leave pushes
-    /// unanswered, and mis-attribution would skew the EWMA in whichever
-    /// direction the stamp erred).
-    gossip_sent_at: HashMap<NodeId, Time>,
-    /// Last time region-RTT summaries were piggybacked to each peer
-    /// (`LatencyConfig::share_every` rate limit).
-    rtts_sent_at: HashMap<NodeId, Time>,
+    /// How this provider participates (accept/offload/scoring decisions).
+    /// Defaults to [`DefaultPolicy`]; swap via
+    /// [`set_participation`](Node::set_participation).
+    participation: Box<dyn ParticipationPolicy>,
     backend: Box<dyn Backend>,
     pub view: PeerView,
     ledger: LedgerManager,
     rng: Rng,
-    pending: HashMap<RequestId, PendingDelegation>,
-    duels: HashMap<RequestId, DuelState>,
-    exec_tickets: HashMap<RequestId, ExecTicket>,
-    judge_tasks: HashMap<RequestId, JudgeTask>,
-    /// Synthetic request sequence (judge evals and other self-generated
-    /// work carry our own origin with high seq numbers).
-    synth_seq: u64,
-    last_gossip: Time,
-    /// Gossip rounds completed — drives the delta/anti-entropy cadence.
-    gossip_round: u64,
-    /// Lazily rebuilt stake snapshot (see [`SnapCache`]).
-    snap_cache: Option<SnapCache>,
+    pub(crate) feed: LatencyFeed,
+    pub(crate) snaps: Snapshots,
+    pub(crate) dispatch: Dispatch,
+    pub(crate) court: DuelCourt,
+    pub(crate) gossip: GossipDriver,
+    peers: PeerScratch,
     pub stats: NodeStats,
 }
 
@@ -189,22 +116,17 @@ impl Node {
             system,
             online: true,
             region: 0,
-            lat: None,
-            locality_epoch: 0,
-            gossip_sent_at: HashMap::new(),
-            rtts_sent_at: HashMap::new(),
+            participation: Box::new(DefaultPolicy),
             backend,
             view: PeerView::new(id, gossip_cfg, now),
             ledger,
             rng: Rng::new(seed ^ (0x9E37 + id.0 as u64)),
-            pending: HashMap::new(),
-            duels: HashMap::new(),
-            exec_tickets: HashMap::new(),
-            judge_tasks: HashMap::new(),
-            synth_seq: 1 << 40,
-            last_gossip: now - 1e9,
-            gossip_round: 0,
-            snap_cache: None,
+            feed: LatencyFeed::new(),
+            snaps: Snapshots::new(),
+            dispatch: Dispatch::new(),
+            court: DuelCourt::new(),
+            gossip: GossipDriver::new(now),
+            peers: PeerScratch::default(),
             stats: NodeStats::default(),
         }
     }
@@ -227,20 +149,16 @@ impl Node {
         self.ledger.balance(self.id) + self.ledger.stake(self.id)
     }
 
-    /// Peers currently believed alive.
-    fn alive_peers(&self, now: Time) -> Vec<NodeId> {
-        self.view.alive_peers(now)
+    /// Install a participation behaviour (see
+    /// [`ParticipationPolicy`]). [`DefaultPolicy`] reproduces the scalar
+    /// `NodePolicy` knob behaviour draw-for-draw, so installing it is a
+    /// no-op.
+    pub fn set_participation(&mut self, p: Box<dyn ParticipationPolicy>) {
+        self.participation = p;
     }
 
-    /// Broadcast peers for ledger submissions. Only chain mode sends ledger
-    /// messages; shared mode applies in place and must not pay a per-payment
-    /// alive-peer allocation on the hot path.
-    fn ledger_peers(&self, now: Time) -> Vec<NodeId> {
-        if self.ledger.is_chain() {
-            self.view.alive_peers(now)
-        } else {
-            Vec::new()
-        }
+    pub fn participation(&self) -> &dyn ParticipationPolicy {
+        self.participation.as_ref()
     }
 
     // ---- locality (topology awareness) --------------------------------------
@@ -258,151 +176,63 @@ impl Node {
         cfg: LatencyConfig,
     ) {
         self.region = region;
-        self.lat = if prior.is_empty() {
-            None
-        } else {
-            Some(LatencyEstimator::new(region, prior, cfg))
-        };
-        self.locality_epoch += 1;
+        self.feed.set_locality(region, prior, cfg);
         self.view.set_region(region);
     }
 
     /// Read access to the live latency estimator (None = region-blind).
     pub fn latency_estimator(&self) -> Option<&LatencyEstimator> {
-        self.lat.as_ref()
+        self.feed.estimator()
     }
 
     /// Mutable access for tests and external instrumentation (a TCP runner
     /// measuring transport-level RTTs can feed them here directly).
     pub fn latency_estimator_mut(&mut self) -> Option<&mut LatencyEstimator> {
-        self.lat.as_mut()
+        self.feed.estimator_mut()
     }
 
-    /// Live one-way latency estimate to `peer` per its gossiped region tag
-    /// (0.0 when we have no locality information). Peers with no known
-    /// region tag — or a garbage one — get the estimator's *conservative*
-    /// estimate (worst own-row prior), never region 0's row: an unknown
-    /// peer must not accidentally score as the best-connected one.
-    fn expected_latency_to(&self, peer: NodeId, now: Time) -> f64 {
-        let Some(est) = &self.lat else {
-            return 0.0;
-        };
-        match self.view.region_of(peer) {
-            Some(r) => est.expected_from_me(r, now),
-            None => est.conservative(),
-        }
-    }
-
-    /// Latency estimate to the nearest live peer — the `should_offload`
-    /// locality term. `Some(0.0)` in flat worlds and for region-blind
-    /// policies (no iteration, no RNG impact, no wasted hot-path scan);
-    /// `None` when locality is active but **no live peer exists** — the
-    /// caller must treat that as an explicit serve-locally case rather
-    /// than feeding a sentinel into the offload damping math. Scans the
-    /// view's online index in place — no per-request allocation.
-    fn nearest_peer_latency(&self, now: Time) -> Option<f64> {
-        if self.policy.latency_penalty <= 0.0 || self.lat.is_none() {
-            return Some(0.0);
-        }
-        self.view
-            .online_peers()
-            .iter()
-            .copied()
-            .filter(|p| self.view.is_alive(*p, now))
-            .map(|p| self.expected_latency_to(p, now))
-            .reduce(f64::min)
-    }
-
-    /// Feed a measured request→reply round trip with `peer` into the live
-    /// latency estimator (no-op without locality information or when the
-    /// peer's region is unknown).
-    fn observe_peer_rtt(&mut self, peer: NodeId, rtt: Time, now: Time) {
-        let Some(region) = self.view.region_of(peer) else {
-            return;
-        };
-        if let Some(est) = self.lat.as_mut() {
-            est.observe_rtt(region, rtt, now);
-        }
-    }
-
-    /// A probe deadline expired: the candidate — or the path to it — is
-    /// dead or drastically slow. Feed the timeout floor as a penalty
-    /// observation so dispatch sheds the region within a few timeouts,
-    /// long before gossip liveness aging notices.
-    fn observe_probe_timeout(&mut self, candidate: NodeId, now: Time) {
-        let Some(region) = self.view.region_of(candidate) else {
-            return;
-        };
-        if let Some(est) = self.lat.as_mut() {
-            est.observe_timeout(region, PROBE_TIMEOUT, now);
-        }
-    }
-
-    /// Evidence that the path to `peer`'s region is alive without a clean
-    /// latency sample (delegation responses mix network and compute time).
-    fn touch_peer(&mut self, peer: NodeId, now: Time) {
-        let Some(region) = self.view.region_of(peer) else {
-            return;
-        };
-        if let Some(est) = self.lat.as_mut() {
-            est.touch(region, now);
-        }
-    }
-
-    /// Stamp an outgoing gossip push so the pull reply measures a live
-    /// RTT — but only when no earlier push to this peer is still
-    /// unanswered. If one is, a future reply could match either push, so
-    /// the stamp is cleared and this round goes unmeasured; the next
-    /// uncontended push re-arms it. Gossip targets rotate, so consecutive
-    /// pushes to the same peer are the exception and most exchanges stay
-    /// measurable.
-    fn stamp_gossip_push(&mut self, peer: NodeId, now: Time) {
-        match self.gossip_sent_at.entry(peer) {
-            std::collections::hash_map::Entry::Occupied(e) => {
-                e.remove(); // ambiguous attribution: skip this round
-            }
-            std::collections::hash_map::Entry::Vacant(e) => {
-                e.insert(now);
-            }
-        }
-    }
-
-    /// Match an incoming gossip pull reply against its push stamp and feed
-    /// the estimator. Samples slower than [`PROBE_TIMEOUT`] are discarded:
-    /// paths that slow are the probe-timeout penalty's job, and a stamp
-    /// that old may predate a partition heal.
-    fn observe_gossip_reply(&mut self, peer: NodeId, now: Time) {
-        if let Some(t0) = self.gossip_sent_at.remove(&peer) {
-            let rtt = (now - t0).max(0.0);
-            if rtt <= PROBE_TIMEOUT {
-                self.observe_peer_rtt(peer, rtt, now);
-            }
-        }
-    }
-
-    /// Region-RTT summaries to piggyback on a gossip delta to `peer`:
-    /// same-region peers only (they share our vantage point), rate-limited
-    /// to one summary per [`LatencyConfig::share_every`] seconds per peer
-    /// so the byte overhead stays negligible at fleet scale.
-    fn rtts_for(&mut self, peer: NodeId, now: Time) -> RegionRtts {
-        let Some(est) = &self.lat else {
-            return Vec::new();
-        };
-        if self.view.region_of(peer) != Some(est.my_region()) {
-            return Vec::new();
-        }
-        let due = self
-            .rtts_sent_at
-            .get(&peer)
-            .is_none_or(|t| now - *t >= est.config().share_every);
-        if !due {
-            return Vec::new();
-        }
-        let rtts = est.share(now);
-        if !rtts.is_empty() {
-            self.rtts_sent_at.insert(peer, now);
-        }
-        rtts
+    /// Borrow-split the node into the shared substrate (one [`Ctx`]) and
+    /// the three stateful layers.
+    fn split(
+        &mut self,
+    ) -> (Ctx<'_>, &mut Dispatch, &mut DuelCourt, &mut GossipDriver) {
+        let Node {
+            id,
+            policy,
+            system,
+            participation,
+            backend,
+            view,
+            ledger,
+            rng,
+            feed,
+            snaps,
+            dispatch,
+            court,
+            gossip,
+            peers,
+            stats,
+            ..
+        } = self;
+        (
+            Ctx {
+                id: *id,
+                policy,
+                system,
+                participation: participation.as_ref(),
+                backend: backend.as_mut(),
+                view,
+                ledger,
+                rng,
+                feed,
+                snaps,
+                stats,
+                peers,
+            },
+            dispatch,
+            court,
+            gossip,
+        )
     }
 
     // ---- the event loop ----------------------------------------------------
@@ -416,7 +246,10 @@ impl Node {
             return vec![];
         }
         let mut actions = match event {
-            Event::UserRequest(req) => self.on_user_request(req, now),
+            Event::UserRequest(req) => {
+                let (mut ctx, dispatch, court, _) = self.split();
+                dispatch.on_user_request(&mut ctx, court, req, now)
+            }
             Event::Message { from, msg } => self.on_message(from, msg, now),
             Event::Tick => self.on_tick(now),
             Event::BackendWake => vec![],
@@ -432,739 +265,113 @@ impl Node {
         actions
     }
 
-    // ---- request admission + scheduling (Request/Policy managers) ----------
-
-    fn on_user_request(&mut self, req: Request, now: Time) -> Vec<Action> {
-        self.stats.user_requests += 1;
-        let util = self.backend.utilization();
-        let qlen = self.backend.queue_len();
-        // No live peer at all is an explicit serve-locally case — never a
-        // sentinel distance fed through the offload damping roll.
-        let offload = match self.nearest_peer_latency(now) {
-            Some(near) => {
-                self.policy.should_offload(util, qlen, near, &mut self.rng)
-            }
-            None => false,
-        };
-        if !offload {
-            return self.execute_locally(req, ExecKind::Local, now);
-        }
-        self.try_delegate(req, now)
-    }
-
-    /// Start the delegation state machine (PoS sample → probe). Falls back
-    /// to local execution when no viable peer or unaffordable.
-    fn try_delegate(&mut self, req: Request, now: Time) -> Vec<Action> {
-        // Can we afford the offload payment?
-        if self.ledger.balance(self.id) < self.system.base_reward {
-            self.stats.fallback_local += 1;
-            return self.execute_locally(req, ExecKind::Local, now);
-        }
-        self.refresh_snapshot(now);
-        let candidates =
-            self.snap_cache.as_ref().map_or(0, |c| c.snap.len());
-        if candidates == 0 {
-            self.stats.fallback_local += 1;
-            return self.execute_locally(req, ExecKind::Local, now);
-        }
-
-        // Duel roll (§4.2): a fraction p_d of delegated requests go to two
-        // executors directly.
-        if self.rng.chance(self.system.duel_rate) && candidates >= 2 {
-            return self.start_duel(req, now);
-        }
-
-        let candidate = {
-            let cache = self.snap_cache.as_ref().expect("refreshed above");
-            cache.snap.sample(&mut self.rng)
-        };
-        let Some(candidate) = candidate else {
-            self.stats.fallback_local += 1;
-            return self.execute_locally(req, ExecKind::Local, now);
-        };
-        let probe = Message::Probe {
-            req_id: req.id,
-            prompt_tokens: req.prompt_tokens,
-            output_tokens: req.output_tokens,
-        };
-        self.pending.insert(
-            req.id,
-            PendingDelegation {
-                req,
-                state: PendingState::Probing {
-                    candidate,
-                    probes_left: self.system.max_probes.saturating_sub(1),
-                    sent_at: now,
-                },
-                deadline: now + PROBE_TIMEOUT,
-            },
-        );
-        vec![Action::Send { to: candidate, msg: probe }]
-    }
-
-    fn start_duel(&mut self, req: Request, now: Time) -> Vec<Action> {
-        let execs = {
-            let cache =
-                self.snap_cache.as_ref().expect("refreshed in try_delegate");
-            cache.snap.sample_distinct(&mut self.rng, 2)
-        };
-        if execs.len() < 2 {
-            self.stats.fallback_local += 1;
-            return self.execute_locally(req, ExecKind::Local, now);
-        }
-        self.stats.duels_started += 1;
-        self.stats.delegated_out += 1;
-        let duel = DuelState::new(req.clone(), [execs[0], execs[1]], now);
-        self.pending.insert(
-            req.id,
-            PendingDelegation {
-                req: req.clone(),
-                state: PendingState::AwaitingDuel,
-                deadline: now + req.slo_deadline * RESPONSE_TIMEOUT_FACTOR,
-            },
-        );
-        self.duels.insert(req.id, duel);
-        execs
-            .into_iter()
-            .map(|to| Action::Send {
-                to,
-                msg: Message::Delegate { request: req.clone(), duel: true },
-            })
-            .collect()
-    }
-
-    /// Ensure the cached stake-weighted, liveness-filtered snapshot of
-    /// delegation candidates is current (see [`SnapCache`]). With locality
-    /// information and a positive `latency_penalty`, each candidate's stake
-    /// is damped by `1 / (1 + penalty * latency)` using the **live** EWMA
-    /// latency estimate to the candidate's region — nearer peers win ties,
-    /// distant continents fade from selection, and an observably degraded
-    /// or partitioned path fades within a few observations (§4.1 made
-    /// WAN-aware and reactive). Flat worlds skip the reweight entirely.
-    /// The rebuilt snapshot is alias-prepared, so every subsequent draw is
-    /// O(1).
-    fn refresh_snapshot(&mut self, now: Time) {
-        let view_clock = self.view.clock();
-        let ledger_version = self.ledger.stake_version();
-        let interval = self.view.config().interval.max(1e-6);
-        let time_bucket = (now / interval) as u64;
-        let locality_epoch = self.locality_epoch;
-        let estimator_version = self.lat.as_ref().map_or(0, |l| l.version());
-        if let Some(c) = &self.snap_cache {
-            if c.view_clock == view_clock
-                && c.ledger_version == ledger_version
-                && c.time_bucket == time_bucket
-                && c.locality_epoch == locality_epoch
-                && c.estimator_version == estimator_version
-            {
-                return;
-            }
-        }
-        let mut snap = StakeSnapshot::new(&self.ledger.stakes(), Some(self.id));
-        snap.retain(|n| self.view.is_alive(n, now));
-        if self.policy.latency_penalty > 0.0 && self.lat.is_some() {
-            let penalty = self.policy.latency_penalty;
-            snap.reweight(|n| {
-                1.0 / (1.0 + penalty * self.expected_latency_to(n, now))
-            });
-        }
-        snap.prepare();
-        self.snap_cache = Some(SnapCache {
-            view_clock,
-            ledger_version,
-            time_bucket,
-            locality_epoch,
-            estimator_version,
-            snap,
-        });
-    }
-
-    /// Put a request on our own backend.
-    fn execute_locally(
+    /// Route one peer message to its layer.
+    fn on_message(
         &mut self,
-        req: Request,
-        kind: ExecKind,
+        from: NodeId,
+        msg: Message,
         now: Time,
     ) -> Vec<Action> {
-        if kind == ExecKind::Local {
-            self.stats.served_local += 1;
-        }
-        self.backend.submit(req, kind, now);
-        vec![]
-    }
-
-    // ---- message handling (Communication manager) ---------------------------
-
-    fn on_message(&mut self, from: NodeId, msg: Message, now: Time) -> Vec<Action> {
+        let (mut ctx, dispatch, court, _gossip) = self.split();
         match msg {
-            Message::Probe { req_id, .. } => {
-                let util = self.backend.utilization();
-                let qlen = self.backend.queue_len();
-                let accept =
-                    self.policy.should_accept(util, qlen, &mut self.rng);
-                let reply = if accept {
-                    Message::ProbeAccept { req_id }
-                } else {
-                    Message::ProbeReject { req_id }
-                };
-                vec![Action::Send { to: from, msg: reply }]
+            Message::Probe { req_id, prompt_tokens, output_tokens } => {
+                Dispatch::on_probe(
+                    &mut ctx,
+                    from,
+                    req_id,
+                    prompt_tokens,
+                    output_tokens,
+                )
             }
-            Message::ProbeAccept { req_id } => self.on_probe_accept(from, req_id, now),
-            Message::ProbeReject { req_id } => self.on_probe_reject(from, req_id, now),
+            Message::ProbeAccept { req_id } => {
+                dispatch.on_probe_accept(&mut ctx, from, req_id, now)
+            }
+            Message::ProbeReject { req_id } => {
+                dispatch.on_probe_reject(&mut ctx, from, req_id, now)
+            }
             Message::Delegate { request, duel } => {
-                self.stats.delegated_in += 1;
-                self.exec_tickets
-                    .insert(request.id, ExecTicket { origin: from, duel });
-                let kind = if duel { ExecKind::Duel } else { ExecKind::Delegated };
-                self.execute_locally(request, kind, now)
+                dispatch.on_delegate(&mut ctx, from, request, duel, now)
             }
             Message::DelegateResponse { response, duel } => {
                 // The executor's answer proves the path to its region is
                 // alive (its timing mixes compute with network, so it only
                 // refreshes estimator freshness, not the EWMA).
-                self.touch_peer(from, now);
-                self.on_delegate_response(response, duel, now)
+                ctx.feed.touch_peer(ctx.view, from, now);
+                if duel {
+                    court.on_duel_response(
+                        &mut ctx,
+                        dispatch.pending_mut(),
+                        response,
+                        now,
+                    )
+                } else {
+                    dispatch.on_response(&mut ctx, response, now)
+                }
             }
             Message::Gossip { digest } => {
-                self.view.merge(&digest, now);
-                let reply = self.view.digest();
-                self.view.mark_synced(from);
-                vec![Action::Send {
-                    to: from,
-                    msg: Message::GossipReply { digest: reply },
-                }]
+                GossipDriver::on_gossip(&mut ctx, from, &digest, now)
             }
             Message::GossipReply { digest } => {
-                // Pull half of a push-pull we initiated: a measured gossip
-                // round trip for the estimator.
-                self.observe_gossip_reply(from, now);
-                self.view.merge(&digest, now);
-                vec![]
+                GossipDriver::on_gossip_reply(&mut ctx, from, &digest, now)
             }
             Message::GossipDelta { delta, heartbeats, rtts } => {
-                if let Some(est) = self.lat.as_mut() {
-                    est.merge(&rtts, now);
-                }
-                let mut fresh = self.view.merge(&delta, now);
-                fresh.extend(self.view.merge_heartbeats(&heartbeats, now));
-                fresh.sort_unstable();
-                // Pull half: our own delta back to the initiator, minus
-                // whatever we just accepted from it (no echo). An empty
-                // exchange is skipped — nothing to learn, no bytes burned.
-                let (delta, heartbeats) =
-                    self.view.delta_for_excluding(from, now, &fresh);
-                if delta.is_empty() && heartbeats.is_empty() {
-                    vec![]
-                } else {
-                    let rtts = self.rtts_for(from, now);
-                    vec![Action::Send {
-                        to: from,
-                        msg: Message::GossipDeltaReply {
-                            delta,
-                            heartbeats,
-                            rtts,
-                        },
-                    }]
-                }
+                GossipDriver::on_delta(
+                    &mut ctx, from, &delta, &heartbeats, &rtts, now,
+                )
             }
             Message::GossipDeltaReply { delta, heartbeats, rtts } => {
-                self.observe_gossip_reply(from, now);
-                if let Some(est) = self.lat.as_mut() {
-                    est.merge(&rtts, now);
-                }
-                self.view.merge(&delta, now);
-                self.view.merge_heartbeats(&heartbeats, now);
-                vec![]
+                GossipDriver::on_delta_reply(
+                    &mut ctx, from, &delta, &heartbeats, &rtts, now,
+                )
             }
             Message::JudgeAssign { duel_id, resp_a, resp_b, est_tokens } => {
-                self.on_judge_assign(from, duel_id, resp_a, resp_b, est_tokens, now)
+                court.on_judge_assign(
+                    &mut ctx, from, duel_id, resp_a, resp_b, est_tokens, now,
+                )
             }
-            Message::JudgeVerdict { duel_id, winner } => {
-                self.on_judge_verdict(from, duel_id, winner, now)
-            }
+            Message::JudgeVerdict { duel_id, winner } => court.on_judge_verdict(
+                &mut ctx,
+                dispatch.pending_mut(),
+                from,
+                duel_id,
+                winner,
+                now,
+            ),
             m @ (Message::BlockProposal { .. }
             | Message::BlockVote { .. }
             | Message::BlockCommit { .. }
             | Message::ChainRequest { .. }
             | Message::ChainSnapshot { .. }) => {
-                let peers = self.alive_peers(now);
-                self.ledger.on_message(from, &m, self.id, &peers, now)
+                ctx.ledger_on_message(from, &m, now)
             }
         }
     }
 
-    fn on_probe_accept(
-        &mut self,
-        from: NodeId,
-        req_id: RequestId,
-        now: Time,
-    ) -> Vec<Action> {
-        let Some(p) = self.pending.get_mut(&req_id) else {
-            return vec![]; // stale (already timed out / answered)
-        };
-        let PendingState::Probing { candidate, sent_at, .. } = p.state else {
-            return vec![];
-        };
-        if candidate != from {
-            return vec![]; // answer from a node we no longer care about
-        }
-        self.stats.delegated_out += 1;
-        let req = p.req.clone();
-        p.state = PendingState::AwaitingResponse { executor: from };
-        p.deadline = now + req.slo_deadline * RESPONSE_TIMEOUT_FACTOR;
-        // The probe round trip is a clean network RTT sample.
-        self.observe_peer_rtt(from, (now - sent_at).max(0.0), now);
-        vec![Action::Send {
-            to: from,
-            msg: Message::Delegate { request: req, duel: false },
-        }]
-    }
-
-    fn on_probe_reject(
-        &mut self,
-        from: NodeId,
-        req_id: RequestId,
-        now: Time,
-    ) -> Vec<Action> {
-        let (req, probes_left, sent_at) = {
-            let Some(p) = self.pending.get(&req_id) else {
-                return vec![];
-            };
-            let PendingState::Probing { candidate, probes_left, sent_at } =
-                p.state
-            else {
-                return vec![];
-            };
-            if candidate != from {
-                return vec![];
-            }
-            (p.req.clone(), probes_left, sent_at)
-        };
-        // A reject still answers the probe: same clean RTT sample.
-        self.observe_peer_rtt(from, (now - sent_at).max(0.0), now);
-        self.stats.probe_rejects += 1;
-        if probes_left == 0 {
-            self.pending.remove(&req_id);
-            self.stats.fallback_local += 1;
-            return self.execute_locally(req, ExecKind::Local, now);
-        }
-        // Try another candidate.
-        self.refresh_snapshot(now);
-        let next = {
-            let cache = self.snap_cache.as_ref().expect("refreshed above");
-            cache.snap.sample(&mut self.rng)
-        };
-        match next {
-            Some(c) => {
-                let probe = Message::Probe {
-                    req_id,
-                    prompt_tokens: req.prompt_tokens,
-                    output_tokens: req.output_tokens,
-                };
-                let p = self.pending.get_mut(&req_id).expect("checked above");
-                p.state = PendingState::Probing {
-                    candidate: c,
-                    probes_left: probes_left - 1,
-                    sent_at: now,
-                };
-                p.deadline = now + PROBE_TIMEOUT;
-                vec![Action::Send { to: c, msg: probe }]
-            }
-            None => {
-                self.pending.remove(&req_id);
-                self.stats.fallback_local += 1;
-                self.execute_locally(req, ExecKind::Local, now)
-            }
-        }
-    }
-
-    fn on_delegate_response(
-        &mut self,
-        response: Response,
-        duel: bool,
-        now: Time,
-    ) -> Vec<Action> {
-        if duel {
-            return self.on_duel_response(response, now);
-        }
-        let Some(p) = self.pending.remove(&response.id) else {
-            return vec![]; // stale (timed out, user already answered)
-        };
-        let PendingState::AwaitingResponse { executor } = p.state else {
-            self.pending.insert(response.id, p);
-            return vec![];
-        };
-        // Pay the executor (credits-for-offloading).
-        let peers = self.ledger_peers(now);
-        let mut actions = self.ledger.submit(
-            vec![CreditOp::Transfer {
-                from: self.id,
-                to: executor,
-                amount: self.system.base_reward,
-                reason: OpReason::OffloadPayment(response.id),
-            }],
-            self.id,
-            &peers,
-            now,
-        );
-        actions.push(Action::Done(RequestRecord {
-            id: p.req.id,
-            origin: self.id,
-            executor,
-            kind: ExecKind::Delegated,
-            prompt_tokens: p.req.prompt_tokens,
-            output_tokens: p.req.output_tokens,
-            submitted_at: p.req.submitted_at,
-            completed_at: now,
-            slo_deadline: p.req.slo_deadline,
-            synthetic: p.req.synthetic,
-        }));
-        actions
-    }
-
-    fn on_duel_response(&mut self, response: Response, now: Time) -> Vec<Action> {
-        let executor = response.executor;
-        let (first, both_in, req, execs) = {
-            let Some(d) = self.duels.get_mut(&response.id) else {
-                return vec![];
-            };
-            let first = d.responses.is_empty() && !d.user_answered;
-            let both_in = d.add_response(response.clone());
-            if first {
-                d.user_answered = true;
-            }
-            (first, both_in, d.request.clone(), d.executors)
-        };
-        let mut actions = Vec::new();
-
-        if first {
-            // The user takes the first answer; the duel settles afterwards.
-            actions.push(Action::Done(RequestRecord {
-                id: req.id,
-                origin: self.id,
-                executor,
-                kind: ExecKind::Delegated,
-                prompt_tokens: req.prompt_tokens,
-                output_tokens: req.output_tokens,
-                submitted_at: req.submitted_at,
-                completed_at: now,
-                slo_deadline: req.slo_deadline,
-                synthetic: req.synthetic,
-            }));
-            // Both executors get the base payment (both did the work).
-            let peers = self.ledger_peers(now);
-            let ops = execs
-                .iter()
-                .map(|e| CreditOp::Transfer {
-                    from: self.id,
-                    to: *e,
-                    amount: self.system.base_reward,
-                    reason: OpReason::OffloadPayment(req.id),
-                })
-                .collect();
-            actions.extend(self.ledger.submit(ops, self.id, &peers, now));
-        } else {
-            // The slower duel copy: synthetic overhead record (§7.1).
-            actions.push(Action::Done(RequestRecord {
-                id: req.id,
-                origin: self.id,
-                executor,
-                kind: ExecKind::Duel,
-                prompt_tokens: req.prompt_tokens,
-                output_tokens: req.output_tokens,
-                submitted_at: req.submitted_at,
-                completed_at: now,
-                slo_deadline: req.slo_deadline,
-                synthetic: true,
-            }));
-        }
-
-        if both_in {
-            actions.extend(self.dispatch_judges(response.id, now));
-        }
-        actions
-    }
-
-    fn dispatch_judges(&mut self, duel_id: RequestId, now: Time) -> Vec<Action> {
-        self.refresh_snapshot(now);
-        // Judges: PoS-sampled, excluding the two executors (impartiality).
-        // Duels are rare, so cloning the cached snapshot for the exclusion
-        // filter is fine; the per-request path never clones.
-        let mut pool = self
-            .snap_cache
-            .as_ref()
-            .expect("refreshed above")
-            .snap
-            .clone();
-        let d = self.duels.get_mut(&duel_id).expect("duel exists");
-        let execs = d.executors;
-        pool.retain(|n| n != execs[0] && n != execs[1]);
-        let judges = pool.sample_distinct(&mut self.rng, self.system.judges);
-        if judges.is_empty() {
-            // No impartial judges available — settle as a wash (no
-            // redistribution), keep the duel out of stats.
-            self.duels.remove(&duel_id);
-            self.pending.remove(&duel_id);
-            return vec![];
-        }
-        d.assign_judges(judges.clone());
-        let (a, b) = (d.responses[0].clone(), d.responses[1].clone());
-        let est = d.request.output_tokens.saturating_mul(2).clamp(64, 8192);
-        judges
-            .into_iter()
-            .map(|j| Action::Send {
-                to: j,
-                msg: Message::JudgeAssign {
-                    duel_id,
-                    resp_a: a.clone(),
-                    resp_b: b.clone(),
-                    est_tokens: est,
-                },
-            })
-            .collect()
-    }
-
-    fn on_judge_assign(
-        &mut self,
-        from: NodeId,
-        duel_id: RequestId,
-        resp_a: Response,
-        resp_b: Response,
-        est_tokens: u32,
-        now: Time,
-    ) -> Vec<Action> {
-        self.stats.judge_evals += 1;
-        // Judging costs real compute: enqueue a synthetic evaluation request
-        // on our own backend (reading both answers + a short verdict).
-        let seq = self.synth_seq;
-        self.synth_seq += 1;
-        let eval_req = Request {
-            id: RequestId { origin: self.id, seq },
-            prompt_tokens: est_tokens,
-            output_tokens: JUDGE_OUTPUT_TOKENS,
-            submitted_at: now,
-            slo_deadline: f64::INFINITY,
-            synthetic: true,
-            payload: vec![],
-        };
-        self.judge_tasks.insert(
-            eval_req.id,
-            JudgeTask { duel_id, origin: from, resp_a, resp_b },
-        );
-        self.execute_locally(eval_req, ExecKind::Judge, now)
-    }
-
-    fn on_judge_verdict(
-        &mut self,
-        from: NodeId,
-        duel_id: RequestId,
-        winner: NodeId,
-        now: Time,
-    ) -> Vec<Action> {
-        let Some(d) = self.duels.get_mut(&duel_id) else {
-            return vec![];
-        };
-        let Some(outcome) = d.add_verdict(from, winner) else {
-            return vec![];
-        };
-        // Settle: winner reward, loser slash, judge rewards (§4.2).
-        let judges = d.judges.clone();
-        self.duels.remove(&duel_id);
-        self.pending.remove(&duel_id);
-        let mut ops = vec![
-            CreditOp::Mint {
-                to: outcome.winner,
-                amount: self.system.duel_reward,
-                reason: OpReason::DuelWin(duel_id),
-            },
-            CreditOp::Slash {
-                from: outcome.loser,
-                amount: self.system.duel_penalty,
-                reason: OpReason::DuelLoss(duel_id),
-            },
-        ];
-        for j in judges {
-            ops.push(CreditOp::Mint {
-                to: j,
-                amount: self.system.judge_reward,
-                reason: OpReason::JudgeReward(duel_id),
-            });
-        }
-        let peers = self.ledger_peers(now);
-        let mut actions = self.ledger.submit(ops, self.id, &peers, now);
-        actions.push(Action::DuelSettled(outcome));
-        actions
-    }
-
-    // ---- backend pump (Model manager) ---------------------------------------
-
-    fn pump_backend(&mut self, now: Time) -> Vec<Action> {
-        let completions = self.backend.advance(now);
-        let mut actions = Vec::new();
-        for c in completions {
-            actions.extend(self.on_completion(c, now));
-        }
-        actions
-    }
-
-    fn on_completion(&mut self, c: Completion, _now: Time) -> Vec<Action> {
-        match c.kind {
-            ExecKind::Local => {
-                // Our own user's request, served locally.
-                vec![Action::Done(RequestRecord {
-                    id: c.request.id,
-                    origin: self.id,
-                    executor: self.id,
-                    kind: ExecKind::Local,
-                    prompt_tokens: c.request.prompt_tokens,
-                    output_tokens: c.request.output_tokens,
-                    submitted_at: c.request.submitted_at,
-                    completed_at: c.finished_at,
-                    slo_deadline: c.request.slo_deadline,
-                    synthetic: c.request.synthetic,
-                })]
-            }
-            ExecKind::Delegated | ExecKind::Duel => {
-                let Some(ticket) = self.exec_tickets.remove(&c.request.id) else {
-                    return vec![];
-                };
-                let quality =
-                    duel::draw_response_quality(self.backend.quality(), &mut self.rng);
-                let response = Response {
-                    id: c.request.id,
-                    executor: self.id,
-                    quality,
-                    finished_at: c.finished_at,
-                    tokens: vec![],
-                };
-                vec![Action::Send {
-                    to: ticket.origin,
-                    msg: Message::DelegateResponse {
-                        response,
-                        duel: ticket.duel,
-                    },
-                }]
-            }
-            ExecKind::Judge => {
-                let Some(task) = self.judge_tasks.remove(&c.request.id) else {
-                    return vec![];
-                };
-                let winner =
-                    duel::judge_compare(&task.resp_a, &task.resp_b, &mut self.rng);
-                vec![
-                    Action::Send {
-                        to: task.origin,
-                        msg: Message::JudgeVerdict {
-                            duel_id: task.duel_id,
-                            winner,
-                        },
-                    },
-                    // Judge work is synthetic overhead (§7.1 accounting).
-                    Action::Done(RequestRecord {
-                        id: c.request.id,
-                        origin: self.id,
-                        executor: self.id,
-                        kind: ExecKind::Judge,
-                        prompt_tokens: c.request.prompt_tokens,
-                        output_tokens: c.request.output_tokens,
-                        submitted_at: c.request.submitted_at,
-                        completed_at: c.finished_at,
-                        slo_deadline: c.request.slo_deadline,
-                        synthetic: true,
-                    }),
-                ]
-            }
-        }
-    }
-
-    // ---- tick: gossip + timeouts --------------------------------------------
-
-    /// The single gossip-broadcast path: one wave to `targets`, shared by
-    /// the regular tick round, leave/join announcements and suspicion
-    /// probes. `full` sends the complete digest (anti-entropy form, built
-    /// once and cloned per target); otherwise each target gets its own
-    /// delta, and empty exchanges are skipped entirely.
-    fn gossip_send(
-        &mut self,
-        targets: &[NodeId],
-        full: bool,
-        now: Time,
-    ) -> Vec<Action> {
-        let mut out = Vec::with_capacity(targets.len());
-        if full {
-            if targets.is_empty() {
-                return out;
-            }
-            let digest = self.view.digest();
-            for t in targets {
-                self.view.mark_synced(*t);
-                self.stamp_gossip_push(*t, now);
-                out.push(Action::Send {
-                    to: *t,
-                    msg: Message::Gossip { digest: digest.clone() },
-                });
-            }
-        } else {
-            for t in targets {
-                let (delta, heartbeats) = self.view.delta_for(*t, now);
-                if delta.is_empty() && heartbeats.is_empty() {
-                    continue;
-                }
-                let rtts = self.rtts_for(*t, now);
-                self.stamp_gossip_push(*t, now);
-                out.push(Action::Send {
-                    to: *t,
-                    msg: Message::GossipDelta { delta, heartbeats, rtts },
-                });
-            }
-        }
-        out
-    }
+    // ---- tick: gossip + maintenance + timeouts ------------------------------
 
     fn on_tick(&mut self, now: Time) -> Vec<Action> {
-        let mut actions = Vec::new();
+        let (mut ctx, dispatch, court, gossip) = self.split();
 
-        // Gossip round (§A.2): deltas on regular rounds, the full digest on
-        // the first and every `anti_entropy_every`-th round, and always for
-        // the suspicion probe (a heal must pull the whole view back in).
-        if now - self.last_gossip >= self.view.config().interval {
-            self.last_gossip = now;
-            self.gossip_round += 1;
-            self.view.heartbeat(now);
-            let ae = self.view.config().anti_entropy_every;
-            let full = ae <= 1 || self.gossip_round % ae == 1;
-            let (regular, suspect) =
-                self.view.pick_round_targets(&mut self.rng, now);
-            actions.extend(self.gossip_send(&regular, full, now));
-            if let Some(s) = suspect {
-                actions.extend(self.gossip_send(&[s], true, now));
-            }
-        }
+        // Gossip round (delta/anti-entropy cadence + suspicion probe).
+        let mut actions = gossip.tick(&mut ctx, now);
 
         // Ledger retries (chain mode head races). Shared mode has no ledger
-        // traffic — skip the per-tick alive-peer allocation.
-        if self.ledger.is_chain() {
-            let peers = self.alive_peers(now);
-            actions.extend(self.ledger.on_tick(&peers, now));
-        }
+        // traffic — skip even the memoized alive-peer lookup.
+        actions.extend(ctx.ledger_tick(now));
 
         // Stake maintenance (user-level policy, §4.3): a rational provider
         // tops its stake back up to its declared target after duel slashes —
         // staying out of the PoS pool earns nothing. Providers whose balance
         // has drained cannot refill and fade out of selection, which is
         // exactly the Theorem-5.8 phase-out dynamic.
-        if !self.policy.requester_only {
-            let stake = self.ledger.stake(self.id);
-            let balance = self.ledger.balance(self.id);
-            if stake < self.policy.stake && balance > 0 {
-                let amount = (self.policy.stake - stake).min(balance);
-                let peers = self.ledger_peers(now);
-                actions.extend(self.ledger.submit(
-                    vec![CreditOp::Stake { node: self.id, amount }],
-                    self.id,
-                    &peers,
-                    now,
-                ));
+        let part = ctx.participation;
+        if part.maintains_stake(ctx.policy) {
+            let stake = ctx.ledger.stake(ctx.id);
+            let balance = ctx.ledger.balance(ctx.id);
+            if stake < ctx.policy.stake && balance > 0 {
+                let amount = (ctx.policy.stake - stake).min(balance);
+                let ops = vec![CreditOp::Stake { node: ctx.id, amount }];
+                actions.extend(ctx.ledger_submit(ops, now));
             }
         }
 
@@ -1172,70 +379,61 @@ impl Node {
         // requests back out of the backend and re-dispatch them through the
         // market (user-level policy, §4.3 — "offload tasks once local
         // workload surpasses a predefined threshold").
-        if !self.policy.requester_only {
-            let util = self.backend.utilization();
-            let qlen = self.backend.queue_len();
-            if util >= self.policy.target_utilization
-                && qlen > self.policy.queue_threshold
+        if part.rebalances_queue(ctx.policy) {
+            let util = ctx.backend.utilization();
+            let qlen = ctx.backend.queue_len();
+            if util >= ctx.policy.target_utilization
+                && qlen > ctx.policy.queue_threshold
             {
-                let excess = qlen - self.policy.queue_threshold;
-                for req in self.backend.steal_queued(excess.min(4)) {
-                    if self.rng.chance(self.policy.offload_freq) {
-                        actions.extend(self.try_delegate(req, now));
+                let excess = qlen - ctx.policy.queue_threshold;
+                for req in ctx.backend.steal_queued(excess.min(4)) {
+                    if ctx.rng.chance(ctx.policy.offload_freq) {
+                        actions.extend(
+                            dispatch.try_delegate(&mut ctx, court, req, now),
+                        );
                     } else {
-                        self.backend.submit(req, ExecKind::Local, now);
+                        ctx.backend.submit(req, ExecKind::Local, now);
                     }
                 }
             }
         }
 
         // Timeout scan.
-        let expired: Vec<RequestId> = self
-            .pending
-            .iter()
-            .filter(|(_, p)| now >= p.deadline)
-            .map(|(id, _)| *id)
-            .collect();
-        for id in expired {
-            let p = self.pending.remove(&id).expect("just listed");
-            match p.state {
-                PendingState::Probing { candidate, .. } => {
-                    // Probe never answered: the candidate died or the path
-                    // to its region is down. Penalize the region in the
-                    // latency estimator and serve locally.
-                    self.stats.probe_timeouts += 1;
-                    self.stats.fallback_local += 1;
-                    self.observe_probe_timeout(candidate, now);
-                    actions.extend(self.execute_locally(
-                        p.req,
-                        ExecKind::Local,
-                        now,
-                    ));
+        actions.extend(dispatch.expire(&mut ctx, court, now));
+        actions
+    }
+
+    // ---- backend pump (Model manager) ---------------------------------------
+
+    fn pump_backend(&mut self, now: Time) -> Vec<Action> {
+        let completions = self.backend.advance(now);
+        if completions.is_empty() {
+            return vec![];
+        }
+        let (mut ctx, dispatch, court, _gossip) = self.split();
+        let mut actions = Vec::new();
+        for c in completions {
+            match c.kind {
+                ExecKind::Local => {
+                    // Our own user's request, served locally.
+                    actions.push(Action::Done(RequestRecord {
+                        id: c.request.id,
+                        origin: ctx.id,
+                        executor: ctx.id,
+                        kind: ExecKind::Local,
+                        prompt_tokens: c.request.prompt_tokens,
+                        output_tokens: c.request.output_tokens,
+                        submitted_at: c.request.submitted_at,
+                        completed_at: c.finished_at,
+                        slo_deadline: c.request.slo_deadline,
+                        synthetic: c.request.synthetic,
+                    }));
                 }
-                PendingState::AwaitingResponse { .. } => {
-                    // Executor vanished mid-flight: local fallback.
-                    self.stats.fallback_local += 1;
-                    actions.extend(self.execute_locally(
-                        p.req,
-                        ExecKind::Local,
-                        now,
-                    ));
+                ExecKind::Delegated | ExecKind::Duel => {
+                    actions.extend(dispatch.on_exec_completion(&mut ctx, c));
                 }
-                PendingState::AwaitingDuel => {
-                    let d = self.duels.remove(&id);
-                    if let Some(d) = d {
-                        if !d.user_answered {
-                            // Neither executor answered: local fallback.
-                            self.stats.fallback_local += 1;
-                            actions.extend(self.execute_locally(
-                                p.req,
-                                ExecKind::Local,
-                                now,
-                            ));
-                        }
-                        // Else: user already has an answer; abandon the duel
-                        // (no settlement) — a judge or executor died.
-                    }
+                ExecKind::Judge => {
+                    actions.extend(court.on_judge_completion(&mut ctx, c));
                 }
             }
         }
@@ -1246,22 +444,16 @@ impl Node {
 
     fn on_leave(&mut self, now: Time) -> Vec<Action> {
         self.online = false;
-        self.view.announce_leave(now);
-        // Goodbye gossip so the network learns quickly (Fig. 5b) — always
-        // the full digest (our departure is membership news).
-        let peers = self.view.alive_peers(now);
-        self.gossip_send(&peers, true, now)
+        let (mut ctx, _d, _c, gossip) = self.split();
+        gossip.on_leave(&mut ctx, now)
     }
 
     fn on_join(&mut self, now: Time) -> Vec<Action> {
         self.online = true;
-        self.view.heartbeat(now); // version bump flips us back online
-        // Bootstrap peers are contactable again, and the per-peer delta
-        // floors reset: after downtime we no longer know what peers saw.
-        self.view.refresh(now);
-        self.last_gossip = now;
-        let targets = self.view.pick_targets(&mut self.rng, now);
-        let mut actions = self.gossip_send(&targets, true, now);
+        let mut actions = {
+            let (mut ctx, _d, _c, gossip) = self.split();
+            gossip.on_join(&mut ctx, now)
+        };
         if let Some(t) = self.backend.next_event() {
             actions.push(Action::WakeAt(t));
         }
@@ -1269,15 +461,17 @@ impl Node {
     }
 }
 
+/// Shared constructors for the coordinator layer tests (each extracted
+/// module keeps its pre-decomposition tests next to the code it pins).
 #[cfg(test)]
-mod tests {
+pub(crate) mod testutil {
     use super::*;
     use crate::backend::{Profile, SimBackend};
-    use crate::ledger::Ledger;
     use crate::ledger::SharedLedger;
+    use crate::types::{Request, RequestId};
     use std::sync::{Arc, Mutex};
 
-    fn mk_node(
+    pub fn mk_node(
         id: u32,
         policy: NodePolicy,
         shared: &Arc<Mutex<SharedLedger>>,
@@ -1294,7 +488,7 @@ mod tests {
         )
     }
 
-    fn user_req(origin: u32, seq: u64, now: Time) -> Request {
+    pub fn user_req(origin: u32, seq: u64, now: Time) -> Request {
         Request {
             id: RequestId { origin: NodeId(origin), seq },
             prompt_tokens: 100,
@@ -1305,6 +499,14 @@ mod tests {
             payload: vec![],
         }
     }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::{mk_node, user_req};
+    use super::*;
+    use crate::ledger::SharedLedger;
+    use std::sync::{Arc, Mutex};
 
     #[test]
     fn genesis_grants_credits_and_stake() {
@@ -1343,267 +545,6 @@ mod tests {
     }
 
     #[test]
-    fn pressured_node_probes_staked_peer() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        // Node 1 exists in the ledger (stakes) and in node 0's view.
-        let _n1 = mk_node(1, NodePolicy::default(), &shared);
-        let mut n0 = mk_node(
-            0,
-            NodePolicy {
-                target_utilization: 0.0, // always offload
-                offload_freq: 1.0,
-                ..Default::default()
-            },
-            &shared,
-        );
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        // duel_rate 0 for a deterministic single probe
-        n0.system.duel_rate = 0.0;
-        let actions = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
-        let sends: Vec<_> = actions
-            .iter()
-            .filter_map(|a| match a {
-                Action::Send { to, msg } => Some((*to, msg.kind())),
-                _ => None,
-            })
-            .collect();
-        assert_eq!(sends, vec![(NodeId(1), "probe")]);
-    }
-
-    #[test]
-    fn full_delegation_roundtrip_pays_executor() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let mut n1 = mk_node(1, NodePolicy::default(), &shared);
-        let mut n0 = mk_node(
-            0,
-            NodePolicy {
-                target_utilization: 0.0,
-                offload_freq: 1.0,
-                ..Default::default()
-            },
-            &shared,
-        );
-        n0.system.duel_rate = 0.0;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        n1.policy.accept_freq = 1.0;
-
-        let bal0 = shared.lock().unwrap().balance(NodeId(0));
-        let bal1 = shared.lock().unwrap().balance(NodeId(1));
-
-        // 0 -> probe -> 1
-        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
-        let Action::Send { msg: probe, .. } = &a[0] else { panic!() };
-        // 1 -> accept -> 0
-        let a = n1.handle(
-            Event::Message { from: NodeId(0), msg: probe.clone() },
-            0.1,
-        );
-        let Action::Send { msg: accept, .. } = &a[0] else { panic!() };
-        assert_eq!(accept.kind(), "probe_accept");
-        // 0 -> delegate -> 1
-        let a = n0.handle(
-            Event::Message { from: NodeId(1), msg: accept.clone() },
-            0.2,
-        );
-        let Action::Send { msg: delegate, .. } = &a[0] else { panic!() };
-        assert_eq!(delegate.kind(), "delegate");
-        // 1 executes...
-        n1.handle(
-            Event::Message { from: NodeId(0), msg: delegate.clone() },
-            0.3,
-        );
-        let a = n1.handle(Event::BackendWake, 100.0);
-        let Some(Action::Send { to, msg: resp }) = a
-            .iter()
-            .find(|x| matches!(x, Action::Send { .. }))
-        else {
-            panic!("no response sent: {a:?}")
-        };
-        assert_eq!(*to, NodeId(0));
-        assert_eq!(resp.kind(), "delegate_response");
-        // 0 receives the response: record + payment.
-        let a = n0.handle(
-            Event::Message { from: NodeId(1), msg: resp.clone() },
-            100.1,
-        );
-        let rec = a
-            .iter()
-            .find_map(|x| match x {
-                Action::Done(r) => Some(r),
-                _ => None,
-            })
-            .expect("completion record");
-        assert_eq!(rec.executor, NodeId(1));
-        assert_eq!(rec.kind, ExecKind::Delegated);
-        let pay = SystemPolicy::default().base_reward;
-        assert_eq!(shared.lock().unwrap().balance(NodeId(0)), bal0 - pay);
-        assert_eq!(shared.lock().unwrap().balance(NodeId(1)), bal1 + pay);
-    }
-
-    #[test]
-    fn probe_reject_falls_back_after_retries() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let _n1 = mk_node(1, NodePolicy::default(), &shared);
-        let mut n0 = mk_node(
-            0,
-            NodePolicy {
-                target_utilization: 0.0,
-                offload_freq: 1.0,
-                ..Default::default()
-            },
-            &shared,
-        );
-        n0.system.duel_rate = 0.0;
-        n0.system.max_probes = 2;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-
-        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
-        let Action::Send { msg: Message::Probe { req_id, .. }, .. } = a[0]
-        else {
-            panic!()
-        };
-        // First reject -> re-probe (only node 1 is available, so again 1).
-        let a = n0.handle(
-            Event::Message {
-                from: NodeId(1),
-                msg: Message::ProbeReject { req_id },
-            },
-            0.1,
-        );
-        assert!(a.iter().any(
-            |x| matches!(x, Action::Send { msg: Message::Probe { .. }, .. })
-        ));
-        // Second reject -> local fallback (probes exhausted).
-        let a = n0.handle(
-            Event::Message {
-                from: NodeId(1),
-                msg: Message::ProbeReject { req_id },
-            },
-            0.2,
-        );
-        assert!(a
-            .iter()
-            .all(|x| !matches!(x, Action::Send { msg: Message::Probe { .. }, .. })));
-        assert_eq!(n0.backend().running_len(), 1);
-        assert_eq!(n0.stats.fallback_local, 1);
-    }
-
-    #[test]
-    fn probe_timeout_falls_back_locally() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let _n1 = mk_node(1, NodePolicy::default(), &shared);
-        let mut n0 = mk_node(
-            0,
-            NodePolicy {
-                target_utilization: 0.0,
-                offload_freq: 1.0,
-                ..Default::default()
-            },
-            &shared,
-        );
-        n0.system.duel_rate = 0.0;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
-        assert_eq!(n0.backend().running_len(), 0);
-        // Silence until past PROBE_TIMEOUT.
-        n0.handle(Event::Tick, PROBE_TIMEOUT + 0.5);
-        assert_eq!(n0.backend().running_len(), 1);
-    }
-
-    #[test]
-    fn duel_roundtrip_settles_credits() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let mut nodes: Vec<Node> = (0..5)
-            .map(|i| {
-                let mut n = mk_node(i, NodePolicy::default(), &shared);
-                n.policy.accept_freq = 1.0;
-                // The hand-rolled pump below advances time in 50 s jumps
-                // with no gossip rounds, so disable heartbeat aging.
-                n.view = PeerView::new(
-                    NodeId(i),
-                    crate::gossip::GossipConfig { suspect_after: 1e12, ..Default::default() },
-                    0.0,
-                );
-                n
-            })
-            .collect();
-        // Node 0 always duels.
-        nodes[0].system.duel_rate = 1.0;
-        nodes[0].policy.target_utilization = 0.0;
-        nodes[0].policy.offload_freq = 1.0;
-        for i in 1..5u32 {
-            nodes[0].view.merge(&vec![(NodeId(i), 1, true, 0, 0)], 0.0);
-        }
-
-        // Kick off: two Delegate{duel} sends.
-        let a = nodes[0].handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
-        let delegates: Vec<(NodeId, Message)> = a
-            .iter()
-            .filter_map(|x| match x {
-                Action::Send { to, msg: m @ Message::Delegate { .. } } => {
-                    Some((*to, m.clone()))
-                }
-                _ => None,
-            })
-            .collect();
-        assert_eq!(delegates.len(), 2);
-
-        // Pump the whole network until quiet (mini event loop).
-        let mut inbox: Vec<(NodeId, NodeId, Message)> = delegates
-            .iter()
-            .map(|(to, m)| (*to, NodeId(0), m.clone()))
-            .collect();
-        let mut t = 1.0;
-        let mut settled = None;
-        let mut guard = 0;
-        while !inbox.is_empty() && guard < 1000 {
-            guard += 1;
-            let (to, from, msg) = inbox.remove(0);
-            let actions = nodes[to.0 as usize].handle(
-                Event::Message { from, msg },
-                t,
-            );
-            // Also run backends forward generously.
-            t += 50.0;
-            for (i, n) in nodes.iter_mut().enumerate() {
-                for act in n.handle(Event::BackendWake, t) {
-                    match act {
-                        Action::Send { to, msg } => {
-                            inbox.push((to, NodeId(i as u32), msg))
-                        }
-                        Action::DuelSettled(o) => settled = Some(o),
-                        _ => {}
-                    }
-                }
-            }
-            for act in actions {
-                match act {
-                    Action::Send { to: t2, msg } => inbox.push((t2, to, msg)),
-                    Action::DuelSettled(o) => settled = Some(o),
-                    _ => {}
-                }
-            }
-        }
-        let outcome = settled.expect("duel settled");
-        assert_ne!(outcome.winner, outcome.loser);
-        // Winner got R_add minted on top of base pay; loser lost stake.
-        let sys = SystemPolicy::default();
-        let pol = NodePolicy::default();
-        let (winner_total, loser_stake) = {
-            let l = shared.lock().unwrap();
-            (
-                l.balance(outcome.winner) + l.stake(outcome.winner),
-                l.stake(outcome.loser),
-            )
-        };
-        assert_eq!(
-            winner_total,
-            sys.genesis_credits + sys.base_reward + sys.duel_reward
-        );
-        assert_eq!(loser_stake, pol.stake - sys.duel_penalty);
-    }
-
-    #[test]
     fn offline_node_drops_events_until_join() {
         let shared = Arc::new(Mutex::new(SharedLedger::new()));
         let mut n = mk_node(0, NodePolicy::default(), &shared);
@@ -1616,21 +557,6 @@ mod tests {
         assert!(n.online);
         n.handle(Event::UserRequest(user_req(0, 1, 4.0)), 4.0);
         assert_eq!(n.backend().running_len(), 1);
-    }
-
-    #[test]
-    fn leave_gossips_goodbye() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let mut n = mk_node(0, NodePolicy::default(), &shared);
-        n.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        let a = n.handle(Event::Leave, 1.0);
-        assert!(a.iter().any(|x| matches!(
-            x,
-            Action::Send { to: NodeId(1), msg: Message::Gossip { .. } }
-        )));
-        // Our own digest must mark us offline.
-        let e = n.view.entry(NodeId(0)).unwrap();
-        assert!(!e.online);
     }
 
     #[test]
@@ -1647,399 +573,4 @@ mod tests {
         assert_eq!(n0.backend().running_len(), 0);
     }
 
-    #[test]
-    fn snapshot_cache_tracks_liveness_and_ledger() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let _n1 = mk_node(1, NodePolicy::default(), &shared);
-        let mut n0 = mk_node(
-            0,
-            NodePolicy {
-                target_utilization: 0.0,
-                offload_freq: 1.0,
-                ..Default::default()
-            },
-            &shared,
-        );
-        n0.system.duel_rate = 0.0;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        let probes_to = |actions: &[Action]| -> Vec<NodeId> {
-            actions
-                .iter()
-                .filter_map(|x| match x {
-                    Action::Send { to, msg: Message::Probe { .. } } => {
-                        Some(*to)
-                    }
-                    _ => None,
-                })
-                .collect()
-        };
-        // Two back-to-back requests: the second reuses the cached snapshot
-        // (same view clock, ledger version and time bucket) and still
-        // probes the live peer.
-        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
-        assert_eq!(probes_to(&a), vec![NodeId(1)]);
-        let a = n0.handle(Event::UserRequest(user_req(0, 1, 0.0)), 0.0);
-        assert_eq!(probes_to(&a), vec![NodeId(1)]);
-        // The peer ages out (suspect_after 5 s): with no view mutation at
-        // all, the time-bucket key alone must force a rebuild that drops
-        // it — stale caches must not delegate to the dead.
-        let a = n0.handle(Event::UserRequest(user_req(0, 2, 20.0)), 20.0);
-        assert!(probes_to(&a).is_empty());
-        assert_eq!(n0.stats.fallback_local, 1);
-        // A newly staked + gossiped peer invalidates via clock/version and
-        // becomes the only candidate.
-        let _n2 = mk_node(2, NodePolicy::default(), &shared);
-        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 0)], 20.0);
-        let a = n0.handle(Event::UserRequest(user_req(0, 3, 20.5)), 20.5);
-        assert_eq!(probes_to(&a), vec![NodeId(2)]);
-    }
-
-    #[test]
-    fn tick_gossip_uses_deltas_between_anti_entropy_rounds() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let mut a = mk_node(0, NodePolicy::default(), &shared);
-        let mut b = mk_node(1, NodePolicy::default(), &shared);
-        a.view.add_seed(NodeId(1), 0, 0, 0.0);
-        b.view.add_seed(NodeId(0), 0, 0, 0.0);
-        let gossip_kinds = |actions: &[Action]| -> Vec<&'static str> {
-            actions
-                .iter()
-                .filter_map(|x| match x {
-                    Action::Send { msg, .. } => Some(msg.kind()),
-                    _ => None,
-                })
-                .collect()
-        };
-        // Round 1 bootstraps with the full digest (anti-entropy form)...
-        let out = a.handle(Event::Tick, 1.0);
-        assert_eq!(gossip_kinds(&out), vec!["gossip"]);
-        // ...subsequent rounds ship deltas.
-        let out = a.handle(Event::Tick, 2.0);
-        assert_eq!(gossip_kinds(&out), vec!["gossip_delta"]);
-        // The delta carries our heartbeat: the receiver keeps us alive
-        // without ever seeing another full digest.
-        let delta = out
-            .iter()
-            .find_map(|x| match x {
-                Action::Send { msg: m @ Message::GossipDelta { .. }, .. } => {
-                    Some(m.clone())
-                }
-                _ => None,
-            })
-            .expect("delta sent");
-        b.handle(Event::Message { from: NodeId(0), msg: delta }, 2.1);
-        assert!(b.view.is_alive(NodeId(0), 2.1));
-    }
-
-    #[test]
-    fn locality_penalty_prefers_near_candidates() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        // Equal stakes: node 1 shares n0's region, node 2 is an ocean away.
-        let _n1 = mk_node(1, NodePolicy::default(), &shared);
-        let _n2 = mk_node(2, NodePolicy::default(), &shared);
-        let mut n0 = mk_node(
-            0,
-            NodePolicy {
-                target_utilization: 0.0,
-                offload_freq: 1.0,
-                latency_penalty: 50.0,
-                ..Default::default()
-            },
-            &shared,
-        );
-        n0.system.duel_rate = 0.0;
-        n0.set_locality(
-            0,
-            vec![vec![0.005, 0.100], vec![0.100, 0.005]],
-            LatencyConfig::default(),
-        );
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
-
-        let mut near = 0usize;
-        let mut far = 0usize;
-        for seq in 0..400u64 {
-            let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);
-            for act in &a {
-                match act {
-                    Action::Send { to, msg: Message::Probe { .. } } => {
-                        if *to == NodeId(1) {
-                            near += 1;
-                        } else {
-                            far += 1;
-                        }
-                    }
-                    _ => {}
-                }
-            }
-        }
-        // Damping 1/(1+50*0.005)=0.8 vs 1/(1+50*0.1)=0.167: ~83% near.
-        assert!(
-            near > far * 2,
-            "locality penalty ignored: near={near} far={far}"
-        );
-    }
-
-    // ---- live latency estimation (bugfix sweep + tentpole regressions) ------
-
-    #[test]
-    fn unknown_region_peer_scores_conservative_latency() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let mut n0 = mk_node(0, NodePolicy::default(), &shared);
-        n0.set_locality(
-            0,
-            vec![vec![0.005, 0.100], vec![0.100, 0.005]],
-            LatencyConfig::default(),
-        );
-        // Known near peer in our own region.
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        // Peer gossiping a garbage region tag (outside the matrix).
-        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 9)], 0.0);
-        assert_eq!(n0.expected_latency_to(NodeId(1), 0.0), 0.005);
-        // Garbage tags and wholly unknown peers both get the worst own-row
-        // prior — never region 0's best-row latency.
-        assert_eq!(n0.expected_latency_to(NodeId(2), 0.0), 0.100);
-        assert_eq!(n0.expected_latency_to(NodeId(77), 0.0), 0.100);
-    }
-
-    fn probe_targets(actions: &[Action]) -> Vec<NodeId> {
-        actions
-            .iter()
-            .filter_map(|x| match x {
-                Action::Send { to, msg: Message::Probe { .. } } => Some(*to),
-                _ => None,
-            })
-            .collect()
-    }
-
-    #[test]
-    fn estimator_update_reshapes_the_very_next_draw() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let _n1 = mk_node(1, NodePolicy::default(), &shared);
-        let _n2 = mk_node(2, NodePolicy::default(), &shared);
-        let mut n0 = mk_node(
-            0,
-            NodePolicy {
-                target_utilization: 0.0,
-                offload_freq: 1.0,
-                latency_penalty: 200.0,
-                ..Default::default()
-            },
-            &shared,
-        );
-        n0.system.duel_rate = 0.0;
-        // Both regions look equally fast a priori: draws split evenly.
-        n0.set_locality(
-            0,
-            vec![vec![0.001, 0.001], vec![0.001, 0.001]],
-            LatencyConfig::default(),
-        );
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
-        let mut far0 = 0usize;
-        for seq in 0..300u64 {
-            let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);
-            far0 += probe_targets(&a).iter().filter(|t| **t == NodeId(2)).count();
-        }
-        assert!(far0 > 80, "equal priors must split draws: far {far0}/300");
-        // Live observation: region 1 just measured a 6 s RTT. Same view
-        // clock, same ledger version, same time bucket — only the
-        // estimator moved, and the very next draws must see it.
-        n0.latency_estimator_mut().unwrap().observe_rtt(1, 6.0, 0.0);
-        let mut far1 = 0usize;
-        let mut near1 = 0usize;
-        for seq in 1000..1300u64 {
-            let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);
-            for t in probe_targets(&a) {
-                if t == NodeId(2) {
-                    far1 += 1;
-                } else {
-                    near1 += 1;
-                }
-            }
-        }
-        assert!(
-            far1 * 10 < far0,
-            "stale snapshot served after estimator update: \
-             far {far0} -> {far1}"
-        );
-        assert!(near1 > 150, "near candidate starved: {near1}");
-    }
-
-    #[test]
-    fn set_locality_invalidates_snapshot_cache() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let _n1 = mk_node(1, NodePolicy::default(), &shared);
-        let _n2 = mk_node(2, NodePolicy::default(), &shared);
-        let mut n0 = mk_node(
-            0,
-            NodePolicy {
-                target_utilization: 0.0,
-                offload_freq: 1.0,
-                latency_penalty: 200.0,
-                ..Default::default()
-            },
-            &shared,
-        );
-        n0.system.duel_rate = 0.0;
-        n0.set_locality(
-            0,
-            vec![vec![0.001, 0.001], vec![0.001, 0.001]],
-            LatencyConfig::default(),
-        );
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
-        let mut far0 = 0usize;
-        for seq in 0..300u64 {
-            let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);
-            far0 += probe_targets(&a).iter().filter(|t| **t == NodeId(2)).count();
-        }
-        assert!(far0 > 80, "equal matrix must split draws: far {far0}");
-        // Re-declare locality with region 1 an ocean away — same instant,
-        // same view clock, same ledger version. The reweighted snapshot
-        // must not be served stale for up to a gossip interval.
-        n0.set_locality(
-            0,
-            vec![vec![0.001, 1.0], vec![1.0, 0.001]],
-            LatencyConfig::default(),
-        );
-        let mut far1 = 0usize;
-        for seq in 1000..1300u64 {
-            let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);
-            far1 += probe_targets(&a).iter().filter(|t| **t == NodeId(2)).count();
-        }
-        assert!(
-            far1 * 10 < far0,
-            "set_locality served a stale snapshot: far {far0} -> {far1}"
-        );
-    }
-
-    #[test]
-    fn no_live_peer_is_explicit_local_execute() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let mut n0 = mk_node(
-            0,
-            NodePolicy {
-                target_utilization: 0.0,
-                offload_freq: 1.0,
-                latency_penalty: 50.0,
-                ..Default::default()
-            },
-            &shared,
-        );
-        n0.set_locality(
-            0,
-            vec![vec![0.005, 0.100], vec![0.100, 0.005]],
-            LatencyConfig::default(),
-        );
-        // Locality active but zero live peers: the nearest-peer term is an
-        // explicit None, not a 1e6 sentinel fed into the damping math.
-        assert_eq!(n0.nearest_peer_latency(0.0), None);
-        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
-        assert!(
-            a.iter().all(|x| !matches!(x, Action::Send { .. })),
-            "no-peer case must not probe: {a:?}"
-        );
-        assert_eq!(n0.backend().running_len(), 1, "must execute locally");
-        assert_eq!(n0.stats.served_local, 1);
-        // Flat/region-blind nodes keep the zero-latency fast path.
-        let n_flat = mk_node(1, NodePolicy::default(), &shared);
-        assert_eq!(n_flat.nearest_peer_latency(0.0), Some(0.0));
-    }
-
-    #[test]
-    fn probe_replies_and_timeouts_feed_the_estimator() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let _n1 = mk_node(1, NodePolicy::default(), &shared);
-        let mut n0 = mk_node(
-            0,
-            NodePolicy {
-                target_utilization: 0.0,
-                offload_freq: 1.0,
-                ..Default::default()
-            },
-            &shared,
-        );
-        n0.system.duel_rate = 0.0;
-        n0.set_locality(
-            0,
-            vec![vec![0.005, 0.080], vec![0.080, 0.005]],
-            LatencyConfig::default(),
-        );
-        // The only candidate lives in region 1.
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 1)], 0.0);
-        let prior = n0.latency_estimator().unwrap().expected_from_me(1, 0.0);
-        assert_eq!(prior, 0.080);
-        let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
-        let Action::Send { msg: Message::Probe { req_id, .. }, .. } = a[0]
-        else {
-            panic!("expected a probe, got {a:?}")
-        };
-        // The reject answers 0.4 s later: a measured RTT well above the
-        // 80 ms prior must raise the estimate.
-        n0.handle(
-            Event::Message {
-                from: NodeId(1),
-                msg: Message::ProbeReject { req_id },
-            },
-            0.4,
-        );
-        let after_reply =
-            n0.latency_estimator().unwrap().expected_from_me(1, 0.4);
-        assert!(after_reply > prior, "RTT sample ignored: {after_reply}");
-        // The retry probe (sent at 0.4) is never answered: the timeout
-        // penalty must push the estimate far beyond anything measured.
-        n0.handle(Event::Tick, 5.0);
-        assert_eq!(n0.stats.probe_timeouts, 1);
-        let after_timeout =
-            n0.latency_estimator().unwrap().expected_from_me(1, 5.0);
-        assert!(
-            after_timeout > 0.3,
-            "timeout penalty too weak: {after_timeout}"
-        );
-    }
-
-    #[test]
-    fn gossip_deltas_piggyback_region_rtts_to_same_region_peers() {
-        let shared = Arc::new(Mutex::new(SharedLedger::new()));
-        let mut a = mk_node(0, NodePolicy::default(), &shared);
-        let mut b = mk_node(1, NodePolicy::default(), &shared);
-        let prior = vec![vec![0.005, 0.080], vec![0.080, 0.005]];
-        a.set_locality(0, prior.clone(), LatencyConfig::default());
-        b.set_locality(0, prior, LatencyConfig::default());
-        a.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        b.view.merge(&vec![(NodeId(0), 1, true, 0, 0)], 0.0);
-        // a directly measured region 1 (say via probes).
-        a.latency_estimator_mut().unwrap().observe_rtt(1, 2.0, 0.0);
-        // Round 1 is the full-digest bootstrap; round 2 ships a delta with
-        // the measured row piggybacked (same-region peer, first share).
-        a.handle(Event::Tick, 1.0);
-        let out = a.handle(Event::Tick, 2.0);
-        let delta = out
-            .iter()
-            .find_map(|x| match x {
-                Action::Send { msg: m @ Message::GossipDelta { .. }, .. } => {
-                    Some(m.clone())
-                }
-                _ => None,
-            })
-            .expect("delta sent");
-        let Message::GossipDelta { ref rtts, .. } = delta else {
-            unreachable!()
-        };
-        assert!(
-            !rtts.is_empty(),
-            "same-region delta must carry RTT summaries"
-        );
-        // b merges the summary: its estimate moves off the prior with no
-        // direct measurement of its own — regions without direct traffic
-        // still converge.
-        let before = b.latency_estimator().unwrap().expected_from_me(1, 2.1);
-        b.handle(Event::Message { from: NodeId(0), msg: delta }, 2.1);
-        let after = b.latency_estimator().unwrap().expected_from_me(1, 2.1);
-        assert!(
-            after > before,
-            "piggybacked summary ignored: {before} -> {after}"
-        );
-    }
 }

@@ -209,7 +209,9 @@ impl PeerView {
         self.cfg
     }
 
-    /// Mutation clock: changes iff the view's gossiped content changed.
+    /// Mutation clock: changes whenever anything that can affect derived
+    /// queries changed — gossiped content on any merge/heartbeat, and the
+    /// `last_seen` refresh of a rejoin (see [`refresh`](PeerView::refresh)).
     /// Cheap staleness key for caches derived from this view.
     pub fn clock(&self) -> u64 {
         self.clock
@@ -311,6 +313,10 @@ impl PeerView {
     /// per-peer delta floors: after downtime we no longer know what our
     /// peers have seen, so the next deltas start from scratch.
     pub fn refresh(&mut self, now: Time) {
+        // `last_seen` feeds `is_alive`, so anything keyed on the mutation
+        // clock (alive-peer scratch, stake-snapshot cache) must see this
+        // as a change even though no gossiped content moved.
+        self.clock += 1;
         for (n, e) in self.entries.iter_mut() {
             if *n != self.me && e.online {
                 e.last_seen = now;
@@ -342,11 +348,23 @@ impl PeerView {
     /// All peers (excluding self) believed alive. Sorted by id; backed by
     /// the incrementally maintained online index (no per-call sort).
     pub fn alive_peers(&self, now: Time) -> Vec<NodeId> {
-        self.online_sorted
-            .iter()
-            .copied()
-            .filter(|n| self.is_alive(*n, now))
-            .collect()
+        let mut out = Vec::new();
+        self.alive_peers_into(now, &mut out);
+        out
+    }
+
+    /// [`alive_peers`](PeerView::alive_peers) into a caller-owned buffer —
+    /// hot paths that consult the alive set repeatedly per event (ledger
+    /// broadcast targets) reuse one allocation via the coordinator's
+    /// peer scratch instead of collecting a fresh `Vec` per call.
+    pub fn alive_peers_into(&self, now: Time, out: &mut Vec<NodeId>) {
+        out.clear();
+        out.extend(
+            self.online_sorted
+                .iter()
+                .copied()
+                .filter(|n| self.is_alive(*n, now)),
+        );
     }
 
     /// Non-self peers whose last word was `online`, sorted by id — the

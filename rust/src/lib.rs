@@ -13,6 +13,42 @@
 //! [`coordinator::Node`] (the sans-io node state machine), or
 //! [`runtime::Engine`] (load + execute `artifacts/*.hlo.txt`).
 //!
+//! ## Coordinator layering & participation policies
+//!
+//! [`coordinator::Node`] is a thin composition root over a layered
+//! pipeline of focused submodules — every `Event` still enters through
+//! one interface (`handle(Event, now) -> Vec<Action>`), and each layer
+//! owns one concern:
+//!
+//! * `coordinator::dispatch` — admission + the probe → delegate →
+//!   response state machine (pending delegations, retries, local
+//!   fallback, executor-side tickets, timeout scan);
+//! * `coordinator::duel` — duel escalation + judge settlement (§4.2);
+//! * `coordinator::gossip_driver` — gossip cadence, delta vs.
+//!   anti-entropy form selection, suspicion probes, leave/join;
+//! * `coordinator::latency_feed` — RTT attribution into the live
+//!   [`latency`] estimator (probe/gossip stamps, timeout penalties,
+//!   piggybacked same-region summaries);
+//! * `coordinator::snapshot` — the cached, alias-prepared stake snapshot
+//!   dispatch draws candidates from (§4.1 hot path);
+//! * `coordinator::ctx` — the per-activation borrow bundle the layers
+//!   share, including the memoized alive-peer view for ledger paths.
+//!
+//! The *decisions* at the dispatch boundary are pluggable: a
+//! [`policy::ParticipationPolicy`] answers offload-or-serve,
+//! accept-or-reject-a-probe, candidate scoring (weight multipliers on top
+//! of stake given live latency), and the stake/queue maintenance gates —
+//! the paper's "participants flexibly determine their participation
+//! policies" made a first-class seam. [`policy::DefaultPolicy`]
+//! reproduces the scalar `NodePolicy` knob behaviour draw-for-draw
+//! (pinned by `rust/tests/replay_equivalence.rs`);
+//! [`policy::RequesterOnly`], [`policy::GreedyLocal`] and
+//! [`policy::SelectiveAcceptor`] are alternative personalities. Scenarios
+//! mix populations declaratively: a `topology.fleet` group selects its
+//! behaviour with a `"policy"` key (plus per-group `start_offline` and
+//! `churn` schedules), and `benches/geo_scale.rs` part 5 reports
+//! per-policy-group SLO attainment for such a mixed fleet.
+//!
 //! ## Geo-distributed topology
 //!
 //! The [`topology`] module makes the *global* in "interconnecting global

@@ -183,6 +183,7 @@ fn cmd_simulate(args: &Args) {
     );
     match exp.strategy {
         Strategy::Decentralized => {
+            // World::new installs any fleet churn schedule from the config.
             let mut w = World::new(exp.world.clone(), exp.setups.clone());
             w.run_until(exp.horizon * 4.0);
             print_summary("decentralized", &w.recorder, exp.horizon);

@@ -6,6 +6,21 @@
 //! own users. System-level policies are the network-wide economic constants
 //! (base reward R, duel rate p_d, duel reward R_add, penalty P, judges k,
 //! offload price) that every honest node enforces.
+//!
+//! The scalar knobs ([`NodePolicy`]) are only half the story: *how* a node
+//! interprets them at the dispatch boundary is a pluggable
+//! [`ParticipationPolicy`] (see [`participation`]) — offload-or-serve,
+//! accept-or-reject-a-probe, candidate scoring, and maintenance gates —
+//! with [`DefaultPolicy`] reproducing the knob behaviour draw-for-draw and
+//! alternative personalities ([`RequesterOnly`], [`GreedyLocal`],
+//! [`SelectiveAcceptor`]) selectable per fleet group from scenario configs.
+
+pub mod participation;
+
+pub use participation::{
+    DefaultPolicy, GreedyLocal, OffloadCtx, ParticipationKind,
+    ParticipationPolicy, ProbeCtx, RequesterOnly, SelectiveAcceptor,
+};
 
 use crate::types::{Credits, CREDIT};
 use crate::util::rng::Rng;

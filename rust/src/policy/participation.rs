@@ -1,0 +1,415 @@
+//! Pluggable participation policies — the paper's "participants flexibly
+//! determine their participation policies and resource commitments" made a
+//! first-class seam.
+//!
+//! [`NodePolicy`] keeps the scalar knobs (stake, frequencies, thresholds);
+//! a [`ParticipationPolicy`] decides *how* those knobs are used at the
+//! dispatch boundary:
+//!
+//! * **offload-or-serve** — given local pressure and the distance to the
+//!   nearest live candidate, does a user request enter the delegation
+//!   market or the local backend?
+//! * **accept-or-reject** — given an incoming probe (who is asking, how big
+//!   the job is, how loaded we are), do we take the work?
+//! * **candidate scoring** — the per-candidate weight multiplier applied on
+//!   top of stake when the delegation snapshot is built.
+//! * **maintenance gates** — whether the node tops its stake back up and
+//!   whether it re-dispatches queued work when overloaded.
+//!
+//! [`DefaultPolicy`] reproduces the pre-trait behaviour bit-for-bit (it
+//! delegates every decision to the `NodePolicy` methods, including their
+//! RNG-draw discipline), so installing it is a no-op — the
+//! replay-equivalence test (`rust/tests/replay_equivalence.rs`) pins that.
+//! [`RequesterOnly`] replaces the special-cased `NodePolicy::requester_only`
+//! branches with a policy object; [`GreedyLocal`] and [`SelectiveAcceptor`]
+//! are genuinely new behaviours. Scenario configs select per fleet group
+//! via the declarative `topology.fleet` `policy` key (see `config`);
+//! [`ParticipationKind`] is the parse/build bridge.
+
+use super::NodePolicy;
+use crate::types::NodeId;
+use crate::util::rng::Rng;
+
+/// Everything the offload-or-serve decision can see.
+#[derive(Debug, Clone, Copy)]
+pub struct OffloadCtx {
+    /// Local backend running-slot utilization in [0, 1].
+    pub utilization: f64,
+    /// Requests waiting locally for a slot.
+    pub queue_len: usize,
+    /// Live latency estimate to the nearest live delegation candidate
+    /// (0.0 in flat worlds / region-blind nodes). The no-live-peer case
+    /// never reaches the policy — the dispatcher serves locally outright.
+    pub nearest_latency: f64,
+}
+
+/// Everything the accept-or-reject decision can see about a probe.
+#[derive(Debug, Clone, Copy)]
+pub struct ProbeCtx {
+    /// Who is asking.
+    pub from: NodeId,
+    pub prompt_tokens: u32,
+    pub output_tokens: u32,
+    /// Local backend running-slot utilization in [0, 1].
+    pub utilization: f64,
+    /// Requests waiting locally for a slot.
+    pub queue_len: usize,
+}
+
+/// A provider's participation behaviour at the dispatch boundary. Every
+/// method receives the node's scalar [`NodePolicy`] knobs; implementations
+/// interpret (or ignore) them.
+///
+/// RNG discipline: implementations must draw from `rng` *only* on paths
+/// that genuinely need randomness, and deterministically given the inputs —
+/// the simulator replays bit-identically from the seed, and the default
+/// implementations are draw-for-draw identical to the pre-trait code.
+pub trait ParticipationPolicy: std::fmt::Debug {
+    /// Stable name for config selection and per-group reporting.
+    fn name(&self) -> &'static str;
+
+    /// Should this node try to offload a user request right now (vs.
+    /// putting it on the local backend)?
+    fn should_offload(
+        &self,
+        p: &NodePolicy,
+        ctx: &OffloadCtx,
+        rng: &mut Rng,
+    ) -> bool;
+
+    /// Should this node accept a delegated request it was probed for?
+    fn accept_probe(
+        &self,
+        p: &NodePolicy,
+        ctx: &ProbeCtx,
+        rng: &mut Rng,
+    ) -> bool;
+
+    /// Does this policy reweight delegation candidates at all?
+    /// `has_latency` says whether a live latency estimator is installed.
+    /// Skipping the pass entirely (pure stake-proportional sampling) keeps
+    /// flat worlds off the per-candidate scoring loop.
+    fn scores_candidates(&self, p: &NodePolicy, has_latency: bool) -> bool {
+        p.latency_penalty > 0.0 && has_latency
+    }
+
+    /// Weight multiplier for one delegation candidate, given the live
+    /// one-way latency estimate to it. Applied on top of stake; 0 removes
+    /// the candidate. Only called when [`scores_candidates`] said yes.
+    ///
+    /// [`scores_candidates`]: ParticipationPolicy::scores_candidates
+    fn candidate_weight(&self, p: &NodePolicy, latency: f64) -> f64 {
+        1.0 / (1.0 + p.latency_penalty * latency)
+    }
+
+    /// Does this node top its stake back up to `p.stake` after slashes?
+    fn maintains_stake(&self, p: &NodePolicy) -> bool {
+        !p.requester_only
+    }
+
+    /// Does this node pull queued work back out of an overloaded backend
+    /// and re-dispatch it through the market?
+    fn rebalances_queue(&self, p: &NodePolicy) -> bool {
+        !p.requester_only
+    }
+}
+
+/// The pre-trait behaviour: every decision delegates to the corresponding
+/// `NodePolicy` method (including the `requester_only` scalar-knob special
+/// cases), draw-for-draw.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DefaultPolicy;
+
+impl ParticipationPolicy for DefaultPolicy {
+    fn name(&self) -> &'static str {
+        "default"
+    }
+
+    fn should_offload(
+        &self,
+        p: &NodePolicy,
+        ctx: &OffloadCtx,
+        rng: &mut Rng,
+    ) -> bool {
+        p.should_offload(ctx.utilization, ctx.queue_len, ctx.nearest_latency, rng)
+    }
+
+    fn accept_probe(
+        &self,
+        p: &NodePolicy,
+        ctx: &ProbeCtx,
+        rng: &mut Rng,
+    ) -> bool {
+        p.should_accept(ctx.utilization, ctx.queue_len, rng)
+    }
+}
+
+/// A pure consumer: every user request enters the market, no delegated
+/// work is ever accepted, no stake is maintained and no queue rebalancing
+/// runs. The policy-object form of `NodePolicy::requester_only()` — the
+/// replay-equivalence test proves the two are bit-identical.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequesterOnly;
+
+impl ParticipationPolicy for RequesterOnly {
+    fn name(&self) -> &'static str {
+        "requester_only"
+    }
+
+    fn should_offload(&self, _: &NodePolicy, _: &OffloadCtx, _: &mut Rng) -> bool {
+        true
+    }
+
+    fn accept_probe(&self, _: &NodePolicy, _: &ProbeCtx, _: &mut Rng) -> bool {
+        false
+    }
+
+    fn maintains_stake(&self, _: &NodePolicy) -> bool {
+        false
+    }
+
+    fn rebalances_queue(&self, _: &NodePolicy) -> bool {
+        false
+    }
+}
+
+/// A sink: serves its own users strictly locally (never offloads, never
+/// rebalances) while greedily accepting delegated work — the
+/// `accept_freq` roll is skipped entirely, so acceptance is deterministic
+/// given capacity (a running slot free and the queue within
+/// `queue_threshold`). Models the provider that monetizes every spare
+/// cycle but refuses WAN round trips for its own traffic.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GreedyLocal;
+
+impl ParticipationPolicy for GreedyLocal {
+    fn name(&self) -> &'static str {
+        "greedy_local"
+    }
+
+    fn should_offload(&self, _: &NodePolicy, _: &OffloadCtx, _: &mut Rng) -> bool {
+        false
+    }
+
+    fn accept_probe(&self, p: &NodePolicy, ctx: &ProbeCtx, _: &mut Rng) -> bool {
+        ctx.utilization < 1.0 && ctx.queue_len <= p.queue_threshold
+    }
+
+    fn rebalances_queue(&self, _: &NodePolicy) -> bool {
+        false
+    }
+}
+
+/// A picky provider: accepts only short jobs, only while comfortably idle,
+/// and only with an empty queue — it protects its own users' latency and
+/// cherry-picks quick delegated wins. Offload behaviour stays the default.
+#[derive(Debug, Clone, Copy)]
+pub struct SelectiveAcceptor {
+    /// Largest delegated output it will take.
+    pub max_output_tokens: u32,
+    /// Utilization ceiling for accepting (strictly below the usual
+    /// capacity bound of 1.0).
+    pub max_utilization: f64,
+}
+
+impl Default for SelectiveAcceptor {
+    fn default() -> Self {
+        SelectiveAcceptor { max_output_tokens: 600, max_utilization: 0.5 }
+    }
+}
+
+impl ParticipationPolicy for SelectiveAcceptor {
+    fn name(&self) -> &'static str {
+        "selective"
+    }
+
+    fn should_offload(
+        &self,
+        p: &NodePolicy,
+        ctx: &OffloadCtx,
+        rng: &mut Rng,
+    ) -> bool {
+        p.should_offload(ctx.utilization, ctx.queue_len, ctx.nearest_latency, rng)
+    }
+
+    fn accept_probe(&self, _: &NodePolicy, ctx: &ProbeCtx, _: &mut Rng) -> bool {
+        ctx.output_tokens <= self.max_output_tokens
+            && ctx.utilization <= self.max_utilization
+            && ctx.queue_len == 0
+    }
+}
+
+/// Declarative selector for the built-in policies — what the config
+/// layer's `policy` / `participation` keys parse into, and what
+/// `sim::NodeSetup` carries (the trait object itself is not `Clone`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ParticipationKind {
+    #[default]
+    Default,
+    RequesterOnly,
+    GreedyLocal,
+    Selective,
+}
+
+impl ParticipationKind {
+    /// Parse a config-file name. `None` for unknown names — the config
+    /// layer turns that into a loud error.
+    pub fn parse(s: &str) -> Option<ParticipationKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "default" => ParticipationKind::Default,
+            "requester_only" => ParticipationKind::RequesterOnly,
+            "greedy_local" => ParticipationKind::GreedyLocal,
+            "selective" => ParticipationKind::Selective,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ParticipationKind::Default => "default",
+            ParticipationKind::RequesterOnly => "requester_only",
+            ParticipationKind::GreedyLocal => "greedy_local",
+            ParticipationKind::Selective => "selective",
+        }
+    }
+
+    /// Instantiate the policy object.
+    pub fn build(self) -> Box<dyn ParticipationPolicy> {
+        match self {
+            ParticipationKind::Default => Box::new(DefaultPolicy),
+            ParticipationKind::RequesterOnly => Box::new(RequesterOnly),
+            ParticipationKind::GreedyLocal => Box::new(GreedyLocal),
+            ParticipationKind::Selective => {
+                Box::new(SelectiveAcceptor::default())
+            }
+        }
+    }
+
+    /// The `NodePolicy` scalar-knob defaults that make sense for this
+    /// participation style — the base the config layer fills unspecified
+    /// keys from, so `"policy": "requester_only"` groups get stake 0 /
+    /// accept 0 without spelling it out.
+    pub fn base_policy(self) -> NodePolicy {
+        match self {
+            ParticipationKind::RequesterOnly => NodePolicy::requester_only(),
+            _ => NodePolicy::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn off(util: f64, qlen: usize, near: f64) -> OffloadCtx {
+        OffloadCtx { utilization: util, queue_len: qlen, nearest_latency: near }
+    }
+
+    fn probe(out_tokens: u32, util: f64, qlen: usize) -> ProbeCtx {
+        ProbeCtx {
+            from: NodeId(7),
+            prompt_tokens: 100,
+            output_tokens: out_tokens,
+            utilization: util,
+            queue_len: qlen,
+        }
+    }
+
+    #[test]
+    fn default_policy_delegates_to_node_policy_knobs() {
+        let dp = DefaultPolicy;
+        let p = NodePolicy { offload_freq: 1.0, accept_freq: 1.0, ..Default::default() };
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        // Draw-for-draw identical to the scalar-knob methods on the same
+        // RNG stream (the refactor's bit-compat contract).
+        for i in 0..200 {
+            let util = (i % 10) as f64 / 10.0;
+            let qlen = i % 7;
+            assert_eq!(
+                dp.should_offload(&p, &off(util, qlen, 0.01), &mut a),
+                p.should_offload(util, qlen, 0.01, &mut b),
+                "offload diverged at {i}"
+            );
+            assert_eq!(
+                dp.accept_probe(&p, &probe(500, util, qlen), &mut a),
+                p.should_accept(util, qlen, &mut b),
+                "accept diverged at {i}"
+            );
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "RNG streams diverged");
+    }
+
+    #[test]
+    fn requester_only_constant_decisions_no_draws() {
+        let r = RequesterOnly;
+        let p = NodePolicy::requester_only();
+        let mut rng = Rng::new(2);
+        let before = rng.next_u64();
+        let mut rng = Rng::new(2);
+        assert!(r.should_offload(&p, &off(0.0, 0, 5.0), &mut rng));
+        assert!(!r.accept_probe(&p, &probe(1, 0.0, 0), &mut rng));
+        assert!(!r.maintains_stake(&p));
+        assert!(!r.rebalances_queue(&p));
+        // No RNG consumed by either decision.
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn greedy_local_never_offloads_accepts_with_capacity() {
+        let g = GreedyLocal;
+        let p = NodePolicy { accept_freq: 0.0, ..Default::default() };
+        let mut rng = Rng::new(3);
+        assert!(!g.should_offload(&p, &off(1.0, 100, 0.0), &mut rng));
+        // Ignores accept_freq = 0: capacity is the only criterion.
+        assert!(g.accept_probe(&p, &probe(5000, 0.9, p.queue_threshold), &mut rng));
+        assert!(!g.accept_probe(&p, &probe(10, 1.0, 0), &mut rng));
+        assert!(!g.accept_probe(&p, &probe(10, 0.1, p.queue_threshold + 1), &mut rng));
+        assert!(!g.rebalances_queue(&p));
+        assert!(g.maintains_stake(&p));
+    }
+
+    #[test]
+    fn selective_accepts_only_short_jobs_when_idle() {
+        let s = SelectiveAcceptor::default();
+        let p = NodePolicy::default();
+        let mut rng = Rng::new(4);
+        assert!(s.accept_probe(&p, &probe(600, 0.4, 0), &mut rng));
+        assert!(!s.accept_probe(&p, &probe(601, 0.4, 0), &mut rng), "too long");
+        assert!(!s.accept_probe(&p, &probe(100, 0.6, 0), &mut rng), "too busy");
+        assert!(!s.accept_probe(&p, &probe(100, 0.1, 1), &mut rng), "queued");
+        // Offload side inherits the default knob behaviour.
+        let hot = NodePolicy { offload_freq: 1.0, ..Default::default() };
+        assert!(s.should_offload(&hot, &off(1.0, 100, 0.0), &mut rng));
+    }
+
+    #[test]
+    fn default_scoring_matches_latency_damping_formula() {
+        let dp = DefaultPolicy;
+        let p = NodePolicy { latency_penalty: 50.0, ..Default::default() };
+        assert!(dp.scores_candidates(&p, true));
+        assert!(!dp.scores_candidates(&p, false), "no estimator, no scoring");
+        let blind = NodePolicy::default();
+        assert!(!dp.scores_candidates(&blind, true), "zero penalty skips");
+        assert!((dp.candidate_weight(&p, 0.1) - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kind_parses_builds_and_bases() {
+        for (name, kind) in [
+            ("default", ParticipationKind::Default),
+            ("requester_only", ParticipationKind::RequesterOnly),
+            ("greedy_local", ParticipationKind::GreedyLocal),
+            ("selective", ParticipationKind::Selective),
+        ] {
+            assert_eq!(ParticipationKind::parse(name), Some(kind));
+            assert_eq!(kind.name(), name);
+            assert_eq!(kind.build().name(), name);
+        }
+        assert_eq!(ParticipationKind::parse("DEFAULT"), Some(ParticipationKind::Default));
+        assert!(ParticipationKind::parse("freeloader").is_none());
+        assert!(ParticipationKind::RequesterOnly.base_policy().requester_only);
+        assert_eq!(ParticipationKind::RequesterOnly.base_policy().stake, 0);
+        assert!(!ParticipationKind::GreedyLocal.base_policy().requester_only);
+    }
+}

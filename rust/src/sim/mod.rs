@@ -18,7 +18,7 @@ use crate::gossip::GossipConfig;
 use crate::latency::LatencyConfig;
 use crate::ledger::{Block, CreditOp, OpReason, SharedLedger};
 use crate::metrics::{Recorder, TimeSeries};
-use crate::policy::{NodePolicy, SystemPolicy};
+use crate::policy::{NodePolicy, ParticipationKind, SystemPolicy};
 use crate::topology::Topology;
 use crate::types::{NodeId, Time};
 use crate::util::rng::Rng;
@@ -56,6 +56,12 @@ pub struct WorldConfig {
     /// Period for sampling per-node credit totals (Figure 6 curves);
     /// 0 disables sampling.
     pub credit_sample_interval: f64,
+    /// Scheduled availability changes `(node index, time, join)` — e.g.
+    /// expanded from declarative fleet `churn` blocks. Installed by
+    /// [`World::new`], so a churn-declaring config cannot silently lose
+    /// its schedule; `schedule_join`/`schedule_leave` remain for ad-hoc
+    /// test scripting.
+    pub churn: Vec<(usize, f64, bool)>,
 }
 
 impl Default for WorldConfig {
@@ -70,6 +76,7 @@ impl Default for WorldConfig {
             latency_estimation: LatencyConfig::default(),
             tick_interval: 1.0,
             credit_sample_interval: 5.0,
+            churn: Vec::new(),
         }
     }
 }
@@ -96,6 +103,12 @@ impl WorldConfig {
             "WorldConfig.credit_sample_interval must be >= 0, got {}",
             self.credit_sample_interval
         );
+        for &(_, at, _) in &self.churn {
+            assert!(
+                at.is_finite() && at >= 0.0,
+                "WorldConfig.churn times must be finite and >= 0, got {at}"
+            );
+        }
         self.latency_estimation.validate();
     }
 }
@@ -109,6 +122,13 @@ pub struct NodeSetup {
     pub generator: Option<Generator>,
     /// Start offline (joins later via `schedule_join`).
     pub start_offline: bool,
+    /// Which participation behaviour the node runs (the trait object is
+    /// built at `World::new`; `Default` reproduces the scalar-knob
+    /// behaviour bit for bit).
+    pub participation: ParticipationKind,
+    /// Reporting label (fleet group name) for per-policy-group summaries;
+    /// None for ungrouped nodes.
+    pub group: Option<String>,
 }
 
 impl NodeSetup {
@@ -118,6 +138,8 @@ impl NodeSetup {
             policy,
             generator: None,
             start_offline: false,
+            participation: ParticipationKind::Default,
+            group: None,
         }
     }
 
@@ -128,6 +150,16 @@ impl NodeSetup {
 
     pub fn offline(mut self) -> Self {
         self.start_offline = true;
+        self
+    }
+
+    pub fn with_participation(mut self, kind: ParticipationKind) -> Self {
+        self.participation = kind;
+        self
+    }
+
+    pub fn with_group(mut self, label: impl Into<String>) -> Self {
+        self.group = Some(label.into());
         self
     }
 }
@@ -274,6 +306,7 @@ impl World {
             };
             let backend = SimBackend::new(setup.profile)
                 .with_priority(setup.policy.prioritize_own);
+            let participation = setup.participation;
             let mut node = Node::new(
                 id,
                 setup.policy,
@@ -284,6 +317,9 @@ impl World {
                 cfg.seed.wrapping_mul(31).wrapping_add(i as u64),
                 0.0,
             );
+            // Participation behaviour (construction-time, no RNG impact;
+            // `Default` installs the bit-identical legacy behaviour).
+            node.set_participation(participation.build());
             // Geo placement: tag the node with its region and hand it the
             // pristine expected-latency matrix as the live estimator's
             // cold-start prior so `latency_penalty` can bite.
@@ -372,6 +408,17 @@ impl World {
             .collect();
         for (idx, at) in link_times {
             world.push(at, WorldEvent::Link(idx));
+        }
+        // Declarative churn schedule (fleet `churn` blocks): installed
+        // here so a parsed schedule cannot be silently dropped by a caller
+        // that forgets an extra step.
+        for &(node, at, join) in &cfg.churn {
+            assert!(
+                node < n,
+                "WorldConfig.churn node {node} out of range ({n} nodes)"
+            );
+            let ev = if join { Event::Join } else { Event::Leave };
+            world.push(at, WorldEvent::Node(node, ev));
         }
         world
     }

@@ -1,0 +1,199 @@
+//! End-to-end behaviour of the pluggable participation policies and the
+//! declarative fleet churn schedules.
+
+use std::sync::{Arc, Mutex};
+
+use wwwserve::backend::{Profile, SimBackend};
+use wwwserve::config::parse_experiment;
+use wwwserve::coordinator::{Action, Event, LedgerManager, Message, Node};
+use wwwserve::gossip::GossipConfig;
+use wwwserve::ledger::SharedLedger;
+use wwwserve::policy::{GreedyLocal, NodePolicy, SelectiveAcceptor, SystemPolicy};
+use wwwserve::sim::World;
+use wwwserve::types::{Request, RequestId};
+use wwwserve::NodeId;
+
+fn mk_node(id: u32, policy: NodePolicy, shared: &Arc<Mutex<SharedLedger>>) -> Node {
+    Node::new(
+        NodeId(id),
+        policy,
+        SystemPolicy::default(),
+        Box::new(SimBackend::new(Profile::test(50.0, 4))),
+        LedgerManager::shared(shared.clone()),
+        GossipConfig::default(),
+        42,
+        0.0,
+    )
+}
+
+fn user_req(origin: u32, seq: u64, now: f64) -> Request {
+    Request {
+        id: RequestId { origin: NodeId(origin), seq },
+        prompt_tokens: 100,
+        output_tokens: 100,
+        submitted_at: now,
+        slo_deadline: 60.0,
+        synthetic: false,
+        payload: vec![],
+    }
+}
+
+#[test]
+fn greedy_local_node_serves_own_load_accepts_delegations() {
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let _n1 = mk_node(1, NodePolicy::default(), &shared);
+    // Knobs scream "offload" — the participation object overrides.
+    let mut n0 = mk_node(
+        0,
+        NodePolicy {
+            target_utilization: 0.0,
+            offload_freq: 1.0,
+            accept_freq: 0.0, // greedy ignores this too
+            ..Default::default()
+        },
+        &shared,
+    );
+    n0.set_participation(Box::new(GreedyLocal));
+    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+    let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
+    assert!(
+        a.iter().all(|x| !matches!(x, Action::Send { .. })),
+        "greedy_local must not probe: {a:?}"
+    );
+    assert_eq!(n0.backend().running_len(), 1);
+    // An incoming probe is accepted despite accept_freq = 0.
+    let a = n0.handle(
+        Event::Message {
+            from: NodeId(1),
+            msg: Message::Probe {
+                req_id: RequestId { origin: NodeId(1), seq: 9 },
+                prompt_tokens: 10,
+                output_tokens: 10,
+            },
+        },
+        0.1,
+    );
+    assert!(a.iter().any(|x| matches!(
+        x,
+        Action::Send { msg: Message::ProbeAccept { .. }, .. }
+    )));
+}
+
+#[test]
+fn selective_acceptor_cherry_picks_short_jobs() {
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let _n1 = mk_node(1, NodePolicy::default(), &shared);
+    let mut n0 = mk_node(0, NodePolicy::default(), &shared);
+    n0.set_participation(Box::new(SelectiveAcceptor {
+        max_output_tokens: 200,
+        max_utilization: 0.5,
+    }));
+    let probe = |n: &mut Node, seq: u64, out: u32| -> &'static str {
+        let a = n.handle(
+            Event::Message {
+                from: NodeId(1),
+                msg: Message::Probe {
+                    req_id: RequestId { origin: NodeId(1), seq },
+                    prompt_tokens: 50,
+                    output_tokens: out,
+                },
+            },
+            0.1,
+        );
+        a.iter()
+            .find_map(|x| match x {
+                Action::Send { msg, .. } => Some(msg.kind()),
+                _ => None,
+            })
+            .expect("probe answered")
+    };
+    // Idle node: short jobs accepted, long jobs rejected.
+    assert_eq!(probe(&mut n0, 0, 150), "probe_accept");
+    assert_eq!(probe(&mut n0, 1, 5000), "probe_reject");
+    // Busy node (own work running): even short jobs rejected.
+    for seq in 0..4 {
+        n0.handle(Event::UserRequest(user_req(0, 100 + seq, 0.0)), 0.0);
+    }
+    assert!(n0.backend().utilization() > 0.5);
+    assert_eq!(probe(&mut n0, 2, 150), "probe_reject");
+}
+
+#[test]
+fn fleet_churn_schedule_drives_leave_and_join() {
+    // Two us servers churn out at t=60 and rejoin at t=160; a steady
+    // requester keeps the world busy throughout. The gossip views must
+    // reflect the outage window and the recovery.
+    let cfg = r#"{
+        "seed": 5, "horizon": 300,
+        "system": { "duel_rate": 0.0 },
+        "topology": {
+            "regions": ["us"],
+            "intra": { "latency": [0.002, 0.010] },
+            "fleet": [
+                { "region": "us", "count": 1, "policy": "requester_only",
+                  "schedule": [ {"from": 0, "to": 300,
+                                 "inter_arrival": 5} ],
+                  "lengths": { "output_mean": 400,
+                               "output_sigma": 0.5 } },
+                { "region": "us", "count": 2,
+                  "node": { "policy": { "stake": 20,
+                                        "accept_freq": 1.0 } } },
+                { "region": "us", "count": 2, "name": "churners",
+                  "node": { "policy": { "stake": 20,
+                                        "accept_freq": 1.0 } },
+                  "churn": [ { "at": 60, "action": "leave", "count": 2 },
+                             { "at": 160, "action": "join", "count": 2 } ] }
+            ]
+        }
+    }"#;
+    let e = parse_experiment(cfg).expect("config parses");
+    assert_eq!(e.churn.len(), 4);
+    assert_eq!(e.setups[3].group.as_deref(), Some("churners"));
+    // World::new installs the schedule from world.churn — no extra call.
+    let mut w = World::new(e.world.clone(), e.setups.clone());
+    // Mid-outage: the churners are down and the stable server knows.
+    w.run_until(120.0);
+    assert!(!w.node(3).online && !w.node(4).online);
+    for churner in [3u32, 4] {
+        assert!(
+            !w.node(1).view.is_alive(NodeId(churner), w.now()),
+            "node 1 still sees churned-out node {churner} at t=120"
+        );
+    }
+    // After the rejoin + a few gossip rounds: back in the views.
+    w.run_until(300.0);
+    for churner in [3u32, 4] {
+        assert!(
+            w.node(1).view.is_alive(NodeId(churner), w.now()),
+            "node 1 never saw node {churner} rejoin"
+        );
+    }
+    assert!(w.recorder.len() > 10, "workload barely ran");
+}
+
+#[test]
+fn group_start_offline_keeps_fleet_down_until_join() {
+    let cfg = r#"{
+        "seed": 6, "horizon": 100,
+        "topology": {
+            "regions": ["us"],
+            "fleet": [
+                { "region": "us", "count": 2,
+                  "node": { "policy": { "stake": 20 } } },
+                { "region": "us", "count": 2, "start_offline": true,
+                  "churn": [ { "at": 50, "action": "join", "count": 2 } ] }
+            ]
+        }
+    }"#;
+    let e = parse_experiment(cfg).expect("config parses");
+    assert!(e.setups[2].start_offline && e.setups[3].start_offline);
+    let mut w = World::new(e.world.clone(), e.setups.clone());
+    w.run_until(40.0);
+    assert!(!w.node(2).online && !w.node(3).online);
+    w.run_until(100.0);
+    assert!(w.node(2).online && w.node(3).online);
+    assert!(
+        w.node(0).view.is_alive(NodeId(2), w.now()),
+        "joined node never gossiped alive"
+    );
+}

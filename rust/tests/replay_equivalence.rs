@@ -1,0 +1,303 @@
+//! Replay equivalence across the coordinator decomposition seam.
+//!
+//! The Node god-object was split into a layered pipeline (dispatch / duel /
+//! gossip_driver / latency_feed / snapshot) with a pluggable
+//! `ParticipationPolicy` at the dispatch boundary. The contract: with
+//! `DefaultPolicy` the decomposed node makes exactly the same decisions —
+//! draw for draw on the same RNG stream — as the pre-refactor scalar-knob
+//! code, whose behaviour survives verbatim in `NodePolicy::should_offload`
+//! / `should_accept` (every pre-refactor unit test still runs against the
+//! decomposed node, unchanged).
+//!
+//! These tests pin the seam on the geo_scale smoke scenario (3-region WAN,
+//! follow-the-sun diurnal load, mid-run partition + heal) by comparing
+//! full `World` trace fingerprints: record counts and latency sums,
+//! per-region SLO attainment, message/byte/drop counters, duel
+//! settlements, and end-state credit totals — if any event ordering, RNG
+//! draw, payment or settlement diverges, these collapse.
+
+use wwwserve::config::parse_experiment;
+use wwwserve::policy::{DefaultPolicy, RequesterOnly};
+use wwwserve::sim::World;
+
+const HORIZON: f64 = 400.0;
+
+/// The geo_scale smoke scenario, declaratively: one requester + two
+/// servers per region, offset diurnal peaks, us<->asia partition at 150 s
+/// healed at 250 s. `policy_keys` toggles the declarative participation
+/// selection so the legacy (no keys) and explicit (`"policy": "default"`)
+/// forms can be compared.
+fn geo_smoke_config(policy_keys: bool, requester_policy: &str) -> String {
+    let req_policy = if policy_keys {
+        format!(r#""policy": "{requester_policy}","#)
+    } else {
+        String::new()
+    };
+    let srv_policy = if policy_keys {
+        r#""policy": "default","#.to_string()
+    } else {
+        String::new()
+    };
+    let mut groups = Vec::new();
+    for (region, offset) in [("us", 0.0), ("eu", 100.0), ("asia", 200.0)] {
+        groups.push(format!(
+            r#"{{ "region": "{region}", "count": 1, {req_policy}
+                 "node": {{
+                   "profile": {{ "prefill_tok_s": 2000, "decode_tok_s": 40,
+                                 "max_agg_decode_tok_s": 160,
+                                 "max_batch": 4 }},
+                   "policy": {{ "stake": 0, "offload_freq": 1.0,
+                                "accept_freq": 0.0, "requester_only": true,
+                                "latency_penalty": 50.0 }} }},
+                 "diurnal": {{ "period": 300, "peak_inter_arrival": 2.5,
+                               "off_inter_arrival": 25,
+                               "offset": {offset} }},
+                 "lengths": {{ "output_mean": 900,
+                               "output_sigma": 0.5 }} }}"#
+        ));
+        groups.push(format!(
+            r#"{{ "region": "{region}", "count": 2, {srv_policy}
+                 "node": {{
+                   "profile": {{ "prefill_tok_s": 4000, "decode_tok_s": 45,
+                                 "max_agg_decode_tok_s": 1080,
+                                 "max_batch": 24 }},
+                   "policy": {{ "stake": 20, "accept_freq": 1.0,
+                                "latency_penalty": 50.0 }} }} }}"#
+        ));
+    }
+    format!(
+        r#"{{
+            "seed": 2026,
+            "horizon": {HORIZON},
+            "system": {{ "duel_rate": 0.1 }},
+            "topology": {{
+                "regions": ["us", "eu", "asia"],
+                "intra": {{ "latency": [0.002, 0.010] }},
+                "inter": {{ "latency": [0.040, 0.080], "jitter": 0.005 }},
+                "events": [
+                    {{ "at": 150, "a": "us", "b": "asia",
+                       "change": "partition" }},
+                    {{ "at": 250, "a": "us", "b": "asia", "change": "heal" }}
+                ],
+                "fleet": [ {} ]
+            }}
+        }}"#,
+        groups.join(", ")
+    )
+}
+
+/// Everything observable about a finished world, quantized for exact
+/// comparison: messages, settlements, SLO attainment, credits.
+type Fingerprint =
+    (usize, u64, u64, u64, u64, u64, usize, Vec<(String, u64, u64, usize)>, Vec<u64>);
+
+fn fingerprint(w: &World) -> Fingerprint {
+    (
+        w.recorder.len(),
+        (w.recorder.mean_latency() * 1e9) as u64,
+        w.messages_sent,
+        w.bytes_sent,
+        w.messages_dropped,
+        w.gossip_bytes_sent,
+        w.duel_stats.total_duels(),
+        w.region_summary()
+            .into_iter()
+            .map(|(name, slo, p99, n)| {
+                (name, (slo * 1e9) as u64, (p99 * 1e9) as u64, n)
+            })
+            .collect(),
+        w.credit_totals().iter().map(|c| (c * 1e6) as u64).collect(),
+    )
+}
+
+fn run(config: &str) -> Fingerprint {
+    let e = parse_experiment(config).expect("config parses");
+    let mut w = World::new(e.world.clone(), e.setups.clone());
+    w.run_until(HORIZON + 600.0);
+    assert!(
+        w.recorder.len() > 50,
+        "scenario barely ran: {} records",
+        w.recorder.len()
+    );
+    fingerprint(&w)
+}
+
+#[test]
+fn decomposed_node_replays_bit_identically() {
+    let cfg = geo_smoke_config(false, "default");
+    assert_eq!(run(&cfg), run(&cfg), "same seed, same trace");
+}
+
+#[test]
+fn explicit_default_policy_matches_legacy_path() {
+    // Selecting `policy: "default"` declaratively must be a no-op against
+    // the key-less legacy form — the trait seam adds nothing to the trace.
+    let legacy = run(&geo_smoke_config(false, "default"));
+    let explicit = run(&geo_smoke_config(true, "default"));
+    assert_eq!(
+        legacy, explicit,
+        "declarative default participation diverged from the legacy path"
+    );
+}
+
+#[test]
+fn requester_only_trait_matches_scalar_knob() {
+    // The requester groups carry the scalar `requester_only: true` knob in
+    // both runs; the second additionally routes them through the
+    // `RequesterOnly` participation object. Bit-identical traces prove the
+    // policy object replaces the special-cased knob exactly.
+    let knob = run(&geo_smoke_config(false, "default"));
+    let trait_based = run(&geo_smoke_config(true, "requester_only"));
+    assert_eq!(
+        knob, trait_based,
+        "RequesterOnly policy diverged from the requester_only knob"
+    );
+}
+
+#[test]
+fn installing_default_policy_post_construction_is_a_noop() {
+    let cfg = geo_smoke_config(false, "default");
+    let e = parse_experiment(&cfg).expect("config parses");
+    let mut plain = World::new(e.world.clone(), e.setups.clone());
+    let mut swapped = World::new(e.world.clone(), e.setups.clone());
+    for i in 0..swapped.num_nodes() {
+        swapped.node_mut(i).set_participation(Box::new(DefaultPolicy));
+        assert_eq!(swapped.node(i).participation().name(), "default");
+    }
+    plain.run_until(HORIZON + 600.0);
+    swapped.run_until(HORIZON + 600.0);
+    assert_eq!(fingerprint(&plain), fingerprint(&swapped));
+}
+
+#[test]
+fn mixed_policy_world_replays_deterministically() {
+    // Heterogeneous populations (default servers + requester_only +
+    // greedy_local + selective) under partition/heal + churn must stay
+    // bit-reproducible from the seed.
+    let cfg = r#"{
+        "seed": 9, "horizon": 300,
+        "system": { "duel_rate": 0.0 },
+        "topology": {
+            "regions": ["us", "eu"],
+            "intra": { "latency": [0.002, 0.010] },
+            "inter": { "latency": [0.040, 0.080] },
+            "fleet": [
+                { "region": "us", "count": 1, "policy": "requester_only",
+                  "node": { "policy": { "latency_penalty": 20.0 } },
+                  "schedule": [ {"from": 0, "to": 300,
+                                 "inter_arrival": 2} ],
+                  "lengths": { "output_mean": 600, "output_sigma": 0.5 } },
+                { "region": "us", "count": 2, "policy": "greedy_local",
+                  "node": { "policy": { "stake": 20 } } },
+                { "region": "eu", "count": 2, "policy": "selective",
+                  "node": { "policy": { "stake": 20 } },
+                  "churn": [ { "at": 100, "action": "leave" },
+                             { "at": 200, "action": "join" } ] },
+                { "region": "eu", "count": 2,
+                  "node": { "policy": { "stake": 20,
+                                        "accept_freq": 1.0 } } }
+            ]
+        }
+    }"#;
+    let go = || {
+        let e = parse_experiment(cfg).expect("config parses");
+        assert_eq!(e.churn.len(), 2, "churn parsed");
+        assert_eq!(e.world.churn.len(), 2, "churn carried to the world");
+        let mut w = World::new(e.world.clone(), e.setups.clone());
+        w.run_until(900.0);
+        fingerprint(&w)
+    };
+    let a = go();
+    assert!(a.0 > 20, "mixed-policy world barely ran: {} records", a.0);
+    assert_eq!(a, go(), "mixed-policy world is not deterministic");
+}
+
+#[test]
+fn requester_only_policy_nodes_never_serve() {
+    let cfg = geo_smoke_config(true, "requester_only");
+    let e = parse_experiment(&cfg).expect("config parses");
+    let mut w = World::new(e.world.clone(), e.setups.clone());
+    w.run_until(HORIZON);
+    // Requesters are nodes 0, 3, 6 (one per region, ahead of 2 servers).
+    for i in [0usize, 3, 6] {
+        assert_eq!(
+            w.node(i).participation().name(),
+            "requester_only",
+            "node {i} runs the wrong policy"
+        );
+        assert_eq!(
+            w.node(i).stats.delegated_in,
+            0,
+            "requester-only node {i} accepted delegated work"
+        );
+    }
+    // Servers actually served delegated work.
+    let served: u64 =
+        (0..9).map(|i| w.node(i).stats.delegated_in).sum();
+    assert!(served > 0, "nobody served anything");
+}
+
+#[test]
+fn requester_only_trait_works_without_the_scalar_knob() {
+    // RequesterOnly selected as an object on a default-knob node: always
+    // offloads, never accepts — no `requester_only: true` knob in sight.
+    use wwwserve::backend::{Profile, SimBackend};
+    use wwwserve::coordinator::{Action, Event, LedgerManager, Message, Node};
+    use wwwserve::gossip::GossipConfig;
+    use wwwserve::ledger::SharedLedger;
+    use wwwserve::policy::{NodePolicy, SystemPolicy};
+    use wwwserve::types::{Request, RequestId};
+    use wwwserve::NodeId;
+    use std::sync::{Arc, Mutex};
+
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mk = |id: u32| {
+        Node::new(
+            NodeId(id),
+            NodePolicy::default(),
+            SystemPolicy::default(),
+            Box::new(SimBackend::new(Profile::test(50.0, 4))),
+            LedgerManager::shared(shared.clone()),
+            GossipConfig::default(),
+            42,
+            0.0,
+        )
+    };
+    let _server = mk(1);
+    let mut n = mk(0);
+    n.set_participation(Box::new(RequesterOnly));
+    n.system.duel_rate = 0.0;
+    n.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+    let req = Request {
+        id: RequestId { origin: NodeId(0), seq: 0 },
+        prompt_tokens: 100,
+        output_tokens: 100,
+        submitted_at: 0.0,
+        slo_deadline: 60.0,
+        synthetic: false,
+        payload: vec![],
+    };
+    // Idle backend, yet the request goes to the market.
+    let a = n.handle(Event::UserRequest(req.clone()), 0.0);
+    assert!(
+        a.iter()
+            .any(|x| matches!(x, Action::Send { msg: Message::Probe { .. }, .. })),
+        "RequesterOnly must always offload: {a:?}"
+    );
+    // Incoming probes are refused outright.
+    let a = n.handle(
+        Event::Message {
+            from: NodeId(1),
+            msg: Message::Probe {
+                req_id: RequestId { origin: NodeId(1), seq: 7 },
+                prompt_tokens: 10,
+                output_tokens: 10,
+            },
+        },
+        0.1,
+    );
+    assert!(a.iter().any(|x| matches!(
+        x,
+        Action::Send { msg: Message::ProbeReject { .. }, .. }
+    )));
+}
