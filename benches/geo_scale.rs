@@ -27,6 +27,15 @@
 //!    consumers, all selected via the declarative `topology.fleet`
 //!    `policy` key; reports per-policy-group SLO attainment and served
 //!    counts (asserted structural + behavioural invariants).
+//! 6. **Elastic replica placement** — each region declares one committed
+//!    server plus standby replicas behind a `capacity` block; the
+//!    reactive controller rides the follow-the-sun diurnal wave,
+//!    spawning standbys into each region's rush hour and retiring them
+//!    after. Asserted: peak-window SLO attainment within 5 points of
+//!    static peak provisioning (the same fleet held online for the whole
+//!    run) at ≥ 25% fewer server node-hours over the diurnal cycle — and
+//!    a `capacity: {policy: "static"}` declaration replays the
+//!    no-capacity-block trace fingerprint exactly.
 //!
 //! `--smoke` (or `GEO_SCALE_SMOKE=1`) runs single-iteration timings — the
 //! CI tier.
@@ -523,6 +532,293 @@ fn mixed_policy_part() -> Json {
     ])
 }
 
+// ---------------------------------------------------------------------------
+// Part 6: elastic per-region replica placement against the diurnal wave
+// ---------------------------------------------------------------------------
+
+/// Server-fleet provisioning for the part-6 scenario. Every mode declares
+/// the same per-region commitment of `1 + ELASTIC_STANDBY` replicas; they
+/// differ in how much of it is held online.
+#[derive(Clone, Copy, PartialEq)]
+enum Provisioning {
+    /// The whole commitment online for the whole run (no capacity block).
+    StaticPeak,
+    /// 1 committed + standbys behind a reactive `capacity` block.
+    Elastic,
+    /// Committed servers only, with an inert `capacity: {policy:"static"}`
+    /// declaration (replay-equivalence check).
+    StaticBlock,
+    /// Committed servers only, no capacity block at all (the fingerprint
+    /// baseline for `StaticBlock`).
+    NoBlock,
+}
+
+const ELASTIC_STANDBY: usize = 2;
+
+/// One requester + a server group per region; requesters ride offset
+/// diurnal waves (each region's rush hour a third of a cycle apart) with
+/// short outputs, so the 30 s SLO floor leaves slack for WAN detours but
+/// not for sustained undersupply.
+fn elastic_config(mode: Provisioning) -> String {
+    let server_count = match mode {
+        Provisioning::StaticPeak => 1 + ELASTIC_STANDBY,
+        _ => 1,
+    };
+    let capacity = match mode {
+        Provisioning::Elastic => format!(
+            r#", "capacity": {{ "policy": "reactive",
+                 "standby": {ELASTIC_STANDBY},
+                 "scale_up_util": 0.75, "scale_down_util": 0.25,
+                 "slo_target": 0.9, "cooldown": 6, "eval_every": 2,
+                 "online_cost_per_hour": 1.0,
+                 "standby_cost_per_hour": 0.1 }}"#
+        ),
+        Provisioning::StaticBlock => {
+            r#", "capacity": { "policy": "static" }"#.to_string()
+        }
+        _ => String::new(),
+    };
+    let mut groups = Vec::new();
+    for (region, offset) in [("us", 0.0), ("eu", 100.0), ("asia", 200.0)] {
+        groups.push(format!(
+            r#"{{ "region": "{region}", "count": 1,
+                 "policy": "requester_only", "name": "req-{region}",
+                 "node": {{
+                   "profile": {{ "prefill_tok_s": 2000, "decode_tok_s": 40,
+                                 "max_agg_decode_tok_s": 160,
+                                 "max_batch": 4 }},
+                   "policy": {{ "latency_penalty": 50.0 }} }},
+                 "diurnal": {{ "period": {PERIOD}, "peak_inter_arrival": 2.5,
+                               "off_inter_arrival": 25,
+                               "offset": {offset} }},
+                 "lengths": {{ "output_mean": 300,
+                               "output_sigma": 0.5 }} }}"#
+        ));
+        groups.push(format!(
+            r#"{{ "region": "{region}", "count": {server_count},
+                 "name": "srv-{region}",
+                 "node": {{
+                   "profile": {{ "prefill_tok_s": 4000, "decode_tok_s": 40,
+                                 "max_agg_decode_tok_s": 80,
+                                 "max_batch": 2 }},
+                   "policy": {{ "stake": 20, "accept_freq": 1.0,
+                                "latency_penalty": 50.0 }} }}{capacity} }}"#
+        ));
+    }
+    format!(
+        r#"{{
+            "seed": {SEED},
+            "horizon": {HORIZON},
+            "system": {{ "duel_rate": 0.0 }},
+            "topology": {{
+                "regions": ["us", "eu", "asia"],
+                "intra": {{ "latency": [0.002, 0.010] }},
+                "inter": {{ "latency": [0.040, 0.080], "jitter": 0.005 }},
+                "fleet": [ {} ]
+            }}
+        }}"#,
+        groups.join(", ")
+    )
+}
+
+struct ElasticRun {
+    /// SLO attainment of requests submitted inside their origin region's
+    /// diurnal peak windows.
+    peak_slo: f64,
+    overall_slo: f64,
+    /// Server node-hours over the diurnal cycle ([0, HORIZON]).
+    server_node_hours: f64,
+    scale_events: u64,
+    credits_charged: f64,
+    /// Per-standby online seconds (empty outside Elastic mode).
+    standby_online_secs: Vec<f64>,
+}
+
+/// Diurnal peak membership: requester of region r has offset r * 100 and
+/// alternating 150 s peak / off windows.
+fn in_peak(t: f64, region: usize) -> bool {
+    let offset = region as f64 * (PERIOD / 3.0);
+    (t - offset).rem_euclid(PERIOD) < PERIOD / 2.0
+}
+
+fn run_elastic(mode: Provisioning) -> ElasticRun {
+    let e = wwwserve::config::parse_experiment(&elastic_config(mode))
+        .expect("elastic config parses");
+    let mut w = World::new(e.world.clone(), e.setups.clone());
+    let server_idx: Vec<usize> = e
+        .setups
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| {
+            s.group.as_deref().is_some_and(|g| g.starts_with("srv-"))
+        })
+        .map(|(i, _)| i)
+        .collect();
+    // Node-hours are judged over the diurnal cycle itself; the drain
+    // phase afterwards only flushes in-flight completions for the SLO
+    // numbers.
+    w.run_until(HORIZON);
+    let server_node_hours: f64 = server_idx
+        .iter()
+        .map(|&i| w.node_seconds_online(i))
+        .sum::<f64>()
+        / 3600.0;
+    let standby_online_secs: Vec<f64> = w
+        .capacity_groups()
+        .iter()
+        .flat_map(|g| g.standby.clone())
+        .map(|i| w.node_seconds_online(i))
+        .collect();
+    w.run_until(HORIZON + 400.0);
+    let (mut met, mut total) = (0usize, 0usize);
+    for rec in w.recorder.all().iter().filter(|r| !r.synthetic) {
+        let region = w.topology().region_of(rec.origin.0 as usize);
+        if in_peak(rec.submitted_at, region) {
+            met += rec.slo_met() as usize;
+            total += 1;
+        }
+    }
+    assert!(total > 100, "peak windows barely ran: {total} records");
+    ElasticRun {
+        peak_slo: met as f64 / total as f64,
+        overall_slo: w.recorder.slo_attainment(),
+        server_node_hours,
+        scale_events: w.scale_events,
+        credits_charged: w.capacity_credits_charged as f64
+            / wwwserve::types::CREDIT as f64,
+        standby_online_secs,
+    }
+}
+
+/// Full-trace fingerprint for the static-block ≡ no-block equivalence
+/// check (same shape as `rust/tests/replay_equivalence.rs`).
+fn elastic_fingerprint(mode: Provisioning) -> (usize, u64, u64, u64, Vec<u64>) {
+    let e = wwwserve::config::parse_experiment(&elastic_config(mode))
+        .expect("config parses");
+    let mut w = World::new(e.world.clone(), e.setups.clone());
+    w.run_until(HORIZON + 400.0);
+    (
+        w.recorder.len(),
+        (w.recorder.mean_latency() * 1e9) as u64,
+        w.messages_sent,
+        w.events_processed,
+        w.credit_totals().iter().map(|c| (c * 1e6) as u64).collect(),
+    )
+}
+
+fn elastic_part() -> Json {
+    let stat = run_elastic(Provisioning::StaticPeak);
+    let elastic = run_elastic(Provisioning::Elastic);
+    println!(
+        "\n## Elastic replica placement (1 committed + {ELASTIC_STANDBY} \
+         standby per region vs the same commitment held online)\n"
+    );
+    let mut t = Table::new(&[
+        "provisioning", "peak-window SLO", "overall SLO",
+        "server node-hours", "scale events", "credits burned",
+    ]);
+    for (name, r) in [("static peak", &stat), ("elastic", &elastic)] {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.3}", r.peak_slo),
+            format!("{:.3}", r.overall_slo),
+            format!("{:.2}", r.server_node_hours),
+            format!("{}", r.scale_events),
+            format!("{:.3}", r.credits_charged),
+        ]);
+    }
+    t.print();
+    let saving = 1.0 - elastic.server_node_hours / stat.server_node_hours;
+    println!(
+        "node-hour saving: {:.1}% (elastic {:.2} vs static {:.2}); \
+         standby online secs: {:?}",
+        saving * 100.0,
+        elastic.server_node_hours,
+        stat.server_node_hours,
+        elastic
+            .standby_online_secs
+            .iter()
+            .map(|s| *s as u64)
+            .collect::<Vec<_>>()
+    );
+
+    // The headline claim, asserted: elasticity keeps the rush-hour SLO
+    // within a few points of peak provisioning at materially fewer
+    // node-hours.
+    assert!(
+        elastic.peak_slo + 0.05 >= stat.peak_slo,
+        "elastic fleet lost the peak-window SLO: elastic {:.3} vs \
+         static {:.3}",
+        elastic.peak_slo,
+        stat.peak_slo
+    );
+    assert!(
+        elastic.server_node_hours <= 0.75 * stat.server_node_hours,
+        "elastic fleet saved under 25% node-hours: elastic {:.2} vs \
+         static {:.2}",
+        elastic.server_node_hours,
+        stat.server_node_hours
+    );
+    // The controller genuinely worked the wave: standbys were spawned
+    // (and not simply left running for the whole cycle), and holding
+    // costs were assessed.
+    assert!(elastic.scale_events > 0, "no scale events at all");
+    assert!(
+        elastic.standby_online_secs.iter().any(|&s| s > 0.0),
+        "no standby ever came online"
+    );
+    assert!(
+        elastic
+            .standby_online_secs
+            .iter()
+            .all(|&s| s < 0.9 * HORIZON),
+        "standbys never retired: {:?}",
+        elastic.standby_online_secs
+    );
+    assert!(elastic.credits_charged > 0.0, "no holding cost accrued");
+
+    // The Static capacity policy is an inert declaration: bit-identical
+    // to not declaring capacity at all.
+    assert_eq!(
+        elastic_fingerprint(Provisioning::StaticBlock),
+        elastic_fingerprint(Provisioning::NoBlock),
+        "capacity {{policy: static}} diverged from the no-block trace"
+    );
+    println!("static capacity block replays the no-block trace ✓");
+
+    Json::obj(vec![
+        (
+            "static_peak",
+            Json::obj(vec![
+                ("peak_slo", Json::num(stat.peak_slo)),
+                ("overall_slo", Json::num(stat.overall_slo)),
+                ("server_node_hours", Json::num(stat.server_node_hours)),
+            ]),
+        ),
+        (
+            "elastic",
+            Json::obj(vec![
+                ("peak_slo", Json::num(elastic.peak_slo)),
+                ("overall_slo", Json::num(elastic.overall_slo)),
+                ("server_node_hours", Json::num(elastic.server_node_hours)),
+                ("scale_events", Json::num(elastic.scale_events as f64)),
+                ("credits_charged", Json::num(elastic.credits_charged)),
+                (
+                    "standby_online_secs",
+                    Json::Arr(
+                        elastic
+                            .standby_online_secs
+                            .iter()
+                            .map(|s| Json::num(*s))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        ("node_hour_saving", Json::num(saving)),
+    ])
+}
+
 fn regions_json(regions: &[(String, f64, f64, usize)]) -> Json {
     Json::Arr(
         regions
@@ -684,6 +980,10 @@ fn main() {
     // group via the declarative `policy` key.
     let mixed = mixed_policy_part();
 
+    // Part 6: elastic replica placement riding the diurnal wave vs the
+    // same commitment statically peak-provisioned.
+    let elastic = elastic_part();
+
     // Machine-readable trajectory: the per-region SLO/p99 of every part
     // plus the reroute window counts (CI uploads this artifact).
     let report = Json::obj(vec![
@@ -722,6 +1022,7 @@ fn main() {
             ]),
         ),
         ("mixed_policy", mixed),
+        ("elastic", elastic),
     ]);
     let path = "BENCH_geo_scale.json";
     write_json_report(path, &report).expect("write bench json");

@@ -70,4 +70,16 @@ pub trait Backend {
     fn steal_queued(&mut self, _k: usize) -> Vec<Request> {
         Vec::new()
     }
+
+    /// Current admission cap (concurrency slots committed) — the knob the
+    /// elastic-capacity controller works (`capacity` module). Backends
+    /// without an adjustable cap report `usize::MAX`.
+    fn slots(&self) -> usize {
+        usize::MAX
+    }
+
+    /// Scale the admission cap. Running work is never killed: a shrink
+    /// takes effect as slots drain, a growth admits from the queue
+    /// immediately. Default: no-op for fixed-capacity backends.
+    fn set_slots(&mut self, _slots: usize, _now: Time) {}
 }

@@ -269,6 +269,26 @@ impl Backend for SimBackend {
         }
         out
     }
+
+    fn slots(&self) -> usize {
+        self.profile.max_batch
+    }
+
+    /// Elastic admission cap (`capacity` controller lever): settle work to
+    /// `now`, move the cap, and — on a growth — admit from the queue
+    /// immediately. A shrink never evicts running sequences; it simply
+    /// stops admissions until attrition brings the batch under the new
+    /// cap. Utilization reporting follows the new cap at once (the
+    /// saturation batch still bounds `effective_capacity`).
+    fn set_slots(&mut self, slots: usize, now: Time) {
+        let slots = slots.max(1);
+        if slots == self.profile.max_batch {
+            return;
+        }
+        self.settle(now.max(self.last_settled));
+        self.profile.max_batch = slots;
+        self.admit(now.max(self.last_settled));
+    }
 }
 
 #[cfg(test)]
@@ -409,6 +429,54 @@ mod tests {
         b.submit(req(0, 10, 50, 0.0), ExecKind::Local, 0.0);
         b.advance(100.0);
         assert!((b.tokens_generated - 50.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn set_slots_grows_admission_and_shrink_never_evicts() {
+        let mut b = SimBackend::new(profile(10.0, 1e9, 1e9, 2));
+        for i in 0..4 {
+            b.submit(req(i, 10, 1000, 0.0), ExecKind::Local, 0.0);
+        }
+        assert_eq!(b.running_len(), 2);
+        assert_eq!(b.queue_len(), 2);
+        assert_eq!(b.slots(), 2);
+        // Growing the cap admits the queued work immediately.
+        b.set_slots(4, 1.0);
+        assert_eq!(b.slots(), 4);
+        assert_eq!(b.running_len(), 4);
+        assert_eq!(b.queue_len(), 0);
+        assert!((b.utilization() - 4.0 / 4.0).abs() < 1e-12);
+        // Shrinking never kills running sequences; admission just stops.
+        b.set_slots(1, 2.0);
+        assert_eq!(b.running_len(), 4);
+        b.submit(req(9, 10, 10, 3.0), ExecKind::Local, 3.0);
+        assert_eq!(b.running_len(), 4, "over-cap admission after shrink");
+        assert_eq!(b.queue_len(), 1);
+        // A floor of one slot always remains.
+        b.set_slots(0, 4.0);
+        assert_eq!(b.slots(), 1);
+    }
+
+    #[test]
+    fn set_slots_noop_preserves_trace() {
+        let run = |rescale: bool| {
+            let mut b = SimBackend::new(profile(7.0, 23.0, 400.0, 3));
+            for i in 0..10 {
+                b.submit(
+                    req(i, 50, 40, i as f64),
+                    ExecKind::Local,
+                    i as f64,
+                );
+                if rescale {
+                    b.set_slots(3, i as f64); // same cap: must be inert
+                }
+            }
+            b.advance(500.0)
+                .iter()
+                .map(|c| (c.request.id.seq, (c.finished_at * 1e9) as i64))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

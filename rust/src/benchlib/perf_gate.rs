@@ -21,6 +21,13 @@
 
 use crate::util::json::Json;
 
+/// Default relative regression tolerance (20%) — the value the CI gate
+/// runs with unless the `PERF_GATE_TOLERANCE` env var overrides it (see
+/// `rust/src/bin/perf_gate.rs`). The boundary is *inclusive*: a run at
+/// exactly `baseline * (1 - tolerance)` events/sec (or
+/// `baseline * (1 + tolerance)` gossip bytes) still passes.
+pub const PERF_GATE_TOLERANCE: f64 = 0.20;
+
 /// Outcome of one gate evaluation.
 #[derive(Debug, Default)]
 pub struct GateReport {
@@ -200,6 +207,81 @@ mod tests {
         // Improvements never fail.
         let fast = report(&[(50, "delta", 5000.0, 100.0)]);
         assert!(compare(&base, &fast, 0.2).passed());
+    }
+
+    #[test]
+    fn tolerance_boundary_exactly_at_gate_tolerance_passes() {
+        let base = report(&[(50, "delta", 1000.0, 500.0)]);
+        // The boundary is inclusive on both metrics: exactly
+        // tolerance-worse still passes...
+        let floor = 1000.0 * (1.0 - PERF_GATE_TOLERANCE);
+        let ceil = 500.0 * (1.0 + PERF_GATE_TOLERANCE);
+        let at = report(&[(50, "delta", floor, ceil)]);
+        assert!(compare(&base, &at, PERF_GATE_TOLERANCE).passed());
+        // ...and anything past it fails, one metric at a time.
+        let slow = report(&[(50, "delta", floor - 1.0, ceil)]);
+        let rep = compare(&base, &slow, PERF_GATE_TOLERANCE);
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("events_per_sec"));
+        let fat = report(&[(50, "delta", floor, ceil + 1.0)]);
+        let rep = compare(&base, &fat, PERF_GATE_TOLERANCE);
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("gossip_bytes_per_round"));
+    }
+
+    fn run_with(pairs: Vec<(&str, Json)>) -> Json {
+        let mut fields = vec![
+            ("nodes", Json::num(50.0)),
+            ("gossip", Json::str("delta")),
+        ];
+        fields.extend(pairs);
+        Json::obj(vec![("runs", Json::Arr(vec![Json::obj(fields)]))])
+    }
+
+    #[test]
+    fn metric_missing_from_either_side_skips_not_fails() {
+        // Baseline has only events/sec, current has only gossip bytes:
+        // each metric is missing from exactly one side. Neither direction
+        // may fail the gate — smoke tiers and schema drift measure
+        // subsets — but both must be called out as skipped.
+        let base = run_with(vec![("events_per_sec", Json::num(1000.0))]);
+        let cur =
+            run_with(vec![("gossip_bytes_per_round", Json::num(400.0))]);
+        let rep = compare(&base, &cur, 0.2);
+        assert!(rep.passed(), "missing metrics failed the gate: {rep:?}");
+        assert_eq!(
+            rep.checked
+                .iter()
+                .filter(|l| l.contains("missing value"))
+                .count(),
+            2,
+            "both one-sided metrics must be reported skipped: {rep:?}"
+        );
+        // The run keys still matched, so this is not the
+        // nothing-in-common wiring failure.
+        assert!(rep.failures.is_empty());
+    }
+
+    #[test]
+    fn zero_and_nan_baselines_are_skipped_diagnostics() {
+        // A zeroed baseline (bad artifact) or NaN (corrupt JSON maths)
+        // must not divide-by-zero into a pass *or* a spurious failure.
+        let base = report(&[(50, "delta", 0.0, f64::NAN)]);
+        let cur = report(&[(50, "delta", 900.0, 500.0)]);
+        let rep = compare(&base, &cur, 0.2);
+        assert!(rep.passed());
+        assert_eq!(
+            rep.checked
+                .iter()
+                .filter(|l| l.contains("non-finite"))
+                .count(),
+            2,
+            "zero/NaN baselines must be skipped with a notice: {rep:?}"
+        );
+        // NaN on the current side is equally inert.
+        let base = report(&[(50, "delta", 1000.0, 500.0)]);
+        let cur = report(&[(50, "delta", f64::NAN, 500.0)]);
+        assert!(compare(&base, &cur, 0.2).passed());
     }
 
     #[test]

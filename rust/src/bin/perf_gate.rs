@@ -6,7 +6,7 @@
 //! A `"bootstrap": true` baseline passes with instructions — commit the
 //! printed artifact to arm the gate.
 
-use wwwserve::benchlib::perf_gate::compare;
+use wwwserve::benchlib::perf_gate::{compare, PERF_GATE_TOLERANCE};
 use wwwserve::util::json::Json;
 
 fn load(path: &str) -> Json {
@@ -35,7 +35,7 @@ fn main() {
     let tolerance = std::env::var("PERF_GATE_TOLERANCE")
         .ok()
         .and_then(|v| v.parse::<f64>().ok())
-        .unwrap_or(0.20);
+        .unwrap_or(PERF_GATE_TOLERANCE);
     let current = load(current_path);
     let baseline = load(baseline_path);
     let rep = compare(&baseline, &current, tolerance);

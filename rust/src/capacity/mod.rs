@@ -1,0 +1,876 @@
+//! Elastic per-region capacity: decentralized autoscaling of resource
+//! commitments against the diurnal wave.
+//!
+//! The paper's participants "flexibly determine their participation
+//! policies and **resource commitments**" — PR 4 made the *behaviour* half
+//! pluggable ([`crate::policy::ParticipationPolicy`]); this module makes
+//! the *commitment* half elastic. Each fleet group runs its own
+//! autoscaling controller — there is **no global coordinator**; a group's
+//! controller is the group operator's own policy loop, and it only watches
+//! signals the group's nodes already have:
+//!
+//! * **local backend pressure** — running-slot utilization and queue
+//!   length straight from [`crate::backend::Backend`] (the same signals
+//!   the dispatch layer polls);
+//! * **region SLO pressure** — the windowed miss fraction of the group's
+//!   home region, the per-region health summary that already circulates
+//!   with gossip digests (the simulator folds it from the recorder; a TCP
+//!   deployment would fold the gossiped region summaries);
+//! * **live latency to remote capacity** — the group's
+//!   [`crate::latency::LatencyEstimator`] estimate to the nearest other
+//!   region. When idle remote capacity is effectively next door, spinning
+//!   local standbys is less urgent; across an ocean it is the only way to
+//!   protect the SLO.
+//!
+//! ## The controller loop
+//!
+//! Every [`CapacityConfig::eval_every`] seconds the group controller:
+//!
+//! 1. **accrues holding costs** — online replicas burn
+//!    [`CapacityConfig::online_cost_per_hour`] credits per node-hour,
+//!    idle standbys burn the (much cheaper)
+//!    [`CapacityConfig::standby_cost_per_hour`] — the commitment
+//!    economics: capacity you keep hot costs you credits whether or not
+//!    it earns serving rewards;
+//! 2. **scales slots** — each online member's backend admission cap moves
+//!    within the declared commitment range
+//!    `[min_slots, max_slots]` ([`crate::backend::Backend::set_slots`]);
+//!    running work is never killed, a shrink takes effect as slots drain;
+//! 3. **spawns / retires replicas** — whole standby replicas come online
+//!    (`Join`) under sustained pressure once the slot lever is exhausted,
+//!    and drain + leave (`Leave`) when the wave passes, reusing the exact
+//!    join/leave churn machinery fleets already exercise. Only *idle*
+//!    replicas are retired — in-flight work is never abandoned.
+//!
+//! All decisions are threshold-based and deterministic: the controller
+//! consumes **no randomness**, so a capacity-managed world stays
+//! bit-reproducible from the seed, and the [`StaticCapacity`] no-op policy
+//! (or an absent `capacity` config block) leaves the trace of a
+//! capacity-free world untouched byte for byte
+//! (`rust/tests/replay_equivalence.rs`).
+//!
+//! Declaratively, a `topology.fleet` group opts in with a `capacity`
+//! block (see `config::parse_experiment`):
+//!
+//! ```json
+//! { "region": "us", "count": 1,
+//!   "capacity": { "policy": "reactive", "standby": 3,
+//!                 "min_slots": 2, "max_slots": 8,
+//!                 "scale_up_util": 0.7, "scale_down_util": 0.25,
+//!                 "cooldown": 6, "eval_every": 2,
+//!                 "online_cost_per_hour": 1.0,
+//!                 "standby_cost_per_hour": 0.1 } }
+//! ```
+//!
+//! `standby: k` stamps `k` extra copies of the group's node template that
+//! start offline — the declared-but-idle half of the commitment range.
+//! `benches/geo_scale.rs` part 6 rides a 3-region elastic fleet over the
+//! follow-the-sun diurnal wave and pins the claim: peak-window SLO within
+//! a few points of static peak provisioning at materially fewer
+//! node-hours.
+
+use crate::types::{Time, CREDIT};
+
+/// Which controller a capacity-managed group runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CapacityPolicyKind {
+    /// Declared commitment only — no controller runs, nothing is charged,
+    /// nothing scales, and [`CapacityConfig::check`] rejects standby or
+    /// holding-cost knobs (they would be dead weight). A
+    /// `capacity: {policy: "static"}` group replays the trace of a
+    /// capacity-free config bit for bit.
+    #[default]
+    Static,
+    /// Threshold-based reactive scaling (see [`ReactiveCapacity`]).
+    Reactive,
+}
+
+impl CapacityPolicyKind {
+    /// Parse a config-file name. `None` for unknown names — the config
+    /// layer turns that into a loud error.
+    pub fn parse(s: &str) -> Option<CapacityPolicyKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "static" => CapacityPolicyKind::Static,
+            "reactive" => CapacityPolicyKind::Reactive,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CapacityPolicyKind::Static => "static",
+            CapacityPolicyKind::Reactive => "reactive",
+        }
+    }
+
+    /// Instantiate the policy object.
+    pub fn build(self) -> Box<dyn CapacityPolicy> {
+        match self {
+            CapacityPolicyKind::Static => Box::new(StaticCapacity),
+            CapacityPolicyKind::Reactive => Box::new(ReactiveCapacity),
+        }
+    }
+}
+
+/// Declarative knobs for one group's elastic commitment (the `capacity`
+/// block on a `topology.fleet` group).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CapacityConfig {
+    pub policy: CapacityPolicyKind,
+    /// Slot-scaling commitment floor. `0` (with `max_slots` 0) disables
+    /// the slot lever — the backend keeps its profile's admission cap.
+    pub min_slots: usize,
+    /// Slot-scaling commitment ceiling (`0` = slot lever disabled).
+    pub max_slots: usize,
+    /// Slots added/removed per scale event.
+    pub slot_step: usize,
+    /// Standby replicas stamped behind the group (start offline).
+    /// Requires a scaling policy: a `Static` declaration could never
+    /// activate them, so `check` rejects the combination.
+    pub standby: usize,
+    /// Mean online-member utilization at/above which capacity grows.
+    pub scale_up_util: f64,
+    /// Mean online-member utilization at/below which capacity shrinks.
+    pub scale_down_util: f64,
+    /// Region SLO attainment target: a windowed miss fraction above
+    /// `1 - slo_target` counts as pressure even below the utilization
+    /// threshold.
+    pub slo_target: f64,
+    /// Minimum seconds between scale actions (slot or replica).
+    pub cooldown: f64,
+    /// Controller cadence (seconds between evaluations).
+    pub eval_every: f64,
+    /// Credits burned per node-hour while a replica is online.
+    pub online_cost_per_hour: f64,
+    /// Credits burned per node-hour while a standby replica sits offline
+    /// (the cheap half of the commitment economics).
+    pub standby_cost_per_hour: f64,
+}
+
+impl Default for CapacityConfig {
+    fn default() -> Self {
+        CapacityConfig {
+            policy: CapacityPolicyKind::Static,
+            min_slots: 0,
+            max_slots: 0,
+            slot_step: 2,
+            standby: 0,
+            scale_up_util: 0.8,
+            scale_down_util: 0.3,
+            slo_target: 0.9,
+            cooldown: 30.0,
+            eval_every: 5.0,
+            online_cost_per_hour: 0.0,
+            standby_cost_per_hour: 0.0,
+        }
+    }
+}
+
+impl CapacityConfig {
+    /// Range-check every knob; the single source of validity used by both
+    /// the config parser (mapped to a `ConfigError`) and
+    /// [`validate`](Self::validate) (panicking form).
+    pub fn check(&self) -> Result<(), String> {
+        if (self.min_slots == 0) != (self.max_slots == 0) {
+            return Err(format!(
+                "capacity.min_slots/max_slots must be given together \
+                 (both > 0) or both omitted, got {}/{}",
+                self.min_slots, self.max_slots
+            ));
+        }
+        if self.min_slots > self.max_slots {
+            return Err(format!(
+                "capacity.min_slots {} > max_slots {}",
+                self.min_slots, self.max_slots
+            ));
+        }
+        if self.slot_step == 0 {
+            return Err("capacity.slot_step must be >= 1".to_string());
+        }
+        if self.policy == CapacityPolicyKind::Static
+            && (self.standby > 0
+                || self.online_cost_per_hour > 0.0
+                || self.standby_cost_per_hour > 0.0)
+        {
+            return Err(format!(
+                "a static capacity declaration is inert (no controller \
+                 runs): standby ({}) and holding costs ({}/{}) require \
+                 policy \"reactive\"",
+                self.standby,
+                self.online_cost_per_hour,
+                self.standby_cost_per_hour
+            ));
+        }
+        for (name, v, lo_ok) in [
+            ("scale_up_util", self.scale_up_util, self.scale_up_util > 0.0),
+            (
+                "scale_down_util",
+                self.scale_down_util,
+                self.scale_down_util >= 0.0,
+            ),
+        ] {
+            if !(v.is_finite() && lo_ok) {
+                return Err(format!("capacity.{name} invalid: {v}"));
+            }
+        }
+        if self.scale_down_util >= self.scale_up_util {
+            return Err(format!(
+                "capacity.scale_down_util {} must be below scale_up_util {}",
+                self.scale_down_util, self.scale_up_util
+            ));
+        }
+        if !(self.slo_target.is_finite()
+            && (0.0..=1.0).contains(&self.slo_target))
+        {
+            return Err(format!(
+                "capacity.slo_target must be in [0, 1], got {}",
+                self.slo_target
+            ));
+        }
+        if !(self.cooldown.is_finite() && self.cooldown >= 0.0) {
+            return Err(format!(
+                "capacity.cooldown must be >= 0, got {}",
+                self.cooldown
+            ));
+        }
+        if !(self.eval_every.is_finite() && self.eval_every > 0.0) {
+            return Err(format!(
+                "capacity.eval_every must be > 0, got {}",
+                self.eval_every
+            ));
+        }
+        for (name, v) in [
+            ("online_cost_per_hour", self.online_cost_per_hour),
+            ("standby_cost_per_hour", self.standby_cost_per_hour),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!("capacity.{name} must be >= 0, got {v}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Panics with a descriptive message on invalid knobs (construction
+    /// and `WorldConfig::validate` paths — misconfigured experiments fail
+    /// loudly; the config parser uses [`check`](Self::check) to return
+    /// `Err` on malformed user input instead).
+    pub fn validate(&self) {
+        if let Err(msg) = self.check() {
+            panic!("{msg}");
+        }
+    }
+
+    /// Does this group's slot lever exist at all?
+    pub fn scales_slots(&self) -> bool {
+        self.max_slots > 0
+    }
+}
+
+/// Everything one controller evaluation can see about its group —
+/// aggregated from signals the nodes already expose locally.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupSignals {
+    /// Mean running-slot utilization over the group's *online* replicas
+    /// (0 when none are online).
+    pub mean_util: f64,
+    /// Total requests waiting for a slot across online replicas.
+    pub queued: usize,
+    /// Online replicas (committed members + activated standbys).
+    pub online: usize,
+    /// Standby replicas currently offline (available to activate).
+    pub offline_standby: usize,
+    /// Activated standbys currently online (available to retire).
+    pub elastic_online: usize,
+    /// True when the slot lever cannot grow further (disabled, or every
+    /// online replica is already at `max_slots`).
+    pub slots_maxed: bool,
+    /// Windowed miss fraction of the group's home region (0 with no
+    /// completions in the window).
+    pub slo_pressure: f64,
+    /// Live one-way latency estimate to the nearest *other* region.
+    /// `f64::INFINITY` in flat / single-region worlds: there is no remote
+    /// capacity to lean on, so local standbys are the only lever.
+    pub remote_latency: f64,
+}
+
+/// One replica's locally observable state, as gathered at evaluation time.
+#[derive(Debug, Clone, Copy)]
+pub struct MemberState {
+    /// Node index in the world.
+    pub node: usize,
+    pub online: bool,
+    /// Running-slot utilization in [0, 1].
+    pub utilization: f64,
+    /// Requests waiting for a slot.
+    pub queue_len: usize,
+    /// Current backend admission cap.
+    pub slots: usize,
+}
+
+/// A group's commitment-scaling policy: how the declared range is worked,
+/// given the signals. Deterministic by contract — implementations consume
+/// no randomness, so capacity-managed worlds replay from the seed.
+pub trait CapacityPolicy: std::fmt::Debug {
+    /// Stable name for config selection and reporting.
+    fn name(&self) -> &'static str;
+
+    /// Desired admission-slot count for one online replica currently at
+    /// `current` slots. Return `current` to hold. Only called when the
+    /// group's slot lever is enabled.
+    fn desired_slots(
+        &self,
+        _cfg: &CapacityConfig,
+        _signals: &GroupSignals,
+        current: usize,
+    ) -> usize {
+        current
+    }
+
+    /// Replica-level decision: `+1` activate one standby, `-1` retire one
+    /// idle elastic replica, `0` hold.
+    fn replica_delta(
+        &self,
+        _cfg: &CapacityConfig,
+        _signals: &GroupSignals,
+    ) -> i32 {
+        0
+    }
+}
+
+/// Declared commitment only: never scales, never spawns, never retires.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticCapacity;
+
+impl CapacityPolicy for StaticCapacity {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// Threshold-based reactive controller: grow on sustained backend pressure
+/// (or a missed regional SLO target), shrink when the wave passes. The
+/// slot lever moves first; whole replicas only once slots are exhausted —
+/// and spinning a replica is *more* urgent when the nearest remote
+/// capacity is an ocean away (`remote_latency`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReactiveCapacity;
+
+/// Remote capacity closer than this (one-way seconds) counts as
+/// effectively local: the replica lever then only engages on SLO
+/// pressure, not on utilization alone — the market can absorb the wave.
+const CHEAP_REMOTE_LATENCY: f64 = 0.02;
+
+impl CapacityPolicy for ReactiveCapacity {
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+
+    fn desired_slots(
+        &self,
+        cfg: &CapacityConfig,
+        s: &GroupSignals,
+        current: usize,
+    ) -> usize {
+        if s.mean_util >= cfg.scale_up_util || s.queued > 0 {
+            current.saturating_add(cfg.slot_step).min(cfg.max_slots)
+        } else if s.mean_util <= cfg.scale_down_util && s.queued == 0 {
+            current.saturating_sub(cfg.slot_step).max(cfg.min_slots)
+        } else {
+            current
+        }
+    }
+
+    fn replica_delta(&self, cfg: &CapacityConfig, s: &GroupSignals) -> i32 {
+        let slo_missing = s.slo_pressure > 1.0 - cfg.slo_target;
+        let remote_is_far = s.remote_latency > CHEAP_REMOTE_LATENCY;
+        let pressured = s.mean_util >= cfg.scale_up_util
+            && s.slots_maxed
+            && (remote_is_far || slo_missing);
+        if (pressured || slo_missing) && s.offline_standby > 0 {
+            return 1;
+        }
+        if s.mean_util <= cfg.scale_down_util
+            && s.queued == 0
+            && !slo_missing
+            && s.elastic_online > 0
+        {
+            return -1;
+        }
+        0
+    }
+}
+
+/// A scale/charge decision the simulator (or a runner) applies on the
+/// controller's behalf.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CapacityAction {
+    /// Set one online replica's backend admission cap.
+    SetSlots { node: usize, slots: usize },
+    /// Bring one standby replica online (a `Join`).
+    Activate { node: usize },
+    /// Take one idle elastic replica offline (a `Leave`).
+    Retire { node: usize },
+    /// Burn `amount` micro-credits of holding cost from a replica's
+    /// balance (`OpReason::CapacityHold`).
+    Charge { node: usize, amount: u64 },
+}
+
+/// Static description of one capacity-managed group, carried on
+/// `WorldConfig` (the config layer builds these from `capacity` blocks;
+/// tests build them directly).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityGroupSpec {
+    /// Reporting label (the fleet group's name).
+    pub label: String,
+    /// Home region index (SLO pressure is folded from this region's
+    /// completions).
+    pub region: u32,
+    /// Committed members — always-on replicas, never retired.
+    pub members: Vec<usize>,
+    /// Standby replicas (stamped offline; activated/retired by the
+    /// controller).
+    pub standby: Vec<usize>,
+    pub cfg: CapacityConfig,
+}
+
+/// One group's controller state. Driven by the simulator every
+/// `eval_every` seconds with freshly gathered [`MemberState`]s; emits
+/// [`CapacityAction`]s. Deterministic: no RNG, ties broken by node index.
+#[derive(Debug)]
+pub struct GroupController {
+    pub spec: CapacityGroupSpec,
+    policy: Box<dyn CapacityPolicy>,
+    /// Cooldown anchor: time of the last scale action.
+    last_scale: f64,
+    /// Last evaluation time (holding-cost integration anchor).
+    last_eval: f64,
+    /// Fractional micro-credits owed per replica (members then standby,
+    /// same order as `all_nodes`) — charges are emitted in whole
+    /// micro-credits, the remainder carries.
+    owed: Vec<f64>,
+    /// Recorder cursor: completions before this index are already folded
+    /// into past SLO-pressure windows.
+    pub seen_records: usize,
+}
+
+impl GroupController {
+    pub fn new(spec: CapacityGroupSpec) -> GroupController {
+        spec.cfg.validate();
+        let n = spec.members.len() + spec.standby.len();
+        GroupController {
+            policy: spec.cfg.policy.build(),
+            spec,
+            last_scale: f64::NEG_INFINITY,
+            last_eval: 0.0,
+            owed: vec![0.0; n],
+            seen_records: 0,
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// All replica node indices, committed members first.
+    pub fn all_nodes(&self) -> Vec<usize> {
+        self.spec
+            .members
+            .iter()
+            .chain(self.spec.standby.iter())
+            .copied()
+            .collect()
+    }
+
+    /// Fold signals and emit this round's actions. `states` must be in
+    /// `all_nodes()` order; `slo_pressure` is the windowed miss fraction
+    /// of the group's region and `remote_latency` the live estimate to
+    /// the nearest other region.
+    pub fn evaluate(
+        &mut self,
+        states: &[MemberState],
+        slo_pressure: f64,
+        remote_latency: f64,
+        now: Time,
+    ) -> Vec<CapacityAction> {
+        debug_assert_eq!(states.len(), self.owed.len());
+        let mut actions = Vec::new();
+        let cfg = self.spec.cfg;
+
+        // 1. Holding costs (continuous accrual, whole micro-credits out).
+        let dt = (now - self.last_eval).max(0.0);
+        self.last_eval = now;
+        if cfg.online_cost_per_hour > 0.0 || cfg.standby_cost_per_hour > 0.0 {
+            for (i, st) in states.iter().enumerate() {
+                let per_hour = if st.online {
+                    cfg.online_cost_per_hour
+                } else {
+                    cfg.standby_cost_per_hour
+                };
+                self.owed[i] += per_hour * CREDIT as f64 * dt / 3600.0;
+                let whole = self.owed[i].floor();
+                if whole >= 1.0 {
+                    self.owed[i] -= whole;
+                    actions.push(CapacityAction::Charge {
+                        node: st.node,
+                        amount: whole as u64,
+                    });
+                }
+            }
+        }
+
+        // 2. Signals over the online population.
+        let online: Vec<&MemberState> =
+            states.iter().filter(|s| s.online).collect();
+        let n_members = self.spec.members.len();
+        let elastic_online =
+            states[n_members..].iter().filter(|s| s.online).count();
+        let offline_standby =
+            states[n_members..].iter().filter(|s| !s.online).count();
+        let mean_util = if online.is_empty() {
+            0.0
+        } else {
+            online.iter().map(|s| s.utilization).sum::<f64>()
+                / online.len() as f64
+        };
+        let signals = GroupSignals {
+            mean_util,
+            queued: online.iter().map(|s| s.queue_len).sum(),
+            online: online.len(),
+            offline_standby,
+            elastic_online,
+            slots_maxed: !cfg.scales_slots()
+                || online.iter().all(|s| s.slots >= cfg.max_slots),
+            slo_pressure,
+            remote_latency,
+        };
+
+        // 3. Scale levers, gated by the cooldown.
+        if now - self.last_scale < cfg.cooldown {
+            return actions;
+        }
+        let mut scaled = false;
+        if cfg.scales_slots() {
+            for st in &online {
+                let want = self
+                    .policy
+                    .desired_slots(&cfg, &signals, st.slots)
+                    .clamp(cfg.min_slots, cfg.max_slots);
+                if want != st.slots {
+                    actions.push(CapacityAction::SetSlots {
+                        node: st.node,
+                        slots: want,
+                    });
+                    scaled = true;
+                }
+            }
+        }
+        match self.policy.replica_delta(&cfg, &signals) {
+            d if d > 0 => {
+                // Lowest-indexed offline standby comes up first.
+                if let Some(st) =
+                    states[n_members..].iter().find(|s| !s.online)
+                {
+                    actions.push(CapacityAction::Activate { node: st.node });
+                    scaled = true;
+                }
+            }
+            d if d < 0 => {
+                // Highest-indexed *idle* elastic replica drains out first;
+                // busy replicas are never abandoned mid-request.
+                if let Some(st) = states[n_members..]
+                    .iter()
+                    .rev()
+                    .find(|s| {
+                        s.online && s.utilization <= 0.0 && s.queue_len == 0
+                    })
+                {
+                    actions.push(CapacityAction::Retire { node: st.node });
+                    scaled = true;
+                }
+            }
+            _ => {}
+        }
+        if scaled {
+            self.last_scale = now;
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CapacityConfig {
+        CapacityConfig {
+            policy: CapacityPolicyKind::Reactive,
+            min_slots: 2,
+            max_slots: 8,
+            slot_step: 2,
+            standby: 2,
+            scale_up_util: 0.8,
+            scale_down_util: 0.3,
+            cooldown: 10.0,
+            eval_every: 2.0,
+            ..Default::default()
+        }
+    }
+
+    fn member(node: usize, online: bool, util: f64, slots: usize) -> MemberState {
+        MemberState { node, online, utilization: util, queue_len: 0, slots }
+    }
+
+    fn signals(util: f64) -> GroupSignals {
+        GroupSignals {
+            mean_util: util,
+            queued: 0,
+            online: 1,
+            offline_standby: 1,
+            elastic_online: 1,
+            slots_maxed: true,
+            slo_pressure: 0.0,
+            remote_latency: 0.08,
+        }
+    }
+
+    #[test]
+    fn config_check_rejects_bad_knobs() {
+        assert!(cfg().check().is_ok());
+        assert!(CapacityConfig::default().check().is_ok());
+        let bad = |f: &dyn Fn(&mut CapacityConfig)| {
+            let mut c = cfg();
+            f(&mut c);
+            c.check().is_err()
+        };
+        assert!(bad(&|c| c.min_slots = 9)); // min > max
+        assert!(bad(&|c| c.min_slots = 0)); // one of the pair missing
+        assert!(bad(&|c| c.slot_step = 0));
+        // Standbys behind a static declaration could never activate.
+        assert!(bad(&|c| c.policy = CapacityPolicyKind::Static));
+        assert!(bad(&|c| c.scale_down_util = 0.9)); // down >= up
+        assert!(bad(&|c| c.scale_up_util = f64::NAN));
+        assert!(bad(&|c| c.slo_target = 1.5));
+        assert!(bad(&|c| c.cooldown = -1.0));
+        assert!(bad(&|c| c.eval_every = 0.0));
+        assert!(bad(&|c| c.online_cost_per_hour = -0.5));
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        assert_eq!(
+            CapacityPolicyKind::parse("static"),
+            Some(CapacityPolicyKind::Static)
+        );
+        assert_eq!(
+            CapacityPolicyKind::parse("REACTIVE"),
+            Some(CapacityPolicyKind::Reactive)
+        );
+        assert!(CapacityPolicyKind::parse("clairvoyant").is_none());
+        for k in [CapacityPolicyKind::Static, CapacityPolicyKind::Reactive] {
+            assert_eq!(k.build().name(), k.name());
+        }
+    }
+
+    #[test]
+    fn reactive_slot_lever_moves_within_commitment() {
+        let r = ReactiveCapacity;
+        let c = cfg();
+        // Pressure grows by slot_step, capped at max.
+        assert_eq!(r.desired_slots(&c, &signals(0.9), 4), 6);
+        assert_eq!(r.desired_slots(&c, &signals(0.9), 8), 8);
+        // Idle shrinks, floored at min.
+        assert_eq!(r.desired_slots(&c, &signals(0.1), 4), 2);
+        assert_eq!(r.desired_slots(&c, &signals(0.1), 2), 2);
+        // In-band holds.
+        assert_eq!(r.desired_slots(&c, &signals(0.5), 4), 4);
+        // A backlog counts as pressure even at moderate utilization.
+        let mut s = signals(0.5);
+        s.queued = 3;
+        assert_eq!(r.desired_slots(&c, &s, 4), 6);
+    }
+
+    #[test]
+    fn reactive_replica_lever_spawns_and_retires() {
+        let r = ReactiveCapacity;
+        let c = cfg();
+        // Hot + slots maxed + remote capacity far away: spawn.
+        assert_eq!(r.replica_delta(&c, &signals(0.9)), 1);
+        // Hot but slots still have headroom: slot lever goes first.
+        let mut s = signals(0.9);
+        s.slots_maxed = false;
+        assert_eq!(r.replica_delta(&c, &s), 0);
+        // Hot but remote capacity is effectively local and SLO is fine:
+        // let the market absorb it.
+        let mut s = signals(0.9);
+        s.remote_latency = 0.001;
+        assert_eq!(r.replica_delta(&c, &s), 0);
+        // ...unless the region is missing its SLO target.
+        s.slo_pressure = 0.5;
+        assert_eq!(r.replica_delta(&c, &s), 1);
+        // Nothing left to activate.
+        let mut s = signals(0.9);
+        s.offline_standby = 0;
+        assert_eq!(r.replica_delta(&c, &s), 0);
+        // Idle: retire an elastic replica...
+        assert_eq!(r.replica_delta(&c, &signals(0.1)), -1);
+        // ...but never a committed member.
+        let mut s = signals(0.1);
+        s.elastic_online = 0;
+        assert_eq!(r.replica_delta(&c, &s), 0);
+    }
+
+    /// Replica-lever-only controller (slot scaling off) so the replica
+    /// tests see no SetSlots noise.
+    fn controller() -> GroupController {
+        GroupController::new(CapacityGroupSpec {
+            label: "us/elastic".into(),
+            region: 0,
+            members: vec![1],
+            standby: vec![2, 3],
+            cfg: CapacityConfig {
+                policy: CapacityPolicyKind::Reactive,
+                scale_up_util: 0.8,
+                scale_down_util: 0.3,
+                cooldown: 10.0,
+                eval_every: 2.0,
+                ..Default::default()
+            },
+        })
+    }
+
+    #[test]
+    fn controller_activates_under_pressure_and_retires_when_idle() {
+        let mut c = controller();
+        let hot = [
+            member(1, true, 1.0, 8),
+            member(2, false, 0.0, 8),
+            member(3, false, 0.0, 8),
+        ];
+        let a = c.evaluate(&hot, 0.0, 0.08, 10.0);
+        assert_eq!(a, vec![CapacityAction::Activate { node: 2 }]);
+        // Cooldown gates the next replica action...
+        let hot2 = [
+            member(1, true, 1.0, 8),
+            member(2, true, 1.0, 8),
+            member(3, false, 0.0, 8),
+        ];
+        assert!(c.evaluate(&hot2, 0.0, 0.08, 12.0).is_empty());
+        // ...and after it, the next standby comes up.
+        let a = c.evaluate(&hot2, 0.0, 0.08, 21.0);
+        assert_eq!(a, vec![CapacityAction::Activate { node: 3 }]);
+        // Wave passed: the highest-indexed idle elastic replica retires;
+        // a busy one is skipped.
+        let cool_busy3 = [
+            member(1, true, 0.1, 8),
+            member(2, true, 0.0, 8),
+            member(3, true, 0.5, 8),
+        ];
+        let a = c.evaluate(&cool_busy3, 0.0, 0.08, 40.0);
+        assert_eq!(a, vec![CapacityAction::Retire { node: 2 }]);
+        // Committed member 1 is never retired even when everything idles.
+        let all_idle = [
+            member(1, true, 0.0, 8),
+            member(2, true, 0.0, 8),
+            member(3, false, 0.0, 8),
+        ];
+        let a = c.evaluate(&all_idle, 0.0, 0.08, 60.0);
+        assert_eq!(a, vec![CapacityAction::Retire { node: 2 }]);
+    }
+
+    #[test]
+    fn controller_scales_slots_before_replicas() {
+        let mut c = GroupController::new(CapacityGroupSpec {
+            label: "us/elastic".into(),
+            region: 0,
+            members: vec![1],
+            standby: vec![2, 3],
+            cfg: cfg(), // slot lever on: min 2 / max 8 / step 2
+        });
+        let hot_with_headroom = [
+            member(1, true, 0.9, 4),
+            member(2, false, 0.0, 4),
+            member(3, false, 0.0, 4),
+        ];
+        let a = c.evaluate(&hot_with_headroom, 0.0, 0.08, 10.0);
+        assert_eq!(a, vec![CapacityAction::SetSlots { node: 1, slots: 6 }]);
+    }
+
+    #[test]
+    fn controller_charges_online_full_and_standby_cheap() {
+        let mut spec = controller().spec;
+        spec.cfg.online_cost_per_hour = 3600.0; // 1 credit/second
+        spec.cfg.standby_cost_per_hour = 360.0; // 0.1 credit/second
+        spec.cfg.cooldown = 1e9; // isolate charging
+        let mut c = GroupController::new(spec);
+        // First eval anchors at t=0 with dt=10.
+        let states = [
+            member(1, true, 0.5, 8),
+            member(2, false, 0.0, 8),
+            member(3, false, 0.0, 8),
+        ];
+        let a = c.evaluate(&states, 0.0, 0.08, 10.0);
+        let charge_of = |node: usize| {
+            a.iter()
+                .find_map(|x| match x {
+                    CapacityAction::Charge { node: n, amount }
+                        if *n == node =>
+                    {
+                        Some(*amount)
+                    }
+                    _ => None,
+                })
+                .unwrap_or(0)
+        };
+        // 10 s online at 1 credit/s = 10 credits; standby a tenth of that.
+        assert_eq!(charge_of(1), 10 * CREDIT);
+        assert_eq!(charge_of(2), CREDIT);
+        assert_eq!(charge_of(3), CREDIT);
+    }
+
+    #[test]
+    fn static_policy_is_fully_inert() {
+        // A static declaration may carry no live knobs at all...
+        let live_knobs: [&dyn Fn(&mut CapacityConfig); 3] = [
+            &|c| c.standby = 1,
+            &|c| c.online_cost_per_hour = 1.0,
+            &|c| c.standby_cost_per_hour = 0.1,
+        ];
+        for live in live_knobs {
+            let mut c = CapacityConfig::default();
+            live(&mut c);
+            assert!(c.check().is_err(), "static accepted a live knob");
+        }
+        // ...and a static controller emits nothing, however hot the group.
+        let mut spec = controller().spec;
+        spec.cfg.policy = CapacityPolicyKind::Static;
+        let mut c = GroupController::new(spec);
+        let hot = [
+            member(1, true, 1.0, 8),
+            member(2, false, 0.0, 8),
+            member(3, false, 0.0, 8),
+        ];
+        assert!(c.evaluate(&hot, 0.9, 0.08, 100.0).is_empty());
+    }
+
+    #[test]
+    fn fractional_charges_carry_across_evaluations() {
+        let mut spec = controller().spec;
+        spec.cfg.online_cost_per_hour = 3600.0 * 0.4e-6; // 0.4 µcr/s
+        spec.cfg.standby_cost_per_hour = 0.0;
+        spec.cfg.cooldown = 1e9;
+        let mut c = GroupController::new(spec);
+        let states = [
+            member(1, true, 0.5, 8),
+            member(2, false, 0.0, 8),
+            member(3, false, 0.0, 8),
+        ];
+        // 1 s * 0.4 µcr = 0.4 owed: below a whole micro-credit, no charge.
+        assert!(c.evaluate(&states, 0.0, 0.08, 1.0).is_empty());
+        // Two more seconds: 1.2 owed, one micro-credit out, 0.2 carried.
+        let a = c.evaluate(&states, 0.0, 0.08, 3.0);
+        assert_eq!(
+            a,
+            vec![CapacityAction::Charge { node: 1, amount: 1 }]
+        );
+    }
+}

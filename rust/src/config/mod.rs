@@ -21,6 +21,7 @@
 //! ```
 
 use crate::backend::{Gpu, ModelClass, Profile, ServingStack};
+use crate::capacity::{CapacityConfig, CapacityGroupSpec, CapacityPolicyKind};
 use crate::latency::LatencyConfig;
 use crate::policy::{NodePolicy, ParticipationKind, SystemPolicy};
 use crate::schedulers::Strategy;
@@ -342,15 +343,27 @@ fn parse_topology(
 ///   lowest-indexed currently-up nodes of the group, a `join` brings back
 ///   the K lowest-indexed currently-down ones; over-subscribing either is
 ///   a config error. Returned as the second element.
+/// * `"capacity": { "policy": "reactive"|"static", "standby": K,
+///   "min_slots"/"max_slots"/"slot_step", "scale_up_util"/
+///   "scale_down_util"/"slo_target", "cooldown", "eval_every",
+///   "online_cost_per_hour"/"standby_cost_per_hour" }` — the group's
+///   elastic resource commitment (see [`crate::capacity`]). `standby: K`
+///   stamps K extra copies of the node template that start offline behind
+///   the group; a `reactive` policy autoscales them (and the members'
+///   backend slots) against load. Validated here with `Err`, never a
+///   panic; `"static"` (or an absent block) is an inert declaration —
+///   standby/holding-cost knobs are rejected on it, and it replays a
+///   capacity-free config's trace bit for bit.
 fn expand_fleet(
     topology: &Json,
     explicit: Vec<Json>,
-) -> Result<(Vec<Json>, Vec<ChurnEvent>), ConfigError> {
+) -> Result<(Vec<Json>, Vec<ChurnEvent>, Vec<FleetCapacity>), ConfigError> {
     let mut out = explicit;
     let mut churn = Vec::new();
+    let mut caps = Vec::new();
     let fleet = topology.get("fleet");
     if fleet.is_null() {
-        return Ok((out, churn));
+        return Ok((out, churn, caps));
     }
     let Some(groups) = fleet.as_arr() else {
         return Err(bad("topology.fleet must be an array of groups"));
@@ -413,7 +426,7 @@ fn expand_fleet(
                 })?
                 .to_string(),
         };
-        template.insert("group".to_string(), Json::str(label));
+        template.insert("group".to_string(), Json::str(label.clone()));
         // Whole-group initial availability: the group-level key wins, but
         // a `start_offline` inside the node template counts too — churn
         // validation must see what the per-node parse will actually do.
@@ -435,8 +448,118 @@ fn expand_fleet(
             count,
             start_offline,
         )?);
+        // Elastic capacity: stamp the declared standby replicas (offline
+        // copies of the same template, appended after the committed
+        // members, outside the churn-eligible range) and record the group
+        // for `WorldConfig.capacity`.
+        if let Some(cap) = parse_capacity(g.get("capacity"), gi)? {
+            let standby_base = out.len();
+            if cap.standby > 0 {
+                let mut standby_template = template.clone();
+                standby_template
+                    .insert("start_offline".to_string(), Json::Bool(true));
+                for _ in 0..cap.standby {
+                    out.push(Json::Obj(standby_template.clone()));
+                }
+            }
+            caps.push(FleetCapacity {
+                label,
+                region: region.to_string(),
+                members: (base..base + count).collect(),
+                standby: (standby_base..standby_base + cap.standby).collect(),
+                cfg: cap,
+            });
+        }
     }
-    Ok((out, churn))
+    Ok((out, churn, caps))
+}
+
+/// One fleet group's parsed `capacity` block, with the region still a
+/// *name* — resolved to an index (and into a
+/// [`CapacityGroupSpec`]) once the topology is built.
+struct FleetCapacity {
+    label: String,
+    region: String,
+    members: Vec<usize>,
+    standby: Vec<usize>,
+    cfg: CapacityConfig,
+}
+
+/// Parse one group's `capacity` block. All keys optional except that
+/// malformed values (wrong types, inverted ranges, negative costs,
+/// unknown policies) are loud `Err`s, never panics.
+fn parse_capacity(
+    j: &Json,
+    gi: usize,
+) -> Result<Option<CapacityConfig>, ConfigError> {
+    if j.is_null() {
+        return Ok(None);
+    }
+    if !matches!(j, Json::Obj(_)) {
+        return Err(bad(format!(
+            "fleet group {gi}: capacity must be an object"
+        )));
+    }
+    let d = CapacityConfig::default();
+    let policy = match j.get("policy") {
+        Json::Null => CapacityPolicyKind::Static,
+        p => {
+            let name = p.as_str().ok_or_else(|| {
+                bad(format!(
+                    "fleet group {gi}: capacity.policy must be a string"
+                ))
+            })?;
+            CapacityPolicyKind::parse(name).ok_or_else(|| {
+                bad(format!(
+                    "fleet group {gi}: unknown capacity policy '{name}'"
+                ))
+            })?
+        }
+    };
+    let get_usize = |key: &str, dflt: usize| -> Result<usize, ConfigError> {
+        match j.get(key) {
+            Json::Null => Ok(dflt),
+            v => v.as_usize().ok_or_else(|| {
+                bad(format!(
+                    "fleet group {gi}: capacity.{key} must be a \
+                     non-negative integer"
+                ))
+            }),
+        }
+    };
+    let get_f64 = |key: &str, dflt: f64| -> Result<f64, ConfigError> {
+        match j.get(key) {
+            Json::Null => Ok(dflt),
+            v => v.as_f64().ok_or_else(|| {
+                bad(format!(
+                    "fleet group {gi}: capacity.{key} must be a number"
+                ))
+            }),
+        }
+    };
+    let cfg = CapacityConfig {
+        policy,
+        min_slots: get_usize("min_slots", d.min_slots)?,
+        max_slots: get_usize("max_slots", d.max_slots)?,
+        slot_step: get_usize("slot_step", d.slot_step)?,
+        standby: get_usize("standby", d.standby)?,
+        scale_up_util: get_f64("scale_up_util", d.scale_up_util)?,
+        scale_down_util: get_f64("scale_down_util", d.scale_down_util)?,
+        slo_target: get_f64("slo_target", d.slo_target)?,
+        cooldown: get_f64("cooldown", d.cooldown)?,
+        eval_every: get_f64("eval_every", d.eval_every)?,
+        online_cost_per_hour: get_f64(
+            "online_cost_per_hour",
+            d.online_cost_per_hour,
+        )?,
+        standby_cost_per_hour: get_f64(
+            "standby_cost_per_hour",
+            d.standby_cost_per_hour,
+        )?,
+    };
+    cfg.check()
+        .map_err(|e| bad(format!("fleet group {gi}: {e}")))?;
+    Ok(Some(cfg))
 }
 
 /// Expand one group's `churn` array into per-node [`ChurnEvent`]s,
@@ -635,7 +758,7 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
             .ok_or_else(|| bad("'nodes' must be an array"))?
             .to_vec(),
     };
-    let (nodes, churn) = expand_fleet(j.get("topology"), explicit)?;
+    let (nodes, churn, fleet_caps) = expand_fleet(j.get("topology"), explicit)?;
     if nodes.is_empty() {
         return Err(bad(
             "no nodes: provide a 'nodes' array or a 'topology.fleet' block",
@@ -644,6 +767,25 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
     let topology = parse_topology(j.get("topology"), &nodes)?;
     let latency_estimation =
         parse_latency_estimation(j.get("latency_estimation"))?;
+    // Capacity groups: resolve region names against the built topology
+    // (a fleet block implies a topology block, so it is always present
+    // and already validated here).
+    let mut capacity = Vec::with_capacity(fleet_caps.len());
+    for fc in fleet_caps {
+        let region = topology
+            .as_ref()
+            .and_then(|t| t.region_index(&fc.region))
+            .ok_or_else(|| {
+                bad(format!("capacity group '{}': unknown region", fc.label))
+            })? as u32;
+        capacity.push(CapacityGroupSpec {
+            label: fc.label,
+            region,
+            members: fc.members,
+            standby: fc.standby,
+            cfg: fc.cfg,
+        });
+    }
 
     let mut setups = Vec::with_capacity(nodes.len());
     for (i, nj) in nodes.iter().enumerate() {
@@ -751,6 +893,7 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
             topology,
             latency_estimation,
             churn: churn.iter().map(|c| (c.node, c.at, c.join)).collect(),
+            capacity,
             ..Default::default()
         },
         setups,
@@ -1248,6 +1391,168 @@ mod tests {
         assert_eq!(e.churn.len(), 2);
         // The parsed schedule rides along in the world config.
         assert_eq!(e.world.churn, vec![(0, 10.0, true), (1, 10.0, true)]);
+    }
+
+    #[test]
+    fn capacity_block_stamps_standby_and_builds_spec() {
+        let e = parse_experiment(
+            r#"{"topology": {"regions": ["us", "eu"],
+                "fleet": [
+                  { "region": "us", "count": 2, "name": "us-srv",
+                    "capacity": { "policy": "reactive", "standby": 2,
+                                  "min_slots": 2, "max_slots": 8,
+                                  "scale_up_util": 0.7,
+                                  "scale_down_util": 0.2,
+                                  "cooldown": 10, "eval_every": 2,
+                                  "online_cost_per_hour": 1.5,
+                                  "standby_cost_per_hour": 0.2 } },
+                  { "region": "eu", "count": 1 }
+                ]}}"#,
+        )
+        .unwrap();
+        // 2 committed + 2 stamped standbys + 1 eu node, in that order.
+        assert_eq!(e.setups.len(), 5);
+        assert!(!e.setups[0].start_offline && !e.setups[1].start_offline);
+        assert!(e.setups[2].start_offline && e.setups[3].start_offline);
+        assert!(!e.setups[4].start_offline);
+        // Standbys keep the group's label and region.
+        assert_eq!(e.setups[2].group.as_deref(), Some("us-srv"));
+        let topo = e.world.topology.as_ref().unwrap();
+        assert_eq!(topo.region_of(2), 0);
+        assert_eq!(topo.region_of(3), 0);
+        // The spec reached the world config, region resolved to an index.
+        assert_eq!(e.world.capacity.len(), 1);
+        let spec = &e.world.capacity[0];
+        assert_eq!(spec.label, "us-srv");
+        assert_eq!(spec.region, 0);
+        assert_eq!(spec.members, vec![0, 1]);
+        assert_eq!(spec.standby, vec![2, 3]);
+        assert_eq!(spec.cfg.policy, CapacityPolicyKind::Reactive);
+        assert_eq!(spec.cfg.min_slots, 2);
+        assert_eq!(spec.cfg.max_slots, 8);
+        assert!((spec.cfg.scale_up_util - 0.7).abs() < 1e-12);
+        assert!((spec.cfg.online_cost_per_hour - 1.5).abs() < 1e-12);
+        // The parsed world constructs (indices and knobs validate).
+        let w = crate::sim::World::new(e.world.clone(), e.setups.clone());
+        assert_eq!(w.capacity_groups().len(), 1);
+        // A bare static declaration parses too and installs no controller.
+        let e = parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                            "capacity": { "policy": "static" } }]}}"#,
+        )
+        .unwrap();
+        assert_eq!(e.setups.len(), 2);
+        assert_eq!(e.world.capacity.len(), 1);
+        assert_eq!(
+            e.world.capacity[0].cfg.policy,
+            CapacityPolicyKind::Static
+        );
+        let w = crate::sim::World::new(e.world.clone(), e.setups.clone());
+        assert!(w.capacity_groups().is_empty(), "static installs nothing");
+    }
+
+    #[test]
+    fn capacity_rejects_malformed_blocks() {
+        let cases = [
+            // Non-object block.
+            r#""capacity": 5"#,
+            // Unknown policy / wrong type.
+            r#""capacity": { "policy": "clairvoyant" }"#,
+            r#""capacity": { "policy": 3 }"#,
+            // Inverted or half-declared slot range.
+            r#""capacity": { "min_slots": 8, "max_slots": 2 }"#,
+            r#""capacity": { "min_slots": 4 }"#,
+            // Inverted utilization thresholds.
+            r#""capacity": { "scale_up_util": 0.2,
+                             "scale_down_util": 0.5 }"#,
+            // Live knobs behind a static (controller-less) declaration.
+            r#""capacity": { "standby": 2 }"#,
+            r#""capacity": { "policy": "static", "standby": 1 }"#,
+            r#""capacity": { "policy": "static",
+                             "online_cost_per_hour": 1.0 }"#,
+            // Negative / zero / non-numeric knobs.
+            r#""capacity": { "standby": -1 }"#,
+            r#""capacity": { "online_cost_per_hour": -0.5 }"#,
+            r#""capacity": { "eval_every": 0 }"#,
+            r#""capacity": { "cooldown": "fast" }"#,
+            r#""capacity": { "slot_step": 0 }"#,
+            r#""capacity": { "slo_target": 1.5 }"#,
+        ];
+        for block in cases {
+            let text = format!(
+                r#"{{"topology": {{"regions": ["us"],
+                    "fleet": [{{ "region": "us", "count": 2, {block} }}]}}}}"#
+            );
+            assert!(
+                parse_experiment(&text).is_err(),
+                "accepted malformed capacity block: {block}"
+            );
+        }
+    }
+
+    #[test]
+    fn churn_and_start_offline_edge_interactions() {
+        // Join scheduled *before* any leave on an online group: the events
+        // apply in time order, so the early join finds nobody down — Err,
+        // even though the leave is declared first.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "churn": [{ "at": 20, "action": "leave" },
+                            { "at": 10, "action": "join" }]}]}}"#
+        )
+        .is_err());
+        // An offline group cannot leave before it ever joined.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "start_offline": true,
+                  "churn": [{ "at": 10, "action": "leave" }]}]}}"#
+        )
+        .is_err());
+        // Offline group joining mid-run, leaving, and rejoining is fine,
+        // and expands against the lowest-indexed eligible nodes.
+        let e = parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "start_offline": true,
+                  "churn": [{ "at": 50, "action": "join", "count": 2 },
+                            { "at": 100, "action": "leave" },
+                            { "at": 150, "action": "join" }]}]}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            e.churn,
+            vec![
+                ChurnEvent { node: 0, at: 50.0, join: true },
+                ChurnEvent { node: 1, at: 50.0, join: true },
+                ChurnEvent { node: 0, at: 100.0, join: false },
+                ChurnEvent { node: 0, at: 150.0, join: true },
+            ]
+        );
+        // Churn count exceeding the group size is rejected even when the
+        // group also stamps capacity standbys — standbys are not
+        // churn-eligible spares.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "capacity": { "policy": "reactive", "standby": 3 },
+                  "churn": [{ "at": 10, "action": "leave", "count": 3 }]}]}}"#
+        )
+        .is_err());
+        // And a churn schedule on a capacity group only ever touches the
+        // committed members, never the stamped standbys.
+        let e = parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 2,
+                  "capacity": { "policy": "reactive", "standby": 2 },
+                  "churn": [{ "at": 10, "action": "leave", "count": 2 }]}]}}"#,
+        )
+        .unwrap();
+        assert_eq!(e.setups.len(), 4);
+        assert!(e.churn.iter().all(|c| c.node < 2), "{:?}", e.churn);
+        assert_eq!(e.world.capacity[0].standby, vec![2, 3]);
     }
 
     #[test]

@@ -137,6 +137,12 @@ impl Node {
         self.backend.as_ref()
     }
 
+    /// Mutable backend access for the runner-side capacity levers (the
+    /// elastic controller's `set_slots`) and tests.
+    pub fn backend_mut(&mut self) -> &mut dyn Backend {
+        self.backend.as_mut()
+    }
+
     pub fn ledger(&self) -> &LedgerManager {
         &self.ledger
     }

@@ -93,6 +93,10 @@ impl BalanceTable {
             // Slashing clamps rather than failing: a node whose stake ran
             // out loses what's left (matches PoS slashing norms).
             CreditOp::Slash { .. } => Ok(()),
+            // Burns clamp to the liquid balance the same way: a drained
+            // provider pays the holding cost it can and fades out of the
+            // market instead of voiding the batch.
+            CreditOp::Burn { .. } => Ok(()),
             CreditOp::Transfer { from, amount, .. } => {
                 let have = self.balance(from);
                 if have < amount {
@@ -145,6 +149,13 @@ impl BalanceTable {
                 // Clamp: slash at most the available stake.
                 let cut = amount.min(acct.stake);
                 acct.stake -= cut;
+                self.burned += cut;
+            }
+            CreditOp::Burn { from, amount, .. } => {
+                let acct = self.accounts.entry(from).or_default();
+                // Clamp: burn at most the available liquid balance.
+                let cut = amount.min(acct.balance);
+                acct.balance -= cut;
                 self.burned += cut;
             }
             CreditOp::Transfer { from, to, amount, .. } => {
@@ -256,6 +267,25 @@ mod tests {
         assert_eq!(t.stake(NodeId(0)), 0);
         assert_eq!(t.balance(NodeId(0)), 70);
         assert_eq!(t.burned, 30);
+        assert!(t.conserved());
+    }
+
+    #[test]
+    fn burn_clamps_to_balance_and_conserves() {
+        let mut t = BalanceTable::new();
+        t.apply(&mint(0, 100)).unwrap();
+        t.apply(&CreditOp::Stake { node: NodeId(0), amount: 30 }).unwrap();
+        // Burn more than the liquid balance: stake is untouched, the
+        // balance drains to zero, and conservation holds.
+        t.apply(&CreditOp::Burn {
+            from: NodeId(0),
+            amount: 90,
+            reason: OpReason::CapacityHold,
+        })
+        .unwrap();
+        assert_eq!(t.balance(NodeId(0)), 0);
+        assert_eq!(t.stake(NodeId(0)), 30);
+        assert_eq!(t.burned, 70);
         assert!(t.conserved());
     }
 

@@ -81,7 +81,10 @@ impl SharedLedger {
         for (t, _, op) in &self.log {
             let delta: i64 = match *op {
                 CreditOp::Mint { to, amount, .. } if to == node => amount as i64,
-                CreditOp::Slash { from, amount, .. } if from == node => {
+                CreditOp::Slash { from, amount, .. }
+                | CreditOp::Burn { from, amount, .. }
+                    if from == node =>
+                {
                     -(amount as i64)
                 }
                 CreditOp::Transfer { from, to, amount, .. } => {

@@ -23,6 +23,10 @@ pub enum OpReason {
     JudgeReward(RequestId),
     /// Voluntary stake adjustment by the provider's policy.
     PolicyAdjust,
+    /// Holding cost for committed serving capacity (online node-hours at
+    /// the full rate, idle standby at the cheap rate — see the `capacity`
+    /// module's commitment economics).
+    CapacityHold,
 }
 
 impl OpReason {
@@ -35,6 +39,7 @@ impl OpReason {
             OpReason::DuelLoss(_) => 3,
             OpReason::JudgeReward(_) => 4,
             OpReason::PolicyAdjust => 5,
+            OpReason::CapacityHold => 6,
         }
     }
 
@@ -61,6 +66,14 @@ pub enum CreditOp {
     },
     /// Destroy credits (duel penalties are slashed from stake and burned).
     Slash {
+        from: NodeId,
+        amount: Credits,
+        reason: OpReason,
+    },
+    /// Destroy liquid credits (capacity holding costs). Clamped to the
+    /// available balance when applied: a drained provider pays what it
+    /// has and fades out of the market rather than erroring the batch.
+    Burn {
         from: NodeId,
         amount: Credits,
         reason: OpReason,
@@ -94,6 +107,12 @@ impl CreditOp {
                     .update_u64(*amount)
                     .update_u64(reason.tag());
             }
+            CreditOp::Burn { from, amount, reason } => {
+                h.update(b"burn")
+                    .update_u64(from.0 as u64)
+                    .update_u64(*amount)
+                    .update_u64(reason.tag());
+            }
             CreditOp::Transfer { from, to, amount, reason } => {
                 h.update(b"xfer")
                     .update_u64(from.0 as u64)
@@ -121,6 +140,7 @@ impl CreditOp {
         match self {
             CreditOp::Mint { reason, .. }
             | CreditOp::Slash { reason, .. }
+            | CreditOp::Burn { reason, .. }
             | CreditOp::Transfer { reason, .. } => Some(*reason),
             _ => None,
         }
@@ -130,7 +150,9 @@ impl CreditOp {
     pub fn parties(&self) -> Vec<NodeId> {
         match self {
             CreditOp::Mint { to, .. } => vec![*to],
-            CreditOp::Slash { from, .. } => vec![*from],
+            CreditOp::Slash { from, .. } | CreditOp::Burn { from, .. } => {
+                vec![*from]
+            }
             CreditOp::Transfer { from, to, .. } => vec![*from, *to],
             CreditOp::Stake { node, .. } | CreditOp::Unstake { node, .. } => {
                 vec![*node]

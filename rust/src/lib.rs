@@ -78,6 +78,27 @@
 //! the frozen-prior baseline (`latency_estimation.enabled = false`)
 //! demonstrably does not.
 //!
+//! ## Elastic capacity
+//!
+//! Resource *commitments* are elastic, not just behaviours: the
+//! [`capacity`] module gives each `topology.fleet` group a decentralized
+//! autoscaling controller (no global coordinator) that watches signals
+//! the group's nodes already have — local backend utilization and queue
+//! wait, the windowed SLO of the home region, and the live latency
+//! estimate to the nearest remote region — and works two levers: backend
+//! admission slots within a declared `[min_slots, max_slots]` commitment
+//! range ([`backend::Backend::set_slots`]), and whole standby replicas
+//! brought online / retired through the same join/leave churn machinery
+//! fleets already use. Online capacity burns credits per node-hour while
+//! idle standby is cheap (`OpReason::CapacityHold` — the paper's
+//! commitment economics); `World` tracks per-node online seconds and
+//! scale events. Declaratively: a `capacity` block on the fleet group
+//! ([`capacity::CapacityConfig`]); the [`capacity::StaticCapacity`]
+//! policy (or no block at all) replays a capacity-free trace bit for bit
+//! (`rust/tests/replay_equivalence.rs`), and `benches/geo_scale.rs`
+//! part 6 shows the elastic 3-region fleet riding the diurnal wave at
+//! materially fewer node-hours than static peak provisioning.
+//!
 //! ## Fleet scale
 //!
 //! The event loop is sized for 1000-node fleets: membership gossip ships
@@ -91,6 +112,7 @@
 
 pub mod backend;
 pub mod benchlib;
+pub mod capacity;
 pub mod config;
 pub mod coordinator;
 pub mod crypto;

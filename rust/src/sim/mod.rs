@@ -11,6 +11,10 @@ use std::collections::BinaryHeap;
 use std::sync::{Arc, Mutex};
 
 use crate::backend::{Profile, SimBackend};
+use crate::capacity::{
+    CapacityAction, CapacityGroupSpec, CapacityPolicyKind, GroupController,
+    MemberState,
+};
 use crate::coordinator::{Action, Event, LedgerManager, Node};
 use crate::crypto::{KeyStore, NodeKey};
 use crate::duel::DuelStats;
@@ -62,6 +66,12 @@ pub struct WorldConfig {
     /// its schedule; `schedule_join`/`schedule_leave` remain for ad-hoc
     /// test scripting.
     pub churn: Vec<(usize, f64, bool)>,
+    /// Elastic-capacity groups (the declarative `capacity` blocks on
+    /// `topology.fleet` groups — see the [`crate::capacity`] module).
+    /// A `Static`-policy group installs no controller and leaves the
+    /// trace of a capacity-free world untouched bit for bit
+    /// (`rust/tests/replay_equivalence.rs`).
+    pub capacity: Vec<CapacityGroupSpec>,
 }
 
 impl Default for WorldConfig {
@@ -77,6 +87,7 @@ impl Default for WorldConfig {
             tick_interval: 1.0,
             credit_sample_interval: 5.0,
             churn: Vec::new(),
+            capacity: Vec::new(),
         }
     }
 }
@@ -110,6 +121,9 @@ impl WorldConfig {
             );
         }
         self.latency_estimation.validate();
+        for spec in &self.capacity {
+            spec.cfg.validate();
+        }
     }
 }
 
@@ -172,6 +186,11 @@ enum WorldEvent {
     SampleCredits,
     /// Apply scheduled topology event `idx` (degrade/partition/heal).
     Link(usize),
+    /// Evaluate capacity-group controller `gi` (elastic scaling round).
+    /// Only enqueued for worlds with an active capacity group, so
+    /// capacity-free (and static-capacity) configs replay the exact seed
+    /// event sequence.
+    Capacity(usize),
 }
 
 struct Queued {
@@ -236,6 +255,20 @@ pub struct World {
     /// (origin region, destination region), row-major — the reroute bench
     /// windows over these to prove a partitioned region is shed.
     dispatch_matrix: Vec<u64>,
+    /// Active elastic-capacity controllers (built from `cfg.capacity`;
+    /// empty when every group is an inert static declaration).
+    capacity: Vec<GroupController>,
+    /// Availability accounting for node-hours: closed online seconds per
+    /// node, plus the open interval's start (None while offline).
+    online_secs: Vec<f64>,
+    online_since: Vec<Option<Time>>,
+    /// Capacity scale actions applied so far (slot rescales + standby
+    /// activations + replica retirements).
+    pub scale_events: u64,
+    /// Micro-credits actually burned as capacity holding cost
+    /// (`OpReason::CapacityHold`) across all groups — charges clamp to
+    /// each replica's liquid balance, and only the clamped amount counts.
+    pub capacity_credits_charged: u64,
 }
 
 impl World {
@@ -356,6 +389,35 @@ impl World {
         }
 
         let num_regions = topology.num_regions();
+        // Elastic capacity: validate every declared group, but install a
+        // controller only for reactive policies — a static declaration is
+        // inert by contract (`CapacityConfig::check` rejects live knobs on
+        // it), and must leave the event sequence untouched.
+        let mut capacity_ctrls = Vec::new();
+        for spec in &cfg.capacity {
+            for &m in spec.members.iter().chain(spec.standby.iter()) {
+                assert!(
+                    m < n,
+                    "capacity group '{}' references node {m} out of range \
+                     ({n} nodes)",
+                    spec.label
+                );
+            }
+            assert!(
+                (spec.region as usize) < num_regions,
+                "capacity group '{}' region {} out of range ({num_regions} \
+                 regions)",
+                spec.label,
+                spec.region
+            );
+            if spec.cfg.policy == CapacityPolicyKind::Reactive {
+                capacity_ctrls.push(GroupController::new(spec.clone()));
+            }
+        }
+        let online_since: Vec<Option<Time>> = nodes
+            .iter()
+            .map(|node| if node.online { Some(0.0) } else { None })
+            .collect();
         let mut world = World {
             cfg: cfg.clone(),
             nodes,
@@ -377,6 +439,11 @@ impl World {
             messages_dropped: 0,
             events_processed: 0,
             dispatch_matrix: vec![0; num_regions * num_regions],
+            capacity: capacity_ctrls,
+            online_secs: vec![0.0; n],
+            online_since,
+            scale_events: 0,
+            capacity_credits_charged: 0,
         };
 
         // Arrival traces.
@@ -419,6 +486,18 @@ impl World {
             );
             let ev = if join { Event::Join } else { Event::Leave };
             world.push(at, WorldEvent::Node(node, ev));
+        }
+        // Capacity-controller cadence — pushed last, and only for active
+        // groups, so capacity-free configs enqueue the seed's exact event
+        // sequence.
+        let evals: Vec<(usize, f64)> = world
+            .capacity
+            .iter()
+            .enumerate()
+            .map(|(gi, c)| (gi, c.spec.cfg.eval_every))
+            .collect();
+        for (gi, every) in evals {
+            world.push(every, WorldEvent::Capacity(gi));
         }
         world
     }
@@ -470,7 +549,11 @@ impl World {
                     if matches!(ev, Event::BackendWake) {
                         self.next_wake[i] = f64::INFINITY;
                     }
+                    let was_online = self.nodes[i].online;
                     let actions = self.nodes[i].handle(ev, self.now);
+                    if self.nodes[i].online != was_online {
+                        self.availability_changed(i);
+                    }
                     self.apply(i, actions);
                 }
                 WorldEvent::Tick(i) => {
@@ -487,10 +570,141 @@ impl World {
                 WorldEvent::Link(idx) => {
                     self.topology.apply_event(idx);
                 }
+                WorldEvent::Capacity(gi) => {
+                    self.eval_capacity(gi);
+                    let next =
+                        self.now + self.capacity[gi].spec.cfg.eval_every;
+                    self.push(next, WorldEvent::Capacity(gi));
+                }
             }
         }
         self.now = horizon.max(self.now);
         self.now
+    }
+
+    /// Node `i` just flipped availability: settle the node-hours interval.
+    fn availability_changed(&mut self, i: usize) {
+        if self.nodes[i].online {
+            self.online_since[i] = Some(self.now);
+        } else if let Some(since) = self.online_since[i].take() {
+            self.online_secs[i] += self.now - since;
+        }
+    }
+
+    /// One elastic-capacity controller round: gather the group's local
+    /// signals (backend pressure, windowed region SLO, live latency to the
+    /// nearest remote region), let the group's [`capacity::CapacityPolicy`]
+    /// decide, and apply the resulting scale/charge actions.
+    ///
+    /// [`capacity::CapacityPolicy`]: crate::capacity::CapacityPolicy
+    fn eval_capacity(&mut self, gi: usize) {
+        let now = self.now;
+        let group_nodes = self.capacity[gi].all_nodes();
+        let states: Vec<MemberState> = group_nodes
+            .iter()
+            .map(|&i| {
+                let node = &self.nodes[i];
+                let b = node.backend();
+                MemberState {
+                    node: i,
+                    online: node.online,
+                    utilization: if node.online { b.utilization() } else { 0.0 },
+                    queue_len: b.queue_len(),
+                    slots: b.slots(),
+                }
+            })
+            .collect();
+        // Windowed SLO pressure of the group's home region: miss fraction
+        // of the completions recorded since the previous evaluation.
+        let (slo_pressure, seen) = {
+            let region = self.capacity[gi].spec.region as usize;
+            let recs = self.recorder.all();
+            let from = self.capacity[gi].seen_records.min(recs.len());
+            let (mut met, mut total) = (0usize, 0usize);
+            for rec in &recs[from..] {
+                if !rec.synthetic
+                    && self.topology.region_of(rec.origin.0 as usize)
+                        == region
+                {
+                    met += rec.slo_met() as usize;
+                    total += 1;
+                }
+            }
+            let pressure = if total == 0 {
+                0.0
+            } else {
+                1.0 - met as f64 / total as f64
+            };
+            (pressure, recs.len())
+        };
+        self.capacity[gi].seen_records = seen;
+        // Live one-way latency to the nearest *other* region, read from
+        // the first online member's estimator — the group's own vantage
+        // point. Infinity when there is no remote region to lean on.
+        let remote_latency = group_nodes
+            .iter()
+            .filter(|&&i| self.nodes[i].online)
+            .find_map(|&i| self.nodes[i].latency_estimator())
+            .map(|est| {
+                let me = est.my_region();
+                (0..est.num_regions() as u32)
+                    .filter(|&r| r != me)
+                    .map(|r| est.expected_from_me(r, now))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .unwrap_or(f64::INFINITY);
+        let actions = self.capacity[gi].evaluate(
+            &states,
+            slo_pressure,
+            remote_latency,
+            now,
+        );
+        for a in actions {
+            match a {
+                CapacityAction::SetSlots { node, slots } => {
+                    self.nodes[node].backend_mut().set_slots(slots, now);
+                    // A grown cap may have admitted queued work directly
+                    // into the backend, bypassing `Node::handle`'s pump —
+                    // schedule an immediate wake so completions surface
+                    // now, not at the next tick.
+                    self.push(now, WorldEvent::Node(node, Event::BackendWake));
+                    self.scale_events += 1;
+                }
+                CapacityAction::Activate { node } => {
+                    self.push(now, WorldEvent::Node(node, Event::Join));
+                    self.scale_events += 1;
+                }
+                CapacityAction::Retire { node } => {
+                    self.push(now, WorldEvent::Node(node, Event::Leave));
+                    self.scale_events += 1;
+                }
+                CapacityAction::Charge { node, amount } => {
+                    // Holding costs burn from the replica's own account.
+                    // Blockchain mode would need the node itself to
+                    // propose the block; the commitment economics are
+                    // modelled on the shared ledger only.
+                    if !self.nodes[node].ledger().is_chain() {
+                        let id = NodeId(node as u32);
+                        // Burns clamp to the liquid balance at apply time;
+                        // count only what actually leaves the account so
+                        // the counter matches the ledger's `burned`.
+                        let burned = amount
+                            .min(self.nodes[node].ledger().balance(id));
+                        let _ = self.nodes[node].ledger_mut().submit(
+                            vec![CreditOp::Burn {
+                                from: id,
+                                amount,
+                                reason: OpReason::CapacityHold,
+                            }],
+                            id,
+                            &[],
+                            now,
+                        );
+                        self.capacity_credits_charged += burned;
+                    }
+                }
+            }
+        }
     }
 
     fn apply(&mut self, from: usize, actions: Vec<Action>) {
@@ -590,6 +804,20 @@ impl World {
     /// stages to window delegation over time (the reroute scenario does).
     pub fn dispatch_sends(&self, a: usize, b: usize) -> u64 {
         self.dispatch_matrix[a * self.topology.num_regions() + b]
+    }
+
+    /// Seconds node `i` has spent online so far, including the currently
+    /// open interval — the node-hours accounting the elastic-capacity
+    /// bench compares against static peak provisioning.
+    pub fn node_seconds_online(&self, i: usize) -> f64 {
+        self.online_secs[i]
+            + self.online_since[i].map_or(0.0, |since| self.now - since)
+    }
+
+    /// The active capacity controllers' group specs (empty when no
+    /// reactive/charging capacity group is installed).
+    pub fn capacity_groups(&self) -> Vec<&CapacityGroupSpec> {
+        self.capacity.iter().map(|c| &c.spec).collect()
     }
 
     /// Per-region user-request summary keyed by *origin* region:
@@ -937,5 +1165,172 @@ mod tests {
             totals[1] > genesis || totals[2] > genesis || totals[3] > genesis,
             "no server earned: {totals:?}"
         );
+    }
+
+    // ---- elastic capacity ---------------------------------------------------
+
+    use crate::capacity::{
+        CapacityConfig, CapacityGroupSpec, CapacityPolicyKind,
+    };
+
+    /// Node 0 floods requests over [0, 120); node 1 is the committed
+    /// server, nodes 2 and 3 are standby replicas stamped offline.
+    fn elastic_setups() -> Vec<NodeSetup> {
+        let mut setups = vec![NodeSetup::new(
+            Profile::test(40.0, 4),
+            NodePolicy::requester_only(),
+        )
+        .with_generator(
+            Generator::new(NodeId(0), vec![Phase::new(0.0, 120.0, 1.0)])
+                .with_lengths(crate::workload::LengthDist {
+                    output_mean: 300.0,
+                    output_sigma: 0.4,
+                    ..Default::default()
+                }),
+        )];
+        for i in 1..4u32 {
+            let mut s = NodeSetup::new(
+                Profile::test(40.0, 4),
+                NodePolicy {
+                    stake: 20 * crate::types::CREDIT,
+                    accept_freq: 1.0,
+                    ..Default::default()
+                },
+            );
+            if i > 1 {
+                s = s.offline();
+            }
+            setups.push(s);
+        }
+        setups
+    }
+
+    fn elastic_spec() -> CapacityGroupSpec {
+        CapacityGroupSpec {
+            label: "flat/elastic".into(),
+            region: 0,
+            members: vec![1],
+            standby: vec![2, 3],
+            cfg: CapacityConfig {
+                policy: CapacityPolicyKind::Reactive,
+                scale_up_util: 0.8,
+                scale_down_util: 0.2,
+                cooldown: 5.0,
+                eval_every: 2.0,
+                online_cost_per_hour: 3600.0, // 1 credit / online second
+                standby_cost_per_hour: 36.0,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn elastic_capacity_rides_a_load_wave() {
+        let mut cfg = WorldConfig { seed: 5, ..Default::default() };
+        cfg.system.duel_rate = 0.0;
+        cfg.capacity = vec![elastic_spec()];
+        let mut w = World::new(cfg, elastic_setups());
+        w.run_until(120.0);
+        // The wave saturated the committed server: standbys activated.
+        assert!(w.scale_events > 0, "no scale events during the wave");
+        assert!(
+            w.node(2).online || w.node(3).online,
+            "no standby came online under load"
+        );
+        // After the wave the elastic replicas drain, retire, and stay off.
+        w.run_until(400.0);
+        assert!(
+            !w.node(2).online && !w.node(3).online,
+            "standbys never retired after the wave"
+        );
+        assert!(w.node(1).online, "committed member must stay online");
+        // Node-hours reflect elasticity: committed ~400 s, elastic less.
+        assert!(w.node_seconds_online(1) > 390.0);
+        for i in [2usize, 3] {
+            let secs = w.node_seconds_online(i);
+            assert!(
+                secs > 0.0 && secs < 300.0,
+                "standby {i} online {secs}s of 400"
+            );
+        }
+        // Holding costs were assessed and burned from balances.
+        assert!(w.capacity_credits_charged > 0);
+        assert_eq!(w.capacity_groups().len(), 1);
+    }
+
+    #[test]
+    fn static_capacity_spec_replays_capacity_free_trace() {
+        // An inert static declaration must not perturb the event sequence
+        // in any observable way — the full-config-level twin of this check
+        // lives in rust/tests/replay_equivalence.rs.
+        let fingerprint = |with_static: bool| {
+            let mut cfg = WorldConfig { seed: 11, ..Default::default() };
+            if with_static {
+                cfg.capacity = vec![CapacityGroupSpec {
+                    label: "g".into(),
+                    region: 0,
+                    members: vec![0, 1, 2, 3],
+                    standby: vec![],
+                    cfg: CapacityConfig::default(),
+                }];
+            }
+            let mut w = World::new(cfg, setup_uniform(4, 3.0));
+            w.run_until(300.0);
+            (
+                w.recorder.len(),
+                (w.recorder.mean_latency() * 1e9) as u64,
+                w.messages_sent,
+                w.events_processed,
+                w.scale_events,
+                w.credit_totals()
+                    .iter()
+                    .map(|c| (c * 1e6) as u64)
+                    .collect::<Vec<_>>(),
+            )
+        };
+        assert_eq!(fingerprint(false), fingerprint(true));
+    }
+
+    #[test]
+    fn node_hours_accounting_tracks_availability() {
+        let mut w =
+            World::new(WorldConfig::default(), setup_uniform(3, 1e12));
+        w.schedule_leave(1, 50.0);
+        w.schedule_join(1, 150.0);
+        w.run_until(200.0);
+        assert!((w.node_seconds_online(0) - 200.0).abs() < 1e-9);
+        assert!((w.node_seconds_online(1) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn capacity_member_out_of_range_panics() {
+        let mut cfg = WorldConfig::default();
+        cfg.capacity = vec![CapacityGroupSpec {
+            label: "g".into(),
+            region: 0,
+            members: vec![7],
+            standby: vec![],
+            cfg: CapacityConfig::default(),
+        }];
+        World::new(cfg, setup_uniform(2, 5.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "scale_down_util")]
+    fn capacity_inverted_thresholds_panic() {
+        let mut cfg = WorldConfig::default();
+        cfg.capacity = vec![CapacityGroupSpec {
+            label: "g".into(),
+            region: 0,
+            members: vec![0],
+            standby: vec![],
+            cfg: CapacityConfig {
+                scale_up_util: 0.3,
+                scale_down_util: 0.6,
+                ..Default::default()
+            },
+        }];
+        World::new(cfg, setup_uniform(2, 5.0));
     }
 }

@@ -1,0 +1,247 @@
+//! Property tests for the live latency estimator (`rust/src/latency/`),
+//! in the repo's seeded-generator mini-framework style (`prop_ledger.rs`,
+//! `prop_protocol.rs`).
+//!
+//! Invariants, under arbitrary observe / timeout / merge / touch / decay
+//! interleavings:
+//!
+//! * **boundedness** — a cell's blended estimate never escapes the hull
+//!   of its prior and every sample ever aimed at it (the EWMA is a convex
+//!   combination; the prior blend and the staleness decay only pull it
+//!   *toward* the prior);
+//! * **decay monotonicity** — once evidence stops, the estimate moves
+//!   monotonically toward the prior and reaches it after `decay_after`
+//!   seconds of silence;
+//! * **version discipline** — `version()` is monotone non-decreasing,
+//!   pure reads and freshness-only touches never bump it, and the
+//!   drift-quantized bump fires on every first observation of a cell;
+//! * **disabled = frozen** — with `enabled: false` every estimate stays
+//!   pinned at the prior and the version at 0, whatever is fed in.
+
+use wwwserve::latency::{LatencyConfig, LatencyEstimator};
+use wwwserve::util::rng::Rng;
+
+const CASES: u64 = 60;
+const OPS: usize = 80;
+
+fn random_prior(rng: &mut Rng, n: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|_| (0..n).map(|_| rng.range_f64(0.001, 0.3)).collect())
+        .collect()
+}
+
+fn random_config(rng: &mut Rng) -> LatencyConfig {
+    LatencyConfig {
+        enabled: true,
+        alpha: rng.range_f64(0.05, 1.0),
+        decay_after: rng.range_f64(5.0, 120.0),
+        prior_weight: rng.range_f64(0.0, 3.0),
+        share_every: rng.range_f64(0.0, 10.0),
+    }
+}
+
+/// Per-cell hull of everything that could have moved the estimate: the
+/// prior plus every sample aimed at the cell (samples skipped by the
+/// direct-trust holdoff only widen the hull, which stays sound).
+struct Hull {
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+}
+
+impl Hull {
+    fn new(prior: &[Vec<f64>]) -> Hull {
+        let flat: Vec<f64> = prior.iter().flatten().copied().collect();
+        Hull { lo: flat.clone(), hi: flat }
+    }
+
+    fn feed(&mut self, n: usize, a: usize, b: usize, sample: f64) {
+        let i = a * n + b;
+        self.lo[i] = self.lo[i].min(sample);
+        self.hi[i] = self.hi[i].max(sample);
+    }
+}
+
+/// Drive one estimator through a random op tape; returns the hull, the
+/// end time, and the estimator itself for post-tape checks.
+fn drive(case: u64) -> (LatencyEstimator, Hull, f64) {
+    let mut rng = Rng::new(0xC0FFEE ^ case);
+    let n = 2 + rng.below(4);
+    let my = rng.below(n) as u32;
+    let prior = random_prior(&mut rng, n);
+    let cfg = random_config(&mut rng);
+    let mut est = LatencyEstimator::new(my, prior.clone(), cfg);
+    let mut hull = Hull::new(&prior);
+    let mut now = 0.0;
+    let mut last_version = est.version();
+    for _ in 0..OPS {
+        now += rng.range_f64(0.0, cfg.decay_after * 0.6);
+        let r = rng.below(n) as u32;
+        match rng.below(4) {
+            0 => {
+                let rtt = rng.range_f64(0.0, 6.0);
+                est.observe_rtt(r, rtt, now);
+                hull.feed(n, my as usize, r as usize, rtt / 2.0);
+                hull.feed(n, r as usize, my as usize, rtt / 2.0);
+            }
+            1 => {
+                let timeout = rng.range_f64(0.5, 5.0);
+                est.observe_timeout(r, timeout, now);
+                hull.feed(n, my as usize, r as usize, timeout / 2.0);
+                hull.feed(n, r as usize, my as usize, timeout / 2.0);
+            }
+            2 => {
+                let a = rng.below(n) as u32;
+                let b = rng.below(n) as u32;
+                let v = rng.range_f64(0.0, 3.0);
+                est.merge(&[(a, b, v)], now);
+                hull.feed(n, a as usize, b as usize, v);
+            }
+            _ => {
+                let before = est.version();
+                est.touch(r, now);
+                assert_eq!(
+                    est.version(),
+                    before,
+                    "case {case}: freshness touch bumped the version"
+                );
+            }
+        }
+        let v = est.version();
+        assert!(
+            v >= last_version,
+            "case {case}: version went backwards ({last_version} -> {v})"
+        );
+        last_version = v;
+        // Bounded at every intermediate point, at the op time and later.
+        check_bounds(&est, &hull, n, now, case);
+        check_bounds(&est, &hull, n, now + rng.range_f64(0.0, 50.0), case);
+    }
+    (est, hull, now)
+}
+
+fn check_bounds(
+    est: &LatencyEstimator,
+    hull: &Hull,
+    n: usize,
+    at: f64,
+    case: u64,
+) {
+    for a in 0..n {
+        for b in 0..n {
+            let got = est.expected(a as u32, b as u32, at);
+            let (lo, hi) = (hull.lo[a * n + b], hull.hi[a * n + b]);
+            assert!(
+                got >= lo - 1e-9 && got <= hi + 1e-9,
+                "case {case}: cell ({a},{b}) escaped its hull at t={at}: \
+                 {got} not in [{lo}, {hi}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_estimates_stay_inside_the_prior_sample_hull() {
+    for case in 0..CASES {
+        drive(case);
+    }
+}
+
+#[test]
+fn prop_silence_decays_monotonically_to_the_prior() {
+    for case in 0..CASES {
+        let (est, _hull, end) = drive(case);
+        let n = est.num_regions();
+        let cfg = est.config();
+        for a in 0..n as u32 {
+            for b in 0..n as u32 {
+                let prior = {
+                    // The prior is what a fully decayed cell returns.
+                    est.expected(a, b, end + cfg.decay_after + 1.0)
+                };
+                let mut dist = f64::INFINITY;
+                let steps = 12;
+                for k in 0..=steps {
+                    let t = end + cfg.decay_after * k as f64 / steps as f64;
+                    let d = (est.expected(a, b, t) - prior).abs();
+                    assert!(
+                        d <= dist + 1e-9,
+                        "case {case}: cell ({a},{b}) decay not monotone \
+                         at step {k}: {d} > {dist}"
+                    );
+                    dist = d;
+                }
+                // Fully decayed: exactly the prior, and it stays there.
+                let settled = est.expected(a, b, end + cfg.decay_after);
+                assert!(
+                    (settled - prior).abs() < 1e-9,
+                    "case {case}: cell ({a},{b}) not settled after \
+                     decay_after: {settled} vs {prior}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_version_bumps_on_first_observation_of_a_cell() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xBEEF ^ case);
+        let n = 2 + rng.below(4);
+        let prior = random_prior(&mut rng, n);
+        let cfg = random_config(&mut rng);
+        let mut est = LatencyEstimator::new(0, prior, cfg);
+        let mut seen = vec![false; n];
+        let mut now = 0.0;
+        for _ in 0..30 {
+            now += rng.range_f64(0.1, 5.0);
+            let r = 1 + rng.below(n - 1);
+            let before = est.version();
+            est.observe_rtt(r as u32, rng.range_f64(0.1, 4.0), now);
+            if !seen[r] {
+                assert!(
+                    est.version() > before,
+                    "case {case}: first observation of region {r} did \
+                     not bump the version"
+                );
+                seen[r] = true;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_disabled_estimator_is_frozen_under_any_tape() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xD15AB1ED ^ case);
+        let n = 2 + rng.below(3);
+        let my = rng.below(n) as u32;
+        let prior = random_prior(&mut rng, n);
+        let cfg = LatencyConfig { enabled: false, ..random_config(&mut rng) };
+        let mut est = LatencyEstimator::new(my, prior.clone(), cfg);
+        let mut now = 0.0;
+        for _ in 0..40 {
+            now += rng.range_f64(0.0, 20.0);
+            let r = rng.below(n) as u32;
+            match rng.below(4) {
+                0 => est.observe_rtt(r, rng.range_f64(0.0, 6.0), now),
+                1 => est.observe_timeout(r, rng.range_f64(0.5, 5.0), now),
+                2 => est.merge(&[(r, my, rng.range_f64(0.0, 3.0))], now),
+                _ => est.touch(r, now),
+            }
+            assert_eq!(est.version(), 0, "case {case}: frozen version moved");
+            assert!(
+                est.share(now).is_empty(),
+                "case {case}: frozen estimator shared a summary"
+            );
+        }
+        for a in 0..n {
+            for b in 0..n {
+                assert_eq!(
+                    est.expected(a as u32, b as u32, now),
+                    prior[a][b],
+                    "case {case}: frozen cell ({a},{b}) moved off prior"
+                );
+            }
+        }
+    }
+}
