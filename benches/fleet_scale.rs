@@ -11,7 +11,9 @@
 //! `BENCH_fleet_scale.json` so future PRs can track regressions.
 //!
 //! Asserts the headline numbers: delta gossip strictly beats the baseline
-//! on gossip bytes at every size, and by ≥ 10x at 500 nodes.
+//! on gossip bytes at every size, and by ≥ 10x at 500 nodes. A final
+//! section turns the flight recorder on (`observability.enabled`) and
+//! asserts tracing at the default sample rate costs < 5% events/sec.
 //!
 //! `--smoke` (or `FLEET_SCALE_SMOKE=1`) restricts to n = 50 — the CI tier.
 
@@ -85,11 +87,26 @@ struct RunStats {
 }
 
 fn run_fleet(n: usize, mode: &'static str, anti_entropy_every: u64) -> RunStats {
+    run_fleet_obs(n, mode, anti_entropy_every, false)
+}
+
+fn run_fleet_obs(
+    n: usize,
+    mode: &'static str,
+    anti_entropy_every: u64,
+    traced: bool,
+) -> RunStats {
     let e = parse_experiment(&fleet_config(n, SEED))
         .expect("fleet config parses");
     let mut cfg = e.world;
     cfg.gossip.suspect_after = SUSPECT_AFTER;
     cfg.gossip.anti_entropy_every = anti_entropy_every;
+    if traced {
+        cfg.observability = wwwserve::obs::ObservabilityConfig {
+            enabled: true,
+            ..Default::default()
+        };
+    }
     let rounds = e.horizon / cfg.gossip.interval;
     let mut w = World::new(cfg, e.setups);
     let t0 = Instant::now();
@@ -228,6 +245,42 @@ fn main() {
         }
     }
 
+    // Tracing overhead: the flight recorder + metrics registry at the
+    // default sample rate must cost < 5% events/sec. Interleaved
+    // best-of-3 pairs at the CI size keep wall-clock noise out of the
+    // verdict; identical event counts re-prove replay neutrality at
+    // bench scale.
+    const OVERHEAD_N: usize = 50;
+    let ae = wwwserve::gossip::GossipConfig::default().anti_entropy_every;
+    let mut untraced_best = 0f64;
+    let mut traced_best = 0f64;
+    let mut events_pair = (0u64, 0u64);
+    for _ in 0..3 {
+        let u = run_fleet_obs(OVERHEAD_N, "delta", ae, false);
+        let t = run_fleet_obs(OVERHEAD_N, "delta", ae, true);
+        untraced_best = untraced_best.max(u.events_per_sec);
+        traced_best = traced_best.max(t.events_per_sec);
+        events_pair = (u.events, t.events);
+    }
+    assert_eq!(
+        events_pair.0, events_pair.1,
+        "tracing changed the event stream"
+    );
+    let overhead = 1.0 - traced_best / untraced_best;
+    println!(
+        "\ntracing overhead at n={OVERHEAD_N}: {:.0} -> {:.0} events/s \
+         ({:+.1}%)",
+        untraced_best,
+        traced_best,
+        -overhead * 100.0
+    );
+    assert!(
+        traced_best >= untraced_best * 0.95,
+        "tracing overhead exceeds 5%: {untraced_best:.0} -> \
+         {traced_best:.0} events/s ({:.1}%)",
+        overhead * 100.0
+    );
+
     let mut report = vec![
         ("bench", Json::str("fleet_scale")),
         ("seed", Json::num(SEED as f64)),
@@ -242,6 +295,15 @@ fn main() {
     if let Some(r) = headline_ratio {
         report.push(("n500_gossip_bytes_ratio", Json::num(r)));
     }
+    report.push((
+        "tracing_overhead",
+        Json::obj(vec![
+            ("nodes", Json::num(OVERHEAD_N as f64)),
+            ("untraced_events_per_sec", Json::num(untraced_best)),
+            ("traced_events_per_sec", Json::num(traced_best)),
+            ("overhead_frac", Json::num(overhead)),
+        ]),
+    ));
     let path = "BENCH_fleet_scale.json";
     write_json_report(path, &Json::obj(report)).expect("write bench json");
     println!("\nwrote {path}");

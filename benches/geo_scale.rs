@@ -21,7 +21,10 @@
 //!    (`latency_estimation.enabled = false`) keeps delegating into the
 //!    dead link for the whole outage. Asserted, and written to
 //!    `BENCH_geo_scale.json` so the SLO/latency numbers join the per-PR
-//!    perf trajectory.
+//!    perf trajectory. The live run is flight-recorded
+//!    (`observability.enabled`) and exported as `TRACE_geo_scale.json` —
+//!    a Chrome trace-event file of every request's hop chain through the
+//!    partition, viewable in Perfetto; CI uploads it as an artifact.
 //! 5. **Mixed-policy fleet** — one scenario, three provider personalities
 //!    (`default` / `greedy_local` / `selective`) plus `requester_only`
 //!    consumers, all selected via the declarative `topology.fleet`
@@ -225,6 +228,18 @@ fn run_reroute(live: bool) -> RerouteRun {
     cfg.latency_estimation.enabled = live;
     // Penalized estimates must not decay back to the prior mid-outage.
     cfg.latency_estimation.decay_after = 600.0;
+    // Flight-record the live run: the reroute scenario (partition, probe
+    // timeouts, cross-region fallbacks, heal) is the reference trace the
+    // CI geo-smoke job exports for chrome://tracing / Perfetto triage.
+    // Purely observational — the frozen baseline run stays untraced and
+    // the comparison below is unaffected either way.
+    if live {
+        cfg.observability = wwwserve::obs::ObservabilityConfig {
+            enabled: true,
+            ring_capacity: 16384,
+            ..Default::default()
+        };
+    }
 
     let mut setups = Vec::new();
     for region in 0..3 {
@@ -270,6 +285,13 @@ fn run_reroute(live: bool) -> RerouteRun {
     let at_readmit = cross(&w);
     w.run_until(HORIZON + 200.0);
     let recovered = cross(&w) - at_readmit;
+    if live {
+        let path = "TRACE_geo_scale.json";
+        let trees = w.span_trees();
+        assert!(!trees.is_empty(), "reroute run recorded no traces");
+        w.write_trace(path).expect("write trace json");
+        println!("wrote {path} ({} span trees)", trees.len());
+    }
     RerouteRun {
         pre,
         part,

@@ -48,7 +48,8 @@ fn main() {
     println!("SLO attainment          : {:.1}%", rec.slo_attainment() * 100.0);
     println!("mean latency            : {:.1} s", rec.mean_latency());
     println!("p50 / p99 latency       : {:.1} / {:.1} s",
-             rec.latency_percentile(0.5), rec.latency_percentile(0.99));
+             rec.latency_percentile(0.5).unwrap_or(f64::NAN),
+             rec.latency_percentile(0.99).unwrap_or(f64::NAN));
     println!("duels settled           : {}", world.duel_stats.total_duels());
     println!("messages exchanged      : {}", world.messages_sent);
 

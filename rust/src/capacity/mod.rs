@@ -415,6 +415,38 @@ pub enum CapacityAction {
     Charge { node: usize, amount: u64 },
 }
 
+impl CapacityAction {
+    /// The replica this action targets.
+    pub fn node(&self) -> usize {
+        match *self {
+            CapacityAction::SetSlots { node, .. }
+            | CapacityAction::Activate { node }
+            | CapacityAction::Retire { node }
+            | CapacityAction::Charge { node, .. } => node,
+        }
+    }
+
+    /// Stable short label for observability (`scale` span attribution).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            CapacityAction::SetSlots { .. } => "set_slots",
+            CapacityAction::Activate { .. } => "activate",
+            CapacityAction::Retire { .. } => "retire",
+            CapacityAction::Charge { .. } => "charge",
+        }
+    }
+
+    /// Kind-specific `detail` payload for `scale` spans: the new slot
+    /// count for `SetSlots`, the charged amount for `Charge`, 0 otherwise.
+    pub fn detail(&self) -> u64 {
+        match *self {
+            CapacityAction::SetSlots { slots, .. } => slots as u64,
+            CapacityAction::Charge { amount, .. } => amount,
+            CapacityAction::Activate { .. } | CapacityAction::Retire { .. } => 0,
+        }
+    }
+}
+
 /// Static description of one capacity-managed group, carried on
 /// `WorldConfig` (the config layer builds these from `capacity` blocks;
 /// tests build them directly).

@@ -23,6 +23,7 @@
 use crate::backend::{Gpu, ModelClass, Profile, ServingStack};
 use crate::capacity::{CapacityConfig, CapacityGroupSpec, CapacityPolicyKind};
 use crate::latency::LatencyConfig;
+use crate::obs::ObservabilityConfig;
 use crate::policy::{NodePolicy, ParticipationKind, SystemPolicy};
 use crate::schedulers::Strategy;
 use crate::sim::{LedgerMode, NodeSetup, WorldConfig};
@@ -670,6 +671,47 @@ fn parse_latency_estimation(j: &Json) -> Result<LatencyConfig, ConfigError> {
     Ok(cfg)
 }
 
+/// Parse the declarative `"observability"` block (all keys optional):
+///
+/// ```json
+/// "observability": {
+///   "enabled": true,
+///   "sample_rate": 1.0,
+///   "ring_capacity": 4096,
+///   "slo_misses_only": false
+/// }
+/// ```
+///
+/// `enabled: false` (the default) keeps the flight recorder and metrics
+/// registry completely out of the run — pre-observability configs replay
+/// byte for byte. `enabled: true` is purely observational, so the replay
+/// fingerprint still matches (`rust/tests/replay_equivalence.rs`).
+fn parse_observability(j: &Json) -> Result<ObservabilityConfig, ConfigError> {
+    let d = ObservabilityConfig::default();
+    if j.is_null() {
+        return Ok(d);
+    }
+    let cfg = ObservabilityConfig {
+        enabled: j.get("enabled").as_bool().unwrap_or(d.enabled),
+        sample_rate: j.get("sample_rate").as_f64().unwrap_or(d.sample_rate),
+        ring_capacity: match j.get("ring_capacity") {
+            Json::Null => d.ring_capacity,
+            v => v.as_usize().ok_or_else(|| {
+                bad("observability.ring_capacity must be a non-negative \
+                     integer")
+            })?,
+        },
+        slo_misses_only: j
+            .get("slo_misses_only")
+            .as_bool()
+            .unwrap_or(d.slo_misses_only),
+    };
+    // Reject bad values with Err here rather than letting
+    // `ObservabilityConfig::validate` abort the process on malformed input.
+    cfg.check().map_err(bad)?;
+    Ok(cfg)
+}
+
 fn parse_lengths(j: &Json) -> LengthDist {
     let d = LengthDist::default();
     LengthDist {
@@ -767,6 +809,7 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
     let topology = parse_topology(j.get("topology"), &nodes)?;
     let latency_estimation =
         parse_latency_estimation(j.get("latency_estimation"))?;
+    let observability = parse_observability(j.get("observability"))?;
     // Capacity groups: resolve region names against the built topology
     // (a fleet block implies a topology block, so it is always present
     // and already validated here).
@@ -892,6 +935,7 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
             ledger,
             topology,
             latency_estimation,
+            observability,
             churn: churn.iter().map(|c| (c.node, c.at, c.join)).collect(),
             capacity,
             ..Default::default()
@@ -1226,6 +1270,44 @@ mod tests {
             assert!(
                 parse_experiment(&text).is_err(),
                 "accepted bad latency_estimation block {block}"
+            );
+        }
+    }
+
+    #[test]
+    fn parses_observability_block() {
+        let e = parse_experiment(
+            r#"{"observability": { "enabled": true, "sample_rate": 0.25,
+                "ring_capacity": 128, "slo_misses_only": true },
+                "nodes": [{}]}"#,
+        )
+        .unwrap();
+        let o = e.world.observability;
+        assert!(o.enabled);
+        assert!((o.sample_rate - 0.25).abs() < 1e-12);
+        assert_eq!(o.ring_capacity, 128);
+        assert!(o.slo_misses_only);
+        // Absent block -> defaults (observability off, replay-identical).
+        let e = parse_experiment(r#"{"nodes": [{}]}"#).unwrap();
+        assert_eq!(e.world.observability, ObservabilityConfig::default());
+        assert!(!e.world.observability.enabled);
+    }
+
+    #[test]
+    fn rejects_bad_observability() {
+        for block in [
+            r#"{"sample_rate": -0.1}"#,
+            r#"{"sample_rate": 1.5}"#,
+            r#"{"enabled": true, "ring_capacity": 0}"#,
+            r#"{"ring_capacity": -4}"#,
+            r#"{"ring_capacity": "big"}"#,
+        ] {
+            let text = format!(
+                r#"{{"observability": {block}, "nodes": [{{}}]}}"#
+            );
+            assert!(
+                parse_experiment(&text).is_err(),
+                "accepted bad observability block {block}"
             );
         }
     }

@@ -20,6 +20,7 @@ use super::snapshot::Snapshots;
 use crate::backend::Backend;
 use crate::gossip::PeerView;
 use crate::ledger::CreditOp;
+use crate::obs::{FlightRecorder, SpanKind};
 use crate::policy::{NodePolicy, ParticipationPolicy, SystemPolicy};
 use crate::types::{ExecKind, NodeId, Request, Time};
 use crate::util::rng::Rng;
@@ -65,6 +66,17 @@ pub(crate) struct Ctx<'a> {
     pub snaps: &'a mut Snapshots,
     pub stats: &'a mut NodeStats,
     pub peers: &'a mut PeerScratch,
+    pub obs: &'a mut FlightRecorder,
+}
+
+/// Stable `detail` encoding of an [`ExecKind`] for `execute_*` spans.
+pub(crate) fn exec_kind_code(kind: ExecKind) -> u64 {
+    match kind {
+        ExecKind::Local => 0,
+        ExecKind::Delegated => 1,
+        ExecKind::Duel => 2,
+        ExecKind::Judge => 3,
+    }
 }
 
 impl Ctx<'_> {
@@ -78,6 +90,14 @@ impl Ctx<'_> {
         if kind == ExecKind::Local {
             self.stats.served_local += 1;
         }
+        self.obs.span(
+            req.id,
+            SpanKind::ExecuteStart,
+            self.id,
+            None,
+            now,
+            exec_kind_code(kind),
+        );
         self.backend.submit(req, kind, now);
         vec![]
     }

@@ -12,13 +12,14 @@
 
 use std::collections::HashMap;
 
-use super::ctx::Ctx;
+use super::ctx::{exec_kind_code, Ctx};
 use super::duel::DuelCourt;
 use super::events::Action;
 use super::msg::Message;
 use crate::backend::Completion;
 use crate::duel as duel_mech;
 use crate::ledger::{CreditOp, OpReason};
+use crate::obs::SpanKind;
 use crate::policy::{OffloadCtx, ProbeCtx};
 use crate::types::{
     ExecKind, NodeId, Request, RequestId, RequestRecord, Response, Time,
@@ -94,6 +95,7 @@ impl Dispatch {
         now: Time,
     ) -> Vec<Action> {
         ctx.stats.user_requests += 1;
+        ctx.obs.span(req.id, SpanKind::Admit, ctx.id, None, now, 0);
         let util = ctx.backend.utilization();
         let qlen = ctx.backend.queue_len();
         let part = ctx.participation;
@@ -156,6 +158,14 @@ impl Dispatch {
             prompt_tokens: req.prompt_tokens,
             output_tokens: req.output_tokens,
         };
+        ctx.obs.span(
+            req.id,
+            SpanKind::ProbeSent,
+            ctx.id,
+            Some(candidate),
+            now,
+            0,
+        );
         self.pending.insert(
             req.id,
             PendingDelegation {
@@ -191,8 +201,18 @@ impl Dispatch {
         let req = p.req.clone();
         p.state = PendingState::AwaitingResponse { executor: from };
         p.deadline = now + req.slo_deadline * RESPONSE_TIMEOUT_FACTOR;
+        let rtt = (now - sent_at).max(0.0);
+        ctx.obs.span(
+            req_id,
+            SpanKind::ProbeAcked,
+            ctx.id,
+            Some(from),
+            now,
+            (rtt * 1e6) as u64,
+        );
         // The probe round trip is a clean network RTT sample.
-        ctx.feed.observe_peer_rtt(ctx.view, from, (now - sent_at).max(0.0), now);
+        ctx.feed.observe_peer_rtt(ctx.obs, ctx.view, from, rtt, now);
+        ctx.obs.span(req_id, SpanKind::Delegate, ctx.id, Some(from), now, 0);
         vec![Action::Send {
             to: from,
             msg: Message::Delegate { request: req, duel: false },
@@ -220,8 +240,17 @@ impl Dispatch {
             }
             (p.req.clone(), probes_left, sent_at)
         };
+        let rtt = (now - sent_at).max(0.0);
+        ctx.obs.span(
+            req_id,
+            SpanKind::ProbeRejected,
+            ctx.id,
+            Some(from),
+            now,
+            (rtt * 1e6) as u64,
+        );
         // A reject still answers the probe: same clean RTT sample.
-        ctx.feed.observe_peer_rtt(ctx.view, from, (now - sent_at).max(0.0), now);
+        ctx.feed.observe_peer_rtt(ctx.obs, ctx.view, from, rtt, now);
         ctx.stats.probe_rejects += 1;
         if probes_left == 0 {
             self.pending.remove(&req_id);
@@ -238,6 +267,14 @@ impl Dispatch {
                     prompt_tokens: req.prompt_tokens,
                     output_tokens: req.output_tokens,
                 };
+                ctx.obs.span(
+                    req_id,
+                    SpanKind::ProbeSent,
+                    ctx.id,
+                    Some(c),
+                    now,
+                    0,
+                );
                 let p = self.pending.get_mut(&req_id).expect("checked above");
                 p.state = PendingState::Probing {
                     candidate: c,
@@ -269,6 +306,14 @@ impl Dispatch {
             self.pending.insert(response.id, p);
             return vec![];
         };
+        ctx.obs.span(
+            response.id,
+            SpanKind::Settle,
+            ctx.id,
+            Some(executor),
+            now,
+            0,
+        );
         // Pay the executor (credits-for-offloading).
         let mut actions = ctx.ledger_submit(
             vec![CreditOp::Transfer {
@@ -337,6 +382,7 @@ impl Dispatch {
         now: Time,
     ) -> Vec<Action> {
         ctx.stats.delegated_in += 1;
+        ctx.obs.span(request.id, SpanKind::Queue, ctx.id, Some(from), now, 0);
         self.exec_tickets
             .insert(request.id, ExecTicket { origin: from, duel });
         let kind = if duel { ExecKind::Duel } else { ExecKind::Delegated };
@@ -353,6 +399,15 @@ impl Dispatch {
         let Some(ticket) = self.exec_tickets.remove(&c.request.id) else {
             return vec![];
         };
+        let kind = if ticket.duel { ExecKind::Duel } else { ExecKind::Delegated };
+        ctx.obs.span(
+            c.request.id,
+            SpanKind::ExecuteEnd,
+            ctx.id,
+            Some(ticket.origin),
+            c.finished_at,
+            exec_kind_code(kind),
+        );
         let quality =
             duel_mech::draw_response_quality(ctx.backend.quality(), ctx.rng);
         let response = Response {
@@ -398,19 +453,38 @@ impl Dispatch {
                     // latency estimator and serve locally.
                     ctx.stats.probe_timeouts += 1;
                     ctx.stats.fallback_local += 1;
-                    ctx.feed.observe_probe_timeout(ctx.view, candidate, now);
+                    ctx.obs.span(
+                        id,
+                        SpanKind::Timeout,
+                        ctx.id,
+                        Some(candidate),
+                        now,
+                        0,
+                    );
+                    ctx.feed.observe_probe_timeout(
+                        ctx.obs, ctx.view, candidate, now,
+                    );
                     actions.extend(
                         ctx.execute_locally(p.req, ExecKind::Local, now),
                     );
                 }
-                PendingState::AwaitingResponse { .. } => {
+                PendingState::AwaitingResponse { executor } => {
                     // Executor vanished mid-flight: local fallback.
                     ctx.stats.fallback_local += 1;
+                    ctx.obs.span(
+                        id,
+                        SpanKind::Timeout,
+                        ctx.id,
+                        Some(executor),
+                        now,
+                        1,
+                    );
                     actions.extend(
                         ctx.execute_locally(p.req, ExecKind::Local, now),
                     );
                 }
                 PendingState::AwaitingDuel => {
+                    ctx.obs.span(id, SpanKind::Timeout, ctx.id, None, now, 2);
                     actions.extend(court.on_duel_timeout(ctx, id, p.req, now));
                 }
             }

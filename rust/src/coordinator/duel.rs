@@ -18,6 +18,7 @@ use crate::backend::Completion;
 use crate::duel as duel_mech;
 use crate::duel::DuelState;
 use crate::ledger::{CreditOp, OpReason};
+use crate::obs::SpanKind;
 use crate::types::{
     ExecKind, NodeId, Request, RequestId, RequestRecord, Response, Time,
 };
@@ -87,9 +88,14 @@ impl DuelCourt {
         self.duels.insert(req.id, duel);
         execs
             .into_iter()
-            .map(|to| Action::Send {
-                to,
-                msg: Message::Delegate { request: req.clone(), duel: true },
+            .map(|to| {
+                // Duel copies ship straight to both executors (no probe).
+                ctx.obs
+                    .span(req.id, SpanKind::Delegate, ctx.id, Some(to), now, 1);
+                Action::Send {
+                    to,
+                    msg: Message::Delegate { request: req.clone(), duel: true },
+                }
             })
             .collect()
     }
@@ -259,6 +265,14 @@ impl DuelCourt {
         let judges = d.judges.clone();
         self.duels.remove(&duel_id);
         pending.remove(&duel_id);
+        ctx.obs.span(
+            duel_id,
+            SpanKind::DuelSettle,
+            ctx.id,
+            Some(outcome.winner),
+            now,
+            outcome.loser.0 as u64,
+        );
         let mut ops = vec![
             CreditOp::Mint {
                 to: outcome.winner,

@@ -12,6 +12,7 @@ use super::events::Action;
 use super::msg::Message;
 use crate::gossip::{Digest, Heartbeats};
 use crate::latency::RegionRtts;
+use crate::obs::SpanKind;
 use crate::types::{NodeId, Time};
 
 /// Gossip round cadence state.
@@ -80,6 +81,13 @@ impl GossipDriver {
         }
         self.last_gossip = now;
         self.gossip_round += 1;
+        ctx.obs.node_span(
+            SpanKind::GossipRound,
+            ctx.id,
+            None,
+            now,
+            self.gossip_round,
+        );
         ctx.view.heartbeat(now);
         let ae = ctx.view.config().anti_entropy_every;
         let full = ae <= 1 || self.gossip_round % ae == 1;
@@ -116,7 +124,7 @@ impl GossipDriver {
         digest: &Digest,
         now: Time,
     ) -> Vec<Action> {
-        ctx.feed.observe_gossip_reply(ctx.view, from, now);
+        ctx.feed.observe_gossip_reply(ctx.obs, ctx.view, from, now);
         ctx.view.merge(digest, now);
         vec![]
     }
@@ -159,7 +167,7 @@ impl GossipDriver {
         rtts: &RegionRtts,
         now: Time,
     ) -> Vec<Action> {
-        ctx.feed.observe_gossip_reply(ctx.view, from, now);
+        ctx.feed.observe_gossip_reply(ctx.obs, ctx.view, from, now);
         ctx.feed.merge_rtts(rtts, now);
         ctx.view.merge(delta, now);
         ctx.view.merge_heartbeats(heartbeats, now);

@@ -22,6 +22,7 @@ use std::collections::HashMap;
 use super::dispatch::PROBE_TIMEOUT;
 use crate::gossip::PeerView;
 use crate::latency::{LatencyConfig, LatencyEstimator, RegionRtts};
+use crate::obs::{FlightRecorder, SpanKind};
 use crate::types::{NodeId, Time};
 
 /// Live per-region latency knowledge + the RTT attribution state.
@@ -130,9 +131,11 @@ impl LatencyFeed {
 
     /// Feed a measured request→reply round trip with `peer` into the live
     /// estimator (no-op without locality information or when the peer's
-    /// region is unknown).
+    /// region is unknown). Every accepted sample leaves an `rtt_observed`
+    /// span (detail = RTT in µs) in the node's flight recorder.
     pub fn observe_peer_rtt(
         &mut self,
+        obs: &mut FlightRecorder,
         view: &PeerView,
         peer: NodeId,
         rtt: Time,
@@ -142,6 +145,13 @@ impl LatencyFeed {
             return;
         };
         if let Some(est) = self.lat.as_mut() {
+            obs.node_span(
+                SpanKind::RttObserved,
+                view.me,
+                Some(peer),
+                now,
+                (rtt * 1e6) as u64,
+            );
             est.observe_rtt(region, rtt, now);
         }
     }
@@ -151,6 +161,7 @@ impl LatencyFeed {
     /// observation so dispatch sheds the region within a few timeouts.
     pub fn observe_probe_timeout(
         &mut self,
+        obs: &mut FlightRecorder,
         view: &PeerView,
         candidate: NodeId,
         now: Time,
@@ -159,6 +170,13 @@ impl LatencyFeed {
             return;
         };
         if let Some(est) = self.lat.as_mut() {
+            obs.node_span(
+                SpanKind::RttObserved,
+                view.me,
+                Some(candidate),
+                now,
+                (PROBE_TIMEOUT * 1e6) as u64,
+            );
             est.observe_timeout(region, PROBE_TIMEOUT, now);
         }
     }
@@ -198,6 +216,7 @@ impl LatencyFeed {
     /// that old may predate a partition heal.
     pub fn observe_gossip_reply(
         &mut self,
+        obs: &mut FlightRecorder,
         view: &PeerView,
         peer: NodeId,
         now: Time,
@@ -205,7 +224,7 @@ impl LatencyFeed {
         if let Some(t0) = self.gossip_sent_at.remove(&peer) {
             let rtt = (now - t0).max(0.0);
             if rtt <= PROBE_TIMEOUT {
-                self.observe_peer_rtt(view, peer, rtt, now);
+                self.observe_peer_rtt(obs, view, peer, rtt, now);
             }
         }
     }
@@ -253,6 +272,7 @@ mod tests {
     use super::super::node::testutil::mk_node;
     use crate::ledger::SharedLedger;
     use crate::latency::LatencyConfig;
+    use crate::obs::FlightRecorder;
     use crate::policy::NodePolicy;
     use crate::types::NodeId;
     use std::sync::{Arc, Mutex};
@@ -293,15 +313,16 @@ mod tests {
         let prior = n0.feed.expected_latency_to(&n0.view, NodeId(1), 0.0);
         // Two pushes without an intervening reply: the stamp is cleared,
         // so the (late, slow-looking) reply must not move the estimate.
+        let mut obs = FlightRecorder::disabled();
         n0.feed.stamp_gossip_push(NodeId(1), 0.0);
         n0.feed.stamp_gossip_push(NodeId(1), 1.0);
         let view = n0.view.clone();
-        n0.feed.observe_gossip_reply(&view, NodeId(1), 2.5);
+        n0.feed.observe_gossip_reply(&mut obs, &view, NodeId(1), 2.5);
         let after = n0.feed.expected_latency_to(&n0.view, NodeId(1), 2.5);
         assert_eq!(after, prior, "ambiguous exchange fed the estimator");
         // A fresh uncontended push re-arms measurement.
         n0.feed.stamp_gossip_push(NodeId(1), 3.0);
-        n0.feed.observe_gossip_reply(&view, NodeId(1), 4.0);
+        n0.feed.observe_gossip_reply(&mut obs, &view, NodeId(1), 4.0);
         let measured = n0.feed.expected_latency_to(&n0.view, NodeId(1), 4.0);
         assert!(measured > prior, "clean exchange ignored: {measured}");
     }

@@ -36,6 +36,7 @@ use crate::backend::Backend;
 use crate::gossip::{GossipConfig, PeerView};
 use crate::latency::{LatencyConfig, LatencyEstimator};
 use crate::ledger::{CreditOp, OpReason};
+use crate::obs::{FlightRecorder, ObservabilityConfig, SpanKind};
 use crate::policy::{
     DefaultPolicy, NodePolicy, ParticipationPolicy, SystemPolicy,
 };
@@ -78,6 +79,10 @@ pub struct Node {
     pub(crate) gossip: GossipDriver,
     peers: PeerScratch,
     pub stats: NodeStats,
+    /// Per-node span ring (see [`crate::obs`]). Starts disabled — every
+    /// emission point is a no-op until
+    /// [`set_observability`](Node::set_observability) arms it.
+    obs: FlightRecorder,
 }
 
 impl Node {
@@ -128,6 +133,7 @@ impl Node {
             gossip: GossipDriver::new(now),
             peers: PeerScratch::default(),
             stats: NodeStats::default(),
+            obs: FlightRecorder::disabled(),
         }
     }
 
@@ -165,6 +171,17 @@ impl Node {
 
     pub fn participation(&self) -> &dyn ParticipationPolicy {
         self.participation.as_ref()
+    }
+
+    /// Arm (or re-arm) this node's flight recorder. With
+    /// `enabled: false` this is equivalent to the default inert recorder.
+    pub fn set_observability(&mut self, cfg: ObservabilityConfig) {
+        self.obs = FlightRecorder::new(cfg);
+    }
+
+    /// Read access to the recorded span ring.
+    pub fn flight_recorder(&self) -> &FlightRecorder {
+        &self.obs
     }
 
     // ---- locality (topology awareness) --------------------------------------
@@ -218,6 +235,7 @@ impl Node {
             gossip,
             peers,
             stats,
+            obs,
             ..
         } = self;
         (
@@ -234,6 +252,7 @@ impl Node {
                 snaps,
                 stats,
                 peers,
+                obs,
             },
             dispatch,
             court,
@@ -422,6 +441,14 @@ impl Node {
             match c.kind {
                 ExecKind::Local => {
                     // Our own user's request, served locally.
+                    ctx.obs.span(
+                        c.request.id,
+                        SpanKind::ExecuteEnd,
+                        ctx.id,
+                        None,
+                        c.finished_at,
+                        super::ctx::exec_kind_code(ExecKind::Local),
+                    );
                     actions.push(Action::Done(RequestRecord {
                         id: c.request.id,
                         origin: ctx.id,

@@ -109,6 +109,29 @@
 //! declaratively via the `topology.fleet` config block.
 //! `benches/fleet_scale.rs` tracks events/sec and gossip bytes across
 //! n ∈ {50..1000} and writes the `BENCH_fleet_scale.json` perf trajectory.
+//!
+//! ## Observability
+//!
+//! The [`obs`] module adds causal request tracing and a unified metrics
+//! registry, both deterministic and replay-neutral. Every request carries
+//! a [`obs::TraceId`] (a splitmix64 hash of its request id — no wall
+//! clock, no RNG); the coordinator layers emit typed [`obs::SpanEvent`]s
+//! (admit, probe, delegate, queue, execute, timeout, duel-settle, settle,
+//! scale) into per-node bounded ring buffers ([`obs::FlightRecorder`]).
+//! [`sim::World`] stitches the rings into per-request span trees and
+//! exports Chrome trace-event JSON (`World::write_trace`) viewable in
+//! `chrome://tracing` / Perfetto, with a `slo_misses_only` mode that
+//! keeps full spans only for violated requests. The
+//! [`obs::MetricsRegistry`] interns labeled counters / gauges /
+//! histograms (per-region dispatch pressure, per-node availability,
+//! completion-latency histograms) mirrored from the `World` counters and
+//! sampled into windowed series; `metrics/export.rs` dumps it as JSON.
+//! Everything is gated on a declarative `observability` config block —
+//! `enabled: false` (the default) replays pre-observability traces byte
+//! for byte, and `enabled: true` is purely observational, so replay
+//! fingerprints match either way (`rust/tests/replay_equivalence.rs`).
+//! `benches/fleet_scale.rs` bounds the enabled-tracing overhead at the
+//! default sample rate to < 5% events/sec.
 
 pub mod backend;
 pub mod benchlib;
@@ -123,6 +146,7 @@ pub mod latency;
 pub mod ledger;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod policy;
 pub mod pos;
 pub mod repro;

@@ -79,9 +79,9 @@ fn print_summary(label: &str, rec: &Recorder, horizon: f64) {
         rec.user_records().count(),
         rec.slo_attainment() * 100.0,
         rec.mean_latency(),
-        rec.latency_percentile(0.5),
-        rec.latency_percentile(0.99),
-        rec.throughput(horizon),
+        rec.latency_percentile(0.5).unwrap_or(f64::NAN),
+        rec.latency_percentile(0.99).unwrap_or(f64::NAN),
+        rec.throughput(horizon).unwrap_or(f64::NAN),
         rec.synthetic_count(),
     );
 }

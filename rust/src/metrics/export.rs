@@ -1,8 +1,9 @@
-//! Result export: dump run records and series as JSON for external
-//! plotting/analysis (the figures in the paper are plots of exactly these
-//! streams).
+//! Result export: dump run records, series and the unified metrics
+//! registry as JSON for external plotting/analysis (the figures in the
+//! paper are plots of exactly these streams).
 
 use super::{Recorder, TimeSeries};
+use crate::obs::{Metric, MetricsRegistry};
 use crate::types::RequestRecord;
 use crate::util::json::Json;
 
@@ -34,16 +35,65 @@ impl Recorder {
     }
 
     /// Compact run summary as JSON (the numbers the tables print).
+    /// Statistics that don't exist — percentiles of an empty run, the
+    /// throughput of a degenerate horizon — export as `null`, never as a
+    /// fake `0.0`.
     pub fn summary_json(&self, horizon: f64) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
         Json::obj(vec![
             ("user_requests", Json::num(self.user_records().count() as f64)),
             ("synthetic", Json::num(self.synthetic_count() as f64)),
             ("slo_attainment", Json::num(self.slo_attainment())),
             ("mean_latency", Json::num(self.mean_latency())),
-            ("p50_latency", Json::num(self.latency_percentile(0.5))),
-            ("p99_latency", Json::num(self.latency_percentile(0.99))),
-            ("throughput", Json::num(self.throughput(horizon))),
+            ("p50_latency", opt(self.latency_percentile(0.5))),
+            ("p99_latency", opt(self.latency_percentile(0.99))),
+            ("throughput", opt(self.throughput(horizon))),
         ])
+    }
+}
+
+fn metric_json(m: &Metric) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&m.name)),
+        (
+            "labels",
+            Json::obj(
+                m.labels
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), Json::str(v)))
+                    .collect(),
+            ),
+        ),
+        ("kind", Json::str(m.kind.name())),
+        ("value", Json::num(m.value)),
+        ("count", Json::num(m.count as f64)),
+        (
+            "buckets",
+            Json::Arr(m.buckets.iter().map(|b| Json::num(*b as f64)).collect()),
+        ),
+        (
+            "series",
+            Json::Arr(
+                m.series
+                    .iter()
+                    .map(|(t, v)| Json::Arr(vec![Json::num(*t), Json::num(*v)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+impl MetricsRegistry {
+    /// Every registered metric — identity, current value, histogram
+    /// buckets and windowed series — as a JSON array in registration
+    /// order (deterministic, like everything else in the registry).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.all().iter().map(metric_json).collect())
+    }
+
+    /// Write the registry dump to a `.json` file.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
     }
 }
 
@@ -119,5 +169,107 @@ mod tests {
         let j = ts.to_json();
         assert_eq!(j.as_arr().unwrap().len(), 2);
         assert_eq!(j.as_arr().unwrap()[1].as_arr().unwrap()[1].as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn record_json_roundtrips_every_field() {
+        let text = recorder().to_json().to_string();
+        let rec = &Json::parse(&text).unwrap().as_arr().unwrap()[0];
+        assert_eq!(rec.get("origin").as_u64(), Some(0));
+        assert_eq!(rec.get("seq").as_u64(), Some(1));
+        assert_eq!(rec.get("executor").as_u64(), Some(2));
+        assert_eq!(rec.get("prompt_tokens").as_u64(), Some(10));
+        assert_eq!(rec.get("output_tokens").as_u64(), Some(20));
+        assert_eq!(rec.get("submitted_at").as_f64(), Some(1.0));
+        assert_eq!(rec.get("completed_at").as_f64(), Some(11.0));
+        assert_eq!(rec.get("latency").as_f64(), Some(10.0));
+        assert_eq!(rec.get("slo_deadline").as_f64(), Some(15.0));
+        assert_eq!(rec.get("slo_met").as_bool(), Some(true));
+        assert_eq!(rec.get("synthetic").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn summary_json_roundtrips_and_nulls_missing_statistics() {
+        let text = recorder().summary_json(100.0).to_string();
+        let s = Json::parse(&text).unwrap();
+        assert_eq!(s.get("user_requests").as_u64(), Some(1));
+        assert_eq!(s.get("p50_latency").as_f64(), Some(10.0));
+        assert_eq!(s.get("p99_latency").as_f64(), Some(10.0));
+        assert_eq!(s.get("throughput").as_f64(), Some(0.01));
+        // An empty recorder has no percentiles; a zero horizon has no
+        // throughput — both export as null, not a fake 0.0.
+        let empty = Recorder::new().summary_json(0.0);
+        assert!(empty.get("p50_latency").is_null());
+        assert!(empty.get("p99_latency").is_null());
+        assert!(empty.get("throughput").is_null());
+        assert_eq!(empty.get("user_requests").as_u64(), Some(0));
+    }
+
+    #[test]
+    fn filtered_recorder_composes_with_per_region_slo_summaries() {
+        // Two "regions" keyed by origin parity: region 0 meets its SLOs,
+        // region 1 misses them. `filtered` must compose with every
+        // statistic, including the JSON summary.
+        let mut r = Recorder::new();
+        for seq in 0..4u64 {
+            let origin = NodeId((seq % 2) as u32);
+            let missed = origin == NodeId(1);
+            r.record(RequestRecord {
+                id: RequestId { origin, seq },
+                origin,
+                executor: NodeId(2),
+                kind: ExecKind::Delegated,
+                prompt_tokens: 10,
+                output_tokens: 20,
+                submitted_at: 0.0,
+                completed_at: if missed { 30.0 } else { 5.0 },
+                slo_deadline: 15.0,
+                synthetic: false,
+            });
+        }
+        let region = |n: u32| r.filtered(|rec| rec.origin == NodeId(n));
+        assert_eq!(region(0).slo_attainment(), 1.0);
+        assert_eq!(region(1).slo_attainment(), 0.0);
+        let s0 = region(0).summary_json(10.0);
+        assert_eq!(s0.get("user_requests").as_u64(), Some(2));
+        assert_eq!(s0.get("p99_latency").as_f64(), Some(5.0));
+        let s1 = region(1).summary_json(10.0);
+        assert!((s1.get("slo_attainment").as_f64().unwrap()).abs() < 1e-12);
+        assert_eq!(s1.get("p99_latency").as_f64(), Some(30.0));
+    }
+
+    #[test]
+    fn registry_dump_roundtrips_through_json() {
+        let mut reg = MetricsRegistry::new();
+        let c = reg.counter("msgs", &[("region", "us")]);
+        reg.set(c, 41.0);
+        reg.sample(c, 1.0);
+        reg.set(c, 42.0);
+        reg.sample(c, 2.0);
+        let h = reg.histogram("latency_s", &[]);
+        reg.observe(h, 0.5);
+        let parsed = Json::parse(&reg.to_json().to_string()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let m = &arr[0];
+        assert_eq!(m.get("name").as_str(), Some("msgs"));
+        assert_eq!(m.get("kind").as_str(), Some("counter"));
+        assert_eq!(m.get("labels").get("region").as_str(), Some("us"));
+        assert_eq!(m.get("value").as_f64(), Some(42.0));
+        let series = m.get("series").as_arr().unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[1].as_arr().unwrap()[1].as_f64(), Some(42.0));
+        let hist = &arr[1];
+        assert_eq!(hist.get("kind").as_str(), Some("histogram"));
+        assert_eq!(hist.get("count").as_u64(), Some(1));
+        assert_eq!(
+            hist.get("buckets")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .filter_map(|b| b.as_u64())
+                .sum::<u64>(),
+            1
+        );
     }
 }

@@ -99,14 +99,16 @@ impl Recorder {
         v
     }
 
-    /// p in [0, 1].
-    pub fn latency_percentile(&self, p: f64) -> f64 {
+    /// p in [0, 1]. `None` when no user records exist — an empty
+    /// recorder has no percentile, and returning `0.0` would read as a
+    /// real (excellent) latency in summaries and regression gates.
+    pub fn latency_percentile(&self, p: f64) -> Option<f64> {
         let v = self.latencies_sorted();
         if v.is_empty() {
-            return 0.0;
+            return None;
         }
         let idx = ((v.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
-        v[idx]
+        Some(v[idx])
     }
 
     /// Empirical CDF evaluated at `points` (Figure 7-left).
@@ -150,12 +152,15 @@ impl Recorder {
         m
     }
 
-    /// Throughput of completed user requests over the horizon.
-    pub fn throughput(&self, horizon: Time) -> f64 {
-        if horizon <= 0.0 {
-            return 0.0;
+    /// Throughput of completed user requests over the horizon. `None`
+    /// when `horizon` is not a positive finite duration — dividing by
+    /// zero, a negative span or infinity would silently produce `0.0`,
+    /// `inf` or `NaN` and poison downstream arithmetic.
+    pub fn throughput(&self, horizon: Time) -> Option<f64> {
+        if horizon <= 0.0 || !horizon.is_finite() {
+            return None;
         }
-        self.user_records().count() as f64 / horizon
+        Some(self.user_records().count() as f64 / horizon)
     }
 }
 
@@ -232,9 +237,25 @@ mod tests {
         let r = sample();
         // latencies: 10, 20, 15
         assert!((r.mean_latency() - 15.0).abs() < 1e-12);
-        assert!((r.latency_percentile(0.0) - 10.0).abs() < 1e-12);
-        assert!((r.latency_percentile(1.0) - 20.0).abs() < 1e-12);
-        assert!((r.latency_percentile(0.5) - 15.0).abs() < 1e-12);
+        let p = |q: f64| r.latency_percentile(q).unwrap();
+        assert!((p(0.0) - 10.0).abs() < 1e-12);
+        assert!((p(1.0) - 20.0).abs() < 1e-12);
+        assert!((p(0.5) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_counts_user_records_over_positive_horizons_only() {
+        let r = sample();
+        // 3 user records over 30 s.
+        assert_eq!(r.throughput(30.0), Some(0.1));
+        // Degenerate horizons have no throughput, not a misleading 0.0
+        // (or an inf/NaN that would poison downstream arithmetic).
+        assert_eq!(r.throughput(0.0), None);
+        assert_eq!(r.throughput(-5.0), None);
+        assert_eq!(r.throughput(f64::INFINITY), None);
+        assert_eq!(r.throughput(f64::NAN), None);
+        // An empty recorder over a real horizon genuinely served nothing.
+        assert_eq!(Recorder::new().throughput(10.0), Some(0.0));
     }
 
     #[test]
@@ -295,7 +316,8 @@ mod tests {
         let r = Recorder::new();
         assert_eq!(r.slo_attainment(), 0.0);
         assert_eq!(r.mean_latency(), 0.0);
-        assert_eq!(r.latency_percentile(0.5), 0.0);
+        // No records -> no percentile (not a fake 0.0 latency).
+        assert_eq!(r.latency_percentile(0.5), None);
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Span-tree stitching and Chrome trace-event JSON export.
+//!
+//! [`stitch`] groups request-scoped [`SpanEvent`]s (collected from every
+//! node's flight recorder plus the world-level ring) into per-request
+//! [`SpanTree`]s ordered by `(t, node, seq)`. [`chrome_trace_json`]
+//! renders trees + node-scoped events in the Chrome trace-event format
+//! (load the file in `chrome://tracing` or <https://ui.perfetto.dev>):
+//! each node becomes a process row, spans become instant events, and
+//! matched `execute_start`/`execute_end` pairs become duration slices.
+
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BTreeSet};
+use std::io;
+
+use super::{SpanEvent, SpanKind, TraceId};
+use crate::types::{RequestId, Time};
+use crate::util::json::Json;
+
+/// All recorded hops of one request, in causal `(t, node, seq)` order.
+#[derive(Debug, Clone)]
+pub struct SpanTree {
+    pub trace: TraceId,
+    pub req: RequestId,
+    pub spans: Vec<SpanEvent>,
+}
+
+impl SpanTree {
+    /// The span kinds in order — convenient for hop-chain assertions.
+    pub fn kinds(&self) -> Vec<SpanKind> {
+        self.spans.iter().map(|s| s.kind).collect()
+    }
+}
+
+/// Group request-scoped events into per-request trees. Node-scoped
+/// events (`req: None`) are skipped — export them separately. Trees come
+/// back ordered by request id; spans within a tree are ordered by time,
+/// breaking ties by node then intra-node sequence (recorder sequences
+/// are monotone per node, so same-node same-time spans keep their
+/// emission order).
+pub fn stitch(events: Vec<SpanEvent>) -> Vec<SpanTree> {
+    let mut by_req: BTreeMap<RequestId, Vec<SpanEvent>> = BTreeMap::new();
+    for e in events {
+        if let Some(req) = e.req {
+            by_req.entry(req).or_default().push(e);
+        }
+    }
+    by_req
+        .into_iter()
+        .map(|(req, mut spans)| {
+            spans.sort_by(|a, b| {
+                a.t.partial_cmp(&b.t)
+                    .unwrap_or(Ordering::Equal)
+                    .then(a.node.0.cmp(&b.node.0))
+                    .then(a.seq.cmp(&b.seq))
+            });
+            SpanTree { trace: spans[0].trace, req, spans }
+        })
+        .collect()
+}
+
+fn us(t: Time) -> Json {
+    Json::num(t * 1e6)
+}
+
+fn instant_event(e: &SpanEvent) -> Json {
+    let mut args = vec![("detail", Json::num(e.detail as f64))];
+    match e.req {
+        Some(req) => {
+            args.push(("req", Json::str(&format!("{req}"))));
+            args.push(("trace", Json::str(&format!("{:016x}", e.trace.0))));
+        }
+        None => args.push(("req", Json::Null)),
+    }
+    match e.peer {
+        Some(p) => args.push(("peer", Json::str(&format!("{p}")))),
+        None => args.push(("peer", Json::Null)),
+    }
+    Json::obj(vec![
+        ("name", Json::str(e.kind.name())),
+        ("ph", Json::str("i")),
+        ("s", Json::str("t")),
+        ("ts", us(e.t)),
+        ("pid", Json::num(e.node.0 as f64)),
+        ("tid", Json::num(e.node.0 as f64)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+fn complete_event(start: &SpanEvent, end_t: Time) -> Json {
+    let req = start.req.expect("complete events are request-scoped");
+    Json::obj(vec![
+        ("name", Json::str("execute")),
+        ("ph", Json::str("X")),
+        ("ts", us(start.t)),
+        ("dur", us(end_t - start.t)),
+        ("pid", Json::num(start.node.0 as f64)),
+        ("tid", Json::num(start.node.0 as f64)),
+        (
+            "args",
+            Json::obj(vec![
+                ("req", Json::str(&format!("{req}"))),
+                ("trace", Json::str(&format!("{:016x}", start.trace.0))),
+            ]),
+        ),
+    ])
+}
+
+/// Render span trees plus node-scoped events as a Chrome trace-event
+/// JSON document (`{"traceEvents": [...], "displayTimeUnit": "ms"}`).
+pub fn chrome_trace_json(trees: &[SpanTree], node_events: &[SpanEvent]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    let mut pids: BTreeSet<u32> = BTreeSet::new();
+    for tree in trees {
+        // Pair execute_start/execute_end per node into duration slices.
+        let mut starts: BTreeMap<u32, SpanEvent> = BTreeMap::new();
+        for span in &tree.spans {
+            pids.insert(span.node.0);
+            events.push(instant_event(span));
+            match span.kind {
+                SpanKind::ExecuteStart => {
+                    starts.insert(span.node.0, span.clone());
+                }
+                SpanKind::ExecuteEnd => {
+                    if let Some(start) = starts.remove(&span.node.0) {
+                        events.push(complete_event(&start, span.t));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    for e in node_events {
+        pids.insert(e.node.0);
+        events.push(instant_event(e));
+    }
+    for pid in pids {
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as f64)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::str(&format!("node n{pid}")))]),
+            ),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Write a Chrome trace-event file for the given trees + node events.
+pub fn write_chrome_trace(
+    path: &str,
+    trees: &[SpanTree],
+    node_events: &[SpanEvent],
+) -> io::Result<()> {
+    let doc = chrome_trace_json(trees, node_events);
+    std::fs::write(path, format!("{doc}\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::NodeId;
+
+    fn rid(origin: u32, seq: u64) -> RequestId {
+        RequestId { origin: NodeId(origin), seq }
+    }
+
+    fn ev(
+        req: Option<RequestId>,
+        kind: SpanKind,
+        node: u32,
+        t: Time,
+        seq: u64,
+    ) -> SpanEvent {
+        SpanEvent {
+            trace: req.map_or(TraceId(0), TraceId::from_request),
+            req,
+            kind,
+            node: NodeId(node),
+            peer: None,
+            t,
+            detail: 0,
+            seq,
+        }
+    }
+
+    #[test]
+    fn stitch_groups_by_request_and_orders_spans() {
+        let a = rid(0, 1);
+        let b = rid(1, 1);
+        let events = vec![
+            ev(Some(a), SpanKind::ExecuteEnd, 1, 5.0, 2),
+            ev(Some(b), SpanKind::Admit, 1, 0.5, 1),
+            ev(Some(a), SpanKind::Admit, 0, 1.0, 1),
+            ev(Some(a), SpanKind::ProbeSent, 0, 1.0, 2),
+            ev(Some(a), SpanKind::Queue, 1, 2.0, 1),
+            ev(None, SpanKind::GossipRound, 0, 0.0, 3),
+        ];
+        let trees = stitch(events);
+        assert_eq!(trees.len(), 2);
+        // BTreeMap order: origin 0 before origin 1.
+        assert_eq!(trees[0].req, a);
+        assert_eq!(
+            trees[0].kinds(),
+            vec![
+                SpanKind::Admit,
+                SpanKind::ProbeSent,
+                SpanKind::Queue,
+                SpanKind::ExecuteEnd
+            ]
+        );
+        assert_eq!(trees[1].req, b);
+        assert_eq!(trees[0].trace, TraceId::from_request(a));
+    }
+
+    #[test]
+    fn chrome_trace_pairs_execute_slices_and_names_processes() {
+        let a = rid(0, 1);
+        let trees = stitch(vec![
+            ev(Some(a), SpanKind::Admit, 0, 1.0, 1),
+            ev(Some(a), SpanKind::ExecuteStart, 1, 2.0, 1),
+            ev(Some(a), SpanKind::ExecuteEnd, 1, 4.5, 2),
+        ]);
+        let node_events = vec![ev(None, SpanKind::GossipRound, 0, 0.5, 9)];
+        let doc = chrome_trace_json(&trees, &node_events);
+        let evs = doc.get("traceEvents").as_arr().expect("traceEvents array");
+        // 3 instants + 1 X slice + 1 node instant + 2 process_name metas.
+        assert_eq!(evs.len(), 7);
+        let slice = evs
+            .iter()
+            .find(|e| e.get("ph").as_str() == Some("X"))
+            .expect("one complete event");
+        assert_eq!(slice.get("name").as_str(), Some("execute"));
+        assert_eq!(slice.get("ts").as_f64(), Some(2.0 * 1e6));
+        assert_eq!(slice.get("dur").as_f64(), Some(2.5 * 1e6));
+        assert_eq!(slice.get("pid").as_f64(), Some(1.0));
+        let metas: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("M"))
+            .collect();
+        assert_eq!(metas.len(), 2);
+        // Round-trips through the parser.
+        let parsed = Json::parse(&format!("{doc}")).expect("valid JSON");
+        assert_eq!(
+            parsed.get("traceEvents").as_arr().map(|a| a.len()),
+            Some(7)
+        );
+        assert_eq!(parsed.get("displayTimeUnit").as_str(), Some("ms"));
+    }
+
+    #[test]
+    fn unmatched_execute_end_emits_no_slice() {
+        let a = rid(0, 2);
+        let trees = stitch(vec![ev(Some(a), SpanKind::ExecuteEnd, 1, 4.5, 1)]);
+        let doc = chrome_trace_json(&trees, &[]);
+        let evs = doc.get("traceEvents").as_arr().unwrap();
+        assert!(evs.iter().all(|e| e.get("ph").as_str() != Some("X")));
+    }
+}

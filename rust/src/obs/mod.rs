@@ -1,0 +1,731 @@
+//! Observability: causal request traces + a unified per-node metrics
+//! registry, exported as a "flight recorder".
+//!
+//! Two halves:
+//!
+//! * **Causal request traces.** Every request carries a [`TraceId`]
+//!   derived from its [`RequestId`] (a splitmix64 hash — no wall clock,
+//!   no RNG, so traces replay bit-identically from the seed). The
+//!   coordinator layers and the sim core emit typed [`SpanEvent`]s into a
+//!   per-node bounded ring buffer ([`FlightRecorder`]); `sim::World`
+//!   stitches the rings into per-request span trees ([`export::stitch`])
+//!   and exports Chrome trace-event JSON ([`export::chrome_trace_json`]).
+//!
+//! * **A [`MetricsRegistry`]** of interned-key counters / gauges /
+//!   histograms with per-node / per-region labels, sampled into bounded
+//!   windowed time series. The `World` mirrors its ad-hoc counter fields
+//!   (`events_processed`, `gossip_bytes_sent`, `messages_dropped`,
+//!   `dispatch_sends`, `scale_events`, `capacity_credits_charged`, ...)
+//!   into registry entries each sampling round — the registry is the
+//!   *labeled, windowed view* of those counters (the public fields stay
+//!   the hot-path source of truth so existing tests and benches keep
+//!   reading them directly). JSON export lives in `metrics/export.rs`.
+//!
+//! ## Span taxonomy
+//!
+//! Request-scoped spans (carry the request's [`TraceId`], subject to
+//! `sample_rate`):
+//!
+//! | kind             | emitted by                 | meaning                               |
+//! |------------------|----------------------------|---------------------------------------|
+//! | `admit`          | `dispatch::on_user_request`| request entered the origin node       |
+//! | `probe_sent`     | `dispatch::try_delegate`   | PoS probe sent to a candidate         |
+//! | `probe_acked`    | `dispatch::on_probe_accept`| candidate accepted the probe          |
+//! | `probe_rejected` | `dispatch::on_probe_reject`| candidate declined (retry or fallback)|
+//! | `delegate`       | `dispatch` / `duel`        | request shipped to an executor        |
+//! | `queue`          | `dispatch::on_delegate`    | executor admitted the delegated work  |
+//! | `execute_start`  | `ctx::execute_locally`     | submitted to the serving backend      |
+//! | `execute_end`    | backend pump / completion  | backend finished generating           |
+//! | `timeout`        | `dispatch::expire`         | probe/response deadline expired       |
+//! | `duel_settle`    | `duel::on_judge_verdict`   | judge quorum settled a duel           |
+//! | `settle`         | `dispatch::on_response`    | origin paid and recorded the result   |
+//!
+//! Node-scoped spans (no request; gated only on `enabled`):
+//!
+//! | kind           | emitted by                  | `detail`                    |
+//! |----------------|-----------------------------|-----------------------------|
+//! | `gossip_round` | `gossip_driver::tick`       | round number                |
+//! | `rtt_observed` | `latency_feed`              | RTT in microseconds         |
+//! | `scale`        | `World::eval_capacity`      | [`CapacityAction`] detail   |
+//!
+//! [`CapacityAction`]: crate::capacity::CapacityAction
+//!
+//! ## Ring-buffer semantics
+//!
+//! Each recorder keeps at most `ring_capacity` spans; at capacity the
+//! oldest span is evicted and `dropped()` counts it — a long run keeps
+//! the *most recent* window, which is what post-mortem debugging wants.
+//! Eviction is per-node and purely size-driven, so it is deterministic.
+//! The `slo_misses_only` config flag filters at *stitch/export* time
+//! (rings stay append-only): only traces whose request missed its SLO —
+//! or never completed — survive into the export.
+//!
+//! ## Opening a trace
+//!
+//! `World::write_trace("TRACE.json")` writes Chrome trace-event JSON.
+//! Open `chrome://tracing` (or <https://ui.perfetto.dev>) and load the
+//! file: each node renders as a process row, request spans as instant
+//! events, and matched `execute_start`/`execute_end` pairs as duration
+//! slices. The `args` panel carries the request id, peer and trace id.
+//!
+//! ## Determinism contract
+//!
+//! Nothing in this module draws randomness or reads a clock: trace ids
+//! hash the request id, sampling compares that hash against
+//! `sample_rate`, and all buffers are bounded by plain counters. With
+//! `enabled: false` every emission point is a no-op behind a branch and
+//! existing replay fingerprints are bit-identical
+//! (`rust/tests/replay_equivalence.rs`); with `enabled: true` recording
+//! is purely observational — no queue events, no RNG draws — so the
+//! fingerprints *still* match.
+
+pub mod export;
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::types::{NodeId, RequestId, Time};
+
+/// Declarative `observability` config block knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObservabilityConfig {
+    /// Master switch. `false` (the default) pins every emission point to
+    /// a no-op and replays pre-observability traces byte for byte.
+    pub enabled: bool,
+    /// Fraction of requests traced, decided by a deterministic hash of
+    /// the request id (never the node RNG — sampling must not shift the
+    /// replay stream). 1.0 traces everything, 0.0 nothing.
+    pub sample_rate: f64,
+    /// Per-ring span capacity (oldest spans evicted beyond it).
+    pub ring_capacity: usize,
+    /// Export-time filter: keep full span trees only for requests that
+    /// violated their SLO (or never completed).
+    pub slo_misses_only: bool,
+}
+
+impl Default for ObservabilityConfig {
+    fn default() -> Self {
+        ObservabilityConfig {
+            enabled: false,
+            sample_rate: 1.0,
+            ring_capacity: 4096,
+            slo_misses_only: false,
+        }
+    }
+}
+
+impl ObservabilityConfig {
+    /// Validate, returning a descriptive error (the config-parser path).
+    pub fn check(&self) -> Result<(), String> {
+        if !self.sample_rate.is_finite()
+            || !(0.0..=1.0).contains(&self.sample_rate)
+        {
+            return Err(format!(
+                "sample_rate must be a finite fraction in [0, 1], got {}",
+                self.sample_rate
+            ));
+        }
+        if self.ring_capacity == 0 {
+            return Err("ring_capacity must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Panicking twin of [`check`](Self::check) for programmatic configs.
+    pub fn validate(&self) {
+        if let Err(e) = self.check() {
+            panic!("ObservabilityConfig: {e}");
+        }
+    }
+}
+
+/// Stable causal-trace identity: a deterministic hash of the request id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// Derive the trace id from a request id (splitmix64 finalizer — the
+    /// same request always yields the same trace, run after run).
+    pub fn from_request(id: RequestId) -> TraceId {
+        let seed = (id.origin.0 as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ id.seq;
+        let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        TraceId(z ^ (z >> 31))
+    }
+
+    /// Map the id's hash onto [0, 1) for sample-rate comparison.
+    fn unit_fraction(self) -> f64 {
+        (self.0 >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// The typed span vocabulary (see the module header's taxonomy table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Admit,
+    ProbeSent,
+    ProbeAcked,
+    ProbeRejected,
+    Delegate,
+    Queue,
+    ExecuteStart,
+    ExecuteEnd,
+    Timeout,
+    DuelSettle,
+    Settle,
+    Scale,
+    GossipRound,
+    RttObserved,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::ProbeSent => "probe_sent",
+            SpanKind::ProbeAcked => "probe_acked",
+            SpanKind::ProbeRejected => "probe_rejected",
+            SpanKind::Delegate => "delegate",
+            SpanKind::Queue => "queue",
+            SpanKind::ExecuteStart => "execute_start",
+            SpanKind::ExecuteEnd => "execute_end",
+            SpanKind::Timeout => "timeout",
+            SpanKind::DuelSettle => "duel_settle",
+            SpanKind::Settle => "settle",
+            SpanKind::Scale => "scale",
+            SpanKind::GossipRound => "gossip_round",
+            SpanKind::RttObserved => "rtt_observed",
+        }
+    }
+}
+
+/// One recorded hop of a request's journey (or a node-scoped event).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    /// Causal trace this span belongs to (`TraceId(0)` for node spans).
+    pub trace: TraceId,
+    /// The request, when request-scoped; `None` for node-scoped spans.
+    pub req: Option<RequestId>,
+    pub kind: SpanKind,
+    /// Node that emitted the span.
+    pub node: NodeId,
+    /// Counterparty, when the hop has one (probe target, executor, ...).
+    pub peer: Option<NodeId>,
+    /// Virtual emission time.
+    pub t: Time,
+    /// Kind-specific payload (gossip round, RTT µs, scale detail, ...).
+    pub detail: u64,
+    /// Per-recorder monotone sequence — stable intra-node ordering for
+    /// same-timestamp spans.
+    pub seq: u64,
+}
+
+/// Per-node bounded span ring ("flight recorder"). All emission methods
+/// are no-ops unless enabled, and request-scoped emission additionally
+/// respects the deterministic sample decision.
+#[derive(Debug, Default)]
+pub struct FlightRecorder {
+    cfg: ObservabilityConfig,
+    buf: VecDeque<SpanEvent>,
+    seq: u64,
+    dropped: u64,
+}
+
+impl FlightRecorder {
+    /// The inert recorder every node starts with (`enabled: false`).
+    pub fn disabled() -> Self {
+        FlightRecorder {
+            cfg: ObservabilityConfig::default(),
+            buf: VecDeque::new(),
+            seq: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn new(cfg: ObservabilityConfig) -> Self {
+        cfg.validate();
+        let cap = if cfg.enabled { cfg.ring_capacity.min(1 << 20) } else { 0 };
+        FlightRecorder {
+            cfg,
+            buf: VecDeque::with_capacity(cap),
+            seq: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    pub fn config(&self) -> &ObservabilityConfig {
+        &self.cfg
+    }
+
+    /// Deterministic sample decision for a request: enabled, and the
+    /// request-id hash falls under `sample_rate`. Never consults an RNG.
+    pub fn sampled(&self, req: RequestId) -> bool {
+        self.cfg.enabled
+            && TraceId::from_request(req).unit_fraction() < self.cfg.sample_rate
+    }
+
+    /// Emit a request-scoped span (no-op unless the request is sampled).
+    pub fn span(
+        &mut self,
+        req: RequestId,
+        kind: SpanKind,
+        node: NodeId,
+        peer: Option<NodeId>,
+        t: Time,
+        detail: u64,
+    ) {
+        if !self.sampled(req) {
+            return;
+        }
+        let trace = TraceId::from_request(req);
+        self.push(SpanEvent {
+            trace,
+            req: Some(req),
+            kind,
+            node,
+            peer,
+            t,
+            detail,
+            seq: 0,
+        });
+    }
+
+    /// Emit a node-scoped span (gossip round, RTT sample, scale action) —
+    /// gated on `enabled` only, not on per-request sampling.
+    pub fn node_span(
+        &mut self,
+        kind: SpanKind,
+        node: NodeId,
+        peer: Option<NodeId>,
+        t: Time,
+        detail: u64,
+    ) {
+        if !self.cfg.enabled {
+            return;
+        }
+        self.push(SpanEvent {
+            trace: TraceId(0),
+            req: None,
+            kind,
+            node,
+            peer,
+            t,
+            detail,
+            seq: 0,
+        });
+    }
+
+    fn push(&mut self, mut ev: SpanEvent) {
+        self.seq += 1;
+        ev.seq = self.seq;
+        if self.buf.len() >= self.cfg.ring_capacity {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    pub fn events(&self) -> impl Iterator<Item = &SpanEvent> {
+        self.buf.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Spans evicted by the ring bound so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics registry
+// ---------------------------------------------------------------------------
+
+/// Interned handle into a [`MetricsRegistry`] — resolve labels once,
+/// update through the id on the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricId(usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone total (`set` overwrites with the mirrored counter value).
+    Counter,
+    /// Point-in-time level.
+    Gauge,
+    /// Log2-bucketed distribution over µ-unit magnitudes.
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Windowed-series length bound: at capacity the series halves (every
+/// other point kept), so memory stays bounded while the full run's shape
+/// survives at coarser resolution. Deterministic — no time-based pruning.
+pub const SERIES_CAP: usize = 512;
+
+/// One registered metric: identity, current value, optional histogram
+/// buckets, and the sampled time series.
+#[derive(Debug, Clone)]
+pub struct Metric {
+    pub name: String,
+    /// Sorted-insertion label pairs, e.g. `[("region", "us")]`.
+    pub labels: Vec<(String, String)>,
+    pub kind: MetricKind,
+    /// Counter/gauge current value; histogram: sum of observations.
+    pub value: f64,
+    /// Histogram observation count (0 for counters/gauges).
+    pub count: u64,
+    /// Histogram log2 buckets over `(v * 1e6) as u64` magnitudes;
+    /// `buckets[i]` counts observations with `floor(log2(µv)) == i`.
+    pub buckets: Vec<u64>,
+    /// `(t, value)` samples pushed by [`MetricsRegistry::sample`].
+    pub series: Vec<(Time, f64)>,
+}
+
+/// Interned-key registry of counters, gauges and histograms.
+///
+/// Keys are `(name, labels)`; registering the same key twice returns the
+/// original [`MetricId`]. `BTreeMap` interning keeps iteration (and thus
+/// JSON export) deterministically ordered.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    index: BTreeMap<(String, Vec<(String, String)>), MetricId>,
+    metrics: Vec<Metric>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern `(name, labels)` as a metric of `kind`, returning its id.
+    /// An existing key returns the already-registered id (the kind must
+    /// match — mixing kinds under one key is a programming error).
+    pub fn register(
+        &mut self,
+        kind: MetricKind,
+        name: &str,
+        labels: &[(&str, &str)],
+    ) -> MetricId {
+        let key = (
+            name.to_string(),
+            labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect::<Vec<_>>(),
+        );
+        if let Some(&id) = self.index.get(&key) {
+            assert_eq!(
+                self.metrics[id.0].kind, kind,
+                "metric '{name}' re-registered with a different kind"
+            );
+            return id;
+        }
+        let id = MetricId(self.metrics.len());
+        self.metrics.push(Metric {
+            name: key.0.clone(),
+            labels: key.1.clone(),
+            kind,
+            value: 0.0,
+            count: 0,
+            buckets: Vec::new(),
+            series: Vec::new(),
+        });
+        self.index.insert(key, id);
+        id
+    }
+
+    pub fn counter(&mut self, name: &str, labels: &[(&str, &str)]) -> MetricId {
+        self.register(MetricKind::Counter, name, labels)
+    }
+
+    pub fn gauge(&mut self, name: &str, labels: &[(&str, &str)]) -> MetricId {
+        self.register(MetricKind::Gauge, name, labels)
+    }
+
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+    ) -> MetricId {
+        self.register(MetricKind::Histogram, name, labels)
+    }
+
+    /// Overwrite a counter/gauge's current value (the mirroring path:
+    /// `World` counters are already monotone, so `set` is the counter
+    /// update too).
+    pub fn set(&mut self, id: MetricId, v: f64) {
+        self.metrics[id.0].value = v;
+    }
+
+    /// Increment a counter/gauge.
+    pub fn add(&mut self, id: MetricId, dv: f64) {
+        self.metrics[id.0].value += dv;
+    }
+
+    /// Record one histogram observation (`v` is clamped at 0).
+    pub fn observe(&mut self, id: MetricId, v: f64) {
+        let m = &mut self.metrics[id.0];
+        debug_assert_eq!(m.kind, MetricKind::Histogram);
+        let v = v.max(0.0);
+        m.value += v;
+        m.count += 1;
+        let micro = (v * 1e6) as u64;
+        let bucket = (64 - micro.max(1).leading_zeros() as usize) - 1;
+        if m.buckets.len() <= bucket {
+            m.buckets.resize(bucket + 1, 0);
+        }
+        m.buckets[bucket] += 1;
+    }
+
+    /// Push the metric's current value onto its windowed series (halving
+    /// the series when it reaches [`SERIES_CAP`]). A repeat sample at an
+    /// unchanged timestamp is skipped — end-of-run flushes are idempotent.
+    pub fn sample(&mut self, id: MetricId, t: Time) {
+        let m = &mut self.metrics[id.0];
+        if m.series.last().is_some_and(|(lt, _)| *lt == t) {
+            return;
+        }
+        if m.series.len() >= SERIES_CAP {
+            let halved: Vec<(Time, f64)> =
+                m.series.iter().step_by(2).copied().collect();
+            m.series = halved;
+        }
+        m.series.push((t, m.value));
+    }
+
+    /// Sample every registered metric at `t`.
+    pub fn sample_all(&mut self, t: Time) {
+        for id in 0..self.metrics.len() {
+            self.sample(MetricId(id), t);
+        }
+    }
+
+    /// Look up a metric by name + exact label set.
+    pub fn get(&self, name: &str, labels: &[(&str, &str)]) -> Option<&Metric> {
+        let key = (
+            name.to_string(),
+            labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect::<Vec<_>>(),
+        );
+        self.index.get(&key).map(|id| &self.metrics[id.0])
+    }
+
+    pub fn metric(&self, id: MetricId) -> &Metric {
+        &self.metrics[id.0]
+    }
+
+    /// All metrics in registration order.
+    pub fn all(&self) -> &[Metric] {
+        &self.metrics
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rid(origin: u32, seq: u64) -> RequestId {
+        RequestId { origin: NodeId(origin), seq }
+    }
+
+    fn enabled_cfg(cap: usize) -> ObservabilityConfig {
+        ObservabilityConfig {
+            enabled: true,
+            ring_capacity: cap,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn trace_ids_are_deterministic_and_distinct() {
+        assert_eq!(
+            TraceId::from_request(rid(2, 17)),
+            TraceId::from_request(rid(2, 17))
+        );
+        assert_ne!(
+            TraceId::from_request(rid(2, 17)),
+            TraceId::from_request(rid(2, 18))
+        );
+        assert_ne!(
+            TraceId::from_request(rid(2, 17)),
+            TraceId::from_request(rid(3, 17))
+        );
+    }
+
+    #[test]
+    fn sampling_is_a_pure_function_of_the_request_id() {
+        let cfg = ObservabilityConfig {
+            enabled: true,
+            sample_rate: 0.5,
+            ..Default::default()
+        };
+        let fr = FlightRecorder::new(cfg);
+        let first: Vec<bool> = (0..200).map(|s| fr.sampled(rid(1, s))).collect();
+        let again: Vec<bool> = (0..200).map(|s| fr.sampled(rid(1, s))).collect();
+        assert_eq!(first, again);
+        let kept = first.iter().filter(|k| **k).count();
+        assert!(
+            (40..160).contains(&kept),
+            "rate 0.5 kept {kept}/200 — hash badly skewed"
+        );
+        // Rate 1.0 keeps everything, 0.0 nothing; disabled keeps nothing.
+        let all = FlightRecorder::new(enabled_cfg(16));
+        assert!((0..50).all(|s| all.sampled(rid(0, s))));
+        let none = FlightRecorder::new(ObservabilityConfig {
+            enabled: true,
+            sample_rate: 0.0,
+            ..Default::default()
+        });
+        assert!((0..50).all(|s| !none.sampled(rid(0, s))));
+        assert!(!FlightRecorder::disabled().sampled(rid(0, 1)));
+    }
+
+    #[test]
+    fn ring_keeps_the_most_recent_window() {
+        let mut fr = FlightRecorder::new(enabled_cfg(4));
+        for s in 0..10u64 {
+            fr.span(rid(0, s), SpanKind::Admit, NodeId(0), None, s as f64, 0);
+        }
+        assert_eq!(fr.len(), 4);
+        assert_eq!(fr.dropped(), 6);
+        let seqs: Vec<u64> =
+            fr.events().map(|e| e.req.unwrap().seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        // Intra-node sequence is monotone.
+        let evs: Vec<u64> = fr.events().map(|e| e.seq).collect();
+        assert!(evs.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut fr = FlightRecorder::disabled();
+        fr.span(rid(0, 1), SpanKind::Admit, NodeId(0), None, 1.0, 0);
+        fr.node_span(SpanKind::GossipRound, NodeId(0), None, 1.0, 3);
+        assert!(fr.is_empty());
+        assert_eq!(fr.dropped(), 0);
+    }
+
+    #[test]
+    fn node_spans_skip_request_sampling() {
+        let mut fr = FlightRecorder::new(ObservabilityConfig {
+            enabled: true,
+            sample_rate: 0.0,
+            ..Default::default()
+        });
+        fr.span(rid(0, 1), SpanKind::Admit, NodeId(0), None, 1.0, 0);
+        fr.node_span(SpanKind::GossipRound, NodeId(0), None, 1.0, 7);
+        assert_eq!(fr.len(), 1);
+        let ev = fr.events().next().unwrap();
+        assert_eq!(ev.kind, SpanKind::GossipRound);
+        assert_eq!(ev.req, None);
+        assert_eq!(ev.detail, 7);
+    }
+
+    #[test]
+    fn config_check_rejects_bad_knobs() {
+        let ok = ObservabilityConfig::default();
+        assert!(ok.check().is_ok());
+        let bad_rate = |r: f64| ObservabilityConfig {
+            sample_rate: r,
+            ..Default::default()
+        };
+        assert!(bad_rate(-0.1).check().is_err());
+        assert!(bad_rate(1.5).check().is_err());
+        assert!(bad_rate(f64::NAN).check().is_err());
+        let zero_ring = ObservabilityConfig {
+            ring_capacity: 0,
+            ..Default::default()
+        };
+        assert!(zero_ring.check().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "sample_rate")]
+    fn validate_panics_on_bad_rate() {
+        ObservabilityConfig { sample_rate: 2.0, ..Default::default() }
+            .validate();
+    }
+
+    #[test]
+    fn registry_interns_by_name_and_labels() {
+        let mut reg = MetricsRegistry::new();
+        let a = reg.counter("msgs", &[("region", "us")]);
+        let b = reg.counter("msgs", &[("region", "eu")]);
+        let a2 = reg.counter("msgs", &[("region", "us")]);
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(reg.len(), 2);
+        reg.set(a, 5.0);
+        reg.add(a, 2.0);
+        assert_eq!(reg.get("msgs", &[("region", "us")]).unwrap().value, 7.0);
+        assert_eq!(reg.get("msgs", &[("region", "eu")]).unwrap().value, 0.0);
+        assert!(reg.get("msgs", &[]).is_none());
+    }
+
+    #[test]
+    fn histogram_buckets_and_sums() {
+        let mut reg = MetricsRegistry::new();
+        let h = reg.histogram("latency_s", &[]);
+        reg.observe(h, 0.5);
+        reg.observe(h, 0.5);
+        reg.observe(h, 4.0);
+        let m = reg.get("latency_s", &[]).unwrap();
+        assert_eq!(m.count, 3);
+        assert!((m.value - 5.0).abs() < 1e-12);
+        assert_eq!(m.buckets.iter().sum::<u64>(), 3);
+        // 0.5 s -> 500_000 µ -> bucket 18; 4 s -> 4_000_000 µ -> bucket 21.
+        assert_eq!(m.buckets[18], 2);
+        assert_eq!(m.buckets[21], 1);
+    }
+
+    #[test]
+    fn series_halves_at_capacity_and_dedupes_timestamps() {
+        let mut reg = MetricsRegistry::new();
+        let g = reg.gauge("depth", &[]);
+        for i in 0..SERIES_CAP {
+            reg.set(g, i as f64);
+            reg.sample(g, i as f64);
+        }
+        assert_eq!(reg.metric(g).series.len(), SERIES_CAP);
+        // The next sample triggers a halve, then appends.
+        reg.set(g, 999.0);
+        reg.sample(g, 1e6);
+        let m = reg.metric(g);
+        assert_eq!(m.series.len(), SERIES_CAP / 2 + 1);
+        assert_eq!(*m.series.last().unwrap(), (1e6, 999.0));
+        // Same-timestamp resample is a no-op.
+        reg.sample(g, 1e6);
+        assert_eq!(reg.metric(g).series.len(), SERIES_CAP / 2 + 1);
+    }
+}

@@ -43,7 +43,7 @@ fn summarize(
         slo_attainment: rec.slo_attainment(),
         slo_curve: rec.slo_curve(&SLO_SCALES),
         mean_latency: rec.mean_latency(),
-        p99_latency: rec.latency_percentile(0.99),
+        p99_latency: rec.latency_percentile(0.99).unwrap_or(0.0),
     }
 }
 

@@ -22,6 +22,10 @@ use crate::gossip::GossipConfig;
 use crate::latency::LatencyConfig;
 use crate::ledger::{Block, CreditOp, OpReason, SharedLedger};
 use crate::metrics::{Recorder, TimeSeries};
+use crate::obs::{
+    export, FlightRecorder, MetricId, MetricsRegistry, ObservabilityConfig,
+    SpanEvent, SpanKind,
+};
 use crate::policy::{NodePolicy, ParticipationKind, SystemPolicy};
 use crate::topology::Topology;
 use crate::types::{NodeId, Time};
@@ -72,6 +76,12 @@ pub struct WorldConfig {
     /// trace of a capacity-free world untouched bit for bit
     /// (`rust/tests/replay_equivalence.rs`).
     pub capacity: Vec<CapacityGroupSpec>,
+    /// Causal request tracing + metrics-registry sampling (see
+    /// [`crate::obs`]). Disabled by default, which replays
+    /// pre-observability event traces byte for byte; enabling it is
+    /// purely observational (no queue events, no RNG draws), so replay
+    /// fingerprints still match.
+    pub observability: ObservabilityConfig,
 }
 
 impl Default for WorldConfig {
@@ -88,6 +98,7 @@ impl Default for WorldConfig {
             credit_sample_interval: 5.0,
             churn: Vec::new(),
             capacity: Vec::new(),
+            observability: ObservabilityConfig::default(),
         }
     }
 }
@@ -124,6 +135,7 @@ impl WorldConfig {
         for spec in &self.capacity {
             spec.cfg.validate();
         }
+        self.observability.validate();
     }
 }
 
@@ -219,6 +231,33 @@ impl Ord for Queued {
     }
 }
 
+/// Virtual-time cadence of the metrics-registry sampling rounds inside
+/// `run_until` (piggybacked on event processing — no queue entries of
+/// its own, so the replay stream is untouched).
+const OBS_SAMPLE_INTERVAL: Time = 5.0;
+
+/// Pre-interned [`MetricsRegistry`] handles for the counters `run_until`
+/// mirrors each sampling round — labels resolve once at construction,
+/// the loop updates by id.
+struct ObsMetricIds {
+    events_processed: MetricId,
+    messages_sent: MetricId,
+    bytes_sent: MetricId,
+    gossip_messages_sent: MetricId,
+    gossip_bytes_sent: MetricId,
+    messages_dropped: MetricId,
+    scale_events: MetricId,
+    capacity_credits_charged: MetricId,
+    requests_completed: MetricId,
+    /// Probe + Delegate sends per (origin, destination) region pair,
+    /// row-major — the labeled mirror of `World::dispatch_matrix`.
+    dispatch_sends: Vec<MetricId>,
+    /// Per-origin-region completion-latency histograms.
+    region_latency: Vec<MetricId>,
+    /// Per-node availability gauges (1 online, 0 offline).
+    node_online: Vec<MetricId>,
+}
+
 /// The simulated network.
 pub struct World {
     pub cfg: WorldConfig,
@@ -269,6 +308,20 @@ pub struct World {
     /// (`OpReason::CapacityHold`) across all groups — charges clamp to
     /// each replica's liquid balance, and only the clamped amount counts.
     pub capacity_credits_charged: u64,
+    /// World-level flight recorder: `scale` spans for capacity actions
+    /// the sim core applies on the controllers' behalf (per-node request
+    /// spans live on each node's own recorder).
+    obs: FlightRecorder,
+    /// Unified labeled metrics registry mirroring the public counter
+    /// fields above, sampled every [`OBS_SAMPLE_INTERVAL`] virtual
+    /// seconds inside `run_until`. Empty while observability is off.
+    registry: MetricsRegistry,
+    obs_ids: Option<ObsMetricIds>,
+    /// Virtual time of the last registry sampling round.
+    obs_last_sample: Time,
+    /// Recorder cursor: completions already folded into the per-region
+    /// latency histograms.
+    obs_seen_records: usize,
 }
 
 impl World {
@@ -363,6 +416,11 @@ impl World {
                     cfg.latency_estimation,
                 );
             }
+            // Arm the per-node flight recorder. Construction-time and
+            // purely observational, so the replay stream is untouched.
+            if cfg.observability.enabled {
+                node.set_observability(cfg.observability);
+            }
             // Bootstrap membership: everyone knows everyone's address (and
             // home region); the initially-offline are seeded as offline
             // (they gossip alive when they join — Fig. 5a).
@@ -418,6 +476,53 @@ impl World {
             .iter()
             .map(|node| if node.online { Some(0.0) } else { None })
             .collect();
+        // Metrics registry: intern every mirrored counter once, with
+        // per-region / per-node labels, so the run loop updates by id.
+        let (registry, obs_ids) = if cfg.observability.enabled {
+            let mut reg = MetricsRegistry::new();
+            let ids = ObsMetricIds {
+                events_processed: reg.counter("events_processed", &[]),
+                messages_sent: reg.counter("messages_sent", &[]),
+                bytes_sent: reg.counter("bytes_sent", &[]),
+                gossip_messages_sent: reg
+                    .counter("gossip_messages_sent", &[]),
+                gossip_bytes_sent: reg.counter("gossip_bytes_sent", &[]),
+                messages_dropped: reg.counter("messages_dropped", &[]),
+                scale_events: reg.counter("scale_events", &[]),
+                capacity_credits_charged: reg
+                    .counter("capacity_credits_charged", &[]),
+                requests_completed: reg.counter("requests_completed", &[]),
+                dispatch_sends: (0..num_regions)
+                    .flat_map(|a| (0..num_regions).map(move |b| (a, b)))
+                    .map(|(a, b)| {
+                        reg.counter(
+                            "dispatch_sends",
+                            &[
+                                ("from", topology.region_name(a)),
+                                ("to", topology.region_name(b)),
+                            ],
+                        )
+                    })
+                    .collect(),
+                region_latency: (0..num_regions)
+                    .map(|r| {
+                        reg.histogram(
+                            "request_latency_s",
+                            &[("region", topology.region_name(r))],
+                        )
+                    })
+                    .collect(),
+                node_online: (0..n)
+                    .map(|i| {
+                        let node = format!("n{i}");
+                        reg.gauge("node_online", &[("node", &node)])
+                    })
+                    .collect(),
+            };
+            (reg, Some(ids))
+        } else {
+            (MetricsRegistry::new(), None)
+        };
         let mut world = World {
             cfg: cfg.clone(),
             nodes,
@@ -444,6 +549,11 @@ impl World {
             online_since,
             scale_events: 0,
             capacity_credits_charged: 0,
+            obs: FlightRecorder::new(cfg.observability),
+            registry,
+            obs_ids,
+            obs_last_sample: 0.0,
+            obs_seen_records: 0,
         };
 
         // Arrival traces.
@@ -577,9 +687,69 @@ impl World {
                     self.push(next, WorldEvent::Capacity(gi));
                 }
             }
+            // Registry sampling piggybacks on event processing instead of
+            // scheduling its own queue entries — enabling observability
+            // must not shift the replay stream by a single event.
+            if self.obs_ids.is_some()
+                && self.now - self.obs_last_sample >= OBS_SAMPLE_INTERVAL
+            {
+                self.sample_registry();
+            }
         }
         self.now = horizon.max(self.now);
+        // End-of-run flush so the final counter values always land in the
+        // series (idempotent: a repeat sample at an unchanged timestamp
+        // is skipped).
+        if self.obs_ids.is_some() {
+            self.sample_registry();
+        }
         self.now
+    }
+
+    /// Mirror the public counter fields into the registry and push one
+    /// windowed sample per metric. Purely observational — no queue
+    /// events, no RNG draws — so replay fingerprints are untouched.
+    fn sample_registry(&mut self) {
+        let Some(ids) = &self.obs_ids else { return };
+        self.registry
+            .set(ids.events_processed, self.events_processed as f64);
+        self.registry.set(ids.messages_sent, self.messages_sent as f64);
+        self.registry.set(ids.bytes_sent, self.bytes_sent as f64);
+        self.registry
+            .set(ids.gossip_messages_sent, self.gossip_messages_sent as f64);
+        self.registry
+            .set(ids.gossip_bytes_sent, self.gossip_bytes_sent as f64);
+        self.registry
+            .set(ids.messages_dropped, self.messages_dropped as f64);
+        self.registry.set(ids.scale_events, self.scale_events as f64);
+        self.registry.set(
+            ids.capacity_credits_charged,
+            self.capacity_credits_charged as f64,
+        );
+        for (i, &id) in ids.dispatch_sends.iter().enumerate() {
+            self.registry.set(id, self.dispatch_matrix[i] as f64);
+        }
+        for (i, &id) in ids.node_online.iter().enumerate() {
+            self.registry.set(id, self.nodes[i].online as u8 as f64);
+        }
+        // Completions recorded since the previous round feed the
+        // per-origin-region latency histograms.
+        let recs = self.recorder.all();
+        let from = self.obs_seen_records.min(recs.len());
+        for rec in &recs[from..] {
+            if rec.synthetic {
+                continue;
+            }
+            let r = self.topology.region_of(rec.origin.0 as usize);
+            self.registry.observe(ids.region_latency[r], rec.latency());
+        }
+        self.obs_seen_records = recs.len();
+        self.registry.set(
+            ids.requests_completed,
+            self.recorder.user_records().count() as f64,
+        );
+        self.registry.sample_all(self.now);
+        self.obs_last_sample = self.now;
     }
 
     /// Node `i` just flipped availability: settle the node-hours interval.
@@ -660,6 +830,22 @@ impl World {
             now,
         );
         for a in actions {
+            // Scale span on the world-level recorder (capacity actions
+            // are applied by the sim core, not by any node), plus a
+            // per-kind labeled counter in the registry.
+            self.obs.node_span(
+                SpanKind::Scale,
+                NodeId(a.node() as u32),
+                None,
+                now,
+                a.detail(),
+            );
+            if self.obs.enabled() {
+                let id = self
+                    .registry
+                    .counter("scale_actions", &[("kind", a.kind_name())]);
+                self.registry.add(id, 1.0);
+            }
             match a {
                 CapacityAction::SetSlots { node, slots } => {
                     self.nodes[node].backend_mut().set_slots(slots, now);
@@ -859,6 +1045,67 @@ impl World {
             .iter()
             .map(|n| n.credits() as f64 / crate::types::CREDIT as f64)
             .collect()
+    }
+
+    // ---- observability ------------------------------------------------------
+
+    /// The unified metrics registry (empty while observability is off).
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    /// Every recorded span event: each node's flight recorder in node
+    /// order, then the world-level ring (capacity `scale` spans).
+    fn all_span_events(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::new();
+        for node in &self.nodes {
+            out.extend(node.flight_recorder().events().cloned());
+        }
+        out.extend(self.obs.events().cloned());
+        out
+    }
+
+    /// Node-scoped span events (gossip rounds, RTT observations, scale
+    /// actions) — everything that is not part of a request's trace.
+    pub fn node_span_events(&self) -> Vec<SpanEvent> {
+        self.all_span_events()
+            .into_iter()
+            .filter(|e| e.req.is_none())
+            .collect()
+    }
+
+    /// Stitch every recorded request-scoped span into per-request trees.
+    /// With `slo_misses_only` set, only traces whose request missed its
+    /// SLO — or never completed at all — survive into the result.
+    pub fn span_trees(&self) -> Vec<export::SpanTree> {
+        let trees = export::stitch(self.all_span_events());
+        if !self.cfg.observability.slo_misses_only {
+            return trees;
+        }
+        let met: std::collections::BTreeMap<_, _> = self
+            .recorder
+            .user_records()
+            .map(|r| (r.id, r.slo_met()))
+            .collect();
+        trees
+            .into_iter()
+            .filter(|t| !met.get(&t.req).copied().unwrap_or(false))
+            .collect()
+    }
+
+    /// The run's Chrome trace-event JSON document (see [`crate::obs`]).
+    pub fn trace_json(&self) -> crate::util::json::Json {
+        export::chrome_trace_json(&self.span_trees(), &self.node_span_events())
+    }
+
+    /// Write the Chrome trace-event file — load it in `chrome://tracing`
+    /// or <https://ui.perfetto.dev>.
+    pub fn write_trace(&self, path: &str) -> std::io::Result<()> {
+        export::write_chrome_trace(
+            path,
+            &self.span_trees(),
+            &self.node_span_events(),
+        )
     }
 }
 
@@ -1106,7 +1353,10 @@ mod tests {
             });
             assert_eq!(row.0, w.topology().region_name(r));
             assert!((row.1 - oracle.slo_attainment()).abs() < 1e-12);
-            assert!((row.2 - oracle.latency_percentile(0.99)).abs() < 1e-12);
+            assert!(
+                (row.2 - oracle.latency_percentile(0.99).unwrap_or(0.0)).abs()
+                    < 1e-12
+            );
             assert_eq!(row.3, oracle.user_records().count());
         }
     }
@@ -1332,5 +1582,115 @@ mod tests {
             },
         }];
         World::new(cfg, setup_uniform(2, 5.0));
+    }
+
+    /// Tracing is purely observational: enabling it changes no event,
+    /// message, credit, or RNG draw, while the flight recorder and the
+    /// metrics registry fill up alongside.
+    #[test]
+    fn observability_is_replay_neutral_and_populates_recorder() {
+        let run = |obs: ObservabilityConfig| {
+            let cfg = WorldConfig {
+                seed: 9,
+                observability: obs,
+                ..Default::default()
+            };
+            let mut w = World::new(cfg, setup_uniform(4, 3.0));
+            w.run_until(300.0);
+            w
+        };
+        let off = run(ObservabilityConfig::default());
+        let on = run(ObservabilityConfig {
+            enabled: true,
+            ..Default::default()
+        });
+        let fp = |w: &World| {
+            (
+                w.recorder.len(),
+                (w.recorder.mean_latency() * 1e9) as u64,
+                w.messages_sent,
+                w.bytes_sent,
+                w.events_processed,
+                w.credit_totals()
+                    .iter()
+                    .map(|c| (c * 1e6) as u64)
+                    .collect::<Vec<_>>(),
+            )
+        };
+        assert_eq!(fp(&off), fp(&on));
+        // Disabled leaves everything empty.
+        assert!(off.registry().is_empty());
+        assert!(off.span_trees().is_empty());
+        // Enabled records spans and mirrors the world counters.
+        let trees = on.span_trees();
+        assert!(!trees.is_empty(), "no span trees recorded");
+        assert!(trees.iter().any(|t| {
+            let k = t.kinds();
+            k.contains(&SpanKind::Admit) && k.contains(&SpanKind::Settle)
+        }));
+        let reg = on.registry();
+        assert!(!reg.is_empty());
+        let events = reg.get("events_processed", &[]).expect("metric");
+        assert_eq!(events.value, on.events_processed as f64);
+        assert!(!events.series.is_empty(), "never sampled");
+        let done = reg.get("requests_completed", &[]).expect("metric");
+        assert_eq!(done.value, on.recorder.user_records().count() as f64);
+        // The trace JSON export is well-formed and non-trivial.
+        let j = on.trace_json();
+        let arr = j.get("traceEvents").as_arr().expect("traceEvents array");
+        assert!(arr.len() > 10, "only {} trace events", arr.len());
+    }
+
+    /// `sample_rate` thins traced requests deterministically without
+    /// touching the simulation, and a tiny ring drops oldest-first while
+    /// counting what it shed.
+    #[test]
+    fn observability_sampling_and_ring_bounds() {
+        let run = |obs: ObservabilityConfig| {
+            let cfg = WorldConfig {
+                seed: 9,
+                observability: obs,
+                ..Default::default()
+            };
+            let mut w = World::new(cfg, setup_uniform(4, 3.0));
+            w.run_until(300.0);
+            w
+        };
+        let full = run(ObservabilityConfig {
+            enabled: true,
+            ..Default::default()
+        });
+        let thin = run(ObservabilityConfig {
+            enabled: true,
+            sample_rate: 0.2,
+            ..Default::default()
+        });
+        assert_eq!(full.events_processed, thin.events_processed);
+        let (nf, nt) = (full.span_trees().len(), thin.span_trees().len());
+        assert!(
+            nt < nf && nt > 0,
+            "sampled {nt} of {nf} traces at rate 0.2"
+        );
+        // Same seed, same requests: the sampled set is reproducible.
+        let again = run(ObservabilityConfig {
+            enabled: true,
+            sample_rate: 0.2,
+            ..Default::default()
+        });
+        assert_eq!(again.span_trees().len(), nt);
+        // A tiny ring stays bounded and reports drops.
+        let tiny = run(ObservabilityConfig {
+            enabled: true,
+            ring_capacity: 16,
+            ..Default::default()
+        });
+        assert_eq!(tiny.events_processed, full.events_processed);
+        let mut dropped = 0u64;
+        for i in 0..tiny.num_nodes() {
+            let fr = tiny.node(i).flight_recorder();
+            assert!(fr.len() <= 16);
+            dropped += fr.dropped();
+        }
+        assert!(dropped > 0, "tiny ring never overflowed");
     }
 }

@@ -1,0 +1,273 @@
+//! Causal request tracing — end-to-end hop-chain reconstruction.
+//!
+//! These tests exercise the flight recorder through full `World` runs on a
+//! two-region WAN: a requester-only origin in `us` and two servers in `eu`,
+//! so every completed user request is a *cross-region delegation*. The
+//! acceptance contract:
+//!
+//! * the full hop chain of a delegated request — admit → probe →
+//!   delegate → queue → execute → settle — is reconstructable from the
+//!   stitched span trees AND from the exported Chrome trace JSON;
+//! * a mid-run partition produces the timeout-and-fallback chain
+//!   (admit → probe → timeout → local execute) with no settle hop;
+//! * `slo_misses_only` keeps exactly the trees whose request missed its
+//!   SLO (or never completed), and nothing else.
+
+use wwwserve::config::parse_experiment;
+use wwwserve::obs::SpanKind;
+use wwwserve::sim::World;
+use wwwserve::util::json::Json;
+
+const HORIZON: f64 = 120.0;
+
+/// One requester in `us`, two servers in `eu`. `events` optionally
+/// injects link events (e.g. a mid-run partition).
+fn cross_region_config(events: &str, observability: &str) -> String {
+    format!(
+        r#"{{
+            "seed": 42,
+            "horizon": {HORIZON},
+            "system": {{ "duel_rate": 0.0 }},
+            "observability": {observability},
+            "topology": {{
+                "regions": ["us", "eu"],
+                "intra": {{ "latency": [0.002, 0.010] }},
+                "inter": {{ "latency": [0.040, 0.080], "jitter": 0.005 }},
+                {events}
+                "fleet": [
+                    {{ "region": "us", "count": 1,
+                       "policy": "requester_only",
+                       "node": {{
+                         "profile": {{ "prefill_tok_s": 2000,
+                                       "decode_tok_s": 40,
+                                       "max_agg_decode_tok_s": 160,
+                                       "max_batch": 4 }} }},
+                       "schedule": [ {{"from": 10, "to": {HORIZON},
+                                       "inter_arrival": 4}} ],
+                       "lengths": {{ "output_mean": 600,
+                                     "output_sigma": 0.5 }} }},
+                    {{ "region": "eu", "count": 2,
+                       "node": {{
+                         "profile": {{ "prefill_tok_s": 4000,
+                                       "decode_tok_s": 45,
+                                       "max_agg_decode_tok_s": 1080,
+                                       "max_batch": 24 }},
+                         "policy": {{ "stake": 20,
+                                      "accept_freq": 1.0 }} }} }}
+                ]
+            }}
+        }}"#
+    )
+}
+
+fn run(config: &str) -> World {
+    let e = parse_experiment(config).expect("config parses");
+    let mut w = World::new(e.world.clone(), e.setups.clone());
+    w.run_until(HORIZON + 300.0);
+    assert!(
+        w.recorder.user_records().count() > 10,
+        "scenario barely ran: {} user records",
+        w.recorder.user_records().count()
+    );
+    w
+}
+
+/// The canonical happy-path hop chain of a cross-region delegation.
+const HAPPY_CHAIN: [SpanKind; 8] = [
+    SpanKind::Admit,
+    SpanKind::ProbeSent,
+    SpanKind::ProbeAcked,
+    SpanKind::Delegate,
+    SpanKind::Queue,
+    SpanKind::ExecuteStart,
+    SpanKind::ExecuteEnd,
+    SpanKind::Settle,
+];
+
+#[test]
+fn reconstructs_cross_region_delegation_hop_chain() {
+    let w = run(&cross_region_config("", r#"{ "enabled": true }"#));
+    let trees = w.span_trees();
+    assert!(!trees.is_empty(), "no span trees recorded");
+
+    // At least one request walked the textbook chain with no retries.
+    let tree = trees
+        .iter()
+        .find(|t| t.kinds() == HAPPY_CHAIN)
+        .unwrap_or_else(|| {
+            panic!(
+                "no tree matches the canonical chain; saw e.g. {:?}",
+                trees.first().map(|t| t.kinds())
+            )
+        });
+
+    // The chain really crosses the region boundary: admit/settle on the
+    // us requester (node 0), queue/execute on a eu server (node 1 or 2).
+    let origin = tree.spans[0].node;
+    assert_eq!(origin.0, 0, "requests originate at the requester");
+    for s in &tree.spans {
+        match s.kind {
+            SpanKind::Admit
+            | SpanKind::ProbeSent
+            | SpanKind::ProbeAcked
+            | SpanKind::Delegate
+            | SpanKind::Settle => assert_eq!(s.node, origin),
+            SpanKind::Queue
+            | SpanKind::ExecuteStart
+            | SpanKind::ExecuteEnd => {
+                assert_ne!(s.node, origin, "{:?} ran at the origin", s.kind)
+            }
+            other => panic!("unexpected span {other:?}"),
+        }
+    }
+    let executor = tree.spans[4].node;
+    assert!(executor.0 == 1 || executor.0 == 2, "executor {executor}");
+
+    // Causal order: time is monotone along the chain.
+    for pair in tree.spans.windows(2) {
+        assert!(pair[0].t <= pair[1].t, "span times went backwards");
+    }
+
+    // The recorder agrees about who executed it.
+    let rec = w
+        .recorder
+        .user_records()
+        .find(|r| r.id == tree.req)
+        .expect("traced request has a record");
+    assert_eq!(rec.executor, executor);
+    assert_eq!(rec.origin, origin);
+
+    // And the same chain is reconstructable from the exported Chrome
+    // trace JSON alone — filter the instant events of this request; the
+    // export preserves tree order.
+    let doc = w.trace_json();
+    let reparsed =
+        Json::parse(&format!("{doc}")).expect("export is valid JSON");
+    let events = reparsed
+        .get("traceEvents")
+        .as_arr()
+        .expect("traceEvents array");
+    let req_str = format!("{}", tree.req);
+    let names: Vec<String> = events
+        .iter()
+        .filter(|e| {
+            e.get("ph").as_str() == Some("i")
+                && e.get("args").get("req").as_str() == Some(&req_str)
+        })
+        .map(|e| e.get("name").as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(
+        names,
+        vec![
+            "admit",
+            "probe_sent",
+            "probe_acked",
+            "delegate",
+            "queue",
+            "execute_start",
+            "execute_end",
+            "settle"
+        ]
+    );
+    // The executor's execute_start/execute_end pair became a duration
+    // slice attributed to the executor's process row.
+    let slice = events
+        .iter()
+        .find(|e| {
+            e.get("ph").as_str() == Some("X")
+                && e.get("args").get("req").as_str() == Some(&req_str)
+        })
+        .expect("execute slice exported");
+    assert_eq!(slice.get("pid").as_f64(), Some(executor.0 as f64));
+    assert!(slice.get("dur").as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn partition_produces_timeout_and_fallback_chain() {
+    // Cut us<->eu mid-run: probes in flight (or sent during the outage)
+    // die, the origin times out and serves locally.
+    let events = r#""events": [
+        { "at": 30, "a": "us", "b": "eu", "change": "partition" },
+        { "at": 90, "a": "us", "b": "eu", "change": "heal" }
+    ],"#;
+    let w = run(&cross_region_config(events, r#"{ "enabled": true }"#));
+    let trees = w.span_trees();
+
+    let tree = trees
+        .iter()
+        .find(|t| {
+            let k = t.kinds();
+            k.contains(&SpanKind::Timeout)
+                && k.contains(&SpanKind::ExecuteStart)
+                && k.contains(&SpanKind::ExecuteEnd)
+                && !k.contains(&SpanKind::Settle)
+                && !k.contains(&SpanKind::Delegate)
+        })
+        .expect("no timeout-and-fallback tree recorded");
+    let k = tree.kinds();
+    assert_eq!(k[0], SpanKind::Admit);
+    assert!(k.contains(&SpanKind::ProbeSent), "fallback without a probe");
+    // The whole chain stays on the origin — nothing ever left us.
+    assert!(tree.spans.iter().all(|s| s.node.0 == 0));
+    // The timeout fired while still probing (detail 0 = Probing state).
+    let to = tree
+        .spans
+        .iter()
+        .find(|s| s.kind == SpanKind::Timeout)
+        .unwrap();
+    assert_eq!(to.detail, 0, "expected a probe-phase timeout");
+    // And the timeout precedes the local execution it triggered.
+    let t_exec = tree
+        .spans
+        .iter()
+        .find(|s| s.kind == SpanKind::ExecuteStart)
+        .unwrap()
+        .t;
+    assert!(to.t <= t_exec, "timeout after the fallback execution");
+}
+
+#[test]
+fn slo_misses_only_keeps_exactly_the_violating_traces() {
+    // The partition scenario yields a mix of met and missed SLOs. Both
+    // runs are the same simulation (tracing is observational; the flag
+    // only filters at export), so the full run predicts exactly which
+    // trees the misses-only run must keep.
+    let events = r#""events": [
+        { "at": 30, "a": "us", "b": "eu", "change": "partition" },
+        { "at": 90, "a": "us", "b": "eu", "change": "heal" }
+    ],"#;
+    let full = run(&cross_region_config(events, r#"{ "enabled": true }"#));
+    let misses = run(&cross_region_config(
+        events,
+        r#"{ "enabled": true, "slo_misses_only": true }"#,
+    ));
+
+    let slo_met = |w: &World, req| {
+        w.recorder
+            .user_records()
+            .find(|r| r.id == req)
+            .map(|r| r.slo_met())
+    };
+    let expected: Vec<_> = full
+        .span_trees()
+        .into_iter()
+        .map(|t| t.req)
+        .filter(|req| !slo_met(&full, *req).unwrap_or(false))
+        .collect();
+    let kept: Vec<_> =
+        misses.span_trees().into_iter().map(|t| t.req).collect();
+    assert_eq!(kept, expected, "filter kept the wrong trace set");
+    assert!(!kept.is_empty(), "partition scenario produced no SLO misses");
+    assert!(
+        kept.len() < full.span_trees().len(),
+        "every request missed its SLO — filter untestable"
+    );
+    // Every kept tree is a genuine violation (or never completed).
+    for req in &kept {
+        assert_ne!(
+            slo_met(&misses, *req),
+            Some(true),
+            "{req} met its SLO but was kept"
+        );
+    }
+}

@@ -221,6 +221,55 @@ fn reactive_capacity_changes_the_trace_but_replays_deterministically() {
 }
 
 #[test]
+fn observability_disabled_block_replays_the_baseline_trace() {
+    // An explicit `observability: {enabled: false}` block must be the same
+    // parse-and-run path as no block at all — the flight recorder stays a
+    // zero-capacity stub and nothing about the trace moves.
+    let baseline = run(&geo_smoke_config(false, "default"));
+    let cfg = geo_smoke_config(false, "default").replace(
+        "\"seed\": 2026,",
+        "\"seed\": 2026, \"observability\": { \"enabled\": false },",
+    );
+    assert!(cfg.contains("observability"), "splice failed");
+    assert_eq!(
+        baseline,
+        run(&cfg),
+        "disabled observability block perturbed the trace"
+    );
+}
+
+#[test]
+fn observability_enabled_is_purely_observational() {
+    // Tracing ON must still replay the baseline fingerprint bit for bit:
+    // spans and registry samples ride along with zero queue events, zero
+    // RNG draws, zero counter changes. That's the whole contract that
+    // makes the flight recorder safe to leave on in production runs.
+    let baseline = run(&geo_smoke_config(false, "default"));
+    let cfg = geo_smoke_config(false, "default").replace(
+        "\"seed\": 2026,",
+        "\"seed\": 2026, \"observability\": { \"enabled\": true },",
+    );
+    assert!(cfg.contains("observability"), "splice failed");
+    let e = parse_experiment(&cfg).expect("config parses");
+    assert!(e.world.observability.enabled);
+    let mut w = World::new(e.world.clone(), e.setups.clone());
+    w.run_until(HORIZON + 600.0);
+    assert_eq!(
+        baseline,
+        fingerprint(&w),
+        "enabled observability perturbed the trace"
+    );
+    // And it actually observed the run: span trees were recorded and the
+    // registry mirrors the world counters.
+    assert!(!w.span_trees().is_empty(), "no traces recorded");
+    let events = w
+        .registry()
+        .get("events_processed", &[])
+        .expect("events_processed metric");
+    assert_eq!(events.value, w.events_processed as f64);
+}
+
+#[test]
 fn installing_default_policy_post_construction_is_a_noop() {
     let cfg = geo_smoke_config(false, "default");
     let e = parse_experiment(&cfg).expect("config parses");
