@@ -1,0 +1,296 @@
+//! Bench: Byzantine-fraction sweep — does the network survive misbehaving
+//! participants, and do the defenses actually pay for themselves?
+//!
+//! A 3-region WAN (one requester + four servers per region) where a
+//! fraction f ∈ {0%, 10%, 25%, 40%} of the 12 servers is replaced with
+//! attackers from `wwwserve::policy::byzantine` (free-riders, result
+//! fakers, a colluder and a latency liar at the higher fractions), spread
+//! one-per-region so no region is spared. Each fraction runs twice: with
+//! the defense stack off (no receipts, no reputation, no hearsay capping)
+//! and with it armed.
+//!
+//! Asserted headline claims (the PR's acceptance bar):
+//!
+//! * attackers genuinely hurt: at 25% Byzantine the undefended SLO drops
+//!   measurably below the attack-free undefended baseline;
+//! * at 25% Byzantine, defenses-on SLO attainment AND mean honest-server
+//!   revenue are strictly above defenses-off;
+//! * the defenses visibly engage (receipt rejections > 0, quarantines > 0
+//!   under attack) and never punish anyone in an attack-free world.
+//!
+//! Results land in `BENCH_byzantine.json` for the per-PR perf trajectory.
+//! `--smoke` (or `BYZANTINE_SMOKE=1`) runs the {0%, 25%} fractions only —
+//! the CI tier; the assertions all live inside that subset.
+
+use wwwserve::backend::Profile;
+use wwwserve::benchlib::{write_json_report, Table};
+use wwwserve::policy::{ByzantineKind, NodePolicy};
+use wwwserve::sim::{NodeSetup, World, WorldConfig};
+use wwwserve::topology::three_region_wan;
+use wwwserve::types::CREDIT;
+use wwwserve::util::json::Json;
+use wwwserve::workload::{Generator, LengthDist, Phase};
+use wwwserve::NodeId;
+
+const HORIZON: f64 = 600.0;
+const DRAIN: f64 = 600.0;
+const SEED: u64 = 2026;
+const SERVERS_PER_REGION: usize = 4;
+const NODES_PER_REGION: usize = SERVERS_PER_REGION + 1;
+const N_SERVERS: usize = 3 * SERVERS_PER_REGION;
+
+/// Attacker personalities installed in order as the fraction grows: the
+/// sweep leads with the paper's headline free-rider economics, mixes in a
+/// receipt forger at 25%, and adds the gossip-layer attackers at 40%.
+const ATTACK_MIX: [ByzantineKind; 5] = [
+    ByzantineKind::FreeRider,
+    ByzantineKind::ResultFaker,
+    ByzantineKind::FreeRider,
+    ByzantineKind::Colluder,
+    ByzantineKind::LatencyLiar,
+];
+
+fn lengths() -> LengthDist {
+    LengthDist { output_mean: 600.0, output_sigma: 0.5, ..Default::default() }
+}
+
+/// Server slots (0..N_SERVERS, region-major) that turn Byzantine at this
+/// fraction, spread evenly so every region gets its share of attackers.
+fn attacker_slots(frac: f64) -> Vec<usize> {
+    let k = (frac * N_SERVERS as f64).round() as usize;
+    (0..k).map(|j| j * N_SERVERS / k.max(1)).collect()
+}
+
+/// One requester + `SERVERS_PER_REGION` servers per region; server slot
+/// `s` (region-major) is handed its attacker kind when listed.
+fn setups(frac: f64) -> Vec<NodeSetup> {
+    let slots = attacker_slots(frac);
+    let mut out = Vec::new();
+    let mut server_slot = 0usize;
+    for region in 0..3 {
+        let requester_id = NodeId((region * NODES_PER_REGION) as u32);
+        out.push(
+            NodeSetup::new(
+                Profile::test(40.0, 4),
+                NodePolicy {
+                    latency_penalty: 50.0,
+                    ..NodePolicy::requester_only()
+                },
+            )
+            .with_generator(
+                Generator::new(
+                    requester_id,
+                    vec![Phase::new(0.0, HORIZON, 1.5)],
+                )
+                .with_lengths(lengths()),
+            ),
+        );
+        for _ in 0..SERVERS_PER_REGION {
+            let mut s = NodeSetup::new(
+                Profile::test(45.0, 24),
+                NodePolicy {
+                    stake: 20 * CREDIT,
+                    accept_freq: 1.0,
+                    latency_penalty: 50.0,
+                    ..Default::default()
+                },
+            );
+            if let Some(j) = slots.iter().position(|&x| x == server_slot) {
+                s = s.with_byzantine(ATTACK_MIX[j % ATTACK_MIX.len()]);
+            }
+            out.push(s);
+            server_slot += 1;
+        }
+    }
+    out
+}
+
+struct ByzRun {
+    slo: f64,
+    completed: usize,
+    /// Mean end-of-run profit (credits gained over genesis) per honest
+    /// server, in CREDIT units. Negative means the run cost them money.
+    honest_revenue: f64,
+    receipt_rejects: u64,
+    quarantines: u64,
+    rtts_rejected: u64,
+    rtts_capped: u64,
+}
+
+fn run(frac: f64, defended: bool) -> ByzRun {
+    let mut cfg = WorldConfig {
+        seed: SEED,
+        topology: Some(three_region_wan(NODES_PER_REGION).build()),
+        ..Default::default()
+    };
+    cfg.system.duel_rate = 0.0; // isolate the receipt/reputation defenses
+    cfg.defenses.enabled = defended;
+    let setups = setups(frac);
+    let byzantine: Vec<bool> =
+        setups.iter().map(|s| s.byzantine.is_some()).collect();
+    let genesis = cfg.system.genesis_credits;
+    let mut w = World::new(cfg, setups);
+    w.run_until(HORIZON + DRAIN);
+
+    // Honest servers: every non-requester node that isn't an attacker.
+    let mut honest_profit = 0.0;
+    let mut honest_n = 0usize;
+    for i in 0..w.num_nodes() {
+        if i % NODES_PER_REGION == 0 || byzantine[i] {
+            continue;
+        }
+        honest_profit +=
+            w.node(i).credits() as f64 - genesis as f64;
+        honest_n += 1;
+    }
+    let sum = |f: &dyn Fn(&wwwserve::coordinator::Node) -> u64| -> u64 {
+        (0..w.num_nodes()).map(|i| f(w.node(i))).sum()
+    };
+    ByzRun {
+        slo: w.recorder.slo_attainment(),
+        completed: w.recorder.len(),
+        honest_revenue: honest_profit / honest_n as f64 / CREDIT as f64,
+        receipt_rejects: sum(&|n| n.stats.receipt_rejects),
+        quarantines: sum(&|n| n.stats.quarantines),
+        rtts_rejected: sum(&|n| n.stats.rtts_rejected),
+        rtts_capped: sum(&|n| n.stats.rtts_capped),
+    }
+}
+
+fn run_json(r: &ByzRun) -> Json {
+    Json::obj(vec![
+        ("slo", Json::num(r.slo)),
+        ("completed", Json::num(r.completed as f64)),
+        ("honest_revenue_credits", Json::num(r.honest_revenue)),
+        ("receipt_rejects", Json::num(r.receipt_rejects as f64)),
+        ("quarantines", Json::num(r.quarantines as f64)),
+        ("rtts_rejected", Json::num(r.rtts_rejected as f64)),
+        ("rtts_capped", Json::num(r.rtts_capped as f64)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BYZANTINE_SMOKE")
+            .is_ok_and(|v| !v.is_empty() && v != "0");
+    let fractions: &[f64] =
+        if smoke { &[0.0, 0.25] } else { &[0.0, 0.10, 0.25, 0.40] };
+    println!(
+        "# byzantine — attacker-fraction sweep, defenses off vs on{}\n",
+        if smoke { " (smoke tier)" } else { "" }
+    );
+
+    let mut rows = Vec::new();
+    for &frac in fractions {
+        let off = run(frac, false);
+        let on = run(frac, true);
+        let kinds: Vec<&str> = attacker_slots(frac)
+            .iter()
+            .enumerate()
+            .map(|(j, _)| ATTACK_MIX[j % ATTACK_MIX.len()].name())
+            .collect();
+        println!(
+            "f={:>3.0}%  attackers: [{}]",
+            frac * 100.0,
+            kinds.join(", ")
+        );
+        rows.push((frac, off, on));
+    }
+
+    println!();
+    let mut t = Table::new(&[
+        "byz %", "SLO off", "SLO on", "rev off", "rev on",
+        "rcpt-rej", "quarantines", "rtts rej/cap",
+    ]);
+    for (frac, off, on) in &rows {
+        t.row(vec![
+            format!("{:.0}", frac * 100.0),
+            format!("{:.3}", off.slo),
+            format!("{:.3}", on.slo),
+            format!("{:+.2}", off.honest_revenue),
+            format!("{:+.2}", on.honest_revenue),
+            format!("{}", on.receipt_rejects),
+            format!("{}", on.quarantines),
+            format!("{}/{}", on.rtts_rejected, on.rtts_capped),
+        ]);
+    }
+    t.print();
+
+    let at = |f: f64| -> &(f64, ByzRun, ByzRun) {
+        rows.iter()
+            .find(|(x, _, _)| (x - f).abs() < 1e-9)
+            .expect("fraction in sweep")
+    };
+    let (_, clean_off, clean_on) = at(0.0);
+    let (_, off25, on25) = at(0.25);
+
+    // Attack-free worlds: the defense machinery must find nobody to punish.
+    assert_eq!(clean_on.receipt_rejects, 0, "honest receipts rejected");
+    assert_eq!(clean_on.quarantines, 0, "honest node quarantined");
+    assert!(clean_on.completed > 500, "sweep barely ran");
+
+    // Attackers genuinely hurt an undefended network.
+    assert!(
+        off25.slo < clean_off.slo - 0.02,
+        "25% Byzantine didn't dent the undefended SLO: {:.3} vs clean {:.3}",
+        off25.slo,
+        clean_off.slo
+    );
+
+    // The headline: at 25% Byzantine, defenses recover SLO attainment and
+    // honest-server revenue — both strictly.
+    assert!(
+        on25.slo > off25.slo,
+        "defenses failed to recover SLO at 25% Byzantine: on {:.3} vs \
+         off {:.3}",
+        on25.slo,
+        off25.slo
+    );
+    assert!(
+        on25.honest_revenue > off25.honest_revenue,
+        "defenses failed to recover honest revenue at 25% Byzantine: \
+         on {:+.2} vs off {:+.2}",
+        on25.honest_revenue,
+        off25.honest_revenue
+    );
+
+    // And they engaged for the right reasons: the faker was caught at
+    // settlement, the free-riders were quarantined.
+    assert!(on25.receipt_rejects > 0, "result faker never caught");
+    assert!(on25.quarantines > 0, "free-riders never quarantined");
+    assert_eq!(
+        off25.receipt_rejects, 0,
+        "undefended run verified receipts somehow"
+    );
+
+    println!(
+        "\n25% Byzantine: SLO {:.3} -> {:.3}, honest revenue {:+.2} -> \
+         {:+.2} credits with defenses on ✓",
+        off25.slo, on25.slo, off25.honest_revenue, on25.honest_revenue
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("byzantine")),
+        ("seed", Json::num(SEED as f64)),
+        ("horizon_s", Json::num(HORIZON)),
+        ("smoke", Json::Bool(smoke)),
+        ("servers", Json::num(N_SERVERS as f64)),
+        (
+            "sweep",
+            Json::Arr(
+                rows.iter()
+                    .map(|(frac, off, on)| {
+                        Json::obj(vec![
+                            ("byzantine_fraction", Json::num(*frac)),
+                            ("defenses_off", run_json(off)),
+                            ("defenses_on", run_json(on)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = "BENCH_byzantine.json";
+    write_json_report(path, &report).expect("write bench json");
+    println!("wrote {path}");
+}

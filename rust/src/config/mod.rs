@@ -24,7 +24,10 @@ use crate::backend::{Gpu, ModelClass, Profile, ServingStack};
 use crate::capacity::{CapacityConfig, CapacityGroupSpec, CapacityPolicyKind};
 use crate::latency::LatencyConfig;
 use crate::obs::ObservabilityConfig;
-use crate::policy::{NodePolicy, ParticipationKind, SystemPolicy};
+use crate::policy::{
+    ByzantineKind, NodePolicy, ParticipationKind, SystemPolicy,
+};
+use crate::reputation::DefenseConfig;
 use crate::schedulers::Strategy;
 use crate::sim::{LedgerMode, NodeSetup, WorldConfig};
 use crate::topology::{LinkChange, LinkProfile, Topology};
@@ -417,9 +420,35 @@ fn expand_fleet(
                 name
             }
         };
-        // Reporting label.
+        // Byzantine personality for the whole group (attacker policies —
+        // see `crate::policy::byzantine`). Stamped into every copy as the
+        // per-node "byzantine" key; overrides the participation policy at
+        // world build.
+        let byz_name = match g.get("byzantine") {
+            Json::Null => None,
+            b => {
+                let name = b.as_str().ok_or_else(|| {
+                    bad(format!(
+                        "fleet group {gi}: byzantine must be an attacker \
+                         name string"
+                    ))
+                })?;
+                ByzantineKind::parse(name).ok_or_else(|| {
+                    bad(format!(
+                        "fleet group {gi}: unknown byzantine policy '{name}'"
+                    ))
+                })?;
+                template.insert("byzantine".to_string(), Json::str(name));
+                Some(name)
+            }
+        };
+        // Reporting label: byzantine groups label by their attack so
+        // honest/byzantine splits fall out of the per-group summaries.
         let label = match g.get("name") {
-            Json::Null => format!("{region}/{policy_name}"),
+            Json::Null => match byz_name {
+                Some(b) => format!("{region}/{b}"),
+                None => format!("{region}/{policy_name}"),
+            },
             n => n
                 .as_str()
                 .ok_or_else(|| {
@@ -712,6 +741,43 @@ fn parse_observability(j: &Json) -> Result<ObservabilityConfig, ConfigError> {
     Ok(cfg)
 }
 
+/// Parse the declarative `"defenses"` block (all keys optional):
+///
+/// ```json
+/// "defenses": {
+///   "enabled": true,
+///   "receipts": true,
+///   "reputation": true,
+///   "quarantine_threshold": 0.25,
+///   "hearsay_cap": 3.0
+/// }
+/// ```
+///
+/// `enabled: false` (the default) keeps every Byzantine defense out of
+/// the run — no receipts on the wire, no reputation rows in gossip, no
+/// hearsay capping — so pre-defense configs replay byte for byte
+/// (`rust/tests/replay_equivalence.rs`).
+fn parse_defenses(j: &Json) -> Result<DefenseConfig, ConfigError> {
+    let d = DefenseConfig::default();
+    if j.is_null() {
+        return Ok(d);
+    }
+    let cfg = DefenseConfig {
+        enabled: j.get("enabled").as_bool().unwrap_or(d.enabled),
+        receipts: j.get("receipts").as_bool().unwrap_or(d.receipts),
+        reputation: j.get("reputation").as_bool().unwrap_or(d.reputation),
+        quarantine_threshold: j
+            .get("quarantine_threshold")
+            .as_f64()
+            .unwrap_or(d.quarantine_threshold),
+        hearsay_cap: j.get("hearsay_cap").as_f64().unwrap_or(d.hearsay_cap),
+    };
+    // Reject bad values with Err here rather than letting
+    // `DefenseConfig::validate` abort the process on malformed input.
+    cfg.check().map_err(bad)?;
+    Ok(cfg)
+}
+
 fn parse_lengths(j: &Json) -> LengthDist {
     let d = LengthDist::default();
     LengthDist {
@@ -810,6 +876,7 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
     let latency_estimation =
         parse_latency_estimation(j.get("latency_estimation"))?;
     let observability = parse_observability(j.get("observability"))?;
+    let defenses = parse_defenses(j.get("defenses"))?;
     // Capacity groups: resolve region names against the built topology
     // (a fleet block implies a topology block, so it is always present
     // and already validated here).
@@ -882,6 +949,22 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
             parse_policy(nj.get("policy"), participation.base_policy());
         let mut setup =
             NodeSetup::new(profile, policy).with_participation(participation);
+        // Byzantine personality (per-node "byzantine" key; fleet groups
+        // stamp it from their group-level key). Overrides participation.
+        match nj.get("byzantine") {
+            Json::Null => {}
+            b => {
+                let name = b.as_str().ok_or_else(|| {
+                    bad(format!("node {i}: byzantine must be a string"))
+                })?;
+                let kind = ByzantineKind::parse(name).ok_or_else(|| {
+                    bad(format!(
+                        "node {i}: unknown byzantine policy '{name}'"
+                    ))
+                })?;
+                setup = setup.with_byzantine(kind);
+            }
+        }
         if let Some(label) = nj.get("group").as_str() {
             setup = setup.with_group(label);
         }
@@ -936,6 +1019,7 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
             topology,
             latency_estimation,
             observability,
+            defenses,
             churn: churn.iter().map(|c| (c.node, c.at, c.join)).collect(),
             capacity,
             ..Default::default()
@@ -1310,6 +1394,90 @@ mod tests {
                 "accepted bad observability block {block}"
             );
         }
+    }
+
+    #[test]
+    fn parses_defenses_block() {
+        let e = parse_experiment(
+            r#"{"defenses": { "enabled": true, "receipts": true,
+                "reputation": false, "quarantine_threshold": 0.1,
+                "hearsay_cap": 5 },
+                "nodes": [{}]}"#,
+        )
+        .unwrap();
+        let d = e.world.defenses;
+        assert!(d.enabled);
+        assert!(d.receipts);
+        assert!(!d.reputation);
+        assert!((d.quarantine_threshold - 0.1).abs() < 1e-12);
+        assert!((d.hearsay_cap - 5.0).abs() < 1e-12);
+        // Absent block -> defaults (defenses off, replay-identical).
+        let e = parse_experiment(r#"{"nodes": [{}]}"#).unwrap();
+        assert_eq!(e.world.defenses, DefenseConfig::default());
+        assert!(!e.world.defenses.enabled);
+    }
+
+    #[test]
+    fn rejects_bad_defenses() {
+        for block in [
+            r#"{"quarantine_threshold": -0.1}"#,
+            r#"{"quarantine_threshold": 1.0}"#,
+            r#"{"hearsay_cap": 0.5}"#,
+            r#"{"hearsay_cap": -3}"#,
+        ] {
+            let text =
+                format!(r#"{{"defenses": {block}, "nodes": [{{}}]}}"#);
+            assert!(
+                parse_experiment(&text).is_err(),
+                "accepted bad defenses block {block}"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_byzantine_key_stamps_attackers_per_group() {
+        let e = parse_experiment(
+            r#"{"topology": {"regions": ["us", "eu"],
+                "fleet": [
+                  { "region": "us", "count": 2, "byzantine": "free_rider" },
+                  { "region": "eu", "count": 1, "byzantine": "result_faker",
+                    "name": "eu-fakers" },
+                  { "region": "eu", "count": 1 }
+                ]},
+                "nodes": [{ "byzantine": "latency_liar" }]}"#,
+        )
+        .unwrap();
+        assert_eq!(e.setups.len(), 5);
+        // Explicit node: per-node byzantine key.
+        assert_eq!(e.setups[0].byzantine, Some(ByzantineKind::LatencyLiar));
+        // Group key stamps every copy, with attack-derived/explicit labels.
+        assert_eq!(e.setups[1].byzantine, Some(ByzantineKind::FreeRider));
+        assert_eq!(e.setups[2].byzantine, Some(ByzantineKind::FreeRider));
+        assert_eq!(e.setups[1].group.as_deref(), Some("us/free_rider"));
+        assert_eq!(e.setups[3].byzantine, Some(ByzantineKind::ResultFaker));
+        assert_eq!(e.setups[3].group.as_deref(), Some("eu-fakers"));
+        // Honest group stays honest.
+        assert_eq!(e.setups[4].byzantine, None);
+        assert_eq!(e.setups[4].group.as_deref(), Some("eu/default"));
+    }
+
+    #[test]
+    fn rejects_unknown_byzantine_policies() {
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 1,
+                            "byzantine": "saint" }]}}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [{ "region": "us", "count": 1, "byzantine": 5 }]}}"#
+        )
+        .is_err());
+        assert!(parse_experiment(
+            r#"{"nodes": [{ "byzantine": "gremlin" }]}"#
+        )
+        .is_err());
     }
 
     #[test]

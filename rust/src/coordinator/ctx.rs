@@ -22,6 +22,7 @@ use crate::gossip::PeerView;
 use crate::ledger::CreditOp;
 use crate::obs::{FlightRecorder, SpanKind};
 use crate::policy::{NodePolicy, ParticipationPolicy, SystemPolicy};
+use crate::reputation::{DefenseState, RepEvent, Transition};
 use crate::types::{ExecKind, NodeId, Request, Time};
 use crate::util::rng::Rng;
 
@@ -67,6 +68,7 @@ pub(crate) struct Ctx<'a> {
     pub stats: &'a mut NodeStats,
     pub peers: &'a mut PeerScratch,
     pub obs: &'a mut FlightRecorder,
+    pub defense: &'a mut DefenseState,
 }
 
 /// Stable `detail` encoding of an [`ExecKind`] for `execute_*` spans.
@@ -102,7 +104,8 @@ impl Ctx<'_> {
         vec![]
     }
 
-    /// Refresh the cached delegation snapshot (see [`Snapshots`]).
+    /// Refresh the cached delegation snapshot (see [`Snapshots`]),
+    /// reputation-gated when defenses are on.
     pub fn refresh_snapshot(&mut self, now: Time) {
         self.snaps.refresh(
             self.id,
@@ -111,6 +114,7 @@ impl Ctx<'_> {
             self.view,
             self.ledger,
             self.feed,
+            self.defense.rep_if_on(),
             now,
         );
     }
@@ -151,6 +155,71 @@ impl Ctx<'_> {
             self.ledger.on_tick(peers, now)
         } else {
             Vec::new()
+        }
+    }
+
+    /// Feed one piece of first-hand evidence about `peer` into the
+    /// reputation book (no-op when defenses are off), recording quarantine
+    /// transitions in stats and the flight recorder.
+    pub fn rep_event(&mut self, peer: NodeId, ev: RepEvent, now: Time) {
+        if !self.defense.reputation_on() {
+            return;
+        }
+        match self.defense.rep.record(peer, ev, now) {
+            Transition::Quarantined => {
+                self.stats.quarantines += 1;
+                self.obs.node_span(
+                    SpanKind::Quarantine,
+                    self.id,
+                    Some(peer),
+                    now,
+                    1,
+                );
+            }
+            Transition::Released => {
+                self.obs.node_span(
+                    SpanKind::Quarantine,
+                    self.id,
+                    Some(peer),
+                    now,
+                    0,
+                );
+            }
+            Transition::None => {}
+        }
+    }
+
+    /// Merge gossip-borne reputation rows from a peer (no-op when defenses
+    /// are off), recording any resulting quarantine transitions. Remote
+    /// opinion is bounded — it can corroborate our own evidence but never
+    /// quarantine a peer by itself (see `crate::reputation`).
+    pub fn ingest_rep_rows(&mut self, rows: &[(u32, u32)], now: Time) {
+        if rows.is_empty() || !self.defense.reputation_on() {
+            return;
+        }
+        for (peer, tr) in self.defense.rep.merge_remote(self.id, rows, now) {
+            match tr {
+                Transition::Quarantined => {
+                    self.stats.quarantines += 1;
+                    self.obs.node_span(
+                        SpanKind::Quarantine,
+                        self.id,
+                        Some(peer),
+                        now,
+                        1,
+                    );
+                }
+                Transition::Released => {
+                    self.obs.node_span(
+                        SpanKind::Quarantine,
+                        self.id,
+                        Some(peer),
+                        now,
+                        0,
+                    );
+                }
+                Transition::None => {}
+            }
         }
     }
 }

@@ -17,10 +17,12 @@ use super::duel::DuelCourt;
 use super::events::Action;
 use super::msg::Message;
 use crate::backend::Completion;
+use crate::crypto::{response_digest, Receipt};
 use crate::duel as duel_mech;
 use crate::ledger::{CreditOp, OpReason};
 use crate::obs::SpanKind;
 use crate::policy::{OffloadCtx, ProbeCtx};
+use crate::reputation::RepEvent;
 use crate::types::{
     ExecKind, NodeId, Request, RequestId, RequestRecord, Response, Time,
 };
@@ -292,11 +294,16 @@ impl Dispatch {
         }
     }
 
-    /// The executor's answer for a non-duel delegation: pay and complete.
+    /// The executor's answer for a non-duel delegation: check the work
+    /// receipt (when defenses are on), then pay and complete. A missing or
+    /// mis-signed receipt means the work is never paid — the request falls
+    /// back to local execution and the executor's reputation takes a
+    /// `ReceiptFail` hit (see `crate::reputation`).
     pub fn on_response(
         &mut self,
         ctx: &mut Ctx<'_>,
         response: Response,
+        receipt: Option<Receipt>,
         now: Time,
     ) -> Vec<Action> {
         let Some(p) = self.pending.remove(&response.id) else {
@@ -306,6 +313,24 @@ impl Dispatch {
             self.pending.insert(response.id, p);
             return vec![];
         };
+        if ctx.defense.receipts_on()
+            && !receipt_settles(ctx, &response, executor, receipt.as_ref())
+        {
+            ctx.stats.receipt_rejects += 1;
+            ctx.stats.fallback_local += 1;
+            ctx.obs.span(
+                response.id,
+                SpanKind::ReceiptReject,
+                ctx.id,
+                Some(executor),
+                now,
+                0,
+            );
+            ctx.rep_event(executor, RepEvent::ReceiptFail, now);
+            // Unreceipted work is never paid; serve the user ourselves.
+            return ctx.execute_locally(p.req, ExecKind::Local, now);
+        }
+        ctx.rep_event(executor, RepEvent::Success, now);
         ctx.obs.span(
             response.id,
             SpanKind::Settle,
@@ -341,6 +366,29 @@ impl Dispatch {
 
     // ---- executor side ------------------------------------------------------
 
+    /// A delegated request arrives: remember who to answer and execute.
+    /// A free-riding participation policy (`delivers_responses() == false`)
+    /// silently drops the work here — the requester only learns via its
+    /// response timeout.
+    pub fn on_delegate(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        from: NodeId,
+        request: Request,
+        duel: bool,
+        now: Time,
+    ) -> Vec<Action> {
+        ctx.stats.delegated_in += 1;
+        ctx.obs.span(request.id, SpanKind::Queue, ctx.id, Some(from), now, 0);
+        if !ctx.participation.delivers_responses() {
+            return vec![];
+        }
+        self.exec_tickets
+            .insert(request.id, ExecTicket { origin: from, duel });
+        let kind = if duel { ExecKind::Duel } else { ExecKind::Delegated };
+        ctx.execute_locally(request, kind, now)
+    }
+
     /// Accept-or-reject an incoming probe — the participation policy's
     /// call, given local load and the job size.
     pub fn on_probe(
@@ -372,25 +420,12 @@ impl Dispatch {
         vec![Action::Send { to: from, msg: reply }]
     }
 
-    /// A delegated request arrives: remember who to answer and execute.
-    pub fn on_delegate(
-        &mut self,
-        ctx: &mut Ctx<'_>,
-        from: NodeId,
-        request: Request,
-        duel: bool,
-        now: Time,
-    ) -> Vec<Action> {
-        ctx.stats.delegated_in += 1;
-        ctx.obs.span(request.id, SpanKind::Queue, ctx.id, Some(from), now, 0);
-        self.exec_tickets
-            .insert(request.id, ExecTicket { origin: from, duel });
-        let kind = if duel { ExecKind::Duel } else { ExecKind::Delegated };
-        ctx.execute_locally(request, kind, now)
-    }
-
     /// A delegated/duel execution finished on our backend: draw the
-    /// response quality and answer the origin.
+    /// response quality, sign a work receipt (defenses on), and answer the
+    /// origin. A faking participation policy degrades the quality
+    /// (`quality_factor`) and/or signs over the wrong content
+    /// (`honest_receipts() == false`), which the requester's settlement
+    /// check catches.
     pub fn on_exec_completion(
         &mut self,
         ctx: &mut Ctx<'_>,
@@ -408,8 +443,14 @@ impl Dispatch {
             c.finished_at,
             exec_kind_code(kind),
         );
-        let quality =
+        let mut quality =
             duel_mech::draw_response_quality(ctx.backend.quality(), ctx.rng);
+        let factor = ctx.participation.quality_factor();
+        if factor != 1.0 {
+            // Only scale on genuinely faking policies: honest nodes keep
+            // the drawn value bit-exactly (replay equivalence).
+            quality *= factor;
+        }
         let response = Response {
             id: c.request.id,
             executor: ctx.id,
@@ -417,9 +458,32 @@ impl Dispatch {
             finished_at: c.finished_at,
             tokens: vec![],
         };
+        let receipt = match ctx.defense.signing_key() {
+            Some(key) if ctx.defense.receipts_on() => {
+                let digest = if ctx.participation.honest_receipts() {
+                    response_digest(&response)
+                } else {
+                    // A faker signs over content it never produced.
+                    crate::crypto::sha256(b"result-faker-phantom-work")
+                };
+                Some(Receipt::sign(
+                    key,
+                    c.request.id,
+                    ticket.origin,
+                    c.request.submitted_at,
+                    c.finished_at,
+                    digest,
+                ))
+            }
+            _ => None,
+        };
         vec![Action::Send {
             to: ticket.origin,
-            msg: Message::DelegateResponse { response, duel: ticket.duel },
+            msg: Message::DelegateResponse {
+                response,
+                duel: ticket.duel,
+                receipt,
+            },
         }]
     }
 
@@ -469,7 +533,9 @@ impl Dispatch {
                     );
                 }
                 PendingState::AwaitingResponse { executor } => {
-                    // Executor vanished mid-flight: local fallback.
+                    // Executor vanished mid-flight (crashed, or a free-rider
+                    // silently dropping work): local fallback + a reputation
+                    // strike against the executor.
                     ctx.stats.fallback_local += 1;
                     ctx.obs.span(
                         id,
@@ -479,6 +545,7 @@ impl Dispatch {
                         now,
                         1,
                     );
+                    ctx.rep_event(executor, RepEvent::Timeout, now);
                     actions.extend(
                         ctx.execute_locally(p.req, ExecKind::Local, now),
                     );
@@ -491,6 +558,29 @@ impl Dispatch {
         }
         actions
     }
+}
+
+/// Does this receipt let the response settle? Checks presence, the
+/// signature against the executor's registered key, and that the receipt
+/// binds exactly this request, this requester, the probed executor, and
+/// the response content actually received.
+fn receipt_settles(
+    ctx: &Ctx<'_>,
+    response: &Response,
+    executor: NodeId,
+    receipt: Option<&Receipt>,
+) -> bool {
+    let Some(r) = receipt else {
+        return false;
+    };
+    let Some(keys) = ctx.defense.key_store() else {
+        return false;
+    };
+    r.request == response.id
+        && r.executor == executor
+        && r.requester == ctx.id
+        && r.response_digest == response_digest(response)
+        && r.verify(keys).is_ok()
 }
 
 #[cfg(test)]

@@ -19,6 +19,7 @@ use crate::duel as duel_mech;
 use crate::duel::DuelState;
 use crate::ledger::{CreditOp, OpReason};
 use crate::obs::SpanKind;
+use crate::reputation::RepEvent;
 use crate::types::{
     ExecKind, NodeId, Request, RequestId, RequestRecord, Response, Time,
 };
@@ -265,6 +266,11 @@ impl DuelCourt {
         let judges = d.judges.clone();
         self.duels.remove(&duel_id);
         pending.remove(&duel_id);
+        // Duel outcomes are first-hand quality evidence: the loser's
+        // reputation takes a hit, the winner's recovers (see
+        // `crate::reputation`).
+        ctx.rep_event(outcome.loser, RepEvent::DuelLoss, now);
+        ctx.rep_event(outcome.winner, RepEvent::DuelWin, now);
         ctx.obs.span(
             duel_id,
             SpanKind::DuelSettle,

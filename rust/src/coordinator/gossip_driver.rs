@@ -60,11 +60,11 @@ impl GossipDriver {
                 if delta.is_empty() && heartbeats.is_empty() {
                     continue;
                 }
-                let rtts = ctx.feed.rtts_for(ctx.view, *t, now);
+                let (rtts, rep) = delta_payload(ctx, *t, now);
                 ctx.feed.stamp_gossip_push(*t, now);
                 out.push(Action::Send {
                     to: *t,
-                    msg: Message::GossipDelta { delta, heartbeats, rtts },
+                    msg: Message::GossipDelta { delta, heartbeats, rtts, rep },
                 });
             }
         }
@@ -130,18 +130,22 @@ impl GossipDriver {
     }
 
     /// Incoming delta push: merge (entries + heartbeats + piggybacked
-    /// RTTs), then answer with our own delta minus whatever we just
-    /// accepted from the initiator (no echo). An empty exchange is
-    /// skipped — nothing to learn, no bytes burned.
+    /// RTTs + reputation rows), then answer with our own delta minus
+    /// whatever we just accepted from the initiator (no echo). An empty
+    /// exchange is skipped — nothing to learn, no bytes burned.
+    #[allow(clippy::too_many_arguments)]
     pub fn on_delta(
         ctx: &mut Ctx<'_>,
         from: NodeId,
         delta: &Digest,
         heartbeats: &Heartbeats,
         rtts: &RegionRtts,
+        rep: &[(u32, u32)],
         now: Time,
     ) -> Vec<Action> {
-        ctx.feed.merge_rtts(rtts, now);
+        let cap = ctx.defense.hearsay_cap();
+        ctx.feed.merge_rtts(rtts, now, cap, ctx.stats);
+        ctx.ingest_rep_rows(rep, now);
         let mut fresh = ctx.view.merge(delta, now);
         fresh.extend(ctx.view.merge_heartbeats(heartbeats, now));
         fresh.sort_unstable();
@@ -150,25 +154,29 @@ impl GossipDriver {
         if delta.is_empty() && heartbeats.is_empty() {
             vec![]
         } else {
-            let rtts = ctx.feed.rtts_for(ctx.view, from, now);
+            let (rtts, rep) = delta_payload(ctx, from, now);
             vec![Action::Send {
                 to: from,
-                msg: Message::GossipDeltaReply { delta, heartbeats, rtts },
+                msg: Message::GossipDeltaReply { delta, heartbeats, rtts, rep },
             }]
         }
     }
 
     /// Pull half of a delta exchange we initiated.
+    #[allow(clippy::too_many_arguments)]
     pub fn on_delta_reply(
         ctx: &mut Ctx<'_>,
         from: NodeId,
         delta: &Digest,
         heartbeats: &Heartbeats,
         rtts: &RegionRtts,
+        rep: &[(u32, u32)],
         now: Time,
     ) -> Vec<Action> {
         ctx.feed.observe_gossip_reply(ctx.obs, ctx.view, from, now);
-        ctx.feed.merge_rtts(rtts, now);
+        let cap = ctx.defense.hearsay_cap();
+        ctx.feed.merge_rtts(rtts, now, cap, ctx.stats);
+        ctx.ingest_rep_rows(rep, now);
         ctx.view.merge(delta, now);
         ctx.view.merge_heartbeats(heartbeats, now);
         vec![]
@@ -193,6 +201,27 @@ impl GossipDriver {
         let targets = ctx.view.pick_targets(ctx.rng, now);
         self.send(ctx, &targets, true, now)
     }
+}
+
+/// Build the piggyback payload for a delta to `peer`: RTT summaries
+/// (rate-limited, same-region) and reputation rows (defenses on), each run
+/// through the participation policy's corruption hooks — honest policies
+/// leave both untouched, a latency liar poisons the RTT rows, a colluder
+/// slanders via the reputation rows. Both are empty (zero wire bytes)
+/// for honest nodes with defenses off.
+fn delta_payload(
+    ctx: &mut Ctx<'_>,
+    peer: NodeId,
+    now: Time,
+) -> (RegionRtts, Vec<(u32, u32)>) {
+    let mut rtts = ctx.feed.rtts_for(ctx.view, peer, now);
+    ctx.participation.corrupt_rtts(&mut rtts);
+    let mut rep = match ctx.defense.rep_if_on() {
+        Some(book) => book.rep_rows(now),
+        None => Vec::new(),
+    };
+    ctx.participation.corrupt_rep(&mut rep);
+    (rtts, rep)
 }
 
 #[cfg(test)]

@@ -20,10 +20,17 @@
 use std::collections::HashMap;
 
 use super::dispatch::PROBE_TIMEOUT;
+use super::node::NodeStats;
 use crate::gossip::PeerView;
 use crate::latency::{LatencyConfig, LatencyEstimator, RegionRtts};
 use crate::obs::{FlightRecorder, SpanKind};
 use crate::types::{NodeId, Time};
+
+/// Hard ceiling on any gossip-borne RTT summary value, always enforced:
+/// honest estimators never share anything near this (the probe-timeout
+/// penalty tops out at a few seconds), so values above it are junk or
+/// poison regardless of whether the defense layer is armed.
+pub(crate) const ABSURD_RTT: f64 = 60.0;
 
 /// Live per-region latency knowledge + the RTT attribution state.
 /// `None` estimator = no locality information: dispatch stays region-blind
@@ -230,10 +237,61 @@ impl LatencyFeed {
     }
 
     /// Merge region-RTT summaries a peer piggybacked on its gossip.
-    pub fn merge_rtts(&mut self, rtts: &RegionRtts, now: Time) {
-        if let Some(est) = self.lat.as_mut() {
+    ///
+    /// Two layers of protection against gossip-borne poison:
+    ///
+    /// * **Junk guard** (always on): NaN, negative, and absurd
+    ///   (> [`ABSURD_RTT`]) values are dropped outright, bumping
+    ///   `stats.rtts_rejected` — they never reach the EWMA.
+    /// * **Hearsay cap** (defenses on, `hearsay_cap` finite): a surviving
+    ///   value may not land more than a bounded factor away from our *own*
+    ///   current estimate for that cell — it is clamped into
+    ///   `[own / cap, own * cap]`, bumping `stats.rtts_capped`. A latency
+    ///   liar can therefore nudge an estimator cell, never teleport it.
+    ///
+    /// When every row is clean and uncapped (the honest steady state) the
+    /// summaries merge exactly as they always did — no allocation, no
+    /// behavioural drift on replays.
+    pub fn merge_rtts(
+        &mut self,
+        rtts: &RegionRtts,
+        now: Time,
+        hearsay_cap: f64,
+        stats: &mut NodeStats,
+    ) {
+        let Some(est) = self.lat.as_mut() else {
+            return;
+        };
+        let junk = |v: f64| !v.is_finite() || v < 0.0 || v > ABSURD_RTT;
+        let needs_work = rtts.iter().any(|&(a, b, v)| {
+            junk(v)
+                || (hearsay_cap.is_finite() && {
+                    let own = est.expected(a, b, now);
+                    v > own * hearsay_cap || v < own / hearsay_cap
+                })
+        });
+        if !needs_work {
             est.merge(rtts, now);
+            return;
         }
+        let mut clean = Vec::with_capacity(rtts.len());
+        for &(a, b, v) in rtts {
+            if junk(v) {
+                stats.rtts_rejected += 1;
+                continue;
+            }
+            let mut val = v;
+            if hearsay_cap.is_finite() {
+                let own = est.expected(a, b, now);
+                let (lo, hi) = (own / hearsay_cap, own * hearsay_cap);
+                if val < lo || val > hi {
+                    stats.rtts_capped += 1;
+                    val = val.clamp(lo, hi);
+                }
+            }
+            clean.push((a, b, val));
+        }
+        est.merge(&clean, now);
     }
 
     /// Region-RTT summaries to piggyback on a gossip delta to `peer`:

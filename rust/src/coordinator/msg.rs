@@ -4,9 +4,11 @@
 //! JSON frames (`to_json` / `from_json` below — the paper uses ZeroMQ ROUTER
 //! with the same request/response vocabulary).
 
+use crate::crypto::{Hash256, Receipt, Signature};
 use crate::gossip::{Digest, Heartbeats};
 use crate::latency::RegionRtts;
 use crate::ledger::Block;
+use crate::reputation::RepRows;
 use crate::types::{NodeId, Request, RequestId, Response};
 use crate::util::json::Json;
 
@@ -23,8 +25,15 @@ pub enum Message {
     ProbeReject { req_id: RequestId },
     /// Forward a request for remote execution. `duel` marks duel copies.
     Delegate { request: Request, duel: bool },
-    /// The executor's answer travelling back to the originator.
-    DelegateResponse { response: Response, duel: bool },
+    /// The executor's answer travelling back to the originator. `receipt`
+    /// is the executor's signed work receipt (`crate::crypto::Receipt`);
+    /// it is `None` unless the defense layer is enabled, so the wire cost
+    /// of the receipt is zero when defenses are off.
+    DelegateResponse {
+        response: Response,
+        duel: bool,
+        receipt: Option<Receipt>,
+    },
     /// Push half of a full-digest gossip round (anti-entropy fallback,
     /// leave/join announcements, suspicion probes).
     Gossip { digest: Digest },
@@ -34,17 +43,22 @@ pub enum Message {
     /// membership content changed since the last exchange with this peer,
     /// compact `(node, version)` pairs for plain heartbeat advances, and
     /// (rate-limited, same-region peers only) piggybacked region-latency
-    /// summaries for the live RTT estimator (`crate::latency`).
+    /// summaries for the live RTT estimator (`crate::latency`). `rep`
+    /// piggybacks reputation opinions (`crate::reputation`) — `(node,
+    /// milli-score)` rows for peers the sender distrusts; empty (zero wire
+    /// cost) unless the defense layer is enabled.
     GossipDelta {
         delta: Digest,
         heartbeats: Heartbeats,
         rtts: RegionRtts,
+        rep: RepRows,
     },
     /// Pull half of a delta round (the receiver's delta coming back).
     GossipDeltaReply {
         delta: Digest,
         heartbeats: Heartbeats,
         rtts: RegionRtts,
+        rep: RepRows,
     },
     /// Ask the two duel responses to be compared. `est_tokens` sizes the
     /// judge's own evaluation workload (reading both answers).
@@ -105,8 +119,11 @@ impl Message {
             Message::Delegate { request, .. } => {
                 64 + request.payload.len() * 4 + request.prompt_tokens as usize
             }
-            Message::DelegateResponse { response, .. } => {
+            Message::DelegateResponse { response, receipt, .. } => {
+                // A receipt is two ids + two timestamps + a 32-byte digest
+                // + a 32-byte signature; absent receipts cost nothing.
                 64 + response.tokens.len() * 4
+                    + if receipt.is_some() { 104 } else { 0 }
             }
             Message::JudgeAssign { resp_a, resp_b, .. } => {
                 64 + (resp_a.tokens.len() + resp_b.tokens.len()) * 4
@@ -114,12 +131,16 @@ impl Message {
             Message::Gossip { digest } | Message::GossipReply { digest } => {
                 16 + digest.len() * 32
             }
-            Message::GossipDelta { delta, heartbeats, rtts }
-            | Message::GossipDeltaReply { delta, heartbeats, rtts } => {
+            Message::GossipDelta { delta, heartbeats, rtts, rep }
+            | Message::GossipDeltaReply { delta, heartbeats, rtts, rep } => {
                 // A full row costs what a digest entry costs; a heartbeat
                 // refresh is just (node id, version); a region-RTT summary
-                // entry is (region, region, f64).
-                16 + delta.len() * 32 + heartbeats.len() * 12 + rtts.len() * 16
+                // entry is (region, region, f64); a reputation row is
+                // (node id, milli-score).
+                16 + delta.len() * 32
+                    + heartbeats.len() * 12
+                    + rtts.len() * 16
+                    + rep.len() * 8
             }
             Message::BlockProposal { block } | Message::BlockCommit { block } => {
                 128 + block.ops.len() * 48
@@ -295,6 +316,79 @@ fn rtts_from(j: &Json) -> Option<RegionRtts> {
         .collect()
 }
 
+fn rep_json(r: &[(u32, u32)]) -> Json {
+    Json::Arr(
+        r.iter()
+            .map(|(n, milli)| {
+                Json::Arr(vec![Json::num(*n as f64), Json::num(*milli as f64)])
+            })
+            .collect(),
+    )
+}
+
+fn rep_from(j: &Json) -> Option<RepRows> {
+    if j.is_null() {
+        // Absent rows are valid (defenses off, or nothing to report).
+        return Some(Vec::new());
+    }
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            let a = e.as_arr()?;
+            Some((a.first()?.as_u64()? as u32, a.get(1)?.as_u64()? as u32))
+        })
+        .collect()
+}
+
+fn bytes32_json(b: &[u8; 32]) -> Json {
+    Json::Arr(b.iter().map(|v| Json::num(*v as f64)).collect())
+}
+
+fn bytes32_from(j: &Json) -> Option<[u8; 32]> {
+    let arr = j.as_arr()?;
+    if arr.len() != 32 {
+        return None;
+    }
+    let mut out = [0u8; 32];
+    for (slot, v) in out.iter_mut().zip(arr) {
+        let n = v.as_u64()?;
+        if n > 255 {
+            return None;
+        }
+        *slot = n as u8;
+    }
+    Some(out)
+}
+
+fn receipt_json(r: &Receipt) -> Json {
+    Json::obj(vec![
+        ("request", req_id_json(&r.request)),
+        ("executor", Json::num(r.executor.0 as f64)),
+        ("requester", Json::num(r.requester.0 as f64)),
+        ("submitted_at", Json::num(r.submitted_at)),
+        ("finished_at", Json::num(r.finished_at)),
+        ("response_digest", bytes32_json(&r.response_digest.0)),
+        ("sig", bytes32_json(&r.sig.0)),
+    ])
+}
+
+/// `None` receipts travel as a `null` / absent key; the outer `Option` is
+/// the parse result, the inner one the decoded field.
+fn receipt_from(j: &Json) -> Option<Option<Receipt>> {
+    if j.is_null() {
+        return Some(None);
+    }
+    Some(Some(Receipt {
+        request: req_id_from(j.get("request"))?,
+        executor: NodeId(j.get("executor").as_u64()? as u32),
+        requester: NodeId(j.get("requester").as_u64()? as u32),
+        submitted_at: j.get("submitted_at").as_f64()?,
+        finished_at: j.get("finished_at").as_f64()?,
+        response_digest: Hash256(bytes32_from(j.get("response_digest"))?),
+        sig: Signature(bytes32_from(j.get("sig"))?),
+    }))
+}
+
 impl Message {
     pub fn to_json(&self) -> Json {
         match self {
@@ -319,11 +413,19 @@ impl Message {
                 ("request", request_json(request)),
                 ("duel", Json::Bool(*duel)),
             ]),
-            Message::DelegateResponse { response, duel } => Json::obj(vec![
-                ("type", Json::str("delegate_response")),
-                ("response", response_json(response)),
-                ("duel", Json::Bool(*duel)),
-            ]),
+            Message::DelegateResponse { response, duel, receipt } => {
+                Json::obj(vec![
+                    ("type", Json::str("delegate_response")),
+                    ("response", response_json(response)),
+                    ("duel", Json::Bool(*duel)),
+                    (
+                        "receipt",
+                        receipt
+                            .as_ref()
+                            .map_or(Json::Null, receipt_json),
+                    ),
+                ])
+            }
             Message::Gossip { digest } => Json::obj(vec![
                 ("type", Json::str("gossip")),
                 ("digest", digest_json(digest)),
@@ -332,18 +434,22 @@ impl Message {
                 ("type", Json::str("gossip_reply")),
                 ("digest", digest_json(digest)),
             ]),
-            Message::GossipDelta { delta, heartbeats, rtts } => Json::obj(vec![
-                ("type", Json::str("gossip_delta")),
-                ("delta", digest_json(delta)),
-                ("heartbeats", heartbeats_json(heartbeats)),
-                ("rtts", rtts_json(rtts)),
-            ]),
-            Message::GossipDeltaReply { delta, heartbeats, rtts } => {
+            Message::GossipDelta { delta, heartbeats, rtts, rep } => {
+                Json::obj(vec![
+                    ("type", Json::str("gossip_delta")),
+                    ("delta", digest_json(delta)),
+                    ("heartbeats", heartbeats_json(heartbeats)),
+                    ("rtts", rtts_json(rtts)),
+                    ("rep", rep_json(rep)),
+                ])
+            }
+            Message::GossipDeltaReply { delta, heartbeats, rtts, rep } => {
                 Json::obj(vec![
                     ("type", Json::str("gossip_delta_reply")),
                     ("delta", digest_json(delta)),
                     ("heartbeats", heartbeats_json(heartbeats)),
                     ("rtts", rtts_json(rtts)),
+                    ("rep", rep_json(rep)),
                 ])
             }
             Message::JudgeAssign { duel_id, resp_a, resp_b, est_tokens } => {
@@ -392,6 +498,7 @@ impl Message {
             "delegate_response" => Some(Message::DelegateResponse {
                 response: response_from(j.get("response"))?,
                 duel: j.get("duel").as_bool()?,
+                receipt: receipt_from(j.get("receipt"))?,
             }),
             "gossip" => Some(Message::Gossip {
                 digest: digest_from(j.get("digest"))?,
@@ -403,11 +510,13 @@ impl Message {
                 delta: digest_from(j.get("delta"))?,
                 heartbeats: heartbeats_from(j.get("heartbeats"))?,
                 rtts: rtts_from(j.get("rtts"))?,
+                rep: rep_from(j.get("rep"))?,
             }),
             "gossip_delta_reply" => Some(Message::GossipDeltaReply {
                 delta: digest_from(j.get("delta"))?,
                 heartbeats: heartbeats_from(j.get("heartbeats"))?,
                 rtts: rtts_from(j.get("rtts"))?,
+                rep: rep_from(j.get("rep"))?,
             }),
             "judge_assign" => Some(Message::JudgeAssign {
                 duel_id: req_id_from(j.get("duel_id"))?,
@@ -450,6 +559,19 @@ mod tests {
         }
     }
 
+    fn signed_receipt() -> Receipt {
+        let key = crate::crypto::NodeKey::derive(7, NodeId(2));
+        let r = resp();
+        Receipt::sign(
+            &key,
+            r.id,
+            NodeId(1),
+            1.5,
+            r.finished_at,
+            crate::crypto::response_digest(&r),
+        )
+    }
+
     #[test]
     fn wire_roundtrip_all_variants() {
         let msgs = vec![
@@ -461,18 +583,29 @@ mod tests {
             Message::ProbeAccept { req_id: req().id },
             Message::ProbeReject { req_id: req().id },
             Message::Delegate { request: req(), duel: true },
-            Message::DelegateResponse { response: resp(), duel: false },
+            Message::DelegateResponse {
+                response: resp(),
+                duel: false,
+                receipt: None,
+            },
+            Message::DelegateResponse {
+                response: resp(),
+                duel: false,
+                receipt: Some(signed_receipt()),
+            },
             Message::Gossip { digest: vec![(NodeId(1), 4, true, 99, 2)] },
             Message::GossipReply { digest: vec![] },
             Message::GossipDelta {
                 delta: vec![(NodeId(3), 7, false, 12, 1)],
                 heartbeats: vec![(NodeId(4), 9), (NodeId(5), 2)],
                 rtts: vec![(0, 1, 0.5), (0, 2, 1.25)],
+                rep: vec![(6, 400), (7, 0)],
             },
             Message::GossipDeltaReply {
                 delta: vec![],
                 heartbeats: vec![],
                 rtts: vec![],
+                rep: vec![],
             },
             Message::JudgeAssign {
                 duel_id: req().id,
@@ -519,6 +652,7 @@ mod tests {
             delta: vec![(NodeId(1), 2, true, 0, 0)],
             heartbeats: (0..8u32).map(|i| (NodeId(i), 3)).collect(),
             rtts: vec![(0, 1, 0.05)],
+            rep: vec![],
         };
         assert!(
             delta.wire_size() * 8 < full.wire_size(),
@@ -531,12 +665,47 @@ mod tests {
             delta: (0..8u32).map(|i| (NodeId(i), 3, true, 0, 0)).collect(),
             heartbeats: vec![],
             rtts: vec![],
+            rep: vec![],
         };
         let as_pairs = Message::GossipDelta {
             delta: vec![],
             heartbeats: (0..8u32).map(|i| (NodeId(i), 3)).collect(),
             rtts: vec![],
+            rep: vec![],
         };
         assert!(as_pairs.wire_size() < as_rows.wire_size());
+    }
+
+    #[test]
+    fn defense_fields_cost_nothing_when_absent() {
+        // Replay neutrality: a receipt-less response and a rep-less delta
+        // weigh exactly what they did before the defense layer existed.
+        let bare = Message::DelegateResponse {
+            response: resp(),
+            duel: false,
+            receipt: None,
+        };
+        assert_eq!(bare.wire_size(), 64 + resp().tokens.len() * 4);
+        let receipted = Message::DelegateResponse {
+            response: resp(),
+            duel: false,
+            receipt: Some(signed_receipt()),
+        };
+        assert!(receipted.wire_size() > bare.wire_size());
+
+        let no_rep = Message::GossipDelta {
+            delta: vec![],
+            heartbeats: vec![],
+            rtts: vec![],
+            rep: vec![],
+        };
+        let with_rep = Message::GossipDelta {
+            delta: vec![],
+            heartbeats: vec![],
+            rtts: vec![],
+            rep: vec![(3, 250)],
+        };
+        assert_eq!(no_rep.wire_size(), 16);
+        assert_eq!(with_rep.wire_size(), 16 + 8);
     }
 }

@@ -40,6 +40,7 @@ use crate::obs::{FlightRecorder, ObservabilityConfig, SpanKind};
 use crate::policy::{
     DefaultPolicy, NodePolicy, ParticipationPolicy, SystemPolicy,
 };
+use crate::reputation::DefenseState;
 use crate::types::{ExecKind, NodeId, RequestRecord, Time};
 use crate::util::rng::Rng;
 
@@ -55,6 +56,15 @@ pub struct NodeStats {
     pub probe_rejects: u64,
     pub probe_timeouts: u64,
     pub fallback_local: u64,
+    /// Delegated responses whose work receipt failed verification (payment
+    /// withheld; see `crate::reputation`).
+    pub receipt_rejects: u64,
+    /// Peer quarantine transitions this node decided on its own evidence.
+    pub quarantines: u64,
+    /// Piggybacked RTT rows rejected outright as junk (NaN/negative/absurd).
+    pub rtts_rejected: u64,
+    /// Piggybacked RTT rows clamped by the hearsay cap before ingestion.
+    pub rtts_capped: u64,
 }
 
 pub struct Node {
@@ -83,6 +93,10 @@ pub struct Node {
     /// emission point is a no-op until
     /// [`set_observability`](Node::set_observability) arms it.
     obs: FlightRecorder,
+    /// Byzantine-defense state (receipts, reputation, hearsay cap; see
+    /// [`crate::reputation`]). Starts fully inert — every check is a no-op
+    /// until [`set_defenses`](Node::set_defenses) arms it.
+    defense: DefenseState,
 }
 
 impl Node {
@@ -134,6 +148,7 @@ impl Node {
             peers: PeerScratch::default(),
             stats: NodeStats::default(),
             obs: FlightRecorder::disabled(),
+            defense: DefenseState::default(),
         }
     }
 
@@ -182,6 +197,18 @@ impl Node {
     /// Read access to the recorded span ring.
     pub fn flight_recorder(&self) -> &FlightRecorder {
         &self.obs
+    }
+
+    /// Arm (or re-arm) this node's Byzantine defenses. The default
+    /// [`DefenseState`] is fully inert; installing one with
+    /// `cfg.enabled == false` is equivalent.
+    pub fn set_defenses(&mut self, state: DefenseState) {
+        self.defense = state;
+    }
+
+    /// Read access to the defense layer (reputation book, config).
+    pub fn defense_state(&self) -> &DefenseState {
+        &self.defense
     }
 
     // ---- locality (topology awareness) --------------------------------------
@@ -236,6 +263,7 @@ impl Node {
             peers,
             stats,
             obs,
+            defense,
             ..
         } = self;
         (
@@ -253,6 +281,7 @@ impl Node {
                 stats,
                 peers,
                 obs,
+                defense,
             },
             dispatch,
             court,
@@ -317,12 +346,14 @@ impl Node {
             Message::Delegate { request, duel } => {
                 dispatch.on_delegate(&mut ctx, from, request, duel, now)
             }
-            Message::DelegateResponse { response, duel } => {
+            Message::DelegateResponse { response, duel, receipt } => {
                 // The executor's answer proves the path to its region is
                 // alive (its timing mixes compute with network, so it only
                 // refreshes estimator freshness, not the EWMA).
                 ctx.feed.touch_peer(ctx.view, from, now);
                 if duel {
+                    // Duel copies are judged on content; the primary copy's
+                    // receipt gates the payment (see `dispatch::on_response`).
                     court.on_duel_response(
                         &mut ctx,
                         dispatch.pending_mut(),
@@ -330,7 +361,7 @@ impl Node {
                         now,
                     )
                 } else {
-                    dispatch.on_response(&mut ctx, response, now)
+                    dispatch.on_response(&mut ctx, response, receipt, now)
                 }
             }
             Message::Gossip { digest } => {
@@ -339,14 +370,14 @@ impl Node {
             Message::GossipReply { digest } => {
                 GossipDriver::on_gossip_reply(&mut ctx, from, &digest, now)
             }
-            Message::GossipDelta { delta, heartbeats, rtts } => {
+            Message::GossipDelta { delta, heartbeats, rtts, rep } => {
                 GossipDriver::on_delta(
-                    &mut ctx, from, &delta, &heartbeats, &rtts, now,
+                    &mut ctx, from, &delta, &heartbeats, &rtts, &rep, now,
                 )
             }
-            Message::GossipDeltaReply { delta, heartbeats, rtts } => {
+            Message::GossipDeltaReply { delta, heartbeats, rtts, rep } => {
                 GossipDriver::on_delta_reply(
-                    &mut ctx, from, &delta, &heartbeats, &rtts, now,
+                    &mut ctx, from, &delta, &heartbeats, &rtts, &rep, now,
                 )
             }
             Message::JudgeAssign { duel_id, resp_a, resp_b, est_tokens } => {

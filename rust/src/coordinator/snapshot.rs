@@ -21,6 +21,7 @@ use super::ledger_manager::LedgerManager;
 use crate::gossip::PeerView;
 use crate::policy::{NodePolicy, ParticipationPolicy};
 use crate::pos::StakeSnapshot;
+use crate::reputation::ReputationBook;
 use crate::types::{NodeId, Time};
 use crate::util::rng::Rng;
 
@@ -30,6 +31,7 @@ struct SnapCache {
     time_bucket: u64,
     locality_epoch: u64,
     estimator_version: u64,
+    rep_version: u64,
     snap: StakeSnapshot,
 }
 
@@ -52,6 +54,13 @@ impl Snapshots {
     /// fades within a few observations. Flat worlds skip the reweight
     /// entirely. The rebuilt snapshot is alias-prepared, so every
     /// subsequent draw is O(1).
+    ///
+    /// With a reputation book (`rep`, defenses on) the snapshot is also
+    /// reputation-gated: quarantined peers are dropped outright and the
+    /// remaining candidates' stakes are damped by their effective
+    /// reputation weight — a misbehaving peer fades from selection long
+    /// before its stake drains. `rep: None` (defenses off) is bit-exactly
+    /// the pre-defense snapshot.
     #[allow(clippy::too_many_arguments)]
     pub fn refresh(
         &mut self,
@@ -61,6 +70,7 @@ impl Snapshots {
         view: &PeerView,
         ledger: &LedgerManager,
         feed: &LatencyFeed,
+        rep: Option<&ReputationBook>,
         now: Time,
     ) {
         let view_clock = view.clock();
@@ -68,18 +78,23 @@ impl Snapshots {
         let interval = view.config().interval.max(1e-6);
         let time_bucket = (now / interval) as u64;
         let (locality_epoch, estimator_version) = feed.cache_key();
+        let rep_version = rep.map_or(0, |b| b.version());
         if let Some(c) = &self.cache {
             if c.view_clock == view_clock
                 && c.ledger_version == ledger_version
                 && c.time_bucket == time_bucket
                 && c.locality_epoch == locality_epoch
                 && c.estimator_version == estimator_version
+                && c.rep_version == rep_version
             {
                 return;
             }
         }
         let mut snap = StakeSnapshot::new(&ledger.stakes(), Some(id));
         snap.retain(|n| view.is_alive(n, now));
+        if let Some(book) = rep {
+            snap.retain(|n| !book.is_quarantined(n));
+        }
         if participation.scores_candidates(policy, feed.has_estimator()) {
             snap.reweight(|n| {
                 participation.candidate_weight(
@@ -88,6 +103,9 @@ impl Snapshots {
                 )
             });
         }
+        if let Some(book) = rep {
+            snap.reweight(|n| book.weight(n, now));
+        }
         snap.prepare();
         self.cache = Some(SnapCache {
             view_clock,
@@ -95,6 +113,7 @@ impl Snapshots {
             time_bucket,
             locality_epoch,
             estimator_version,
+            rep_version,
             snap,
         });
     }

@@ -111,11 +111,22 @@ impl DuelState {
         }
     }
 
-    /// Majority tally. Judges are an even k=2 in the paper's ablation, so
-    /// ties are common; a tied vote falls back to the raw pairwise
-    /// comparison of the two responses themselves (the originator casts the
-    /// deciding comparison), so ties still carry the quality signal rather
-    /// than rewarding whoever answered faster.
+    /// Majority tally, decided by an explicit deterministic ladder:
+    ///
+    /// 1. **Vote majority** — more judge votes wins.
+    /// 2. **Response quality** — on a tied vote (k=2 makes ties common, and
+    ///    "no verdicts at all" is the degenerate 0–0 tie), the raw pairwise
+    ///    comparison of the two responses decides: the originator casts the
+    ///    deciding comparison, so ties still carry the quality signal
+    ///    rather than rewarding whoever answered faster. A missing
+    ///    response scores `-inf`, so a no-show can never win against any
+    ///    real answer.
+    /// 3. **Lower node id** — an *exact* quality tie (both responses
+    ///    missing, or bit-identical qualities) goes to the lower-numbered
+    ///    executor. This never depends on the sampling order of
+    ///    `executors`, so the outcome is a pure function of the duel's
+    ///    contents. (At runtime qualities are continuous draws, so this
+    ///    rung only fires in degenerate/crafted states.)
     pub fn tally(&self) -> DuelOutcome {
         let count = |n: NodeId| {
             self.verdicts.iter().filter(|(_, w)| *w == n).count()
@@ -129,15 +140,16 @@ impl DuelState {
                 .map(|r| r.quality)
                 .unwrap_or(f64::NEG_INFINITY)
         };
-        let (winner, loser, votes) = if va > vb {
-            (a, b, va)
-        } else if vb > va {
-            (b, a, vb)
-        } else if quality_of(a) >= quality_of(b) {
-            (a, b, va)
+        let (qa, qb) = (quality_of(a), quality_of(b));
+        let a_wins = if va != vb {
+            va > vb
+        } else if qa != qb {
+            qa > qb
         } else {
-            (b, a, vb)
+            a.0 < b.0
         };
+        let (winner, loser, votes) =
+            if a_wins { (a, b, va) } else { (b, a, vb) };
         DuelOutcome {
             winner,
             loser,
@@ -246,6 +258,53 @@ mod tests {
         d.add_verdict(NodeId(3), NodeId(1));
         let out = d.add_verdict(NodeId(4), NodeId(2)).unwrap();
         assert_eq!(out.winner, NodeId(1));
+    }
+
+    #[test]
+    fn tally_with_no_verdicts_is_decided_by_quality() {
+        // Degenerate state: settle forced with zero verdicts submitted
+        // (e.g. a judgeless tally). The quality rung decides, explicitly.
+        let mut d = DuelState::new(req(), [NodeId(1), NodeId(2)], 0.0);
+        d.add_response(resp(1, 0.4, 1.0));
+        d.add_response(resp(2, 0.9, 2.0));
+        let out = d.tally();
+        assert_eq!(out.winner, NodeId(2));
+        assert_eq!(out.loser, NodeId(1));
+        assert_eq!(out.votes_for_winner, 0);
+        assert_eq!(out.votes_total, 0);
+    }
+
+    #[test]
+    fn tally_exact_tie_goes_to_lower_node_id() {
+        // Exact quality tie AND vote tie: the final rung picks the lower
+        // node id regardless of executor-array order.
+        for executors in [[NodeId(5), NodeId(2)], [NodeId(2), NodeId(5)]] {
+            let mut d = DuelState::new(req(), executors, 0.0);
+            d.add_response(resp(executors[0].0, 0.7, 1.0));
+            d.add_response(resp(executors[1].0, 0.7, 2.0));
+            let out = d.tally();
+            assert_eq!(out.winner, NodeId(2), "order {executors:?}");
+            assert_eq!(out.loser, NodeId(5));
+        }
+        // Both responses missing (double no-show): same deterministic rule.
+        let d = DuelState::new(req(), [NodeId(9), NodeId(3)], 0.0);
+        let out = d.tally();
+        assert_eq!(out.winner, NodeId(3));
+        assert_eq!(out.loser, NodeId(9));
+        assert_eq!(out.votes_total, 0);
+    }
+
+    #[test]
+    fn tally_missing_response_loses_to_any_real_answer() {
+        // One executor never responded: -inf quality, so on a tied vote the
+        // no-show loses even to a terrible answer.
+        let mut d = DuelState::new(req(), [NodeId(1), NodeId(2)], 0.0);
+        d.add_response(resp(2, 0.01, 1.0));
+        d.assign_judges(vec![NodeId(3), NodeId(4)]);
+        d.add_verdict(NodeId(3), NodeId(1));
+        let out = d.add_verdict(NodeId(4), NodeId(2)).unwrap();
+        assert_eq!(out.winner, NodeId(2));
+        assert_eq!(out.loser, NodeId(1));
     }
 
     #[test]

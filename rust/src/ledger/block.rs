@@ -10,7 +10,7 @@
 //! | Signature  | Digital signature              |
 
 use super::ops::CreditOp;
-use crate::crypto::{Hash256, Hasher, KeyStore, NodeKey, Signature};
+use crate::crypto::{Hash256, Hasher, KeyStore, NodeKey, Signature, DOMAIN_BLOCK};
 use crate::types::{NodeId, Time};
 
 #[derive(Debug, Clone, PartialEq)]
@@ -25,14 +25,15 @@ pub struct Block {
 
 impl Block {
     /// Hash of (parent, timestamp, ops, proposer) — the content the id and
-    /// signature commit to.
+    /// signature commit to. Domain-tagged with [`DOMAIN_BLOCK`] so a block
+    /// id lives in a different hash space from work receipts.
     pub fn compute_id(
         parent: &Hash256,
         timestamp: Time,
         ops: &[CreditOp],
         proposer: NodeId,
     ) -> Hash256 {
-        let mut h = Hasher::new();
+        let mut h = Hasher::with_domain(DOMAIN_BLOCK);
         h.update(b"wwwserve-block")
             .update(&parent.0)
             .update_u64(timestamp.to_bits())

@@ -132,6 +132,31 @@
 //! fingerprints match either way (`rust/tests/replay_equivalence.rs`).
 //! `benches/fleet_scale.rs` bounds the enabled-tracing overhead at the
 //! default sample rate to < 5% events/sec.
+//!
+//! ## Byzantine robustness
+//!
+//! Open participation includes participants that misbehave. The attacker
+//! side lives in `policy/byzantine.rs` as ordinary participation
+//! policies, selectable per `topology.fleet` group via a `"byzantine"`
+//! key: `FreeRider` (accepts delegations, silently drops them),
+//! `LatencyLiar` (poisons the RTT rows it piggybacks on gossip),
+//! `ResultFaker` (junk answers behind forged receipt digests) and
+//! `Colluder` (faker + reputation slander). The defense side is the
+//! [`reputation`] module plus hooks through the coordinator, armed by a
+//! declarative `defenses` config block: **signed work receipts**
+//! ([`crypto::Receipt`], verified at settlement — unreceipted or
+//! mis-signed work is never paid), a **per-peer reputation book** fed by
+//! first-hand evidence (delegation timeouts, receipt failures, duel
+//! outcomes) that down-weights and ultimately quarantines misbehaving
+//! peers out of the dispatch candidate set, bounded-influence
+//! **reputation gossip**, and **hearsay capping** on gossiped RTT
+//! summaries. The full threat-model table (and what is out of scope —
+//! Sybil identities, judge-majority collusion) heads the [`reputation`]
+//! module. With `defenses.enabled = false` (the default) and no
+//! attackers, every hook is inert and replay fingerprints stay
+//! bit-identical (`rust/tests/replay_equivalence.rs`);
+//! `benches/byzantine.rs` sweeps the Byzantine fraction and shows SLO
+//! attainment and honest-node revenue holding up with defenses on.
 
 pub mod backend;
 pub mod benchlib;
@@ -149,6 +174,7 @@ pub mod net;
 pub mod obs;
 pub mod policy;
 pub mod pos;
+pub mod reputation;
 pub mod repro;
 pub mod runtime;
 pub mod schedulers;

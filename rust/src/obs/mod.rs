@@ -39,14 +39,16 @@
 //! | `timeout`        | `dispatch::expire`         | probe/response deadline expired       |
 //! | `duel_settle`    | `duel::on_judge_verdict`   | judge quorum settled a duel           |
 //! | `settle`         | `dispatch::on_response`    | origin paid and recorded the result   |
+//! | `receipt_reject` | `dispatch::on_response`    | executor receipt missing/forged       |
 //!
 //! Node-scoped spans (no request; gated only on `enabled`):
 //!
-//! | kind           | emitted by                  | `detail`                    |
-//! |----------------|-----------------------------|-----------------------------|
-//! | `gossip_round` | `gossip_driver::tick`       | round number                |
-//! | `rtt_observed` | `latency_feed`              | RTT in microseconds         |
-//! | `scale`        | `World::eval_capacity`      | [`CapacityAction`] detail   |
+//! | kind             | emitted by                  | `detail`                    |
+//! |------------------|-----------------------------|-----------------------------|
+//! | `gossip_round`   | `gossip_driver::tick`       | round number                |
+//! | `rtt_observed`   | `latency_feed`              | RTT in microseconds         |
+//! | `scale`          | `World::eval_capacity`      | [`CapacityAction`] detail   |
+//! | `quarantine`     | `ctx::rep_event`            | 1 = quarantined, 0 = released |
 //!
 //! [`CapacityAction`]: crate::capacity::CapacityAction
 //!
@@ -178,6 +180,8 @@ pub enum SpanKind {
     Scale,
     GossipRound,
     RttObserved,
+    ReceiptReject,
+    Quarantine,
 }
 
 impl SpanKind {
@@ -197,6 +201,8 @@ impl SpanKind {
             SpanKind::Scale => "scale",
             SpanKind::GossipRound => "gossip_round",
             SpanKind::RttObserved => "rtt_observed",
+            SpanKind::ReceiptReject => "receipt_reject",
+            SpanKind::Quarantine => "quarantine",
         }
     }
 }

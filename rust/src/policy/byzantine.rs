@@ -1,0 +1,357 @@
+//! Byzantine participation policies — the attacker side of the
+//! adversarial-robustness layer (defenses live in `crate::reputation`,
+//! `coordinator/dispatch.rs` receipt checks, and
+//! `coordinator/latency_feed.rs` hearsay capping; the
+//! `reputation` module header carries the full threat-model table).
+//!
+//! Each attacker is an ordinary [`ParticipationPolicy`] selected per
+//! `topology.fleet` group via the declarative `"byzantine"` config key, so
+//! a scenario mixes honest and misbehaving fleets the same way it mixes
+//! honest personalities:
+//!
+//! * [`FreeRider`] — accepts every probe, then silently drops the
+//!   delegated work. The requester burns its full response timeout before
+//!   falling back locally; the free-rider spends zero compute.
+//! * [`LatencyLiar`] — behaves honestly at the dispatch boundary but
+//!   rewrites the RTT rows it piggybacks on gossip to a *plausible* tiny
+//!   value, luring same-region peers into delegating toward paths that are
+//!   actually slow. (Plausible, because absurd values are rejected by the
+//!   always-on junk filter regardless of defenses — a competent liar stays
+//!   inside the believable range.)
+//! * [`ResultFaker`] — accepts work and answers fast, but at a fraction of
+//!   its real quality, and signs receipts over a forged response digest.
+//!   Undefended, it gets paid for junk; defended, receipt verification
+//!   refuses payment and duels slash it.
+//! * [`Colluder`] — a result-faker that additionally slanders other nodes
+//!   in its gossiped reputation rows, trying to get honest peers
+//!   quarantined. Remote-opinion influence bounding keeps slander alone
+//!   below the quarantine threshold.
+//!
+//! RNG discipline: attacker decisions that don't need randomness draw none
+//! (accept-always, drop-always), so a Byzantine world replays
+//! bit-identically from its seed like any other.
+
+use super::participation::{
+    OffloadCtx, ParticipationPolicy, ProbeCtx,
+};
+use super::NodePolicy;
+use crate::util::rng::Rng;
+
+/// One-way latency (seconds) the liar advertises for every row it gossips:
+/// fast enough to attract traffic, plausible enough to pass junk filtering.
+pub const LIAR_RTT: f64 = 0.0005;
+
+/// Quality multiplier for faked delegated work.
+pub const FAKER_QUALITY: f64 = 0.25;
+
+/// Quality multiplier for the colluder (mediocre rather than obviously
+/// junk — it relies on slander, not speed, to damage the network).
+pub const COLLUDER_QUALITY: f64 = 0.5;
+
+/// Node ids a colluder slanders in its outgoing reputation rows.
+pub const COLLUDER_SLANDER_IDS: u32 = 8;
+
+/// Accepts every delegation and silently drops it (see module docs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FreeRider;
+
+impl ParticipationPolicy for FreeRider {
+    fn name(&self) -> &'static str {
+        "free_rider"
+    }
+
+    fn should_offload(
+        &self,
+        p: &NodePolicy,
+        ctx: &OffloadCtx,
+        rng: &mut Rng,
+    ) -> bool {
+        // Its own users are served like any default node's.
+        p.should_offload(ctx.utilization, ctx.queue_len, ctx.nearest_latency, rng)
+    }
+
+    fn accept_probe(&self, _: &NodePolicy, _: &ProbeCtx, _: &mut Rng) -> bool {
+        // Dropping is free, so capacity is irrelevant: take everything.
+        true
+    }
+
+    fn delivers_responses(&self) -> bool {
+        false
+    }
+}
+
+/// Honest dispatch behaviour + poisoned gossip RTT rows (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyLiar {
+    /// The fake one-way estimate written into every outgoing row.
+    pub fake_rtt: f64,
+}
+
+impl Default for LatencyLiar {
+    fn default() -> Self {
+        LatencyLiar { fake_rtt: LIAR_RTT }
+    }
+}
+
+impl ParticipationPolicy for LatencyLiar {
+    fn name(&self) -> &'static str {
+        "latency_liar"
+    }
+
+    fn should_offload(
+        &self,
+        p: &NodePolicy,
+        ctx: &OffloadCtx,
+        rng: &mut Rng,
+    ) -> bool {
+        p.should_offload(ctx.utilization, ctx.queue_len, ctx.nearest_latency, rng)
+    }
+
+    fn accept_probe(
+        &self,
+        p: &NodePolicy,
+        ctx: &ProbeCtx,
+        rng: &mut Rng,
+    ) -> bool {
+        p.should_accept(ctx.utilization, ctx.queue_len, rng)
+    }
+
+    fn corrupt_rtts(&self, rtts: &mut Vec<(u32, u32, f64)>) {
+        for row in rtts.iter_mut() {
+            row.2 = self.fake_rtt;
+        }
+    }
+}
+
+/// Fast junk answers + forged receipts (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct ResultFaker {
+    /// Multiplier on the backend's intrinsic quality for delegated work.
+    pub quality_factor: f64,
+}
+
+impl Default for ResultFaker {
+    fn default() -> Self {
+        ResultFaker { quality_factor: FAKER_QUALITY }
+    }
+}
+
+impl ParticipationPolicy for ResultFaker {
+    fn name(&self) -> &'static str {
+        "result_faker"
+    }
+
+    fn should_offload(
+        &self,
+        p: &NodePolicy,
+        ctx: &OffloadCtx,
+        rng: &mut Rng,
+    ) -> bool {
+        p.should_offload(ctx.utilization, ctx.queue_len, ctx.nearest_latency, rng)
+    }
+
+    fn accept_probe(&self, p: &NodePolicy, ctx: &ProbeCtx, _: &mut Rng) -> bool {
+        // Greedy but capacity-bounded (it does run the work — cheaply).
+        ctx.utilization < 1.0 && ctx.queue_len <= p.queue_threshold
+    }
+
+    fn quality_factor(&self) -> f64 {
+        self.quality_factor
+    }
+
+    fn honest_receipts(&self) -> bool {
+        false
+    }
+}
+
+/// Colluding-region attacker: mediocre work plus reputation slander in
+/// gossip (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct Colluder {
+    pub quality_factor: f64,
+}
+
+impl Default for Colluder {
+    fn default() -> Self {
+        Colluder { quality_factor: COLLUDER_QUALITY }
+    }
+}
+
+impl ParticipationPolicy for Colluder {
+    fn name(&self) -> &'static str {
+        "colluder"
+    }
+
+    fn should_offload(
+        &self,
+        p: &NodePolicy,
+        ctx: &OffloadCtx,
+        rng: &mut Rng,
+    ) -> bool {
+        p.should_offload(ctx.utilization, ctx.queue_len, ctx.nearest_latency, rng)
+    }
+
+    fn accept_probe(&self, p: &NodePolicy, ctx: &ProbeCtx, _: &mut Rng) -> bool {
+        ctx.utilization < 1.0 && ctx.queue_len <= p.queue_threshold
+    }
+
+    fn quality_factor(&self) -> f64 {
+        self.quality_factor
+    }
+
+    fn corrupt_rep(&self, rep: &mut Vec<(u32, u32)>) {
+        // Slander a fixed band of node ids as worthless. Crude, but the
+        // point is the defense: bounded remote influence means this alone
+        // can never quarantine an honest peer.
+        rep.clear();
+        for n in 0..COLLUDER_SLANDER_IDS {
+            rep.push((n, 0));
+        }
+    }
+}
+
+/// Declarative selector for the attacker policies — what the config
+/// layer's fleet-group `"byzantine"` key parses into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ByzantineKind {
+    FreeRider,
+    LatencyLiar,
+    ResultFaker,
+    Colluder,
+}
+
+impl ByzantineKind {
+    /// Parse a config-file name. `None` for unknown names — the config
+    /// layer turns that into a loud error.
+    pub fn parse(s: &str) -> Option<ByzantineKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "free_rider" => ByzantineKind::FreeRider,
+            "latency_liar" => ByzantineKind::LatencyLiar,
+            "result_faker" => ByzantineKind::ResultFaker,
+            "colluder" => ByzantineKind::Colluder,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ByzantineKind::FreeRider => "free_rider",
+            ByzantineKind::LatencyLiar => "latency_liar",
+            ByzantineKind::ResultFaker => "result_faker",
+            ByzantineKind::Colluder => "colluder",
+        }
+    }
+
+    /// Instantiate the attacker policy object.
+    pub fn build(self) -> Box<dyn ParticipationPolicy> {
+        match self {
+            ByzantineKind::FreeRider => Box::new(FreeRider),
+            ByzantineKind::LatencyLiar => Box::new(LatencyLiar::default()),
+            ByzantineKind::ResultFaker => Box::new(ResultFaker::default()),
+            ByzantineKind::Colluder => Box::new(Colluder::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::NodeId;
+
+    fn probe() -> ProbeCtx {
+        ProbeCtx {
+            from: NodeId(7),
+            prompt_tokens: 100,
+            output_tokens: 500,
+            utilization: 0.3,
+            queue_len: 0,
+        }
+    }
+
+    #[test]
+    fn free_rider_accepts_everything_and_delivers_nothing() {
+        let f = FreeRider;
+        let p = NodePolicy { accept_freq: 0.0, ..Default::default() };
+        let mut rng = Rng::new(1);
+        let saturated = ProbeCtx { utilization: 1.0, queue_len: 99, ..probe() };
+        assert!(f.accept_probe(&p, &saturated, &mut rng));
+        assert!(!f.delivers_responses());
+        // Honest-looking everywhere else.
+        assert!((f.quality_factor() - 1.0).abs() < 1e-12);
+        assert!(f.honest_receipts());
+    }
+
+    #[test]
+    fn latency_liar_rewrites_outgoing_rows_only() {
+        let l = LatencyLiar::default();
+        let mut rows = vec![(0, 1, 0.08), (0, 2, 0.15)];
+        l.corrupt_rtts(&mut rows);
+        assert_eq!(rows, vec![(0, 1, LIAR_RTT), (0, 2, LIAR_RTT)]);
+        assert!(l.delivers_responses());
+        assert!(l.honest_receipts());
+        // The lie is plausible: finite, positive, well under any sane
+        // junk-rejection threshold.
+        assert!(LIAR_RTT > 0.0 && LIAR_RTT < 1.0);
+    }
+
+    #[test]
+    fn result_faker_fakes_quality_and_receipts() {
+        let f = ResultFaker::default();
+        assert!((f.quality_factor() - FAKER_QUALITY).abs() < 1e-12);
+        assert!(!f.honest_receipts());
+        assert!(f.delivers_responses());
+        // Still capacity-bounded: a saturated faker declines.
+        let p = NodePolicy::default();
+        let mut rng = Rng::new(2);
+        let full = ProbeCtx { utilization: 1.0, ..probe() };
+        assert!(!f.accept_probe(&p, &full, &mut rng));
+        assert!(f.accept_probe(&p, &probe(), &mut rng));
+    }
+
+    #[test]
+    fn colluder_slanders_fixed_band() {
+        let c = Colluder::default();
+        let mut rep = vec![(3, 700)];
+        c.corrupt_rep(&mut rep);
+        assert_eq!(rep.len(), COLLUDER_SLANDER_IDS as usize);
+        assert!(rep.iter().all(|&(_, m)| m == 0));
+        assert!((c.quality_factor() - COLLUDER_QUALITY).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        for (name, kind) in [
+            ("free_rider", ByzantineKind::FreeRider),
+            ("latency_liar", ByzantineKind::LatencyLiar),
+            ("result_faker", ByzantineKind::ResultFaker),
+            ("colluder", ByzantineKind::Colluder),
+        ] {
+            assert_eq!(ByzantineKind::parse(name), Some(kind));
+            assert_eq!(kind.name(), name);
+            assert_eq!(kind.build().name(), name);
+        }
+        assert_eq!(
+            ByzantineKind::parse("FREE_RIDER"),
+            Some(ByzantineKind::FreeRider)
+        );
+        assert!(ByzantineKind::parse("saint").is_none());
+    }
+
+    #[test]
+    fn honest_policies_keep_neutral_byzantine_defaults() {
+        use crate::policy::{DefaultPolicy, GreedyLocal, RequesterOnly};
+        let honest: [&dyn ParticipationPolicy; 3] =
+            [&DefaultPolicy, &RequesterOnly, &GreedyLocal];
+        for p in honest {
+            assert!(p.delivers_responses(), "{}", p.name());
+            assert!((p.quality_factor() - 1.0).abs() < 1e-12, "{}", p.name());
+            assert!(p.honest_receipts(), "{}", p.name());
+            let mut rows = vec![(0, 1, 0.5)];
+            p.corrupt_rtts(&mut rows);
+            assert_eq!(rows, vec![(0, 1, 0.5)], "{}", p.name());
+            let mut rep = vec![(2, 300)];
+            p.corrupt_rep(&mut rep);
+            assert_eq!(rep, vec![(2, 300)], "{}", p.name());
+        }
+    }
+}

@@ -15,8 +15,18 @@
 //! alternative personalities ([`RequesterOnly`], [`GreedyLocal`],
 //! [`SelectiveAcceptor`]) selectable per fleet group from scenario configs.
 
+//!
+//! Byzantine personalities — free-riders, latency liars, result fakers,
+//! colluders — live in [`byzantine`] and are selected per fleet group via
+//! the `"byzantine"` config key; the defenses that counter them are
+//! documented in `crate::reputation`.
+
+pub mod byzantine;
 pub mod participation;
 
+pub use byzantine::{
+    ByzantineKind, Colluder, FreeRider, LatencyLiar, ResultFaker,
+};
 pub use participation::{
     DefaultPolicy, GreedyLocal, OffloadCtx, ParticipationKind,
     ParticipationPolicy, ProbeCtx, RequesterOnly, SelectiveAcceptor,

@@ -112,6 +112,41 @@ pub trait ParticipationPolicy: std::fmt::Debug {
     fn rebalances_queue(&self, p: &NodePolicy) -> bool {
         !p.requester_only
     }
+
+    // --- Byzantine behaviour hooks (see `policy::byzantine`) -------------
+    //
+    // Honest policies keep every default below; the defaults are RNG-free
+    // and behaviour-neutral, so adding them changed no replay stream.
+
+    /// Does this node actually execute and return delegated work it
+    /// accepted? `false` models the free-rider: the delegation is
+    /// swallowed at admission and the requester discovers the theft only
+    /// via its response timeout.
+    fn delivers_responses(&self) -> bool {
+        true
+    }
+
+    /// Multiplier on the backend's intrinsic quality for *delegated* work
+    /// (1.0 = honest). A result-faker serves junk to outsiders while its
+    /// own users get full quality.
+    fn quality_factor(&self) -> f64 {
+        1.0
+    }
+
+    /// Does this node sign truthful receipts over the work it returns?
+    /// `false` forges the response digest, which receipt verification at
+    /// settlement catches.
+    fn honest_receipts(&self) -> bool {
+        true
+    }
+
+    /// Mutate the outgoing gossiped RTT rows (the latency-liar hook;
+    /// honest nodes leave them untouched).
+    fn corrupt_rtts(&self, _rtts: &mut Vec<(u32, u32, f64)>) {}
+
+    /// Mutate the outgoing gossiped reputation rows (the colluder's
+    /// slander hook; honest nodes leave them untouched).
+    fn corrupt_rep(&self, _rep: &mut Vec<(u32, u32)>) {}
 }
 
 /// The pre-trait behaviour: every decision delegates to the corresponding

@@ -1,0 +1,572 @@
+//! Per-peer reputation + the defense configuration against Byzantine
+//! participants.
+//!
+//! ## Threat model
+//!
+//! The network's premise — every provider freely chooses its
+//! participation policy — includes providers that misbehave. The attacker
+//! personalities live in `policy/byzantine.rs` as ordinary
+//! [`ParticipationPolicy`] implementations; each is countered by a
+//! specific defense wired through the coordinator:
+//!
+//! | attacker      | behaviour                                   | caught by |
+//! |---------------|---------------------------------------------|-----------|
+//! | `FreeRider`   | accepts delegations, silently drops them    | delegation timeouts feed [`RepEvent::Timeout`]; repeat offenders fall under the quarantine threshold and stop being sampled |
+//! | `ResultFaker` | returns junk answers, forges receipt digests| receipt verification at settlement (`RepEvent::ReceiptFail`, work never paid) + duel losses ([`RepEvent::DuelLoss`]) |
+//! | `LatencyLiar` | poisons piggybacked RTT rows in gossip      | hearsay capping in `coordinator/latency_feed.rs`: a gossiped cell can never move more than [`DefenseConfig::hearsay_cap`]× away from the node's own expectation |
+//! | `Colluder`    | faker quality + slanders honest peers in gossiped reputation rows | remote opinions are influence-bounded: hearsay alone scales an honest score by at most `0.5 + 0.5·remote ≥ 0.5`, which cannot cross the default quarantine threshold without own-evidence corroboration |
+//!
+//! **Out of scope:** Sybil identities (node ids are fixed at world build;
+//! key distribution is assumed honest), collusion majorities among judges
+//! (quorum sampling assumes an honest supermajority of stake, the paper's
+//! Assumption 5.2), and duel-settlement receipt gating (duel responses
+//! with bad receipts are rejected at ingest, but the duel reward path
+//! itself still settles on judge verdicts alone).
+//!
+//! ## Reputation model
+//!
+//! [`ReputationBook`] is deterministic and RNG-free. Each peer has an
+//! **own-evidence score** in `[0, 1]` (default 1.0) driven by events this
+//! node observed first-hand: multiplicative penalties for timeouts,
+//! receipt failures and duel losses; bounded recovery on verified
+//! successes; and a slow linear time-heal so a transiently faulty peer is
+//! eventually re-tried. A **remote opinion** merged from gossiped
+//! reputation rows ([`ReputationBook::rep_rows`]) modulates the own score
+//! with bounded influence: `effective = own · (0.5 + 0.5 · remote)`.
+//! Dispatch down-weights candidates by `effective`, and past
+//! [`DefenseConfig::quarantine_threshold`] the peer is quarantined out of
+//! the candidate set entirely (released with hysteresis once it heals).
+//!
+//! With `defenses.enabled = false` (the default) nothing in this module
+//! is consulted: no receipts on the wire, no reputation rows in gossip,
+//! no extra RNG draws — replay fingerprints stay bit-identical to the
+//! defenseless baseline (pinned in `rust/tests/replay_equivalence.rs`).
+//!
+//! [`ParticipationPolicy`]: crate::policy::ParticipationPolicy
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::crypto::{KeyStore, NodeKey};
+use crate::types::{NodeId, Time};
+
+/// Reputation rows piggybacked on gossip deltas: `(node, milli-score in
+/// 0..=1000)` pairs of peers the sender distrusts from its own evidence.
+pub type RepRows = Vec<(u32, u32)>;
+
+/// Declarative `defenses` config block knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DefenseConfig {
+    /// Master switch. `false` (the default) makes every defense hook a
+    /// no-op and keeps the wire format byte-identical to the defenseless
+    /// network.
+    pub enabled: bool,
+    /// Verify signed work receipts at settlement; unreceipted or
+    /// mis-signed delegated work is never paid.
+    pub receipts: bool,
+    /// Track per-peer reputation, gossip it, and gate dispatch on it.
+    pub reputation: bool,
+    /// Effective score below which a peer is quarantined out of the
+    /// dispatch candidate set (released above 1.5× with hysteresis).
+    pub quarantine_threshold: f64,
+    /// Bound on gossiped RTT hearsay: a merged cell value is clamped to
+    /// within this factor of the estimator's own expectation for the cell.
+    pub hearsay_cap: f64,
+}
+
+impl Default for DefenseConfig {
+    fn default() -> Self {
+        DefenseConfig {
+            enabled: false,
+            receipts: true,
+            reputation: true,
+            quarantine_threshold: 0.25,
+            hearsay_cap: 3.0,
+        }
+    }
+}
+
+impl DefenseConfig {
+    /// Validate, returning a descriptive error (the config-parser path).
+    pub fn check(&self) -> Result<(), String> {
+        if !self.quarantine_threshold.is_finite()
+            || !(0.0..1.0).contains(&self.quarantine_threshold)
+        {
+            return Err(format!(
+                "quarantine_threshold must be a finite fraction in [0, 1), \
+                 got {}",
+                self.quarantine_threshold
+            ));
+        }
+        if !self.hearsay_cap.is_finite() || self.hearsay_cap < 1.0 {
+            return Err(format!(
+                "hearsay_cap must be a finite factor >= 1, got {}",
+                self.hearsay_cap
+            ));
+        }
+        Ok(())
+    }
+
+    /// Panicking twin of [`check`](Self::check) for programmatic configs.
+    pub fn validate(&self) {
+        if let Err(e) = self.check() {
+            panic!("DefenseConfig: {e}");
+        }
+    }
+}
+
+/// First-hand evidence about a peer, fed into [`ReputationBook::record`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RepEvent {
+    /// A delegated request settled cleanly (receipt verified when on).
+    Success,
+    /// A delegated request timed out with no response.
+    Timeout,
+    /// A settlement receipt was missing, mis-signed, or didn't match the
+    /// response content.
+    ReceiptFail,
+    /// The peer won a duel this node originated.
+    DuelWin,
+    /// The peer lost a duel this node originated.
+    DuelLoss,
+}
+
+/// Quarantine-state change caused by an update (for span emission).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transition {
+    None,
+    Quarantined,
+    Released,
+}
+
+/// Multiplicative own-score penalty per event (see module docs).
+fn penalty(ev: RepEvent) -> Option<f64> {
+    match ev {
+        RepEvent::Timeout => Some(0.7),
+        RepEvent::ReceiptFail => Some(0.4),
+        RepEvent::DuelLoss => Some(0.6),
+        RepEvent::Success | RepEvent::DuelWin => None,
+    }
+}
+
+/// Recovery step toward 1.0 on positive events.
+const RECOVER_STEP: f64 = 0.1;
+
+/// Linear time-heal rate (score per second of silence) — a transiently
+/// faulty peer is fully rehabilitated after ~500 s without new evidence.
+const HEAL_PER_SEC: f64 = 0.002;
+
+/// Own scores below this are worth gossiping (healthy peers are implied).
+const SHARE_BELOW: f64 = 0.95;
+
+/// Max reputation rows piggybacked per gossip message.
+const MAX_REP_ROWS: usize = 16;
+
+/// Release hysteresis: quarantine lifts only above `threshold * RELEASE_FACTOR`.
+const RELEASE_FACTOR: f64 = 1.5;
+
+/// Floor for the dispatch weight of a non-quarantined peer (keeps alias
+/// sampling away from all-zero weight vectors).
+const MIN_WEIGHT: f64 = 0.01;
+
+#[derive(Debug, Clone, Copy)]
+struct OwnScore {
+    score: f64,
+    last_update: Time,
+}
+
+/// Deterministic per-peer reputation state for one node. See module docs.
+#[derive(Debug, Clone, Default)]
+pub struct ReputationBook {
+    own: BTreeMap<u32, OwnScore>,
+    remote: BTreeMap<u32, f64>,
+    quarantined: BTreeSet<u32>,
+    threshold: f64,
+    version: u64,
+}
+
+impl ReputationBook {
+    pub fn new(quarantine_threshold: f64) -> ReputationBook {
+        ReputationBook {
+            threshold: quarantine_threshold,
+            ..Default::default()
+        }
+    }
+
+    /// Bumped on every material change — the snapshot-cache staleness key.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn healed(&self, n: u32, now: Time) -> f64 {
+        match self.own.get(&n) {
+            Some(s) => {
+                let dt = (now - s.last_update).max(0.0);
+                (s.score + HEAL_PER_SEC * dt).min(1.0)
+            }
+            None => 1.0,
+        }
+    }
+
+    /// Effective score: own evidence modulated by bounded remote opinion.
+    pub fn effective(&self, n: NodeId, now: Time) -> f64 {
+        let own = self.healed(n.0, now);
+        let remote = self.remote.get(&n.0).copied().unwrap_or(1.0);
+        own * (0.5 + 0.5 * remote)
+    }
+
+    /// Dispatch candidate weight: the effective score, floored so healthy
+    /// sampling structures never see an all-zero vector.
+    pub fn weight(&self, n: NodeId, now: Time) -> f64 {
+        self.effective(n, now).max(MIN_WEIGHT)
+    }
+
+    pub fn is_quarantined(&self, n: NodeId) -> bool {
+        self.quarantined.contains(&n.0)
+    }
+
+    pub fn quarantined_count(&self) -> usize {
+        self.quarantined.len()
+    }
+
+    fn update_quarantine(&mut self, n: u32, now: Time) -> Transition {
+        let eff = self.effective(NodeId(n), now);
+        if self.quarantined.contains(&n) {
+            if eff > self.threshold * RELEASE_FACTOR {
+                self.quarantined.remove(&n);
+                self.version += 1;
+                return Transition::Released;
+            }
+        } else if eff < self.threshold {
+            self.quarantined.insert(n);
+            self.version += 1;
+            return Transition::Quarantined;
+        }
+        Transition::None
+    }
+
+    /// Fold first-hand evidence about `peer` into its own-evidence score.
+    pub fn record(
+        &mut self,
+        peer: NodeId,
+        ev: RepEvent,
+        now: Time,
+    ) -> Transition {
+        let healed = self.healed(peer.0, now);
+        let score = match penalty(ev) {
+            Some(mult) => healed * mult,
+            None => healed + RECOVER_STEP * (1.0 - healed),
+        };
+        self.own
+            .insert(peer.0, OwnScore { score, last_update: now });
+        self.version += 1;
+        self.update_quarantine(peer.0, now)
+    }
+
+    /// Own-evidence rows worth gossiping: `(node, milli-score)` pairs for
+    /// peers this node actively distrusts, in ascending node order,
+    /// bounded at [`MAX_REP_ROWS`]. Healthy peers are never shipped — the
+    /// absence of a row means "no complaints".
+    pub fn rep_rows(&self, now: Time) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        for &n in self.own.keys() {
+            let healed = self.healed(n, now);
+            if healed < SHARE_BELOW {
+                out.push((n, (healed.clamp(0.0, 1.0) * 1000.0) as u32));
+                if out.len() >= MAX_REP_ROWS {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Merge gossiped reputation rows from a peer as remote opinion.
+    /// Malformed rows (milli-score out of range, self-referential) are
+    /// dropped. Influence is bounded by construction — see
+    /// [`effective`](Self::effective) — so slander alone can never push an
+    /// honest peer below the default quarantine threshold. Returns any
+    /// quarantine transitions caused (own evidence already present can be
+    /// tipped over the edge by corroborating hearsay).
+    pub fn merge_remote(
+        &mut self,
+        me: NodeId,
+        rows: &[(u32, u32)],
+        now: Time,
+    ) -> Vec<(NodeId, Transition)> {
+        let mut transitions = Vec::new();
+        for &(n, milli) in rows {
+            if n == me.0 || milli > 1000 {
+                continue;
+            }
+            let opinion = milli as f64 / 1000.0;
+            let old = self.remote.get(&n).copied().unwrap_or(1.0);
+            let merged = 0.5 * old + 0.5 * opinion;
+            if (merged - old).abs() > 1e-9 {
+                self.remote.insert(n, merged);
+                self.version += 1;
+                let t = self.update_quarantine(n, now);
+                if t != Transition::None {
+                    transitions.push((NodeId(n), t));
+                }
+            }
+        }
+        transitions
+    }
+}
+
+/// Per-node defense state installed by `World::new` when
+/// `defenses.enabled` — the signing key, the network key store, and the
+/// reputation book. The default is fully inert (no key material, every
+/// gate closed), which is what every node gets in a defenseless world.
+#[derive(Debug, Clone, Default)]
+pub struct DefenseState {
+    cfg: DefenseConfig,
+    key: Option<NodeKey>,
+    keys: Option<KeyStore>,
+    pub rep: ReputationBook,
+}
+
+impl DefenseState {
+    pub fn new(
+        cfg: DefenseConfig,
+        key: NodeKey,
+        keys: KeyStore,
+    ) -> DefenseState {
+        cfg.validate();
+        DefenseState {
+            rep: ReputationBook::new(cfg.quarantine_threshold),
+            cfg,
+            key: Some(key),
+            keys: Some(keys),
+        }
+    }
+
+    pub fn config(&self) -> DefenseConfig {
+        self.cfg
+    }
+
+    /// Receipts are attached and verified only when the master switch and
+    /// the receipts knob are both on and key material is installed.
+    pub fn receipts_on(&self) -> bool {
+        self.cfg.enabled && self.cfg.receipts && self.key.is_some()
+    }
+
+    /// Reputation tracking/gossip/gating active?
+    pub fn reputation_on(&self) -> bool {
+        self.cfg.enabled && self.cfg.reputation
+    }
+
+    /// Hearsay clamp factor for gossiped RTT rows; infinite (no clamp)
+    /// when defenses are off.
+    pub fn hearsay_cap(&self) -> f64 {
+        if self.cfg.enabled {
+            self.cfg.hearsay_cap
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// This node's signing key (present iff defenses were installed).
+    pub fn signing_key(&self) -> Option<&NodeKey> {
+        self.key.as_ref()
+    }
+
+    /// The network key store for verification.
+    pub fn key_store(&self) -> Option<&KeyStore> {
+        self.keys.as_ref()
+    }
+
+    /// Reputation book when active (None keeps snapshot cache keys at 0).
+    pub fn rep_if_on(&self) -> Option<&ReputationBook> {
+        if self.reputation_on() {
+            Some(&self.rep)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn book() -> ReputationBook {
+        ReputationBook::new(0.25)
+    }
+
+    #[test]
+    fn scores_start_perfect_and_penalties_compound() {
+        let mut b = book();
+        let p = NodeId(4);
+        assert_eq!(b.effective(p, 0.0), 1.0);
+        assert_eq!(b.weight(p, 0.0), 1.0);
+        b.record(p, RepEvent::Timeout, 0.0);
+        let one = b.effective(p, 0.0);
+        assert!((one - 0.7).abs() < 1e-12);
+        b.record(p, RepEvent::Timeout, 0.0);
+        assert!((b.effective(p, 0.0) - 0.49).abs() < 1e-12);
+    }
+
+    #[test]
+    fn receipt_failures_quarantine_quickly() {
+        let mut b = book();
+        let p = NodeId(2);
+        assert_eq!(b.record(p, RepEvent::ReceiptFail, 0.0), Transition::None);
+        // Second strike: 0.4 * 0.4 = 0.16 < 0.25 -> quarantined.
+        assert_eq!(
+            b.record(p, RepEvent::ReceiptFail, 0.0),
+            Transition::Quarantined
+        );
+        assert!(b.is_quarantined(p));
+        assert_eq!(b.quarantined_count(), 1);
+        // Repeat offenses while quarantined don't re-announce.
+        assert_eq!(b.record(p, RepEvent::ReceiptFail, 0.0), Transition::None);
+    }
+
+    #[test]
+    fn time_heal_releases_quarantine_with_hysteresis() {
+        let mut b = book();
+        let p = NodeId(7);
+        b.record(p, RepEvent::ReceiptFail, 0.0);
+        b.record(p, RepEvent::ReceiptFail, 0.0);
+        assert!(b.is_quarantined(p));
+        // Healing at 0.002/s from 0.16: release needs eff > 0.375, i.e.
+        // ~108 s of silence. A success event after that heals + releases.
+        assert_eq!(
+            b.record(p, RepEvent::Success, 200.0),
+            Transition::Released
+        );
+        assert!(!b.is_quarantined(p));
+        // Effective score keeps rising toward 1.0 afterwards.
+        let e = b.effective(p, 200.0);
+        assert!(e > 0.375 && e < 1.0, "e={e}");
+        assert_eq!(b.effective(p, 2000.0), 1.0, "fully healed");
+    }
+
+    #[test]
+    fn successes_recover_bounded() {
+        let mut b = book();
+        let p = NodeId(1);
+        b.record(p, RepEvent::DuelLoss, 0.0);
+        let low = b.effective(p, 0.0);
+        b.record(p, RepEvent::DuelWin, 0.0);
+        let up = b.effective(p, 0.0);
+        assert!(up > low && up < 1.0);
+    }
+
+    #[test]
+    fn rep_rows_ship_only_distrusted_peers() {
+        let mut b = book();
+        b.record(NodeId(3), RepEvent::Timeout, 0.0);
+        b.record(NodeId(9), RepEvent::Success, 0.0); // stays ~1.0
+        let rows = b.rep_rows(0.0);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].0, 3);
+        assert_eq!(rows[0].1, 700);
+        // After full heal, nothing ships.
+        assert!(b.rep_rows(1000.0).is_empty());
+    }
+
+    #[test]
+    fn slander_alone_cannot_quarantine() {
+        let mut b = book();
+        let me = NodeId(0);
+        // A colluder claims node 5 is worthless, repeatedly.
+        for _ in 0..50 {
+            let t = b.merge_remote(me, &[(5, 0)], 0.0);
+            assert!(t.is_empty(), "hearsay alone must never quarantine");
+        }
+        // Bounded influence: effective >= 0.5 with perfect own evidence.
+        let e = b.effective(NodeId(5), 0.0);
+        assert!((e - 0.5).abs() < 1e-9, "e={e}");
+        assert!(!b.is_quarantined(NodeId(5)));
+    }
+
+    #[test]
+    fn hearsay_corroborates_own_evidence() {
+        let mut b = book();
+        let me = NodeId(0);
+        let p = NodeId(5);
+        // One own timeout (0.7) is far above the threshold...
+        b.record(p, RepEvent::Timeout, 0.0);
+        assert!(!b.is_quarantined(p));
+        // ...but strong corroborating hearsay tips it: 0.7 * (0.5 + 0.5 r).
+        // After enough zero-opinion merges r -> 0, eff -> 0.35... still
+        // above 0.25; add one more own timeout -> 0.49 * 0.5 = 0.245 < 0.25.
+        for _ in 0..20 {
+            b.merge_remote(me, &[(5, 0)], 0.0);
+        }
+        assert!(!b.is_quarantined(p));
+        let t = b.record(p, RepEvent::Timeout, 0.0);
+        assert_eq!(t, Transition::Quarantined);
+    }
+
+    #[test]
+    fn merge_rejects_malformed_and_self_rows() {
+        let mut b = book();
+        let me = NodeId(0);
+        b.merge_remote(me, &[(0, 100), (4, 5000)], 0.0);
+        assert_eq!(b.effective(NodeId(0), 0.0), 1.0, "self row dropped");
+        assert_eq!(b.effective(NodeId(4), 0.0), 1.0, "out-of-range dropped");
+        assert_eq!(b.version(), 0);
+    }
+
+    #[test]
+    fn version_bumps_on_material_changes_only() {
+        let mut b = book();
+        assert_eq!(b.version(), 0);
+        b.record(NodeId(1), RepEvent::Timeout, 0.0);
+        let v = b.version();
+        assert!(v > 0);
+        // A merge that doesn't move the stored opinion doesn't bump.
+        b.merge_remote(NodeId(0), &[(2, 1000)], 0.0);
+        assert_eq!(b.version(), v);
+    }
+
+    #[test]
+    fn defense_state_default_is_inert() {
+        let d = DefenseState::default();
+        assert!(!d.receipts_on());
+        assert!(!d.reputation_on());
+        assert_eq!(d.hearsay_cap(), f64::INFINITY);
+        assert!(d.signing_key().is_none());
+        assert!(d.rep_if_on().is_none());
+    }
+
+    #[test]
+    fn defense_state_enabled_arms_all_gates() {
+        let cfg = DefenseConfig { enabled: true, ..Default::default() };
+        let keys = KeyStore::for_network(1, 4);
+        let d = DefenseState::new(cfg, NodeKey::derive(1, NodeId(0)), keys);
+        assert!(d.receipts_on());
+        assert!(d.reputation_on());
+        assert_eq!(d.hearsay_cap(), 3.0);
+        assert!(d.signing_key().is_some());
+        assert!(d.key_store().is_some());
+        assert!(d.rep_if_on().is_some());
+    }
+
+    #[test]
+    fn config_check_rejects_bad_knobs() {
+        assert!(DefenseConfig::default().check().is_ok());
+        let bad_thresh = DefenseConfig {
+            quarantine_threshold: 1.0,
+            ..Default::default()
+        };
+        assert!(bad_thresh.check().is_err());
+        let nan_thresh = DefenseConfig {
+            quarantine_threshold: f64::NAN,
+            ..Default::default()
+        };
+        assert!(nan_thresh.check().is_err());
+        let bad_cap = DefenseConfig { hearsay_cap: 0.5, ..Default::default() };
+        assert!(bad_cap.check().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "hearsay_cap")]
+    fn validate_panics_on_bad_cap() {
+        DefenseConfig { hearsay_cap: f64::NAN, ..Default::default() }
+            .validate();
+    }
+}

@@ -26,7 +26,10 @@ use crate::obs::{
     export, FlightRecorder, MetricId, MetricsRegistry, ObservabilityConfig,
     SpanEvent, SpanKind,
 };
-use crate::policy::{NodePolicy, ParticipationKind, SystemPolicy};
+use crate::policy::{
+    ByzantineKind, NodePolicy, ParticipationKind, SystemPolicy,
+};
+use crate::reputation::{DefenseConfig, DefenseState};
 use crate::topology::Topology;
 use crate::types::{NodeId, Time};
 use crate::util::rng::Rng;
@@ -82,6 +85,12 @@ pub struct WorldConfig {
     /// purely observational (no queue events, no RNG draws), so replay
     /// fingerprints still match.
     pub observability: ObservabilityConfig,
+    /// Byzantine-robustness defenses (signed work receipts, per-peer
+    /// reputation with quarantine, gossip hearsay capping — see
+    /// [`crate::reputation`]). Disabled by default: no receipts on the
+    /// wire, no reputation rows in gossip, no extra RNG draws, so
+    /// pre-defense configs replay byte for byte.
+    pub defenses: DefenseConfig,
 }
 
 impl Default for WorldConfig {
@@ -99,6 +108,7 @@ impl Default for WorldConfig {
             churn: Vec::new(),
             capacity: Vec::new(),
             observability: ObservabilityConfig::default(),
+            defenses: DefenseConfig::default(),
         }
     }
 }
@@ -136,6 +146,7 @@ impl WorldConfig {
             spec.cfg.validate();
         }
         self.observability.validate();
+        self.defenses.validate();
     }
 }
 
@@ -155,6 +166,9 @@ pub struct NodeSetup {
     /// Reporting label (fleet group name) for per-policy-group summaries;
     /// None for ungrouped nodes.
     pub group: Option<String>,
+    /// Byzantine attacker personality (see [`crate::policy::byzantine`]);
+    /// when set it overrides `participation` at world build. None = honest.
+    pub byzantine: Option<ByzantineKind>,
 }
 
 impl NodeSetup {
@@ -166,6 +180,7 @@ impl NodeSetup {
             start_offline: false,
             participation: ParticipationKind::Default,
             group: None,
+            byzantine: None,
         }
     }
 
@@ -186,6 +201,11 @@ impl NodeSetup {
 
     pub fn with_group(mut self, label: impl Into<String>) -> Self {
         self.group = Some(label.into());
+        self
+    }
+
+    pub fn with_byzantine(mut self, kind: ByzantineKind) -> Self {
+        self.byzantine = Some(kind);
         self
     }
 }
@@ -404,8 +424,22 @@ impl World {
                 0.0,
             );
             // Participation behaviour (construction-time, no RNG impact;
-            // `Default` installs the bit-identical legacy behaviour).
-            node.set_participation(participation.build());
+            // `Default` installs the bit-identical legacy behaviour). A
+            // declared Byzantine personality overrides it outright.
+            match setup.byzantine {
+                Some(kind) => node.set_participation(kind.build()),
+                None => node.set_participation(participation.build()),
+            }
+            // Byzantine defenses: key material + reputation book. Off (the
+            // default) installs nothing, keeping the wire format and event
+            // stream bit-identical to the defenseless network.
+            if cfg.defenses.enabled {
+                node.set_defenses(DefenseState::new(
+                    cfg.defenses,
+                    NodeKey::derive(cfg.seed, id),
+                    keys.clone(),
+                ));
+            }
             // Geo placement: tag the node with its region and hand it the
             // pristine expected-latency matrix as the live estimator's
             // cold-start prior so `latency_penalty` can bite.
@@ -1692,5 +1726,56 @@ mod tests {
             dropped += fr.dropped();
         }
         assert!(dropped > 0, "tiny ring never overflowed");
+    }
+
+    /// An all-honest world with defenses armed stays deterministic, never
+    /// punishes anyone, and pays for receipts in bytes only.
+    #[test]
+    fn defended_honest_world_is_deterministic_and_punishes_nobody() {
+        let run = |defenses: DefenseConfig| {
+            let cfg = WorldConfig {
+                seed: 13,
+                defenses,
+                ..Default::default()
+            };
+            let mut w = World::new(cfg, setup_uniform(4, 3.0));
+            w.run_until(300.0);
+            w
+        };
+        let armed = DefenseConfig { enabled: true, ..Default::default() };
+        let a = run(armed);
+        let b = run(armed);
+        let fp = |w: &World| {
+            (
+                w.recorder.len(),
+                (w.recorder.mean_latency() * 1e9) as u64,
+                w.messages_sent,
+                w.bytes_sent,
+                w.events_processed,
+                w.credit_totals()
+                    .iter()
+                    .map(|c| (c * 1e6) as u64)
+                    .collect::<Vec<_>>(),
+            )
+        };
+        assert_eq!(fp(&a), fp(&b), "defended world must replay from seed");
+        // Honest receipts all verify; nobody is quarantined.
+        for i in 0..a.num_nodes() {
+            let s = &a.node(i).stats;
+            assert_eq!(s.receipt_rejects, 0, "node {i} rejected receipts");
+            assert_eq!(s.quarantines, 0, "node {i} quarantined a peer");
+            assert_eq!(s.rtts_rejected, 0, "node {i} saw junk rtts");
+        }
+        assert!(a.recorder.len() > 0, "no requests completed");
+        // Receipts and reputation rows ride the existing messages: same
+        // message count as the undefended twin, strictly more bytes.
+        let off = run(DefenseConfig::default());
+        assert_eq!(a.messages_sent, off.messages_sent);
+        assert!(
+            a.bytes_sent > off.bytes_sent,
+            "receipts must cost wire bytes: {} vs {}",
+            a.bytes_sent,
+            off.bytes_sent
+        );
     }
 }

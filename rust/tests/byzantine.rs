@@ -1,0 +1,401 @@
+//! Byzantine-robustness integration tests: gossip-borne junk, the signed
+//! work-receipt settlement gate, reputation-driven quarantine of
+//! free-riders, and determinism of a defended world under attack. The
+//! attacker policies live in `wwwserve::policy::byzantine`; the defenses
+//! in `wwwserve::reputation` (see its threat-model table).
+
+use std::sync::{Arc, Mutex};
+
+use wwwserve::backend::{Backend, Profile, SimBackend};
+use wwwserve::config::parse_experiment;
+use wwwserve::coordinator::{Action, Event, LedgerManager, Message, Node};
+use wwwserve::crypto::{KeyStore, NodeKey};
+use wwwserve::gossip::GossipConfig;
+use wwwserve::latency::LatencyConfig;
+use wwwserve::ledger::{Ledger, SharedLedger};
+use wwwserve::policy::{FreeRider, NodePolicy, ResultFaker, SystemPolicy};
+use wwwserve::reputation::{DefenseConfig, DefenseState};
+use wwwserve::sim::World;
+use wwwserve::types::{Request, RequestId};
+use wwwserve::NodeId;
+
+fn mk_node(id: u32, shared: &Arc<Mutex<SharedLedger>>) -> Node {
+    Node::new(
+        NodeId(id),
+        NodePolicy::default(),
+        SystemPolicy::default(),
+        Box::new(SimBackend::new(Profile::test(50.0, 8))),
+        LedgerManager::shared(shared.clone()),
+        GossipConfig::default(),
+        7,
+        0.0,
+    )
+}
+
+/// Arm a node's defenses with network-consistent key material.
+fn arm(node: &mut Node, seed: u64, n: u32) {
+    node.set_defenses(DefenseState::new(
+        DefenseConfig { enabled: true, ..Default::default() },
+        NodeKey::derive(seed, node.id),
+        KeyStore::for_network(seed, n),
+    ));
+}
+
+fn req(origin: u32, seq: u64, at: f64, slo: f64) -> Request {
+    Request {
+        id: RequestId { origin: NodeId(origin), seq },
+        prompt_tokens: 50,
+        output_tokens: 100,
+        submitted_at: at,
+        slo_deadline: slo,
+        synthetic: false,
+        payload: vec![],
+    }
+}
+
+fn find_send(actions: &[Action], kind: &str) -> Option<(NodeId, Message)> {
+    actions.iter().find_map(|a| match a {
+        Action::Send { to, msg } if msg.kind() == kind => {
+            Some((*to, msg.clone()))
+        }
+        _ => None,
+    })
+}
+
+/// Run the probe -> accept -> delegate handshake from `n0` to `n1` for one
+/// request submitted at `t`. Returns None when n0 never probed (the
+/// candidate set was empty — e.g. the only peer is quarantined).
+fn delegate_once(
+    n0: &mut Node,
+    n1: &mut Node,
+    seq: u64,
+    t: f64,
+    slo: f64,
+) -> Option<Vec<Action>> {
+    let a = n0.handle(Event::UserRequest(req(0, seq, t, slo)), t);
+    let (to, probe) = find_send(&a, "probe")?;
+    assert_eq!(to, NodeId(1));
+    let a = n1.handle(Event::Message { from: NodeId(0), msg: probe }, t + 0.1);
+    let (_, accept) =
+        find_send(&a, "probe_accept").expect("probe must be accepted");
+    let a =
+        n0.handle(Event::Message { from: NodeId(1), msg: accept }, t + 0.2);
+    let (_, delegate) =
+        find_send(&a, "delegate").expect("accept must trigger the delegate");
+    Some(n1.handle(Event::Message { from: NodeId(0), msg: delegate }, t + 0.3))
+}
+
+// ---- gossip-borne junk ------------------------------------------------------
+
+#[test]
+fn junk_gossip_rtts_never_panic_and_bump_the_reject_counter() {
+    // Malformed piggybacked RTT rows (NaN, negative, absurd) must be
+    // rejected outright — with a counter bump, never a panic — even with
+    // defenses OFF: the junk guard is basic input validation, not a
+    // configurable defense.
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut n = mk_node(0, &shared);
+    n.set_locality(
+        0,
+        vec![vec![0.005, 0.080], vec![0.080, 0.005]],
+        LatencyConfig::default(),
+    );
+    let a = n.handle(
+        Event::Message {
+            from: NodeId(9),
+            msg: Message::GossipDelta {
+                delta: vec![],
+                heartbeats: vec![],
+                rtts: vec![
+                    (0, 1, f64::NAN),
+                    (0, 1, f64::INFINITY),
+                    (0, 1, -1.0),
+                    (0, 1, 1.0e9),
+                    (0, 1, 0.065), // the one well-formed row
+                ],
+                rep: vec![],
+            },
+        },
+        1.0,
+    );
+    drop(a);
+    assert_eq!(n.stats.rtts_rejected, 4, "four junk rows rejected");
+    assert_eq!(n.stats.rtts_capped, 0, "defenses off: no hearsay capping");
+    // The clean row still merged: the estimate moved off the 80 ms prior.
+    let est = n.latency_estimator().unwrap().expected_from_me(1, 1.0);
+    assert!(est < 0.080, "clean row ignored: {est}");
+}
+
+#[test]
+fn hearsay_cap_clamps_latency_liar_rows_when_defended() {
+    // A LatencyLiar gossips a near-zero RTT for a trans-oceanic path. With
+    // defenses on, the merged cell is clamped to within hearsay_cap of the
+    // node's own expectation, so the lie cannot collapse the estimate.
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut n = mk_node(0, &shared);
+    arm(&mut n, 7, 2);
+    n.set_locality(
+        0,
+        vec![vec![0.005, 0.080], vec![0.080, 0.005]],
+        LatencyConfig::default(),
+    );
+    n.handle(
+        Event::Message {
+            from: NodeId(9),
+            msg: Message::GossipDelta {
+                delta: vec![],
+                heartbeats: vec![],
+                rtts: vec![(0, 1, 0.0005)], // plausible-looking lie
+                rep: vec![],
+            },
+        },
+        1.0,
+    );
+    assert_eq!(n.stats.rtts_capped, 1, "the lie must be clamped");
+    assert_eq!(n.stats.rtts_rejected, 0);
+    let est = n.latency_estimator().unwrap().expected_from_me(1, 1.0);
+    // Clamp floor is own/cap = 0.080 / 3; the EWMA can only move toward
+    // that, never to the liar's half-millisecond.
+    assert!(
+        est >= 0.080 / 3.0 * 0.9,
+        "hearsay cap failed to bound the lie: {est}"
+    );
+}
+
+// ---- signed work receipts ---------------------------------------------------
+
+#[test]
+fn honest_receipted_work_settles_and_pays() {
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut n0 = mk_node(0, &shared);
+    let mut n1 = mk_node(1, &shared);
+    arm(&mut n0, 7, 2);
+    arm(&mut n1, 7, 2);
+    n0.policy.target_utilization = 0.0;
+    n0.policy.offload_freq = 1.0;
+    n0.system.duel_rate = 0.0;
+    n1.policy.accept_freq = 1.0;
+    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+
+    let bal1 = shared.lock().unwrap().balance(NodeId(1));
+    delegate_once(&mut n0, &mut n1, 0, 0.0, 60.0).expect("probe sent");
+    // Run the executor's backend to completion: the response must carry a
+    // signed receipt.
+    let a = n1.handle(Event::BackendWake, 100.0);
+    let (_, resp) = find_send(&a, "delegate_response").expect("response");
+    let Message::DelegateResponse { ref receipt, .. } = resp else {
+        unreachable!()
+    };
+    assert!(receipt.is_some(), "defended executor must attach a receipt");
+    let a = n0.handle(Event::Message { from: NodeId(1), msg: resp }, 100.1);
+    assert!(a.iter().any(|x| matches!(x, Action::Done(_))));
+    assert_eq!(n0.stats.receipt_rejects, 0);
+    let paid = shared.lock().unwrap().balance(NodeId(1)) - bal1;
+    assert_eq!(paid, SystemPolicy::default().base_reward, "work paid once");
+}
+
+#[test]
+fn result_faker_receipt_is_rejected_and_never_paid() {
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut n0 = mk_node(0, &shared);
+    let mut n1 = mk_node(1, &shared);
+    arm(&mut n0, 7, 2);
+    arm(&mut n1, 7, 2);
+    n1.set_participation(Box::new(ResultFaker::default()));
+    n0.policy.target_utilization = 0.0;
+    n0.policy.offload_freq = 1.0;
+    n0.system.duel_rate = 0.0;
+    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+
+    let bal1 = shared.lock().unwrap().balance(NodeId(1));
+    delegate_once(&mut n0, &mut n1, 0, 0.0, 60.0).expect("probe sent");
+    let a = n1.handle(Event::BackendWake, 100.0);
+    let (_, resp) = find_send(&a, "delegate_response").expect("response");
+    let Message::DelegateResponse { ref receipt, .. } = resp else {
+        unreachable!()
+    };
+    // The faker does ship a receipt — signed over content it never
+    // produced. Settlement must catch the digest mismatch.
+    assert!(receipt.is_some());
+    let fallback_before = n0.stats.fallback_local;
+    let a = n0.handle(Event::Message { from: NodeId(1), msg: resp }, 100.1);
+    assert!(
+        !a.iter().any(|x| matches!(x, Action::Done(_))),
+        "faked work must not complete the request"
+    );
+    assert_eq!(n0.stats.receipt_rejects, 1);
+    assert_eq!(n0.stats.fallback_local, fallback_before + 1);
+    assert_eq!(n0.backend().running_len(), 1, "re-served locally");
+    assert_eq!(
+        shared.lock().unwrap().balance(NodeId(1)),
+        bal1,
+        "faked work must never be paid"
+    );
+    // And the faker's reputation took the ReceiptFail hit.
+    let eff = n0.defense_state().rep.effective(NodeId(1), 100.1);
+    assert!(eff < 0.5, "receipt failure must crater reputation: {eff}");
+}
+
+#[test]
+fn unreceipted_work_is_never_paid_when_defenses_are_on() {
+    // The executor is honest but runs no defense layer (e.g. a laggard
+    // deployment): its bare response cannot settle against a defended
+    // requester — payment is withheld and the request re-served locally.
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut n0 = mk_node(0, &shared);
+    let mut n1 = mk_node(1, &shared);
+    arm(&mut n0, 7, 2);
+    n0.policy.target_utilization = 0.0;
+    n0.policy.offload_freq = 1.0;
+    n0.system.duel_rate = 0.0;
+    n1.policy.accept_freq = 1.0;
+    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+
+    let bal1 = shared.lock().unwrap().balance(NodeId(1));
+    delegate_once(&mut n0, &mut n1, 0, 0.0, 60.0).expect("probe sent");
+    let a = n1.handle(Event::BackendWake, 100.0);
+    let (_, resp) = find_send(&a, "delegate_response").expect("response");
+    let Message::DelegateResponse { ref receipt, .. } = resp else {
+        unreachable!()
+    };
+    assert!(receipt.is_none(), "undefended executor sends no receipt");
+    let a = n0.handle(Event::Message { from: NodeId(1), msg: resp }, 100.1);
+    assert!(!a.iter().any(|x| matches!(x, Action::Done(_))));
+    assert_eq!(n0.stats.receipt_rejects, 1);
+    assert_eq!(shared.lock().unwrap().balance(NodeId(1)), bal1);
+}
+
+// ---- reputation quarantine --------------------------------------------------
+
+#[test]
+fn free_rider_is_quarantined_after_repeated_timeouts() {
+    let shared = Arc::new(Mutex::new(SharedLedger::new()));
+    let mut n0 = mk_node(0, &shared);
+    let mut n1 = mk_node(1, &shared);
+    arm(&mut n0, 7, 2);
+    n1.set_participation(Box::new(FreeRider));
+    n0.policy.target_utilization = 0.0;
+    n0.policy.offload_freq = 1.0;
+    n0.system.duel_rate = 0.0;
+    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+
+    // Short SLO so the response timeout (slo * 3) fires quickly.
+    let slo = 1.0;
+    let mut quarantined_stopped_probes = false;
+    for k in 0..10u64 {
+        let t = k as f64 * 5.0;
+        match delegate_once(&mut n0, &mut n1, k, t, slo) {
+            Some(dropped) => {
+                // The free-rider accepted and then silently dropped the
+                // work: nothing entered its backend.
+                assert!(
+                    !dropped
+                        .iter()
+                        .any(|x| matches!(x, Action::Send { .. })),
+                    "free-rider must stay silent"
+                );
+                assert_eq!(n1.backend().running_len(), 0);
+                // Past the response deadline the requester times out,
+                // strikes the executor's reputation, and serves locally.
+                n0.handle(Event::Tick, t + 0.2 + slo * 3.0 + 0.5);
+            }
+            None => {
+                // No probe sent: the only candidate is quarantined.
+                assert!(
+                    n0.defense_state().rep.is_quarantined(NodeId(1)),
+                    "probes stopped for a non-quarantine reason"
+                );
+                quarantined_stopped_probes = true;
+                break;
+            }
+        }
+    }
+    assert!(
+        quarantined_stopped_probes,
+        "free-rider was never quarantined out of the candidate set \
+         (score: {})",
+        n0.defense_state().rep.effective(NodeId(1), 50.0)
+    );
+    assert!(n0.stats.quarantines >= 1, "quarantine transition not counted");
+    assert!(n0.stats.fallback_local >= 4, "timeouts must fall back locally");
+}
+
+// ---- whole-world determinism under attack -----------------------------------
+
+#[test]
+fn defended_byzantine_world_replays_deterministically() {
+    // A two-region world where a third of the servers misbehave, with the
+    // full defense stack armed: the run must be bit-reproducible from the
+    // seed, and the defenses must visibly engage (receipt rejections from
+    // the faker, quarantines of the free-riders).
+    let cfg = r#"{
+        "seed": 77, "horizon": 300,
+        "system": { "duel_rate": 0.0 },
+        "defenses": { "enabled": true },
+        "topology": {
+            "regions": ["us", "eu"],
+            "intra": { "latency": [0.002, 0.010] },
+            "inter": { "latency": [0.040, 0.080] },
+            "fleet": [
+                { "region": "us", "count": 1, "policy": "requester_only",
+                  "node": { "policy": { "latency_penalty": 20.0 } },
+                  "schedule": [ {"from": 0, "to": 300,
+                                 "inter_arrival": 2} ],
+                  "lengths": { "output_mean": 600, "output_sigma": 0.5 } },
+                { "region": "us", "count": 2,
+                  "node": { "policy": { "stake": 20,
+                                        "accept_freq": 1.0 } } },
+                { "region": "us", "count": 2, "byzantine": "free_rider",
+                  "node": { "policy": { "stake": 20,
+                                        "accept_freq": 1.0 } } },
+                { "region": "eu", "count": 1, "policy": "requester_only",
+                  "node": { "policy": { "latency_penalty": 20.0 } },
+                  "schedule": [ {"from": 0, "to": 300,
+                                 "inter_arrival": 2} ],
+                  "lengths": { "output_mean": 600, "output_sigma": 0.5 } },
+                { "region": "eu", "count": 2,
+                  "node": { "policy": { "stake": 20,
+                                        "accept_freq": 1.0 } } },
+                { "region": "eu", "count": 1, "byzantine": "result_faker",
+                  "node": { "policy": { "stake": 40,
+                                        "accept_freq": 1.0 } } }
+            ]
+        }
+    }"#;
+    let go = || {
+        let e = parse_experiment(cfg).expect("config parses");
+        assert!(e.world.defenses.enabled);
+        assert_eq!(
+            e.setups.iter().filter(|s| s.byzantine.is_some()).count(),
+            3,
+            "three attacker nodes stamped"
+        );
+        let mut w = World::new(e.world.clone(), e.setups.clone());
+        w.run_until(900.0);
+        let receipt_rejects: u64 = (0..w.num_nodes())
+            .map(|i| w.node(i).stats.receipt_rejects)
+            .sum();
+        let quarantines: u64 = (0..w.num_nodes())
+            .map(|i| w.node(i).stats.quarantines)
+            .sum();
+        (
+            w.recorder.len(),
+            (w.recorder.mean_latency() * 1e9) as u64,
+            w.messages_sent,
+            w.bytes_sent,
+            w.messages_dropped,
+            w.credit_totals()
+                .iter()
+                .map(|c| (c * 1e6) as u64)
+                .collect::<Vec<_>>(),
+            receipt_rejects,
+            quarantines,
+        )
+    };
+    let a = go();
+    assert!(a.0 > 50, "attacked world barely ran: {} records", a.0);
+    assert!(a.6 > 0, "the result faker was never caught at settlement");
+    assert!(a.7 > 0, "no free-rider was ever quarantined");
+    let b = go();
+    assert_eq!(a, b, "defended byzantine world is not deterministic");
+}

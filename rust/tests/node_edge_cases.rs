@@ -81,6 +81,7 @@ fn unsolicited_response_is_ignored_and_unpaid() {
             msg: Message::DelegateResponse {
                 response: resp(0, 42, 3),
                 duel: false,
+                receipt: None,
             },
         },
         1.0,
@@ -112,6 +113,7 @@ fn duplicate_response_pays_only_once() {
     let response = Message::DelegateResponse {
         response: resp(0, 0, 1),
         duel: false,
+        receipt: None,
     };
     let a1 = n0.handle(
         Event::Message { from: NodeId(1), msg: response.clone() },

@@ -270,6 +270,47 @@ fn observability_enabled_is_purely_observational() {
 }
 
 #[test]
+fn defenses_disabled_block_replays_the_baseline_trace() {
+    // The Byzantine-defense seam's replay contract: an explicit
+    // `defenses: {enabled: false}` block must be the same parse-and-run
+    // path as no block at all — no receipts on the wire, no reputation
+    // rows in gossip, no hearsay capping, not one byte of the trace moved.
+    let baseline = run(&geo_smoke_config(false, "default"));
+    let cfg = geo_smoke_config(false, "default").replace(
+        "\"seed\": 2026,",
+        "\"seed\": 2026, \"defenses\": { \"enabled\": false },",
+    );
+    assert!(cfg.contains("defenses"), "splice failed");
+    let e = parse_experiment(&cfg).expect("config parses");
+    assert!(!e.world.defenses.enabled);
+    assert_eq!(
+        baseline,
+        run(&cfg),
+        "disabled defenses block perturbed the trace"
+    );
+}
+
+#[test]
+fn defenses_enabled_changes_the_trace_but_replays_deterministically() {
+    // Armed defenses are live machinery (receipts cost wire bytes,
+    // reputation reshapes snapshots): the trace must genuinely diverge
+    // from the defenseless baseline while staying bit-reproducible.
+    let cfg = geo_smoke_config(false, "default").replace(
+        "\"seed\": 2026,",
+        "\"seed\": 2026, \"defenses\": { \"enabled\": true },",
+    );
+    assert!(cfg.contains("defenses"), "splice failed");
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert_eq!(a, b, "defended world is not deterministic");
+    let baseline = run(&geo_smoke_config(false, "default"));
+    assert_ne!(
+        a.3, baseline.3,
+        "armed defenses cost no wire bytes — receipts never attached?"
+    );
+}
+
+#[test]
 fn installing_default_policy_post_construction_is_a_noop() {
     let cfg = geo_smoke_config(false, "default");
     let e = parse_experiment(&cfg).expect("config parses");
