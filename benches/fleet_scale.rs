@@ -109,6 +109,7 @@ fn run_fleet_obs(
     }
     let rounds = e.horizon / cfg.gossip.interval;
     let mut w = World::new(cfg, e.setups);
+    // detlint:allow(D002) reason="bench harness measures wall-clock events/sec; the World under test never sees it"
     let t0 = Instant::now();
     w.run_until(e.horizon);
     let wall_s = t0.elapsed().as_secs_f64();

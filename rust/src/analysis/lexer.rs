@@ -1,0 +1,466 @@
+//! Minimal Rust lexer for `detlint`.
+//!
+//! Not a real Rust front end — a single-pass state machine that does the two
+//! things the rule engine needs and nothing more:
+//!
+//! 1. **Strip comments and literal contents** so rules never match inside a
+//!    doc comment or a string fixture. Two views come back, both with the
+//!    exact line structure of the input: `code` (comments stripped AND
+//!    string/char literal contents blanked — what most rules scan) and
+//!    `code_with_strings` (comments stripped, string literals kept — what
+//!    the Debug-format rule D005 scans, since `{:?}` lives inside format
+//!    string literals).
+//! 2. **Extract `detlint:allow` annotations** from the comments it strips,
+//!    before throwing the comment text away. An annotation suppresses
+//!    findings on its own line (trailing comment) or the line directly
+//!    below (annotation-only line above the offending statement), and its
+//!    `reason="…"` is mandatory and non-empty — a reasonless allow is
+//!    reported as malformed and suppresses nothing.
+//!
+//! Handled literal forms: line + nested block comments, `"…"` strings with
+//! escapes, raw strings `r"…"` / `r#"…"#` (any hash count, byte/`br`
+//! prefixes), char literals incl. escapes, and the `'a` lifetime-vs-char
+//! ambiguity (a quote not closed within two chars and not opening an escape
+//! is a lifetime and stays in code).
+
+/// One parsed `// detlint:allow(D00x[,D00y]) reason="…"` annotation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allow {
+    /// 0-based line the annotation appears on.
+    pub line: usize,
+    /// Rule ids this annotation exempts, e.g. `["D002"]`.
+    pub rules: Vec<String>,
+    /// The mandatory free-text justification.
+    pub reason: String,
+}
+
+/// A `detlint:allow` that failed to parse (bad rule list, missing or empty
+/// reason). These never suppress and are themselves reported.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MalformedAllow {
+    /// 0-based line of the broken annotation.
+    pub line: usize,
+    /// What was wrong, for the report.
+    pub what: String,
+}
+
+/// Lexer output: two stripped views of the source plus the annotations.
+#[derive(Debug, Default)]
+pub struct LexedFile {
+    /// Comments stripped, string/char contents blanked. One entry per line.
+    pub code: Vec<String>,
+    /// Comments stripped, string literals kept. One entry per line.
+    pub code_with_strings: Vec<String>,
+    /// Well-formed `detlint:allow` annotations, in line order.
+    pub allows: Vec<Allow>,
+    /// Annotations that failed to parse.
+    pub malformed: Vec<MalformedAllow>,
+}
+
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Lex `source` into the stripped views + annotations.
+pub fn lex(source: &str) -> LexedFile {
+    let chars: Vec<char> = source.chars().collect();
+    let mut code = String::with_capacity(source.len());
+    let mut with_strings = String::with_capacity(source.len());
+    // Comment segments as (start_line, text) for annotation extraction.
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut cur_comment = String::new();
+    let mut cur_comment_line = 0usize;
+    let mut line = 0usize;
+    let mut state = State::Code;
+    let mut i = 0usize;
+
+    // Pushes one source char to both output views, substituting blanks as
+    // the state demands. Newlines always pass through to keep line counts.
+    macro_rules! emit {
+        ($c:expr, $in_code:expr, $in_ws:expr) => {{
+            let c = $c;
+            if c == '\n' {
+                code.push('\n');
+                with_strings.push('\n');
+                line += 1;
+            } else {
+                code.push(if $in_code { c } else { ' ' });
+                with_strings.push(if $in_ws { c } else { ' ' });
+            }
+        }};
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    cur_comment.clear();
+                    cur_comment_line = line;
+                    emit!(c, false, false);
+                    emit!('/', false, false);
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(1);
+                    cur_comment.clear();
+                    cur_comment_line = line;
+                    emit!(c, false, false);
+                    emit!('*', false, false);
+                    i += 2;
+                } else if c == '"' {
+                    // Raw string? Look back over `#`s to an `r` (or `br`)
+                    // that is not the tail of an identifier.
+                    let mut hashes = 0usize;
+                    let mut j = i;
+                    while j > 0 && chars[j - 1] == '#' {
+                        hashes += 1;
+                        j -= 1;
+                    }
+                    let mut is_raw = false;
+                    if j > 0 && chars[j - 1] == 'r' {
+                        let before_r = if j >= 2 { Some(chars[j - 2]) } else { None };
+                        let prefix_ok = match before_r {
+                            Some('b') => !ident_char(chars.get(j.wrapping_sub(3)).copied()),
+                            Some(p) => !ident_char(Some(p)),
+                            None => true,
+                        };
+                        if prefix_ok {
+                            is_raw = true;
+                        }
+                    }
+                    if is_raw {
+                        state = State::RawStr(hashes as u32);
+                    } else {
+                        state = State::Str;
+                    }
+                    emit!(c, true, true);
+                    i += 1;
+                } else if c == '\'' {
+                    // Char literal vs lifetime.
+                    match chars.get(i + 1) {
+                        Some('\\') => {
+                            // Escaped char literal: consume to closing quote.
+                            emit!(c, true, false);
+                            i += 1;
+                            while i < chars.len() {
+                                let d = chars[i];
+                                if d == '\\' {
+                                    emit!(d, false, false);
+                                    if let Some(&e) = chars.get(i + 1) {
+                                        emit!(e, false, false);
+                                    }
+                                    i += 2;
+                                } else if d == '\'' {
+                                    emit!(d, true, false);
+                                    i += 1;
+                                    break;
+                                } else {
+                                    emit!(d, false, false);
+                                    i += 1;
+                                }
+                            }
+                        }
+                        Some(_) if chars.get(i + 2) == Some(&'\'') => {
+                            // Plain one-char literal like 'x' (or '"').
+                            emit!(c, true, false);
+                            emit!(chars[i + 1], false, false);
+                            emit!('\'', true, false);
+                            i += 3;
+                        }
+                        _ => {
+                            // Lifetime (or stray quote): stays in code.
+                            emit!(c, true, true);
+                            i += 1;
+                        }
+                    }
+                } else {
+                    emit!(c, true, true);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                if c == '\n' {
+                    comments.push((cur_comment_line, cur_comment.clone()));
+                    state = State::Code;
+                    emit!(c, true, true);
+                } else {
+                    cur_comment.push(c);
+                    emit!(c, false, false);
+                }
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(depth + 1);
+                    cur_comment.push_str("/*");
+                    emit!(c, false, false);
+                    emit!('*', false, false);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    if depth == 1 {
+                        comments.push((cur_comment_line, cur_comment.clone()));
+                        state = State::Code;
+                    } else {
+                        state = State::BlockComment(depth - 1);
+                        cur_comment.push_str("*/");
+                    }
+                    emit!(c, false, false);
+                    emit!('/', false, false);
+                    i += 2;
+                } else {
+                    cur_comment.push(c);
+                    emit!(c, false, false);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    emit!(c, false, true);
+                    if let Some(&e) = chars.get(i + 1) {
+                        emit!(e, false, true);
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Code;
+                    emit!(c, true, true);
+                    i += 1;
+                } else {
+                    emit!(c, false, true);
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let n = hashes as usize;
+                    let closes = (0..n).all(|k| chars.get(i + 1 + k) == Some(&'#'));
+                    if closes {
+                        emit!(c, true, true);
+                        for k in 0..n {
+                            emit!(chars[i + 1 + k], true, true);
+                        }
+                        i += 1 + n;
+                        state = State::Code;
+                    } else {
+                        emit!(c, false, true);
+                        i += 1;
+                    }
+                } else {
+                    emit!(c, false, true);
+                    i += 1;
+                }
+            }
+        }
+    }
+    // EOF inside a line comment still carries its annotation.
+    if let State::LineComment = state {
+        comments.push((cur_comment_line, cur_comment.clone()));
+    }
+
+    let mut out = LexedFile {
+        code: code.split('\n').map(str::to_string).collect(),
+        code_with_strings: with_strings.split('\n').map(str::to_string).collect(),
+        allows: Vec::new(),
+        malformed: Vec::new(),
+    };
+    for (start_line, text) in &comments {
+        for (off, cline) in text.split('\n').enumerate() {
+            parse_allows(start_line + off, cline, &mut out.allows, &mut out.malformed);
+        }
+    }
+    out
+}
+
+fn ident_char(c: Option<char>) -> bool {
+    matches!(c, Some(c) if c.is_alphanumeric() || c == '_')
+}
+
+const MARKER: &str = "detlint:allow";
+
+/// Parse one comment line as an annotation, if it is one.
+///
+/// An annotation must be the comment's own content: the marker has to open
+/// the comment line (after whitespace and doc/block decoration chars
+/// `/ ! *`). A marker mentioned mid-comment — prose documenting the syntax,
+/// like this very sentence's references to the annotation — is ignored
+/// entirely rather than reported as malformed.
+fn parse_allows(
+    line: usize,
+    text: &str,
+    allows: &mut Vec<Allow>,
+    malformed: &mut Vec<MalformedAllow>,
+) {
+    let head = text.trim_start_matches([' ', '\t', '/', '!', '*']);
+    if head.starts_with(MARKER) {
+        let rest = &head[MARKER.len()..];
+        let Some(open) = rest.find('(') else {
+            malformed.push(MalformedAllow {
+                line,
+                what: "missing rule list: expected detlint:allow(D00x)".into(),
+            });
+            return;
+        };
+        if !rest[..open].trim().is_empty() {
+            malformed.push(MalformedAllow {
+                line,
+                what: "text between detlint:allow and '('".into(),
+            });
+            return;
+        }
+        let Some(close_rel) = rest[open..].find(')') else {
+            malformed.push(MalformedAllow {
+                line,
+                what: "unclosed rule list".into(),
+            });
+            return;
+        };
+        let close = open + close_rel;
+        let rules: Vec<String> = rest[open + 1..close]
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        let well_formed = !rules.is_empty()
+            && rules.iter().all(|r| {
+                r.len() == 4
+                    && r.starts_with('D')
+                    && r[1..].chars().all(|c| c.is_ascii_digit())
+            });
+        if !well_formed {
+            malformed.push(MalformedAllow {
+                line,
+                what: format!("bad rule list {:?}: expected D-prefixed ids like D001", &rest[open + 1..close]),
+            });
+            return;
+        }
+        // Mandatory reason="…" after the rule list.
+        let tail = rest[close + 1..].trim_start();
+        let reason = tail
+            .strip_prefix("reason=\"")
+            .and_then(|t| t.find('"').map(|q| t[..q].trim().to_string()));
+        match reason {
+            Some(r) if !r.is_empty() => allows.push(Allow { line, rules, reason: r }),
+            _ => malformed.push(MalformedAllow {
+                line,
+                what: "missing or empty reason: every allow needs reason=\"…\"".into(),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let src = "let a = 1; // trailing note\n/* block\nspanning */ let b = 2;\n";
+        let lx = lex(src);
+        assert_eq!(lx.code[0].trim_end(), "let a = 1;");
+        assert!(!lx.code[0].contains("trailing"));
+        assert!(!lx.code[1].contains("block"));
+        assert!(lx.code[2].contains("let b = 2;"));
+        assert!(!lx.code[2].contains("spanning"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ let x = 1;\n";
+        let lx = lex(src);
+        assert!(lx.code[0].contains("let x = 1;"));
+        assert!(!lx.code[0].contains("inner"));
+        assert!(!lx.code[0].contains("still"));
+    }
+
+    #[test]
+    fn blanks_string_contents_in_code_view_only() {
+        let src = "let s = \"wall clock text\"; let t = 9;\n";
+        let lx = lex(src);
+        assert!(!lx.code[0].contains("wall clock"));
+        assert!(lx.code[0].contains("let t = 9;"));
+        assert!(lx.code_with_strings[0].contains("wall clock"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_span_lines() {
+        let src = "let s = r#\"first \"quoted\" part\nsecond part\"#; let u = 3;\n";
+        let lx = lex(src);
+        assert!(!lx.code[0].contains("quoted"));
+        assert!(!lx.code[1].contains("second part"));
+        assert!(lx.code[1].contains("let u = 3;"));
+    }
+
+    #[test]
+    fn escaped_strings_do_not_end_early() {
+        let src = "let s = \"a \\\" b\"; let z = 4;\n";
+        let lx = lex(src);
+        assert!(!lx.code[0].contains("a "));
+        assert!(lx.code[0].contains("let z = 4;"));
+    }
+
+    #[test]
+    fn char_literal_with_quote_vs_lifetime() {
+        let src = "fn f<'a>(x: &'a str) -> char { let q = '\"'; let e = '\\''; q }\n";
+        let lx = lex(src);
+        // Lifetimes survive in code; the quote chars inside literals are
+        // blanked and must not open a string that swallows the rest.
+        assert!(lx.code[0].contains("fn f<'a>(x: &'a str)"));
+        assert!(lx.code[0].contains("q }"));
+    }
+
+    #[test]
+    fn parses_allow_with_reason() {
+        let src = "let x = 1; // detlint:allow(D002) reason=\"human-facing timing\"\n";
+        let lx = lex(src);
+        assert_eq!(lx.allows.len(), 1);
+        assert_eq!(lx.allows[0].line, 0);
+        assert_eq!(lx.allows[0].rules, vec!["D002".to_string()]);
+        assert_eq!(lx.allows[0].reason, "human-facing timing");
+        assert!(lx.malformed.is_empty());
+    }
+
+    #[test]
+    fn allow_with_rule_list() {
+        let src = "// detlint:allow(D001, D004) reason=\"order-insensitive fold\"\nstmt();\n";
+        let lx = lex(src);
+        assert_eq!(lx.allows.len(), 1);
+        assert_eq!(lx.allows[0].rules, vec!["D001".to_string(), "D004".to_string()]);
+    }
+
+    #[test]
+    fn reasonless_allow_is_malformed() {
+        let src = "stmt(); // detlint:allow(D003)\n";
+        let lx = lex(src);
+        assert!(lx.allows.is_empty());
+        assert_eq!(lx.malformed.len(), 1);
+        assert!(lx.malformed[0].what.contains("reason"));
+    }
+
+    #[test]
+    fn empty_reason_is_malformed() {
+        let src = "stmt(); // detlint:allow(D003) reason=\"  \"\n";
+        let lx = lex(src);
+        assert!(lx.allows.is_empty());
+        assert_eq!(lx.malformed.len(), 1);
+    }
+
+    #[test]
+    fn bad_rule_id_is_malformed() {
+        let src = "stmt(); // detlint:allow(all) reason=\"nope\"\n";
+        let lx = lex(src);
+        assert!(lx.allows.is_empty());
+        assert_eq!(lx.malformed.len(), 1);
+    }
+
+    #[test]
+    fn line_counts_preserved() {
+        let src = "a\nb\nc\n";
+        let lx = lex(src);
+        assert_eq!(lx.code.len(), lx.code_with_strings.len());
+        assert_eq!(lx.code.len(), src.split('\n').count());
+    }
+}

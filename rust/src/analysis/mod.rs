@@ -1,0 +1,76 @@
+//! # detlint — the determinism & invariant static-analysis pass
+//!
+//! Every load-bearing claim this repo makes (defenses-off ≡ baseline,
+//! observability on/off bit-identical, policy-object ≡ scalar-knob) rests
+//! on pinned replay fingerprints in `rust/tests/replay_equivalence.rs`.
+//! Those tests catch a broken determinism contract only *after* the fact —
+//! and Rust's per-instance-random `HashMap` hashing means an
+//! iteration-order bug can pass a single-process run and flake in the
+//! next. This module is the static side of the contract
+//! (`docs/determinism.md`): a dependency-free lexer + line-scanner —
+//! matching the crate's hand-rolled-everything policy, no `syn`, no
+//! clippy plugin — that walks `rust/src/`, `rust/tests/` and `benches/`
+//! and enforces:
+//!
+//! | rule | guards against |
+//! |------|----------------|
+//! | D001 | unordered `HashMap`/`HashSet` iteration on sim-visible paths |
+//! | D002 | wall-clock reads outside `net/tcp.rs` / `benchlib/` |
+//! | D003 | RNG construction outside `util/rng.rs` |
+//! | D004 | float accumulation over unordered iterators |
+//! | D005 | `{:?}` of hash maps feeding codecs / fingerprints / traces |
+//!
+//! Suppression is explicit and audited: only an inline
+//! `// detlint:allow(D00x) reason="…"` with a non-empty reason exempts a
+//! line, and every exemption lands in the report census. The `detlint`
+//! bin (`rust/src/bin/detlint.rs`) exits nonzero on unexempted findings
+//! and writes `DETLINT_report.json` for CI upload.
+//!
+//! Layout: [`lexer`] strips comments/literals and extracts annotations,
+//! [`rules`] classifies paths and runs D001–D005 over the stripped lines,
+//! [`report`] aggregates per-file results into the JSON artifact.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use report::Report;
+pub use rules::{classify, scan, Exemption, FileClass, Finding, ScanResult, RuleInfo, RULES};
+
+/// Scan a list of `(path, source)` pairs into one aggregated [`Report`].
+///
+/// Pure function of its inputs (no filesystem access) so the whole
+/// pipeline is unit-testable; the bin supplies real file contents.
+pub fn scan_tree<'a, I>(files: I) -> Report
+where
+    I: IntoIterator<Item = (&'a str, &'a str)>,
+{
+    let mut rep = Report::default();
+    for (path, source) in files {
+        let r = rules::scan(path, source);
+        rep.scanned_files += 1;
+        rep.findings.extend(r.findings);
+        rep.exemptions.extend(r.exemptions);
+        rep.malformed.extend(r.malformed);
+        rep.unused_allows.extend(r.unused_allows);
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_tree_aggregates_across_files() {
+        let clean = "pub fn ok() {}\n";
+        let dirty = "pub fn bad() { let t = std::time::Instant::now(); drop(t); }\n";
+        let rep = scan_tree(vec![
+            ("rust/src/util/a.rs", clean),
+            ("rust/src/util/b.rs", dirty),
+        ]);
+        assert_eq!(rep.scanned_files, 2);
+        assert_eq!(rep.findings.len(), 1);
+        assert!(rep.failed());
+    }
+}

@@ -1,0 +1,169 @@
+//! `DETLINT_report.json` rendering.
+//!
+//! Machine-readable run summary for CI artifact upload: every unexempted
+//! finding (rule, file, line, snippet), the full exemption census (every
+//! `detlint:allow` that suppressed something, with its mandatory reason),
+//! malformed annotations, and stale allows. Objects serialize through
+//! [`crate::util::json::Json`], whose `BTreeMap` backing makes the output
+//! byte-deterministic — the report of a deterministic tree is itself
+//! reproducible.
+
+use crate::util::json::Json;
+
+use super::rules::{Exemption, Finding, MalformedAllow, RULES};
+
+/// Aggregated results of scanning a whole tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub scanned_files: usize,
+    pub findings: Vec<Finding>,
+    pub exemptions: Vec<Exemption>,
+    pub malformed: Vec<MalformedAllow>,
+    /// (file, 1-based line, comma-joined rule ids) of stale allows.
+    pub unused_allows: Vec<(String, usize, String)>,
+}
+
+impl Report {
+    /// Nonzero-exit condition: any unexempted finding, or any annotation
+    /// too broken to audit.
+    pub fn failed(&self) -> bool {
+        !self.findings.is_empty() || !self.malformed.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rules = Json::Obj(
+            RULES
+                .iter()
+                .map(|r| {
+                    (
+                        r.id.to_string(),
+                        Json::obj(vec![
+                            ("title", Json::str(r.title)),
+                            ("summary", Json::str(r.summary)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let findings = Json::Arr(
+            self.findings
+                .iter()
+                .map(|f| {
+                    Json::obj(vec![
+                        ("rule", Json::str(f.rule)),
+                        ("file", Json::str(&f.file)),
+                        ("line", Json::num(f.line as f64)),
+                        ("snippet", Json::str(&f.snippet)),
+                        ("message", Json::str(&f.message)),
+                    ])
+                })
+                .collect(),
+        );
+        let exemptions = Json::Arr(
+            self.exemptions
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("rule", Json::str(e.rule)),
+                        ("file", Json::str(&e.file)),
+                        ("line", Json::num(e.line as f64)),
+                        ("reason", Json::str(&e.reason)),
+                        ("snippet", Json::str(&e.snippet)),
+                    ])
+                })
+                .collect(),
+        );
+        let malformed = Json::Arr(
+            self.malformed
+                .iter()
+                .map(|m| {
+                    Json::obj(vec![
+                        ("file", Json::str(&m.file)),
+                        ("line", Json::num(m.line as f64)),
+                        ("what", Json::str(&m.what)),
+                    ])
+                })
+                .collect(),
+        );
+        let unused = Json::Arr(
+            self.unused_allows
+                .iter()
+                .map(|(file, line, rules)| {
+                    Json::obj(vec![
+                        ("file", Json::str(file)),
+                        ("line", Json::num(*line as f64)),
+                        ("rules", Json::str(rules)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("tool", Json::str("detlint")),
+            ("version", Json::num(1.0)),
+            ("scanned_files", Json::num(self.scanned_files as f64)),
+            ("rules", rules),
+            ("findings", findings),
+            ("exemptions", exemptions),
+            ("malformed_exemptions", malformed),
+            ("unused_allows", unused),
+            (
+                "summary",
+                Json::obj(vec![
+                    ("findings", Json::num(self.findings.len() as f64)),
+                    ("exemptions", Json::num(self.exemptions.len() as f64)),
+                    ("malformed", Json::num(self.malformed.len() as f64)),
+                    ("passed", Json::Bool(!self.failed())),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_report_passes_and_serializes() {
+        let r = Report::default();
+        assert!(!r.failed());
+        let j = r.to_json();
+        assert_eq!(j.get("tool").as_str(), Some("detlint"));
+        assert_eq!(j.at(&["summary", "passed"]).as_bool(), Some(true));
+        assert_eq!(j.get("rules").as_obj().map(|o| o.len()), Some(5));
+    }
+
+    #[test]
+    fn findings_fail_and_round_trip() {
+        let r = Report {
+            scanned_files: 3,
+            findings: vec![Finding {
+                rule: "D002",
+                file: "rust/src/x.rs".into(),
+                line: 7,
+                snippet: "let t = now();".into(),
+                message: "wall-clock read".into(),
+            }],
+            ..Report::default()
+        };
+        assert!(r.failed());
+        let text = r.to_json().to_string();
+        let back = Json::parse(&text).expect("report must be valid JSON");
+        assert_eq!(back.at(&["summary", "findings"]).as_usize(), Some(1));
+        assert_eq!(back.at(&["summary", "passed"]).as_bool(), Some(false));
+        assert_eq!(back.get("findings").as_arr().map(|a| a.len()), Some(1));
+    }
+
+    #[test]
+    fn malformed_alone_fails() {
+        let r = Report {
+            malformed: vec![MalformedAllow {
+                file: "rust/src/x.rs".into(),
+                line: 2,
+                what: "missing reason".into(),
+            }],
+            ..Report::default()
+        };
+        assert!(r.failed());
+    }
+}

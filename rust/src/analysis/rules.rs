@@ -1,0 +1,756 @@
+//! The detlint rule engine: D001–D005 over lexed source lines.
+//!
+//! Rules operate on `(path classification, stripped lines)` so unit tests
+//! can feed synthetic fixtures under any pretend path. Scope model:
+//!
+//! * **sim-visible** — modules whose state feeds the deterministic replay
+//!   fingerprint: `coordinator`, `gossip`, `ledger`, `reputation`,
+//!   `latency`, `capacity`, `sim`, `pos`, `duel` under `rust/src/`.
+//!   D001/D004/D005 fire only here, and only outside test scope.
+//! * **wall-clock allowlist** — `rust/src/net/tcp.rs` (real sockets need a
+//!   real clock) and `rust/src/benchlib/` (the timing harness *is* a wall
+//!   clock). D002 fires everywhere else, tests and benches included.
+//! * **RNG home** — `rust/src/util/rng.rs` is the only module allowed to
+//!   construct RNG state; everything else must `fork()` a lineage that
+//!   traces back to the world seed. D003 fires in non-test library code.
+//! * **test scope** — files under `rust/tests/` and `benches/`, plus
+//!   everything from a file's first `#[cfg(test)]` line to EOF. Tests may
+//!   seed fixture RNGs and iterate scratch maps freely.
+//!
+//! Suppression: `// detlint:allow(D00x) reason="…"` on the offending line
+//! or the line directly above (see [`super::lexer`]). Suppressed findings
+//! become [`Exemption`]s and are listed in the report census.
+
+use std::collections::BTreeSet;
+
+use super::lexer;
+
+/// Static description of one rule, for reports and docs.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub summary: &'static str,
+}
+
+/// The rule table (mirrored in `docs/determinism.md`).
+pub const RULES: [RuleInfo; 5] = [
+    RuleInfo {
+        id: "D001",
+        title: "unordered map iteration on a sim-visible path",
+        summary: "HashMap/HashSet iteration (for..in, .iter(), .keys(), .values(), \
+                  .drain(), .into_iter()) in a sim-visible module without a \
+                  sort-before-use or a BTreeMap: per-instance hash randomization \
+                  makes the visit order differ across runs, breaking replay.",
+    },
+    RuleInfo {
+        id: "D002",
+        title: "wall-clock read outside the allowlist",
+        summary: "Instant::now()/SystemTime::now() anywhere except net/tcp.rs and \
+                  benchlib/: simulated time is the only clock the deterministic \
+                  World may observe.",
+    },
+    RuleInfo {
+        id: "D003",
+        title: "RNG constructed outside util/rng.rs",
+        summary: "Rng::new(..) or a foreign RNG (thread_rng, from_entropy, StdRng, \
+                  SmallRng) in non-test library code: all randomness must be a \
+                  fork() of the single seeded lineage rooted at the world seed.",
+    },
+    RuleInfo {
+        id: "D004",
+        title: "float accumulation over an unordered iterator",
+        summary: "Summing/folding floats over HashMap/HashSet iteration: float \
+                  addition is not associative, so even a full visit gives \
+                  order-dependent totals.",
+    },
+    RuleInfo {
+        id: "D005",
+        title: "Debug-format of a hash map on a sim-visible path",
+        summary: "{:?} of a HashMap/HashSet-typed value in a sim-visible module: \
+                  Debug output inherits iteration order, so anything it feeds \
+                  (wire codecs, fingerprints, trace export) becomes \
+                  run-dependent.",
+    },
+];
+
+/// One unexempted violation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub snippet: String,
+    pub message: String,
+}
+
+/// A violation suppressed by a well-formed `detlint:allow`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Exemption {
+    pub rule: &'static str,
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub reason: String,
+    pub snippet: String,
+}
+
+/// A broken `detlint:allow` annotation (fails the run: a reasonless allow
+/// is indistinguishable from a stale one).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MalformedAllow {
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub what: String,
+}
+
+/// Everything `scan` learned about one file.
+#[derive(Debug, Default)]
+pub struct ScanResult {
+    pub findings: Vec<Finding>,
+    pub exemptions: Vec<Exemption>,
+    pub malformed: Vec<MalformedAllow>,
+    /// Well-formed allows that suppressed nothing (stale — reported as a
+    /// warning in the census, not a failure).
+    pub unused_allows: Vec<(String, usize, String)>,
+}
+
+/// Path-derived scope of one file (all decisions the rules need).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FileClass {
+    pub sim_visible: bool,
+    pub wallclock_exempt: bool,
+    pub rng_home: bool,
+    pub test_file: bool,
+}
+
+const SIM_VISIBLE_MODULES: [&str; 9] = [
+    "coordinator",
+    "gossip",
+    "ledger",
+    "reputation",
+    "latency",
+    "capacity",
+    "sim",
+    "pos",
+    "duel",
+];
+
+/// Classify a repo-relative path (forward slashes).
+pub fn classify(path: &str) -> FileClass {
+    let p = path.trim_start_matches("./");
+    let sim_visible = SIM_VISIBLE_MODULES.iter().any(|m| {
+        p.starts_with(&format!("rust/src/{m}/")) || p == format!("rust/src/{m}.rs")
+    });
+    FileClass {
+        sim_visible,
+        wallclock_exempt: p == "rust/src/net/tcp.rs" || p.starts_with("rust/src/benchlib/"),
+        rng_home: p == "rust/src/util/rng.rs",
+        test_file: p.starts_with("rust/tests/") || p.starts_with("benches/"),
+    }
+}
+
+const ITER_METHODS: [&str; 9] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+];
+
+const WALLCLOCK_PATTERNS: [&str; 2] = ["Instant::now", "SystemTime::now"];
+
+const RNG_PATTERNS: [&str; 5] = [
+    "Rng::new(",
+    "thread_rng",
+    "from_entropy",
+    "StdRng",
+    "SmallRng",
+];
+
+const FLOAT_ACC_PATTERNS: [&str; 5] = [
+    "sum::<f64>()",
+    "sum::<f32>()",
+    ".fold(0.0",
+    ".fold(0f64",
+    ".fold(0f32",
+];
+
+/// How many lines after an iteration site we look for a `.sort`/`BTree`
+/// that makes the order deterministic before anything consumes it.
+const SORT_WINDOW: usize = 7;
+
+/// Run every rule over one file.
+pub fn scan(path: &str, source: &str) -> ScanResult {
+    let class = classify(path);
+    let lexed = lexer::lex(source);
+    let raw_lines: Vec<&str> = source.split('\n').collect();
+    let test_from = if class.test_file {
+        0
+    } else {
+        lexed
+            .code
+            .iter()
+            .position(|l| l.trim_start().starts_with("#[cfg(test)]"))
+            .unwrap_or(usize::MAX)
+    };
+    let hash_idents = collect_hash_idents(&lexed.code);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    let mut push = |raw: &mut Vec<Finding>, rule: &'static str, i: usize, msg: String| {
+        raw.push(Finding {
+            rule,
+            file: path.to_string(),
+            line: i + 1,
+            snippet: snippet(raw_lines.get(i).copied().unwrap_or("")),
+            message: msg,
+        });
+    };
+
+    for (i, line) in lexed.code.iter().enumerate() {
+        let in_test = i >= test_from;
+
+        // D002 — applies everywhere (tests and benches too), minus allowlist.
+        if !class.wallclock_exempt {
+            for pat in WALLCLOCK_PATTERNS {
+                if line.contains(pat) {
+                    push(&mut raw, "D002", i, format!("wall-clock read `{pat}`"));
+                    break;
+                }
+            }
+        }
+
+        // D003 — non-test library code outside the RNG home module.
+        if !class.rng_home && !in_test {
+            for pat in RNG_PATTERNS {
+                if line.contains(pat) {
+                    push(
+                        &mut raw,
+                        "D003",
+                        i,
+                        format!("RNG constructed via `{}` outside util/rng.rs", pat.trim_end_matches('(')),
+                    );
+                    break;
+                }
+            }
+        }
+
+        if class.sim_visible && !in_test {
+            for id in &hash_idents {
+                if !iterates(line, id) {
+                    continue;
+                }
+                // D001 — unless a sort (or BTree re-collect) follows closely.
+                if !sorted_nearby(&lexed.code, i) {
+                    push(
+                        &mut raw,
+                        "D001",
+                        i,
+                        format!("unordered iteration over hash-typed `{id}`"),
+                    );
+                }
+                // D004 — float accumulation is broken even when sorted later:
+                // the sum happens in visit order.
+                if float_acc_nearby(&lexed.code, i) {
+                    push(
+                        &mut raw,
+                        "D004",
+                        i,
+                        format!("float accumulation over hash-typed `{id}`"),
+                    );
+                }
+            }
+
+            // D005 — Debug-format of a hash-typed value. Format strings are
+            // string literals, so this scans the strings-kept view.
+            let ws = &lexed.code_with_strings[i];
+            if ws.contains(":?}") {
+                for id in &hash_idents {
+                    let inline = format!("{{{id}:?}}");
+                    if ws.contains(&inline) || word_in(line, id) {
+                        push(
+                            &mut raw,
+                            "D005",
+                            i,
+                            format!("Debug-format of hash-typed `{id}`"),
+                        );
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    // Apply exemptions: an allow covers its own line and the line below.
+    let mut used = vec![false; lexed.allows.len()];
+    let mut out = ScanResult::default();
+    for f in raw {
+        let fline0 = f.line - 1;
+        let hit = lexed.allows.iter().enumerate().find(|(_, a)| {
+            (a.line == fline0 || a.line + 1 == fline0) && a.rules.iter().any(|r| r == f.rule)
+        });
+        if let Some((ai, a)) = hit {
+            used[ai] = true;
+            out.exemptions.push(Exemption {
+                rule: f.rule,
+                file: f.file,
+                line: f.line,
+                reason: a.reason.clone(),
+                snippet: f.snippet,
+            });
+        } else {
+            out.findings.push(f);
+        }
+    }
+    for (ai, a) in lexed.allows.iter().enumerate() {
+        if !used[ai] {
+            out.unused_allows
+                .push((path.to_string(), a.line + 1, a.rules.join(",")));
+        }
+    }
+    for m in lexed.malformed {
+        out.malformed.push(MalformedAllow {
+            file: path.to_string(),
+            line: m.line + 1,
+            what: m.what,
+        });
+    }
+    out
+}
+
+fn snippet(line: &str) -> String {
+    let t = line.trim();
+    if t.len() > 120 {
+        let mut cut = 120;
+        while !t.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        format!("{}…", &t[..cut])
+    } else {
+        t.to_string()
+    }
+}
+
+/// Collect names declared with a HashMap/HashSet type anywhere in the file:
+/// `let [mut] name = HashMap::new()`, struct fields and fn params
+/// (`name: HashMap<..>`, `name: Arc<Mutex<HashMap<..>>>`). Line-local
+/// heuristic — good enough for the declaration styles this crate uses.
+fn collect_hash_idents(lines: &[String]) -> Vec<String> {
+    let mut ids: BTreeSet<String> = BTreeSet::new();
+    for line in lines {
+        let line = sanitize_ascii(line);
+        for ty in ["HashMap", "HashSet"] {
+            let mut from = 0usize;
+            while let Some(p) = line[from..].find(ty) {
+                let abs = from + p;
+                from = abs + ty.len();
+                if !word_boundary(&line, abs, ty.len()) {
+                    continue;
+                }
+                if let Some(name) = decl_name(&line[..abs]) {
+                    ids.insert(name);
+                }
+            }
+        }
+    }
+    ids.into_iter().collect()
+}
+
+/// Non-ASCII chars (only ever inside comments/strings, which are already
+/// blanked, or in prose that is not code) become spaces so the byte-index
+/// scans below stay on char boundaries.
+fn sanitize_ascii(line: &str) -> String {
+    if line.is_ascii() {
+        line.to_string()
+    } else {
+        line.chars().map(|c| if c.is_ascii() { c } else { ' ' }).collect()
+    }
+}
+
+fn word_boundary(line: &str, start: usize, len: usize) -> bool {
+    let b = line.as_bytes();
+    let before_ok = start == 0 || !is_ident_byte(b[start - 1]);
+    let after_ok = start + len >= b.len() || !is_ident_byte(b[start + len]);
+    before_ok && after_ok
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// The identifier being declared on `head` (the text before the type name):
+/// `let [mut] NAME = …` or `NAME: …` (skipping `::` path separators).
+fn decl_name(head: &str) -> Option<String> {
+    let head = sanitize_ascii(head);
+    if let Some(lp) = head.rfind("let ") {
+        let rest = head[lp + 4..].trim_start();
+        let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+        let name: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !name.is_empty() {
+            return Some(name);
+        }
+    }
+    let b = head.as_bytes();
+    let mut j = b.len();
+    while j > 0 {
+        j -= 1;
+        if b[j] != b':' {
+            continue;
+        }
+        if j > 0 && b[j - 1] == b':' {
+            // `::` path separator — skip both colons.
+            j -= 1;
+            continue;
+        }
+        if j + 1 < b.len() && b[j + 1] == b':' {
+            continue;
+        }
+        // Single `:` — the field/param name sits directly before it.
+        let mut k = j;
+        while k > 0 && (b[k - 1] as char).is_whitespace() {
+            k -= 1;
+        }
+        let mut s = k;
+        while s > 0 && is_ident_byte(b[s - 1]) {
+            s -= 1;
+        }
+        if s < k {
+            return Some(head[s..k].to_string());
+        }
+        return None;
+    }
+    None
+}
+
+/// Does `line` iterate `id`? Either `id.iter()`-style (any method in
+/// [`ITER_METHODS`]) or a `for … in [&[mut ]]id` loop header.
+fn iterates(line: &str, id: &str) -> bool {
+    let line = sanitize_ascii(line);
+    for m in ITER_METHODS {
+        let pat = format!("{id}{m}");
+        let mut from = 0usize;
+        while let Some(p) = line[from..].find(&pat) {
+            let abs = from + p;
+            from = abs + 1;
+            if word_boundary(&line, abs, id.len()) {
+                return true;
+            }
+        }
+    }
+    if line.contains("for ") {
+        for pre in [" in &mut ", " in &", " in "] {
+            let pat = format!("{pre}{id}");
+            let mut from = 0usize;
+            while let Some(p) = line[from..].find(&pat) {
+                let abs = from + p;
+                from = abs + 1;
+                let end = abs + pat.len();
+                let next = line.as_bytes().get(end).copied();
+                let terminated = match next {
+                    None => true,
+                    Some(b) => !is_ident_byte(b) && b != b'.',
+                };
+                if terminated {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Is the iteration's order laundered through a sort (or a BTree
+/// re-collect) within the following few lines?
+fn sorted_nearby(lines: &[String], i: usize) -> bool {
+    let end = (i + SORT_WINDOW).min(lines.len());
+    lines[i..end]
+        .iter()
+        .any(|l| l.contains(".sort") || l.contains("BTreeMap") || l.contains("BTreeSet"))
+}
+
+/// Does a float accumulator consume the iteration within the statement?
+fn float_acc_nearby(lines: &[String], i: usize) -> bool {
+    let end = (i + 3).min(lines.len());
+    lines[i..end]
+        .iter()
+        .any(|l| FLOAT_ACC_PATTERNS.iter().any(|p| l.contains(p)))
+}
+
+/// Word-boundary occurrence of `id` anywhere in `line`.
+fn word_in(line: &str, id: &str) -> bool {
+    let line = sanitize_ascii(line);
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(id) {
+        let abs = from + p;
+        from = abs + 1;
+        if word_boundary(&line, abs, id.len()) {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SIM_PATH: &str = "rust/src/coordinator/fixture.rs";
+    const PLAIN_PATH: &str = "rust/src/util/fixture.rs";
+
+    fn rules_fired(r: &ScanResult) -> Vec<&'static str> {
+        r.findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- classification ---------------------------------------------------
+
+    #[test]
+    fn classify_scopes() {
+        assert!(classify("rust/src/gossip/mod.rs").sim_visible);
+        assert!(classify("rust/src/ledger/chain.rs").sim_visible);
+        assert!(!classify("rust/src/util/json.rs").sim_visible);
+        assert!(!classify("rust/src/simulator_helpers.rs").sim_visible);
+        assert!(classify("rust/src/benchlib/mod.rs").wallclock_exempt);
+        assert!(classify("rust/src/net/tcp.rs").wallclock_exempt);
+        assert!(!classify("rust/src/net/mod.rs").wallclock_exempt);
+        assert!(classify("rust/src/util/rng.rs").rng_home);
+        assert!(classify("rust/tests/integration.rs").test_file);
+        assert!(classify("benches/fleet_scale.rs").test_file);
+    }
+
+    // ---- D001 -------------------------------------------------------------
+
+    #[test]
+    fn d001_true_positive_for_loop() {
+        let src = "use std::collections::HashMap;\n\
+                   struct S { pending: HashMap<u64, f64> }\n\
+                   impl S { fn f(&self) { for (k, v) in self.pending.iter() { drop((k, v)); } } }\n";
+        let r = scan(SIM_PATH, src);
+        assert_eq!(rules_fired(&r), vec!["D001"]);
+        assert_eq!(r.findings[0].line, 3);
+    }
+
+    #[test]
+    fn d001_true_positive_drain() {
+        let src = "fn f() {\n    let mut seen = std::collections::HashSet::new();\n    seen.insert(1u32);\n    for v in seen.drain() { drop(v); }\n}\n";
+        let r = scan(SIM_PATH, src);
+        assert_eq!(rules_fired(&r), vec!["D001"]);
+    }
+
+    #[test]
+    fn d001_true_negative_sorted_after_collect() {
+        let src = "struct S { pending: std::collections::HashMap<u64, f64> }\n\
+                   impl S { fn f(&self) -> Vec<u64> {\n\
+                   let mut v: Vec<u64> = self.pending.keys().copied().collect();\n\
+                   v.sort_unstable();\n\
+                   v } }\n";
+        let r = scan(SIM_PATH, src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn d001_true_negative_btreemap() {
+        let src = "struct S { pending: std::collections::BTreeMap<u64, f64> }\n\
+                   impl S { fn f(&self) { for k in self.pending.keys() { drop(k); } } }\n";
+        let r = scan(SIM_PATH, src);
+        assert!(r.findings.is_empty());
+    }
+
+    #[test]
+    fn d001_true_negative_outside_sim_visible() {
+        let src = "fn f(m: &std::collections::HashMap<u64, u64>) { for k in m.keys() { drop(k); } }\n";
+        let r = scan(PLAIN_PATH, src);
+        assert!(r.findings.is_empty());
+    }
+
+    #[test]
+    fn d001_true_negative_in_test_scope() {
+        let src = "pub fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t(m: std::collections::HashMap<u8, u8>) { for k in m.keys() { drop(k); } }\n}\n";
+        let r = scan(SIM_PATH, src);
+        assert!(r.findings.is_empty());
+    }
+
+    #[test]
+    fn d001_keyed_access_is_fine() {
+        let src = "struct S { pending: std::collections::HashMap<u64, f64> }\n\
+                   impl S { fn f(&self) -> Option<&f64> { self.pending.get(&1) } }\n";
+        let r = scan(SIM_PATH, src);
+        assert!(r.findings.is_empty());
+    }
+
+    // ---- D002 -------------------------------------------------------------
+
+    #[test]
+    fn d002_true_positive_even_in_tests() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { let t0 = std::time::Instant::now(); drop(t0); }\n}\n";
+        let r = scan(PLAIN_PATH, src);
+        assert_eq!(rules_fired(&r), vec!["D002"]);
+        assert_eq!(r.findings[0].line, 3);
+    }
+
+    #[test]
+    fn d002_true_negative_allowlisted_module() {
+        let src = "fn t() { let t0 = std::time::Instant::now(); drop(t0); }\n";
+        let r = scan("rust/src/benchlib/mod.rs", src);
+        assert!(r.findings.is_empty());
+        let r = scan("rust/src/net/tcp.rs", src);
+        assert!(r.findings.is_empty());
+    }
+
+    #[test]
+    fn d002_true_negative_inside_string_literal() {
+        // The pattern name appearing in a string (e.g. this lint's own
+        // tables) is not a clock read.
+        let src = "const PATTERNS: [&str; 1] = [\"Instant::now\"];\n";
+        let r = scan(PLAIN_PATH, src);
+        assert!(r.findings.is_empty());
+    }
+
+    #[test]
+    fn d002_exempted_with_reason() {
+        let src = "// detlint:allow(D002) reason=\"human-facing CLI timing only\"\nlet t0 = std::time::Instant::now();\n";
+        let r = scan(PLAIN_PATH, src);
+        assert!(r.findings.is_empty());
+        assert_eq!(r.exemptions.len(), 1);
+        assert_eq!(r.exemptions[0].rule, "D002");
+        assert_eq!(r.exemptions[0].reason, "human-facing CLI timing only");
+    }
+
+    #[test]
+    fn d002_reasonless_allow_does_not_suppress() {
+        let src = "// detlint:allow(D002)\nlet t0 = std::time::Instant::now();\n";
+        let r = scan(PLAIN_PATH, src);
+        assert_eq!(rules_fired(&r), vec!["D002"]);
+        assert_eq!(r.malformed.len(), 1);
+    }
+
+    // ---- D003 -------------------------------------------------------------
+
+    #[test]
+    fn d003_true_positive() {
+        let src = "use crate::util::rng::Rng;\nfn f() { let mut rng = Rng::new(7); drop(rng.next_u64()); }\n";
+        let r = scan(PLAIN_PATH, src);
+        assert_eq!(rules_fired(&r), vec!["D003"]);
+    }
+
+    #[test]
+    fn d003_true_negative_in_rng_home() {
+        let src = "pub fn fresh() -> Rng { Rng::new(42) }\n";
+        let r = scan("rust/src/util/rng.rs", src);
+        assert!(r.findings.is_empty());
+    }
+
+    #[test]
+    fn d003_true_negative_in_tests() {
+        let src = "pub fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let _ = crate::util::rng::Rng::new(7); }\n}\n";
+        let r = scan(PLAIN_PATH, src);
+        assert!(r.findings.is_empty());
+        let r = scan("rust/tests/fixture.rs", "fn t() { let _ = wwwserve::util::rng::Rng::new(7); }\n");
+        assert!(r.findings.is_empty());
+    }
+
+    #[test]
+    fn d003_fork_is_fine() {
+        let src = "fn f(parent: &mut crate::util::rng::Rng) { let _child = parent.fork(); }\n";
+        let r = scan(PLAIN_PATH, src);
+        assert!(r.findings.is_empty());
+    }
+
+    // ---- D004 -------------------------------------------------------------
+
+    #[test]
+    fn d004_true_positive_float_sum() {
+        let src = "struct S { load: std::collections::HashMap<u32, f64> }\n\
+                   impl S { fn f(&self) -> f64 { self.load.values().sum::<f64>() } }\n";
+        let r = scan(SIM_PATH, src);
+        let fired = rules_fired(&r);
+        assert!(fired.contains(&"D004"), "{fired:?}");
+        // The same line is also an unordered iteration.
+        assert!(fired.contains(&"D001"), "{fired:?}");
+    }
+
+    #[test]
+    fn d004_true_negative_integer_sum() {
+        // Integer addition is associative and commutative: order-insensitive,
+        // so only D001 applies — and a sort nearby silences that too.
+        let src = "struct S { load: std::collections::HashMap<u32, u64> }\n\
+                   impl S { fn f(&self) -> u64 { self.load.values().sum() } // sum into BTreeMap-independent u64, .sort not needed\n}\n";
+        let r = scan(SIM_PATH, src);
+        assert!(!rules_fired(&r).contains(&"D004"));
+    }
+
+    #[test]
+    fn d004_true_negative_btreemap_float_sum() {
+        let src = "struct S { load: std::collections::BTreeMap<u32, f64> }\n\
+                   impl S { fn f(&self) -> f64 { self.load.values().sum::<f64>() } }\n";
+        let r = scan(SIM_PATH, src);
+        assert!(r.findings.is_empty());
+    }
+
+    // ---- D005 -------------------------------------------------------------
+
+    #[test]
+    fn d005_true_positive_debug_format() {
+        let src = "struct S { sent: std::collections::HashMap<u32, u64> }\n\
+                   impl S { fn f(&self) -> String { format!(\"{:?}\", self.sent) } }\n";
+        let r = scan(SIM_PATH, src);
+        assert_eq!(rules_fired(&r), vec!["D005"]);
+    }
+
+    #[test]
+    fn d005_true_positive_inline_capture() {
+        let src = "fn f(sent: std::collections::HashMap<u32, u64>) -> String { format!(\"{sent:?}\") }\n";
+        let r = scan(SIM_PATH, src);
+        assert_eq!(rules_fired(&r), vec!["D005"]);
+    }
+
+    #[test]
+    fn d005_true_negative_debug_of_vec() {
+        let src = "struct S { sent: std::collections::HashMap<u32, u64> }\n\
+                   impl S { fn f(&self, v: &Vec<u64>) -> String { format!(\"{v:?}\") } }\n";
+        let r = scan(SIM_PATH, src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn d005_true_negative_in_test_scope() {
+        let src = "pub fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t(m: std::collections::HashMap<u8, u8>) { println!(\"{m:?}\"); }\n}\n";
+        let r = scan(SIM_PATH, src);
+        assert!(r.findings.is_empty());
+    }
+
+    // ---- census bookkeeping ----------------------------------------------
+
+    #[test]
+    fn unused_allow_is_reported_not_fatal() {
+        let src = "// detlint:allow(D002) reason=\"nothing here reads a clock\"\nlet x = 1;\n";
+        let r = scan(PLAIN_PATH, src);
+        assert!(r.findings.is_empty());
+        assert!(r.exemptions.is_empty());
+        assert_eq!(r.unused_allows.len(), 1);
+    }
+
+    #[test]
+    fn hash_ident_collection_styles() {
+        let lines: Vec<String> = [
+            "let mut direct = HashMap::new();",
+            "    pub field: HashMap<u64, f64>,",
+            "    nested: Arc<Mutex<HashMap<String, u32>>>,",
+            "fn f(param: &mut std::collections::HashSet<u8>) {}",
+            "let keep: BTreeMap<u8, u8> = BTreeMap::new();",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let ids = collect_hash_idents(&lines);
+        assert_eq!(ids, vec!["direct", "field", "nested", "param"]);
+    }
+}

@@ -1,0 +1,110 @@
+//! detlint CLI — the determinism & invariant static-analysis gate.
+//!
+//! Usage: `cargo run --bin detlint [-- <repo-root>]` (default `.`).
+//!
+//! Walks `rust/src/`, `rust/tests/` and `benches/` under the given root,
+//! runs the D001–D005 rule engine (`wwwserve::analysis`) over every `.rs`
+//! file, prints unexempted findings plus the full exemption census, writes
+//! `DETLINT_report.json` at the root, and exits nonzero when any
+//! unexempted finding or malformed `detlint:allow` annotation remains.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use wwwserve::analysis;
+
+const SCAN_ROOTS: [&str; 3] = ["rust/src", "rust/tests", "benches"];
+
+fn main() -> ExitCode {
+    let root = std::env::args().nth(1).unwrap_or_else(|| ".".to_string());
+    let root = PathBuf::from(root);
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in SCAN_ROOTS {
+        collect_rs(&root.join(sub), &mut files);
+    }
+    // Deterministic scan order regardless of filesystem enumeration order.
+    files.sort();
+
+    let mut sources: Vec<(String, String)> = Vec::new();
+    for path in &files {
+        let rel = rel_path(&root, path);
+        match fs::read_to_string(path) {
+            Ok(src) => sources.push((rel, src)),
+            Err(e) => {
+                eprintln!("detlint: cannot read {rel}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let report = analysis::scan_tree(sources.iter().map(|(p, s)| (p.as_str(), s.as_str())));
+
+    for f in &report.findings {
+        println!(
+            "detlint: {}: {}:{}: {}\n    {}",
+            f.rule, f.file, f.line, f.message, f.snippet
+        );
+    }
+    for m in &report.malformed {
+        println!(
+            "detlint: malformed detlint:allow at {}:{}: {}",
+            m.file, m.line, m.what
+        );
+    }
+    for (file, line, rules) in &report.unused_allows {
+        println!("detlint: warning: unused detlint:allow({rules}) at {file}:{line}");
+    }
+
+    // Exemption census: every allow that is load-bearing, with its reason —
+    // CI prints this so reviewers see the full suppression surface.
+    println!("\ndetlint exemption census ({}):", report.exemptions.len());
+    for e in &report.exemptions {
+        println!("  {} {}:{} — {}", e.rule, e.file, e.line, e.reason);
+        println!("      {}", e.snippet);
+    }
+
+    let out = root.join("DETLINT_report.json");
+    if let Err(e) = fs::write(&out, format!("{}\n", report.to_json())) {
+        eprintln!("detlint: cannot write {}: {e}", out.display());
+        return ExitCode::from(2);
+    }
+
+    println!(
+        "\ndetlint: {} files, {} findings, {} exemptions, {} malformed — {}",
+        report.scanned_files,
+        report.findings.len(),
+        report.exemptions.len(),
+        report.malformed.len(),
+        if report.failed() { "FAIL" } else { "ok" }
+    );
+    if report.failed() {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+/// Recursively collect `.rs` files under `dir` (missing dirs are skipped so
+/// the bin also runs on partial checkouts).
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Root-relative path with forward slashes — what `analysis::classify`
+/// keys its scoping decisions on.
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.to_string_lossy().replace('\\', "/")
+}

@@ -232,7 +232,7 @@ mod tests {
     #[test]
     fn peer_scratch_memoizes_per_time_and_clock() {
         let mut view = PeerView::new(NodeId(0), GossipConfig::default(), 0.0);
-        view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
         let mut scratch = PeerScratch::default();
         assert_eq!(scratch.alive(&view, 0.5), &[NodeId(1)]);
         let key0 = scratch.key;
@@ -240,7 +240,7 @@ mod tests {
         assert_eq!(scratch.alive(&view, 0.5), &[NodeId(1)]);
         assert_eq!(scratch.key, key0);
         // View mutation bumps the clock: rebuilt.
-        view.merge(&vec![(NodeId(2), 1, true, 0, 0)], 0.6);
+        view.merge(&[(NodeId(2), 1, true, 0, 0)], 0.6);
         assert_eq!(scratch.alive(&view, 0.6), &[NodeId(1), NodeId(2)]);
         assert_ne!(scratch.key, key0);
         // Time moving (heartbeat aging) also rebuilds: peers age out.

@@ -10,7 +10,7 @@
 //!
 //! [`ParticipationPolicy`]: crate::policy::ParticipationPolicy
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::ctx::{exec_kind_code, Ctx};
 use super::duel::DuelCourt;
@@ -64,10 +64,16 @@ struct ExecTicket {
 }
 
 /// Origin-side pending delegations + executor-side tickets.
+///
+/// Both tables are `BTreeMap`s, not `HashMap`s: the timeout scan iterates
+/// `pending`, and a hash table's per-process iteration order would make
+/// same-tick expiries replay differently across runs (determinism contract,
+/// `docs/determinism.md`). `RequestId`'s derived `Ord` is
+/// `(origin, seq)` — exactly the order the scan wants.
 #[derive(Debug, Default)]
 pub(crate) struct Dispatch {
-    pending: HashMap<RequestId, PendingDelegation>,
-    exec_tickets: HashMap<RequestId, ExecTicket>,
+    pending: BTreeMap<RequestId, PendingDelegation>,
+    exec_tickets: BTreeMap<RequestId, ExecTicket>,
 }
 
 impl Dispatch {
@@ -79,7 +85,7 @@ impl Dispatch {
     /// settles a duel for the origin.
     pub fn pending_mut(
         &mut self,
-    ) -> &mut HashMap<RequestId, PendingDelegation> {
+    ) -> &mut BTreeMap<RequestId, PendingDelegation> {
         &mut self.pending
     }
 
@@ -498,15 +504,16 @@ impl Dispatch {
         court: &mut DuelCourt,
         now: Time,
     ) -> Vec<Action> {
-        let mut expired: Vec<RequestId> = self
+        // BTreeMap iteration is `(origin, seq)`-ordered, so multiple
+        // same-tick expiries replay identically across runs and processes
+        // without an explicit sort (this is byte-for-byte the order the
+        // pre-migration `sort_unstable_by_key` produced).
+        let expired: Vec<RequestId> = self
             .pending
             .iter()
             .filter(|(_, p)| now >= p.deadline)
             .map(|(id, _)| *id)
             .collect();
-        // HashMap iteration order is seeded per process; sort so multiple
-        // same-tick expiries replay identically across runs and processes.
-        expired.sort_unstable_by_key(|id| (id.origin.0, id.seq));
         let mut actions = Vec::new();
         for id in expired {
             let p = self.pending.remove(&id).expect("just listed");
@@ -609,7 +616,7 @@ mod tests {
             },
             &shared,
         );
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
         // duel_rate 0 for a deterministic single probe
         n0.system.duel_rate = 0.0;
         let actions = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
@@ -637,7 +644,7 @@ mod tests {
             &shared,
         );
         n0.system.duel_rate = 0.0;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
         n1.policy.accept_freq = 1.0;
 
         let bal0 = shared.lock().unwrap().balance(NodeId(0));
@@ -708,7 +715,7 @@ mod tests {
         );
         n0.system.duel_rate = 0.0;
         n0.system.max_probes = 2;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
 
         let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
         let Action::Send { msg: Message::Probe { req_id, .. }, .. } = a[0]
@@ -755,7 +762,7 @@ mod tests {
             &shared,
         );
         n0.system.duel_rate = 0.0;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
         n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
         assert_eq!(n0.backend().running_len(), 0);
         // Silence until past PROBE_TIMEOUT.
@@ -785,8 +792,8 @@ mod tests {
             vec![vec![0.005, 0.100], vec![0.100, 0.005]],
             LatencyConfig::default(),
         );
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
+        n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&[(NodeId(2), 1, true, 0, 1)], 0.0);
 
         let mut near = 0usize;
         let mut far = 0usize;
@@ -873,7 +880,7 @@ mod tests {
             LatencyConfig::default(),
         );
         // The only candidate lives in region 1.
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 1)], 0.0);
+        n0.view.merge(&[(NodeId(1), 1, true, 0, 1)], 0.0);
         let prior = n0.latency_estimator().unwrap().expected_from_me(1, 0.0);
         assert_eq!(prior, 0.080);
         let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);

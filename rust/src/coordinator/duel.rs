@@ -8,7 +8,7 @@
 //! duel entry points receive its pending table explicitly — starting or
 //! settling a duel is the one cross-layer handoff.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::ctx::Ctx;
 use super::dispatch::{PendingDelegation, PendingState, RESPONSE_TIMEOUT_FACTOR};
@@ -39,8 +39,11 @@ struct JudgeTask {
 /// Origin-side duel states + judge-side evaluation tasks.
 #[derive(Debug)]
 pub(crate) struct DuelCourt {
-    duels: HashMap<RequestId, DuelState>,
-    judge_tasks: HashMap<RequestId, JudgeTask>,
+    // Ordered maps (determinism contract, `docs/determinism.md`): nothing
+    // iterates these today, but they sit on the settlement path and must
+    // never grow a replay-order hazard.
+    duels: BTreeMap<RequestId, DuelState>,
+    judge_tasks: BTreeMap<RequestId, JudgeTask>,
     /// Synthetic request sequence (judge evals and other self-generated
     /// work carry our own origin with high seq numbers).
     synth_seq: u64,
@@ -49,8 +52,8 @@ pub(crate) struct DuelCourt {
 impl Default for DuelCourt {
     fn default() -> Self {
         DuelCourt {
-            duels: HashMap::new(),
-            judge_tasks: HashMap::new(),
+            duels: BTreeMap::new(),
+            judge_tasks: BTreeMap::new(),
             synth_seq: 1 << 40,
         }
     }
@@ -66,7 +69,7 @@ impl DuelCourt {
     pub fn start_duel(
         &mut self,
         ctx: &mut Ctx<'_>,
-        pending: &mut HashMap<RequestId, PendingDelegation>,
+        pending: &mut BTreeMap<RequestId, PendingDelegation>,
         req: Request,
         now: Time,
     ) -> Vec<Action> {
@@ -107,7 +110,7 @@ impl DuelCourt {
     pub fn on_duel_response(
         &mut self,
         ctx: &mut Ctx<'_>,
-        pending: &mut HashMap<RequestId, PendingDelegation>,
+        pending: &mut BTreeMap<RequestId, PendingDelegation>,
         response: Response,
         now: Time,
     ) -> Vec<Action> {
@@ -175,7 +178,7 @@ impl DuelCourt {
     fn dispatch_judges(
         &mut self,
         ctx: &mut Ctx<'_>,
-        pending: &mut HashMap<RequestId, PendingDelegation>,
+        pending: &mut BTreeMap<RequestId, PendingDelegation>,
         duel_id: RequestId,
         now: Time,
     ) -> Vec<Action> {
@@ -251,7 +254,7 @@ impl DuelCourt {
     pub fn on_judge_verdict(
         &mut self,
         ctx: &mut Ctx<'_>,
-        pending: &mut HashMap<RequestId, PendingDelegation>,
+        pending: &mut BTreeMap<RequestId, PendingDelegation>,
         from: NodeId,
         duel_id: RequestId,
         winner: NodeId,
@@ -391,7 +394,7 @@ mod tests {
         nodes[0].policy.target_utilization = 0.0;
         nodes[0].policy.offload_freq = 1.0;
         for i in 1..5u32 {
-            nodes[0].view.merge(&vec![(NodeId(i), 1, true, 0, 0)], 0.0);
+            nodes[0].view.merge(&[(NodeId(i), 1, true, 0, 0)], 0.0);
         }
 
         // Kick off: two Delegate{duel} sends.

@@ -276,7 +276,7 @@ mod tests {
     fn leave_gossips_goodbye() {
         let shared = Arc::new(Mutex::new(SharedLedger::new()));
         let mut n = mk_node(0, NodePolicy::default(), &shared);
-        n.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
         let a = n.handle(Event::Leave, 1.0);
         assert!(a.iter().any(|x| matches!(
             x,
@@ -295,8 +295,8 @@ mod tests {
         let prior = vec![vec![0.005, 0.080], vec![0.080, 0.005]];
         a.set_locality(0, prior.clone(), LatencyConfig::default());
         b.set_locality(0, prior, LatencyConfig::default());
-        a.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        b.view.merge(&vec![(NodeId(0), 1, true, 0, 0)], 0.0);
+        a.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
+        b.view.merge(&[(NodeId(0), 1, true, 0, 0)], 0.0);
         // a directly measured region 1 (say via probes).
         a.latency_estimator_mut().unwrap().observe_rtt(1, 2.0, 0.0);
         // Round 1 is the full-digest bootstrap; round 2 ships a delta with

@@ -17,7 +17,7 @@
 //! Region resolution goes through the gossip view's region tags; unknown
 //! or garbage tags are never fed (and score conservatively at read time).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::dispatch::PROBE_TIMEOUT;
 use super::node::NodeStats;
@@ -45,10 +45,10 @@ pub(crate) struct LatencyFeed {
     /// *unambiguous* exchanges are measured: a second push while one is
     /// still unanswered clears the stamp and skips measurement for that
     /// round, because a reply could then match either push.
-    gossip_sent_at: HashMap<NodeId, Time>,
+    gossip_sent_at: BTreeMap<NodeId, Time>,
     /// Last time region-RTT summaries were piggybacked to each peer
     /// (`LatencyConfig::share_every` rate limit).
-    rtts_sent_at: HashMap<NodeId, Time>,
+    rtts_sent_at: BTreeMap<NodeId, Time>,
 }
 
 impl LatencyFeed {
@@ -208,10 +208,10 @@ impl LatencyFeed {
     /// measurable.
     pub fn stamp_gossip_push(&mut self, peer: NodeId, now: Time) {
         match self.gossip_sent_at.entry(peer) {
-            std::collections::hash_map::Entry::Occupied(e) => {
+            std::collections::btree_map::Entry::Occupied(e) => {
                 e.remove(); // ambiguous attribution: skip this round
             }
-            std::collections::hash_map::Entry::Vacant(e) => {
+            std::collections::btree_map::Entry::Vacant(e) => {
                 e.insert(now);
             }
         }
@@ -345,9 +345,9 @@ mod tests {
             LatencyConfig::default(),
         );
         // Known near peer in our own region.
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
         // Peer gossiping a garbage region tag (outside the matrix).
-        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 9)], 0.0);
+        n0.view.merge(&[(NodeId(2), 1, true, 0, 9)], 0.0);
         let lat = |n: &super::super::node::Node, p: u32| {
             n.feed.expected_latency_to(&n.view, NodeId(p), 0.0)
         };
@@ -367,7 +367,7 @@ mod tests {
             vec![vec![0.005, 0.080], vec![0.080, 0.005]],
             LatencyConfig::default(),
         );
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 1)], 0.0);
+        n0.view.merge(&[(NodeId(1), 1, true, 0, 1)], 0.0);
         let prior = n0.feed.expected_latency_to(&n0.view, NodeId(1), 0.0);
         // Two pushes without an intervening reply: the stamp is cleared,
         // so the (late, slow-looking) reply must not move the estimate.

@@ -139,6 +139,7 @@ impl Node {
             backend,
             view: PeerView::new(id, gossip_cfg, now),
             ledger,
+            // detlint:allow(D003) reason="per-node RNG lineage root, derived from the world seed"
             rng: Rng::new(seed ^ (0x9E37 + id.0 as u64)),
             feed: LatencyFeed::new(),
             snaps: Snapshots::new(),
@@ -629,7 +630,7 @@ mod tests {
         let _n1 = mk_node(1, NodePolicy::default(), &shared);
         let mut n0 = mk_node(0, NodePolicy::requester_only(), &shared);
         n0.system.duel_rate = 0.0;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
         let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
         assert!(a
             .iter()

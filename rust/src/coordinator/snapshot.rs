@@ -182,7 +182,7 @@ mod tests {
             &shared,
         );
         n0.system.duel_rate = 0.0;
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
         // Two back-to-back requests: the second reuses the cached snapshot
         // (same view clock, ledger version and time bucket) and still
         // probes the live peer.
@@ -199,7 +199,7 @@ mod tests {
         // A newly staked + gossiped peer invalidates via clock/version and
         // becomes the only candidate.
         let _n2 = mk_node(2, NodePolicy::default(), &shared);
-        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 0)], 20.0);
+        n0.view.merge(&[(NodeId(2), 1, true, 0, 0)], 20.0);
         let a = n0.handle(Event::UserRequest(user_req(0, 3, 20.5)), 20.5);
         assert_eq!(probes_to(&a), vec![NodeId(2)]);
     }
@@ -226,8 +226,8 @@ mod tests {
             vec![vec![0.001, 0.001], vec![0.001, 0.001]],
             LatencyConfig::default(),
         );
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
+        n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&[(NodeId(2), 1, true, 0, 1)], 0.0);
         let mut far0 = 0usize;
         for seq in 0..300u64 {
             let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);
@@ -279,8 +279,8 @@ mod tests {
             vec![vec![0.001, 0.001], vec![0.001, 0.001]],
             LatencyConfig::default(),
         );
-        n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        n0.view.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
+        n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
+        n0.view.merge(&[(NodeId(2), 1, true, 0, 1)], 0.0);
         let mut far0 = 0usize;
         for seq in 0..300u64 {
             let a = n0.handle(Event::UserRequest(user_req(0, seq, 0.0)), 0.0);

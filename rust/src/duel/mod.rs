@@ -14,7 +14,7 @@
 //! resulting class-level win rates reproduce Figure 6's measured 0.57 /
 //! 0.53 / 0.39 style gaps.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::types::{NodeId, Request, Response, Time};
 use crate::util::rng::Rng;
@@ -162,8 +162,8 @@ impl DuelState {
 /// Per-node duel statistics (Figure 6 right panels).
 #[derive(Debug, Clone, Default)]
 pub struct DuelStats {
-    pub wins: HashMap<NodeId, usize>,
-    pub losses: HashMap<NodeId, usize>,
+    pub wins: BTreeMap<NodeId, usize>,
+    pub losses: BTreeMap<NodeId, usize>,
 }
 
 impl DuelStats {

@@ -59,7 +59,7 @@
 //! `rust/tests/prop_protocol.rs` and measured in
 //! `benches/gossip_convergence.rs`.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 use crate::types::{NodeId, Time};
 use crate::util::rng::Rng;
@@ -134,7 +134,7 @@ pub const RESURRECT_PROB: f64 = 0.15;
 #[derive(Debug, Clone)]
 pub struct PeerView {
     pub me: NodeId,
-    entries: HashMap<NodeId, PeerEntry>,
+    entries: BTreeMap<NodeId, PeerEntry>,
     cfg: GossipConfig,
     /// Local mutation clock: bumped on every entry change; stamps
     /// `PeerEntry::updated` / `meta_updated` and floors the per-peer `sent`
@@ -142,7 +142,7 @@ pub struct PeerView {
     /// view (e.g. the node's cached stake snapshot).
     clock: u64,
     /// Per-peer clock floor: our `clock` as of the last delta sent to them.
-    sent: HashMap<NodeId, u64>,
+    sent: BTreeMap<NodeId, u64>,
     /// Clock value at [`seal_bootstrap`](PeerView::seal_bootstrap): deltas
     /// to never-contacted peers start here instead of at zero, so common
     /// bootstrap knowledge is not re-shipped to every first contact.
@@ -178,7 +178,7 @@ fn sorted_remove(v: &mut Vec<NodeId>, n: NodeId) {
 
 impl PeerView {
     pub fn new(me: NodeId, cfg: GossipConfig, now: Time) -> Self {
-        let mut entries = HashMap::new();
+        let mut entries = BTreeMap::new();
         entries.insert(
             me,
             PeerEntry {
@@ -197,7 +197,7 @@ impl PeerView {
             entries,
             cfg,
             clock: 1,
-            sent: HashMap::new(),
+            sent: BTreeMap::new(),
             bootstrap_clock: 0,
             ids_sorted: vec![me],
             online_sorted: Vec::new(),
@@ -721,11 +721,11 @@ mod tests {
     #[test]
     fn heartbeat_aging_suspects_silent_peer() {
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
-        a.merge(&vec![(NodeId(1), 4, true, 0, 0)], 0.0);
+        a.merge(&[(NodeId(1), 4, true, 0, 0)], 0.0);
         assert!(a.is_alive(NodeId(1), 4.9));
         assert!(!a.is_alive(NodeId(1), 5.1));
         // Progress resets the clock.
-        a.merge(&vec![(NodeId(1), 5, true, 0, 0)], 6.0);
+        a.merge(&[(NodeId(1), 5, true, 0, 0)], 6.0);
         assert!(a.is_alive(NodeId(1), 10.0));
     }
 
@@ -745,8 +745,8 @@ mod tests {
     fn endpoint_update_via_version_bump() {
         // Figure 10's "Node 3 changed address" case.
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
-        a.merge(&vec![(NodeId(3), 2, true, 1111, 0)], 0.0);
-        a.merge(&vec![(NodeId(3), 3, true, 2222, 0)], 1.0);
+        a.merge(&[(NodeId(3), 2, true, 1111, 0)], 0.0);
+        a.merge(&[(NodeId(3), 3, true, 2222, 0)], 1.0);
         assert_eq!(a.endpoint(NodeId(3)), Some(2222));
     }
 
@@ -754,9 +754,9 @@ mod tests {
     fn pick_targets_only_alive_and_bounded() {
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
         for i in 1..=5u32 {
-            a.merge(&vec![(NodeId(i), 1, true, 0, 0)], 0.0);
+            a.merge(&[(NodeId(i), 1, true, 0, 0)], 0.0);
         }
-        a.merge(&vec![(NodeId(9), 1, false, 0, 0)], 0.0); // offline
+        a.merge(&[(NodeId(9), 1, false, 0, 0)], 0.0); // offline
         let mut rng = Rng::new(0);
         for _ in 0..50 {
             let t = a.pick_targets(&mut rng, 1.0);
@@ -803,9 +803,9 @@ mod tests {
     #[test]
     fn suspicion_probe_reaches_aged_peer_but_not_leavers() {
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
-        a.merge(&vec![(NodeId(1), 5, true, 0, 0)], 10.0); // stays alive
-        a.merge(&vec![(NodeId(2), 5, true, 0, 0)], 0.0); // will age out
-        a.merge(&vec![(NodeId(3), 5, false, 0, 0)], 0.0); // graceful goodbye
+        a.merge(&[(NodeId(1), 5, true, 0, 0)], 10.0); // stays alive
+        a.merge(&[(NodeId(2), 5, true, 0, 0)], 0.0); // will age out
+        a.merge(&[(NodeId(3), 5, false, 0, 0)], 0.0); // graceful goodbye
         let mut rng = Rng::new(6);
         let mut probed_suspect = 0;
         for _ in 0..300 {
@@ -840,10 +840,10 @@ mod tests {
     #[test]
     fn alive_peers_grouped_by_region() {
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
-        a.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
-        a.merge(&vec![(NodeId(2), 1, true, 0, 1)], 0.0);
-        a.merge(&vec![(NodeId(3), 1, true, 0, 1)], 0.0);
-        a.merge(&vec![(NodeId(4), 1, false, 0, 1)], 0.0); // offline
+        a.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
+        a.merge(&[(NodeId(2), 1, true, 0, 1)], 0.0);
+        a.merge(&[(NodeId(3), 1, true, 0, 1)], 0.0);
+        a.merge(&[(NodeId(4), 1, false, 0, 1)], 0.0); // offline
         let by = a.alive_peers_by_region(1.0);
         assert_eq!(by[&0], vec![NodeId(1)]);
         assert_eq!(by[&1], vec![NodeId(2), NodeId(3)]);
@@ -876,7 +876,7 @@ mod tests {
             let version = step + 1;
             let online = rng.chance(0.8);
             let region = rng.below(3) as u32;
-            a.merge(&vec![(node, version, online, 0, region)], step as f64 * 0.1);
+            a.merge(&[(node, version, online, 0, region)], step as f64 * 0.1);
             let now = step as f64 * 0.1;
             assert_eq!(a.alive_peers(now), alive_brute(&a, now), "step {step}");
             let by = a.alive_peers_by_region(now);
@@ -897,7 +897,7 @@ mod tests {
     fn digest_sorted_without_resort() {
         let mut a = PeerView::new(NodeId(5), cfg(), 0.0);
         for i in [9u32, 2, 7, 1, 30, 4] {
-            a.merge(&vec![(NodeId(i), 3, true, i as u64, 0)], 0.0);
+            a.merge(&[(NodeId(i), 3, true, i as u64, 0)], 0.0);
         }
         let d = a.digest();
         let ids: Vec<u32> = d.iter().map(|(n, ..)| n.0).collect();
@@ -911,7 +911,7 @@ mod tests {
     fn first_delta_is_full_then_only_changes() {
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
         a.add_seed(NodeId(1), 0, 0, 0.0);
-        a.merge(&vec![(NodeId(2), 4, true, 0, 1)], 0.0);
+        a.merge(&[(NodeId(2), 4, true, 0, 1)], 0.0);
         // First contact: everything travels as full rows — except the
         // peer's own entry, which it is authoritative for.
         let (delta, hbs) = a.delta_for(NodeId(1), 0.0);
@@ -922,12 +922,12 @@ mod tests {
         let (delta, hbs) = a.delta_for(NodeId(1), 0.5);
         assert!(delta.is_empty() && hbs.is_empty());
         // A heartbeat-only advance travels as a compact pair...
-        a.merge(&vec![(NodeId(2), 5, true, 0, 1)], 3.0);
+        a.merge(&[(NodeId(2), 5, true, 0, 1)], 3.0);
         let (delta, hbs) = a.delta_for(NodeId(1), 3.0);
         assert!(delta.is_empty());
         assert_eq!(hbs, vec![(NodeId(2), 5)]);
         // ...while a membership change travels as a full row.
-        a.merge(&vec![(NodeId(2), 6, false, 0, 1)], 6.0);
+        a.merge(&[(NodeId(2), 6, false, 0, 1)], 6.0);
         let (delta, hbs) = a.delta_for(NodeId(1), 6.0);
         assert_eq!(delta, vec![(NodeId(2), 6, false, 0, 1)]);
         assert!(hbs.is_empty());
@@ -936,22 +936,22 @@ mod tests {
     #[test]
     fn heartbeat_throttle_rate_limits_per_entry() {
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
-        a.merge(&vec![(NodeId(2), 1, true, 0, 0)], 0.0);
+        a.merge(&[(NodeId(2), 1, true, 0, 0)], 0.0);
         // Drain first contact with both peers (full rows, throttle armed).
         let _ = a.delta_for(NodeId(1), 0.0);
         let _ = a.delta_for(NodeId(3), 0.0);
         // Past the throttle window (2s at suspect_after 5) a heartbeat-only
         // advance flows as a compact pair...
-        a.merge(&vec![(NodeId(2), 2, true, 0, 0)], 2.5);
+        a.merge(&[(NodeId(2), 2, true, 0, 0)], 2.5);
         let (_, hbs) = a.delta_for(NodeId(1), 2.5);
         assert_eq!(hbs, vec![(NodeId(2), 2)]);
         // ...and re-arms the throttle for *every* peer: a fresh bump right
         // after is withheld from the other peer too.
-        a.merge(&vec![(NodeId(2), 3, true, 0, 0)], 2.6);
+        a.merge(&[(NodeId(2), 3, true, 0, 0)], 2.6);
         let (delta, hbs) = a.delta_for(NodeId(3), 2.6);
         assert!(delta.is_empty() && hbs.is_empty(), "throttle spans peers");
         // Once the window passes the refresh flows again.
-        a.merge(&vec![(NodeId(2), 4, true, 0, 0)], 5.0);
+        a.merge(&[(NodeId(2), 4, true, 0, 0)], 5.0);
         let (_, hbs) = a.delta_for(NodeId(3), 5.0);
         assert_eq!(hbs, vec![(NodeId(2), 4)]);
     }
@@ -959,19 +959,19 @@ mod tests {
     #[test]
     fn heartbeat_pairs_never_resurrect_or_invent() {
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
-        a.merge(&vec![(NodeId(1), 5, false, 0, 0)], 0.0); // left
+        a.merge(&[(NodeId(1), 5, false, 0, 0)], 0.0); // left
         // A bare heartbeat for an offline entry must not flip it online.
-        let changed = a.merge_heartbeats(&vec![(NodeId(1), 9)], 1.0);
+        let changed = a.merge_heartbeats(&[(NodeId(1), 9)], 1.0);
         assert!(changed.is_empty());
         assert!(!a.is_alive(NodeId(1), 1.0));
         assert_eq!(a.entry(NodeId(1)).unwrap().version, 5);
         // Unknown nodes are skipped, not invented.
-        let changed = a.merge_heartbeats(&vec![(NodeId(7), 3)], 1.0);
+        let changed = a.merge_heartbeats(&[(NodeId(7), 3)], 1.0);
         assert!(changed.is_empty());
         assert!(a.entry(NodeId(7)).is_none());
         // Known online entries refresh version + liveness.
-        a.merge(&vec![(NodeId(2), 1, true, 0, 0)], 0.0);
-        let changed = a.merge_heartbeats(&vec![(NodeId(2), 4)], 4.9);
+        a.merge(&[(NodeId(2), 1, true, 0, 0)], 0.0);
+        let changed = a.merge_heartbeats(&[(NodeId(2), 4)], 4.9);
         assert_eq!(changed, vec![NodeId(2)]);
         assert!(a.is_alive(NodeId(2), 9.0));
         assert_eq!(a.entry(NodeId(2)).unwrap().version, 4);
@@ -981,11 +981,11 @@ mod tests {
     fn clock_changes_iff_content_changes() {
         let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
         let c0 = a.clock();
-        a.merge(&vec![(NodeId(1), 2, true, 0, 0)], 0.0);
+        a.merge(&[(NodeId(1), 2, true, 0, 0)], 0.0);
         assert!(a.clock() > c0);
         let c1 = a.clock();
         // A stale digest changes nothing — clock must hold still.
-        a.merge(&vec![(NodeId(1), 2, true, 0, 0)], 1.0);
+        a.merge(&[(NodeId(1), 2, true, 0, 0)], 1.0);
         assert_eq!(a.clock(), c1);
         a.heartbeat(2.0);
         assert!(a.clock() > c1);

@@ -4,7 +4,7 @@
 //! the conservation invariant `total = minted - burned` is property-tested
 //! in `rust/tests/prop_ledger.rs`.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::ops::CreditOp;
 use crate::types::{Credits, NodeId};
@@ -42,7 +42,7 @@ pub enum ApplyError {
 /// The materialized view of all accounts.
 #[derive(Debug, Clone, Default)]
 pub struct BalanceTable {
-    accounts: HashMap<NodeId, Account>,
+    accounts: BTreeMap<NodeId, Account>,
     /// Cumulative inflation/deflation counters (conservation accounting).
     pub minted: Credits,
     pub burned: Credits,
@@ -65,17 +65,15 @@ impl BalanceTable {
         self.account(node).stake
     }
 
-    /// All (node, stake) pairs with positive stake, sorted by node for
-    /// deterministic iteration.
+    /// All (node, stake) pairs with positive stake, sorted by node —
+    /// `BTreeMap` iteration is already node-ordered, so this is exactly the
+    /// order the pre-migration explicit sort produced.
     pub fn stakes(&self) -> Vec<(NodeId, Credits)> {
-        let mut v: Vec<(NodeId, Credits)> = self
-            .accounts
+        self.accounts
             .iter()
             .filter(|(_, a)| a.stake > 0)
             .map(|(n, a)| (*n, a.stake))
-            .collect();
-        v.sort_by_key(|(n, _)| *n);
-        v
+            .collect()
     }
 
     pub fn total_stake(&self) -> Credits {

@@ -8,7 +8,7 @@
 //! op-level validation both gate acceptance, so a forged or overdrafting
 //! block can never enter an honest replica.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::accounts::{ApplyError, BalanceTable};
 use super::block::Block;
@@ -38,7 +38,7 @@ pub struct Pending {
 pub struct Chain {
     blocks: Vec<Block>,
     balances: BalanceTable,
-    pending: HashMap<Hash256, Pending>,
+    pending: BTreeMap<Hash256, Pending>,
 }
 
 impl Chain {
@@ -46,7 +46,7 @@ impl Chain {
         Chain {
             blocks: Vec::new(),
             balances: BalanceTable::new(),
-            pending: HashMap::new(),
+            pending: BTreeMap::new(),
         }
     }
 
@@ -184,7 +184,7 @@ impl Chain {
                 }
                 t
             },
-            pending: HashMap::new(),
+            pending: BTreeMap::new(),
         };
         if !candidate.audit(keys) {
             return false;

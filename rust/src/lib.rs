@@ -1,3 +1,15 @@
+// Determinism & safety floor (docs/determinism.md): the replay contract
+// rests on this crate never reaching for unsafe tricks, and on every
+// must-use Result being handled — a silently dropped error on a sim path
+// is exactly the kind of divergence the pinned fingerprints exist to
+// catch. `unreachable_pub` is deliberately *not* in the set: the layered
+// coordinator exposes `pub fn`s on `pub(crate)` structs throughout, which
+// that lint rejects wholesale. The determinism-specific rules (D001–D005)
+// are enforced by the in-tree `detlint` bin instead, which understands
+// sim-visible scope in a way rustc lints cannot.
+#![forbid(unsafe_code)]
+#![deny(unused_must_use)]
+
 //! # WWW.Serve — decentralized LLM serving market
 //!
 //! Rust reproduction of *WWW.Serve: Interconnecting Global LLM Services
@@ -157,7 +169,22 @@
 //! bit-identical (`rust/tests/replay_equivalence.rs`);
 //! `benches/byzantine.rs` sweeps the Byzantine fraction and shows SLO
 //! attainment and honest-node revenue holding up with defenses on.
+//!
+//! ## Determinism contract
+//!
+//! Everything above is only auditable because replay is bit-exact: same
+//! config + seed ⇒ same trace, same fingerprint, on any machine. The
+//! contract (no wall clock, a single seeded RNG lineage rooted in
+//! [`util::rng`], ordered iteration on sim-visible paths, no
+//! Debug-formatted maps near codecs) is written down in
+//! `docs/determinism.md` and *machine-checked* by the [`analysis`] module
+//! — a dependency-free static-analysis pass run as the `detlint` bin in
+//! CI, with an audited inline-exemption census. The dynamic side lives in
+//! `rust/tests/replay_equivalence.rs` (pinned fingerprints) and
+//! `rust/tests/determinism.rs` (same-process double runs, which surface
+//! hash-iteration-order bugs that single runs miss).
 
+pub mod analysis;
 pub mod backend;
 pub mod benchlib;
 pub mod capacity;

@@ -223,6 +223,7 @@ fn cmd_generate(args: &Args) {
     };
     // Byte-level tokenization (vocab 512: bytes + specials).
     let tokens: Vec<u32> = prompt.bytes().map(|b| b as u32).collect();
+    // detlint:allow(D002) reason="CLI generation timing is human-facing output, never fed to the sim"
     let t0 = std::time::Instant::now();
     match engine.generate(&tokens, max_new) {
         Ok(out) => {

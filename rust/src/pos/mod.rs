@@ -156,7 +156,7 @@ mod tests {
         let mut s = snapshot();
         s.prepare();
         let mut rng = Rng::new(1);
-        let mut counts = std::collections::HashMap::new();
+        let mut counts = std::collections::BTreeMap::new();
         let n = 300_000;
         for _ in 0..n {
             *counts.entry(s.sample(&mut rng).unwrap()).or_insert(0usize) += 1;

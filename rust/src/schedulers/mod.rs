@@ -97,6 +97,7 @@ impl BaselineSim {
         seed: u64,
     ) -> BaselineSim {
         assert_eq!(profiles.len(), generators.len());
+        // detlint:allow(D003) reason="baseline-sim root RNG lineage, seeded from the caller's seed"
         let mut rng = Rng::new(seed);
         let mut sim = BaselineSim {
             nodes: profiles

@@ -355,6 +355,7 @@ impl World {
         topology.validate(n);
         let geo = topology.num_regions() > 1;
         let latency_est = topology.expected_latency_matrix();
+        // detlint:allow(D003) reason="the world's root RNG lineage, seeded from config"
         let mut rng = Rng::new(cfg.seed);
         let shared = match cfg.ledger {
             LedgerMode::Shared => Some(Arc::new(Mutex::new(SharedLedger::new()))),
@@ -465,7 +466,7 @@ impl World {
                 let jid = NodeId(j as u32);
                 let jregion = topology.region_of(j) as u32;
                 if other.start_offline {
-                    node.view.merge(&vec![(jid, 0, false, 0, jregion)], 0.0);
+                    node.view.merge(&[(jid, 0, false, 0, jregion)], 0.0);
                 } else {
                     node.view.add_seed(jid, 0, jregion, 0.0);
                 }
@@ -1766,7 +1767,7 @@ mod tests {
             assert_eq!(s.quarantines, 0, "node {i} quarantined a peer");
             assert_eq!(s.rtts_rejected, 0, "node {i} saw junk rtts");
         }
-        assert!(a.recorder.len() > 0, "no requests completed");
+        assert!(!a.recorder.is_empty(), "no requests completed");
         // Receipts and reputation rows ride the existing messages: same
         // message count as the undefended twin, strictly more bytes.
         let off = run(DefenseConfig::default());

@@ -175,7 +175,7 @@ fn honest_receipted_work_settles_and_pays() {
     n0.policy.offload_freq = 1.0;
     n0.system.duel_rate = 0.0;
     n1.policy.accept_freq = 1.0;
-    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+    n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
 
     let bal1 = shared.lock().unwrap().balance(NodeId(1));
     delegate_once(&mut n0, &mut n1, 0, 0.0, 60.0).expect("probe sent");
@@ -205,7 +205,7 @@ fn result_faker_receipt_is_rejected_and_never_paid() {
     n0.policy.target_utilization = 0.0;
     n0.policy.offload_freq = 1.0;
     n0.system.duel_rate = 0.0;
-    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+    n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
 
     let bal1 = shared.lock().unwrap().balance(NodeId(1));
     delegate_once(&mut n0, &mut n1, 0, 0.0, 60.0).expect("probe sent");
@@ -249,7 +249,7 @@ fn unreceipted_work_is_never_paid_when_defenses_are_on() {
     n0.policy.offload_freq = 1.0;
     n0.system.duel_rate = 0.0;
     n1.policy.accept_freq = 1.0;
-    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+    n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
 
     let bal1 = shared.lock().unwrap().balance(NodeId(1));
     delegate_once(&mut n0, &mut n1, 0, 0.0, 60.0).expect("probe sent");
@@ -277,7 +277,7 @@ fn free_rider_is_quarantined_after_repeated_timeouts() {
     n0.policy.target_utilization = 0.0;
     n0.policy.offload_freq = 1.0;
     n0.system.duel_rate = 0.0;
-    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+    n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
 
     // Short SLO so the response timeout (slo * 3) fires quickly.
     let slo = 1.0;

@@ -1,0 +1,206 @@
+//! Same-process double-run determinism stress tests.
+//!
+//! The pinned fingerprints in `rust/tests/replay_equivalence.rs` compare
+//! scenario *variants* (defenses off ≡ baseline, policy object ≡ scalar
+//! knob). This file attacks a different failure mode: run the *same*
+//! scenario twice in one process and demand bit-identical fingerprints.
+//! Rust's `HashMap` seeds its hasher per instance, so two Worlds built in
+//! the same process visit any hash-ordered state in different orders —
+//! a single unordered iteration on a sim-visible path (the D001 class in
+//! `docs/determinism.md`) diverges *here* even when a lone run looks fine
+//! and even when a process-per-run comparison happens to agree. This is
+//! the dynamic complement to the static `detlint` pass.
+//!
+//! Every run re-parses its config from scratch, so config parsing and
+//! World construction are inside the contract, not just the event loop.
+
+use wwwserve::config::parse_experiment;
+use wwwserve::sim::World;
+
+const HORIZON: f64 = 400.0;
+
+/// The geo_scale smoke scenario (same shape replay_equivalence pins): one
+/// requester + two servers per region, offset diurnal peaks, us<->asia
+/// partition at 150 s healed at 250 s.
+fn geo_smoke_config() -> String {
+    let mut groups = Vec::new();
+    for (region, offset) in [("us", 0.0), ("eu", 100.0), ("asia", 200.0)] {
+        groups.push(format!(
+            r#"{{ "region": "{region}", "count": 1,
+                 "node": {{
+                   "profile": {{ "prefill_tok_s": 2000, "decode_tok_s": 40,
+                                 "max_agg_decode_tok_s": 160,
+                                 "max_batch": 4 }},
+                   "policy": {{ "stake": 0, "offload_freq": 1.0,
+                                "accept_freq": 0.0, "requester_only": true,
+                                "latency_penalty": 50.0 }} }},
+                 "diurnal": {{ "period": 300, "peak_inter_arrival": 2.5,
+                               "off_inter_arrival": 25,
+                               "offset": {offset} }},
+                 "lengths": {{ "output_mean": 900,
+                               "output_sigma": 0.5 }} }}"#
+        ));
+        groups.push(format!(
+            r#"{{ "region": "{region}", "count": 2,
+                 "node": {{
+                   "profile": {{ "prefill_tok_s": 4000, "decode_tok_s": 45,
+                                 "max_agg_decode_tok_s": 1080,
+                                 "max_batch": 24 }},
+                   "policy": {{ "stake": 20, "accept_freq": 1.0,
+                                "latency_penalty": 50.0 }} }} }}"#
+        ));
+    }
+    format!(
+        r#"{{
+            "seed": 2026,
+            "horizon": {HORIZON},
+            "system": {{ "duel_rate": 0.1 }},
+            "topology": {{
+                "regions": ["us", "eu", "asia"],
+                "intra": {{ "latency": [0.002, 0.010] }},
+                "inter": {{ "latency": [0.040, 0.080], "jitter": 0.005 }},
+                "events": [
+                    {{ "at": 150, "a": "us", "b": "asia",
+                       "change": "partition" }},
+                    {{ "at": 250, "a": "us", "b": "asia", "change": "heal" }}
+                ],
+                "fleet": [ {} ]
+            }}
+        }}"#,
+        groups.join(", ")
+    )
+}
+
+/// Splice an extra top-level config block in after the seed.
+fn with_block(cfg: &str, block: &str) -> String {
+    let out = cfg.replace("\"seed\": 2026,", &format!("\"seed\": 2026, {block},"));
+    assert!(out.contains(block), "splice failed");
+    out
+}
+
+/// Everything observable about a finished world, quantized for exact
+/// comparison (same shape replay_equivalence pins).
+type Fingerprint =
+    (usize, u64, u64, u64, u64, u64, usize, Vec<(String, u64, u64, usize)>, Vec<u64>);
+
+fn run(config: &str) -> Fingerprint {
+    let e = parse_experiment(config).expect("config parses");
+    let mut w = World::new(e.world.clone(), e.setups.clone());
+    w.run_until(HORIZON + 600.0);
+    assert!(
+        w.recorder.len() > 50,
+        "scenario barely ran: {} records",
+        w.recorder.len()
+    );
+    (
+        w.recorder.len(),
+        (w.recorder.mean_latency() * 1e9) as u64,
+        w.messages_sent,
+        w.bytes_sent,
+        w.messages_dropped,
+        w.gossip_bytes_sent,
+        w.duel_stats.total_duels(),
+        w.region_summary()
+            .into_iter()
+            .map(|(name, slo, p99, n)| {
+                (name, (slo * 1e9) as u64, (p99 * 1e9) as u64, n)
+            })
+            .collect(),
+        w.credit_totals().iter().map(|c| (c * 1e6) as u64).collect(),
+    )
+}
+
+/// Run twice in this process, assert identical fingerprints.
+fn double_run(cfg: &str, what: &str) {
+    let a = run(cfg);
+    let b = run(cfg);
+    assert_eq!(a, b, "{what}: same-process replay diverged");
+}
+
+#[test]
+fn baseline_world_double_runs_identically() {
+    double_run(&geo_smoke_config(), "baseline geo smoke");
+}
+
+#[test]
+fn defended_world_double_runs_identically() {
+    // Receipts, reputation books and hearsay capping all carry extra
+    // per-peer state — the defense stack must not smuggle in hash-order
+    // dependence.
+    let cfg = with_block(&geo_smoke_config(), r#""defenses": { "enabled": true }"#);
+    double_run(&cfg, "defenses on");
+}
+
+#[test]
+fn observed_world_double_runs_identically() {
+    // The flight recorder and metrics registry observe everything; they
+    // must do so without perturbing or diverging the trace.
+    let cfg = with_block(&geo_smoke_config(), r#""observability": { "enabled": true }"#);
+    double_run(&cfg, "observability on");
+}
+
+#[test]
+fn elastic_world_double_runs_identically() {
+    // The reactive controller makes live scale decisions off windowed
+    // signals — all of which must be order-deterministic state.
+    let cfg = geo_smoke_config().replace(
+        r#""latency_penalty": 50.0 } } }"#,
+        r#""latency_penalty": 50.0 } },
+           "capacity": { "policy": "reactive", "standby": 1,
+                         "scale_up_util": 0.7, "scale_down_util": 0.2,
+                         "cooldown": 6, "eval_every": 2,
+                         "online_cost_per_hour": 1.0,
+                         "standby_cost_per_hour": 0.1 } }"#,
+    );
+    assert!(cfg.contains("reactive"), "splice failed");
+    double_run(&cfg, "reactive capacity");
+}
+
+#[test]
+fn mixed_policy_churn_world_double_runs_identically() {
+    // Heterogeneous policies + churn exercise join/leave paths where
+    // membership maps get rebuilt — a classic place for unordered
+    // iteration to leak into dispatch order.
+    let cfg = r#"{
+        "seed": 9, "horizon": 300,
+        "system": { "duel_rate": 0.0 },
+        "topology": {
+            "regions": ["us", "eu"],
+            "intra": { "latency": [0.002, 0.010] },
+            "inter": { "latency": [0.040, 0.080] },
+            "fleet": [
+                { "region": "us", "count": 1, "policy": "requester_only",
+                  "node": { "policy": { "latency_penalty": 20.0 } },
+                  "schedule": [ {"from": 0, "to": 300,
+                                 "inter_arrival": 2} ],
+                  "lengths": { "output_mean": 600, "output_sigma": 0.5 } },
+                { "region": "us", "count": 2, "policy": "greedy_local",
+                  "node": { "policy": { "stake": 20 } } },
+                { "region": "eu", "count": 2, "policy": "selective",
+                  "node": { "policy": { "stake": 20 } },
+                  "churn": [ { "at": 100, "action": "leave" },
+                             { "at": 200, "action": "join" } ] },
+                { "region": "eu", "count": 2,
+                  "node": { "policy": { "stake": 20,
+                                        "accept_freq": 1.0 } } }
+            ]
+        }
+    }"#;
+    let go = || {
+        let e = parse_experiment(cfg).expect("config parses");
+        let mut w = World::new(e.world.clone(), e.setups.clone());
+        w.run_until(900.0);
+        assert!(w.recorder.len() > 20, "churn scenario barely ran");
+        (
+            w.recorder.len(),
+            (w.recorder.mean_latency() * 1e9) as u64,
+            w.messages_sent,
+            w.bytes_sent,
+            w.credit_totals()
+                .iter()
+                .map(|c| (c * 1e6) as u64)
+                .collect::<Vec<u64>>(),
+        )
+    };
+    assert_eq!(go(), go(), "mixed-policy churn world diverged in-process");
+}

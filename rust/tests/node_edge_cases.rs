@@ -100,7 +100,7 @@ fn duplicate_response_pays_only_once() {
     n0.policy.offload_freq = 1.0;
     n0.system.duel_rate = 0.0;
     n1.policy.accept_freq = 1.0;
-    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+    n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
 
     // Run the probe/delegate handshake.
     let a = n0.handle(Event::UserRequest(req(0, 0)), 0.0);
@@ -192,7 +192,7 @@ fn requester_cannot_delegate_without_funds() {
     n0.policy.offload_freq = 1.0;
     n0.system.duel_rate = 0.0;
     n1.policy.accept_freq = 1.0;
-    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+    n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
     // Drain node 0's liquid balance (move everything into stake).
     let balance = shared.lock().unwrap().balance(NodeId(0));
     shared

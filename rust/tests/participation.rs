@@ -54,7 +54,7 @@ fn greedy_local_node_serves_own_load_accepts_delegations() {
         &shared,
     );
     n0.set_participation(Box::new(GreedyLocal));
-    n0.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+    n0.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
     let a = n0.handle(Event::UserRequest(user_req(0, 0, 0.0)), 0.0);
     assert!(
         a.iter().all(|x| !matches!(x, Action::Send { .. })),

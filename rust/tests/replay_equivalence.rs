@@ -423,7 +423,7 @@ fn requester_only_trait_works_without_the_scalar_knob() {
     let mut n = mk(0);
     n.set_participation(Box::new(RequesterOnly));
     n.system.duel_rate = 0.0;
-    n.view.merge(&vec![(NodeId(1), 1, true, 0, 0)], 0.0);
+    n.view.merge(&[(NodeId(1), 1, true, 0, 0)], 0.0);
     let req = Request {
         id: RequestId { origin: NodeId(0), seq: 0 },
         prompt_tokens: 100,
