@@ -10,19 +10,34 @@
 //! then writes the machine-readable perf trajectory to
 //! `BENCH_fleet_scale.json` so future PRs can track regressions.
 //!
+//! On top of the paired sweep, a **10k tier** runs n = 10,000 delta-only
+//! (the full-digest baseline is O(n²) rows per anti-entropy wave — it is
+//! precisely what does not scale to 10k, so it has no 10k counterpart) and
+//! a **chain-sync section** stands up blockchain-ledger worlds and
+//! compares `ChainDelta` suffix shipping against the seed's full
+//! `ChainSnapshot` replication, asserting the ≥ 5x byte cut.
+//!
 //! Asserts the headline numbers: delta gossip strictly beats the baseline
 //! on gossip bytes at every size, and by ≥ 10x at 500 nodes. A final
 //! section turns the flight recorder on (`observability.enabled`) and
 //! asserts tracing at the default sample rate costs < 5% events/sec.
 //!
-//! `--smoke` (or `FLEET_SCALE_SMOKE=1`) restricts to n = 50 — the CI tier.
+//! `--smoke` (or `FLEET_SCALE_SMOKE=1`) restricts the paired sweep to
+//! n = 50, caps the 10k tier's horizon, and runs the chain-sync section
+//! at n = 50 — the CI tier.
 
 use std::time::Instant;
 
+use wwwserve::backend::Profile;
 use wwwserve::benchlib::{write_json_report, Table};
 use wwwserve::config::parse_experiment;
-use wwwserve::sim::World;
+use wwwserve::coordinator::LedgerManager;
+use wwwserve::policy::NodePolicy;
+use wwwserve::sim::{LedgerMode, NodeSetup, World, WorldConfig};
+use wwwserve::topology::{LinkProfile, Topology};
 use wwwserve::util::json::Json;
+use wwwserve::workload::{Generator, LengthDist, Phase};
+use wwwserve::NodeId;
 
 const SEED: u64 = 2027;
 const HORIZON: f64 = 60.0;
@@ -31,8 +46,23 @@ const HORIZON: f64 = 60.0;
 /// entry at every node that often costs Ω(n) bytes per node per round no
 /// matter the protocol. 20 rounds is still far below WAN failover SLAs.
 const SUSPECT_AFTER: f64 = 20.0;
+/// Horizon for the n = 10,000 tier in the full run. Kept below
+/// `anti_entropy_every` rounds on purpose: a 10k-node full-digest wave is
+/// ~n² rows in flight at one simulated instant (every node ticks at the
+/// same time), and the interesting 10k numbers — event-loop throughput
+/// and steady-state delta traffic — are reached within one suspicion
+/// window. The world itself holds ~n² dense membership entries (~6 GB);
+/// see perf/README.md.
+const TEN_K_HORIZON: f64 = 20.0;
+/// The smoke (CI) cap for the 10k tier: a few gossip rounds prove the
+/// world builds, runs, and stays delta-shaped without spending CI minutes
+/// on a perf artifact nobody reads from a PR job.
+const TEN_K_SMOKE_HORIZON: f64 = 3.0;
+/// Chain-sync section horizon (both tiers — the section's cost scales
+/// with the payment workload, which is fixed, not with n).
+const CHAIN_HORIZON: f64 = 60.0;
 
-fn fleet_config(n: usize, seed: u64) -> String {
+fn fleet_config(n: usize, seed: u64, horizon: f64) -> String {
     let per = n / 3;
     let rest = n - 2 * per;
     let group = |region: &str, count: usize, offset: f64| {
@@ -52,7 +82,7 @@ fn fleet_config(n: usize, seed: u64) -> String {
     format!(
         r#"{{
             "seed": {seed},
-            "horizon": {HORIZON},
+            "horizon": {horizon},
             "system": {{ "duel_rate": 0.0 }},
             "topology": {{
                 "regions": ["us", "eu", "asia"],
@@ -78,6 +108,8 @@ struct RunStats {
     gossip_messages: u64,
     gossip_bytes: u64,
     gossip_bytes_per_round: f64,
+    chain_sync_messages: u64,
+    chain_sync_bytes: u64,
     completed: usize,
     dropped: u64,
     /// Mean fraction of peers each node believes alive at the end of the
@@ -86,17 +118,23 @@ struct RunStats {
     alive_frac: f64,
 }
 
-fn run_fleet(n: usize, mode: &'static str, anti_entropy_every: u64) -> RunStats {
-    run_fleet_obs(n, mode, anti_entropy_every, false)
+fn run_fleet(
+    n: usize,
+    mode: &'static str,
+    anti_entropy_every: u64,
+    horizon: f64,
+) -> RunStats {
+    run_fleet_obs(n, mode, anti_entropy_every, horizon, false)
 }
 
 fn run_fleet_obs(
     n: usize,
     mode: &'static str,
     anti_entropy_every: u64,
+    horizon: f64,
     traced: bool,
 ) -> RunStats {
-    let e = parse_experiment(&fleet_config(n, SEED))
+    let e = parse_experiment(&fleet_config(n, SEED, horizon))
         .expect("fleet config parses");
     let mut cfg = e.world;
     cfg.gossip.suspect_after = SUSPECT_AFTER;
@@ -129,6 +167,8 @@ fn run_fleet_obs(
         gossip_messages: w.gossip_messages_sent,
         gossip_bytes: w.gossip_bytes_sent,
         gossip_bytes_per_round: w.gossip_bytes_sent as f64 / rounds,
+        chain_sync_messages: w.chain_sync_messages_sent,
+        chain_sync_bytes: w.chain_sync_bytes_sent,
         completed: w.recorder.user_records().count(),
         dropped: w.messages_dropped,
         alive_frac,
@@ -147,10 +187,90 @@ fn stats_json(s: &RunStats) -> Json {
         ("gossip_messages_sent", Json::num(s.gossip_messages as f64)),
         ("gossip_bytes_sent", Json::num(s.gossip_bytes as f64)),
         ("gossip_bytes_per_round", Json::num(s.gossip_bytes_per_round)),
+        (
+            "chain_sync_messages_sent",
+            Json::num(s.chain_sync_messages as f64),
+        ),
+        ("chain_sync_bytes_sent", Json::num(s.chain_sync_bytes as f64)),
         ("completed_user_requests", Json::num(s.completed as f64)),
         ("messages_dropped", Json::num(s.dropped as f64)),
         ("alive_frac", Json::num(s.alive_frac)),
     ])
+}
+
+struct ChainStats {
+    messages: u64,
+    bytes: u64,
+    chain_len: usize,
+}
+
+/// A blockchain-ledger world for the chain-sync comparison: all `n` nodes
+/// replicate and vote, but only six (two per region) generate paying
+/// requests — proposer concurrency stays at the level the ledger tests
+/// exercise while the replica count scales. One non-generator node sits
+/// out the first sixth of the run and rejoins, guaranteeing at least one
+/// genuine catch-up sync in both protocols.
+fn run_chain(n: usize, delta_sync: bool) -> ChainStats {
+    assert!(n >= 9, "chain section needs at least 3 nodes per region");
+    let per = n / 3;
+    let rest = n - 2 * per;
+    let topo = Topology::builder()
+        .region("us")
+        .region("eu")
+        .region("asia")
+        .default_intra(LinkProfile::new(0.0005, 0.002))
+        .default_inter(LinkProfile::new(0.040, 0.080))
+        .nodes("us", per)
+        .nodes("eu", per)
+        .nodes("asia", rest)
+        .build();
+    let mut cfg = WorldConfig {
+        seed: SEED,
+        ledger: LedgerMode::Blockchain,
+        topology: Some(topo),
+        chain_delta_sync: delta_sync,
+        ..Default::default()
+    };
+    cfg.gossip.suspect_after = SUSPECT_AFTER;
+    let generators = [0, 1, per, per + 1, 2 * per, 2 * per + 1];
+    let late_joiner = n - 1;
+    let setups: Vec<NodeSetup> = (0..n)
+        .map(|i| {
+            let s = NodeSetup::new(
+                Profile::test(40.0, 16),
+                NodePolicy { accept_freq: 1.0, ..Default::default() },
+            );
+            if generators.contains(&i) {
+                s.with_generator(
+                    Generator::new(
+                        NodeId(i as u32),
+                        vec![Phase::new(0.0, CHAIN_HORIZON, 2.0)],
+                    )
+                    .with_lengths(LengthDist {
+                        output_mean: 120.0,
+                        output_sigma: 0.4,
+                        ..Default::default()
+                    }),
+                )
+            } else if i == late_joiner {
+                s.offline()
+            } else {
+                s
+            }
+        })
+        .collect();
+    let mut w = World::new(cfg, setups);
+    w.schedule_join(late_joiner, CHAIN_HORIZON / 6.0);
+    w.run_until(CHAIN_HORIZON);
+    let chain_len = match w.node(0).ledger() {
+        LedgerManager::Chain(r) => r.chain.len(),
+        LedgerManager::Shared(_) => panic!("blockchain mode expected"),
+    };
+    ChainStats {
+        messages: w.chain_sync_messages_sent,
+        bytes: w.chain_sync_bytes_sent,
+        chain_len,
+    }
 }
 
 fn main() {
@@ -178,7 +298,7 @@ fn main() {
             } else {
                 ae
             };
-            let s = run_fleet(n, mode, ae);
+            let s = run_fleet(n, mode, ae, HORIZON);
             table.row(vec![
                 format!("{}", s.nodes),
                 s.mode.to_string(),
@@ -191,9 +311,42 @@ fn main() {
             runs.push(s);
         }
     }
-    table.print();
 
-    // Invariants the perf trajectory is built on.
+    // The 10k tier: delta-only — the full-digest baseline at 10k would put
+    // O(n²) digest rows in flight per anti-entropy wave, which is the
+    // failure mode this PR-series exists to remove, so it has no paired
+    // baseline run. Smoke caps the horizon; the full run holds a whole
+    // suspicion window. No alive_frac floor is asserted here: the capped
+    // horizons end before a full heartbeat refresh cycle completes.
+    let ae_default =
+        wwwserve::gossip::GossipConfig::default().anti_entropy_every;
+    let ten_k_horizon =
+        if smoke { TEN_K_SMOKE_HORIZON } else { TEN_K_HORIZON };
+    let ten_k = run_fleet(10_000, "delta", ae_default, ten_k_horizon);
+    table.row(vec![
+        format!("{}", ten_k.nodes),
+        format!("{} ({}s)", ten_k.mode, ten_k_horizon),
+        format!("{:.2}s", ten_k.wall_s),
+        format!("{:.0}", ten_k.events_per_sec),
+        format!("{}", ten_k.messages),
+        format!("{:.1}", ten_k.gossip_bytes_per_round / 1e3),
+        format!("{}", ten_k.completed),
+    ]);
+    table.print();
+    assert!(ten_k.events > 0, "10k world processed no events");
+    assert_eq!(
+        ten_k.dropped, 0,
+        "healthy WAN dropped messages at n=10000"
+    );
+    println!(
+        "n=10000 ({}s horizon): {:.0} events/s, gossip {} bytes, \
+         alive frac {:.3}",
+        ten_k_horizon, ten_k.events_per_sec, ten_k.gossip_bytes,
+        ten_k.alive_frac
+    );
+
+    // Invariants the perf trajectory is built on (paired sizes only — the
+    // 10k tier has no full-digest counterpart by design).
     let mut headline_ratio = None;
     for pair in runs.chunks(2) {
         let (full, delta) = (&pair[0], &pair[1]);
@@ -246,6 +399,46 @@ fn main() {
         }
     }
 
+    // Chain-sync section: blockchain-ledger worlds, full-replica
+    // `ChainSnapshot` shipping (the seed protocol) vs anchored `ChainDelta`
+    // suffixes. The counters cover the state-shipping responses only —
+    // the constant-rate 48-byte `ChainRequest` probes cost the same under
+    // either protocol (see `World::chain_sync_bytes_sent`).
+    let chain_n = if smoke { 50 } else { 500 };
+    let chain_full = run_chain(chain_n, false);
+    let chain_delta = run_chain(chain_n, true);
+    let chain_ratio =
+        chain_full.bytes as f64 / chain_delta.bytes.max(1) as f64;
+    println!(
+        "\nchain sync at n={chain_n}: full-snapshot {} bytes \
+         ({} msgs, {} blocks) -> delta {} bytes ({} msgs, {} blocks), \
+         {chain_ratio:.1}x lower",
+        chain_full.bytes,
+        chain_full.messages,
+        chain_full.chain_len,
+        chain_delta.bytes,
+        chain_delta.messages,
+        chain_delta.chain_len,
+    );
+    for (mode, s) in [("full", &chain_full), ("delta", &chain_delta)] {
+        assert!(
+            s.chain_len > 10,
+            "chain-sync section ({mode}): chain barely grew ({} blocks)",
+            s.chain_len
+        );
+        assert!(
+            s.messages > 0,
+            "chain-sync section ({mode}): no sync responses at all"
+        );
+    }
+    assert!(
+        chain_ratio >= 5.0,
+        "delta chain sync must cut shipping bytes >= 5x at n={chain_n}, \
+         got {chain_ratio:.1}x ({} vs {})",
+        chain_full.bytes,
+        chain_delta.bytes
+    );
+
     // Tracing overhead: the flight recorder + metrics registry at the
     // default sample rate must cost < 5% events/sec. Interleaved
     // best-of-3 pairs at the CI size keep wall-clock noise out of the
@@ -257,8 +450,8 @@ fn main() {
     let mut traced_best = 0f64;
     let mut events_pair = (0u64, 0u64);
     for _ in 0..3 {
-        let u = run_fleet_obs(OVERHEAD_N, "delta", ae, false);
-        let t = run_fleet_obs(OVERHEAD_N, "delta", ae, true);
+        let u = run_fleet_obs(OVERHEAD_N, "delta", ae, HORIZON, false);
+        let t = run_fleet_obs(OVERHEAD_N, "delta", ae, HORIZON, true);
         untraced_best = untraced_best.max(u.events_per_sec);
         traced_best = traced_best.max(t.events_per_sec);
         events_pair = (u.events, t.events);
@@ -282,10 +475,12 @@ fn main() {
         overhead * 100.0
     );
 
+    runs.push(ten_k);
     let mut report = vec![
         ("bench", Json::str("fleet_scale")),
         ("seed", Json::num(SEED as f64)),
         ("horizon_s", Json::num(HORIZON)),
+        ("ten_k_horizon_s", Json::num(ten_k_horizon)),
         ("suspect_after_s", Json::num(SUSPECT_AFTER)),
         ("smoke", Json::Bool(smoke)),
         (
@@ -296,6 +491,20 @@ fn main() {
     if let Some(r) = headline_ratio {
         report.push(("n500_gossip_bytes_ratio", Json::num(r)));
     }
+    report.push((
+        "chain_sync",
+        Json::obj(vec![
+            ("nodes", Json::num(chain_n as f64)),
+            ("horizon_s", Json::num(CHAIN_HORIZON)),
+            ("full_messages", Json::num(chain_full.messages as f64)),
+            ("full_bytes", Json::num(chain_full.bytes as f64)),
+            ("full_chain_len", Json::num(chain_full.chain_len as f64)),
+            ("delta_messages", Json::num(chain_delta.messages as f64)),
+            ("delta_bytes", Json::num(chain_delta.bytes as f64)),
+            ("delta_chain_len", Json::num(chain_delta.chain_len as f64)),
+            ("bytes_ratio", Json::num(chain_ratio)),
+        ]),
+    ));
     report.push((
         "tracing_overhead",
         Json::obj(vec![

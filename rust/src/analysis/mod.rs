@@ -27,7 +27,7 @@
 //! and writes `DETLINT_report.json` for CI upload.
 //!
 //! Layout: [`lexer`] strips comments/literals and extracts annotations,
-//! [`rules`] classifies paths and runs D001–D005 over the stripped lines,
+//! [`rules`] classifies paths and runs D001–D006 over the stripped lines,
 //! [`report`] aggregates per-file results into the JSON artifact.
 
 pub mod lexer;

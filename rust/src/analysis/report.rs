@@ -130,7 +130,7 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("tool").as_str(), Some("detlint"));
         assert_eq!(j.at(&["summary", "passed"]).as_bool(), Some(true));
-        assert_eq!(j.get("rules").as_obj().map(|o| o.len()), Some(5));
+        assert_eq!(j.get("rules").as_obj().map(|o| o.len()), Some(6));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The detlint rule engine: D001–D005 over lexed source lines.
+//! The detlint rule engine: D001–D006 over lexed source lines.
 //!
 //! Rules operate on `(path classification, stripped lines)` so unit tests
 //! can feed synthetic fixtures under any pretend path. Scope model:
@@ -34,7 +34,7 @@ pub struct RuleInfo {
 }
 
 /// The rule table (mirrored in `docs/determinism.md`).
-pub const RULES: [RuleInfo; 5] = [
+pub const RULES: [RuleInfo; 6] = [
     RuleInfo {
         id: "D001",
         title: "unordered map iteration on a sim-visible path",
@@ -71,6 +71,16 @@ pub const RULES: [RuleInfo; 5] = [
                   Debug output inherits iteration order, so anything it feeds \
                   (wire codecs, fingerprints, trace export) becomes \
                   run-dependent.",
+    },
+    RuleInfo {
+        id: "D006",
+        title: "node-id stringification on a sim-visible path",
+        summary: "to_string()/format! of a NodeId-typed value (or an `n{..}` \
+                  node-label build) in a sim-visible module: hot paths carry \
+                  interned u32 ids, and ordering or keying by the resolved \
+                  string diverges from id order and allocates per event. \
+                  Strings belong at config-parse and export boundaries — \
+                  label builds there carry a detlint:allow with the reason.",
     },
 ];
 
@@ -201,6 +211,7 @@ pub fn scan(path: &str, source: &str) -> ScanResult {
             .unwrap_or(usize::MAX)
     };
     let hash_idents = collect_hash_idents(&lexed.code);
+    let nodeid_idents = collect_typed_idents(&lexed.code, &["NodeId"]);
 
     let mut raw: Vec<Finding> = Vec::new();
     let mut push = |raw: &mut Vec<Finding>, rule: &'static str, i: usize, msg: String| {
@@ -284,6 +295,37 @@ pub fn scan(path: &str, source: &str) -> ScanResult {
                     }
                 }
             }
+
+            // D006 — node-id stringification: hot-path identifiers are
+            // interned u32s; the resolved string belongs at export
+            // boundaries only. Covers `.to_string()` on a NodeId-typed
+            // name, a format! capturing one, and the canonical
+            // `format!("n{..}")` node-label build.
+            if ws.contains("format!(\"n{") {
+                push(
+                    &mut raw,
+                    "D006",
+                    i,
+                    "node-label string built on a sim-visible path".to_string(),
+                );
+            } else {
+                for id in &nodeid_idents {
+                    let direct =
+                        method_called(line, id, ".to_string()");
+                    let fmt = line.contains("format!")
+                        && (ws.contains(&format!("{{{id}}}"))
+                            || ws.contains(&format!("{{{id}:?}}")));
+                    if direct || fmt {
+                        push(
+                            &mut raw,
+                            "D006",
+                            i,
+                            format!("stringified node id `{id}`"),
+                        );
+                        break;
+                    }
+                }
+            }
         }
     }
 
@@ -342,10 +384,17 @@ fn snippet(line: &str) -> String {
 /// (`name: HashMap<..>`, `name: Arc<Mutex<HashMap<..>>>`). Line-local
 /// heuristic — good enough for the declaration styles this crate uses.
 fn collect_hash_idents(lines: &[String]) -> Vec<String> {
+    collect_typed_idents(lines, &["HashMap", "HashSet"])
+}
+
+/// Collect names declared with any of the given type names anywhere in the
+/// file, using the same line-local `decl_name` heuristic as the hash-ident
+/// scan. Shared by D001/D005 (hash containers) and D006 (`NodeId`).
+fn collect_typed_idents(lines: &[String], types: &[&str]) -> Vec<String> {
     let mut ids: BTreeSet<String> = BTreeSet::new();
     for line in lines {
         let line = sanitize_ascii(line);
-        for ty in ["HashMap", "HashSet"] {
+        for ty in types {
             let mut from = 0usize;
             while let Some(p) = line[from..].find(ty) {
                 let abs = from + p;
@@ -360,6 +409,22 @@ fn collect_hash_idents(lines: &[String]) -> Vec<String> {
         }
     }
     ids.into_iter().collect()
+}
+
+/// Does `line` call `method` (e.g. `.to_string()`) on `id`, with a word
+/// boundary at the identifier's start? Mirrors the scan in [`iterates`].
+fn method_called(line: &str, id: &str, method: &str) -> bool {
+    let line = sanitize_ascii(line);
+    let pat = format!("{id}{method}");
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(&pat) {
+        let abs = from + p;
+        from = abs + 1;
+        if word_boundary(&line, abs, id.len()) {
+            return true;
+        }
+    }
+    false
 }
 
 /// Non-ASCII chars (only ever inside comments/strings, which are already
@@ -725,6 +790,69 @@ mod tests {
         let src = "pub fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t(m: std::collections::HashMap<u8, u8>) { println!(\"{m:?}\"); }\n}\n";
         let r = scan(SIM_PATH, src);
         assert!(r.findings.is_empty());
+    }
+
+    // ---- D006 -------------------------------------------------------------
+
+    #[test]
+    fn d006_true_positive_to_string() {
+        let src = "use crate::types::NodeId;\n\
+                   fn f(peer: NodeId) -> String { peer.to_string() }\n";
+        let r = scan(SIM_PATH, src);
+        assert_eq!(rules_fired(&r), vec!["D006"]);
+        assert_eq!(r.findings[0].line, 2);
+    }
+
+    #[test]
+    fn d006_true_positive_format_capture() {
+        let src = "use crate::types::NodeId;\n\
+                   fn f(peer: NodeId) -> String { format!(\"peer {peer}\") }\n";
+        let r = scan(SIM_PATH, src);
+        assert_eq!(rules_fired(&r), vec!["D006"]);
+    }
+
+    #[test]
+    fn d006_true_positive_node_label_build() {
+        // The canonical `n{index}` label build fires even when the index is
+        // a bare integer rather than a NodeId-typed binding.
+        let src = "fn f(i: u32) -> String { format!(\"n{i}\") }\n";
+        let r = scan(SIM_PATH, src);
+        assert_eq!(rules_fired(&r), vec!["D006"]);
+    }
+
+    #[test]
+    fn d006_true_negative_outside_sim_visible() {
+        let src = "use crate::types::NodeId;\n\
+                   fn f(peer: NodeId) -> String { peer.to_string() }\n";
+        let r = scan(PLAIN_PATH, src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn d006_true_negative_in_test_scope() {
+        let src = "pub fn prod() {}\n#[cfg(test)]\nmod tests {\n    use crate::types::NodeId;\n    fn t(peer: NodeId) -> String { format!(\"{peer:?}\") }\n}\n";
+        let r = scan(SIM_PATH, src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn d006_true_negative_numeric_use() {
+        // Using the id as a number (keying, ordering, arithmetic) is the
+        // whole point of interning — only the string round-trip fires.
+        let src = "use crate::types::NodeId;\n\
+                   fn f(peer: NodeId) -> f64 { peer.0 as f64 }\n";
+        let r = scan(SIM_PATH, src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn d006_exempted_with_reason() {
+        let src = "// detlint:allow(D006) reason=\"metric labels at the export boundary\"\n\
+                   fn f(i: u32) -> String { format!(\"n{i}\") }\n";
+        let r = scan(SIM_PATH, src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.exemptions.len(), 1);
+        assert_eq!(r.exemptions[0].rule, "D006");
     }
 
     // ---- census bookkeeping ----------------------------------------------

@@ -3,7 +3,7 @@
 //! Usage: `cargo run --bin detlint [-- <repo-root>]` (default `.`).
 //!
 //! Walks `rust/src/`, `rust/tests/` and `benches/` under the given root,
-//! runs the D001–D005 rule engine (`wwwserve::analysis`) over every `.rs`
+//! runs the D001–D006 rule engine (`wwwserve::analysis`) over every `.rs`
 //! file, prints unexempted findings plus the full exemption census, writes
 //! `DETLINT_report.json` at the root, and exits nonzero when any
 //! unexempted finding or malformed `detlint:allow` annotation remains.

@@ -75,6 +75,14 @@ impl GossipDriver {
     /// the full digest on the first and every `anti_entropy_every`-th
     /// round, and always for the suspicion probe (a heal must pull the
     /// whole view back in).
+    ///
+    /// Exception: a bootstrap-sealed view skips the round-one full digest
+    /// — the seeded membership is common knowledge, and with every node
+    /// ticking at the same instant the synchronized first round would put
+    /// O(n²) digest rows in flight at once (gigabytes of transient
+    /// allocation at 10k nodes) to ship zero new information. Unsealed
+    /// views (the TCP runner, hand-built tests) keep the eager first
+    /// exchange.
     pub fn tick(&mut self, ctx: &mut Ctx<'_>, now: Time) -> Vec<Action> {
         if now - self.last_gossip < ctx.view.config().interval {
             return vec![];
@@ -90,7 +98,8 @@ impl GossipDriver {
         );
         ctx.view.heartbeat(now);
         let ae = ctx.view.config().anti_entropy_every;
-        let full = ae <= 1 || self.gossip_round % ae == 1;
+        let full = (ae <= 1 || self.gossip_round % ae == 1)
+            && !(self.gossip_round == 1 && ctx.view.bootstrap_sealed());
         let (regular, suspect) = ctx.view.pick_round_targets(ctx.rng, now);
         let mut actions = self.send(ctx, &regular, full, now);
         if let Some(s) = suspect {
@@ -270,6 +279,38 @@ mod tests {
             .expect("delta sent");
         b.handle(Event::Message { from: NodeId(0), msg: delta }, 2.1);
         assert!(b.view.is_alive(NodeId(0), 2.1));
+    }
+
+    #[test]
+    fn sealed_bootstrap_skips_round_one_digest() {
+        let shared = Arc::new(Mutex::new(SharedLedger::new()));
+        let mut a = mk_node(0, NodePolicy::default(), &shared);
+        a.view.add_seed(NodeId(1), 0, 0, 0.0);
+        a.view.seal_bootstrap();
+        let gossip_kinds = |actions: &[Action]| -> Vec<&'static str> {
+            actions
+                .iter()
+                .filter_map(|x| match x {
+                    Action::Send { msg, .. } => Some(msg.kind()),
+                    _ => None,
+                })
+                .collect()
+        };
+        // Seeded membership is common knowledge: round 1 must NOT ship the
+        // O(n) full digest — only a delta carrying our fresh heartbeat.
+        let out = a.handle(Event::Tick, 1.0);
+        assert_eq!(gossip_kinds(&out), vec!["gossip_delta"]);
+        // The periodic anti-entropy cadence is untouched: with the default
+        // `anti_entropy_every = 32`, round 33 ships the full digest.
+        for round in 2..=32u64 {
+            let out = a.handle(Event::Tick, round as f64);
+            assert!(
+                !gossip_kinds(&out).contains(&"gossip"),
+                "round {round} shipped a full digest"
+            );
+        }
+        let out = a.handle(Event::Tick, 33.0);
+        assert_eq!(gossip_kinds(&out), vec!["gossip"]);
     }
 
     #[test]

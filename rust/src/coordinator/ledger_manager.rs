@@ -32,6 +32,11 @@ pub struct ChainReplica {
     /// The block we currently have in flight (id + its op batch, kept so a
     /// head race can re-propose the same ops on the new head).
     in_flight: Option<(Hash256, Vec<CreditOp>)>,
+    /// Answer anchored [`Message::ChainRequest`]s with just the missing
+    /// suffix ([`Message::ChainDelta`]) instead of a full snapshot. On by
+    /// default; `false` reproduces the seed's full-replica shipping — the
+    /// baseline the fleet-scale bench compares sync bytes against.
+    pub delta_sync: bool,
 }
 
 /// The manager.
@@ -53,6 +58,7 @@ impl LedgerManager {
             quorum: quorum.max(1),
             queue: VecDeque::new(),
             in_flight: None,
+            delta_sync: true,
         }))
     }
 
@@ -186,17 +192,30 @@ impl LedgerManager {
                     vec![]
                 }
             }
-            Message::ChainRequest { len } => {
-                if (r.chain.len() as u64) > *len {
-                    vec![Action::Send {
-                        to: from,
-                        msg: Message::ChainSnapshot {
-                            blocks: r.chain.blocks().to_vec(),
-                        },
-                    }]
-                } else {
-                    vec![]
+            Message::ChainRequest { len, head } => {
+                if (r.chain.len() as u64) <= *len {
+                    return vec![];
                 }
+                // Delta path: the requester's chain is a strict prefix of
+                // ours (its head sits at height len-1 of our chain) — ship
+                // only the missing suffix. Anything else (empty requester,
+                // divergent history, knob off) falls back to the full
+                // snapshot, which adopt_if_longer re-audits from genesis.
+                let anchored = r.delta_sync
+                    && *len > 0
+                    && r.chain.block_id_at(*len - 1) == Some(*head);
+                let msg = if anchored {
+                    Message::ChainDelta {
+                        from_height: *len,
+                        anchor: *head,
+                        blocks: r.chain.blocks()[*len as usize..].to_vec(),
+                    }
+                } else {
+                    Message::ChainSnapshot {
+                        blocks: r.chain.blocks().to_vec(),
+                    }
+                };
+                vec![Action::Send { to: from, msg }]
             }
             Message::ChainSnapshot { blocks } => {
                 if r.chain.adopt_if_longer(blocks, &r.keys) {
@@ -207,6 +226,32 @@ impl LedgerManager {
                     }
                 }
                 vec![]
+            }
+            Message::ChainDelta { from_height, anchor, blocks } => {
+                if r.chain.try_extend(*from_height, *anchor, blocks, &r.keys) {
+                    // Same head-race handling as a snapshot adoption.
+                    if let Some((_, ops)) = r.in_flight.take() {
+                        r.queue.push_front(ops);
+                        return r.try_propose(now, peers);
+                    }
+                    vec![]
+                } else if *from_height + blocks.len() as u64
+                    > r.chain.len() as u64
+                {
+                    // Our chain moved between request and reply (a commit
+                    // landed), so the suffix no longer anchors — but the
+                    // sender is still ahead. Re-request once; the snapshot
+                    // fallback resolves any genuine divergence.
+                    vec![Action::Send {
+                        to: from,
+                        msg: Message::ChainRequest {
+                            len: r.chain.len() as u64,
+                            head: r.chain.head(),
+                        },
+                    }]
+                } else {
+                    vec![]
+                }
             }
             Message::BlockCommit { block } => {
                 let _ = r.chain.commit_block(block.clone(), &r.keys);
@@ -239,7 +284,10 @@ impl LedgerManager {
             let target = peers[(now as usize) % peers.len()];
             actions.push(Action::Send {
                 to: target,
-                msg: Message::ChainRequest { len: r.chain.len() as u64 },
+                msg: Message::ChainRequest {
+                    len: r.chain.len() as u64,
+                    head: r.chain.head(),
+                },
             });
         }
         actions
@@ -395,6 +443,126 @@ mod tests {
             panic!()
         };
         assert!(!accept);
+    }
+
+    fn chain_of(m: &LedgerManager) -> &Chain {
+        match m {
+            LedgerManager::Chain(r) => &r.chain,
+            LedgerManager::Shared(_) => panic!("chain mode expected"),
+        }
+    }
+
+    /// Build a 3-block single-node chain and a replica holding only its
+    /// first block.
+    fn ahead_and_behind() -> (LedgerManager, LedgerManager, KeyStore) {
+        let keys = KeyStore::for_network(1, 2);
+        let mut ahead =
+            LedgerManager::chain(NodeKey::derive(1, NodeId(0)), keys.clone(), 1);
+        ahead.submit(vec![mint(0, 10)], NodeId(0), &[], 0.0);
+        ahead.submit(vec![mint(0, 20)], NodeId(0), &[], 0.1);
+        ahead.submit(vec![mint(1, 30)], NodeId(0), &[], 0.2);
+        assert_eq!(chain_of(&ahead).len(), 3);
+        let mut behind =
+            LedgerManager::chain(NodeKey::derive(1, NodeId(1)), keys.clone(), 1);
+        let first = chain_of(&ahead).blocks()[0].clone();
+        let LedgerManager::Chain(r) = &mut behind else { unreachable!() };
+        r.chain.commit_block(first, &keys).unwrap();
+        (ahead, behind, keys)
+    }
+
+    #[test]
+    fn anchored_request_gets_delta_and_converges() {
+        let (mut ahead, mut behind, _) = ahead_and_behind();
+        let req = Message::ChainRequest {
+            len: 1,
+            head: chain_of(&behind).head(),
+        };
+        let acts = ahead.on_message(NodeId(1), &req, NodeId(0), &[], 1.0);
+        let Action::Send { msg, to } = &acts[0] else { panic!() };
+        assert_eq!(*to, NodeId(1));
+        let Message::ChainDelta { from_height, blocks, .. } = msg else {
+            panic!("expected chain_delta, got {}", msg.kind())
+        };
+        assert_eq!(*from_height, 1);
+        assert_eq!(blocks.len(), 2, "only the missing suffix travels");
+        let full = Message::ChainSnapshot {
+            blocks: chain_of(&ahead).blocks().to_vec(),
+        };
+        assert!(msg.wire_size() < full.wire_size());
+        // Applying the delta converges to the full replica's state.
+        behind.on_message(NodeId(0), msg, NodeId(1), &[], 1.1);
+        assert_eq!(chain_of(&behind).head(), chain_of(&ahead).head());
+        assert_eq!(behind.balance(NodeId(0)), ahead.balance(NodeId(0)));
+        assert_eq!(behind.balance(NodeId(1)), ahead.balance(NodeId(1)));
+    }
+
+    #[test]
+    fn unanchored_or_disabled_requests_fall_back_to_snapshot() {
+        // Divergent head: the requester claims a height-1 head that is not
+        // block 0 of the responder's chain.
+        let (mut ahead, _, _) = ahead_and_behind();
+        let req = Message::ChainRequest { len: 1, head: Hash256::ZERO };
+        let acts = ahead.on_message(NodeId(1), &req, NodeId(0), &[], 1.0);
+        let Action::Send { msg, .. } = &acts[0] else { panic!() };
+        assert!(
+            matches!(msg, Message::ChainSnapshot { .. }),
+            "divergent history must fall back to the full snapshot"
+        );
+        // Empty requester: nothing to anchor, full snapshot.
+        let req0 = Message::ChainRequest { len: 0, head: Hash256::ZERO };
+        let acts = ahead.on_message(NodeId(1), &req0, NodeId(0), &[], 1.0);
+        let Action::Send { msg, .. } = &acts[0] else { panic!() };
+        assert!(matches!(msg, Message::ChainSnapshot { .. }));
+        // Knob off: anchored requests get snapshots too (seed behaviour).
+        let (mut ahead, behind, _) = ahead_and_behind();
+        if let LedgerManager::Chain(r) = &mut ahead {
+            r.delta_sync = false;
+        }
+        let req = Message::ChainRequest {
+            len: 1,
+            head: chain_of(&behind).head(),
+        };
+        let acts = ahead.on_message(NodeId(1), &req, NodeId(0), &[], 1.0);
+        let Action::Send { msg, .. } = &acts[0] else { panic!() };
+        assert!(matches!(msg, Message::ChainSnapshot { .. }));
+    }
+
+    #[test]
+    fn stale_delta_triggers_one_rerequest() {
+        let (mut ahead, mut behind, keys) = ahead_and_behind();
+        let req = Message::ChainRequest {
+            len: 1,
+            head: chain_of(&behind).head(),
+        };
+        let acts = ahead.on_message(NodeId(1), &req, NodeId(0), &[], 1.0);
+        let Action::Send { msg: delta, .. } = &acts[0] else { panic!() };
+        // Before the delta arrives, the behind replica commits a different
+        // block — the suffix no longer anchors.
+        let fork = Block::create(
+            chain_of(&behind).head(),
+            0.5,
+            vec![mint(1, 5)],
+            &NodeKey::derive(1, NodeId(1)),
+        );
+        let LedgerManager::Chain(r) = &mut behind else { unreachable!() };
+        r.chain.commit_block(fork, &keys).unwrap();
+        let len_before = chain_of(&behind).len();
+        let acts = behind.on_message(NodeId(0), delta, NodeId(1), &[], 1.1);
+        assert_eq!(chain_of(&behind).len(), len_before, "nothing adopted");
+        let Action::Send { msg, to } = &acts[0] else {
+            panic!("expected a re-request")
+        };
+        assert_eq!(*to, NodeId(0));
+        let Message::ChainRequest { len, head } = msg else { panic!() };
+        assert_eq!(*len as usize, len_before);
+        assert_eq!(*head, chain_of(&behind).head());
+        // The responder now sees divergence and ships the full snapshot,
+        // which wins by length and re-audits from genesis.
+        let acts = ahead.on_message(NodeId(1), msg, NodeId(0), &[], 1.2);
+        let Action::Send { msg: snap, .. } = &acts[0] else { panic!() };
+        assert!(matches!(snap, Message::ChainSnapshot { .. }));
+        behind.on_message(NodeId(0), snap, NodeId(1), &[], 1.3);
+        assert_eq!(chain_of(&behind).head(), chain_of(&ahead).head());
     }
 
     #[test]

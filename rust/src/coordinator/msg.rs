@@ -82,11 +82,25 @@ pub enum Message {
     },
     /// Blockchain-ledger mode: a quorum was reached; append.
     BlockCommit { block: Block },
-    /// Blockchain-ledger mode anti-entropy: "my chain has `len` blocks".
-    ChainRequest { len: u64 },
-    /// Blockchain-ledger mode anti-entropy: a full replica snapshot
-    /// (bounded: sim-scale chains; a production build would ship deltas).
+    /// Blockchain-ledger mode anti-entropy: "my chain has `len` blocks and
+    /// its head is `head`". The head hash lets a longer responder ship just
+    /// the missing suffix ([`Message::ChainDelta`]) when the requester's
+    /// chain is a prefix of its own; `Hash256::ZERO` for an empty chain.
+    ChainRequest { len: u64, head: Hash256 },
+    /// Blockchain-ledger mode anti-entropy: a full replica snapshot — the
+    /// fallback when the requester's head does not anchor into the
+    /// responder's chain (divergent history), and the correctness oracle
+    /// the delta path is tested against (`rust/tests/chain_delta.rs`).
     ChainSnapshot { blocks: Vec<Block> },
+    /// Blockchain-ledger mode anti-entropy: the suffix of the responder's
+    /// chain starting at the requester's height. `anchor` echoes the
+    /// requester's head; the receiver appends only if its chain still ends
+    /// there (otherwise it re-requests and the snapshot fallback repairs).
+    ChainDelta {
+        from_height: u64,
+        anchor: Hash256,
+        blocks: Vec<Block>,
+    },
 }
 
 impl Message {
@@ -109,6 +123,7 @@ impl Message {
             Message::BlockCommit { .. } => "block_commit",
             Message::ChainRequest { .. } => "chain_request",
             Message::ChainSnapshot { .. } => "chain_snapshot",
+            Message::ChainDelta { .. } => "chain_delta",
         }
     }
 
@@ -147,6 +162,11 @@ impl Message {
             }
             Message::ChainSnapshot { blocks } => {
                 blocks.iter().map(|b| 128 + b.ops.len() * 48).sum::<usize>()
+            }
+            Message::ChainDelta { blocks, .. } => {
+                // Height + anchor hash framing, then the same per-block cost
+                // a snapshot pays — the saving is shipping only the suffix.
+                48 + blocks.iter().map(|b| 128 + b.ops.len() * 48).sum::<usize>()
             }
             _ => 48,
         }
@@ -471,7 +491,8 @@ impl Message {
             | Message::BlockVote { .. }
             | Message::BlockCommit { .. }
             | Message::ChainRequest { .. }
-            | Message::ChainSnapshot { .. } => Json::obj(vec![(
+            | Message::ChainSnapshot { .. }
+            | Message::ChainDelta { .. } => Json::obj(vec![(
                 "type",
                 Json::str("ledger_unsupported_on_wire"),
             )]),

@@ -398,7 +398,8 @@ impl Node {
             | Message::BlockVote { .. }
             | Message::BlockCommit { .. }
             | Message::ChainRequest { .. }
-            | Message::ChainSnapshot { .. }) => {
+            | Message::ChainSnapshot { .. }
+            | Message::ChainDelta { .. }) => {
                 ctx.ledger_on_message(from, &m, now)
             }
         }

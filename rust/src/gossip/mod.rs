@@ -36,7 +36,10 @@
 //!   suspicion — `benches/fleet_scale.rs` asserts the end-of-run alive
 //!   fraction alongside its byte counts for exactly this reason.
 //! * **Anti-entropy fallback** (`Message::Gossip` / `GossipReply`) — every
-//!   [`GossipConfig::anti_entropy_every`]-th round (and the very first), the
+//!   [`GossipConfig::anti_entropy_every`]-th round (and the very first,
+//!   unless the view was bootstrap-sealed: seeded membership is common
+//!   knowledge, and a synchronized round-one digest storm is O(n²) rows in
+//!   flight at 10k nodes), the
 //!   full digest is exchanged exactly as the seed protocol did. This repairs
 //!   anything deltas missed (messages lost to partitions, throttled final
 //!   versions of dead peers) and doubles as the correctness oracle: the
@@ -54,6 +57,19 @@
 //! incrementally maintained sorted indexes (updated on merge) instead of
 //! rebuilding and re-sorting from the entry map on every call — those sit on
 //! the per-request dispatch path.
+//!
+//! ## Dense storage
+//!
+//! Node ids are dense interned `u32`s (`NodeId(i)` for world slot `i` — see
+//! `util::intern` for the string boundary), so the entry table is a plain
+//! `Vec` indexed by id rather than a `BTreeMap`: merges and liveness checks
+//! are O(1) array hits instead of O(log n) pointer chases, and `World::new`'s
+//! O(n²) bootstrap seeding becomes straight array writes. Index order *is*
+//! id order, so digests and deltas keep the exact iteration order the sorted
+//! map produced. A hard id ceiling ([`MAX_TRACKED_ID`]) bounds table growth
+//! so a forged digest row cannot balloon memory: rows naming absurd ids are
+//! dropped (a Byzantine peer could always invent ids; dense storage just
+//! makes the failure mode allocation instead of noise).
 //!
 //! Convergence (epidemic diffusion, O(log N) rounds) is property-tested in
 //! `rust/tests/prop_protocol.rs` and measured in
@@ -130,11 +146,23 @@ impl Default for GossipConfig {
 /// identically to the pre-topology fabric.
 pub const RESURRECT_PROB: f64 = 0.15;
 
+/// Hard ceiling on trackable node ids. Honest worlds intern node ids
+/// densely from 0, so the entry table's length tracks the fleet size; this
+/// cap only matters for *forged* digest rows, bounding the allocation a
+/// malicious id can force (~64 MiB of `Option<PeerEntry>` slots) instead
+/// of letting a single 32-bit id demand hundreds of gigabytes.
+pub const MAX_TRACKED_ID: u32 = 1 << 20;
+
 /// One node's local membership view.
 #[derive(Debug, Clone)]
 pub struct PeerView {
     pub me: NodeId,
-    entries: BTreeMap<NodeId, PeerEntry>,
+    /// Dense entry table indexed by `NodeId.0` (ids are interned world
+    /// slots). `None` = never heard of. Index order is id order, so every
+    /// iteration below reproduces the sorted-map order verbatim.
+    entries: Vec<Option<PeerEntry>>,
+    /// Present entries in `entries` (`known()` without a scan).
+    num_entries: usize,
     cfg: GossipConfig,
     /// Local mutation clock: bumped on every entry change; stamps
     /// `PeerEntry::updated` / `meta_updated` and floors the per-peer `sent`
@@ -147,9 +175,6 @@ pub struct PeerView {
     /// to never-contacted peers start here instead of at zero, so common
     /// bootstrap knowledge is not re-shipped to every first contact.
     bootstrap_clock: u64,
-    /// All known node ids (including self), kept sorted — the digest is a
-    /// straight map over this, no per-call sort.
-    ids_sorted: Vec<NodeId>,
     /// Non-self peers whose last word was `online`, kept sorted
     /// (liveness-age filtering happens at query time).
     online_sorted: Vec<NodeId>,
@@ -178,31 +203,56 @@ fn sorted_remove(v: &mut Vec<NodeId>, n: NodeId) {
 
 impl PeerView {
     pub fn new(me: NodeId, cfg: GossipConfig, now: Time) -> Self {
-        let mut entries = BTreeMap::new();
-        entries.insert(
-            me,
-            PeerEntry {
-                version: 1,
-                online: true,
-                endpoint: 0,
-                region: 0,
-                last_seen: now,
-                updated: 1,
-                meta_updated: 1,
-                last_fwd: f64::NEG_INFINITY,
-            },
-        );
+        let mut entries: Vec<Option<PeerEntry>> =
+            vec![None; me.0 as usize + 1];
+        entries[me.0 as usize] = Some(PeerEntry {
+            version: 1,
+            online: true,
+            endpoint: 0,
+            region: 0,
+            last_seen: now,
+            updated: 1,
+            meta_updated: 1,
+            last_fwd: f64::NEG_INFINITY,
+        });
         PeerView {
             me,
             entries,
+            num_entries: 1,
             cfg,
             clock: 1,
             sent: BTreeMap::new(),
             bootstrap_clock: 0,
-            ids_sorted: vec![me],
             online_sorted: Vec::new(),
             by_region: BTreeMap::new(),
         }
+    }
+
+    /// Slot lookup — O(1) array hit (ids are dense interned world slots).
+    fn get(&self, peer: NodeId) -> Option<&PeerEntry> {
+        self.entries.get(peer.0 as usize).and_then(|s| s.as_ref())
+    }
+
+    /// Grow the table so `node` has a slot. Returns `false` (and allocates
+    /// nothing) for ids past [`MAX_TRACKED_ID`] — the forged-row guard.
+    fn ensure_slot(&mut self, node: NodeId) -> bool {
+        if node.0 >= MAX_TRACKED_ID {
+            return false;
+        }
+        let idx = node.0 as usize;
+        if idx >= self.entries.len() {
+            self.entries.resize(idx + 1, None);
+        }
+        true
+    }
+
+    /// All known node ids (including self), ascending — the dense-table
+    /// replacement for the old sorted-id vector.
+    pub fn known_ids(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|_| NodeId(i as u32)))
     }
 
     pub fn config(&self) -> GossipConfig {
@@ -218,7 +268,9 @@ impl PeerView {
     }
 
     fn self_entry_mut(&mut self) -> &mut PeerEntry {
-        self.entries.get_mut(&self.me).expect("self entry exists")
+        self.entries[self.me.0 as usize]
+            .as_mut()
+            .expect("self entry exists")
     }
 
     // ---- incremental index maintenance (online/by-region) -------------------
@@ -240,24 +292,22 @@ impl PeerView {
 
     /// Seed knowledge of a bootstrap peer (e.g. from the config file).
     pub fn add_seed(&mut self, peer: NodeId, endpoint: u64, region: u32, now: Time) {
-        if peer == self.me || self.entries.contains_key(&peer) {
+        if peer == self.me || self.get(peer).is_some() || !self.ensure_slot(peer)
+        {
             return;
         }
         self.clock += 1;
-        self.entries.insert(
-            peer,
-            PeerEntry {
-                version: 0,
-                online: true,
-                endpoint,
-                region,
-                last_seen: now,
-                updated: self.clock,
-                meta_updated: self.clock,
-                last_fwd: f64::NEG_INFINITY,
-            },
-        );
-        sorted_insert(&mut self.ids_sorted, peer);
+        self.entries[peer.0 as usize] = Some(PeerEntry {
+            version: 0,
+            online: true,
+            endpoint,
+            region,
+            last_seen: now,
+            updated: self.clock,
+            meta_updated: self.clock,
+            last_fwd: f64::NEG_INFINITY,
+        });
+        self.num_entries += 1;
         self.index_insert(peer, region);
     }
 
@@ -273,7 +323,7 @@ impl PeerView {
 
     /// The region tag we last heard for `peer` (None if unknown peer).
     pub fn region_of(&self, peer: NodeId) -> Option<u32> {
-        self.entries.get(&peer).map(|e| e.region)
+        self.get(peer).map(|e| e.region)
     }
 
     /// Bump our own heartbeat (start of each gossip round). A heartbeat
@@ -317,11 +367,14 @@ impl PeerView {
         // clock (alive-peer scratch, stake-snapshot cache) must see this
         // as a change even though no gossiped content moved.
         self.clock += 1;
-        for (n, e) in self.entries.iter_mut() {
-            if *n != self.me && e.online {
-                e.last_seen = now;
+        let me = self.me.0 as usize;
+        for (i, slot) in self.entries.iter_mut().enumerate() {
+            if let Some(e) = slot {
+                if i != me && e.online {
+                    e.last_seen = now;
+                }
+                e.last_fwd = f64::NEG_INFINITY;
             }
-            e.last_fwd = f64::NEG_INFINITY;
         }
         self.sent.clear();
     }
@@ -337,7 +390,7 @@ impl PeerView {
 
     /// Is `peer` believed alive right now? (online flag + heartbeat age)
     pub fn is_alive(&self, peer: NodeId, now: Time) -> bool {
-        match self.entries.get(&peer) {
+        match self.get(peer) {
             None => false,
             Some(e) => {
                 e.online && (now - e.last_seen) <= self.cfg.suspect_after
@@ -392,15 +445,15 @@ impl PeerView {
     }
 
     pub fn endpoint(&self, peer: NodeId) -> Option<u64> {
-        self.entries.get(&peer).map(|e| e.endpoint)
+        self.get(peer).map(|e| e.endpoint)
     }
 
     pub fn entry(&self, peer: NodeId) -> Option<&PeerEntry> {
-        self.entries.get(&peer)
+        self.get(peer)
     }
 
     pub fn known(&self) -> usize {
-        self.entries.len()
+        self.num_entries
     }
 
     /// Choose gossip targets for this round: the regular alive-pool fanout
@@ -429,12 +482,7 @@ impl PeerView {
         let mut pool = self.alive_peers(now);
         let fallback = pool.is_empty();
         if fallback {
-            pool = self
-                .ids_sorted
-                .iter()
-                .copied()
-                .filter(|n| *n != self.me)
-                .collect();
+            pool = self.known_ids().filter(|n| *n != self.me).collect();
         }
         if pool.is_empty() {
             return (vec![], None);
@@ -463,11 +511,13 @@ impl PeerView {
     /// Serialize the full view for transmission (anti-entropy rounds,
     /// leave/join announcements, suspicion probes). Sorted by node id.
     pub fn digest(&self) -> Digest {
-        self.ids_sorted
+        self.entries
             .iter()
-            .map(|n| {
-                let e = &self.entries[n];
-                (*n, e.version, e.online, e.endpoint, e.region)
+            .enumerate()
+            .filter_map(|(i, slot)| {
+                slot.as_ref().map(|e| {
+                    (NodeId(i as u32), e.version, e.online, e.endpoint, e.region)
+                })
             })
             .collect()
     }
@@ -507,25 +557,28 @@ impl PeerView {
         let me = self.me;
         let mut delta: Digest = Vec::new();
         let mut heartbeats: Heartbeats = Vec::new();
-        for n in &self.ids_sorted {
+        for idx in 0..self.entries.len() {
+            let n = NodeId(idx as u32);
             // Never tell a peer about itself (its self-entry is
             // authoritative — the receiver would discard it anyway).
-            if *n == peer || exclude.binary_search(n).is_ok() {
+            if n == peer || exclude.binary_search(&n).is_ok() {
                 continue;
             }
-            let e = self.entries.get_mut(n).expect("indexed entry exists");
+            let Some(e) = self.entries[idx].as_mut() else {
+                continue;
+            };
             if e.updated <= floor {
                 continue;
             }
             if e.meta_updated > floor {
-                delta.push((*n, e.version, e.online, e.endpoint, e.region));
+                delta.push((n, e.version, e.online, e.endpoint, e.region));
                 e.last_fwd = now;
-            } else if *n == me || now - e.last_fwd >= throttle {
+            } else if n == me || now - e.last_fwd >= throttle {
                 // Our own heartbeat is exempt from the throttle: every
                 // exchange carries direct liveness evidence for its sender
                 // (SWIM's ping-ack, for 12 bytes), which keeps small fleets
                 // — where direct contact dominates — flap-free.
-                heartbeats.push((*n, e.version));
+                heartbeats.push((n, e.version));
                 e.last_fwd = now;
             }
         }
@@ -547,6 +600,16 @@ impl PeerView {
     /// window would degenerate into an O(n²) full exchange.
     pub fn seal_bootstrap(&mut self) {
         self.bootstrap_clock = self.clock;
+    }
+
+    /// Whether [`seal_bootstrap`](PeerView::seal_bootstrap) ran on a
+    /// non-empty view. A sealed view's membership is common knowledge, so
+    /// the gossip driver skips the round-one full digest — at 10k nodes
+    /// that round would otherwise put ~n² digest rows in flight at one
+    /// simulated instant (every node ticks at the same time), which is
+    /// gigabytes of transient allocation for zero information.
+    pub fn bootstrap_sealed(&self) -> bool {
+        self.bootstrap_clock > 0
     }
 
     /// Merge a received digest; higher version wins. Returns the nodes whose
@@ -581,7 +644,11 @@ impl PeerView {
             if *node == self.me {
                 continue;
             }
-            let Some(e) = self.entries.get_mut(node) else {
+            let Some(e) = self
+                .entries
+                .get_mut(node.0 as usize)
+                .and_then(|s| s.as_mut())
+            else {
                 continue;
             };
             if !e.online || *version <= e.version {
@@ -610,28 +677,31 @@ impl PeerView {
             // authoritative — prevents spoofed "you are offline").
             return false;
         }
-        let is_new = !self.entries.contains_key(&node);
+        if !self.ensure_slot(node) {
+            // Forged id beyond the tracking ceiling — drop the row rather
+            // than let it force an absurd allocation.
+            return false;
+        }
+        let idx = node.0 as usize;
+        let is_new = self.entries[idx].is_none();
         if is_new {
             // Learn the peer's existence even when the version check below
             // rejects the payload (seed digests carry version 0): knowing an
             // id is enough to probe it later.
             self.clock += 1;
-            self.entries.insert(
-                node,
-                PeerEntry {
-                    version: 0,
-                    online: false,
-                    endpoint,
-                    region,
-                    last_seen: now - self.cfg.suspect_after - 1.0,
-                    updated: self.clock,
-                    meta_updated: self.clock,
-                    last_fwd: f64::NEG_INFINITY,
-                },
-            );
-            sorted_insert(&mut self.ids_sorted, node);
+            self.entries[idx] = Some(PeerEntry {
+                version: 0,
+                online: false,
+                endpoint,
+                region,
+                last_seen: now - self.cfg.suspect_after - 1.0,
+                updated: self.clock,
+                meta_updated: self.clock,
+                last_fwd: f64::NEG_INFINITY,
+            });
+            self.num_entries += 1;
         }
-        let e = self.entries.get_mut(&node).expect("just ensured");
+        let e = self.entries[idx].as_mut().expect("just ensured");
         if version <= e.version {
             return false;
         }
@@ -858,9 +928,7 @@ mod tests {
     /// the incrementally maintained indexes against.
     fn alive_brute(v: &PeerView, now: Time) -> Vec<NodeId> {
         let mut out: Vec<NodeId> = v
-            .ids_sorted
-            .iter()
-            .copied()
+            .known_ids()
             .filter(|n| *n != v.me && v.is_alive(*n, now))
             .collect();
         out.sort();
@@ -975,6 +1043,35 @@ mod tests {
         assert_eq!(changed, vec![NodeId(2)]);
         assert!(a.is_alive(NodeId(2), 9.0));
         assert_eq!(a.entry(NodeId(2)).unwrap().version, 4);
+    }
+
+    #[test]
+    fn forged_giant_ids_are_dropped_not_allocated() {
+        // Digest rows naming ids past the tracking ceiling must be ignored
+        // outright: a Byzantine peer must not be able to force a
+        // multi-gigabyte dense-table allocation with a single 32-bit id.
+        let mut a = PeerView::new(NodeId(0), cfg(), 0.0);
+        let changed = a.merge(&[(NodeId(u32::MAX), 5, true, 0, 0)], 0.0);
+        assert!(changed.is_empty());
+        assert!(a.entry(NodeId(u32::MAX)).is_none());
+        assert_eq!(a.known(), 1);
+        a.add_seed(NodeId(MAX_TRACKED_ID), 0, 0, 0.0);
+        assert_eq!(a.known(), 1, "seed past ceiling ignored too");
+        // Ordinary ids still merge normally.
+        let changed = a.merge(&[(NodeId(1000), 5, true, 0, 0)], 0.0);
+        assert_eq!(changed, vec![NodeId(1000)]);
+        assert!(a.is_alive(NodeId(1000), 0.5));
+    }
+
+    #[test]
+    fn known_ids_ascending_and_complete() {
+        let mut a = PeerView::new(NodeId(5), cfg(), 0.0);
+        for i in [9u32, 2, 7, 30] {
+            a.merge(&[(NodeId(i), 3, true, 0, 0)], 0.0);
+        }
+        let ids: Vec<u32> = a.known_ids().map(|n| n.0).collect();
+        assert_eq!(ids, vec![2, 5, 7, 9, 30]);
+        assert_eq!(a.known(), ids.len());
     }
 
     #[test]

@@ -66,6 +66,17 @@ impl Chain {
         &self.blocks
     }
 
+    /// Id of the block at `height` (0-based); `None` past the end. The
+    /// anchor check of delta chain sync: a requester whose chain has `len`
+    /// blocks and head `h` is a prefix of ours iff
+    /// `block_id_at(len - 1) == Some(h)`.
+    pub fn block_id_at(&self, height: u64) -> Option<Hash256> {
+        usize::try_from(height)
+            .ok()
+            .and_then(|h| self.blocks.get(h))
+            .map(|b| b.id)
+    }
+
     pub fn balances(&self) -> &BalanceTable {
         &self.balances
     }
@@ -163,6 +174,37 @@ impl Chain {
             parent = b.id;
         }
         table.conserved()
+    }
+
+    /// Append a contiguous suffix shipped by a longer replica (the delta
+    /// path of chain sync). Only applies when the suffix anchors exactly at
+    /// our current head (`from_height == len()` and `anchor == head()`);
+    /// every block is validated through [`commit_block`](Chain::commit_block)
+    /// on a scratch replica first, so a bad block mid-suffix adopts nothing.
+    /// Returns true if the whole suffix was appended; callers fall back to
+    /// a full [`adopt_if_longer`](Chain::adopt_if_longer) snapshot on false.
+    pub fn try_extend(
+        &mut self,
+        from_height: u64,
+        anchor: Hash256,
+        blocks: &[Block],
+        keys: &KeyStore,
+    ) -> bool {
+        if from_height != self.blocks.len() as u64
+            || anchor != self.head()
+            || blocks.is_empty()
+        {
+            return false;
+        }
+        let mut scratch = self.clone();
+        for b in blocks {
+            if scratch.commit_block(b.clone(), keys).is_err() {
+                return false;
+            }
+        }
+        self.blocks = scratch.blocks;
+        self.balances = scratch.balances;
+        true
     }
 
     /// Adopt a longer valid chain (anti-entropy for late joiners). Returns
@@ -339,6 +381,94 @@ mod tests {
         assert_eq!(b.stake(NodeId(0)), 50);
         // Shorter or equal chains are not adopted.
         assert!(!a.adopt_if_longer(b.blocks(), &ks));
+    }
+
+    #[test]
+    fn try_extend_appends_anchored_suffix_only() {
+        let (keys, ks) = network(2);
+        let mut a = Chain::new();
+        let mut b = Chain::new();
+        let blk1 = Block::create(a.head(), 0.0, genesis_ops(), &keys[0]);
+        a.commit_block(blk1.clone(), &ks).unwrap();
+        b.commit_block(blk1, &ks).unwrap();
+        let blk2 = Block::create(
+            a.head(),
+            1.0,
+            vec![CreditOp::Stake { node: NodeId(0), amount: 50 }],
+            &keys[0],
+        );
+        a.commit_block(blk2.clone(), &ks).unwrap();
+        let blk3 = Block::create(
+            a.head(),
+            2.0,
+            vec![CreditOp::Unstake { node: NodeId(0), amount: 10 }],
+            &keys[1],
+        );
+        a.commit_block(blk3, &ks).unwrap();
+
+        // b (height 1) extends with a's suffix from height 1 — identical
+        // end state to a full adopt_if_longer of a's chain.
+        let mut b_full = b.clone();
+        let suffix = &a.blocks()[1..];
+        assert!(b.try_extend(1, b.head(), suffix, &ks));
+        assert!(b_full.adopt_if_longer(a.blocks(), &ks));
+        assert_eq!(b.len(), b_full.len());
+        assert_eq!(b.head(), b_full.head());
+        assert_eq!(b.stake(NodeId(0)), b_full.stake(NodeId(0)));
+        assert!(b.audit(&ks));
+
+        // Wrong height or wrong anchor adopts nothing.
+        let mut c = Chain::new();
+        assert!(!c.try_extend(1, a.head(), suffix, &ks));
+        assert!(!c.try_extend(0, a.head(), a.blocks(), &ks), "bad anchor");
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn try_extend_rejects_bad_suffix_atomically() {
+        let (keys, ks) = network(2);
+        let mut a = Chain::new();
+        let blk1 = Block::create(a.head(), 0.0, genesis_ops(), &keys[0]);
+        a.commit_block(blk1.clone(), &ks).unwrap();
+        let good = Block::create(
+            a.head(),
+            1.0,
+            vec![CreditOp::Stake { node: NodeId(0), amount: 50 }],
+            &keys[0],
+        );
+        let mut tampered = Block::create(
+            good.id,
+            2.0,
+            vec![CreditOp::Mint {
+                to: NodeId(1),
+                amount: 1,
+                reason: OpReason::Genesis,
+            }],
+            &keys[1],
+        );
+        tampered.ops[0] = CreditOp::Mint {
+            to: NodeId(1),
+            amount: 9_999,
+            reason: OpReason::Genesis,
+        };
+        let mut b = Chain::new();
+        b.commit_block(blk1, &ks).unwrap();
+        let head_before = b.head();
+        assert!(!b.try_extend(1, b.head(), &[good, tampered], &ks));
+        assert_eq!(b.len(), 1, "half-valid suffix must adopt nothing");
+        assert_eq!(b.head(), head_before);
+    }
+
+    #[test]
+    fn block_id_at_indexes_heights() {
+        let (keys, ks) = network(1);
+        let mut a = Chain::new();
+        assert_eq!(a.block_id_at(0), None);
+        let blk = Block::create(a.head(), 0.0, genesis_ops(), &keys[0]);
+        a.commit_block(blk, &ks).unwrap();
+        assert_eq!(a.block_id_at(0), Some(a.head()));
+        assert_eq!(a.block_id_at(1), None);
+        assert_eq!(a.block_id_at(u64::MAX), None);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 // is exactly the kind of divergence the pinned fingerprints exist to
 // catch. `unreachable_pub` is deliberately *not* in the set: the layered
 // coordinator exposes `pub fn`s on `pub(crate)` structs throughout, which
-// that lint rejects wholesale. The determinism-specific rules (D001–D005)
+// that lint rejects wholesale. The determinism-specific rules (D001–D006)
 // are enforced by the in-tree `detlint` bin instead, which understands
 // sim-visible scope in a way rustc lints cannot.
 #![forbid(unsafe_code)]
@@ -113,14 +113,23 @@
 //!
 //! ## Fleet scale
 //!
-//! The event loop is sized for 1000-node fleets: membership gossip ships
-//! **deltas** (per-peer sent clocks + compact heartbeat pairs, full-digest
-//! anti-entropy as fallback and correctness oracle — see [`gossip`]),
-//! dispatch runs off a **cached stake snapshot** invalidated by the view's
-//! mutation clock and the ledger version, and whole fleets are stamped out
-//! declaratively via the `topology.fleet` config block.
-//! `benches/fleet_scale.rs` tracks events/sec and gossip bytes across
-//! n ∈ {50..1000} and writes the `BENCH_fleet_scale.json` perf trajectory.
+//! The event loop is sized for 10,000-node fleets: node ids and region
+//! tags are **interned** to dense `u32`s at construction
+//! ([`util::intern::Interner`] — strings only at config-parse and export
+//! boundaries), the event queue is a **calendar queue** ([`sim::queue`])
+//! with identical pop order to the old binary heap, membership gossip
+//! ships **deltas** (per-peer sent clocks + compact heartbeat pairs,
+//! full-digest anti-entropy as fallback and correctness oracle — see
+//! [`gossip`]; bootstrap-sealed views skip the round-one digest storm),
+//! blockchain anti-entropy ships **`ChainDelta` suffixes** anchored on
+//! the requester's head (full [`ChainSnapshot`](coordinator::Message)
+//! as fallback and oracle), dispatch runs off a **cached stake
+//! snapshot** invalidated by the view's mutation clock and the ledger
+//! version, and whole fleets are stamped out declaratively via the
+//! `topology.fleet` config block. `benches/fleet_scale.rs` tracks
+//! events/sec and gossip bytes across n ∈ {50..1000} plus a
+//! horizon-capped n = 10,000 tier and a chain-sync byte-ratio section,
+//! and writes the `BENCH_fleet_scale.json` perf trajectory.
 //!
 //! ## Observability
 //!

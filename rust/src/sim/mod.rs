@@ -6,8 +6,8 @@
 //! reproducible from the seed — every integration test and every
 //! figure-regenerating bench drives this harness.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+pub mod queue;
+
 use std::sync::{Arc, Mutex};
 
 use crate::backend::{Profile, SimBackend};
@@ -34,6 +34,8 @@ use crate::topology::Topology;
 use crate::types::{NodeId, Time};
 use crate::util::rng::Rng;
 use crate::workload::Generator;
+
+use self::queue::EventQueue;
 
 /// Which consistency machinery backs the credit system.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,6 +93,12 @@ pub struct WorldConfig {
     /// wire, no reputation rows in gossip, no extra RNG draws, so
     /// pre-defense configs replay byte for byte.
     pub defenses: DefenseConfig,
+    /// Blockchain-mode chain sync: answer anchored `ChainRequest`s with
+    /// just the missing block suffix (`ChainDelta`) instead of a full
+    /// `ChainSnapshot`. On by default; `false` reproduces the seed's
+    /// full-replica shipping — the baseline the fleet-scale bench compares
+    /// `chain_sync_bytes_sent` against. Ignored in shared-ledger mode.
+    pub chain_delta_sync: bool,
 }
 
 impl Default for WorldConfig {
@@ -109,6 +117,7 @@ impl Default for WorldConfig {
             capacity: Vec::new(),
             observability: ObservabilityConfig::default(),
             defenses: DefenseConfig::default(),
+            chain_delta_sync: true,
         }
     }
 }
@@ -225,32 +234,6 @@ enum WorldEvent {
     Capacity(usize),
 }
 
-struct Queued {
-    t: Time,
-    seq: u64,
-    ev: WorldEvent,
-}
-
-impl PartialEq for Queued {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for Queued {}
-impl PartialOrd for Queued {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Queued {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t
-            .partial_cmp(&other.t)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(self.seq.cmp(&other.seq))
-    }
-}
-
 /// Virtual-time cadence of the metrics-registry sampling rounds inside
 /// `run_until` (piggybacked on event processing — no queue entries of
 /// its own, so the replay stream is untouched).
@@ -265,6 +248,8 @@ struct ObsMetricIds {
     bytes_sent: MetricId,
     gossip_messages_sent: MetricId,
     gossip_bytes_sent: MetricId,
+    chain_sync_messages_sent: MetricId,
+    chain_sync_bytes_sent: MetricId,
     messages_dropped: MetricId,
     scale_events: MetricId,
     capacity_credits_charged: MetricId,
@@ -282,8 +267,10 @@ struct ObsMetricIds {
 pub struct World {
     pub cfg: WorldConfig,
     nodes: Vec<Node>,
-    queue: BinaryHeap<Reverse<Queued>>,
-    seq: u64,
+    /// Central event scheduler: a calendar queue popping in exact
+    /// `(time, push-seq)` order — the seed heap's order, proven by the
+    /// same-tape oracle in `rust/tests/event_queue_oracle.rs`.
+    queue: EventQueue<WorldEvent>,
     now: Time,
     rng: Rng,
     next_wake: Vec<Time>,
@@ -305,6 +292,16 @@ pub struct World {
     /// full-digest baseline.
     pub gossip_messages_sent: u64,
     pub gossip_bytes_sent: u64,
+    /// Chain-state shipping share of the totals (blockchain-mode
+    /// anti-entropy responses: `ChainSnapshot` / `ChainDelta`) — the
+    /// fleet-scale bench compares delta shipping against the
+    /// full-snapshot baseline on these. The constant-rate 48-byte
+    /// `ChainRequest` probes are deliberately excluded: they cost the
+    /// same under either protocol and would drown the shipping ratio;
+    /// they still count toward `messages_sent`/`bytes_sent`. Zero in
+    /// shared-ledger mode.
+    pub chain_sync_messages_sent: u64,
+    pub chain_sync_bytes_sent: u64,
     /// Messages lost to partitioned links.
     pub messages_dropped: u64,
     /// Queue entries processed by `run_until` (events/sec denominator for
@@ -401,12 +398,13 @@ impl World {
                         keys.clone(),
                         quorum,
                     );
-                    if let (LedgerManager::Chain(r), Some(g)) =
-                        (&mut m, &genesis_block)
-                    {
-                        r.chain
-                            .commit_block(g.clone(), &keys)
-                            .expect("genesis block valid");
+                    if let LedgerManager::Chain(r) = &mut m {
+                        r.delta_sync = cfg.chain_delta_sync;
+                        if let Some(g) = &genesis_block {
+                            r.chain
+                                .commit_block(g.clone(), &keys)
+                                .expect("genesis block valid");
+                        }
                     }
                     m
                 }
@@ -522,6 +520,10 @@ impl World {
                 gossip_messages_sent: reg
                     .counter("gossip_messages_sent", &[]),
                 gossip_bytes_sent: reg.counter("gossip_bytes_sent", &[]),
+                chain_sync_messages_sent: reg
+                    .counter("chain_sync_messages_sent", &[]),
+                chain_sync_bytes_sent: reg
+                    .counter("chain_sync_bytes_sent", &[]),
                 messages_dropped: reg.counter("messages_dropped", &[]),
                 scale_events: reg.counter("scale_events", &[]),
                 capacity_credits_charged: reg
@@ -549,6 +551,7 @@ impl World {
                     .collect(),
                 node_online: (0..n)
                     .map(|i| {
+                        // detlint:allow(D006) reason="construction-time metric labels: the export boundary, not a hot path"
                         let node = format!("n{i}");
                         reg.gauge("node_online", &[("node", &node)])
                     })
@@ -561,8 +564,7 @@ impl World {
         let mut world = World {
             cfg: cfg.clone(),
             nodes,
-            queue: BinaryHeap::new(),
-            seq: 0,
+            queue: EventQueue::new(),
             now: 0.0,
             rng: rng.fork(0xF00D),
             next_wake: vec![f64::INFINITY; n],
@@ -576,6 +578,8 @@ impl World {
             bytes_sent: 0,
             gossip_messages_sent: 0,
             gossip_bytes_sent: 0,
+            chain_sync_messages_sent: 0,
+            chain_sync_bytes_sent: 0,
             messages_dropped: 0,
             events_processed: 0,
             dispatch_matrix: vec![0; num_regions * num_regions],
@@ -650,8 +654,7 @@ impl World {
     // ---- scheduling ---------------------------------------------------------
 
     fn push(&mut self, t: Time, ev: WorldEvent) {
-        self.seq += 1;
-        self.queue.push(Reverse(Queued { t, seq: self.seq, ev }));
+        self.queue.push(t, ev);
     }
 
     /// Bring a node online at `t` (Figure 5a).
@@ -682,14 +685,14 @@ impl World {
 
     /// Run until the queue drains or `horizon` passes. Returns final time.
     pub fn run_until(&mut self, horizon: Time) -> Time {
-        while let Some(Reverse(q)) = self.queue.peek() {
-            if q.t > horizon {
+        while let Some(t) = self.queue.peek_time() {
+            if t > horizon {
                 break;
             }
-            let Reverse(q) = self.queue.pop().expect("peeked");
+            let (t, ev) = self.queue.pop().expect("peeked");
             self.events_processed += 1;
-            self.now = q.t.max(self.now);
-            match q.ev {
+            self.now = t.max(self.now);
+            match ev {
                 WorldEvent::Node(i, ev) => {
                     if matches!(ev, Event::BackendWake) {
                         self.next_wake[i] = f64::INFINITY;
@@ -754,6 +757,12 @@ impl World {
             .set(ids.gossip_messages_sent, self.gossip_messages_sent as f64);
         self.registry
             .set(ids.gossip_bytes_sent, self.gossip_bytes_sent as f64);
+        self.registry.set(
+            ids.chain_sync_messages_sent,
+            self.chain_sync_messages_sent as f64,
+        );
+        self.registry
+            .set(ids.chain_sync_bytes_sent, self.chain_sync_bytes_sent as f64);
         self.registry
             .set(ids.messages_dropped, self.messages_dropped as f64);
         self.registry.set(ids.scale_events, self.scale_events as f64);
@@ -947,6 +956,14 @@ impl World {
                     }
                     if matches!(
                         msg,
+                        crate::coordinator::Message::ChainSnapshot { .. }
+                            | crate::coordinator::Message::ChainDelta { .. }
+                    ) {
+                        self.chain_sync_messages_sent += 1;
+                        self.chain_sync_bytes_sent += bytes as u64;
+                    }
+                    if matches!(
+                        msg,
                         crate::coordinator::Message::Probe { .. }
                             | crate::coordinator::Message::Delegate { .. }
                     ) {
@@ -1049,6 +1066,20 @@ impl World {
     /// region once, instead of cloning the matching slice of the record log
     /// per region via `Recorder::filtered`.
     pub fn region_summary(&self) -> Vec<(String, f64, f64, usize)> {
+        // Resolve interned region ids to names once, here at the
+        // boundary — the aggregation itself never touches a string.
+        self.region_summary_ids()
+            .into_iter()
+            .map(|(r, slo, p99, n)| {
+                (self.topology.region_name(r).to_string(), slo, p99, n)
+            })
+            .collect()
+    }
+
+    /// [`World::region_summary`] keyed by interned region id instead of
+    /// resolved name — the allocation-free form for hot/repeated callers
+    /// (per-round bench sampling, capacity evaluation loops).
+    pub fn region_summary_ids(&self) -> Vec<(usize, f64, f64, usize)> {
         let nr = self.topology.num_regions();
         let mut met = vec![0usize; nr];
         let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); nr];
@@ -1069,7 +1100,7 @@ impl World {
                 } else {
                     lat[((n - 1) as f64 * 0.99).round() as usize]
                 };
-                (self.topology.region_name(r).to_string(), slo, p99, n)
+                (r, slo, p99, n)
             })
             .collect()
     }

@@ -1,0 +1,346 @@
+//! Calendar-queue event scheduler for the simulation core.
+//!
+//! The seed `World` kept every pending event in one
+//! `BinaryHeap<Reverse<Queued>>`: O(log n) per push/pop with n = every
+//! arrival of the whole workload (pre-pushed at construction). At 10k
+//! nodes that heap holds hundreds of thousands of entries and the log
+//! factor — plus the cache misses of a pointer-hopping sift — dominates
+//! the event loop. [`EventQueue`] replaces it with a classic calendar
+//! queue (Brown 1988): a ring of `NSLOTS` time buckets of `WIDTH` virtual
+//! seconds each, a lazily advancing cursor, and an overflow heap for
+//! entries beyond the ring's horizon. Near-term events — the vast
+//! majority — cost O(1) amortized to file and pop from a tiny per-bucket
+//! heap.
+//!
+//! ## Ordering contract (the replay-critical part)
+//!
+//! Pop order is **exactly** the old heap's order: lexicographic
+//! `(time, seq)` where `seq` is a per-queue counter incremented on every
+//! push. Two properties make the equivalence exact, not approximate:
+//!
+//! * **Tie-breaking**: equal-`(t, seq)` entries cannot exist — `seq` is
+//!   strictly increasing, so every entry's key is unique and simultaneous
+//!   events pop in push order (FIFO), exactly as `Reverse<Queued>` did.
+//! * **Monotone bucketing**: the bucket function `t ↦ (t / WIDTH) as u64`
+//!   is monotone non-decreasing in `t` (division by a positive constant,
+//!   then truncation), so an entry in a later bucket never has a smaller
+//!   `t` than one in an earlier bucket — even at bucket-boundary rounding,
+//!   order across buckets is preserved and order *within* a bucket is the
+//!   old comparator verbatim.
+//!
+//! Entries timed in the past (before the cursor) are filed into the
+//! *current* bucket and pop immediately — again matching the heap, which
+//! surfaces the global minimum regardless of when it was pushed.
+//! Non-finite times degrade gracefully: `+∞` saturates to the last bucket
+//! and pops after everything finite, in seq order, as the old
+//! `partial_cmp(..).unwrap_or(Equal)` comparator arranged.
+//!
+//! The equivalence is proven wholesale by the same-tape ordering oracle
+//! in `rust/tests/event_queue_oracle.rs`, which replays randomized
+//! push/pop tapes against a reference `BinaryHeap` with the seed's
+//! comparator and asserts identical pop sequences.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::types::Time;
+
+/// Virtual seconds per calendar bucket. Sized so one bucket holds a
+/// handful of events at fleet scale: WAN latencies are 0.5–125 ms and
+/// node ticks are 1 s apart, so 50 ms buckets keep per-bucket heaps tiny
+/// without making cursor sweeps over idle stretches expensive.
+const WIDTH: f64 = 0.05;
+/// Ring size. `NSLOTS * WIDTH` ≈ 205 virtual seconds of horizon; events
+/// beyond it (pre-pushed arrival traces, far-future churn) wait in the
+/// overflow heap and migrate into the ring as the cursor approaches.
+const NSLOTS: usize = 4096;
+
+struct Entry<T> {
+    t: Time,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    // The seed comparator, verbatim: time then push sequence. `seq` is
+    // unique per queue, so this is a total order with no real ties.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// A calendar queue yielding `(Time, T)` in exact `(time, seq)` order.
+/// See the module docs for the ordering contract.
+pub struct EventQueue<T> {
+    /// The ring: slot `b % NSLOTS` holds bucket `b` for
+    /// `b ∈ [cursor, cursor + NSLOTS)`.
+    slots: Vec<BinaryHeap<Reverse<Entry<T>>>>,
+    /// Entries whose bucket lies beyond the ring's current horizon.
+    overflow: BinaryHeap<Reverse<Entry<T>>>,
+    /// Absolute bucket index of the ring's current position. Never
+    /// decreases; past-time pushes clamp into it.
+    cursor: u64,
+    /// Entries currently in `slots` (vs `overflow`).
+    in_slots: usize,
+    len: usize,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue {
+            slots: (0..NSLOTS).map(|_| BinaryHeap::new()).collect(),
+            overflow: BinaryHeap::new(),
+            cursor: 0,
+            in_slots: 0,
+            len: 0,
+            seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Absolute bucket of time `t`. Monotone in `t`; saturates at
+    /// `u64::MAX` for `+∞` (the `as` cast's defined saturating behaviour),
+    /// and negative/NaN times land in bucket 0.
+    fn bucket_of(t: Time) -> u64 {
+        if t <= 0.0 {
+            0
+        } else {
+            (t / WIDTH) as u64
+        }
+    }
+
+    /// Schedule `item` at time `t`. Assigns the next sequence number, so
+    /// push order is the tiebreak for simultaneous events.
+    pub fn push(&mut self, t: Time, item: T) {
+        self.seq += 1;
+        let e = Entry { t, seq: self.seq, item };
+        // Past-time entries clamp into the current bucket: they must pop
+        // immediately, and the in-bucket heap orders them ahead of
+        // everything later-timed.
+        let b = Self::bucket_of(t).max(self.cursor);
+        if b - self.cursor < NSLOTS as u64 {
+            self.slots[(b % NSLOTS as u64) as usize].push(Reverse(e));
+            self.in_slots += 1;
+        } else {
+            self.overflow.push(Reverse(e));
+        }
+        self.len += 1;
+    }
+
+    /// Remove and return the earliest entry by `(time, seq)`.
+    pub fn pop(&mut self) -> Option<(Time, T)> {
+        if !self.settle() {
+            return None;
+        }
+        let slot = &mut self.slots[(self.cursor % NSLOTS as u64) as usize];
+        let Reverse(e) = slot.pop().expect("settled on a non-empty bucket");
+        self.in_slots -= 1;
+        self.len -= 1;
+        Some((e.t, e.item))
+    }
+
+    /// Time of the earliest entry without removing it. Takes `&mut self`
+    /// because locating the next entry may advance the ring cursor and
+    /// migrate overflow entries — both invisible to pop order.
+    pub fn peek_time(&mut self) -> Option<Time> {
+        if !self.settle() {
+            return None;
+        }
+        let slot = &self.slots[(self.cursor % NSLOTS as u64) as usize];
+        slot.peek().map(|Reverse(e)| e.t)
+    }
+
+    /// Advance the cursor until the current bucket's top entry is due
+    /// (its natural bucket ≤ cursor). Returns false when the queue is
+    /// empty. On return-true, the current slot's heap top is the global
+    /// `(time, seq)` minimum.
+    fn settle(&mut self) -> bool {
+        if self.len == 0 {
+            return false;
+        }
+        loop {
+            let slot = &self.slots[(self.cursor % NSLOTS as u64) as usize];
+            if let Some(Reverse(top)) = slot.peek() {
+                if Self::bucket_of(top.t) <= self.cursor {
+                    return true;
+                }
+            }
+            if self.in_slots == 0 {
+                // Ring fully drained: jump straight to the overflow
+                // minimum's bucket instead of sweeping empty slots.
+                let Some(Reverse(top)) = self.overflow.peek() else {
+                    unreachable!("len > 0 with empty ring and overflow");
+                };
+                self.cursor = self.cursor.max(Self::bucket_of(top.t));
+            } else {
+                self.cursor += 1;
+            }
+            self.drain_overflow();
+        }
+    }
+
+    /// Move every overflow entry whose bucket has entered the ring's
+    /// window into its slot. Called after each cursor move so bucket
+    /// `cursor + NSLOTS - 1` is populated before the cursor can reach it.
+    fn drain_overflow(&mut self) {
+        while let Some(Reverse(top)) = self.overflow.peek() {
+            // Overflow entries always have bucket ≥ cursor: they entered
+            // with bucket ≥ (push-time cursor + NSLOTS) and migrate the
+            // first time the window reaches them.
+            let b = Self::bucket_of(top.t);
+            if b.saturating_sub(self.cursor) >= NSLOTS as u64 {
+                break;
+            }
+            let Reverse(e) = self.overflow.pop().expect("peeked");
+            self.slots[(b % NSLOTS as u64) as usize].push(Reverse(e));
+            self.in_slots += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_times_pop_fifo_by_seq() {
+        // The documented tie rule: same t, push order wins. Equal (t, seq)
+        // keys cannot exist — seq is strictly increasing per push.
+        let mut q = EventQueue::new();
+        for i in 0..100u32 {
+            q.push(5.0, i);
+        }
+        for i in 0..100u32 {
+            assert_eq!(q.pop(), Some((5.0, i)));
+        }
+    }
+
+    #[test]
+    fn past_time_push_pops_immediately() {
+        let mut q = EventQueue::new();
+        q.push(50.0, "future");
+        assert_eq!(q.pop(), Some((50.0, "future")));
+        // Cursor is now deep in the ring; a past-time push still pops
+        // next, ahead of anything later.
+        q.push(60.0, "later");
+        q.push(10.0, "past");
+        assert_eq!(q.pop(), Some((10.0, "past")));
+        assert_eq!(q.pop(), Some((60.0, "later")));
+    }
+
+    #[test]
+    fn far_future_overflow_round_trips() {
+        let mut q = EventQueue::new();
+        let horizon = WIDTH * NSLOTS as f64;
+        q.push(horizon * 3.0, "far");
+        q.push(horizon * 10.0, "farther");
+        q.push(0.5, "near");
+        assert_eq!(q.pop(), Some((0.5, "near")));
+        assert_eq!(q.pop(), Some((horizon * 3.0, "far")));
+        assert_eq!(q.pop(), Some((horizon * 10.0, "farther")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn peek_time_matches_pop_and_does_not_consume() {
+        let mut q = EventQueue::new();
+        q.push(7.25, 1u8);
+        q.push(2.5, 2u8);
+        assert_eq!(q.peek_time(), Some(2.5));
+        assert_eq!(q.peek_time(), Some(2.5));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((2.5, 2)));
+        assert_eq!(q.peek_time(), Some(7.25));
+    }
+
+    #[test]
+    fn infinity_pops_last_in_seq_order() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, "inf1");
+        q.push(1.0, "one");
+        q.push(f64::INFINITY, "inf2");
+        assert_eq!(q.pop(), Some((1.0, "one")));
+        assert_eq!(q.pop().map(|(_, v)| v), Some("inf1"));
+        assert_eq!(q.pop().map(|(_, v)| v), Some("inf2"));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bucket_boundary_times_stay_ordered() {
+        let mut q = EventQueue::new();
+        // Exact multiples of WIDTH sit on bucket edges; order must hold.
+        let times: Vec<f64> =
+            (0..200).map(|i| i as f64 * WIDTH).rev().collect();
+        for &t in &times {
+            q.push(t, t);
+        }
+        let mut last = f64::NEG_INFINITY;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last, "pop order regressed: {t} after {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_monotone() {
+        let mut q = EventQueue::new();
+        let mut out = Vec::new();
+        for round in 0..50u64 {
+            let base = round as f64 * 1.7;
+            q.push(base + 0.3, round * 10);
+            q.push(base + 900.0, round * 10 + 1);
+            q.push(base, round * 10 + 2);
+            let (t, _) = q.pop().unwrap();
+            out.push(t);
+        }
+        while let Some((t, _)) = q.pop() {
+            out.push(t);
+        }
+        for w in out.windows(2) {
+            assert!(w[0] <= w[1], "non-monotone: {} then {}", w[0], w[1]);
+        }
+        assert_eq!(out.len(), 150);
+    }
+}

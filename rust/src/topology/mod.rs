@@ -21,9 +21,15 @@
 //! parsed from the declarative `"topology"` config block (`config` module).
 
 use crate::types::Time;
+use crate::util::intern::Interner;
 use crate::util::rng::Rng;
 
 /// Index into a topology's region table.
+///
+/// Region tags are interned at construction ([`Interner`]): hot paths
+/// carry this dense index, and the human-readable name is resolved only
+/// at reporting boundaries via [`Topology::region_name`] — which panics
+/// loudly on an id the table never issued.
 pub type RegionId = usize;
 
 /// Behaviour of one region-pair link (stored symmetrically).
@@ -135,7 +141,8 @@ pub struct LinkEvent {
 /// and the scenario schedule. Cheap to clone (region count is small).
 #[derive(Debug, Clone)]
 pub struct Topology {
-    regions: Vec<String>,
+    /// Interned region-name table: `RegionId` = dense intern id.
+    regions: Interner,
     /// Current link state, row-major `[src * n + dst]`.
     links: Vec<LinkProfile>,
     /// Pristine copy of `links` for `LinkChange::Heal`.
@@ -151,8 +158,10 @@ impl Topology {
     /// given uniform latency range. Replays bit-identically to the seed's
     /// `World::sample_latency`.
     pub fn single_region(latency: (Time, Time)) -> Topology {
+        let mut regions = Interner::new();
+        regions.intern("local");
         Topology {
-            regions: vec!["local".to_string()],
+            regions,
             links: vec![LinkProfile::new(latency.0, latency.1)],
             base: vec![LinkProfile::new(latency.0, latency.1)],
             node_region: Vec::new(),
@@ -168,12 +177,21 @@ impl Topology {
         self.regions.len()
     }
 
+    /// Resolve a region id to its name — a reporting-boundary operation.
+    /// Panics on an unknown id (see [`Interner::resolve`]): silently
+    /// defaulting would let a corrupted region index reach reports.
     pub fn region_name(&self, r: RegionId) -> &str {
-        &self.regions[r]
+        self.regions.resolve(r as u32)
     }
 
     pub fn region_index(&self, name: &str) -> Option<RegionId> {
-        self.regions.iter().position(|r| r == name)
+        self.regions.lookup(name).map(|id| id as RegionId)
+    }
+
+    /// The interned region-name table itself (export paths that want to
+    /// resolve many ids without going through `region_name` one by one).
+    pub fn region_table(&self) -> &Interner {
+        &self.regions
     }
 
     /// Region of node `i` (region 0 when unassigned).
@@ -280,7 +298,8 @@ impl Topology {
             for b in 0..n {
                 let what = format!(
                     "topology link {} -> {}",
-                    self.regions[a], self.regions[b]
+                    self.regions.resolve(a as u32),
+                    self.regions.resolve(b as u32)
                 );
                 self.links[a * n + b].validate(&what);
                 self.base[a * n + b].validate(&what);
@@ -324,7 +343,7 @@ impl Topology {
 /// Fluent construction of multi-region topologies (benches, config parser).
 #[derive(Debug, Clone)]
 pub struct TopologyBuilder {
-    regions: Vec<String>,
+    regions: Interner,
     intra_default: LinkProfile,
     inter_default: LinkProfile,
     overrides: Vec<(RegionId, RegionId, LinkProfile)>,
@@ -341,7 +360,7 @@ impl Default for TopologyBuilder {
 impl TopologyBuilder {
     pub fn new() -> TopologyBuilder {
         TopologyBuilder {
-            regions: Vec::new(),
+            regions: Interner::new(),
             // Datacenter-ish defaults; override per deployment.
             intra_default: LinkProfile::new(0.002, 0.010),
             inter_default: LinkProfile::new(0.040, 0.080),
@@ -351,13 +370,13 @@ impl TopologyBuilder {
         }
     }
 
-    /// Declare a region (index order = declaration order).
+    /// Declare a region (intern order = declaration order).
     pub fn region(mut self, name: &str) -> Self {
         assert!(
-            !self.regions.iter().any(|r| r == name),
+            self.regions.lookup(name).is_none(),
             "topology builder: duplicate region '{name}'"
         );
-        self.regions.push(name.to_string());
+        self.regions.intern(name);
         self
     }
 
@@ -375,8 +394,8 @@ impl TopologyBuilder {
 
     fn region_id(&self, name: &str) -> RegionId {
         self.regions
-            .iter()
-            .position(|r| r == name)
+            .lookup(name)
+            .map(|id| id as RegionId)
             .unwrap_or_else(|| {
                 panic!("topology builder: unknown region '{name}'")
             })

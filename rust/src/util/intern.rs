@@ -1,0 +1,141 @@
+//! String interning for hot-path identifiers.
+//!
+//! The simulator's hot paths carry node and region identities as dense
+//! `u32`s (`types::NodeId`, region indices); the human-readable names
+//! exist only at the two boundaries — config parsing (strings in) and
+//! export/reporting (strings out). [`Interner`] is the canonical table
+//! tying the two together: `intern` assigns each distinct string the next
+//! dense id (idempotently — re-interning returns the same id), `resolve`
+//! maps an id back to its string and **panics loudly on an unknown id**
+//! rather than fabricating a default, because an unknown id at a reporting
+//! boundary means a corrupted identifier escaped the sim core.
+//!
+//! Determinism: ids are assigned in first-intern order, so identical
+//! configs processed in identical order produce identical id assignments —
+//! the interner introduces no hashing and no per-process state. (Backing
+//! storage is a `Vec` + `BTreeMap`; iteration order is id order.)
+
+use std::collections::BTreeMap;
+
+/// Dense `u32` ids for a set of distinct strings. See module docs.
+#[derive(Debug, Clone, Default)]
+pub struct Interner {
+    names: Vec<String>,
+    index: BTreeMap<String, u32>,
+}
+
+impl Interner {
+    pub fn new() -> Interner {
+        Interner::default()
+    }
+
+    /// Intern `name`, returning its dense id. Idempotent: the same string
+    /// always maps to the id assigned at its first interning.
+    pub fn intern(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.index.get(name) {
+            return id;
+        }
+        let id = u32::try_from(self.names.len())
+            .expect("interner: more than u32::MAX distinct labels");
+        self.names.push(name.to_string());
+        self.index.insert(name.to_string(), id);
+        id
+    }
+
+    /// The id of an already-interned string, or `None`.
+    pub fn lookup(&self, name: &str) -> Option<u32> {
+        self.index.get(name).copied()
+    }
+
+    /// Resolve an id back to its string. Panics on an unknown id — a
+    /// silent default here would let a corrupted identifier masquerade as
+    /// a real one all the way into reports.
+    pub fn resolve(&self, id: u32) -> &str {
+        self.try_resolve(id).unwrap_or_else(|| {
+            panic!(
+                "interner: unknown id {id} (only {} labels interned)",
+                self.names.len()
+            )
+        })
+    }
+
+    /// Non-panicking resolve, for callers that can represent absence.
+    pub fn try_resolve(&self, id: u32) -> Option<&str> {
+        self.names.get(id as usize).map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// All interned strings in id order (id = position).
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &str)> {
+        self.names
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i as u32, s.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent_and_dense() {
+        let mut it = Interner::new();
+        let us = it.intern("us");
+        let eu = it.intern("eu");
+        assert_eq!(us, 0);
+        assert_eq!(eu, 1);
+        assert_eq!(it.intern("us"), us, "re-intern must return the same id");
+        assert_eq!(it.intern("eu"), eu);
+        assert_eq!(it.len(), 2);
+    }
+
+    #[test]
+    fn ids_stable_across_identical_build_sequences() {
+        // Two interners fed the same strings in the same order assign the
+        // same ids — the property World construction determinism rests on.
+        let feed = ["asia", "us", "eu", "us", "asia"];
+        let mut a = Interner::new();
+        let mut b = Interner::new();
+        let ids_a: Vec<u32> = feed.iter().map(|s| a.intern(s)).collect();
+        let ids_b: Vec<u32> = feed.iter().map(|s| b.intern(s)).collect();
+        assert_eq!(ids_a, ids_b);
+        assert_eq!(ids_a, vec![0, 1, 2, 1, 0]);
+    }
+
+    #[test]
+    fn resolve_round_trips() {
+        let mut it = Interner::new();
+        let id = it.intern("eu-west");
+        assert_eq!(it.resolve(id), "eu-west");
+        assert_eq!(it.lookup("eu-west"), Some(id));
+        assert_eq!(it.lookup("nowhere"), None);
+        assert_eq!(it.try_resolve(id), Some("eu-west"));
+        assert_eq!(it.try_resolve(id + 1), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown id 7")]
+    fn unknown_id_resolution_is_a_loud_error() {
+        let mut it = Interner::new();
+        it.intern("only");
+        let _ = it.resolve(7);
+    }
+
+    #[test]
+    fn iter_is_id_ordered() {
+        let mut it = Interner::new();
+        for name in ["c", "a", "b"] {
+            it.intern(name);
+        }
+        let all: Vec<(u32, &str)> = it.iter().collect();
+        assert_eq!(all, vec![(0, "c"), (1, "a"), (2, "b")]);
+    }
+}

@@ -1,7 +1,8 @@
 //! Small in-repo substrates standing in for unavailable third-party crates
 //! (offline image — see DESIGN.md §8): deterministic RNG + samplers, JSON,
-//! and hex encoding.
+//! hex encoding, and string interning for hot-path identifiers.
 
+pub mod intern;
 pub mod json;
 pub mod rng;
 

@@ -1,0 +1,161 @@
+//! Delta chain-sync tests: the blockchain-mode anti-entropy path ships
+//! only the missing block suffix (`Message::ChainDelta`) when the
+//! requester's chain is a prefix of the responder's, falling back to the
+//! full `ChainSnapshot` otherwise. Mirrors `rust/tests/delta_gossip.rs`:
+//! the full-snapshot protocol is kept as the correctness oracle, and both
+//! protocols must converge every replica to an identical, auditable chain
+//! under churn and partitions — the delta path just pays far fewer bytes.
+
+use wwwserve::backend::Profile;
+use wwwserve::coordinator::LedgerManager;
+use wwwserve::crypto::KeyStore;
+use wwwserve::policy::NodePolicy;
+use wwwserve::sim::{LedgerMode, NodeSetup, World, WorldConfig};
+use wwwserve::topology::{LinkChange, LinkProfile, Topology};
+use wwwserve::workload::{Generator, LengthDist, Phase};
+use wwwserve::NodeId;
+
+fn lengths() -> LengthDist {
+    LengthDist { output_mean: 1200.0, output_sigma: 0.5, ..Default::default() }
+}
+
+fn paying_setups(n: usize, ia: f64, horizon: f64) -> Vec<NodeSetup> {
+    (0..n)
+        .map(|i| {
+            NodeSetup::new(
+                Profile::test(40.0, 16),
+                NodePolicy { accept_freq: 1.0, ..Default::default() },
+            )
+            .with_generator(
+                Generator::new(
+                    NodeId(i as u32),
+                    vec![Phase::new(0.0, horizon, ia)],
+                )
+                .with_lengths(lengths()),
+            )
+        })
+        .collect()
+}
+
+/// Every replica's chain, by length and head-by-audit: replicas must end
+/// identical, and the chain must re-validate from genesis.
+fn chain_lengths_audited(w: &World, n: usize, seed: u64) -> Vec<usize> {
+    let keys = KeyStore::for_network(seed, n as u32);
+    (0..n)
+        .map(|i| match w.node(i).ledger() {
+            LedgerManager::Chain(r) => {
+                assert!(r.chain.audit(&keys), "node {i}: chain fails audit");
+                r.chain.len()
+            }
+            LedgerManager::Shared(_) => panic!("blockchain mode expected"),
+        })
+        .collect()
+}
+
+/// Late-joiner churn under both sync protocols: replicas converge to the
+/// same audited chain either way (the fallback is the oracle), and delta
+/// sync pays strictly fewer chain-sync bytes.
+#[test]
+fn churn_converges_under_both_protocols_and_delta_cuts_bytes() {
+    let seed = 11u64;
+    let run = |delta_sync: bool| -> (World, Vec<usize>) {
+        let mut setups = paying_setups(4, 6.0, 300.0);
+        setups.push(
+            NodeSetup::new(
+                Profile::test(40.0, 16),
+                NodePolicy { accept_freq: 1.0, ..Default::default() },
+            )
+            .offline(),
+        );
+        let cfg = WorldConfig {
+            seed,
+            ledger: LedgerMode::Blockchain,
+            chain_delta_sync: delta_sync,
+            ..Default::default()
+        };
+        let mut w = World::new(cfg, setups);
+        // The late joiner catches a long-established chain — the sync-path
+        // stress case: full mode re-ships the whole replica, delta mode
+        // ships suffixes.
+        w.schedule_join(4, 100.0);
+        w.run_until(4000.0);
+        let lens = chain_lengths_audited(&w, 5, seed);
+        (w, lens)
+    };
+
+    let (full_w, full_lens) = run(false);
+    let (delta_w, delta_lens) = run(true);
+
+    for lens in [&full_lens, &delta_lens] {
+        assert!(lens[0] > 1, "no blocks were ledgered: {lens:?}");
+        for l in lens.iter() {
+            assert_eq!(*l, lens[0], "replicas diverged: {lens:?}");
+        }
+    }
+    assert!(
+        full_w.chain_sync_messages_sent > 0
+            && delta_w.chain_sync_messages_sent > 0,
+        "chain sync never ran"
+    );
+    assert!(
+        delta_w.chain_sync_bytes_sent < full_w.chain_sync_bytes_sent,
+        "delta sync did not cut bytes: {} vs {}",
+        delta_w.chain_sync_bytes_sent,
+        full_w.chain_sync_bytes_sent
+    );
+    // The headline ratio assert (≥5x at n=500) lives in
+    // benches/fleet_scale.rs; even this small world must show a clear cut.
+    assert!(
+        delta_w.chain_sync_bytes_sent * 2 <= full_w.chain_sync_bytes_sent,
+        "expected >= 2x chain-sync byte cut, got {}/{}",
+        full_w.chain_sync_bytes_sent,
+        delta_w.chain_sync_bytes_sent
+    );
+}
+
+/// Partition/heal: an asymmetric 3+1 split keeps the majority side at
+/// quorum, so it goes on committing blocks while the minority node stalls
+/// (and possibly diverges via solo self-commits once the far side ages
+/// out). After the heal, anti-entropy must reconcile every replica to one
+/// audited chain — the anchored case rides `ChainDelta`, divergence falls
+/// back to the full `ChainSnapshot` — under both protocols.
+#[test]
+fn partition_heal_reconciles_under_both_protocols() {
+    let seed = 42u64;
+    let run = |delta_sync: bool| -> Vec<usize> {
+        let topo = Topology::builder()
+            .region("west")
+            .region("east")
+            .default_intra(LinkProfile::new(0.001, 0.004))
+            .link("west", "east", LinkProfile::new(0.040, 0.060))
+            .nodes("west", 3)
+            .nodes("east", 1)
+            .event("west", "east", 50.0, LinkChange::Partition)
+            .event("west", "east", 150.0, LinkChange::Heal)
+            .build();
+        let mut cfg = WorldConfig {
+            seed,
+            ledger: LedgerMode::Blockchain,
+            topology: Some(topo),
+            chain_delta_sync: delta_sync,
+            ..Default::default()
+        };
+        // Generous suspicion window so the partition itself (not liveness
+        // aging) is the only isolation mechanism at play.
+        cfg.gossip.suspect_after = 30.0;
+        let setups = paying_setups(4, 5.0, 200.0);
+        let mut w = World::new(cfg, setups);
+        w.run_until(3000.0);
+        chain_lengths_audited(&w, 4, seed)
+    };
+    for delta_sync in [false, true] {
+        let lens = run(delta_sync);
+        assert!(lens[0] > 1, "delta_sync={delta_sync}: no blocks: {lens:?}");
+        for l in &lens {
+            assert_eq!(
+                *l, lens[0],
+                "delta_sync={delta_sync}: replicas diverged after heal: {lens:?}"
+            );
+        }
+    }
+}

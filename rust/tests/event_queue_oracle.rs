@@ -1,0 +1,217 @@
+//! Same-tape ordering oracle: the calendar queue vs the seed's heap.
+//!
+//! The replay contract says swapping `World`'s central event queue is
+//! only safe if the new structure pops in *exactly* the old order. This
+//! test replays recorded push/pop tapes against both implementations —
+//! [`wwwserve::sim::queue::EventQueue`] and a reference
+//! `BinaryHeap<Reverse<Queued>>` carrying the seed's comparator verbatim
+//! — and asserts bit-identical pop sequences: same times, same payloads,
+//! same everything.
+//!
+//! The tapes are adversarial for a calendar queue: same-bucket bursts,
+//! past-time pushes behind the cursor, far-future entries that must park
+//! in the overflow heap and migrate back, times on exact bucket
+//! boundaries, and `+∞`. The tie rule under test: equal-`(t, seq)` keys
+//! cannot exist (seq is strictly increasing per push), so simultaneous
+//! events pop in push order.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use wwwserve::sim::queue::EventQueue;
+use wwwserve::util::rng::Rng;
+
+/// The seed's queue entry and comparator, reproduced verbatim as the
+/// ordering oracle.
+struct Queued {
+    t: f64,
+    seq: u64,
+    item: u32,
+}
+
+impl PartialEq for Queued {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Queued {}
+impl PartialOrd for Queued {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Queued {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Reference implementation: the seed's `BinaryHeap<Reverse<Queued>>`
+/// with its own push counter (assigned in the same push order as the
+/// calendar queue's internal counter).
+#[derive(Default)]
+struct HeapQueue {
+    heap: BinaryHeap<Reverse<Queued>>,
+    seq: u64,
+}
+
+impl HeapQueue {
+    fn push(&mut self, t: f64, item: u32) {
+        self.seq += 1;
+        self.heap.push(Reverse(Queued { t, seq: self.seq, item }));
+    }
+
+    fn pop(&mut self) -> Option<(f64, u32)> {
+        self.heap.pop().map(|Reverse(q)| (q.t, q.item))
+    }
+}
+
+/// One tape step: schedule at `t`, or pop.
+enum Op {
+    Push(f64),
+    Pop,
+}
+
+/// Replay `tape` against both queues, asserting every pop agrees. Pushed
+/// payloads are the tape position, so a mismatch names the exact step.
+fn run_tape(tape: &[Op]) {
+    let mut wheel: EventQueue<u32> = EventQueue::new();
+    let mut heap = HeapQueue::default();
+    for (i, op) in tape.iter().enumerate() {
+        match *op {
+            Op::Push(t) => {
+                wheel.push(t, i as u32);
+                heap.push(t, i as u32);
+            }
+            Op::Pop => {
+                let w = wheel.pop();
+                let h = heap.pop();
+                match (w, h) {
+                    (Some((wt, wv)), Some((ht, hv))) => {
+                        assert!(
+                            wt.to_bits() == ht.to_bits() && wv == hv,
+                            "step {i}: wheel popped ({wt}, {wv}), \
+                             heap popped ({ht}, {hv})"
+                        );
+                    }
+                    (None, None) => {}
+                    (w, h) => {
+                        panic!("step {i}: wheel {w:?} vs heap {h:?}")
+                    }
+                }
+            }
+        }
+    }
+    // Drain both to the end: residual order must agree too.
+    loop {
+        match (wheel.pop(), heap.pop()) {
+            (Some((wt, wv)), Some((ht, hv))) => {
+                assert!(
+                    wt.to_bits() == ht.to_bits() && wv == hv,
+                    "drain: wheel ({wt}, {wv}) vs heap ({ht}, {hv})"
+                );
+            }
+            (None, None) => break,
+            (w, h) => panic!("drain: wheel {w:?} vs heap {h:?}"),
+        }
+    }
+    assert!(wheel.is_empty());
+}
+
+#[test]
+fn randomized_tapes_match_heap_order() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(0xE0E0 + seed);
+        let mut tape = Vec::new();
+        let mut frontier = 0.0f64; // roughly tracks "now"
+        for _ in 0..4000 {
+            if rng.chance(0.55) {
+                // Mixed horizons: mostly near-term, some same-instant
+                // bursts, a tail of far-future entries that exercise the
+                // overflow heap.
+                let t = match rng.below(10) {
+                    0..=5 => frontier + rng.range_f64(0.0, 2.0),
+                    6 | 7 => frontier, // simultaneous: seq tiebreak
+                    8 => frontier + rng.range_f64(100.0, 1500.0),
+                    _ => rng.range_f64(0.0, 5000.0),
+                };
+                tape.push(Op::Push(t));
+            } else {
+                tape.push(Op::Pop);
+                frontier += 0.37;
+            }
+        }
+        run_tape(&tape);
+    }
+}
+
+#[test]
+fn world_shaped_tape_matches_heap_order() {
+    // The shape World::new actually produces: the whole arrival trace
+    // pushed up front (far beyond the ring horizon), then an interleaved
+    // pop/push loop of ticks and short-latency messages.
+    let mut rng = Rng::new(77);
+    let mut tape = Vec::new();
+    for _ in 0..2000 {
+        tape.push(Op::Push(rng.range_f64(0.0, 750.0)));
+    }
+    let mut now = 0.0;
+    for _ in 0..3000 {
+        tape.push(Op::Pop);
+        now += 0.25;
+        if rng.chance(0.8) {
+            tape.push(Op::Push(now + rng.range_f64(0.0005, 0.125)));
+        }
+        if rng.chance(0.3) {
+            tape.push(Op::Push(now + 1.0)); // tick reschedule
+        }
+    }
+    run_tape(&tape);
+}
+
+#[test]
+fn adversarial_edges_match_heap_order() {
+    let mut tape = vec![
+        Op::Push(10.0),
+        Op::Pop,
+        // Past-time pushes behind the cursor (the heap pops them first;
+        // the wheel must clamp them into the current bucket).
+        Op::Push(1.0),
+        Op::Push(0.0),
+        Op::Push(9.999),
+        Op::Pop,
+        Op::Pop,
+        // Exact bucket boundaries (multiples of the 0.05 s bucket width)
+        // interleaved with epsilon offsets on both sides.
+        Op::Push(10.05),
+        Op::Push(10.049_999_999),
+        Op::Push(10.050_000_001),
+        Op::Push(10.10),
+        Op::Pop,
+        Op::Pop,
+        Op::Pop,
+        // Infinity parks behind all finite work, FIFO among itself.
+        Op::Push(f64::INFINITY),
+        Op::Push(f64::INFINITY),
+        Op::Push(11.0),
+        Op::Pop,
+        Op::Pop,
+        Op::Pop,
+    ];
+    // Same-bucket burst: hundreds of entries in one 0.05 s bucket.
+    for i in 0..300 {
+        tape.push(Op::Push(20.0 + (i % 7) as f64 * 1e-4));
+    }
+    for _ in 0..300 {
+        tape.push(Op::Pop);
+    }
+    run_tape(&tape);
+}
+
+#[test]
+fn pop_from_empty_agrees() {
+    run_tape(&[Op::Pop, Op::Push(1.0), Op::Pop, Op::Pop, Op::Pop]);
+}
