@@ -39,6 +39,14 @@
 //!    run) at ≥ 25% fewer server node-hours over the diurnal cycle — and
 //!    a `capacity: {policy: "static"}` declaration replays the
 //!    no-capacity-block trace fingerprint exactly.
+//! 7. **Streaming sessions** — the same follow-the-sun fleet driving
+//!    multi-turn chat sessions (TTFT budgets per turn). KV-affine
+//!    dispatch (`streaming.affinity_bonus = 1`) pins a session's turns to
+//!    the executor already holding its KV cache; the affinity-blind
+//!    baseline (`= 0`) re-draws every turn and ships the session cache
+//!    across the WAN each time it moves (the `KvTransfer` wire size rides
+//!    the links' finite bandwidth). Asserted: affinity-aware TTFT SLO
+//!    attainment ≥ blind while moving ≥ 3x fewer KV bytes.
 //!
 //! `--smoke` (or `GEO_SCALE_SMOKE=1`) runs single-iteration timings — the
 //! CI tier.
@@ -47,10 +55,13 @@ use wwwserve::backend::Profile;
 use wwwserve::benchlib::{bench, write_json_report, Table};
 use wwwserve::policy::NodePolicy;
 use wwwserve::sim::{NodeSetup, World, WorldConfig};
+use wwwserve::streaming::StreamingConfig;
 use wwwserve::topology::{three_region_wan, LinkChange, Topology};
 use wwwserve::types::CREDIT;
 use wwwserve::util::json::Json;
-use wwwserve::workload::{diurnal_phases, Generator, LengthDist, Phase};
+use wwwserve::workload::{
+    diurnal_phases, Generator, LengthDist, Phase, SessionProfile,
+};
 use wwwserve::NodeId;
 
 const HORIZON: f64 = 750.0;
@@ -841,6 +852,173 @@ fn elastic_part() -> Json {
     ])
 }
 
+// ---------------------------------------------------------------------------
+// Part 7: streaming sessions — KV-affine vs affinity-blind dispatch
+// ---------------------------------------------------------------------------
+
+struct StreamingRun {
+    ttft_attainment: f64,
+    overall_slo: f64,
+    kv_transfers: u64,
+    kv_bytes: u64,
+    session_turns: usize,
+}
+
+/// Session-heavy follow-the-sun fleet: one requester per region drives
+/// multi-turn chat sessions (think-time gaps, per-turn TTFT budgets) into
+/// the six-server market. Both runs stream; they differ only in
+/// `affinity_bonus` — 1.0 pins every turn to the session's KV home, 0.0
+/// re-draws the executor every turn, paying a `KvTransfer` of the grown
+/// session cache over the WAN's finite bandwidth whenever it moves.
+fn run_streaming(affinity_bonus: f64) -> StreamingRun {
+    let mut cfg = WorldConfig {
+        seed: SEED,
+        topology: Some(three_region_wan(3).build()),
+        ..Default::default()
+    };
+    cfg.system.duel_rate = 0.0;
+    cfg.streaming = StreamingConfig {
+        enabled: true,
+        affinity_bonus,
+        ..Default::default()
+    };
+    let mut setups = Vec::new();
+    for region in 0..3 {
+        let offset = region as f64 * (PERIOD / 3.0);
+        let requester_id = NodeId((setups.len()) as u32);
+        setups.push(
+            NodeSetup::new(
+                Profile::test(40.0, 4),
+                NodePolicy {
+                    stake: 2 * CREDIT,
+                    target_utilization: 0.5,
+                    offload_freq: 1.0,
+                    accept_freq: 0.0,
+                    latency_penalty: 15.0,
+                    ..Default::default()
+                },
+            )
+            .with_generator(
+                Generator::new(
+                    requester_id,
+                    // Session *starts* ride the diurnal wave; each start
+                    // fans out into a handful of turns spaced by think
+                    // time, so the turn rate is ~turns_mean higher.
+                    diurnal_phases(HORIZON, PERIOD, 6.0, 30.0, offset),
+                )
+                .with_lengths(LengthDist {
+                    output_mean: 400.0,
+                    output_sigma: 0.5,
+                    ..Default::default()
+                })
+                .with_sessions(SessionProfile::default()),
+            ),
+        );
+        for _ in 0..2 {
+            setups.push(NodeSetup::new(
+                Profile::test(45.0, 24),
+                NodePolicy {
+                    stake: 20 * CREDIT,
+                    accept_freq: 1.0,
+                    latency_penalty: 15.0,
+                    ..Default::default()
+                },
+            ));
+        }
+    }
+    let mut w = World::new(cfg, setups);
+    w.run_until(HORIZON + DRAIN);
+    let session_turns = w
+        .recorder
+        .all()
+        .iter()
+        .filter(|r| !r.synthetic && r.session != 0)
+        .count();
+    StreamingRun {
+        ttft_attainment: w.recorder.ttft_attainment(),
+        overall_slo: w.recorder.slo_attainment(),
+        kv_transfers: w.kv_transfer_count,
+        kv_bytes: w.kv_transfer_bytes,
+        session_turns,
+    }
+}
+
+fn streaming_part() -> Json {
+    let aware = run_streaming(1.0);
+    let blind = run_streaming(0.0);
+    println!("\n## Streaming sessions (KV-affine vs affinity-blind)\n");
+    let mut t = Table::new(&[
+        "dispatch", "session turns", "TTFT attainment", "overall SLO",
+        "KV transfers", "KV GB moved",
+    ]);
+    for (name, r) in [("affine", &aware), ("blind", &blind)] {
+        t.row(vec![
+            name.to_string(),
+            format!("{}", r.session_turns),
+            format!("{:.3}", r.ttft_attainment),
+            format!("{:.3}", r.overall_slo),
+            format!("{}", r.kv_transfers),
+            format!("{:.2}", r.kv_bytes as f64 / 1e9),
+        ]);
+    }
+    t.print();
+
+    // Both runs replay the identical session trace; only dispatch differs.
+    assert_eq!(
+        aware.session_turns, blind.session_turns,
+        "session trace diverged between the affine and blind runs"
+    );
+    assert!(
+        aware.session_turns > 200,
+        "session scenario barely ran: {} turns",
+        aware.session_turns
+    );
+    assert!(
+        blind.kv_bytes > 0,
+        "affinity-blind dispatch never shipped a KV cache — the \
+         comparison is vacuous"
+    );
+    // The headline claims, asserted: pinning turns to the KV home keeps
+    // the TTFT SLO at least as well as re-drawing every turn, while
+    // moving a small fraction of the cache bytes.
+    assert!(
+        aware.ttft_attainment >= blind.ttft_attainment,
+        "KV-affine dispatch lost TTFT attainment: affine {:.3} vs \
+         blind {:.3}",
+        aware.ttft_attainment,
+        blind.ttft_attainment
+    );
+    assert!(
+        blind.kv_bytes >= 3 * aware.kv_bytes,
+        "KV-affine dispatch did not cut KV motion 3x: affine {} bytes vs \
+         blind {} bytes",
+        aware.kv_bytes,
+        blind.kv_bytes
+    );
+    println!(
+        "\nstreaming: affine TTFT {:.3} >= blind {:.3}, KV bytes \
+         {:.2} GB vs {:.2} GB ✓",
+        aware.ttft_attainment,
+        blind.ttft_attainment,
+        aware.kv_bytes as f64 / 1e9,
+        blind.kv_bytes as f64 / 1e9
+    );
+
+    let run_json = |r: &StreamingRun| {
+        Json::obj(vec![
+            ("ttft_attainment", Json::num(r.ttft_attainment)),
+            ("overall_slo", Json::num(r.overall_slo)),
+            ("kv_transfers", Json::num(r.kv_transfers as f64)),
+            ("kv_bytes", Json::num(r.kv_bytes as f64)),
+            ("session_turns", Json::num(r.session_turns as f64)),
+        ])
+    };
+    Json::obj(vec![
+        ("affine", run_json(&aware)),
+        ("blind", run_json(&blind)),
+    ])
+}
+
 fn regions_json(regions: &[(String, f64, f64, usize)]) -> Json {
     Json::Arr(
         regions
@@ -1006,6 +1184,10 @@ fn main() {
     // same commitment statically peak-provisioned.
     let elastic = elastic_part();
 
+    // Part 7: streaming sessions — KV-affine dispatch vs re-drawing the
+    // executor (and shipping the session cache) every turn.
+    let streaming = streaming_part();
+
     // Machine-readable trajectory: the per-region SLO/p99 of every part
     // plus the reroute window counts (CI uploads this artifact).
     let report = Json::obj(vec![
@@ -1045,6 +1227,7 @@ fn main() {
         ),
         ("mixed_policy", mixed),
         ("elastic", elastic),
+        ("streaming", streaming),
     ]);
     let path = "BENCH_geo_scale.json";
     write_json_report(path, &report).expect("write bench json");

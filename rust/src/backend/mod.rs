@@ -31,6 +31,9 @@ pub struct Completion {
     pub finished_at: Time,
     /// When the backend started working on it (left the queue).
     pub started_at: Time,
+    /// When the first output token was produced (the prefill→decode
+    /// boundary). `None` for backends that don't track phases.
+    pub first_token_at: Option<Time>,
 }
 
 /// Continuous-batching inference backend, driven by (virtual or wall) time.
@@ -82,4 +85,29 @@ pub trait Backend {
     /// takes effect as slots drain, a growth admits from the queue
     /// immediately. Default: no-op for fixed-capacity backends.
     fn set_slots(&mut self, _slots: usize, _now: Time) {}
+
+    /// Prefill-pool cap when the backend runs disaggregated prefill/decode
+    /// pools (streaming mode). Backends without a split report `usize::MAX`
+    /// (prefill admission shares the unified `slots()` cap).
+    fn prefill_slots(&self) -> usize {
+        usize::MAX
+    }
+
+    /// Scale the prefill-pool cap (second lever of the elastic-capacity
+    /// controller in streaming mode). Enabling this on a [`SimBackend`]
+    /// switches it into split-pool admission: prefill is compute-gated by
+    /// this cap while decode stays KV-gated by `max_batch`, so a node can
+    /// sell prefill capacity while decode is full. Default: no-op.
+    fn set_prefill_slots(&mut self, _slots: usize, _now: Time) {}
+
+    /// Sequences currently in the prefill phase (0 for phase-less backends).
+    fn prefill_running(&self) -> usize {
+        0
+    }
+
+    /// Sequences currently holding a decode (KV-memory) slot. Defaults to
+    /// `running_len()` for unified backends.
+    fn decode_running(&self) -> usize {
+        self.running_len()
+    }
 }

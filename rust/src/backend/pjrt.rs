@@ -24,6 +24,7 @@ struct Active {
     next_token: u32,
     generated: u32,
     started_at: Time,
+    first_token_at: Time,
 }
 
 pub struct PjrtBackend {
@@ -58,12 +59,28 @@ impl PjrtBackend {
         let mut metas = Vec::new();
         while self.active.len() + new_prompts.len() < max_batch {
             let Some((req, kind)) = self.queue.pop_front() else { break };
+            // Honor the full declared prompt length, capped only by the
+            // engine's context window (leaving room for one generated
+            // token). Truncating further would decouple real prefill cost
+            // from the workload's declared length.
+            let ctx_cap =
+                (self.engine.manifest.max_seq.saturating_sub(1)).max(1) as u32;
             let prompt: Vec<u32> = if req.payload.is_empty() {
                 // Synthetic/sim requests: derive a deterministic prompt.
-                (0..req.prompt_tokens.min(32))
+                (0..req.prompt_tokens.min(ctx_cap))
                     .map(|i| (req.id.seq as u32 + i) % 256)
                     .collect()
             } else {
+                if req.payload.len() as u32 != req.prompt_tokens {
+                    eprintln!(
+                        "WARNING: pjrt request {} declares {} prompt tokens \
+                         but carries a {}-token payload; prefill cost and \
+                         SLO accounting will disagree",
+                        req.id,
+                        req.prompt_tokens,
+                        req.payload.len()
+                    );
+                }
                 req.payload.clone()
             };
             new_prompts.push(prompt);
@@ -85,6 +102,8 @@ impl PjrtBackend {
                         next_token: next,
                         generated: 1,
                         started_at: now,
+                        // Prefill's own logits yield the first token.
+                        first_token_at: now,
                     });
                 }
             }
@@ -97,6 +116,7 @@ impl PjrtBackend {
                         kind,
                         finished_at: now,
                         started_at: now,
+                        first_token_at: None,
                     });
                 }
             }
@@ -143,6 +163,7 @@ impl PjrtBackend {
                     kind: a.kind,
                     finished_at: now,
                     started_at: a.started_at,
+                    first_token_at: Some(a.first_token_at),
                 });
             } else {
                 i += 1;

@@ -131,6 +131,10 @@ pub struct Profile {
     pub max_batch: usize,
     /// Intrinsic response quality q_i in [0, 1].
     pub quality: f64,
+    /// KV-cache footprint of one resident sequence (GB). `max_batch` is the
+    /// derived free-VRAM / kv_gb_per_seq cap; the streaming layer uses this
+    /// to size KV transfers when a session is re-dispatched.
+    pub kv_gb_per_seq: f64,
 }
 
 impl Profile {
@@ -174,6 +178,7 @@ impl Profile {
             max_agg_decode_tok_s: agg,
             max_batch,
             quality: model.quality(),
+            kv_gb_per_seq,
         }
     }
 
@@ -204,6 +209,7 @@ impl Profile {
             max_agg_decode_tok_s: decode_tok_s * max_batch as f64 * 0.5,
             max_batch,
             quality: 0.7,
+            kv_gb_per_seq: 0.5,
         }
     }
 }
@@ -260,6 +266,7 @@ mod tests {
                 assert!(p.prefill_tok_s > 0.0);
                 assert!((2..=256).contains(&p.max_batch));
                 assert!((0.0..=1.0).contains(&p.quality));
+                assert!(p.kv_gb_per_seq > 0.0);
             }
         }
     }

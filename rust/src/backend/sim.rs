@@ -15,6 +15,16 @@
 //! rates are constant, so the model integrates exactly — the simulation is
 //! event-driven, deterministic, and runs 750-second experiments in
 //! microseconds of wall time.
+//!
+//! **Split-pool (streaming) mode** — `set_prefill_slots` switches admission
+//! from the unified `max_batch` gate to two independent pools: prefill is
+//! compute-gated by the prefill-slot cap, decode stays KV-gated by
+//! `max_batch`. A sequence finishing prefill when decode is full parks in a
+//! FIFO (`decode_wait`, KV already materialized) until a decode slot frees,
+//! so a node can keep selling prefill capacity while its decode pool is
+//! full — the DeServe-style disaggregation the dispatch layer prices. With
+//! the split disabled (the default) every code path is bit-identical to the
+//! pre-streaming backend; the first-token stamp is purely observational.
 
 use std::collections::VecDeque;
 
@@ -36,6 +46,9 @@ struct Slot {
     /// Tokens of work left in the current phase.
     remaining: f64,
     started_at: Time,
+    /// Stamped at the prefill→decode boundary (the first output token is
+    /// produced by the prefill forward pass).
+    first_token_at: Option<Time>,
 }
 
 /// The simulated server. See module docs.
@@ -48,6 +61,12 @@ pub struct SimBackend {
     own_queue: VecDeque<(Request, ExecKind)>,
     delegated_queue: VecDeque<(Request, ExecKind)>,
     prioritize_own: bool,
+    /// `Some(cap)` switches on split-pool admission (see module docs);
+    /// `None` is the unified pre-streaming gate.
+    prefill_cap: Option<usize>,
+    /// Sequences that finished prefill while the decode pool was full
+    /// (split mode only). KV is resident; they make no progress here.
+    decode_wait: VecDeque<Slot>,
     last_settled: Time,
     /// Completions accumulated by `advance`.
     done: Vec<Completion>,
@@ -63,6 +82,8 @@ impl SimBackend {
             own_queue: VecDeque::new(),
             delegated_queue: VecDeque::new(),
             prioritize_own: true,
+            prefill_cap: None,
+            decode_wait: VecDeque::new(),
             last_settled: 0.0,
             done: Vec::new(),
             tokens_generated: 0.0,
@@ -71,6 +92,12 @@ impl SimBackend {
 
     pub fn with_priority(mut self, prioritize_own: bool) -> Self {
         self.prioritize_own = prioritize_own;
+        self
+    }
+
+    /// Construction-time form of [`Backend::set_prefill_slots`].
+    pub fn with_split_pools(mut self, prefill_slots: usize) -> Self {
+        self.prefill_cap = Some(prefill_slots.max(1));
         self
     }
 
@@ -135,29 +162,57 @@ impl SimBackend {
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
-    /// Fill free slots from the queues.
-    fn admit(&mut self, now: Time) {
-        while self.running.len() < self.profile.max_batch {
-            let next = if self.prioritize_own {
-                self.own_queue
-                    .pop_front()
-                    .or_else(|| self.delegated_queue.pop_front())
-            } else {
-                // Single logical FIFO: pick whichever queued earlier.
-                match (self.own_queue.front(), self.delegated_queue.front()) {
-                    (Some(a), Some(b)) => {
-                        if a.0.submitted_at <= b.0.submitted_at {
-                            self.own_queue.pop_front()
-                        } else {
-                            self.delegated_queue.pop_front()
-                        }
+    fn pop_next(&mut self) -> Option<(Request, ExecKind)> {
+        if self.prioritize_own {
+            self.own_queue
+                .pop_front()
+                .or_else(|| self.delegated_queue.pop_front())
+        } else {
+            // Single logical FIFO: pick whichever queued earlier.
+            match (self.own_queue.front(), self.delegated_queue.front()) {
+                (Some(a), Some(b)) => {
+                    if a.0.submitted_at <= b.0.submitted_at {
+                        self.own_queue.pop_front()
+                    } else {
+                        self.delegated_queue.pop_front()
                     }
-                    (Some(_), None) => self.own_queue.pop_front(),
-                    (None, Some(_)) => self.delegated_queue.pop_front(),
-                    (None, None) => None,
                 }
-            };
-            let Some((req, kind)) = next else { break };
+                (Some(_), None) => self.own_queue.pop_front(),
+                (None, Some(_)) => self.delegated_queue.pop_front(),
+                (None, None) => None,
+            }
+        }
+    }
+
+    fn phase_count(&self, phase: Phase) -> usize {
+        self.running.iter().filter(|s| s.phase == phase).count()
+    }
+
+    /// Fill free slots from the queues. Unified mode gates on `max_batch`;
+    /// split mode first promotes parked sequences into freed decode slots,
+    /// then admits new prefill work under the prefill cap.
+    fn admit(&mut self, now: Time) {
+        if let Some(cap) = self.prefill_cap {
+            while self.phase_count(Phase::Decode) < self.profile.max_batch {
+                let Some(slot) = self.decode_wait.pop_front() else { break };
+                self.running.push(slot);
+            }
+            while self.phase_count(Phase::Prefill) < cap {
+                let Some((req, kind)) = self.pop_next() else { break };
+                let remaining = req.prompt_tokens.max(1) as f64;
+                self.running.push(Slot {
+                    req,
+                    kind,
+                    phase: Phase::Prefill,
+                    remaining,
+                    started_at: now,
+                    first_token_at: None,
+                });
+            }
+            return;
+        }
+        while self.running.len() < self.profile.max_batch {
+            let Some((req, kind)) = self.pop_next() else { break };
             let remaining = req.prompt_tokens.max(1) as f64;
             self.running.push(Slot {
                 req,
@@ -165,6 +220,7 @@ impl SimBackend {
                 phase: Phase::Prefill,
                 remaining,
                 started_at: now,
+                first_token_at: None,
             });
         }
     }
@@ -181,6 +237,7 @@ impl SimBackend {
             if dt > 0.0 {
                 let rates = self.rates();
                 let mut finished = Vec::new();
+                let mut transitioned = Vec::new();
                 for (i, s) in self.running.iter_mut().enumerate() {
                     let r = match s.phase {
                         Phase::Prefill => rates.0,
@@ -198,22 +255,68 @@ impl SimBackend {
                             Phase::Prefill => {
                                 s.phase = Phase::Decode;
                                 s.remaining = s.req.output_tokens.max(1) as f64;
+                                s.first_token_at = Some(boundary);
+                                transitioned.push(i);
                             }
                             Phase::Decode => finished.push(i),
                         }
                     }
                 }
-                // Remove finished (reverse order keeps indices valid).
-                for &i in finished.iter().rev() {
-                    let s = self.running.swap_remove(i);
-                    self.done.push(Completion {
-                        request: s.req,
-                        kind: s.kind,
-                        finished_at: boundary,
-                        started_at: s.started_at,
-                    });
+                // Split mode: the decode pool is KV-capped at `max_batch`.
+                // If this boundary's transitions overflow it (net of the
+                // decode slots freed by `finished`), park the newest
+                // transitions — KV already materialized, no progress until
+                // a decode slot frees.
+                let mut parked = Vec::new();
+                if self.prefill_cap.is_some() {
+                    let decoding = self.phase_count(Phase::Decode)
+                        - finished.len();
+                    // A set_slots shrink can leave decode transiently
+                    // over-cap (never evicted); only this boundary's own
+                    // transitions are parkable.
+                    let excess = decoding
+                        .saturating_sub(self.profile.max_batch)
+                        .min(transitioned.len());
+                    if excess > 0 {
+                        parked = transitioned.split_off(transitioned.len() - excess);
+                    }
                 }
-                if !finished.is_empty() {
+                // Remove finished + parked (descending order keeps indices
+                // valid across swap_remove).
+                let mut removals: Vec<(usize, bool)> = finished
+                    .iter()
+                    .map(|&i| (i, true))
+                    .chain(parked.iter().map(|&i| (i, false)))
+                    .collect();
+                removals.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+                let mut newly_parked = Vec::new();
+                for (i, is_done) in removals {
+                    let s = self.running.swap_remove(i);
+                    if is_done {
+                        self.done.push(Completion {
+                            request: s.req,
+                            kind: s.kind,
+                            finished_at: boundary,
+                            started_at: s.started_at,
+                            first_token_at: s.first_token_at,
+                        });
+                    } else {
+                        newly_parked.push(s);
+                    }
+                }
+                // Descending removal reversed the parked order; restore
+                // ascending (FIFO) before queueing.
+                for s in newly_parked.into_iter().rev() {
+                    self.decode_wait.push_back(s);
+                }
+                let refill = if self.prefill_cap.is_some() {
+                    // Transitions free prefill slots too in split mode.
+                    !finished.is_empty() || !transitioned.is_empty()
+                        || !parked.is_empty()
+                } else {
+                    !finished.is_empty()
+                };
+                if refill {
                     self.admit(boundary);
                 }
             }
@@ -247,7 +350,9 @@ impl Backend for SimBackend {
     }
 
     fn queue_len(&self) -> usize {
-        self.own_queue.len() + self.delegated_queue.len()
+        // Parked post-prefill sequences count as waiting work (split mode
+        // only; the deque is always empty in unified mode).
+        self.own_queue.len() + self.delegated_queue.len() + self.decode_wait.len()
     }
 
     fn running_len(&self) -> usize {
@@ -289,6 +394,32 @@ impl Backend for SimBackend {
         self.profile.max_batch = slots;
         self.admit(now.max(self.last_settled));
     }
+
+    fn prefill_slots(&self) -> usize {
+        self.prefill_cap.unwrap_or(usize::MAX)
+    }
+
+    /// Second capacity lever (streaming mode): settle, move the prefill
+    /// cap — switching split-pool admission on if it wasn't — and admit
+    /// newly-allowed prefill work immediately. Like `set_slots`, a shrink
+    /// never interrupts sequences already prefilling.
+    fn set_prefill_slots(&mut self, slots: usize, now: Time) {
+        let slots = slots.max(1);
+        if self.prefill_cap == Some(slots) {
+            return;
+        }
+        self.settle(now.max(self.last_settled));
+        self.prefill_cap = Some(slots);
+        self.admit(now.max(self.last_settled));
+    }
+
+    fn prefill_running(&self) -> usize {
+        self.phase_count(Phase::Prefill)
+    }
+
+    fn decode_running(&self) -> usize {
+        self.phase_count(Phase::Decode)
+    }
 }
 
 #[cfg(test)]
@@ -305,6 +436,8 @@ mod tests {
             slo_deadline: 1e9,
             synthetic: false,
             payload: vec![],
+            session: 0,
+            ttft_deadline: f64::INFINITY,
         }
     }
 
@@ -315,6 +448,7 @@ mod tests {
             max_agg_decode_tok_s: agg,
             max_batch,
             quality: 0.7,
+            kv_gb_per_seq: 0.5,
         }
     }
 
@@ -477,6 +611,120 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn first_token_stamped_at_prefill_boundary() {
+        // prefill 100 tok @ 1000 tok/s = 0.1s; decode 50 @ 10 = 5s more.
+        let mut b = SimBackend::new(profile(10.0, 100.0, 1000.0, 4));
+        b.submit(req(0, 100, 50, 0.0), ExecKind::Local, 0.0);
+        let done = b.advance(10.0);
+        assert_eq!(done.len(), 1);
+        let ft = done[0].first_token_at.expect("first token stamped");
+        assert!((ft - 0.1).abs() < 1e-6, "first token at {ft}");
+        assert!((done[0].finished_at - 5.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn split_mode_sells_prefill_while_decode_full() {
+        // Decode pool of 1 (max_batch), prefill pool of 2. With one
+        // sequence decoding for a long time, new work must still prefill.
+        let mut b = SimBackend::new(profile(10.0, 1e9, 1000.0, 1))
+            .with_split_pools(2);
+        b.submit(req(0, 100, 1000, 0.0), ExecKind::Local, 0.0);
+        b.advance(1.0); // seq 0 now decoding (prefill took 0.1s)
+        assert_eq!(b.decode_running(), 1);
+        b.submit(req(1, 500, 10, 1.0), ExecKind::Local, 1.0);
+        b.submit(req(2, 500, 10, 1.0), ExecKind::Local, 1.0);
+        // Both admitted straight into prefill despite decode being full —
+        // the unified gate would have queued them.
+        assert_eq!(b.prefill_running(), 2);
+        assert_eq!(b.decode_running(), 1);
+        // They finish prefill (shared 1000 tok/s → 1s for 2x500) and park.
+        let done = b.advance(3.0);
+        assert!(done.is_empty());
+        assert_eq!(b.decode_running(), 1, "decode cap respected");
+        assert_eq!(b.queue_len(), 2, "parked sequences count as waiting");
+        // Their first token is already stamped (produced by prefill).
+        let done = b.advance(200.0);
+        assert_eq!(done.len(), 3);
+        for c in &done {
+            assert!(c.first_token_at.is_some());
+        }
+    }
+
+    #[test]
+    fn split_mode_decode_cap_never_exceeded_property() {
+        // Property sweep (satellite: decode-slot admission never exceeds
+        // the profile's KV-memory cap): drive a split backend with a
+        // deterministic pseudo-random arrival pattern and check the decode
+        // invariant at every backend event.
+        let mut rng = crate::util::rng::Rng::new(0xDECODE);
+        for case in 0..20u64 {
+            let max_batch = 1 + (case % 4) as usize;
+            let prefill_slots = 1 + (case % 3) as usize;
+            let mut b = SimBackend::new(profile(8.0, 40.0, 600.0, max_batch))
+                .with_split_pools(prefill_slots);
+            let mut t = 0.0;
+            let mut pending = 40u64;
+            let mut seq = 0u64;
+            while pending > 0 || b.running_len() > 0 || b.queue_len() > 0 {
+                if pending > 0 {
+                    let prompt = 20 + (rng.below(200) as u32);
+                    let output = 10 + (rng.below(80) as u32);
+                    b.submit(req(seq, prompt, output, t), ExecKind::Local, t);
+                    seq += 1;
+                    pending -= 1;
+                }
+                assert!(
+                    b.decode_running() <= max_batch,
+                    "decode pool {} exceeds KV cap {} (case {case})",
+                    b.decode_running(),
+                    max_batch
+                );
+                assert!(
+                    b.prefill_running() <= prefill_slots,
+                    "prefill pool over cap (case {case})"
+                );
+                t = match b.next_event() {
+                    Some(next) => next.max(t + 0.05),
+                    None => t + 0.05,
+                };
+                b.advance(t);
+                assert!(b.decode_running() <= max_batch);
+                if t > 10_000.0 {
+                    panic!("case {case} failed to drain");
+                }
+            }
+            assert_eq!(seq, 40, "all requests admitted (case {case})");
+        }
+    }
+
+    #[test]
+    fn split_mode_determinism_double_run() {
+        let run = || {
+            let mut b = SimBackend::new(profile(7.0, 23.0, 400.0, 3))
+                .with_split_pools(2);
+            for i in 0..20 {
+                b.submit(
+                    req(i, 17 + (i as u32 * 13) % 97, 29 + (i as u32 * 7) % 61,
+                        i as f64 * 0.37),
+                    if i % 3 == 0 { ExecKind::Delegated } else { ExecKind::Local },
+                    i as f64 * 0.37,
+                );
+            }
+            b.advance(500.0)
+                .iter()
+                .map(|c| {
+                    (
+                        c.request.id.seq,
+                        (c.finished_at * 1e9) as i64,
+                        (c.first_token_at.unwrap() * 1e9) as i64,
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

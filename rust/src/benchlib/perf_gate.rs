@@ -352,6 +352,27 @@ mod tests {
     }
 
     #[test]
+    fn new_report_sections_are_ignored_not_failed() {
+        // BENCH artifacts grow new top-level sections over time (e.g.
+        // geo_scale's "streaming" block): the gate keys on the `runs`
+        // array and its named metrics only, so unknown sections on either
+        // side are inert — never a failure, never a comparison.
+        let mut base = report(&[(50, "delta", 1000.0, 500.0)]);
+        if let Json::Obj(o) = &mut base {
+            o.insert("elastic".to_string(), Json::obj(vec![]));
+        }
+        let mut cur = report(&[(50, "delta", 990.0, 500.0)]);
+        if let Json::Obj(o) = &mut cur {
+            o.insert(
+                "streaming".to_string(),
+                Json::obj(vec![("kv_bytes", Json::num(1e9))]),
+            );
+        }
+        let rep = compare(&base, &cur, 0.2);
+        assert!(rep.passed(), "new section keys tripped the gate: {rep:?}");
+    }
+
+    #[test]
     fn bootstrap_wins_over_reference_when_both_set() {
         // A placeholder that also claims to be a reference is still a
         // placeholder: nothing to compare against.

@@ -145,6 +145,14 @@ pub struct CapacityConfig {
     /// Credits burned per node-hour while a standby replica sits offline
     /// (the cheap half of the commitment economics).
     pub standby_cost_per_hour: f64,
+    /// Scale the *prefill* admission pool independently of the unified /
+    /// decode slot cap (split-pool backends only — see
+    /// [`crate::backend::Backend::set_prefill_slots`] and the `streaming`
+    /// config block). The prefill lever moves within the same
+    /// `[min_slots, max_slots]` commitment range but is driven by
+    /// prefill-pool occupancy, so a compute-bound prefill wave grows
+    /// prefill slots without inflating the KV-memory-bound decode pool.
+    pub scale_prefill: bool,
 }
 
 impl Default for CapacityConfig {
@@ -162,6 +170,7 @@ impl Default for CapacityConfig {
             eval_every: 5.0,
             online_cost_per_hour: 0.0,
             standby_cost_per_hour: 0.0,
+            scale_prefill: false,
         }
     }
 }
@@ -187,15 +196,23 @@ impl CapacityConfig {
         if self.slot_step == 0 {
             return Err("capacity.slot_step must be >= 1".to_string());
         }
+        if self.scale_prefill && !self.scales_slots() {
+            return Err(
+                "capacity.scale_prefill needs the slot lever: give \
+                 min_slots/max_slots"
+                    .to_string(),
+            );
+        }
         if self.policy == CapacityPolicyKind::Static
             && (self.standby > 0
                 || self.online_cost_per_hour > 0.0
-                || self.standby_cost_per_hour > 0.0)
+                || self.standby_cost_per_hour > 0.0
+                || self.scale_prefill)
         {
             return Err(format!(
                 "a static capacity declaration is inert (no controller \
-                 runs): standby ({}) and holding costs ({}/{}) require \
-                 policy \"reactive\"",
+                 runs): standby ({}), holding costs ({}/{}) and \
+                 scale_prefill require policy \"reactive\"",
                 self.standby,
                 self.online_cost_per_hour,
                 self.standby_cost_per_hour
@@ -291,6 +308,10 @@ pub struct GroupSignals {
     /// `f64::INFINITY` in flat / single-region worlds: there is no remote
     /// capacity to lean on, so local standbys are the only lever.
     pub remote_latency: f64,
+    /// Mean prefill-pool occupancy over online replicas with a split
+    /// pool (0 when no replica runs one) — the compute-bound half of the
+    /// pressure picture, driving the independent prefill lever.
+    pub mean_prefill_util: f64,
 }
 
 /// One replica's locally observable state, as gathered at evaluation time.
@@ -305,6 +326,10 @@ pub struct MemberState {
     pub queue_len: usize,
     /// Current backend admission cap.
     pub slots: usize,
+    /// Current prefill-pool cap (0 = unified admission, no split pool).
+    pub prefill_slots: usize,
+    /// Prefill-pool occupancy in [0, 1] (0 without a split pool).
+    pub prefill_util: f64,
 }
 
 /// A group's commitment-scaling policy: how the declared range is worked,
@@ -318,6 +343,19 @@ pub trait CapacityPolicy: std::fmt::Debug {
     /// `current` slots. Return `current` to hold. Only called when the
     /// group's slot lever is enabled.
     fn desired_slots(
+        &self,
+        _cfg: &CapacityConfig,
+        _signals: &GroupSignals,
+        current: usize,
+    ) -> usize {
+        current
+    }
+
+    /// Desired *prefill-pool* cap for one online replica currently at
+    /// `current` prefill slots. Return `current` to hold. Only called
+    /// when [`CapacityConfig::scale_prefill`] is set and the replica
+    /// runs a split pool (`MemberState::prefill_slots > 0`).
+    fn desired_prefill_slots(
         &self,
         _cfg: &CapacityConfig,
         _signals: &GroupSignals,
@@ -380,6 +418,24 @@ impl CapacityPolicy for ReactiveCapacity {
         }
     }
 
+    fn desired_prefill_slots(
+        &self,
+        cfg: &CapacityConfig,
+        s: &GroupSignals,
+        current: usize,
+    ) -> usize {
+        // Same thresholds as the unified lever, but driven by the
+        // prefill pool's own occupancy — the two pools move
+        // independently.
+        if s.mean_prefill_util >= cfg.scale_up_util {
+            current.saturating_add(cfg.slot_step).min(cfg.max_slots)
+        } else if s.mean_prefill_util <= cfg.scale_down_util {
+            current.saturating_sub(cfg.slot_step).max(cfg.min_slots)
+        } else {
+            current
+        }
+    }
+
     fn replica_delta(&self, cfg: &CapacityConfig, s: &GroupSignals) -> i32 {
         let slo_missing = s.slo_pressure > 1.0 - cfg.slo_target;
         let remote_is_far = s.remote_latency > CHEAP_REMOTE_LATENCY;
@@ -406,6 +462,9 @@ impl CapacityPolicy for ReactiveCapacity {
 pub enum CapacityAction {
     /// Set one online replica's backend admission cap.
     SetSlots { node: usize, slots: usize },
+    /// Set one online replica's prefill-pool cap (split-pool backends;
+    /// `CapacityConfig::scale_prefill`).
+    SetPrefillSlots { node: usize, slots: usize },
     /// Bring one standby replica online (a `Join`).
     Activate { node: usize },
     /// Take one idle elastic replica offline (a `Leave`).
@@ -420,6 +479,7 @@ impl CapacityAction {
     pub fn node(&self) -> usize {
         match *self {
             CapacityAction::SetSlots { node, .. }
+            | CapacityAction::SetPrefillSlots { node, .. }
             | CapacityAction::Activate { node }
             | CapacityAction::Retire { node }
             | CapacityAction::Charge { node, .. } => node,
@@ -430,6 +490,7 @@ impl CapacityAction {
     pub fn kind_name(&self) -> &'static str {
         match self {
             CapacityAction::SetSlots { .. } => "set_slots",
+            CapacityAction::SetPrefillSlots { .. } => "set_prefill_slots",
             CapacityAction::Activate { .. } => "activate",
             CapacityAction::Retire { .. } => "retire",
             CapacityAction::Charge { .. } => "charge",
@@ -440,7 +501,8 @@ impl CapacityAction {
     /// count for `SetSlots`, the charged amount for `Charge`, 0 otherwise.
     pub fn detail(&self) -> u64 {
         match *self {
-            CapacityAction::SetSlots { slots, .. } => slots as u64,
+            CapacityAction::SetSlots { slots, .. }
+            | CapacityAction::SetPrefillSlots { slots, .. } => slots as u64,
             CapacityAction::Charge { amount, .. } => amount,
             CapacityAction::Activate { .. } | CapacityAction::Retire { .. } => 0,
         }
@@ -564,6 +626,14 @@ impl GroupController {
             online.iter().map(|s| s.utilization).sum::<f64>()
                 / online.len() as f64
         };
+        let split: Vec<&&MemberState> =
+            online.iter().filter(|s| s.prefill_slots > 0).collect();
+        let mean_prefill_util = if split.is_empty() {
+            0.0
+        } else {
+            split.iter().map(|s| s.prefill_util).sum::<f64>()
+                / split.len() as f64
+        };
         let signals = GroupSignals {
             mean_util,
             queued: online.iter().map(|s| s.queue_len).sum(),
@@ -574,6 +644,7 @@ impl GroupController {
                 || online.iter().all(|s| s.slots >= cfg.max_slots),
             slo_pressure,
             remote_latency,
+            mean_prefill_util,
         };
 
         // 3. Scale levers, gated by the cooldown.
@@ -593,6 +664,19 @@ impl GroupController {
                         slots: want,
                     });
                     scaled = true;
+                }
+                if cfg.scale_prefill && st.prefill_slots > 0 {
+                    let want = self
+                        .policy
+                        .desired_prefill_slots(&cfg, &signals, st.prefill_slots)
+                        .clamp(cfg.min_slots, cfg.max_slots);
+                    if want != st.prefill_slots {
+                        actions.push(CapacityAction::SetPrefillSlots {
+                            node: st.node,
+                            slots: want,
+                        });
+                        scaled = true;
+                    }
                 }
             }
         }
@@ -649,7 +733,15 @@ mod tests {
     }
 
     fn member(node: usize, online: bool, util: f64, slots: usize) -> MemberState {
-        MemberState { node, online, utilization: util, queue_len: 0, slots }
+        MemberState {
+            node,
+            online,
+            utilization: util,
+            queue_len: 0,
+            slots,
+            prefill_slots: 0,
+            prefill_util: 0.0,
+        }
     }
 
     fn signals(util: f64) -> GroupSignals {
@@ -662,6 +754,7 @@ mod tests {
             slots_maxed: true,
             slo_pressure: 0.0,
             remote_latency: 0.08,
+            mean_prefill_util: 0.0,
         }
     }
 
@@ -679,6 +772,12 @@ mod tests {
         assert!(bad(&|c| c.slot_step = 0));
         // Standbys behind a static declaration could never activate.
         assert!(bad(&|c| c.policy = CapacityPolicyKind::Static));
+        // The prefill lever needs the slot range to move within.
+        assert!(bad(&|c| {
+            c.min_slots = 0;
+            c.max_slots = 0;
+            c.scale_prefill = true;
+        }));
         assert!(bad(&|c| c.scale_down_util = 0.9)); // down >= up
         assert!(bad(&|c| c.scale_up_util = f64::NAN));
         assert!(bad(&|c| c.slo_target = 1.5));
@@ -825,6 +924,57 @@ mod tests {
         ];
         let a = c.evaluate(&hot_with_headroom, 0.0, 0.08, 10.0);
         assert_eq!(a, vec![CapacityAction::SetSlots { node: 1, slots: 6 }]);
+    }
+
+    #[test]
+    fn prefill_lever_moves_independently_of_the_unified_cap() {
+        let r = ReactiveCapacity;
+        let mut c = cfg();
+        c.scale_prefill = true;
+        assert!(c.check().is_ok());
+        // Prefill pressure grows the prefill pool even while overall
+        // utilization sits in-band (and vice versa).
+        let mut s = signals(0.5);
+        s.mean_prefill_util = 0.95;
+        assert_eq!(r.desired_slots(&c, &s, 4), 4);
+        assert_eq!(r.desired_prefill_slots(&c, &s, 4), 6);
+        s.mean_prefill_util = 0.1;
+        assert_eq!(r.desired_prefill_slots(&c, &s, 4), 2);
+        s.mean_prefill_util = 0.5;
+        assert_eq!(r.desired_prefill_slots(&c, &s, 4), 4);
+    }
+
+    #[test]
+    fn controller_emits_set_prefill_slots_for_split_pool_replicas() {
+        let mut c = GroupController::new(CapacityGroupSpec {
+            label: "us/elastic".into(),
+            region: 0,
+            members: vec![1],
+            standby: vec![2, 3],
+            cfg: CapacityConfig { scale_prefill: true, ..cfg() },
+        });
+        // Replica 1 runs a split pool under prefill pressure; overall
+        // utilization is in-band so the unified cap holds.
+        let mut st = member(1, true, 0.5, 4);
+        st.prefill_slots = 4;
+        st.prefill_util = 1.0;
+        let states =
+            [st, member(2, false, 0.0, 4), member(3, false, 0.0, 4)];
+        let a = c.evaluate(&states, 0.0, 0.08, 10.0);
+        assert_eq!(
+            a,
+            vec![CapacityAction::SetPrefillSlots { node: 1, slots: 6 }]
+        );
+        // A unified replica (prefill_slots = 0) never sees the action.
+        let mut c2 = GroupController::new(CapacityGroupSpec {
+            label: "us/elastic".into(),
+            region: 0,
+            members: vec![1],
+            standby: vec![],
+            cfg: CapacityConfig { scale_prefill: true, ..cfg() },
+        });
+        let a = c2.evaluate(&[member(1, true, 0.5, 4)], 0.0, 0.08, 10.0);
+        assert!(a.is_empty());
     }
 
     #[test]

@@ -30,10 +30,13 @@ use crate::policy::{
 use crate::reputation::DefenseConfig;
 use crate::schedulers::Strategy;
 use crate::sim::{LedgerMode, NodeSetup, WorldConfig};
+use crate::streaming::StreamingConfig;
 use crate::topology::{LinkChange, LinkProfile, Topology};
 use crate::types::{NodeId, CREDIT};
 use crate::util::json::Json;
-use crate::workload::{diurnal_phases, Generator, LengthDist, Phase};
+use crate::workload::{
+    diurnal_phases, Generator, LengthDist, Phase, SessionProfile,
+};
 
 #[derive(Debug, thiserror::Error)]
 pub enum ConfigError {
@@ -197,7 +200,7 @@ fn parse_link_change(j: &Json) -> Result<LinkChange, ConfigError> {
     match j.get("change").as_str().unwrap_or("") {
         "partition" => Ok(LinkChange::Partition),
         "heal" => Ok(LinkChange::Heal),
-        "degrade" => {
+        kind @ ("degrade" | "degrade_one_way") => {
             let latency_factor =
                 j.get("latency_factor").as_f64().unwrap_or(1.0);
             let bandwidth_factor =
@@ -205,10 +208,20 @@ fn parse_link_change(j: &Json) -> Result<LinkChange, ConfigError> {
             if !(latency_factor > 0.0 && bandwidth_factor > 0.0) {
                 return Err(bad("degrade factors must be > 0"));
             }
-            Ok(LinkChange::Degrade { latency_factor, bandwidth_factor })
+            if kind == "degrade_one_way" {
+                // Applies only to the a -> b direction (one-way congestion);
+                // the return path keeps its pristine profile.
+                Ok(LinkChange::DegradeDirectional {
+                    latency_factor,
+                    bandwidth_factor,
+                })
+            } else {
+                Ok(LinkChange::Degrade { latency_factor, bandwidth_factor })
+            }
         }
         other => Err(bad(format!(
-            "unknown link change '{other}' (partition|heal|degrade)"
+            "unknown link change '{other}' \
+             (partition|heal|degrade|degrade_one_way)"
         ))),
     }
 }
@@ -350,7 +363,8 @@ fn parse_topology(
 /// * `"capacity": { "policy": "reactive"|"static", "standby": K,
 ///   "min_slots"/"max_slots"/"slot_step", "scale_up_util"/
 ///   "scale_down_util"/"slo_target", "cooldown", "eval_every",
-///   "online_cost_per_hour"/"standby_cost_per_hour" }` — the group's
+///   "online_cost_per_hour"/"standby_cost_per_hour", "scale_prefill" }`
+///   — the group's
 ///   elastic resource commitment (see [`crate::capacity`]). `standby: K`
 ///   stamps K extra copies of the node template that start offline behind
 ///   the group; a `reactive` policy autoscales them (and the members'
@@ -394,7 +408,7 @@ fn expand_fleet(
             }
         };
         template.insert("region".to_string(), Json::str(region));
-        for key in ["schedule", "diurnal", "lengths"] {
+        for key in ["schedule", "diurnal", "lengths", "sessions"] {
             if !g.get(key).is_null() {
                 template.insert(key.to_string(), g.get(key).clone());
             }
@@ -586,6 +600,10 @@ fn parse_capacity(
             "standby_cost_per_hour",
             d.standby_cost_per_hour,
         )?,
+        scale_prefill: j
+            .get("scale_prefill")
+            .as_bool()
+            .unwrap_or(d.scale_prefill),
     };
     cfg.check()
         .map_err(|e| bad(format!("fleet group {gi}: {e}")))?;
@@ -793,6 +811,82 @@ fn parse_lengths(j: &Json) -> LengthDist {
     }
 }
 
+/// Parse a workload group's `"sessions"` block (all keys optional):
+///
+/// ```json
+/// "sessions": {
+///   "turns_mean": 3.0,
+///   "max_turns": 12,
+///   "think_mean": 20.0,
+///   "ttft_scale": 3.0,
+///   "ttft_floor": 2.0
+/// }
+/// ```
+///
+/// Presence of the block (even empty) switches the group's generator to
+/// multi-turn session traces with per-turn TTFT deadlines
+/// (`workload::SessionProfile`).
+fn parse_sessions(j: &Json) -> Result<SessionProfile, ConfigError> {
+    let d = SessionProfile::default();
+    let cfg = SessionProfile {
+        turns_mean: j.get("turns_mean").as_f64().unwrap_or(d.turns_mean),
+        max_turns: j
+            .get("max_turns")
+            .as_u64()
+            .map(|v| v as u32)
+            .unwrap_or(d.max_turns),
+        think_mean: j.get("think_mean").as_f64().unwrap_or(d.think_mean),
+        ttft_scale: j.get("ttft_scale").as_f64().unwrap_or(d.ttft_scale),
+        ttft_floor: j.get("ttft_floor").as_f64().unwrap_or(d.ttft_floor),
+    };
+    cfg.check().map_err(|e| bad(format!("sessions: {e}")))?;
+    Ok(cfg)
+}
+
+/// Parse the declarative `"streaming"` block (all keys optional):
+///
+/// ```json
+/// "streaming": {
+///   "enabled": true,
+///   "affinity_bonus": 1.0,
+///   "kv_bytes_per_token": 160000,
+///   "prefill_slots": 0,
+///   "churn_nack": true
+/// }
+/// ```
+///
+/// `enabled: false` (the default) keeps dispatch session-blind, admission
+/// unified, and the churn NACK off — pre-streaming configs replay byte
+/// for byte (`rust/tests/replay_equivalence.rs`).
+fn parse_streaming(j: &Json) -> Result<StreamingConfig, ConfigError> {
+    let d = StreamingConfig::default();
+    if j.is_null() {
+        return Ok(d);
+    }
+    let cfg = StreamingConfig {
+        enabled: j.get("enabled").as_bool().unwrap_or(d.enabled),
+        affinity_bonus: j
+            .get("affinity_bonus")
+            .as_f64()
+            .unwrap_or(d.affinity_bonus),
+        kv_bytes_per_token: j
+            .get("kv_bytes_per_token")
+            .as_f64()
+            .unwrap_or(d.kv_bytes_per_token),
+        prefill_slots: match j.get("prefill_slots") {
+            Json::Null => d.prefill_slots,
+            v => v.as_usize().ok_or_else(|| {
+                bad("streaming.prefill_slots must be a non-negative integer")
+            })?,
+        },
+        churn_nack: j.get("churn_nack").as_bool().unwrap_or(d.churn_nack),
+    };
+    // Reject bad values with Err here rather than letting
+    // `StreamingConfig::validate` abort the process on malformed input.
+    cfg.check().map_err(|e| bad(format!("streaming: {e}")))?;
+    Ok(cfg)
+}
+
 fn parse_system(j: &Json) -> SystemPolicy {
     let d = SystemPolicy::default();
     SystemPolicy {
@@ -877,6 +971,7 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
         parse_latency_estimation(j.get("latency_estimation"))?;
     let observability = parse_observability(j.get("observability"))?;
     let defenses = parse_defenses(j.get("defenses"))?;
+    let streaming = parse_streaming(j.get("streaming"))?;
     // Capacity groups: resolve region names against the built topology
     // (a fleet block implies a topology block, so it is always present
     // and already validated here).
@@ -927,6 +1022,10 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
                     .as_usize()
                     .ok_or_else(|| bad("profile.max_batch"))?,
                 quality: p.get("quality").as_f64().unwrap_or(0.7),
+                kv_gb_per_seq: p
+                    .get("kv_gb_per_seq")
+                    .as_f64()
+                    .unwrap_or(0.5),
             }
         };
         // Participation behaviour (per-node "participation" key; fleet
@@ -1000,6 +1099,10 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
                 generator =
                     generator.with_lengths(parse_lengths(nj.get("lengths")));
             }
+            if !nj.get("sessions").is_null() {
+                generator = generator
+                    .with_sessions(parse_sessions(nj.get("sessions"))?);
+            }
             setup = setup.with_generator(generator);
         }
         if nj.get("start_offline").as_bool().unwrap_or(false) {
@@ -1020,6 +1123,7 @@ pub fn parse_experiment(text: &str) -> Result<Experiment, ConfigError> {
             latency_estimation,
             observability,
             defenses,
+            streaming,
             churn: churn.iter().map(|c| (c.node, c.at, c.join)).collect(),
             capacity,
             ..Default::default()
@@ -1432,6 +1536,118 @@ mod tests {
                 "accepted bad defenses block {block}"
             );
         }
+    }
+
+    #[test]
+    fn parses_streaming_block() {
+        let e = parse_experiment(
+            r#"{"streaming": { "enabled": true, "affinity_bonus": 0.9,
+                "kv_bytes_per_token": 200000, "prefill_slots": 4,
+                "churn_nack": false },
+                "nodes": [{}]}"#,
+        )
+        .unwrap();
+        let s = e.world.streaming;
+        assert!(s.enabled);
+        assert!((s.affinity_bonus - 0.9).abs() < 1e-12);
+        assert!((s.kv_bytes_per_token - 200_000.0).abs() < 1e-6);
+        assert_eq!(s.prefill_slots, 4);
+        assert!(!s.churn_nack);
+        // Absent block -> defaults (streaming off, replay-identical).
+        let e = parse_experiment(r#"{"nodes": [{}]}"#).unwrap();
+        assert_eq!(e.world.streaming, StreamingConfig::default());
+        assert!(!e.world.streaming.enabled);
+    }
+
+    #[test]
+    fn rejects_bad_streaming() {
+        for block in [
+            r#"{"enabled": true, "affinity_bonus": 1.5}"#,
+            r#"{"enabled": true, "affinity_bonus": -0.1}"#,
+            r#"{"enabled": true, "kv_bytes_per_token": -1}"#,
+            r#"{"enabled": true, "prefill_slots": -2}"#,
+            r#"{"enabled": true, "prefill_slots": "many"}"#,
+            // Live knobs on a disabled block are a config smell.
+            r#"{"enabled": false, "prefill_slots": 4}"#,
+            r#"{"affinity_bonus": 0.5}"#,
+        ] {
+            let text =
+                format!(r#"{{"streaming": {block}, "nodes": [{{}}]}}"#);
+            assert!(
+                parse_experiment(&text).is_err(),
+                "accepted bad streaming block {block}"
+            );
+        }
+    }
+
+    #[test]
+    fn sessions_block_arms_the_session_generator() {
+        // Fleet groups carry the key into every stamped copy; explicit
+        // nodes take it directly.
+        let e = parse_experiment(
+            r#"{"topology": {"regions": ["us"],
+                "fleet": [
+                  { "region": "us", "count": 2, "policy": "requester_only",
+                    "schedule": [ {"from": 0, "to": 100,
+                                   "inter_arrival": 5} ],
+                    "sessions": { "turns_mean": 4, "max_turns": 6,
+                                  "think_mean": 15, "ttft_scale": 2.5,
+                                  "ttft_floor": 1.5 } },
+                  { "region": "us", "count": 1,
+                    "schedule": [ {"from": 0, "to": 100,
+                                   "inter_arrival": 5} ] }
+                ]}}"#,
+        )
+        .unwrap();
+        let gen = e.setups[0].generator.as_ref().unwrap();
+        let sp = gen.sessions.expect("sessions armed");
+        assert!((sp.turns_mean - 4.0).abs() < 1e-12);
+        assert_eq!(sp.max_turns, 6);
+        assert!((sp.think_mean - 15.0).abs() < 1e-12);
+        assert!((sp.ttft_scale - 2.5).abs() < 1e-12);
+        assert!((sp.ttft_floor - 1.5).abs() < 1e-12);
+        assert!(e.setups[1].generator.as_ref().unwrap().sessions.is_some());
+        // No sessions key -> classic point-event generator.
+        assert!(e.setups[2].generator.as_ref().unwrap().sessions.is_none());
+        // Bad values are rejected at parse time, not at world build.
+        assert!(parse_experiment(
+            r#"{"nodes": [{ "schedule": [{"from": 0, "to": 10,
+                                          "inter_arrival": 1}],
+                            "sessions": { "turns_mean": 0 } }]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_degrade_one_way_link_event() {
+        let e = parse_experiment(
+            r#"{"topology": {"regions": ["us", "eu"],
+                "events": [
+                  { "at": 50, "a": "us", "b": "eu",
+                    "change": "degrade_one_way",
+                    "latency_factor": 4, "bandwidth_factor": 0.25 }
+                ]},
+                "nodes": [{ "region": "us" }, { "region": "eu" }]}"#,
+        )
+        .unwrap();
+        let topo = e.world.topology.as_ref().unwrap();
+        let ev = &topo.events()[0];
+        assert_eq!(
+            ev.change,
+            LinkChange::DegradeDirectional {
+                latency_factor: 4.0,
+                bandwidth_factor: 0.25,
+            }
+        );
+        // The shared factor validation still applies.
+        assert!(parse_experiment(
+            r#"{"topology": {"regions": ["us", "eu"],
+                "events": [{"at": 1, "a": "us", "b": "eu",
+                            "change": "degrade_one_way",
+                            "bandwidth_factor": 0}]},
+                "nodes": [{}]}"#
+        )
+        .is_err());
     }
 
     #[test]

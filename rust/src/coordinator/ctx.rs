@@ -23,6 +23,7 @@ use crate::ledger::CreditOp;
 use crate::obs::{FlightRecorder, SpanKind};
 use crate::policy::{NodePolicy, ParticipationPolicy, SystemPolicy};
 use crate::reputation::{DefenseState, RepEvent, Transition};
+use crate::streaming::StreamingConfig;
 use crate::types::{ExecKind, NodeId, Request, Time};
 use crate::util::rng::Rng;
 
@@ -69,6 +70,7 @@ pub(crate) struct Ctx<'a> {
     pub peers: &'a mut PeerScratch,
     pub obs: &'a mut FlightRecorder,
     pub defense: &'a mut DefenseState,
+    pub streaming: &'a StreamingConfig,
 }
 
 /// Stable `detail` encoding of an [`ExecKind`] for `execute_*` spans.

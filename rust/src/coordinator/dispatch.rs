@@ -63,17 +63,31 @@ struct ExecTicket {
     duel: bool,
 }
 
+/// Where a streaming session's KV cache currently lives, and how big it
+/// is. `home` is the last node that completed a turn for the session;
+/// `ctx_tokens` accumulates the turns' prompt + output tokens, sizing the
+/// `KvTransfer` a re-dispatch away from home must ship.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SessionKv {
+    pub home: NodeId,
+    pub ctx_tokens: u64,
+}
+
 /// Origin-side pending delegations + executor-side tickets.
 ///
-/// Both tables are `BTreeMap`s, not `HashMap`s: the timeout scan iterates
-/// `pending`, and a hash table's per-process iteration order would make
-/// same-tick expiries replay differently across runs (determinism contract,
+/// All three tables are `BTreeMap`s, not `HashMap`s: the timeout scan
+/// iterates `pending` and the churn NACK drains `exec_tickets`, and a hash
+/// table's per-process iteration order would make same-tick expiries (or
+/// abort sends) replay differently across runs (determinism contract,
 /// `docs/determinism.md`). `RequestId`'s derived `Ord` is
 /// `(origin, seq)` — exactly the order the scan wants.
 #[derive(Debug, Default)]
 pub(crate) struct Dispatch {
     pending: BTreeMap<RequestId, PendingDelegation>,
     exec_tickets: BTreeMap<RequestId, ExecTicket>,
+    /// Per-session KV residency (origin side; streaming only — stays
+    /// empty, and costs nothing, when the block is disabled).
+    sessions: BTreeMap<u64, SessionKv>,
 }
 
 impl Dispatch {
@@ -150,9 +164,30 @@ impl Dispatch {
             return ctx.execute_locally(req, ExecKind::Local, now);
         }
 
-        // Duel roll (§4.2): a fraction p_d of delegated requests go to two
-        // executors directly.
-        if ctx.rng.chance(ctx.system.duel_rate) && candidates >= 2 {
+        // KV affinity (streaming): a session turn prefers its KV home —
+        // the node already holding the session's cache — with probability
+        // `affinity_bonus`, skipping the duel roll (a duel would fork the
+        // stream onto a second executor and ship the KV twice). Everything
+        // here is gated on `streaming.enabled && session != 0`, so the
+        // disabled path spends exactly the classic RNG draws.
+        if ctx.streaming.enabled && req.session != 0 {
+            let home = self.sessions.get(&req.session).map(|s| s.home);
+            if let Some(home) = home {
+                if ctx.rng.chance(ctx.streaming.affinity_bonus) {
+                    if home == ctx.id {
+                        // The KV already lives on our own backend.
+                        return ctx.execute_locally(req, ExecKind::Local, now);
+                    }
+                    if ctx.snaps.contains(home) {
+                        return self.send_probe(ctx, req, home, now);
+                    }
+                    // Home died or got quarantined: fall through to a
+                    // fresh draw; the KV will have to move.
+                }
+            }
+        } else if ctx.rng.chance(ctx.system.duel_rate) && candidates >= 2 {
+            // Duel roll (§4.2): a fraction p_d of delegated requests go to
+            // two executors directly.
             return court.start_duel(ctx, &mut self.pending, req, now);
         }
 
@@ -161,6 +196,18 @@ impl Dispatch {
             ctx.stats.fallback_local += 1;
             return ctx.execute_locally(req, ExecKind::Local, now);
         };
+        self.send_probe(ctx, req, candidate, now)
+    }
+
+    /// Probe `candidate` for `req` and park the pending entry — the common
+    /// tail of the stake-draw and KV-affinity dispatch paths.
+    fn send_probe(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        req: Request,
+        candidate: NodeId,
+        now: Time,
+    ) -> Vec<Action> {
         let probe = Message::Probe {
             req_id: req.id,
             prompt_tokens: req.prompt_tokens,
@@ -187,6 +234,48 @@ impl Dispatch {
             },
         );
         vec![Action::Send { to: candidate, msg: probe }]
+    }
+
+    /// Session bookkeeping on a completed turn: the executor that just
+    /// finished now holds the (grown) KV cache. No-op outside streaming.
+    pub fn note_session_completion(
+        &mut self,
+        ctx: &Ctx<'_>,
+        req: &Request,
+        executor: NodeId,
+    ) {
+        if !ctx.streaming.enabled || req.session == 0 {
+            return;
+        }
+        let s = self
+            .sessions
+            .entry(req.session)
+            .or_insert(SessionKv { home: executor, ctx_tokens: 0 });
+        s.home = executor;
+        s.ctx_tokens += (req.prompt_tokens + req.output_tokens) as u64;
+    }
+
+    /// If delegating `req` to `executor` moves a session away from its KV
+    /// home, the size of the cache that has to travel with it.
+    fn kv_payload(
+        &self,
+        ctx: &Ctx<'_>,
+        req: &Request,
+        executor: NodeId,
+    ) -> Option<(u64, u64)> {
+        if !ctx.streaming.enabled || req.session == 0 {
+            return None;
+        }
+        let s = self.sessions.get(&req.session)?;
+        if s.home == executor || s.ctx_tokens == 0 {
+            return None;
+        }
+        let bytes =
+            (s.ctx_tokens as f64 * ctx.streaming.kv_bytes_per_token) as u64;
+        if bytes == 0 {
+            return None;
+        }
+        Some((req.session, bytes))
     }
 
     pub fn on_probe_accept(
@@ -221,10 +310,25 @@ impl Dispatch {
         // The probe round trip is a clean network RTT sample.
         ctx.feed.observe_peer_rtt(ctx.obs, ctx.view, from, rtt, now);
         ctx.obs.span(req_id, SpanKind::Delegate, ctx.id, Some(from), now, 0);
-        vec![Action::Send {
-            to: from,
-            msg: Message::Delegate { request: req, duel: false },
-        }]
+        // Streaming: dispatching a session turn away from its KV home
+        // ships the resident cache with the request. The KvTransfer's wire
+        // size includes the KV bytes, so the fabric's bandwidth model
+        // prices the move as a real queue delay — TTFT pays for blindness.
+        let msg = match self.kv_payload(ctx, &req, from) {
+            Some((session, kv_bytes)) => {
+                ctx.obs.span(
+                    req_id,
+                    SpanKind::KvTransfer,
+                    ctx.id,
+                    Some(from),
+                    now,
+                    kv_bytes,
+                );
+                Message::KvTransfer { request: req, session, kv_bytes }
+            }
+            None => Message::Delegate { request: req, duel: false },
+        };
+        vec![Action::Send { to: from, msg }]
     }
 
     pub fn on_probe_reject(
@@ -355,6 +459,7 @@ impl Dispatch {
             }],
             now,
         );
+        self.note_session_completion(ctx, &p.req, executor);
         actions.push(Action::Done(RequestRecord {
             id: p.req.id,
             origin: ctx.id,
@@ -366,8 +471,41 @@ impl Dispatch {
             completed_at: now,
             slo_deadline: p.req.slo_deadline,
             synthetic: p.req.synthetic,
+            session: p.req.session,
+            ttft_deadline: p.req.ttft_deadline,
+            first_token_at: response.first_token_at,
         }));
         actions
+    }
+
+    /// Executor-side churn NACK arrived: the executor is leaving and
+    /// aborts our in-flight delegation. An honest goodbye is not Byzantine
+    /// silence — prompt local fallback, no `RESPONSE_TIMEOUT_FACTOR` wait,
+    /// and **no** `RepEvent::Timeout` strike against the leaver.
+    pub fn on_exec_abort(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        from: NodeId,
+        req_id: RequestId,
+        now: Time,
+    ) -> Vec<Action> {
+        {
+            let Some(p) = self.pending.get(&req_id) else {
+                return vec![]; // stale (already answered / timed out)
+            };
+            let PendingState::AwaitingResponse { executor } = p.state else {
+                return vec![];
+            };
+            if executor != from {
+                return vec![];
+            }
+        }
+        let p = self.pending.remove(&req_id).expect("checked above");
+        ctx.stats.exec_aborts += 1;
+        ctx.stats.fallback_local += 1;
+        // Timeout-span detail 3 = "aborted by executor churn".
+        ctx.obs.span(req_id, SpanKind::Timeout, ctx.id, Some(from), now, 3);
+        ctx.execute_locally(p.req, ExecKind::Local, now)
     }
 
     // ---- executor side ------------------------------------------------------
@@ -462,6 +600,7 @@ impl Dispatch {
             executor: ctx.id,
             quality,
             finished_at: c.finished_at,
+            first_token_at: c.first_token_at,
             tokens: vec![],
         };
         let receipt = match ctx.defense.signing_key() {
@@ -491,6 +630,17 @@ impl Dispatch {
                 receipt,
             },
         }]
+    }
+
+    /// Drain every executor-side ticket for the churn NACK: the node is
+    /// leaving, so each delegation it still owes an answer for gets an
+    /// `ExecAbort` to its origin instead of silence. BTreeMap order keeps
+    /// the abort sequence replay-stable.
+    pub fn take_exec_tickets(&mut self) -> Vec<(RequestId, NodeId)> {
+        std::mem::take(&mut self.exec_tickets)
+            .into_iter()
+            .map(|(id, t)| (id, t.origin))
+            .collect()
     }
 
     // ---- timeouts -----------------------------------------------------------

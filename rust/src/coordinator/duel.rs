@@ -141,6 +141,9 @@ impl DuelCourt {
                 completed_at: now,
                 slo_deadline: req.slo_deadline,
                 synthetic: req.synthetic,
+                session: req.session,
+                ttft_deadline: req.ttft_deadline,
+                first_token_at: response.first_token_at,
             }));
             // Both executors get the base payment (both did the work).
             let ops = execs
@@ -166,6 +169,9 @@ impl DuelCourt {
                 completed_at: now,
                 slo_deadline: req.slo_deadline,
                 synthetic: true,
+                session: req.session,
+                ttft_deadline: req.ttft_deadline,
+                first_token_at: response.first_token_at,
             }));
         }
 
@@ -241,6 +247,8 @@ impl DuelCourt {
             slo_deadline: f64::INFINITY,
             synthetic: true,
             payload: vec![],
+            session: 0,
+            ttft_deadline: f64::INFINITY,
         };
         self.judge_tasks.insert(
             eval_req.id,
@@ -334,6 +342,9 @@ impl DuelCourt {
                 completed_at: c.finished_at,
                 slo_deadline: c.request.slo_deadline,
                 synthetic: true,
+                session: c.request.session,
+                ttft_deadline: c.request.ttft_deadline,
+                first_token_at: c.first_token_at,
             }),
         ]
     }

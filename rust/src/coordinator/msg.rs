@@ -25,6 +25,24 @@ pub enum Message {
     ProbeReject { req_id: RequestId },
     /// Forward a request for remote execution. `duel` marks duel copies.
     Delegate { request: Request, duel: bool },
+    /// Streaming re-dispatch: a session turn delegated to a node that is
+    /// not the session's KV home, shipping the resident KV cache along
+    /// with the work. Semantically a [`Message::Delegate`] whose wire cost
+    /// includes `kv_bytes` — the network fabric prices the transfer over
+    /// `Topology` bandwidth as a real queue event, which is exactly the
+    /// re-dispatch penalty KV-affine dispatch exists to avoid. Counted in
+    /// `World::kv_transfer_{count,bytes}`.
+    KvTransfer {
+        request: Request,
+        session: u64,
+        kv_bytes: u64,
+    },
+    /// Executor-side churn NACK: a leaving executor aborts its in-flight
+    /// delegations so requesters fall back locally at once instead of
+    /// waiting out the response timeout (and filing a Byzantine-grade
+    /// `RepEvent::Timeout` strike for an honest crash). Gated on
+    /// `streaming.churn_nack`.
+    ExecAbort { req_id: RequestId },
     /// The executor's answer travelling back to the originator. `receipt`
     /// is the executor's signed work receipt (`crate::crypto::Receipt`);
     /// it is `None` unless the defense layer is enabled, so the wire cost
@@ -111,6 +129,8 @@ impl Message {
             Message::ProbeAccept { .. } => "probe_accept",
             Message::ProbeReject { .. } => "probe_reject",
             Message::Delegate { .. } => "delegate",
+            Message::KvTransfer { .. } => "kv_transfer",
+            Message::ExecAbort { .. } => "exec_abort",
             Message::DelegateResponse { .. } => "delegate_response",
             Message::Gossip { .. } => "gossip",
             Message::GossipReply { .. } => "gossip_reply",
@@ -133,6 +153,12 @@ impl Message {
         match self {
             Message::Delegate { request, .. } => {
                 64 + request.payload.len() * 4 + request.prompt_tokens as usize
+            }
+            Message::KvTransfer { request, kv_bytes, .. } => {
+                // A delegate plus the session's KV cache on the wire.
+                64 + request.payload.len() * 4
+                    + request.prompt_tokens as usize
+                    + *kv_bytes as usize
             }
             Message::DelegateResponse { response, receipt, .. } => {
                 // A receipt is two ids + two timestamps + a 32-byte digest
@@ -204,6 +230,17 @@ fn request_json(r: &Request) -> Json {
             "payload",
             Json::Arr(r.payload.iter().map(|t| Json::num(*t as f64)).collect()),
         ),
+        ("session", Json::num(r.session as f64)),
+        // An infinite (absent) TTFT budget travels as null — JSON has no
+        // infinity literal.
+        (
+            "ttft_deadline",
+            if r.ttft_deadline.is_finite() {
+                Json::num(r.ttft_deadline)
+            } else {
+                Json::Null
+            },
+        ),
     ])
 }
 
@@ -221,6 +258,12 @@ fn request_from(j: &Json) -> Option<Request> {
             .iter()
             .map(|t| t.as_u64().map(|v| v as u32))
             .collect::<Option<Vec<u32>>>()?,
+        // Pre-streaming frames omit these; default to standalone.
+        session: j.get("session").as_u64().unwrap_or(0),
+        ttft_deadline: j
+            .get("ttft_deadline")
+            .as_f64()
+            .unwrap_or(f64::INFINITY),
     })
 }
 
@@ -230,6 +273,10 @@ fn response_json(r: &Response) -> Json {
         ("executor", Json::num(r.executor.0 as f64)),
         ("quality", Json::num(r.quality)),
         ("finished_at", Json::num(r.finished_at)),
+        (
+            "first_token_at",
+            r.first_token_at.map_or(Json::Null, Json::num),
+        ),
         (
             "tokens",
             Json::Arr(r.tokens.iter().map(|t| Json::num(*t as f64)).collect()),
@@ -243,6 +290,8 @@ fn response_from(j: &Json) -> Option<Response> {
         executor: NodeId(j.get("executor").as_u64()? as u32),
         quality: j.get("quality").as_f64()?,
         finished_at: j.get("finished_at").as_f64()?,
+        // Absent/null on pre-streaming frames.
+        first_token_at: j.get("first_token_at").as_f64(),
         tokens: j
             .get("tokens")
             .as_arr()?
@@ -433,6 +482,18 @@ impl Message {
                 ("request", request_json(request)),
                 ("duel", Json::Bool(*duel)),
             ]),
+            Message::KvTransfer { request, session, kv_bytes } => {
+                Json::obj(vec![
+                    ("type", Json::str("kv_transfer")),
+                    ("request", request_json(request)),
+                    ("session", Json::num(*session as f64)),
+                    ("kv_bytes", Json::num(*kv_bytes as f64)),
+                ])
+            }
+            Message::ExecAbort { req_id } => Json::obj(vec![
+                ("type", Json::str("exec_abort")),
+                ("req_id", req_id_json(req_id)),
+            ]),
             Message::DelegateResponse { response, duel, receipt } => {
                 Json::obj(vec![
                     ("type", Json::str("delegate_response")),
@@ -516,6 +577,14 @@ impl Message {
                 request: request_from(j.get("request"))?,
                 duel: j.get("duel").as_bool()?,
             }),
+            "kv_transfer" => Some(Message::KvTransfer {
+                request: request_from(j.get("request"))?,
+                session: j.get("session").as_u64()?,
+                kv_bytes: j.get("kv_bytes").as_u64()?,
+            }),
+            "exec_abort" => Some(Message::ExecAbort {
+                req_id: req_id_from(j.get("req_id"))?,
+            }),
             "delegate_response" => Some(Message::DelegateResponse {
                 response: response_from(j.get("response"))?,
                 duel: j.get("duel").as_bool()?,
@@ -567,7 +636,13 @@ mod tests {
             slo_deadline: 60.0,
             synthetic: false,
             payload: vec![1, 2, 3],
+            session: 0,
+            ttft_deadline: f64::INFINITY,
         }
+    }
+
+    fn session_req() -> Request {
+        Request { session: 7, ttft_deadline: 2.5, ..req() }
     }
 
     fn resp() -> Response {
@@ -576,6 +651,7 @@ mod tests {
             executor: NodeId(2),
             quality: 0.77,
             finished_at: 9.25,
+            first_token_at: None,
             tokens: vec![5, 6],
         }
     }
@@ -604,8 +680,20 @@ mod tests {
             Message::ProbeAccept { req_id: req().id },
             Message::ProbeReject { req_id: req().id },
             Message::Delegate { request: req(), duel: true },
+            Message::Delegate { request: session_req(), duel: false },
+            Message::KvTransfer {
+                request: session_req(),
+                session: 7,
+                kv_bytes: 64_000_000,
+            },
+            Message::ExecAbort { req_id: req().id },
             Message::DelegateResponse {
                 response: resp(),
+                duel: false,
+                receipt: None,
+            },
+            Message::DelegateResponse {
+                response: Response { first_token_at: Some(3.5), ..resp() },
                 duel: false,
                 receipt: None,
             },
@@ -728,5 +816,22 @@ mod tests {
         };
         assert_eq!(no_rep.wire_size(), 16);
         assert_eq!(with_rep.wire_size(), 16 + 8);
+    }
+
+    #[test]
+    fn kv_transfer_weighs_its_bytes() {
+        // The KV payload dominates the wire cost: re-dispatching a session
+        // is priced like a delegate plus the whole resident cache.
+        let plain = Message::Delegate { request: session_req(), duel: false };
+        let moved = Message::KvTransfer {
+            request: session_req(),
+            session: 7,
+            kv_bytes: 1_000_000,
+        };
+        assert_eq!(moved.wire_size(), plain.wire_size() + 1_000_000);
+        // Streaming fields cost nothing on existing messages: a session
+        // request weighs exactly what a standalone one does.
+        let standalone = Message::Delegate { request: req(), duel: false };
+        assert_eq!(plain.wire_size(), standalone.wire_size());
     }
 }

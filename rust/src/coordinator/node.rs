@@ -41,6 +41,7 @@ use crate::policy::{
     DefaultPolicy, NodePolicy, ParticipationPolicy, SystemPolicy,
 };
 use crate::reputation::DefenseState;
+use crate::streaming::StreamingConfig;
 use crate::types::{ExecKind, NodeId, RequestRecord, Time};
 use crate::util::rng::Rng;
 
@@ -65,6 +66,9 @@ pub struct NodeStats {
     pub rtts_rejected: u64,
     /// Piggybacked RTT rows clamped by the hearsay cap before ingestion.
     pub rtts_capped: u64,
+    /// Delegations a leaving executor NACK'd back to us (streaming churn
+    /// NACK — prompt local fallback, no reputation strike).
+    pub exec_aborts: u64,
 }
 
 pub struct Node {
@@ -97,6 +101,10 @@ pub struct Node {
     /// [`crate::reputation`]). Starts fully inert — every check is a no-op
     /// until [`set_defenses`](Node::set_defenses) arms it.
     defense: DefenseState,
+    /// Streaming-session knobs (see [`crate::streaming`]). The default is
+    /// `enabled: false` — session-blind dispatch, no churn NACK — until
+    /// [`set_streaming`](Node::set_streaming) arms it.
+    streaming: StreamingConfig,
 }
 
 impl Node {
@@ -150,6 +158,7 @@ impl Node {
             stats: NodeStats::default(),
             obs: FlightRecorder::disabled(),
             defense: DefenseState::default(),
+            streaming: StreamingConfig::default(),
         }
     }
 
@@ -212,6 +221,17 @@ impl Node {
         &self.defense
     }
 
+    /// Arm (or re-arm) this node's streaming-session behaviour (KV-affine
+    /// dispatch + churn NACK; see [`crate::streaming`]). The default
+    /// config is fully inert.
+    pub fn set_streaming(&mut self, cfg: StreamingConfig) {
+        self.streaming = cfg;
+    }
+
+    pub fn streaming(&self) -> &StreamingConfig {
+        &self.streaming
+    }
+
     // ---- locality (topology awareness) --------------------------------------
 
     /// Install this node's region and the pristine inter-region latency
@@ -265,6 +285,7 @@ impl Node {
             stats,
             obs,
             defense,
+            streaming,
             ..
         } = self;
         (
@@ -283,6 +304,7 @@ impl Node {
                 peers,
                 obs,
                 defense,
+                streaming,
             },
             dispatch,
             court,
@@ -346,6 +368,23 @@ impl Node {
             }
             Message::Delegate { request, duel } => {
                 dispatch.on_delegate(&mut ctx, from, request, duel, now)
+            }
+            Message::KvTransfer { request, session: _, kv_bytes } => {
+                // The session's KV cache traveled with the request (the
+                // fabric already priced the bytes via wire size); record
+                // the landing, then treat it as a plain delegation.
+                ctx.obs.span(
+                    request.id,
+                    SpanKind::KvTransfer,
+                    ctx.id,
+                    Some(from),
+                    now,
+                    kv_bytes,
+                );
+                dispatch.on_delegate(&mut ctx, from, request, false, now)
+            }
+            Message::ExecAbort { req_id } => {
+                dispatch.on_exec_abort(&mut ctx, from, req_id, now)
             }
             Message::DelegateResponse { response, duel, receipt } => {
                 // The executor's answer proves the path to its region is
@@ -471,6 +510,27 @@ impl Node {
         let (mut ctx, dispatch, court, _gossip) = self.split();
         let mut actions = Vec::new();
         for c in completions {
+            if let Some(t) = c.first_token_at {
+                // Purely observational streaming spans: where prefill
+                // actually began (after queueing) and when the first
+                // token came out. Replay-neutral like every span.
+                ctx.obs.span(
+                    c.request.id,
+                    SpanKind::PrefillStart,
+                    ctx.id,
+                    None,
+                    c.started_at,
+                    0,
+                );
+                ctx.obs.span(
+                    c.request.id,
+                    SpanKind::FirstToken,
+                    ctx.id,
+                    None,
+                    t,
+                    ((t - c.request.submitted_at).max(0.0) * 1e6) as u64,
+                );
+            }
             match c.kind {
                 ExecKind::Local => {
                     // Our own user's request, served locally.
@@ -482,6 +542,8 @@ impl Node {
                         c.finished_at,
                         super::ctx::exec_kind_code(ExecKind::Local),
                     );
+                    // A locally served session turn leaves its KV here.
+                    dispatch.note_session_completion(&ctx, &c.request, ctx.id);
                     actions.push(Action::Done(RequestRecord {
                         id: c.request.id,
                         origin: ctx.id,
@@ -493,6 +555,9 @@ impl Node {
                         completed_at: c.finished_at,
                         slo_deadline: c.request.slo_deadline,
                         synthetic: c.request.synthetic,
+                        session: c.request.session,
+                        ttft_deadline: c.request.ttft_deadline,
+                        first_token_at: c.first_token_at,
                     }));
                 }
                 ExecKind::Delegated | ExecKind::Duel => {
@@ -510,8 +575,21 @@ impl Node {
 
     fn on_leave(&mut self, now: Time) -> Vec<Action> {
         self.online = false;
-        let (mut ctx, _d, _c, gossip) = self.split();
-        gossip.on_leave(&mut ctx, now)
+        let (mut ctx, dispatch, _c, gossip) = self.split();
+        let mut actions = gossip.on_leave(&mut ctx, now);
+        // Churn NACK (streaming): an honest leaver owes its requesters a
+        // goodbye, not silence. NACK every delegation we still hold so
+        // origins fall back locally at once instead of waiting out the
+        // response timeout and filing a Byzantine-grade timeout strike.
+        if ctx.streaming.enabled && ctx.streaming.churn_nack {
+            for (req_id, origin) in dispatch.take_exec_tickets() {
+                actions.push(Action::Send {
+                    to: origin,
+                    msg: Message::ExecAbort { req_id },
+                });
+            }
+        }
+        actions
     }
 
     fn on_join(&mut self, now: Time) -> Vec<Action> {
@@ -563,6 +641,8 @@ pub(crate) mod testutil {
             slo_deadline: 60.0,
             synthetic: false,
             payload: vec![],
+            session: 0,
+            ttft_deadline: f64::INFINITY,
         }
     }
 }

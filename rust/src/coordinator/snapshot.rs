@@ -123,6 +123,13 @@ impl Snapshots {
         self.cache.as_ref().map_or(0, |c| c.snap.len())
     }
 
+    /// Is `n` a live, non-quarantined candidate in the current snapshot?
+    /// Used by KV-affine dispatch to decide whether a session's home node
+    /// is still worth probing (0-candidate / pre-refresh states say no).
+    pub fn contains(&self, n: NodeId) -> bool {
+        self.cache.as_ref().is_some_and(|c| c.snap.nodes().contains(&n))
+    }
+
     /// One stake-proportional draw from the prepared snapshot.
     /// Panics if no [`refresh`](Snapshots::refresh) preceded it — draws
     /// are only meaningful against a current snapshot.

@@ -200,6 +200,8 @@ mod tests {
             slo_deadline: 100.0,
             synthetic: false,
             payload: vec![],
+            session: 0,
+            ttft_deadline: f64::INFINITY,
         }
     }
 
@@ -209,6 +211,7 @@ mod tests {
             executor: NodeId(executor),
             quality,
             finished_at: at,
+            first_token_at: None,
             tokens: vec![],
         }
     }

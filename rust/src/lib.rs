@@ -179,6 +179,34 @@
 //! `benches/byzantine.rs` sweeps the Byzantine fraction and shows SLO
 //! attainment and honest-node revenue holding up with defenses on.
 //!
+//! ## Streaming sessions
+//!
+//! Requests stop being atomic point events: the [`streaming`] module's
+//! declarative `streaming` config block arms token-stream semantics end
+//! to end. [`workload::SessionProfile`] generates **multi-turn sessions**
+//! (think-time gaps, geometric turn counts) whose turns carry a TTFT
+//! deadline next to the end-to-end SLO; [`backend::SimBackend`] splits
+//! admission into **prefill slots** (compute-bound, delegable) and decode
+//! slots (KV-memory-bound, capped by
+//! [`backend::Profile::kv_gb_per_seq`]), so a node can sell prefill
+//! capacity while decode is full — and the [`capacity`] controller works
+//! the prefill pool as an independent lever (`scale_prefill`). Dispatch
+//! becomes **KV-affine**: a session turn probes the node already holding
+//! the session's KV cache with probability
+//! [`streaming::StreamingConfig::affinity_bonus`], and re-dispatching
+//! away from home ships the resident cache as a
+//! [`coordinator::Message::KvTransfer`] whose wire size rides the
+//! [`topology`] links' finite bandwidth — blindness is priced as real
+//! TTFT, counted in `World::kv_transfer_{count,bytes}`. An honest
+//! executor's Leave NACKs its in-flight delegations
+//! ([`coordinator::Message::ExecAbort`]) so requesters fall back locally
+//! at once instead of timing out and filing an undeserved
+//! `RepEvent::Timeout` strike. With `enabled: false` (the default) every
+//! hook is inert and replay fingerprints stay bit-identical
+//! (`rust/tests/replay_equivalence.rs`); `benches/geo_scale.rs` part 7
+//! compares KV-affine vs affinity-blind dispatch on TTFT attainment and
+//! KV bytes moved. See `docs/streaming.md`.
+//!
 //! ## Determinism contract
 //!
 //! Everything above is only auditable because replay is bit-exact: same
@@ -215,6 +243,7 @@ pub mod repro;
 pub mod runtime;
 pub mod schedulers;
 pub mod sim;
+pub mod streaming;
 pub mod topology;
 pub mod types;
 pub mod util;

@@ -127,6 +127,9 @@ mod tests {
             completed_at: 11.0,
             slo_deadline: 15.0,
             synthetic: false,
+            session: 0,
+            ttft_deadline: f64::INFINITY,
+            first_token_at: None,
         });
         r
     }
@@ -225,6 +228,9 @@ mod tests {
                 completed_at: if missed { 30.0 } else { 5.0 },
                 slo_deadline: 15.0,
                 synthetic: false,
+                session: 0,
+                ttft_deadline: f64::INFINITY,
+                first_token_at: None,
             });
         }
         let region = |n: u32| r.filtered(|rec| rec.origin == NodeId(n));

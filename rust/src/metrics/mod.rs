@@ -64,6 +64,20 @@ impl Recorder {
         met as f64 / total as f64
     }
 
+    /// Fraction of user requests *carrying a TTFT budget* whose first
+    /// token landed inside it (streaming sessions; see
+    /// `RequestRecord::ttft_met`). 0 when no record carries a budget.
+    pub fn ttft_attainment(&self) -> f64 {
+        let (met, total) = self
+            .user_records()
+            .filter_map(|r| r.ttft_met())
+            .fold((0usize, 0usize), |(m, t), met| (m + met as usize, t + 1));
+        if total == 0 {
+            return 0.0;
+        }
+        met as f64 / total as f64
+    }
+
     /// SLO attainment as a function of a *scale factor* on each request's
     /// deadline — the x-axis sweep of Figure 4/7 ("SLO scale").
     pub fn slo_curve(&self, scales: &[f64]) -> Vec<(f64, f64)> {
@@ -213,6 +227,9 @@ mod tests {
             completed_at: completed,
             slo_deadline: deadline,
             synthetic,
+            session: 0,
+            ttft_deadline: f64::INFINITY,
+            first_token_at: None,
         }
     }
 
@@ -230,6 +247,22 @@ mod tests {
         let r = sample();
         assert!((r.slo_attainment() - 2.0 / 3.0).abs() < 1e-12);
         assert_eq!(r.synthetic_count(), 1);
+    }
+
+    #[test]
+    fn ttft_attainment_counts_only_budgeted_records() {
+        let mut r = sample();
+        // Unbudgeted records never count, so the empty case reads 0.
+        assert_eq!(r.ttft_attainment(), 0.0);
+        let budget = |seq, first: Option<f64>| RequestRecord {
+            ttft_deadline: 3.0,
+            first_token_at: first,
+            ..rec(seq, 0.0, 10.0, 15.0, 1, false)
+        };
+        r.record(budget(10, Some(2.0))); // met
+        r.record(budget(11, Some(5.0))); // missed
+        r.record(budget(12, None)); // budget but no stamp — a miss
+        assert!((r.ttft_attainment() - 1.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -40,6 +40,9 @@
 //! | `duel_settle`    | `duel::on_judge_verdict`   | judge quorum settled a duel           |
 //! | `settle`         | `dispatch::on_response`    | origin paid and recorded the result   |
 //! | `receipt_reject` | `dispatch::on_response`    | executor receipt missing/forged       |
+//! | `prefill_start`  | completion handlers        | backend began the prefill phase       |
+//! | `first_token`    | completion handlers        | prefill→decode boundary (TTFT stamp)  |
+//! | `kv_transfer`    | `Node::on_message`         | session KV shipped to a new executor (`detail` = bytes) |
 //!
 //! Node-scoped spans (no request; gated only on `enabled`):
 //!
@@ -182,6 +185,9 @@ pub enum SpanKind {
     RttObserved,
     ReceiptReject,
     Quarantine,
+    PrefillStart,
+    FirstToken,
+    KvTransfer,
 }
 
 impl SpanKind {
@@ -203,6 +209,9 @@ impl SpanKind {
             SpanKind::RttObserved => "rtt_observed",
             SpanKind::ReceiptReject => "receipt_reject",
             SpanKind::Quarantine => "quarantine",
+            SpanKind::PrefillStart => "prefill_start",
+            SpanKind::FirstToken => "first_token",
+            SpanKind::KvTransfer => "kv_transfer",
         }
     }
 }

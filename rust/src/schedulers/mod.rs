@@ -193,6 +193,9 @@ impl BaselineSim {
                             completed_at: c.finished_at + back,
                             slo_deadline: c.request.slo_deadline,
                             synthetic: c.request.synthetic,
+                            session: c.request.session,
+                            ttft_deadline: c.request.ttft_deadline,
+                            first_token_at: c.first_token_at,
                         });
                     }
                     if let Some(t) = self.nodes[node].backend.next_event() {

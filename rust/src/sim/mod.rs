@@ -30,6 +30,7 @@ use crate::policy::{
     ByzantineKind, NodePolicy, ParticipationKind, SystemPolicy,
 };
 use crate::reputation::{DefenseConfig, DefenseState};
+use crate::streaming::StreamingConfig;
 use crate::topology::Topology;
 use crate::types::{NodeId, Time};
 use crate::util::rng::Rng;
@@ -99,6 +100,12 @@ pub struct WorldConfig {
     /// full-replica shipping — the baseline the fleet-scale bench compares
     /// `chain_sync_bytes_sent` against. Ignored in shared-ledger mode.
     pub chain_delta_sync: bool,
+    /// Streaming-session semantics: disaggregated prefill/decode
+    /// admission, KV-affine dispatch, and the executor-side churn NACK
+    /// (see [`crate::streaming`]). Disabled by default: dispatch stays
+    /// session-blind, admission unified, and the RNG draw sequence
+    /// untouched, so pre-streaming configs replay byte for byte.
+    pub streaming: StreamingConfig,
 }
 
 impl Default for WorldConfig {
@@ -118,6 +125,7 @@ impl Default for WorldConfig {
             observability: ObservabilityConfig::default(),
             defenses: DefenseConfig::default(),
             chain_delta_sync: true,
+            streaming: StreamingConfig::default(),
         }
     }
 }
@@ -156,6 +164,7 @@ impl WorldConfig {
         }
         self.observability.validate();
         self.defenses.validate();
+        self.streaming.validate();
     }
 }
 
@@ -250,6 +259,8 @@ struct ObsMetricIds {
     gossip_bytes_sent: MetricId,
     chain_sync_messages_sent: MetricId,
     chain_sync_bytes_sent: MetricId,
+    kv_transfer_count: MetricId,
+    kv_transfer_bytes: MetricId,
     messages_dropped: MetricId,
     scale_events: MetricId,
     capacity_credits_charged: MetricId,
@@ -302,6 +313,12 @@ pub struct World {
     /// shared-ledger mode.
     pub chain_sync_messages_sent: u64,
     pub chain_sync_bytes_sent: u64,
+    /// Session-KV migrations: a `KvTransfer` ships resident context to a
+    /// non-home executor, paying for the KV bytes over the fabric's
+    /// bandwidth model. The streaming bench compares affinity-aware vs
+    /// affinity-blind dispatch on these (zero with streaming disabled).
+    pub kv_transfer_count: u64,
+    pub kv_transfer_bytes: u64,
     /// Messages lost to partitioned links.
     pub messages_dropped: u64,
     /// Queue entries processed by `run_until` (events/sec denominator for
@@ -409,8 +426,19 @@ impl World {
                     m
                 }
             };
-            let backend = SimBackend::new(setup.profile)
+            let mut backend = SimBackend::new(setup.profile)
                 .with_priority(setup.policy.prioritize_own);
+            // Streaming mode: split the backend's unified admission into a
+            // compute-bound prefill pool and the KV-gated decode pool
+            // (0 = "prefill pool as wide as max_batch").
+            if cfg.streaming.enabled {
+                let slots = if cfg.streaming.prefill_slots == 0 {
+                    setup.profile.max_batch
+                } else {
+                    cfg.streaming.prefill_slots
+                };
+                backend = backend.with_split_pools(slots);
+            }
             let participation = setup.participation;
             let mut node = Node::new(
                 id,
@@ -429,6 +457,10 @@ impl World {
                 Some(kind) => node.set_participation(kind.build()),
                 None => node.set_participation(participation.build()),
             }
+            // Streaming knobs (KV-affine dispatch, churn NACK). The
+            // default (disabled) block is inert — dispatch spends exactly
+            // the classic RNG draws.
+            node.set_streaming(cfg.streaming);
             // Byzantine defenses: key material + reputation book. Off (the
             // default) installs nothing, keeping the wire format and event
             // stream bit-identical to the defenseless network.
@@ -524,6 +556,8 @@ impl World {
                     .counter("chain_sync_messages_sent", &[]),
                 chain_sync_bytes_sent: reg
                     .counter("chain_sync_bytes_sent", &[]),
+                kv_transfer_count: reg.counter("kv_transfer_count", &[]),
+                kv_transfer_bytes: reg.counter("kv_transfer_bytes", &[]),
                 messages_dropped: reg.counter("messages_dropped", &[]),
                 scale_events: reg.counter("scale_events", &[]),
                 capacity_credits_charged: reg
@@ -580,6 +614,8 @@ impl World {
             gossip_bytes_sent: 0,
             chain_sync_messages_sent: 0,
             chain_sync_bytes_sent: 0,
+            kv_transfer_count: 0,
+            kv_transfer_bytes: 0,
             messages_dropped: 0,
             events_processed: 0,
             dispatch_matrix: vec![0; num_regions * num_regions],
@@ -599,7 +635,9 @@ impl World {
         for (i, setup) in setups.into_iter().enumerate() {
             if let Some(mut g) = setup.generator {
                 let mut grng = world.rng.fork(1000 + i as u64);
-                for req in g.trace(&mut grng) {
+                // Falls back to the plain trace, draw for draw, when the
+                // generator has no session profile.
+                for req in g.session_trace(&mut grng) {
                     let t = req.submitted_at;
                     world.push(t, WorldEvent::Node(i, Event::UserRequest(req)));
                 }
@@ -764,6 +802,10 @@ impl World {
         self.registry
             .set(ids.chain_sync_bytes_sent, self.chain_sync_bytes_sent as f64);
         self.registry
+            .set(ids.kv_transfer_count, self.kv_transfer_count as f64);
+        self.registry
+            .set(ids.kv_transfer_bytes, self.kv_transfer_bytes as f64);
+        self.registry
             .set(ids.messages_dropped, self.messages_dropped as f64);
         self.registry.set(ids.scale_events, self.scale_events as f64);
         self.registry.set(
@@ -819,12 +861,24 @@ impl World {
             .map(|&i| {
                 let node = &self.nodes[i];
                 let b = node.backend();
+                // A backend without a split pool reports usize::MAX for
+                // prefill_slots; normalize to 0 = "no prefill lever".
+                let prefill_slots = match b.prefill_slots() {
+                    usize::MAX => 0,
+                    s => s,
+                };
                 MemberState {
                     node: i,
                     online: node.online,
                     utilization: if node.online { b.utilization() } else { 0.0 },
                     queue_len: b.queue_len(),
                     slots: b.slots(),
+                    prefill_slots,
+                    prefill_util: if node.online && prefill_slots > 0 {
+                        b.prefill_running() as f64 / prefill_slots as f64
+                    } else {
+                        0.0
+                    },
                 }
             })
             .collect();
@@ -900,6 +954,15 @@ impl World {
                     self.push(now, WorldEvent::Node(node, Event::BackendWake));
                     self.scale_events += 1;
                 }
+                CapacityAction::SetPrefillSlots { node, slots } => {
+                    self.nodes[node]
+                        .backend_mut()
+                        .set_prefill_slots(slots, now);
+                    // Same wake rationale as SetSlots: a grown prefill
+                    // pool admits parked work immediately.
+                    self.push(now, WorldEvent::Node(node, Event::BackendWake));
+                    self.scale_events += 1;
+                }
                 CapacityAction::Activate { node } => {
                     self.push(now, WorldEvent::Node(node, Event::Join));
                     self.scale_events += 1;
@@ -962,10 +1025,19 @@ impl World {
                         self.chain_sync_messages_sent += 1;
                         self.chain_sync_bytes_sent += bytes as u64;
                     }
+                    if let crate::coordinator::Message::KvTransfer {
+                        kv_bytes,
+                        ..
+                    } = &msg
+                    {
+                        self.kv_transfer_count += 1;
+                        self.kv_transfer_bytes += *kv_bytes;
+                    }
                     if matches!(
                         msg,
                         crate::coordinator::Message::Probe { .. }
                             | crate::coordinator::Message::Delegate { .. }
+                            | crate::coordinator::Message::KvTransfer { .. }
                     ) {
                         let nr = self.topology.num_regions();
                         let a = self.topology.region_of(from);

@@ -1,0 +1,153 @@
+//! Streaming-session semantics: disaggregated prefill/decode and
+//! KV-affine dispatch, behind one declarative `streaming` config block.
+//!
+//! The paper's requests are atomic point events; the scheduling problem
+//! real participants face is token streams — TTFT vs end-to-end SLOs,
+//! compute-bound (delegable) prefill vs KV-memory-bound (sticky) decode,
+//! and multi-turn sessions whose KV residency makes re-dispatch expensive.
+//! This module holds the config block that arms the whole stack:
+//!
+//! * `workload::SessionProfile` — multi-turn session generation with
+//!   per-turn TTFT deadlines;
+//! * `backend::SimBackend` split-pool admission
+//!   ([`Backend::set_prefill_slots`](crate::backend::Backend::set_prefill_slots));
+//! * `coordinator::dispatch` KV-affinity (probe the session's resident
+//!   node with probability [`StreamingConfig::affinity_bonus`]; a
+//!   re-dispatch ships the session KV as a `Message::KvTransfer` sized by
+//!   [`StreamingConfig::kv_bytes_per_token`] — a real queue event priced
+//!   over `Topology` bandwidth and counted in `World::kv_transfer_{count,bytes}`);
+//! * the executor-side churn NACK (`Message::ExecAbort`) that turns an
+//!   honest executor's Leave into prompt local fallback at the requester
+//!   instead of a response-timeout reputation strike.
+//!
+//! With `enabled: false` (the default) every hook above is inert and
+//! replay fingerprints are bit-identical to the pre-streaming tree
+//! (`rust/tests/replay_equivalence.rs`). See `docs/streaming.md`.
+
+/// Declarative `streaming` config block knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamingConfig {
+    /// Master switch. `false` (the default) keeps dispatch session-blind,
+    /// admission unified, and the churn NACK off — the pre-streaming
+    /// replay stream, draw for draw.
+    pub enabled: bool,
+    /// Probability that a session turn is routed to the session's KV
+    /// home instead of a fresh stake-weighted draw. 1.0 = fully affine,
+    /// 0.0 = affinity-blind (the bench baseline).
+    pub affinity_bonus: f64,
+    /// KV-cache bytes per resident context token — sizes the
+    /// `KvTransfer` message a re-dispatch ships (fp16 KV for an ~8B
+    /// model is ~160 kB/token; see `backend::Profile::kv_gb_per_seq`).
+    pub kv_bytes_per_token: f64,
+    /// Prefill-pool cap installed on each node's backend (split-pool
+    /// admission). 0 means "same as the profile's `max_batch`".
+    pub prefill_slots: usize,
+    /// Executor-side churn NACK: on Leave, an executor NACKs its
+    /// in-flight delegations (`Message::ExecAbort`) so requesters fall
+    /// back locally at once instead of waiting out the response timeout
+    /// (and filing a Byzantine-grade `RepEvent::Timeout` strike).
+    pub churn_nack: bool,
+}
+
+impl Default for StreamingConfig {
+    fn default() -> Self {
+        StreamingConfig {
+            enabled: false,
+            affinity_bonus: 1.0,
+            kv_bytes_per_token: 160_000.0,
+            prefill_slots: 0,
+            churn_nack: true,
+        }
+    }
+}
+
+impl StreamingConfig {
+    /// Validate, returning a descriptive error (the config-parser path).
+    pub fn check(&self) -> Result<(), String> {
+        if !self.affinity_bonus.is_finite()
+            || !(0.0..=1.0).contains(&self.affinity_bonus)
+        {
+            return Err(format!(
+                "affinity_bonus must be a finite fraction in [0, 1], got {}",
+                self.affinity_bonus
+            ));
+        }
+        if !self.kv_bytes_per_token.is_finite() || self.kv_bytes_per_token < 0.0
+        {
+            return Err(format!(
+                "kv_bytes_per_token must be finite and >= 0, got {}",
+                self.kv_bytes_per_token
+            ));
+        }
+        if !self.enabled
+            && (self.affinity_bonus != 1.0 || self.prefill_slots != 0)
+        {
+            // Guard against configs that *look* armed but aren't: live
+            // knobs on a disabled block are almost certainly a mistake.
+            return Err(
+                "streaming knobs set but enabled is false; set enabled: true \
+                 or drop the block"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+
+    /// Panicking twin of [`check`](Self::check) for programmatic configs.
+    pub fn validate(&self) {
+        if let Err(e) = self.check() {
+            panic!("StreamingConfig: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_disabled_and_valid() {
+        let cfg = StreamingConfig::default();
+        assert!(!cfg.enabled);
+        assert!(cfg.check().is_ok());
+    }
+
+    #[test]
+    fn check_rejects_bad_knobs() {
+        let bad_bonus = StreamingConfig {
+            enabled: true,
+            affinity_bonus: 1.5,
+            ..Default::default()
+        };
+        assert!(bad_bonus.check().is_err());
+        let nan_bonus = StreamingConfig {
+            enabled: true,
+            affinity_bonus: f64::NAN,
+            ..Default::default()
+        };
+        assert!(nan_bonus.check().is_err());
+        let neg_kv = StreamingConfig {
+            enabled: true,
+            kv_bytes_per_token: -1.0,
+            ..Default::default()
+        };
+        assert!(neg_kv.check().is_err());
+        let armed_but_off = StreamingConfig {
+            enabled: false,
+            prefill_slots: 4,
+            ..Default::default()
+        };
+        assert!(armed_but_off.check().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "affinity_bonus")]
+    fn validate_panics() {
+        StreamingConfig {
+            enabled: true,
+            affinity_bonus: -0.1,
+            ..Default::default()
+        }
+        .validate();
+    }
+}

@@ -117,8 +117,18 @@ impl LinkProfile {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum LinkChange {
     /// Multiply base latency by `latency_factor` and bandwidth by
-    /// `bandwidth_factor` (congestion, cable reroute).
+    /// `bandwidth_factor` (congestion, cable reroute), in **both**
+    /// directions.
     Degrade {
+        latency_factor: f64,
+        bandwidth_factor: f64,
+    },
+    /// Like [`Degrade`](LinkChange::Degrade), but applied only to the
+    /// `a -> b` direction. Real congestion is routinely one-way (a
+    /// saturated egress, an asymmetric BGP detour); the symmetric variant
+    /// silently over-degraded the return path, which hid exactly the
+    /// asymmetries the live latency estimator exists to catch.
+    DegradeDirectional {
         latency_factor: f64,
         bandwidth_factor: f64,
     },
@@ -128,7 +138,9 @@ pub enum LinkChange {
     Heal,
 }
 
-/// A scheduled change to the link between regions `a` and `b` (symmetric).
+/// A scheduled change to the link between regions `a` and `b`. All
+/// changes apply to both directions except
+/// [`LinkChange::DegradeDirectional`], which touches only `a -> b`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LinkEvent {
     pub at: Time,
@@ -247,21 +259,28 @@ impl Topology {
             .collect()
     }
 
-    /// Apply scheduled event `idx` (both directions of the pair). The
-    /// simulator calls this when virtual time reaches `events[idx].at`.
+    /// Apply scheduled event `idx` (both directions of the pair, except
+    /// [`LinkChange::DegradeDirectional`] which touches only `a -> b`).
+    /// The simulator calls this when virtual time reaches `events[idx].at`.
     pub fn apply_event(&mut self, idx: usize) {
         let ev = self.events[idx];
         let n = self.regions.len();
         // An intra-region event (a == b) names one link slot — don't apply
-        // the mirrored direction to the same slot twice.
+        // the mirrored direction to the same slot twice. A directional
+        // degrade never mirrors at all.
         let mut directions = vec![(ev.a, ev.b)];
-        if ev.a != ev.b {
+        let one_way = matches!(ev.change, LinkChange::DegradeDirectional { .. });
+        if ev.a != ev.b && !one_way {
             directions.push((ev.b, ev.a));
         }
         for (a, b) in directions {
             let i = a * n + b;
             match ev.change {
-                LinkChange::Degrade { latency_factor, bandwidth_factor } => {
+                LinkChange::Degrade { latency_factor, bandwidth_factor }
+                | LinkChange::DegradeDirectional {
+                    latency_factor,
+                    bandwidth_factor,
+                } => {
                     // Degrade factors are relative to the *pristine*
                     // profile, not the current one: re-applying a "3x
                     // congestion" event re-asserts 3x, it does not compound
@@ -328,8 +347,11 @@ impl Topology {
                 "topology: event {i} has invalid time {}",
                 ev.at
             );
-            if let LinkChange::Degrade { latency_factor, bandwidth_factor } =
-                ev.change
+            if let LinkChange::Degrade { latency_factor, bandwidth_factor }
+            | LinkChange::DegradeDirectional {
+                latency_factor,
+                bandwidth_factor,
+            } = ev.change
             {
                 assert!(
                     latency_factor > 0.0 && bandwidth_factor > 0.0,
@@ -674,6 +696,50 @@ mod tests {
         assert!((l.bandwidth - 400.0 * 1e6 / 8.0).abs() < 1e-3);
         // …and does not quietly heal a partition.
         assert!(l.partitioned, "degrade must not heal a partition");
+    }
+
+    #[test]
+    fn directional_degrade_leaves_return_path_pristine() {
+        let mut topo = Topology::builder()
+            .region("a")
+            .region("b")
+            .link(
+                "a",
+                "b",
+                LinkProfile::new(0.040, 0.050).with_bandwidth_mbps(400.0),
+            )
+            .node("a")
+            .node("b")
+            .event(
+                "a",
+                "b",
+                1.0,
+                LinkChange::DegradeDirectional {
+                    latency_factor: 4.0,
+                    bandwidth_factor: 0.25,
+                },
+            )
+            .event("a", "b", 2.0, LinkChange::Heal)
+            .build();
+        topo.apply_event(0);
+        let fwd = *topo.link(0, 1);
+        let rev = *topo.link(1, 0);
+        assert!((fwd.latency.0 - 0.160).abs() < 1e-12, "a->b degraded");
+        assert!((fwd.bandwidth - 0.25 * 400.0 * 1e6 / 8.0).abs() < 1e-3);
+        assert!((rev.latency.0 - 0.040).abs() < 1e-12, "b->a pristine");
+        assert!((rev.bandwidth - 400.0 * 1e6 / 8.0).abs() < 1e-3);
+        // Sampled delays reflect the asymmetry: the degraded direction can
+        // never be as fast as the pristine one's upper bound.
+        let mut rng = Rng::new(8);
+        for _ in 0..100 {
+            let fwd = topo.sample_delay(0, 1, 0, &mut rng).unwrap();
+            let rev = topo.sample_delay(1, 0, 0, &mut rng).unwrap();
+            assert!(fwd > rev, "degraded {fwd} !> pristine {rev}");
+        }
+        // Heal is symmetric: it restores BOTH directions.
+        topo.apply_event(1);
+        assert_eq!(*topo.link(0, 1), *topo.link(1, 0));
+        assert!((topo.link(0, 1).latency.0 - 0.040).abs() < 1e-12);
     }
 
     #[test]

@@ -55,6 +55,15 @@ pub struct Request {
     pub synthetic: bool,
     /// Raw prompt tokens (real-backend path only; empty in pure simulation).
     pub payload: Vec<u32>,
+    /// Streaming-session id this request belongs to (a turn of a multi-turn
+    /// conversation). `0` means a standalone request — the pre-streaming
+    /// behaviour. Nonzero ids make dispatch KV-affine (see
+    /// `coordinator::dispatch`).
+    pub session: u64,
+    /// Time-to-first-token budget (seconds from submission). `INFINITY`
+    /// means no TTFT SLO — standalone requests only carry the end-to-end
+    /// `slo_deadline`.
+    pub ttft_deadline: Time,
 }
 
 /// How a completed request was executed — used by metrics and the credit
@@ -81,6 +90,9 @@ pub struct Response {
     pub quality: f64,
     /// When the executor finished it.
     pub finished_at: Time,
+    /// When the executor's backend emitted the first output token (absolute
+    /// sim time; `None` when the backend predates phase tracking).
+    pub first_token_at: Option<Time>,
     /// Generated tokens (real-backend path only).
     pub tokens: Vec<u32>,
 }
@@ -98,6 +110,13 @@ pub struct RequestRecord {
     pub completed_at: Time,
     pub slo_deadline: Time,
     pub synthetic: bool,
+    /// Streaming-session id (0 = standalone).
+    pub session: u64,
+    /// TTFT budget carried from the request (`INFINITY` = no TTFT SLO).
+    pub ttft_deadline: Time,
+    /// Absolute time of the first output token, when the serving backend
+    /// reported it.
+    pub first_token_at: Option<Time>,
 }
 
 impl RequestRecord {
@@ -107,6 +126,21 @@ impl RequestRecord {
 
     pub fn slo_met(&self) -> bool {
         self.latency() <= self.slo_deadline
+    }
+
+    /// Time-to-first-token, when the backend reported a first-token stamp.
+    pub fn ttft(&self) -> Option<Time> {
+        self.first_token_at.map(|t| t - self.submitted_at)
+    }
+
+    /// TTFT SLO verdict: `None` when the request carries no TTFT budget,
+    /// otherwise whether the first token landed inside it (a request with a
+    /// budget but no stamp counts as a miss).
+    pub fn ttft_met(&self) -> Option<bool> {
+        if self.ttft_deadline.is_infinite() {
+            return None;
+        }
+        Some(self.ttft().is_some_and(|t| t <= self.ttft_deadline))
     }
 }
 
@@ -127,11 +161,43 @@ mod tests {
             completed_at: 40.0,
             slo_deadline: 35.0,
             synthetic: false,
+            session: 0,
+            ttft_deadline: f64::INFINITY,
+            first_token_at: None,
         };
         assert!((rec.latency() - 30.0).abs() < 1e-9);
         assert!(rec.slo_met());
         let late = RequestRecord { completed_at: 50.0, ..rec.clone() };
         assert!(!late.slo_met());
+    }
+
+    #[test]
+    fn ttft_accounting() {
+        let rec = RequestRecord {
+            id: RequestId { origin: NodeId(0), seq: 1 },
+            origin: NodeId(0),
+            executor: NodeId(1),
+            kind: ExecKind::Delegated,
+            prompt_tokens: 100,
+            output_tokens: 200,
+            submitted_at: 10.0,
+            completed_at: 40.0,
+            slo_deadline: 35.0,
+            synthetic: false,
+            session: 7,
+            ttft_deadline: 4.0,
+            first_token_at: Some(13.0),
+        };
+        assert_eq!(rec.ttft_met(), Some(true));
+        assert!((rec.ttft().unwrap() - 3.0).abs() < 1e-9);
+        let slow = RequestRecord { first_token_at: Some(15.5), ..rec.clone() };
+        assert_eq!(slow.ttft_met(), Some(false));
+        // A budget with no stamp is a miss; no budget is exempt entirely.
+        let unstamped = RequestRecord { first_token_at: None, ..rec.clone() };
+        assert_eq!(unstamped.ttft_met(), Some(false));
+        let standalone =
+            RequestRecord { ttft_deadline: f64::INFINITY, session: 0, ..rec };
+        assert_eq!(standalone.ttft_met(), None);
     }
 
     #[test]

@@ -139,6 +139,81 @@ impl SloModel {
             + output_tokens as f64 / self.ref_decode_tok_s;
         (svc * self.slo_scale).max(self.min_deadline)
     }
+
+    /// Expected service seconds on the reference server (used to place the
+    /// next turn of a session after the previous one would finish).
+    pub fn ref_service(&self, prompt_tokens: u32, output_tokens: u32) -> Time {
+        prompt_tokens as f64 / self.ref_prefill_tok_s
+            + output_tokens as f64 / self.ref_decode_tok_s
+    }
+}
+
+/// Multi-turn streaming-session shape: how many turns a conversation runs,
+/// how long the user thinks between them, and how tight the per-turn TTFT
+/// budget is. Turn-level prompt/output lengths still come from the
+/// generator's [`LengthDist`]; the end-to-end deadline still comes from its
+/// [`SloModel`] — sessions only *add* the TTFT dimension and the arrival
+/// correlation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionProfile {
+    /// Mean turns per session (Poisson-shifted: `1 + Poisson(mean - 1)`).
+    pub turns_mean: f64,
+    /// Hard cap on turns per session.
+    pub max_turns: u32,
+    /// Mean think time between a turn's expected completion and the next
+    /// turn's submission (exponential).
+    pub think_mean: f64,
+    /// TTFT budget multiplier over the reference prefill time
+    /// (`prompt / ref_prefill_tok_s * slo_scale * ttft_scale`).
+    pub ttft_scale: f64,
+    /// Floor on the TTFT budget (seconds) — reference prefill is fast, so
+    /// this floor is what queueing, WAN hops and KV transfers must fit in.
+    pub ttft_floor: f64,
+}
+
+impl Default for SessionProfile {
+    fn default() -> Self {
+        SessionProfile {
+            turns_mean: 3.0,
+            max_turns: 12,
+            think_mean: 20.0,
+            ttft_scale: 3.0,
+            ttft_floor: 2.0,
+        }
+    }
+}
+
+impl SessionProfile {
+    pub fn check(&self) -> Result<(), String> {
+        if !self.turns_mean.is_finite() || self.turns_mean < 1.0 {
+            return Err(format!(
+                "turns_mean must be >= 1, got {}",
+                self.turns_mean
+            ));
+        }
+        if self.max_turns == 0 {
+            return Err("max_turns must be >= 1".into());
+        }
+        if !self.think_mean.is_finite() || self.think_mean < 0.0 {
+            return Err(format!(
+                "think_mean must be >= 0, got {}",
+                self.think_mean
+            ));
+        }
+        if !self.ttft_scale.is_finite() || self.ttft_scale <= 0.0 {
+            return Err(format!(
+                "ttft_scale must be > 0, got {}",
+                self.ttft_scale
+            ));
+        }
+        if !self.ttft_floor.is_finite() || self.ttft_floor <= 0.0 {
+            return Err(format!(
+                "ttft_floor must be > 0, got {}",
+                self.ttft_floor
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// Generates one node's request stream.
@@ -148,7 +223,11 @@ pub struct Generator {
     pub phases: Vec<Phase>,
     pub lengths: LengthDist,
     pub slo: SloModel,
+    /// When set, [`Generator::session_trace`] turns each Poisson arrival
+    /// into a multi-turn session instead of a standalone request.
+    pub sessions: Option<SessionProfile>,
     next_seq: u64,
+    next_session: u64,
 }
 
 impl Generator {
@@ -158,7 +237,9 @@ impl Generator {
             phases,
             lengths: LengthDist::default(),
             slo: SloModel::default(),
+            sessions: None,
             next_seq: 0,
+            next_session: 0,
         }
     }
 
@@ -169,6 +250,11 @@ impl Generator {
 
     pub fn with_slo(mut self, slo: SloModel) -> Self {
         self.slo = slo;
+        self
+    }
+
+    pub fn with_sessions(mut self, sessions: SessionProfile) -> Self {
+        self.sessions = Some(sessions);
         self
     }
 
@@ -217,6 +303,8 @@ impl Generator {
             slo_deadline: self.slo.deadline(prompt, output),
             synthetic: false,
             payload: vec![],
+            session: 0,
+            ttft_deadline: f64::INFINITY,
         }
     }
 
@@ -227,6 +315,58 @@ impl Generator {
             .into_iter()
             .map(|t| self.make_request(t, rng))
             .collect()
+    }
+
+    /// Session form of [`Generator::trace`]: each Poisson arrival seeds a
+    /// multi-turn session. Turn k+1 is submitted after turn k's expected
+    /// reference service time plus an exponential think gap; every turn
+    /// carries the session id and a TTFT deadline. Falls back to the plain
+    /// trace (draw for draw) when no [`SessionProfile`] is configured.
+    ///
+    /// All randomness comes from the caller's `rng` stream — the generator
+    /// never constructs one (determinism contract, docs/determinism.md).
+    pub fn session_trace(&mut self, rng: &mut Rng) -> Vec<Request> {
+        let Some(sp) = self.sessions else {
+            return self.trace(rng);
+        };
+        let starts = self.arrivals(rng);
+        let mut out = Vec::new();
+        for start in starts {
+            self.next_session += 1;
+            // Nonzero, globally unique: origin in the high bits.
+            let session =
+                ((self.origin.0 as u64 + 1) << 32) | self.next_session;
+            let turns = (1 + rng.poisson((sp.turns_mean - 1.0).max(0.0)))
+                .min(sp.max_turns as u64);
+            let mut at = start;
+            for _turn in 0..turns {
+                let mut req = self.make_request(at, rng);
+                req.session = session;
+                req.ttft_deadline = (req.prompt_tokens as f64
+                    / self.slo.ref_prefill_tok_s
+                    * self.slo.slo_scale
+                    * sp.ttft_scale)
+                    .max(sp.ttft_floor);
+                let svc =
+                    self.slo.ref_service(req.prompt_tokens, req.output_tokens);
+                let think = if sp.think_mean > 0.0 {
+                    rng.exp(1.0 / sp.think_mean)
+                } else {
+                    0.0
+                };
+                out.push(req);
+                at += svc + think;
+            }
+        }
+        // Interleave sessions into one arrival-ordered stream; ties break
+        // on the (already unique) sequence number for determinism.
+        out.sort_by(|a, b| {
+            a.submitted_at
+                .partial_cmp(&b.submitted_at)
+                .unwrap()
+                .then(a.id.seq.cmp(&b.id.seq))
+        });
+        out
     }
 }
 
@@ -353,6 +493,97 @@ mod tests {
             assert_eq!(r.id.origin, NodeId(3));
             assert!(!r.synthetic);
         }
+    }
+
+    #[test]
+    fn session_trace_without_profile_matches_plain_trace() {
+        let mk = || Generator::new(NodeId(0), vec![Phase::new(0.0, 500.0, 2.0)]);
+        let plain = {
+            let mut g = mk();
+            let mut rng = Rng::new(11);
+            g.trace(&mut rng)
+        };
+        let sessionless = {
+            let mut g = mk();
+            let mut rng = Rng::new(11);
+            g.session_trace(&mut rng)
+        };
+        assert_eq!(plain, sessionless, "no profile => identical draw stream");
+    }
+
+    #[test]
+    fn session_trace_shape() {
+        let mut g = Generator::new(NodeId(2), vec![Phase::new(0.0, 500.0, 10.0)])
+            .with_sessions(SessionProfile::default());
+        let mut rng = Rng::new(5);
+        let trace = g.session_trace(&mut rng);
+        assert!(!trace.is_empty());
+        // Arrival-sorted, unique seqs.
+        for w in trace.windows(2) {
+            assert!(w[0].submitted_at <= w[1].submitted_at);
+        }
+        let mut sessions = std::collections::BTreeMap::new();
+        for r in &trace {
+            assert_ne!(r.session, 0, "session turns carry a nonzero id");
+            assert!(r.ttft_deadline.is_finite());
+            assert!(r.ttft_deadline >= SessionProfile::default().ttft_floor);
+            assert!(r.slo_deadline >= r.ttft_deadline || r.slo_deadline >= 30.0);
+            sessions.entry(r.session).or_insert_with(Vec::new).push(r);
+        }
+        let max_turns = SessionProfile::default().max_turns as usize;
+        let mut multi = 0;
+        for turns in sessions.values() {
+            assert!((1..=max_turns).contains(&turns.len()));
+            // Turns of one session arrive strictly forward in time.
+            for w in turns.windows(2) {
+                assert!(w[0].submitted_at < w[1].submitted_at);
+            }
+            if turns.len() > 1 {
+                multi += 1;
+            }
+        }
+        assert!(multi > 0, "turns_mean 3 should yield multi-turn sessions");
+    }
+
+    #[test]
+    fn session_trace_deterministic_double_run() {
+        let make = |seed| {
+            let mut g =
+                Generator::new(NodeId(1), vec![Phase::new(0.0, 400.0, 3.0)])
+                    .with_sessions(SessionProfile {
+                        turns_mean: 4.0,
+                        ..Default::default()
+                    });
+            let mut rng = Rng::new(seed);
+            g.session_trace(&mut rng)
+                .iter()
+                .map(|r| {
+                    (
+                        r.id.seq,
+                        r.session,
+                        r.prompt_tokens,
+                        r.output_tokens,
+                        (r.submitted_at * 1e9) as i64,
+                        (r.ttft_deadline * 1e9) as i64,
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(make(9), make(9));
+        assert_ne!(make(9), make(10));
+    }
+
+    #[test]
+    fn session_profile_check_rejects_bad_knobs() {
+        assert!(SessionProfile::default().check().is_ok());
+        let bad = SessionProfile { turns_mean: 0.5, ..Default::default() };
+        assert!(bad.check().is_err());
+        let bad = SessionProfile { max_turns: 0, ..Default::default() };
+        assert!(bad.check().is_err());
+        let bad = SessionProfile { think_mean: -1.0, ..Default::default() };
+        assert!(bad.check().is_err());
+        let bad = SessionProfile { ttft_floor: 0.0, ..Default::default() };
+        assert!(bad.check().is_err());
     }
 
     #[test]

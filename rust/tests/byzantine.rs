@@ -50,6 +50,8 @@ fn req(origin: u32, seq: u64, at: f64, slo: f64) -> Request {
         slo_deadline: slo,
         synthetic: false,
         payload: vec![],
+        session: 0,
+        ttft_deadline: f64::INFINITY,
     }
 }
 

@@ -8,7 +8,9 @@ use wwwserve::coordinator::{Event, LedgerManager, Message, Node};
 use wwwserve::gossip::GossipConfig;
 use wwwserve::ledger::{Block, CreditOp, OpReason, SharedLedger};
 use wwwserve::policy::{NodePolicy, SystemPolicy};
+use wwwserve::reputation::DefenseConfig;
 use wwwserve::sim::{LedgerMode, NodeSetup, World, WorldConfig};
+use wwwserve::streaming::StreamingConfig;
 use wwwserve::workload::{Generator, LengthDist, Phase};
 use wwwserve::NodeId;
 use std::sync::{Arc, Mutex};
@@ -66,6 +68,120 @@ fn executor_crash_falls_back_locally() {
         assert_eq!(r.executor, NodeId(0));
     }
     assert!(w.node(0).stats.fallback_local > 0, "no fallback happened");
+}
+
+// ---- streaming churn NACK ---------------------------------------------------
+
+/// Two-node world for the churn-NACK regression pair: node 0 offloads
+/// everything to node 1 (the only executor), which leaves honestly at
+/// t = 60 while still holding delegated work. The request trace stops at
+/// t = 40 so no probe/delegate handshake straddles the departure — every
+/// in-flight delegation at t = 60 is one node 1 accepted and then walked
+/// away from.
+fn churn_nack_world(streaming: StreamingConfig) -> World {
+    let mut setups = vec![
+        NodeSetup::new(
+            Profile::test(30.0, 8),
+            NodePolicy {
+                target_utilization: 0.0,
+                offload_freq: 1.0,
+                accept_freq: 1.0,
+                ..Default::default()
+            },
+        )
+        .with_generator(
+            Generator::new(NodeId(0), vec![Phase::new(0.0, 40.0, 4.0)])
+                .with_lengths(lengths()),
+        ),
+        NodeSetup::new(
+            Profile::test(30.0, 8),
+            NodePolicy { accept_freq: 1.0, ..Default::default() },
+        ),
+    ];
+    setups[1].policy.stake = 10_000_000;
+    let cfg = WorldConfig {
+        seed: 21,
+        system: SystemPolicy { duel_rate: 0.0, ..Default::default() },
+        defenses: DefenseConfig { enabled: true, ..Default::default() },
+        streaming,
+        ..Default::default()
+    };
+    let mut w = World::new(cfg, setups);
+    w.schedule_leave(1, 60.0);
+    w
+}
+
+/// Minimum of node 0's effective reputation for node 1, sampled every 10 s
+/// from the leave until `until`. Reputation heals with silence
+/// (~0.002/s), so a timeout strike is only visible near the moment it is
+/// filed — a single end-of-run readout would miss it.
+fn min_effective_for_leaver(w: &mut World, until: f64) -> f64 {
+    let mut min_eff = f64::INFINITY;
+    let mut t = 60.0;
+    while t <= until {
+        w.run_until(t);
+        let eff = w.node(0).defense_state().rep.effective(NodeId(1), t);
+        min_eff = min_eff.min(eff);
+        t += 10.0;
+    }
+    min_eff
+}
+
+/// [streaming] An honest leaver NACKs the delegations it still holds:
+/// the origin falls back locally at once and never files a
+/// Byzantine-grade `Timeout` strike against a peer that said goodbye.
+#[test]
+fn honest_leave_nacks_delegations_without_reputation_strike() {
+    let mut w = churn_nack_world(StreamingConfig {
+        enabled: true,
+        ..Default::default()
+    });
+    let min_eff = min_effective_for_leaver(&mut w, 2000.0);
+    w.run_until(6000.0);
+    let submitted = w.node(0).stats.user_requests;
+    let completed = w.recorder.user_records().count() as u64;
+    assert_eq!(
+        completed, submitted,
+        "requests lost after honest leave ({completed}/{submitted})"
+    );
+    assert!(
+        w.node(0).stats.exec_aborts > 0,
+        "leaver held delegations but never NACK'd them"
+    );
+    assert!(
+        min_eff >= 1.0,
+        "honest leaver was reputation-struck despite the churn NACK \
+         (min effective {min_eff})"
+    );
+}
+
+/// The silent failure the NACK fixes: with streaming off, the same honest
+/// departure leaves the origin waiting out the full response timeout, and
+/// the leaver eats an undeserved `Timeout` reputation strike.
+#[test]
+fn without_churn_nack_honest_leaver_is_struck_on_timeout() {
+    let mut w = churn_nack_world(StreamingConfig::default());
+    let min_eff = min_effective_for_leaver(&mut w, 2000.0);
+    w.run_until(6000.0);
+    let submitted = w.node(0).stats.user_requests;
+    let completed = w.recorder.user_records().count() as u64;
+    assert_eq!(
+        completed, submitted,
+        "requests lost after honest leave ({completed}/{submitted})"
+    );
+    assert_eq!(
+        w.node(0).stats.exec_aborts, 0,
+        "NACKs emitted with streaming disabled"
+    );
+    assert!(
+        w.node(0).stats.fallback_local > 0,
+        "abandoned delegations never fell back"
+    );
+    assert!(
+        min_eff < 1.0,
+        "expected the pre-fix timeout strike against the honest leaver \
+         (min effective {min_eff})"
+    );
 }
 
 /// Mass churn: half the network leaves mid-run, everything still completes.

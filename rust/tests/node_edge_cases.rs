@@ -33,6 +33,8 @@ fn req(origin: u32, seq: u64) -> Request {
         slo_deadline: 60.0,
         synthetic: false,
         payload: vec![],
+        session: 0,
+        ttft_deadline: f64::INFINITY,
     }
 }
 
@@ -42,6 +44,7 @@ fn resp(origin: u32, seq: u64, executor: u32) -> Response {
         executor: NodeId(executor),
         quality: 0.7,
         finished_at: 5.0,
+        first_token_at: None,
         tokens: vec![],
     }
 }

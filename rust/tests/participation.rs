@@ -35,6 +35,8 @@ fn user_req(origin: u32, seq: u64, now: f64) -> Request {
         slo_deadline: 60.0,
         synthetic: false,
         payload: vec![],
+        session: 0,
+        ttft_deadline: f64::INFINITY,
     }
 }
 

@@ -99,8 +99,18 @@ fn geo_smoke_config_capacity(
 
 /// Everything observable about a finished world, quantized for exact
 /// comparison: messages, settlements, SLO attainment, credits.
-type Fingerprint =
-    (usize, u64, u64, u64, u64, u64, usize, Vec<(String, u64, u64, usize)>, Vec<u64>);
+type Fingerprint = (
+    usize,
+    u64,
+    u64,
+    u64,
+    u64,
+    u64,
+    usize,
+    Vec<(String, u64, u64, usize)>,
+    Vec<u64>,
+    (u64, u64),
+);
 
 fn fingerprint(w: &World) -> Fingerprint {
     (
@@ -118,6 +128,7 @@ fn fingerprint(w: &World) -> Fingerprint {
             })
             .collect(),
         w.credit_totals().iter().map(|c| (c * 1e6) as u64).collect(),
+        (w.kv_transfer_count, w.kv_transfer_bytes),
     )
 }
 
@@ -267,6 +278,56 @@ fn observability_enabled_is_purely_observational() {
         .get("events_processed", &[])
         .expect("events_processed metric");
     assert_eq!(events.value, w.events_processed as f64);
+}
+
+#[test]
+fn streaming_disabled_block_replays_the_baseline_trace() {
+    // The streaming seam's replay contract: an explicit
+    // `streaming: {enabled: false}` block must be the same parse-and-run
+    // path as no block at all — dispatch stays session-blind, admission
+    // unified, no KvTransfer ever hits the wire, and the RNG draw
+    // sequence is untouched bit for bit.
+    let baseline = run(&geo_smoke_config(false, "default"));
+    let cfg = geo_smoke_config(false, "default").replace(
+        "\"seed\": 2026,",
+        "\"seed\": 2026, \"streaming\": { \"enabled\": false },",
+    );
+    assert!(cfg.contains("streaming"), "splice failed");
+    let e = parse_experiment(&cfg).expect("config parses");
+    assert!(!e.world.streaming.enabled);
+    assert_eq!(
+        baseline,
+        run(&cfg),
+        "disabled streaming block perturbed the trace"
+    );
+    // The baseline world ships zero session KV, by construction.
+    assert_eq!(baseline.9, (0, 0));
+}
+
+#[test]
+fn streaming_enabled_changes_trace_but_replays_deterministically() {
+    // Armed streaming is live machinery: split-pool admission reshapes
+    // completion times, session turns carry TTFT budgets, and KV-affine
+    // dispatch changes who executes what. The trace must genuinely
+    // diverge from the baseline while staying bit-reproducible.
+    let cfg = geo_smoke_config(false, "default")
+        .replace(
+            "\"seed\": 2026,",
+            "\"seed\": 2026, \"streaming\": { \"enabled\": true },",
+        )
+        .replace(
+            "\"lengths\":",
+            "\"sessions\": { \"turns_mean\": 3 }, \"lengths\":",
+        );
+    assert!(cfg.contains("streaming"), "splice failed");
+    assert!(cfg.contains("sessions"), "sessions splice failed");
+    let e = parse_experiment(&cfg).expect("config parses");
+    assert!(e.world.streaming.enabled);
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert_eq!(a, b, "streaming world is not deterministic");
+    let baseline = run(&geo_smoke_config(false, "default"));
+    assert_ne!(a, baseline, "streaming had no observable effect at all");
 }
 
 #[test]
@@ -432,6 +493,8 @@ fn requester_only_trait_works_without_the_scalar_knob() {
         slo_deadline: 60.0,
         synthetic: false,
         payload: vec![],
+        session: 0,
+        ttft_deadline: f64::INFINITY,
     };
     // Idle backend, yet the request goes to the market.
     let a = n.handle(Event::UserRequest(req.clone()), 0.0);
